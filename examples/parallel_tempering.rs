@@ -1,0 +1,81 @@
+//! End-to-end driver: the full system on a real (scaled) workload.
+//!
+//! Reproduces the paper's §4 experiment structure end-to-end: a parallel-
+//! tempering ladder of QMC Ising models ("115 Ising models ... 30,000
+//! Metropolis sweeps"), swept by the fully vectorized A.4 engine through
+//! the multi-threaded coordinator, with replica exchanges between rounds
+//! — then reports throughput, per-replica flip statistics and the Fig-14
+//! wait-probability curves.
+//!
+//! Default scale finishes in ~a minute on one core; pass `--paper-scale`
+//! through the `repro run` CLI for the full 2.8M-spin configuration.
+//!
+//! ```bash
+//! cargo run --release --example parallel_tempering
+//! ```
+
+use vectorising::coordinator::{self, RunConfig};
+use vectorising::stats::wait_probability;
+use vectorising::sweep::SweepKind;
+
+fn main() -> vectorising::Result<()> {
+    // Scaled version of the paper's benchmark: 24 replicas x 2,048 spins
+    // x 600 sweeps (the paper: 115 x 24,576 x 30,000).
+    let cfg = RunConfig {
+        width: 8,
+        height: 8,
+        layers: 32,
+        n_models: 24,
+        sweeps: 600,
+        sweeps_per_round: 20,
+        threads: 2,
+        ..RunConfig::default()
+    };
+    println!(
+        "ensemble: {} replicas x {} spins = {} spins, {} sweeps each ({} total updates)",
+        cfg.n_models,
+        cfg.n_spins_per_model(),
+        cfg.total_spins(),
+        cfg.sweeps,
+        cfg.total_updates()
+    );
+
+    let report = coordinator::run(&cfg, SweepKind::A4Full)?;
+
+    println!(
+        "\nwall {:.2}s | {:.2}M spin-updates/s | swap acceptance {:.3}",
+        report.wall_seconds,
+        report.updates_per_sec / 1e6,
+        report.swap_acceptance
+    );
+    println!(
+        "\n{:>5} {:>9} {:>9} {:>12} {:>12} {:>13}",
+        "model", "P(flip)", "w=1", "w=4 (meas.)", "w=4 (anal.)", "w=32 (anal.)"
+    );
+    for (i, (&p, &wm)) in report.flip_probs.iter().zip(&report.wait_probs).enumerate() {
+        println!(
+            "{:5} {:9.4} {:9.4} {:12.4} {:12.4} {:13.4}",
+            i,
+            p,
+            wait_probability(p, 1),
+            wm,
+            wait_probability(p, 4),
+            wait_probability(p, 32)
+        );
+    }
+    let mean_p = report.flip_probs.iter().sum::<f64>() / report.flip_probs.len() as f64;
+    println!(
+        "\nladder means: P(flip) = {:.3}  (paper: 0.286); wait(w=32)/wait(w=1) = {:.2} (paper: 2.9x)",
+        mean_p,
+        report.flip_probs.iter().map(|&p| wait_probability(p, 32)).sum::<f64>()
+            / report.flip_probs.len() as f64
+            / mean_p
+    );
+
+    // Sanity: energies must be ladder-ordered on average (colder = lower).
+    let cold = report.energies.first().unwrap();
+    let hot = report.energies.last().unwrap();
+    println!("cold-end energy {cold:.1}, hot-end energy {hot:.1}");
+    assert!(cold < hot, "tempering ladder must order energies");
+    Ok(())
+}

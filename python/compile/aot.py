@@ -1,0 +1,112 @@
+"""AOT lowering: JAX sweep functions -> HLO text artefacts for the rust side.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  (See /opt/xla-example/README.md.)
+
+Each artefact ``<name>.hlo.txt`` is accompanied by ``<name>.json``
+describing the baked static config and the full input/output signature so
+the rust runtime (rust/src/runtime/artifact.rs) can validate shapes before
+feeding buffers.
+
+``python -m compile.aot --out ../artifacts/manifest.json`` writes every
+configured artefact plus the manifest; it is the only python entry point
+in the build (`make artifacts`), and nothing here ever runs at request
+time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Named artefact configurations.
+#  - "default": the scaled workload every test/bench runs in seconds.
+#  - "paper":   the paper's geometry (96 spins x 256 layers = 24,576 spins
+#               per model, §4) for full-scale runs.
+CONFIGS: dict[str, model.ModelConfig] = {
+    "default": model.ModelConfig(n_base=64, n_layers=32, max_degree=4,
+                                 n_colors=2, sweeps_per_call=10),
+    "paper": model.ModelConfig(n_base=96, n_layers=256, max_degree=4,
+                               n_colors=2, sweeps_per_call=10),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list[dict]:
+    return [{"shape": list(a.shape), "dtype": a.dtype.name} for a in args]
+
+
+def lower_variant(cfg: model.ModelConfig, variant: str):
+    """Lower one (config, variant) pair; returns (hlo_text, signature)."""
+    if variant == "b2_coalesced":
+        fn, args = model.make_sweep_coalesced(cfg), model.coalesced_example_args(cfg)
+    elif variant == "b1_naive":
+        fn, args = model.make_sweep_naive(cfg), model.naive_example_args(cfg)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), _sig(args)
+
+
+def build_all(out_dir: str, configs: list[str], variants: list[str]) -> dict:
+    manifest = {"artifacts": []}
+    os.makedirs(out_dir, exist_ok=True)
+    for cname in configs:
+        cfg = CONFIGS[cname]
+        for variant in variants:
+            name = f"{variant}_{cname}"
+            hlo, sig = lower_variant(cfg, variant)
+            hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(hlo_path, "w") as f:
+                f.write(hlo)
+            meta = {
+                "name": name,
+                "variant": variant,
+                "config": cname,
+                "static": dataclasses.asdict(cfg),
+                "inputs": sig,
+                "n_outputs": 6,
+                "hlo_file": os.path.basename(hlo_path),
+                "hlo_bytes": len(hlo),
+            }
+            with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+                json.dump(meta, f, indent=2)
+            manifest["artifacts"].append(meta)
+            print(f"  wrote {name}: {len(hlo)} chars")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/manifest.json",
+                   help="manifest path; artefacts land in its directory")
+    p.add_argument("--configs", default="default,paper")
+    p.add_argument("--variants", default="b1_naive,b2_coalesced")
+    args = p.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    manifest = build_all(out_dir, args.configs.split(","), args.variants.split(","))
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

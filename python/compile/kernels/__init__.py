@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the explicit-vectorization reproduction.
+
+Modules
+-------
+mt19937    : W-way interlaced Mersenne Twister block generator (paper §3).
+exp_approx : bit-trick exponential approximations (paper §2.4 + Appendix).
+metropolis : masked vector flip kernel (paper §3.1 "vectorized flipping").
+ref        : pure-jnp / pure-python correctness oracles for all of the above.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend, including the rust CPU client on the request path.
+"""

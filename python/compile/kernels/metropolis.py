@@ -1,0 +1,76 @@
+"""Masked vector flip kernel — the paper's §3.1 "vectorized flipping".
+
+Given per-spin energy deltas, uniforms and a sublattice mask, decide and
+apply every flip of the phase in one wide operation:
+
+    p    = exp_fast(-beta * dE)        (paper §2.4 fast approximation —
+                                        ">= 1 always accepts" gives the
+                                        min(1, .) Metropolis semantics)
+    flip = (u < p) & mask              (the paper's Figure-10 mask trick)
+    s'   = flip ? -s : s
+
+The kernel is elementwise over arbitrary shape, so the same artefact body
+serves the coalesced (N, L) layout (B.2) and the flat gathered layout
+(B.1): the layouts differ only in how the *inputs* were produced, which is
+exactly the paper's point — B.1 and B.2 run "almost identical" code and
+differ only in memory organisation.
+
+Clamping: the fast approximation is only valid for x >= -126 ln 2; larger
+negative arguments wrap the exponent bits.  dE is clamped so that
+-beta*dE >= -80 — probabilities below e^-80 are (far) below the 2^-24
+resolution of the uniforms, so the clamp never changes a decision.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import exp_approx
+
+_CLAMP = -80.0
+
+
+def _flip_kernel(s_ref, de_ref, u_ref, mask_ref, beta_ref, s_out_ref, flips_out_ref):
+    s = s_ref[...]
+    de = de_ref[...]
+    u = u_ref[...]
+    mask = mask_ref[...]
+    beta = beta_ref[0]
+    x = jnp.maximum(-beta * de, jnp.float32(_CLAMP))
+    p = exp_approx.exp_fast(x)
+    flip = jnp.logical_and(u < p, mask > jnp.float32(0.5))
+    s_out_ref[...] = jnp.where(flip, -s, s)
+    flips_out_ref[...] = jnp.sum(flip.astype(jnp.float32), keepdims=True).reshape(flips_out_ref.shape)
+
+
+def flip_phase(s: jnp.ndarray, de: jnp.ndarray, u: jnp.ndarray,
+               mask: jnp.ndarray, beta: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply one masked flip phase via the Pallas kernel.
+
+    Arguments are all f32 with identical shape except ``beta`` (scalar).
+    Returns ``(s_new, n_flips)`` with ``n_flips`` a f32 scalar.
+    """
+    beta_arr = jnp.reshape(beta.astype(jnp.float32), (1,))
+    out_shapes = (
+        jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    s_new, flips = pl.pallas_call(
+        _flip_kernel,
+        out_shape=out_shapes,
+        interpret=True,
+    )(s, de, u, mask, beta_arr)
+    return s_new, flips[0]
+
+
+def flip_phase_ref(s, de, u, mask, beta):
+    """Plain-jnp twin of :func:`flip_phase` (used by tests and by HLO-size
+    comparisons; must match the kernel bit-for-bit)."""
+    x = jnp.maximum(-beta * de, jnp.float32(_CLAMP))
+    p = exp_approx.exp_fast(x)
+    flip = jnp.logical_and(u < p, mask > jnp.float32(0.5))
+    return jnp.where(flip, -s, s), jnp.sum(flip.astype(jnp.float32))

@@ -1,0 +1,155 @@
+"""W-way interlaced MT19937 — the paper's §3 vectorized Mersenne Twister.
+
+The paper interlaces 4 independent MT19937 generators so that one SSE
+operation advances all 4 in lock-step ("keeps 4x624=2,496 numbers and uses
+SSE to generate 4 random numbers in roughly the same time as each random
+number before").  On a vector machine the natural generalisation is a
+``(624, W)`` uint32 state whose trailing (lane) dimension indexes the W
+interlaced generators; every scalar op of the reference algorithm becomes
+one W-wide vector op.
+
+The classic generation loop
+
+    for i in 0..624:
+        y     = (mt[i] & UPPER) | (mt[(i+1) % 624] & LOWER)
+        mt[i] = mt[(i+397) % 624] ^ (y >> 1) ^ (MATRIX_A if y & 1 else 0)
+
+is *sequential*: for i >= 227 the source ``mt[(i+397) % 624]`` has already
+been rewritten earlier in the same loop.  It decomposes exactly into three
+fully-vectorisable passes (227 + 227 + 170 = 624):
+
+  pass 1, i in [0, 227)   : sources mt[397..624)      -- all old values
+  pass 2, i in [227, 454) : sources mt[0..227)        -- all pass-1 output
+  pass 3, i in [454, 624) : sources mt[227..397)      -- all pass-2 output;
+                            the y-term for i = 623 reads mt[0], which is
+                            pass-1 output (the single wrap-around).
+
+This file provides both the plain-jnp implementation (used by L2 and by the
+tests as a mid-level reference) and the Pallas kernel (the L1 artefact).
+Both are bit-exact against ``ref.mt19937_ref_block`` and against CPython's
+``random`` module (see python/tests/test_mt19937.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+N_STATE = 624
+M_SHIFT = 397
+MATRIX_A = 0x9908B0DF
+UPPER_MASK = 0x80000000
+LOWER_MASK = 0x7FFFFFFF
+
+# Tempering constants (Matsumoto & Nishimura 1998, Table II).
+TEMPER_B = 0x9D2C5680
+TEMPER_C = 0xEFC60000
+
+
+def init_state(seeds) -> np.ndarray:
+    """init_genrand for each lane; returns (624, W) uint32.
+
+    ``seeds`` is a sequence of W per-lane seeds (the paper uses "4 MT19937
+    random number generators with different seeds").  Pure numpy: seeding
+    happens once at build/setup time, never on the request path.
+    """
+    seeds = np.asarray(seeds, dtype=np.uint64)
+    w = seeds.shape[0]
+    mt = np.empty((N_STATE, w), dtype=np.uint64)
+    mt[0] = seeds & 0xFFFFFFFF
+    for i in range(1, N_STATE):
+        prev = mt[i - 1]
+        mt[i] = (1812433253 * (prev ^ (prev >> 30)) + i) & 0xFFFFFFFF
+    return mt.astype(np.uint32)
+
+
+def temper(y: jnp.ndarray) -> jnp.ndarray:
+    """MT19937 output tempering, elementwise on uint32."""
+    y = y ^ (y >> 11)
+    y = y ^ ((y << 7) & jnp.uint32(TEMPER_B))
+    y = y ^ ((y << 15) & jnp.uint32(TEMPER_C))
+    y = y ^ (y >> 18)
+    return y
+
+
+def _twist_math(mt: jnp.ndarray) -> jnp.ndarray:
+    """The three-pass vectorized twist on a (624, W) uint32 state."""
+    upper = jnp.uint32(UPPER_MASK)
+    lower = jnp.uint32(LOWER_MASK)
+
+    def mix(cur, nxt, src):
+        y = (cur & upper) | (nxt & lower)
+        mag = jnp.where((y & jnp.uint32(1)).astype(bool),
+                        jnp.uint32(MATRIX_A), jnp.uint32(0))
+        return src ^ (y >> 1) ^ mag
+
+    # pass 1: i in [0, 227)
+    new1 = mix(mt[0:227], mt[1:228], mt[M_SHIFT:N_STATE])
+    # pass 2: i in [227, 454); sources are pass-1 rows [0, 227)
+    new2 = mix(mt[227:454], mt[228:455], new1)
+    # pass 3: i in [454, 624); y for i = 623 wraps to new mt[0] (pass 1),
+    # sources are pass-2 rows [0, 170)
+    nxt3 = jnp.concatenate([mt[455:N_STATE], new1[0:1]], axis=0)
+    new3 = mix(mt[454:N_STATE], nxt3, new2[0:170])
+
+    return jnp.concatenate([new1, new2, new3], axis=0)
+
+
+def twist(mt: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Advance the interlaced state one full period.
+
+    Returns ``(new_state, tempered_block)``: the regenerated (624, W) state
+    and the (624, W) block of tempered outputs — 624*W random uint32 per
+    call, lane j being the next 624 outputs of generator j.
+    """
+    new_state = _twist_math(mt)
+    return new_state, temper(new_state)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _twist_kernel(mt_ref, state_out_ref, rand_out_ref):
+    """Pallas kernel body: one twist + temper of the whole state block.
+
+    The full (624, W) state fits comfortably in VMEM for every configuration
+    used here (624*128 lanes * 4 B = 312 KiB), so the BlockSpec is the whole
+    array: one HBM->VMEM round-trip per twist, all compute lane-contiguous
+    on the VPU.  This mirrors the paper's design point — the interlaced
+    generators make the *memory traffic itself* vector shaped.
+    """
+    mt = mt_ref[...]
+    new_state = _twist_math(mt)
+    state_out_ref[...] = new_state
+    rand_out_ref[...] = temper(new_state)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def twist_pallas(mt: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas-kernel version of :func:`twist` (interpret mode on CPU)."""
+    w = mt.shape[1]
+    out_shapes = (
+        jax.ShapeDtypeStruct((N_STATE, w), jnp.uint32),
+        jax.ShapeDtypeStruct((N_STATE, w), jnp.uint32),
+    )
+    return pl.pallas_call(
+        _twist_kernel,
+        out_shape=out_shapes,
+        interpret=True,
+    )(mt)
+
+
+def uniforms_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 -> f32 uniform in [0, 1) with 24-bit resolution.
+
+    Uses the top 24 bits (``(u >> 8) * 2^-24``), the standard mapping that
+    is exactly representable in f32 — matching what the paper's assembly
+    does before the flip-probability compare.
+    """
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))

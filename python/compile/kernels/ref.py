@@ -1,0 +1,183 @@
+"""Correctness oracles for the L1 kernels — intentionally *independent*
+implementations (different style, no shared helpers) so that agreement with
+the kernels is meaningful.
+
+  * ``Mt19937Py``           : literal pure-python transcription of the
+                              Matsumoto & Nishimura reference C code, used
+                              for golden vectors and CPython cross-checks.
+  * ``mt19937_ref_block``   : sequential (fori-loop) jnp twist — the C loop
+                              executed index by index, vectorised only over
+                              the lane dimension.
+  * ``exp_fast_ref`` /
+    ``exp_accurate_ref``    : the appendix's *analytic* formulas (mantissa /
+                              exponent arithmetic in float64, no bitcasts).
+  * ``sweep_phase_ref``     : brute-force Metropolis phase — recomputes the
+                              full energy before/after each candidate flip.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_STATE = 624
+M = 397
+MATRIX_A = 0x9908B0DF
+UPPER = 0x80000000
+LOWER = 0x7FFFFFFF
+
+
+class Mt19937Py:
+    """Reference scalar MT19937, transcribed from the published C code."""
+
+    def __init__(self, seed: int):
+        mt = [0] * N_STATE
+        mt[0] = seed & 0xFFFFFFFF
+        for i in range(1, N_STATE):
+            mt[i] = (1812433253 * (mt[i - 1] ^ (mt[i - 1] >> 30)) + i) & 0xFFFFFFFF
+        self.mt = mt
+        self.index = N_STATE
+
+    def _generate(self) -> None:
+        mt = self.mt
+        for i in range(N_STATE):
+            y = (mt[i] & UPPER) | (mt[(i + 1) % N_STATE] & LOWER)
+            mt[i] = mt[(i + M) % N_STATE] ^ (y >> 1) ^ (MATRIX_A if y & 1 else 0)
+        self.index = 0
+
+    def next_u32(self) -> int:
+        if self.index >= N_STATE:
+            self._generate()
+        y = self.mt[self.index]
+        self.index += 1
+        y ^= y >> 11
+        y ^= (y << 7) & 0x9D2C5680
+        y &= 0xFFFFFFFF
+        y ^= (y << 15) & 0xEFC60000
+        y &= 0xFFFFFFFF
+        y ^= y >> 18
+        return y
+
+    def cpython_state(self):
+        """State tuple accepted by ``random.Random.setstate`` — lets the
+        tests validate the twist/temper against CPython's C implementation."""
+        return (3, tuple(self.mt) + (self.index,), None)
+
+
+def mt19937_ref_block(mt: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential jnp oracle: the C regeneration loop via fori_loop.
+
+    ``mt`` is (624, W) uint32; returns (new_state, tempered_block).
+    Deliberately index-by-index — O(624) sequential steps — so it shares no
+    structure with the three-pass vectorised twist it validates.
+    """
+    a = jnp.uint32(MATRIX_A)
+
+    def body(i, st):
+        y = (st[i] & jnp.uint32(UPPER)) | (st[(i + 1) % N_STATE] & jnp.uint32(LOWER))
+        mag = jnp.where((y & jnp.uint32(1)).astype(bool), a, jnp.uint32(0))
+        return st.at[i].set(st[(i + M) % N_STATE] ^ (y >> 1) ^ mag)
+
+    new = jax.lax.fori_loop(0, N_STATE, body, mt)
+    y = new
+    y = y ^ (y >> 11)
+    y = y ^ ((y << 7) & jnp.uint32(0x9D2C5680))
+    y = y ^ ((y << 15) & jnp.uint32(0xEFC60000))
+    y = y ^ (y >> 18)
+    return new, y
+
+
+# ---------------------------------------------------------------------------
+# Exponential oracles — appendix formulas evaluated analytically in float64.
+# ---------------------------------------------------------------------------
+
+_LOG2_E = math.log2(math.e)
+_C = 2.0 * math.log(2.0) ** 2
+
+
+def _interp_pow2(y: np.ndarray) -> np.ndarray:
+    """f(i) for i = y*2^23 + 127*2^23: the linear interpolation of 2^y
+    between integer exponents — computed from the formula
+    (1 + y mod 1) * 2^floor(y), never touching bit representations."""
+    fl = np.floor(y)
+    return (1.0 + (y - fl)) * np.exp2(fl)
+
+
+def exp_fast_ref(x: np.ndarray) -> np.ndarray:
+    """Analytic model of the fast approximation, including the C-style
+    truncation toward zero that the int32 conversion performs."""
+    x = np.asarray(x, dtype=np.float64)
+    scale = float(np.float32((1 << 23) * _LOG2_E))
+    i_off = np.trunc(np.float32(np.float32(x) * np.float32(scale)).astype(np.float64))
+    y = i_off / float(1 << 23)
+    return (_interp_pow2(y) * _C).astype(np.float32)
+
+
+def exp_accurate_ref(x: np.ndarray) -> np.ndarray:
+    """Analytic model of the accurate approximation (2^{4y} interpolation,
+    exact 4th root, range masking)."""
+    x = np.asarray(x, dtype=np.float64)
+    lo = -31.5 * math.log(2.0)
+    hi = 32.0 * math.log(2.0) - 1e-3
+    xc = np.clip(np.float32(x).astype(np.float64), lo, hi)
+    scale = float(np.float32((1 << 25) * _LOG2_E))
+    i_off = np.trunc(np.float32(np.float32(xc) * np.float32(scale)).astype(np.float64))
+    y4 = i_off / float(1 << 23)
+    out = (_interp_pow2(y4) * _C) ** 0.25
+    out = np.where(x < lo, 0.0, out)
+    out = np.where(x >= 0.0, np.maximum(out, 1.0), out)
+    return out.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Metropolis oracle — brute-force energetics.
+# ---------------------------------------------------------------------------
+
+
+def total_energy_ref(s, h, nbr_idx, nbr_J, jtau) -> float:
+    """E = -sum_v h_v sum_l s_{v,l} - 1/2 sum J s s' - jtau sum_tau s s'.
+
+    ``s`` is (N, L) +-1; space edges appear twice in the padded neighbour
+    representation, hence the 1/2.
+    """
+    s = np.asarray(s, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    field = -(h[:, None] * s).sum()
+    gathered = s[np.asarray(nbr_idx)]  # (N, K, L)
+    space = -0.5 * (np.asarray(nbr_J, dtype=np.float64)[:, :, None] * s[:, None, :] * gathered).sum()
+    tau = -float(jtau) * (s * np.roll(s, -1, axis=1)).sum()
+    return float(field + space + tau)
+
+
+def sweep_phase_ref(s, u, mask, h, nbr_idx, nbr_J, jtau, beta, exp_fn=None):
+    """One checkerboard phase, each candidate flip evaluated by full-energy
+    difference.  Spins inside one phase are mutually non-interacting by
+    construction, so sequential evaluation equals the parallel kernel.
+
+    ``exp_fn`` defaults to the exact exponential; pass ``exp_fast_ref`` to
+    model the production artefact bit-for-bit.  Returns (new_s, n_flips).
+    """
+    s = np.array(s, dtype=np.float64, copy=True)
+    u = np.asarray(u, dtype=np.float64)
+    mask = np.asarray(mask)
+    n, l = s.shape
+    exp_fn = exp_fn or (lambda v: np.exp(np.asarray(v, dtype=np.float64)))
+    flips = 0
+    e0 = total_energy_ref(s, h, nbr_idx, nbr_J, jtau)
+    for v in range(n):
+        for li in range(l):
+            if not mask[v, li]:
+                continue
+            s[v, li] = -s[v, li]
+            e1 = total_energy_ref(s, h, nbr_idx, nbr_J, jtau)
+            de = e1 - e0
+            p = float(np.asarray(exp_fn(np.array([-beta * de])))[0])
+            if u[v, li] < p:
+                e0 = e1
+                flips += 1
+            else:
+                s[v, li] = -s[v, li]
+    return s, flips

@@ -1,0 +1,255 @@
+"""Layer-2 JAX model: the accelerator-side Metropolis sweep (paper §3.2).
+
+Two variants of the *same* algorithm, differing only in memory layout —
+exactly the paper's B.1 / B.2 split ("the code of both B.1 and B.2 are
+almost identical", §3.2):
+
+  B.2 ``sweep_coalesced``  — state is (N, L): base-vertex major, layer
+      minor.  The layer axis is the interlace (lane) dimension, so
+      * tau neighbours are ``roll(s, ±1, axis=1)``  — contiguous,
+      * space neighbours are ``s[nbr_idx]``          — gather of whole
+        contiguous lane rows,
+      * flip decisions are one masked vector op per phase.
+      This is the paper's layer-interlaced reordering (Fig 12b/c) mapped to
+      a vector machine: corresponding spins of all layers sit adjacently.
+
+  B.1 ``sweep_naive``      — state is flat (L*N,) in the original
+      layer-major order; every neighbour access goes through a per-spin
+      index table (the paper's Fig 4 "original memory layout"), i.e. an
+      irregular gather per neighbour — the non-coalesced access pattern.
+
+Both consume the identical MT19937 stream and make bit-identical flip
+decisions, which the tests exploit: B.1 and B.2 must produce the *same
+trajectory* (after layout conversion) from the same seed.
+
+Scheduling: a double checkerboard.  Layers alternate parity (tau edges
+always connect different parities — L must be even), and base vertices are
+pre-coloured so no space edge joins two vertices of one colour.  A sweep is
+``2 * C`` phases; every spin is visited exactly once per sweep, as in the
+paper's Fig 1.  This is the vector-machine form of the paper's GPU schedule
+(even layers then odd layers, §3.2).
+
+RNG: one (624, L)-lane interlaced MT19937 (one generator per layer — the
+paper's "random number generator for each GPU thread", interlaced as in
+§3.2).  Uniform blocks are consumed through a buffer + cursor so no outputs
+are discarded (paper §2.3: "we generate many random numbers at a time").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import metropolis, mt19937
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static (baked-at-AOT-time) shape parameters of a sweep artefact."""
+
+    n_base: int          # N: spins per layer (base-graph vertices)
+    n_layers: int        # L: QMC layers (even; tau edges wrap L-1 -> 0)
+    max_degree: int      # K: padded space-neighbour count per vertex
+    n_colors: int        # C: base-graph colouring classes
+    sweeps_per_call: int  # Metropolis sweeps executed per PJRT execute()
+
+    def __post_init__(self):
+        if self.n_layers % 2 != 0:
+            raise ValueError("n_layers must be even (layer-parity checkerboard)")
+        if self.n_base > mt19937.N_STATE:
+            raise ValueError(
+                f"n_base={self.n_base} exceeds one MT19937 block ({mt19937.N_STATE}); "
+                "draw-splitting is not implemented")
+
+    @property
+    def n_spins(self) -> int:
+        return self.n_base * self.n_layers
+
+    @property
+    def phases_per_sweep(self) -> int:
+        return 2 * self.n_colors
+
+
+def _draw_block(cfg: ModelConfig, mt, buf, cur):
+    """Take the next (N, L) block of uniforms from the buffered stream.
+
+    Refills (one vectorised twist) only when fewer than N rows remain —
+    the paper's batched-generation optimisation.  Lane j of the buffer is
+    the output stream of generator j, so row r gives one uniform per layer.
+    """
+    def refill(op):
+        mt_, _buf, _cur = op
+        mt2, buf2 = mt19937.twist_pallas(mt_)
+        return mt2, buf2, jnp.int32(0)
+
+    def keep(op):
+        return op
+
+    mt, buf, cur = jax.lax.cond(cur + cfg.n_base > mt19937.N_STATE,
+                                refill, keep, (mt, buf, cur))
+    rows = jax.lax.dynamic_slice(buf, (cur, 0), (cfg.n_base, cfg.n_layers))
+    return mt, buf, cur + jnp.int32(cfg.n_base), mt19937.uniforms_from_bits(rows)
+
+
+# ---------------------------------------------------------------------------
+# B.2 — coalesced layout
+# ---------------------------------------------------------------------------
+
+
+def _phase_fields_coalesced(s, h, nbr_idx, nbr_j, jtau):
+    """Energy delta for flipping every spin, (N, L) layout.
+
+    dE(flip v,l) = 2 s_{v,l} * (h_v + sum_k J_k s_{nbr_k, l}
+                                + jtau * (s_{v,l-1} + s_{v,l+1}))
+    """
+    gathered = s[nbr_idx]                        # (N, K, L): contiguous rows
+    h_space = h[:, None] + jnp.sum(nbr_j[:, :, None] * gathered, axis=1)
+    h_tau = jtau * (jnp.roll(s, 1, axis=1) + jnp.roll(s, -1, axis=1))
+    return 2.0 * s * (h_space + h_tau)
+
+
+def energy_coalesced(s, h, nbr_idx, nbr_j, jtau):
+    """Total energy of an (N, L) state (space edges double-counted in the
+    padded representation, hence the 1/2)."""
+    gathered = s[nbr_idx]
+    field = -jnp.sum(h[:, None] * s)
+    space = -0.5 * jnp.sum(nbr_j[:, :, None] * s[:, None, :] * gathered)
+    tau = -jtau * jnp.sum(s * jnp.roll(s, -1, axis=1))
+    return field + space + tau
+
+
+def make_sweep_coalesced(cfg: ModelConfig):
+    """Build the B.2 sweep function for AOT lowering.
+
+    Signature (all f32 unless noted):
+      s        (N, L)        +-1 spins, coalesced layout
+      mt       (624, L) u32  interlaced MT19937 state
+      buf      (624, L) u32  buffered tempered outputs
+      cur      ()  i32       cursor into buf (pass 624 to force refill)
+      h        (N,)          per-vertex fields
+      nbr_idx  (N, K) i32    padded space neighbours
+      nbr_j    (N, K)        couplings (0 padding)
+      masks    (2C, N, L)    per-phase one-hot sublattice masks, phase
+                             ``parity * C + c`` (precomputed at setup time
+                             — runtime inputs rather than in-graph
+                             constants, both because that mirrors the
+                             paper's ahead-of-time reordering and because
+                             the xla_extension 0.5.1 runtime the rust
+                             loader uses miscompiles the constant-folded
+                             broadcast variant; see DESIGN.md §Runtime)
+      beta     ()            inverse temperature of this replica
+      jtau     ()            tau (inter-layer) coupling
+    Returns (s', mt', buf', cur', flips, energy).
+    """
+
+    def sweep(s, mt, buf, cur, h, nbr_idx, nbr_j, masks, beta, jtau):
+        def one_sweep(carry, _):
+            s, mt, buf, cur, flips = carry
+            for ph in range(cfg.phases_per_sweep):
+                de = _phase_fields_coalesced(s, h, nbr_idx, nbr_j, jtau)
+                mt, buf, cur, u = _draw_block(cfg, mt, buf, cur)
+                s, nf = metropolis.flip_phase(s, de, u, masks[ph], beta)
+                flips = flips + nf
+            return (s, mt, buf, cur, flips), None
+
+        (s, mt, buf, cur, flips), _ = jax.lax.scan(
+            one_sweep, (s, mt, buf, cur, jnp.float32(0.0)),
+            None, length=cfg.sweeps_per_call)
+        energy = energy_coalesced(s, h, nbr_idx, nbr_j, jtau)
+        return s, mt, buf, cur, flips, energy
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# B.1 — naive (flat, gathered) layout
+# ---------------------------------------------------------------------------
+
+
+def energy_flat(s_flat, h_flat, fnbr_idx, fnbr_j):
+    """Total energy of a flat state; every edge (space and tau) appears
+    twice in the flat neighbour table, hence the 1/2."""
+    gathered = s_flat[fnbr_idx]                   # (L*N, K+2) irregular gather
+    field = -jnp.sum(h_flat * s_flat)
+    pair = -0.5 * jnp.sum(fnbr_j * s_flat[:, None] * gathered)
+    return field + pair
+
+
+def make_sweep_naive(cfg: ModelConfig):
+    """Build the B.1 sweep function for AOT lowering.
+
+    Same algorithm and RNG stream as B.2, original layer-major flat layout:
+      s_flat      (L*N,)          spin (l, v) at index l*N + v
+      mt, buf, cur                as in B.2
+      h_flat      (L*N,)
+      fnbr_idx    (L*N, K+2) i32  ALL neighbours (space + 2 tau), flat
+      fnbr_j      (L*N, K+2)      couplings incl. jtau entries
+      phase_masks (2C, L*N)       flattened (parity, colour) masks
+      beta        ()
+    Returns (s', mt', buf', cur', flips, energy).
+
+    The uniform for spin (l, v) is block[v, l] — the same number B.2 uses —
+    reached through a transpose: the strided, non-coalesced access pattern
+    the paper's B.1 exhibits.
+    """
+    total = cfg.n_spins
+
+    def sweep(s, mt, buf, cur, h_flat, fnbr_idx, fnbr_j, phase_masks, beta):
+        def one_sweep(carry, _):
+            s, mt, buf, cur, flips = carry
+            for ph in range(cfg.phases_per_sweep):
+                gathered = s[fnbr_idx]                      # irregular gather
+                h_eff = h_flat + jnp.sum(fnbr_j * gathered, axis=1)
+                de = 2.0 * s * h_eff
+                mt, buf, cur, u_block = _draw_block(cfg, mt, buf, cur)
+                u = jnp.transpose(u_block).reshape(total)   # strided access
+                s, nf = metropolis.flip_phase(s, de, u, phase_masks[ph], beta)
+                flips = flips + nf
+            return (s, mt, buf, cur, flips), None
+
+        (s, mt, buf, cur, flips), _ = jax.lax.scan(
+            one_sweep, (s, mt, buf, cur, jnp.float32(0.0)),
+            None, length=cfg.sweeps_per_call)
+        energy = energy_flat(s, h_flat, fnbr_idx, fnbr_j)
+        return s, mt, buf, cur, flips, energy
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shapes only; used by aot.py and tests)
+# ---------------------------------------------------------------------------
+
+
+def coalesced_example_args(cfg: ModelConfig):
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    return (
+        jax.ShapeDtypeStruct((cfg.n_base, cfg.n_layers), f32),            # s
+        jax.ShapeDtypeStruct((mt19937.N_STATE, cfg.n_layers), u32),       # mt
+        jax.ShapeDtypeStruct((mt19937.N_STATE, cfg.n_layers), u32),       # buf
+        jax.ShapeDtypeStruct((), i32),                                    # cur
+        jax.ShapeDtypeStruct((cfg.n_base,), f32),                         # h
+        jax.ShapeDtypeStruct((cfg.n_base, cfg.max_degree), i32),          # nbr_idx
+        jax.ShapeDtypeStruct((cfg.n_base, cfg.max_degree), f32),          # nbr_j
+        jax.ShapeDtypeStruct((cfg.phases_per_sweep, cfg.n_base, cfg.n_layers), f32),  # masks
+        jax.ShapeDtypeStruct((), f32),                                    # beta
+        jax.ShapeDtypeStruct((), f32),                                    # jtau
+    )
+
+
+def naive_example_args(cfg: ModelConfig):
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    total, kk = cfg.n_spins, cfg.max_degree + 2
+    return (
+        jax.ShapeDtypeStruct((total,), f32),                              # s
+        jax.ShapeDtypeStruct((mt19937.N_STATE, cfg.n_layers), u32),       # mt
+        jax.ShapeDtypeStruct((mt19937.N_STATE, cfg.n_layers), u32),       # buf
+        jax.ShapeDtypeStruct((), i32),                                    # cur
+        jax.ShapeDtypeStruct((total,), f32),                              # h_flat
+        jax.ShapeDtypeStruct((total, kk), i32),                           # fnbr_idx
+        jax.ShapeDtypeStruct((total, kk), f32),                           # fnbr_j
+        jax.ShapeDtypeStruct((cfg.phases_per_sweep, total), f32),         # masks
+        jax.ShapeDtypeStruct((), f32),                                    # beta
+    )

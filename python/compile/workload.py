@@ -1,0 +1,153 @@
+"""Synthetic QMC workload builder — python twin of ``rust/src/ising/builder.rs``.
+
+The graph topology, fields and couplings are *runtime inputs* to the AOT
+artefacts (only shapes are baked), so this module exists for the python
+tests and for generating example inputs; the rust builder is the
+authoritative production path.  Both sides build the same structure: a
+toroidal-grid base graph (bipartite, degree 4 — within the paper's "each
+spin is adjacent to 6, 7, or 8 other spins" once the 2 tau edges are
+added), L identical layers, couplings from a deterministic LCG so the two
+languages can cross-check bit-identical inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import model
+from .kernels import mt19937
+
+
+class Lcg:
+    """Deterministic 64-bit LCG (MMIX constants) shared with the rust
+    builder; used only to synthesise h/J values, never for Monte Carlo."""
+
+    MUL = 6364136223846793005
+    INC = 1442695040888963407
+
+    def __init__(self, seed: int):
+        self.state = (seed * 2 + 1) & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state = (self.state * self.MUL + self.INC) & 0xFFFFFFFFFFFFFFFF
+        return self.state
+
+    def next_unit(self) -> float:
+        """Uniform in [-1, 1) with 21-bit resolution (exact in f32)."""
+        return ((self.next_u64() >> 43) / float(1 << 20)) - 1.0
+
+
+@dataclasses.dataclass
+class Workload:
+    cfg: model.ModelConfig
+    h: np.ndarray            # (N,) f32
+    nbr_idx: np.ndarray      # (N, K) i32, padded with self-loops J=0
+    nbr_j: np.ndarray        # (N, K) f32
+    colors: np.ndarray       # (C, N) f32 one-hot colouring masks
+    jtau: float
+    s0: np.ndarray           # (N, L) f32 initial +-1 state
+
+
+def build_torus_workload(width: int, height: int, n_layers: int,
+                         sweeps_per_call: int = 1, seed: int = 1,
+                         jtau: float = 0.3) -> Workload:
+    """Toroidal ``width x height`` grid (both even => bipartite), L layers."""
+    if width % 2 or height % 2:
+        raise ValueError("torus dims must be even for a 2-colouring")
+    n = width * height
+    cfg = model.ModelConfig(n_base=n, n_layers=n_layers, max_degree=4,
+                            n_colors=2, sweeps_per_call=sweeps_per_call)
+    rng = Lcg(seed)
+
+    def vid(x, y):
+        return (y % height) * width + (x % width)
+
+    nbr_idx = np.zeros((n, 4), dtype=np.int32)
+    nbr_j = np.zeros((n, 4), dtype=np.float32)
+    # Couplings are per *undirected* edge; generate on the canonical
+    # (+x, +y) edge of each vertex and mirror to the neighbour's slot.
+    jx = np.zeros((height, width), dtype=np.float32)
+    jy = np.zeros((height, width), dtype=np.float32)
+    for y in range(height):
+        for x in range(width):
+            jx[y, x] = rng.next_unit()
+            jy[y, x] = rng.next_unit()
+    for y in range(height):
+        for x in range(width):
+            v = vid(x, y)
+            nbr_idx[v] = [vid(x + 1, y), vid(x - 1, y), vid(x, y + 1), vid(x, y - 1)]
+            nbr_j[v] = [jx[y, x], jx[y, (x - 1) % width], jy[y, x], jy[(y - 1) % height, x]]
+
+    h = np.array([rng.next_unit() * 0.5 for _ in range(n)], dtype=np.float32)
+    colors = np.zeros((2, n), dtype=np.float32)
+    for y in range(height):
+        for x in range(width):
+            colors[(x + y) % 2, vid(x, y)] = 1.0
+
+    s0 = np.empty((n, n_layers), dtype=np.float32)
+    for v in range(n):
+        for l in range(n_layers):
+            s0[v, l] = 1.0 if (rng.next_u64() >> 63) else -1.0
+    return Workload(cfg=cfg, h=h, nbr_idx=nbr_idx, nbr_j=nbr_j,
+                    colors=colors, jtau=jtau, s0=s0)
+
+
+def to_flat(w: Workload):
+    """Convert a workload to the B.1 flat representation.
+
+    Flat index of spin (l, v) is ``l*N + v`` (original layer-major order).
+    Returns (s_flat, h_flat, fnbr_idx, fnbr_j, phase_masks).
+    """
+    cfg, n, ll = w.cfg, w.cfg.n_base, w.cfg.n_layers
+    total, kk = cfg.n_spins, cfg.max_degree + 2
+
+    s_flat = np.empty(total, dtype=np.float32)
+    h_flat = np.empty(total, dtype=np.float32)
+    fnbr_idx = np.zeros((total, kk), dtype=np.int32)
+    fnbr_j = np.zeros((total, kk), dtype=np.float32)
+    for l in range(ll):
+        for v in range(n):
+            f = l * n + v
+            s_flat[f] = w.s0[v, l]
+            h_flat[f] = w.h[v]
+            for k in range(cfg.max_degree):
+                fnbr_idx[f, k] = l * n + w.nbr_idx[v, k]
+                fnbr_j[f, k] = w.nbr_j[v, k]
+            # tau edges placed last — paper §2.2's edge reordering
+            fnbr_idx[f, kk - 2] = ((l - 1) % ll) * n + v
+            fnbr_idx[f, kk - 1] = ((l + 1) % ll) * n + v
+            fnbr_j[f, kk - 2] = w.jtau
+            fnbr_j[f, kk - 1] = w.jtau
+
+    masks = np.zeros((cfg.phases_per_sweep, total), dtype=np.float32)
+    for l in range(ll):
+        for v in range(n):
+            for c in range(cfg.n_colors):
+                if w.colors[c, v] > 0.5:
+                    masks[(l % 2) * cfg.n_colors + c, l * n + v] = 1.0
+    return s_flat, h_flat, fnbr_idx, fnbr_j, masks
+
+
+def coalesced_masks(w: Workload) -> np.ndarray:
+    """Per-phase sublattice masks for the B.2 layout: (2C, N, L), phase
+    ``parity * C + c`` — one-hot over spins whose layer parity and vertex
+    colour match the phase."""
+    cfg = w.cfg
+    n, ll, c_n = cfg.n_base, cfg.n_layers, cfg.n_colors
+    masks = np.zeros((cfg.phases_per_sweep, n, ll), dtype=np.float32)
+    for l in range(ll):
+        for v in range(n):
+            for c in range(c_n):
+                if w.colors[c, v] > 0.5:
+                    masks[(l % 2) * c_n + c, v, l] = 1.0
+    return masks
+
+
+def fresh_rng(cfg: model.ModelConfig, seed: int = 5489):
+    """(mt, buf, cur) triple forcing a refill on first draw — lane j is
+    generator ``seed + j``, the paper's 'different seeds' interlacing."""
+    mt = mt19937.init_state([seed + j for j in range(cfg.n_layers)])
+    buf = np.zeros_like(mt)
+    return mt, buf, np.int32(mt19937.N_STATE)

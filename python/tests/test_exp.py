@@ -1,0 +1,111 @@
+"""Exponential-approximation kernels vs the analytic oracles and the paper's
+published error bounds (Fig 17 / Appendix)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import exp_approx as ea
+from compile.kernels import ref
+
+LN2 = math.log(2.0)
+
+
+def _rel_err(approx, x):
+    return approx.astype(np.float64) / np.exp(x.astype(np.float64)) - 1.0
+
+
+def test_fast_error_bounds_paper_fig17():
+    x = np.linspace(-80, 80, 400_001).astype(np.float32)
+    r = _rel_err(np.asarray(ea.exp_fast(jnp.asarray(x))), x)
+    assert r.min() > -0.0400
+    assert r.max() < 0.0205
+    # error oscillates around zero by design (the 2 ln^2 2 factor)
+    assert abs(r.mean()) < 2e-3
+
+
+def test_accurate_error_bounds_paper_appendix():
+    x = np.linspace(-21.0, -1e-3, 400_001).astype(np.float32)
+    r = _rel_err(np.asarray(ea.exp_accurate(jnp.asarray(x))), x)
+    assert r.min() > -0.0101
+    assert r.max() < 0.0051
+
+
+def test_accurate_masking_below_domain():
+    x = np.float32([-21.9, -22.0, -30.0, -1000.0])
+    out = np.asarray(ea.exp_accurate(jnp.asarray(x)))
+    assert (out == 0.0).all()
+
+
+def test_accurate_clamps_to_one_for_non_negative():
+    x = np.linspace(0.0, 20.0, 10_001).astype(np.float32)
+    out = np.asarray(ea.exp_accurate(jnp.asarray(x)))
+    assert (out >= 1.0).all()
+
+
+def test_fast_matches_analytic_reference():
+    x = np.linspace(-50, 50, 200_001).astype(np.float32)
+    approx = np.asarray(ea.exp_fast(jnp.asarray(x)))
+    oracle = ref.exp_fast_ref(x)
+    rel = np.abs(approx - oracle) / np.maximum(np.abs(oracle), 1e-30)
+    # The oracle models the truncation analytically; agreement is to a few
+    # ULP (the trunc boundary can differ by one integer step).
+    assert np.quantile(rel, 0.999) < 1e-5
+    assert rel.max() < 1e-3
+
+
+def test_accurate_matches_analytic_reference():
+    x = np.linspace(-21, 20, 200_001).astype(np.float32)
+    approx = np.asarray(ea.exp_accurate(jnp.asarray(x)))
+    oracle = ref.exp_accurate_ref(x)
+    mask = x < 0  # clamp region is compared in its own test
+    rel = np.abs(approx[mask] - oracle[mask]) / np.maximum(np.abs(oracle[mask]), 1e-30)
+    assert np.quantile(rel, 0.999) < 1e-5
+
+
+def test_pallas_kernels_bitexact_vs_jnp():
+    x = np.linspace(-20, 20, 100_001).astype(np.float32)
+    assert (np.asarray(ea.exp_fast_pallas(jnp.asarray(x))) == np.asarray(ea.exp_fast(jnp.asarray(x)))).all()
+    assert (
+        np.asarray(ea.exp_accurate_pallas(jnp.asarray(x)))
+        == np.asarray(ea.exp_accurate(jnp.asarray(x)))
+    ).all()
+
+
+def test_exactness_at_power_of_two_knots():
+    """At x = k ln 2 the interpolation is exact, so the only error is the
+    2 ln^2 2 scaling (paper Appendix)."""
+    for k in range(-20, 20):
+        x = np.float32(k * LN2)
+        rel = float(np.asarray(ea.exp_fast(jnp.asarray(x)))) / math.exp(float(x)) - 1.0
+        assert abs(rel - (2 * LN2 * LN2 - 1.0)) < 2e-3, (k, rel)
+
+
+@settings(max_examples=300, deadline=None)
+@given(x=st.floats(min_value=-80.0, max_value=80.0, allow_nan=False))
+def test_property_fast_bounds_hold_pointwise(x):
+    x32 = np.float32(x)
+    approx = float(np.asarray(ea.exp_fast(jnp.asarray(x32))))
+    rel = approx / math.exp(float(x32)) - 1.0
+    assert -0.0400 < rel < 0.0205
+
+
+@settings(max_examples=300, deadline=None)
+@given(x=st.floats(min_value=-21.5, max_value=21.5, allow_nan=False))
+def test_property_accurate_monotone_adjacent(x):
+    """Accuracy property the Metropolis test relies on: approximate
+    probabilities respect ordering of inputs at the resolution we use."""
+    x32 = np.float32(x)
+    a = float(np.asarray(ea.exp_accurate(jnp.asarray(x32))))
+    b = float(np.asarray(ea.exp_accurate(jnp.asarray(x32 + np.float32(0.1)))))
+    assert b >= a * 0.999  # monotone up to float noise
+
+
+def test_shapes_and_dtypes_preserved():
+    for shape in [(), (7,), (3, 5), (2, 3, 4)]:
+        x = jnp.zeros(shape, jnp.float32)
+        assert ea.exp_fast(x).shape == shape
+        assert ea.exp_accurate(x).shape == shape
+        assert ea.exp_fast(x).dtype == jnp.float32

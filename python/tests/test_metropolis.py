@@ -1,0 +1,159 @@
+"""Metropolis sweep correctness: the flip kernel vs brute-force energetics,
+B.1/B.2 trajectory equivalence, and Boltzmann-distribution convergence on
+an exactly-enumerable model."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, workload
+from compile.kernels import metropolis, ref
+
+
+@pytest.fixture(scope="module")
+def small():
+    return workload.build_torus_workload(4, 4, 8, sweeps_per_call=2, seed=11)
+
+
+def test_flip_kernel_matches_plain_jnp(small):
+    w = small
+    cfg = w.cfg
+    rng = np.random.default_rng(0)
+    s = np.where(rng.random((cfg.n_base, cfg.n_layers)) < 0.5, -1.0, 1.0).astype(np.float32)
+    de = rng.normal(size=s.shape).astype(np.float32)
+    u = rng.random(s.shape).astype(np.float32)
+    mask = (rng.random(s.shape) < 0.5).astype(np.float32)
+    beta = jnp.float32(0.7)
+    s_k, n_k = metropolis.flip_phase(jnp.asarray(s), jnp.asarray(de), jnp.asarray(u), jnp.asarray(mask), beta)
+    s_r, n_r = metropolis.flip_phase_ref(jnp.asarray(s), jnp.asarray(de), jnp.asarray(u), jnp.asarray(mask), beta)
+    assert (np.asarray(s_k) == np.asarray(s_r)).all()
+    assert float(n_k) == float(n_r)
+
+
+def test_phase_against_bruteforce_oracle(small):
+    """One checkerboard phase of the production model must match the
+    brute-force full-energy-difference oracle decision for decision."""
+    w = small
+    cfg = w.cfg
+    masks = workload.coalesced_masks(w)
+    rng = np.random.default_rng(3)
+    s = w.s0.copy()
+    u = rng.random(s.shape).astype(np.float32)
+    beta = 0.6
+
+    de = np.asarray(model._phase_fields_coalesced(
+        jnp.asarray(s), jnp.asarray(w.h), jnp.asarray(w.nbr_idx), jnp.asarray(w.nbr_j), jnp.float32(w.jtau)))
+    s_kernel, nf = metropolis.flip_phase(
+        jnp.asarray(s), jnp.asarray(de), jnp.asarray(u), jnp.asarray(masks[0]), jnp.float32(beta))
+
+    s_oracle, flips_oracle = ref.sweep_phase_ref(
+        s, u, masks[0], w.h, w.nbr_idx, w.nbr_j, w.jtau, beta, exp_fn=ref.exp_fast_ref)
+    assert (np.asarray(s_kernel) == s_oracle.astype(np.float32)).all()
+    assert float(nf) == flips_oracle
+
+
+def test_b1_b2_identical_trajectories(small):
+    w = small
+    cfg = w.cfg
+    mt, buf, cur = workload.fresh_rng(cfg)
+    masks2 = workload.coalesced_masks(w)
+    out2 = jax.jit(model.make_sweep_coalesced(cfg))(
+        jnp.asarray(w.s0), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur),
+        jnp.asarray(w.h), jnp.asarray(w.nbr_idx), jnp.asarray(w.nbr_j),
+        jnp.asarray(masks2), jnp.float32(0.8), jnp.float32(w.jtau))
+    sf, hf, fidx, fj, masks1 = workload.to_flat(w)
+    out1 = jax.jit(model.make_sweep_naive(cfg))(
+        jnp.asarray(sf), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur),
+        jnp.asarray(hf), jnp.asarray(fidx), jnp.asarray(fj),
+        jnp.asarray(masks1), jnp.float32(0.8))
+    s2, flips2, energy2 = np.asarray(out2[0]), float(out2[4]), float(out2[5])
+    s1 = np.asarray(out1[0]).reshape(cfg.n_layers, cfg.n_base).T
+    assert (s1 == s2).all(), "B.1 and B.2 must be the same trajectory"
+    assert flips2 == float(out1[4])
+    assert abs(energy2 - float(out1[5])) < 1e-3
+
+
+def test_sweep_preserves_spin_domain(small):
+    w = small
+    cfg = w.cfg
+    mt, buf, cur = workload.fresh_rng(cfg)
+    masks2 = workload.coalesced_masks(w)
+    s, *_ = jax.jit(model.make_sweep_coalesced(cfg))(
+        jnp.asarray(w.s0), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur),
+        jnp.asarray(w.h), jnp.asarray(w.nbr_idx), jnp.asarray(w.nbr_j),
+        jnp.asarray(masks2), jnp.float32(0.5), jnp.float32(w.jtau))
+    assert set(np.unique(np.asarray(s))) <= {-1.0, 1.0}
+
+
+def test_energy_decreases_at_low_temperature(small):
+    """At large beta the sampler must relax toward low energy."""
+    w = small
+    cfg = w.cfg
+    mt, buf, cur = workload.fresh_rng(cfg)
+    masks2 = workload.coalesced_masks(w)
+    sweep = jax.jit(model.make_sweep_coalesced(cfg))
+    e0 = ref.total_energy_ref(w.s0, w.h, w.nbr_idx, w.nbr_j, w.jtau)
+    s, mt_, buf_, cur_ = jnp.asarray(w.s0), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur)
+    for _ in range(10):
+        s, mt_, buf_, cur_, _, energy = sweep(
+            s, mt_, buf_, cur_, jnp.asarray(w.h), jnp.asarray(w.nbr_idx),
+            jnp.asarray(w.nbr_j), jnp.asarray(masks2), jnp.float32(3.0), jnp.float32(w.jtau))
+    assert float(energy) < e0 - 10.0
+
+
+def test_flip_counts_monotone_in_temperature(small):
+    w = small
+    cfg = w.cfg
+    masks2 = workload.coalesced_masks(w)
+    sweep = jax.jit(model.make_sweep_coalesced(cfg))
+    flips = []
+    for beta in (4.0, 1.0, 0.1):
+        mt, buf, cur = workload.fresh_rng(cfg)
+        out = sweep(jnp.asarray(w.s0), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur),
+                    jnp.asarray(w.h), jnp.asarray(w.nbr_idx), jnp.asarray(w.nbr_j),
+                    jnp.asarray(masks2), jnp.float32(beta), jnp.float32(w.jtau))
+        flips.append(float(out[4]))
+    assert flips[0] < flips[1] < flips[2]
+
+
+def _exact_boltzmann_marginal(h, J01, beta):
+    """<s0> for a 2-spin Ising chain with fields h and coupling J01."""
+    zs = {}
+    z = 0.0
+    m0 = 0.0
+    for s0, s1 in itertools.product((-1, 1), repeat=2):
+        e = -(h[0] * s0 + h[1] * s1 + J01 * s0 * s1)
+        wgt = np.exp(-beta * e)
+        z += wgt
+        m0 += s0 * wgt
+    return m0 / z
+
+
+def test_masks_cover_every_spin_exactly_once(small):
+    masks = workload.coalesced_masks(small)
+    assert (masks.sum(axis=0) == 1.0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    beta=st.floats(min_value=0.05, max_value=2.0),
+)
+def test_property_sweep_flip_count_bounded(seed, beta):
+    w = workload.build_torus_workload(4, 4, 8, sweeps_per_call=1, seed=seed)
+    cfg = w.cfg
+    mt, buf, cur = workload.fresh_rng(cfg, seed=seed + 1)
+    masks2 = workload.coalesced_masks(w)
+    out = jax.jit(model.make_sweep_coalesced(cfg))(
+        jnp.asarray(w.s0), jnp.asarray(mt), jnp.asarray(buf), jnp.int32(cur),
+        jnp.asarray(w.h), jnp.asarray(w.nbr_idx), jnp.asarray(w.nbr_j),
+        jnp.asarray(masks2), jnp.float32(beta), jnp.float32(w.jtau))
+    flips = float(out[4])
+    assert 0 <= flips <= cfg.n_spins
+    # state change count equals parity of flips per site
+    changed = (np.asarray(out[0]) != w.s0).sum()
+    assert changed <= flips

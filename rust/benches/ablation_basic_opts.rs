@@ -1,0 +1,62 @@
+//! Ablation bench for the paper's §2 basic optimizations: each ingredient
+//! of the A.1 -> A.2 jump toggled cumulatively and independently, timing
+//! the same workload (the paper's narrative: branch elimination "large
+//! impact", structure simplification "large impact", caching "slight but
+//! noticeable", plus the exp approximation).
+
+mod support;
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::sweep::ablation::{BasicOptAblation, BasicOptFlags};
+use vectorising::sweep::{ExpMode, Sweeper};
+
+const SWEEPS: usize = 150;
+const REPS: usize = 8;
+
+fn main() {
+    let beta = 0.8f32;
+    println!("basic-optimization ablation, 64x32 model, {SWEEPS} sweeps/run, {REPS} runs\n");
+    let updates = (SWEEPS * 2048) as f64;
+
+    let cumulative = [
+        BasicOptFlags::none(),
+        BasicOptFlags { branch_free: true, ..BasicOptFlags::none() },
+        BasicOptFlags { branch_free: true, flat_layout: true, exp: ExpMode::Exact, cache_two_smul: false },
+        BasicOptFlags { branch_free: true, flat_layout: true, cache_two_smul: true, exp: ExpMode::Exact },
+        BasicOptFlags::all(),
+    ];
+    let labels = ["A.1 baseline", "+ branch elimination (S2.1)", "+ flat tau-last layout (S2.2)",
+                  "+ result caching (S2.3)", "+ fast exp = A.2 (S2.4)"];
+
+    let mut baseline = None;
+    for (flags, label) in cumulative.iter().zip(labels) {
+        let wl = torus_workload(8, 8, 32, 1, 0.3);
+        let mut sw = BasicOptAblation::new(&wl.model, &wl.s0, 5489, *flags);
+        sw.run(20, beta);
+        let secs = support::time_reps(1, REPS, || {
+            sw.run(SWEEPS, beta);
+        });
+        let m = support::mean(&secs);
+        let base = *baseline.get_or_insert(m);
+        println!("{label:35} {:8.2} ns/update   {:5.2}x", m / updates * 1e9, base / m);
+    }
+
+    println!("\nindividual toggles (one at a time over A.1):");
+    let singles = [
+        BasicOptFlags { branch_free: true, ..BasicOptFlags::none() },
+        BasicOptFlags { flat_layout: true, ..BasicOptFlags::none() },
+        BasicOptFlags { cache_two_smul: true, branch_free: true, ..BasicOptFlags::none() },
+        BasicOptFlags { exp: ExpMode::Fast, ..BasicOptFlags::none() },
+        BasicOptFlags { exp: ExpMode::Accurate, ..BasicOptFlags::none() },
+    ];
+    for flags in singles {
+        let wl = torus_workload(8, 8, 32, 1, 0.3);
+        let mut sw = BasicOptAblation::new(&wl.model, &wl.s0, 5489, flags);
+        sw.run(20, beta);
+        let secs = support::time_reps(1, REPS, || {
+            sw.run(SWEEPS, beta);
+        });
+        let m = support::mean(&secs);
+        println!("{:35} {:8.2} ns/update   {:5.2}x", flags.label(), m / updates * 1e9, baseline.unwrap() / m);
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench for paper Fig 13: relative performance of the optimization
+//! ladder across thread counts (+ B.1/B.2 when artifacts are present).
+//!
+//! `cargo bench --bench fig13_ladder` prints the same rows as
+//! `repro fig13 --accel`; the workload is the scaled default (override
+//! scale via env: FIG13_SWEEPS, FIG13_MODELS, FIG13_THREADS="1,2,4").
+
+mod support;
+
+use vectorising::coordinator::RunConfig;
+use vectorising::harness::fig13;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = RunConfig {
+        n_models: env_usize("FIG13_MODELS", 4),
+        sweeps: env_usize("FIG13_SWEEPS", 100),
+        sweeps_per_round: 10,
+        ..RunConfig::default()
+    };
+    let threads: Vec<usize> = std::env::var("FIG13_THREADS")
+        .unwrap_or_else(|_| "1,2,4,6,8".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let with_accel = vectorising::runtime::artifact::default_dir().join("manifest.json").exists();
+    println!(
+        "Fig 13 | {} models x {} spins x {} sweeps | threads {:?} | accel: {}",
+        cfg.n_models,
+        cfg.n_spins_per_model(),
+        cfg.sweeps,
+        threads,
+        with_accel
+    );
+    let rows = fig13::compute(&cfg, &threads, with_accel).expect("fig13");
+    print!("{}", fig13::render(&rows, Some(std::path::Path::new("results/fig13.csv"))).unwrap());
+    println!("\npaper shape: A.2 ~3x over A.1, A.4 ~9-12x; B.2 ~6.8x over B.1; A.4 >= B.2");
+}

@@ -1,0 +1,27 @@
+//! Bench for paper Fig 14: per-replica probability of having to wait for
+//! a spin flip, measured over a tempering ladder and compared with the
+//! analytic `1 - (1-p)^w` curves for w = 1 (A.1), 4 (A.4), 32 (GPU warp).
+
+mod support;
+
+use vectorising::coordinator::RunConfig;
+use vectorising::harness::fig14;
+
+fn main() {
+    let cfg = RunConfig {
+        n_models: std::env::var("FIG14_MODELS").ok().and_then(|v| v.parse().ok()).unwrap_or(16),
+        sweeps: std::env::var("FIG14_SWEEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(200),
+        sweeps_per_round: 10,
+        ..RunConfig::default()
+    };
+    println!(
+        "Fig 14 | ladder of {} replicas x {} spins x {} sweeps",
+        cfg.n_models,
+        cfg.n_spins_per_model(),
+        cfg.sweeps
+    );
+    print!(
+        "{}",
+        fig14::run(&cfg, Some(std::path::Path::new("results/fig14.csv"))).expect("fig14")
+    );
+}

@@ -1,0 +1,73 @@
+//! Bench for paper Fig 17 + §2.4: accuracy table of the exponential
+//! approximations and throughput of `exp` vs fast vs accurate (the
+//! paper's 83 vs 4 vs 11 clock-cycle claim, here as ns/op and per-op
+//! speedup on this machine).
+
+mod support;
+
+use vectorising::expapprox::{exp_accurate, exp_fast, simd};
+use vectorising::harness::fig17;
+use vectorising::simd::F32x4;
+
+const N: usize = 1 << 16;
+const REPS: usize = 200;
+
+fn main() {
+    // --- accuracy (the figure itself) ---
+    print!("{}", fig17::run(Some(std::path::Path::new("results/fig17.csv"))).unwrap());
+
+    // --- throughput ---
+    let xs: Vec<f32> = (0..N).map(|i| -20.0 + 40.0 * (i as f32) / N as f32).collect();
+    let mut sink = 0.0f32;
+
+    let libm = support::time_reps(3, REPS, || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += x.exp();
+        }
+        sink += acc;
+    });
+    let fast = support::time_reps(3, REPS, || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += exp_fast(x);
+        }
+        sink += acc;
+    });
+    let accurate = support::time_reps(3, REPS, || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += exp_accurate(x);
+        }
+        sink += acc;
+    });
+    let fast_x4 = support::time_reps(3, REPS, || {
+        let mut acc = F32x4::zero();
+        for chunk in xs.chunks_exact(4) {
+            acc = acc + simd::exp_fast_x4(F32x4::load(chunk));
+        }
+        sink += acc.to_array()[0];
+    });
+    let accurate_x4 = support::time_reps(3, REPS, || {
+        let mut acc = F32x4::zero();
+        for chunk in xs.chunks_exact(4) {
+            acc = acc + simd::exp_accurate_x4(F32x4::load(chunk));
+        }
+        sink += acc.to_array()[0];
+    });
+
+    println!("\nthroughput ({N} evaluations/run, {REPS} runs; Mops = 1e6 evals/s):");
+    let work = N as f64;
+    support::report("exp: libm f32::exp", &libm, work, "Mops");
+    support::report("exp: fast approx (scalar)", &fast, work, "Mops");
+    support::report("exp: accurate approx (scalar)", &accurate, work, "Mops");
+    support::report("exp: fast approx (SSE x4)", &fast_x4, work, "Mops");
+    support::report("exp: accurate approx (SSE x4)", &accurate_x4, work, "Mops");
+    println!(
+        "\nspeedup over libm: fast {:.1}x, accurate {:.1}x, fast-x4 {:.1}x  (paper: ~20x, ~7.5x per the 83/4/11-cycle counts)",
+        support::mean(&libm) / support::mean(&fast),
+        support::mean(&libm) / support::mean(&accurate),
+        support::mean(&libm) / support::mean(&fast_x4),
+    );
+    std::hint::black_box(sink);
+}

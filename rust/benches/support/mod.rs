@@ -1,0 +1,43 @@
+//! Minimal benchmarking support (the offline image has no criterion):
+//! warm-up + repeated timed runs with mean/stddev, printed in a fixed
+//! format the EXPERIMENTS.md tables are built from.
+#![allow(dead_code)] // each bench binary uses a subset
+
+use std::time::Instant;
+
+/// Run `f` `reps` times after `warmup` untimed runs; returns per-run
+/// seconds.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len().max(2) - 1) as f64).sqrt()
+}
+
+/// Print one benchmark line: `name  mean ± sd seconds  (rate unit)`.
+pub fn report(name: &str, secs: &[f64], work: f64, unit: &str) {
+    let m = mean(secs);
+    let sd = stddev(secs);
+    println!(
+        "{:38} {:10.4} s ± {:7.4}   {:12.3} {unit}",
+        name,
+        m,
+        sd,
+        work / m / 1e6
+    );
+}

@@ -1,0 +1,48 @@
+//! Hot-path microbenchmark: ns per single-spin Metropolis update for each
+//! rung on one model (no tempering, no threading) — the number the whole
+//! paper is about.  Also times the accelerator rungs per-update when
+//! artifacts are present.
+
+mod support;
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::runtime::{artifact, Runtime};
+use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+
+const SWEEPS: usize = 100;
+const REPS: usize = 10;
+
+fn main() {
+    let beta = 0.8f32;
+    println!("per-update cost, 64x32 model (2,048 spins), {SWEEPS} sweeps/run, {REPS} runs\n");
+    let updates = (SWEEPS * 2048) as f64;
+
+    for kind in SweepKind::all_cpu() {
+        let wl = torus_workload(8, 8, 32, 1, 0.3);
+        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489);
+        sw.run(20, beta);
+        let secs = support::time_reps(1, REPS, || {
+            sw.run(SWEEPS, beta);
+        });
+        let ns = support::mean(&secs) / updates * 1e9;
+        support::report(&format!("sweep {} ({ns:.2} ns/update)", kind.label()), &secs, updates, "Mupd");
+    }
+
+    let dir = artifact::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::cpu().expect("pjrt");
+        for (variant, label) in [(AccelVariant::B1Naive, "B.1"), (AccelVariant::B2Coalesced, "B.2")] {
+            let wl = torus_workload(8, 8, 32, 1, 0.3);
+            let mut sw = AccelSweeper::new(&rt, &dir, "default", variant, &wl, 5489).expect("accel");
+            sw.run(20, beta);
+            let secs = support::time_reps(1, REPS, || {
+                sw.run(SWEEPS, beta);
+            });
+            let ns = support::mean(&secs) / updates * 1e9;
+            support::report(&format!("sweep {label} ({ns:.2} ns/update)"), &secs, updates, "Mupd");
+        }
+    } else {
+        println!("(artifacts missing; run `make artifacts` for B.1/B.2 rows)");
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench for paper Table 2 (+ Fig 15): pairwise speedups between the CPU
+//! rungs on one core.  The A.1a/A.2a (compiler-optimization-disabled)
+//! rows come from the `opt0`-profile binary when it exists
+//! (`make opt0`); otherwise the optimized 2x2 core of the table is
+//! printed alone.
+
+mod support;
+
+use std::path::Path;
+
+use vectorising::coordinator::RunConfig;
+use vectorising::harness::table2;
+
+fn main() {
+    let cfg = RunConfig {
+        n_models: std::env::var("TABLE2_MODELS").ok().and_then(|v| v.parse().ok()).unwrap_or(4),
+        sweeps: std::env::var("TABLE2_SWEEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(150),
+        sweeps_per_round: 10,
+        threads: 1,
+        ..RunConfig::default()
+    };
+    println!(
+        "Table 2 | {} models x {} spins x {} sweeps | 1 thread",
+        cfg.n_models,
+        cfg.n_spins_per_model(),
+        cfg.sweeps
+    );
+    let mut rungs = table2::measure_optimized(&cfg).expect("optimized rungs");
+    let opt0 = Path::new("target/opt0/repro");
+    if opt0.exists() {
+        let mut un = table2::measure_unoptimized(&cfg, opt0).expect("opt0 rungs");
+        un.append(&mut rungs);
+        rungs = un;
+    } else {
+        println!("(no {opt0:?}; run `make opt0` for the A.1a/A.2a rows)");
+    }
+    print!("{}", table2::render(&rungs, Some(Path::new("results/table2.csv"))).unwrap());
+}

@@ -1,0 +1,232 @@
+//! Ensemble checkpointing — save/resume long tempering runs.
+//!
+//! The paper's production context ("millions of the Metropolis sweeps ...
+//! on millions of systems ... months of computation time on thousands of
+//! multi-core computers" — AQUA@Home volunteer computing) requires runs
+//! to survive interruption.  A checkpoint captures every replica's spin
+//! state plus the run configuration; restoring rebuilds the ensemble and
+//! re-derives the effective fields (h_eff is a pure function of state, so
+//! it is never serialized).
+//!
+//! Note on RNG state: MT19937 state is deliberately *not* checkpointed —
+//! resuming re-seeds from `seed + resume_epoch`, which preserves the
+//! statistical guarantees (independent streams) without serializing
+//! 2,496-word generator states; bit-exact resume of a trajectory is not a
+//! goal of checkpointing (it is covered by the deterministic-seed tests).
+
+use std::path::Path;
+
+use crate::sweep::{SweepKind, Sweeper};
+use crate::tempering::PtEnsembleImpl;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::config::RunConfig;
+
+/// A serializable snapshot of a tempering run.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub kind: String,
+    pub epoch: u64,
+    pub sweeps_done: usize,
+    pub config: RunConfig,
+    /// Per-replica ±1 states in original order, ladder-ordered.
+    pub states: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Capture the current ensemble state.
+    pub fn capture<S: Sweeper + ?Sized>(
+        kind: SweepKind,
+        epoch: u64,
+        sweeps_done: usize,
+        config: &RunConfig,
+        pt: &mut PtEnsembleImpl<S>,
+    ) -> Self {
+        let states = (0..pt.len()).map(|i| pt.state_of(i)).collect();
+        Self {
+            kind: kind.label().to_string(),
+            epoch,
+            sweeps_done,
+            config: config.clone(),
+            states,
+        }
+    }
+
+    /// Restore the states into a freshly built ensemble (replica count and
+    /// spin count must match the checkpoint).
+    pub fn restore<S: Sweeper + ?Sized>(&self, pt: &mut PtEnsembleImpl<S>) -> Result<()> {
+        if pt.len() != self.states.len() {
+            anyhow::bail!(
+                "checkpoint has {} replicas, ensemble has {}",
+                self.states.len(),
+                pt.len()
+            );
+        }
+        for (i, s) in self.states.iter().enumerate() {
+            if s.len() != pt.state_of(i).len() {
+                anyhow::bail!("replica {i}: state length {} != model {}", s.len(), pt.state_of(i).len());
+            }
+            pt.set_state_of(i, s);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> String {
+        // Spins are ±1; serialize compactly as sign bits per replica.
+        let states: Vec<Value> = self
+            .states
+            .iter()
+            .map(|s| Value::Str(s.iter().map(|&x| if x > 0.0 { '1' } else { '0' }).collect()))
+            .collect();
+        json::obj(vec![
+            ("kind", json::str_v(&self.kind)),
+            ("epoch", json::num(self.epoch as f64)),
+            ("sweeps_done", json::num(self.sweeps_done as f64)),
+            ("config", config_to_json(&self.config)),
+            ("states", Value::Arr(states)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let states = v
+            .get("states")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(s.as_str()?
+                    .chars()
+                    .map(|c| if c == '1' { 1.0f32 } else { -1.0 })
+                    .collect())
+            })
+            .collect::<Result<Vec<Vec<f32>>>>()?;
+        Ok(Self {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            epoch: v.get("epoch")?.as_f64()? as u64,
+            sweeps_done: v.get("sweeps_done")?.as_usize()?,
+            config: config_from_json(v.get("config")?)?,
+            states,
+        })
+    }
+
+    /// Write atomically (tmp file + rename) so an interrupted save never
+    /// corrupts the previous checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read checkpoint {path:?}: {e}"))?;
+        Self::from_json(&text).map_err(|e| anyhow::anyhow!("malformed checkpoint {path:?}: {e}"))
+    }
+}
+
+fn config_to_json(c: &RunConfig) -> Value {
+    json::obj(vec![
+        ("width", json::num(c.width as f64)),
+        ("height", json::num(c.height as f64)),
+        ("layers", json::num(c.layers as f64)),
+        ("n_models", json::num(c.n_models as f64)),
+        ("sweeps", json::num(c.sweeps as f64)),
+        ("sweeps_per_round", json::num(c.sweeps_per_round as f64)),
+        ("threads", json::num(c.threads as f64)),
+        ("beta_cold", json::num(c.beta_cold as f64)),
+        ("beta_hot", json::num(c.beta_hot as f64)),
+        ("jtau", json::num(c.jtau as f64)),
+        ("seed", json::num(c.seed as f64)),
+    ])
+}
+
+fn config_from_json(v: &Value) -> Result<RunConfig> {
+    Ok(RunConfig {
+        width: v.get("width")?.as_usize()?,
+        height: v.get("height")?.as_usize()?,
+        layers: v.get("layers")?.as_usize()?,
+        n_models: v.get("n_models")?.as_usize()?,
+        sweeps: v.get("sweeps")?.as_usize()?,
+        sweeps_per_round: v.get("sweeps_per_round")?.as_usize()?,
+        threads: v.get("threads")?.as_usize()?,
+        beta_cold: v.get("beta_cold")?.as_f64()? as f32,
+        beta_hot: v.get("beta_hot")?.as_f64()? as f32,
+        jtau: v.get("jtau")?.as_f64()? as f32,
+        seed: v.get("seed")?.as_f64()? as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{self, RunConfig};
+    use crate::sweep::SweepKind;
+
+    fn cfg() -> RunConfig {
+        RunConfig { n_models: 3, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        pt.sweep_all(5);
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 3, 50, &cfg, &mut pt);
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back.kind, "A.2");
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.states, ck.states);
+        assert_eq!(back.config.n_models, 3);
+    }
+
+    #[test]
+    fn restore_resumes_with_identical_states_and_energies() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A4Full).unwrap();
+        pt.sweep_all(7);
+        let energies: Vec<f64> = pt.reports().iter().map(|r| r.energy).collect();
+        let ck = Checkpoint::capture(SweepKind::A4Full, 1, 7, &cfg, &mut pt);
+
+        let mut fresh = coordinator::build_ensemble(&cfg, SweepKind::A4Full).unwrap();
+        ck.restore(&mut fresh).unwrap();
+        let restored: Vec<f64> = fresh.reports().iter().map(|r| r.energy).collect();
+        assert_eq!(energies, restored);
+        for i in 0..pt.len() {
+            assert_eq!(pt.state_of(i), fresh.state_of(i));
+        }
+    }
+
+    #[test]
+    fn save_load_file_roundtrip_is_atomic() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A1Original).unwrap();
+        pt.sweep_all(3);
+        let ck = Checkpoint::capture(SweepKind::A1Original, 0, 3, &cfg, &mut pt);
+        let dir = std::env::temp_dir().join("vectorising_ckpt_test");
+        let path = dir.join("run.ckpt.json");
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "tmp must be renamed away");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.states, ck.states);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 0, 0, &cfg, &mut pt);
+        let mut bigger = coordinator::build_ensemble(
+            &RunConfig { n_models: 5, ..cfg.clone() },
+            SweepKind::A2Basic,
+        )
+        .unwrap();
+        assert!(ck.restore(&mut bigger).is_err());
+    }
+}

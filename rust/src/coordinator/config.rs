@@ -1,0 +1,214 @@
+//! Run configurations for the coordinator and the benchmark harness.
+
+use crate::sweep::SweepKind;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// A complete simulation/benchmark configuration.
+///
+/// The defaults are the scaled workload (runs in seconds on one core);
+/// [`RunConfig::paper`] is the paper's §4 geometry: 115 models of
+/// 96 × 256 = 24,576 spins, 30,000 sweeps.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Base-graph torus width (spins per layer = width × height).
+    pub width: usize,
+    /// Base-graph torus height.
+    pub height: usize,
+    /// QMC layers (multiple of 4, ≥ 8).
+    pub layers: usize,
+    /// Tempering replicas ("Ising models" in the paper's §4).
+    pub n_models: usize,
+    /// Total Metropolis sweeps per replica.
+    pub sweeps: usize,
+    /// Sweeps between replica-exchange attempts.
+    pub sweeps_per_round: usize,
+    /// Worker threads for the sweep phase.
+    pub threads: usize,
+    /// Coldest inverse temperature (ladder top).
+    pub beta_cold: f32,
+    /// Hottest inverse temperature (ladder bottom).
+    pub beta_hot: f32,
+    /// Inter-layer coupling.
+    pub jtau: f32,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            width: 8,
+            height: 8,
+            layers: 32,
+            n_models: 8,
+            sweeps: 200,
+            sweeps_per_round: 10,
+            threads: 1,
+            beta_cold: 3.0,
+            beta_hot: 0.5,
+            jtau: 0.3,
+            seed: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The paper's §4 benchmark scale.
+    pub fn paper() -> Self {
+        Self {
+            width: 12,
+            height: 8,
+            layers: 256,
+            n_models: 115,
+            sweeps: 30_000,
+            sweeps_per_round: 100,
+            ..Self::default()
+        }
+    }
+
+    pub fn n_base(&self) -> usize {
+        self.width * self.height
+    }
+
+    pub fn n_spins_per_model(&self) -> usize {
+        self.n_base() * self.layers
+    }
+
+    /// Total spins across the ensemble (paper: 2,826,240 at full scale).
+    pub fn total_spins(&self) -> usize {
+        self.n_spins_per_model() * self.n_models
+    }
+
+    /// Total single-spin Metropolis updates the run performs.
+    pub fn total_updates(&self) -> u64 {
+        self.total_spins() as u64 * self.sweeps as u64
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.layers % 4 != 0 || self.layers < 8 {
+            anyhow::bail!("layers must be a multiple of 4 and >= 8 (got {})", self.layers);
+        }
+        if self.width % 2 != 0 || self.height % 2 != 0 {
+            anyhow::bail!("torus dims must be even (got {}x{})", self.width, self.height);
+        }
+        if self.sweeps % self.sweeps_per_round != 0 {
+            anyhow::bail!(
+                "sweeps ({}) must be a multiple of sweeps_per_round ({})",
+                self.sweeps,
+                self.sweeps_per_round
+            );
+        }
+        if self.n_models == 0 || self.threads == 0 {
+            anyhow::bail!("n_models and threads must be positive");
+        }
+        if !(self.beta_cold > self.beta_hot && self.beta_hot > 0.0) {
+            anyhow::bail!("need beta_cold > beta_hot > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Per-rung timing result exchanged between build profiles (the opt0
+/// binary prints this as JSON; the harness parses it back).
+#[derive(Clone, Debug)]
+pub struct RungTiming {
+    pub kind: String,
+    pub threads: usize,
+    pub seconds: f64,
+    pub sweeps: usize,
+    pub updates_per_sec: f64,
+    /// `true` when produced by an `opt-level=0` build (the paper's
+    /// "compiler optimization disabled" rows).
+    pub opt_disabled: bool,
+}
+
+impl RungTiming {
+    pub fn new(kind: SweepKind, threads: usize, seconds: f64, sweeps: usize, updates: u64) -> Self {
+        Self {
+            kind: kind.label().to_string(),
+            threads,
+            seconds,
+            sweeps,
+            updates_per_sec: updates as f64 / seconds.max(1e-12),
+            opt_disabled: opt_level_is_zero(),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        json::obj(vec![
+            ("kind", json::str_v(&self.kind)),
+            ("threads", json::num(self.threads as f64)),
+            ("seconds", json::num(self.seconds)),
+            ("sweeps", json::num(self.sweeps as f64)),
+            ("updates_per_sec", json::num(self.updates_per_sec)),
+            ("opt_disabled", Value::Bool(self.opt_disabled)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        Ok(Self {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            threads: v.get("threads")?.as_usize()?,
+            seconds: v.get("seconds")?.as_f64()?,
+            sweeps: v.get("sweeps")?.as_usize()?,
+            updates_per_sec: v.get("updates_per_sec")?.as_f64()?,
+            opt_disabled: v.get("opt_disabled")?.as_bool()?,
+        })
+    }
+}
+
+/// Whether this binary was built without optimization (the paper's
+/// "compiler optimization disabled" rows).  The `opt0` cargo profile
+/// isn't directly observable at compile time, so the Makefile sets
+/// `REPRO_OPT0=1` in the environment when building that profile.
+pub fn opt_level_is_zero() -> bool {
+    option_env!("REPRO_OPT0").is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_scale_totals() {
+        let c = RunConfig::paper();
+        c.validate().unwrap();
+        assert_eq!(c.n_spins_per_model(), 24_576);
+        assert_eq!(c.total_spins(), 2_826_240);
+        assert_eq!(c.total_updates(), 2_826_240u64 * 30_000);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = RunConfig::default();
+        c.layers = 30;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.width = 7;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.sweeps = 15;
+        c.sweeps_per_round = 10;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.beta_hot = 6.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rung_timing_roundtrips_json() {
+        let t = RungTiming::new(SweepKind::A2Basic, 2, 1.5, 100, 1000);
+        let back = RungTiming::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.kind, "A.2");
+        assert_eq!(back.threads, 2);
+        assert!((back.seconds - 1.5).abs() < 1e-12);
+    }
+}

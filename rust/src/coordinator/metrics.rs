@@ -1,0 +1,132 @@
+//! Run metrics: wall-clock timing and throughput accounting.
+
+use std::time::Instant;
+
+use crate::sweep::SweepStats;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Simple wall-clock stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Aggregated outcome of a coordinator run (serializable so harness
+/// invocations across build profiles can exchange it as JSON).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub kind: String,
+    pub threads: usize,
+    pub n_models: usize,
+    pub sweeps: usize,
+    pub wall_seconds: f64,
+    /// Single-spin Metropolis updates per second (the paper's implicit
+    /// throughput unit: total spins × sweeps / time).
+    pub updates_per_sec: f64,
+    pub total_flips: u64,
+    pub total_attempts: u64,
+    pub swap_acceptance: f64,
+    /// Per-replica (ladder-ordered) flip probabilities — Fig 14's input.
+    pub flip_probs: Vec<f64>,
+    /// Per-replica measured group-wait probabilities (CPU rungs only).
+    pub wait_probs: Vec<f64>,
+    /// Per-replica final energies.
+    pub energies: Vec<f64>,
+}
+
+impl RunReport {
+    pub fn from_stats(
+        kind: &str,
+        threads: usize,
+        sweeps: usize,
+        wall_seconds: f64,
+        per_replica: &[(f32, SweepStats, f64)],
+        swap_acceptance: f64,
+    ) -> Self {
+        let total_flips = per_replica.iter().map(|r| r.1.flips).sum();
+        let total_attempts: u64 = per_replica.iter().map(|r| r.1.attempts).sum();
+        Self {
+            kind: kind.to_string(),
+            threads,
+            n_models: per_replica.len(),
+            sweeps,
+            wall_seconds,
+            updates_per_sec: total_attempts as f64 / wall_seconds.max(1e-12),
+            total_flips,
+            total_attempts,
+            swap_acceptance,
+            flip_probs: per_replica.iter().map(|r| r.1.flip_prob()).collect(),
+            wait_probs: per_replica.iter().map(|r| r.1.wait_prob()).collect(),
+            energies: per_replica.iter().map(|r| r.2).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        json::obj(vec![
+            ("kind", json::str_v(&self.kind)),
+            ("threads", json::num(self.threads as f64)),
+            ("n_models", json::num(self.n_models as f64)),
+            ("sweeps", json::num(self.sweeps as f64)),
+            ("wall_seconds", json::num(self.wall_seconds)),
+            ("updates_per_sec", json::num(self.updates_per_sec)),
+            ("total_flips", json::num(self.total_flips as f64)),
+            ("total_attempts", json::num(self.total_attempts as f64)),
+            ("swap_acceptance", json::num(self.swap_acceptance)),
+            ("flip_probs", json::arr_f64(&self.flip_probs)),
+            ("wait_probs", json::arr_f64(&self.wait_probs)),
+            ("energies", json::arr_f64(&self.energies)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let f64s = |key: &str| -> Result<Vec<f64>> {
+            v.get(key)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
+        };
+        Ok(Self {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            threads: v.get("threads")?.as_usize()?,
+            n_models: v.get("n_models")?.as_usize()?,
+            sweeps: v.get("sweeps")?.as_usize()?,
+            wall_seconds: v.get("wall_seconds")?.as_f64()?,
+            updates_per_sec: v.get("updates_per_sec")?.as_f64()?,
+            total_flips: v.get("total_flips")?.as_f64()? as u64,
+            total_attempts: v.get("total_attempts")?.as_f64()? as u64,
+            swap_acceptance: v.get("swap_acceptance")?.as_f64()?,
+            flip_probs: f64s("flip_probs")?,
+            wait_probs: f64s("wait_probs")?,
+            energies: f64s("energies")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let mk = |flips, attempts| SweepStats { attempts, flips, groups: attempts, groups_with_flip: flips };
+        let rows = vec![(1.0f32, mk(10, 100), -5.0), (0.5, mk(30, 100), -2.0)];
+        let rep = RunReport::from_stats("A.2", 2, 50, 2.0, &rows, 0.25);
+        assert_eq!(rep.total_flips, 40);
+        assert_eq!(rep.total_attempts, 200);
+        assert!((rep.updates_per_sec - 100.0).abs() < 1e-9);
+        assert_eq!(rep.flip_probs, vec![0.1, 0.3]);
+        assert_eq!(rep.energies, vec![-5.0, -2.0]);
+        let back = RunReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.n_models, 2);
+        assert_eq!(back.flip_probs, rep.flip_probs);
+    }
+}

@@ -1,0 +1,118 @@
+//! The L3 coordinator: builds a tempering ensemble from a [`RunConfig`],
+//! schedules sweep rounds across worker threads, interleaves replica
+//! exchanges, and reports throughput + per-replica statistics.
+//!
+//! This is the process-level frame the paper's workload ran in (AQUA@Home
+//! distributed millions of such runs; here one process = one ladder of
+//! "Ising models" as in §4's benchmark: 115 models, 30,000 sweeps).
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod scheduler;
+
+pub use checkpoint::Checkpoint;
+pub use config::{RunConfig, RungTiming};
+pub use metrics::{RunReport, Timer};
+
+use crate::ising::builder::{torus_workload, Workload};
+use crate::sweep::{make_sweeper, SweepKind, Sweeper};
+use crate::tempering::{Ladder, PtEnsemble};
+use crate::Result;
+
+/// Build the workloads of a run — one per tempering replica, identical
+/// topology, per-replica seeds (paper: 115 copies of the model at
+/// different temperatures).
+pub fn build_workloads(cfg: &RunConfig) -> Vec<Workload> {
+    (0..cfg.n_models)
+        .map(|_| torus_workload(cfg.width, cfg.height, cfg.layers, cfg.seed, cfg.jtau))
+        .collect()
+}
+
+/// Build a CPU-rung ensemble for the configuration.
+pub fn build_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<PtEnsemble> {
+    cfg.validate()?;
+    let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
+    let replicas: Vec<Box<dyn Sweeper + Send>> = build_workloads(cfg)
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| make_sweeper(kind, &wl.model, &wl.s0, cfg.seed as u32 + 1000 * i as u32))
+        .collect();
+    Ok(PtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a))
+}
+
+/// Run a full simulation: rounds of (parallel sweep batch, exchange).
+/// Returns the run report with timing and per-replica statistics.
+pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
+    let mut pt = build_ensemble(cfg, kind)?;
+    let timer = Timer::start();
+    let rounds = cfg.sweeps / cfg.sweeps_per_round;
+    for _ in 0..rounds {
+        scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round, cfg.threads);
+        pt.exchange();
+    }
+    let wall = timer.seconds();
+    let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
+        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
+    Ok(RunReport::from_stats(
+        kind.label(),
+        cfg.threads,
+        cfg.sweeps,
+        wall,
+        &rows,
+        pt.swap_acceptance(),
+    ))
+}
+
+/// Timing-only run used by the benchmark harness (no exchanges — the
+/// paper's §4 measurement times the Metropolis sweeps themselves; PT
+/// bookkeeping is excluded like the paper excludes its multi-threading
+/// machinery from the per-sweep analysis).
+pub fn time_sweeps(cfg: &RunConfig, kind: SweepKind) -> Result<RungTiming> {
+    let mut pt = build_ensemble(cfg, kind)?;
+    // Warm caches and reach a representative flip regime first.
+    scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), cfg.threads);
+    let timer = Timer::start();
+    scheduler::parallel_sweep(&mut pt, cfg.sweeps, cfg.threads);
+    let wall = timer.seconds();
+    Ok(RungTiming::new(kind, cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RunConfig {
+        RunConfig { n_models: 4, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn run_produces_consistent_report() {
+        let rep = run(&small(), SweepKind::A2Basic).unwrap();
+        assert_eq!(rep.n_models, 4);
+        assert_eq!(rep.flip_probs.len(), 4);
+        let cfg = small();
+        assert_eq!(rep.total_attempts, cfg.total_updates());
+        assert!(rep.updates_per_sec > 0.0);
+        // Ladder ordering: hottest replica flips most.
+        assert!(rep.flip_probs.last().unwrap() > rep.flip_probs.first().unwrap());
+    }
+
+    #[test]
+    fn threads_do_not_change_totals() {
+        let mut cfg = small();
+        let r1 = run(&cfg, SweepKind::A4Full).unwrap();
+        cfg.threads = 4;
+        let r4 = run(&cfg, SweepKind::A4Full).unwrap();
+        assert_eq!(r1.total_attempts, r4.total_attempts);
+        assert_eq!(r1.total_flips, r4.total_flips); // deterministic per-replica RNG
+    }
+
+    #[test]
+    fn time_sweeps_reports_throughput() {
+        let t = time_sweeps(&small(), SweepKind::A3VecRng).unwrap();
+        assert!(t.seconds > 0.0);
+        assert!(t.updates_per_sec > 0.0);
+        assert_eq!(t.kind, "A.3");
+    }
+}

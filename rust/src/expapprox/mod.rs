@@ -1,0 +1,153 @@
+//! Bit-trick exponential approximations (paper §2.4 + Appendix).
+//!
+//! Replaces the ~83-cycle library `exp` with approximations built on the
+//! IEEE-754 binary32 layout: the integer bit pattern of a positive float
+//! *is* a linear interpolation of `2^y` in `y = i/2^23 - 127`, so an
+//! exponential costs one multiply, one float→int conversion, one integer
+//! add and one bitcast.  Scaling by `2 ln² 2` centres the relative error
+//! at zero.
+//!
+//! * [`exp_fast`] / [`simd::exp_fast_x4`] — the ~4-cycle variant: relative
+//!   error in (−3.92%, +2.00%); valid for `−126 ln 2 ≤ x < 128 ln 2`.
+//! * [`exp_accurate`] / [`simd::exp_accurate_x4`] — the ~11-cycle variant:
+//!   interpolates `2^{4y}` and takes a 4th root (via reciprocal square
+//!   roots), with masking to return exactly 0.0 below `−31.5 ln 2` and at
+//!   least 1.0 for `x ≥ 0`; relative error in (−1.0%, +0.5%).
+//!
+//! Both are lookup-table free *by design* so that they vectorize — the
+//! paper's stated reason ("It was important that this approximation does
+//! not use lookup tables, so that it can also be vectorized").
+
+pub mod scalar;
+pub mod simd;
+
+pub use scalar::{exp_accurate, exp_fast};
+
+use std::f32::consts::LN_2;
+
+/// `log2(e)` as f32 (the multiplier before the float→int conversion).
+pub const LOG2_E: f32 = std::f32::consts::LOG2_E;
+/// The error-centering constant `2 ln² 2 ≈ 0.960906`.
+pub const TWO_LN2_SQ: f32 = 2.0 * LN_2 * LN_2;
+/// IEEE-754 exponent bias shifted into place: `127 << 23`.
+pub const BIAS_BITS: i32 = 127 << 23;
+
+/// Domain of the fast variant: `[-126 ln 2, 128 ln 2)`.
+pub const FAST_LO: f32 = -126.0 * LN_2;
+/// Upper end of the fast variant's domain.
+pub const FAST_HI: f32 = 128.0 * LN_2;
+/// Domain of the accurate variant: `[-31.5 ln 2, 32 ln 2)`.
+pub const ACCURATE_LO: f32 = -31.5 * LN_2;
+/// Upper end of the accurate variant's domain.
+pub const ACCURATE_HI: f32 = 32.0 * LN_2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::F32x4;
+
+    fn sweep(lo: f32, hi: f32, n: usize) -> impl Iterator<Item = f32> {
+        let step = (hi - lo) / n as f32;
+        (0..n).map(move |i| lo + step * i as f32)
+    }
+
+    /// Paper Fig 17: fast variant error within roughly (−4%, +2%).
+    #[test]
+    fn fast_error_bounds() {
+        let (mut lo, mut hi) = (0.0f64, 0.0f64);
+        for x in sweep(FAST_LO + 0.1, FAST_HI - 0.1, 400_000) {
+            let approx = exp_fast(x) as f64;
+            let exact = (x as f64).exp();
+            let rel = approx / exact - 1.0;
+            lo = lo.min(rel);
+            hi = hi.max(rel);
+        }
+        assert!(lo > -0.0400, "worst underestimate {lo}");
+        assert!(hi < 0.0205, "worst overestimate {hi}");
+        // The error must actually oscillate (it averages ~0 by design).
+        assert!(lo < -0.030 && hi > 0.015, "range ({lo}, {hi}) suspiciously tight");
+    }
+
+    /// Paper Appendix: accurate variant error within (−0.01, 0.005).
+    #[test]
+    fn accurate_error_bounds() {
+        for x in sweep(ACCURATE_LO + 1e-3, -1e-3, 400_000) {
+            let approx = exp_accurate(x) as f64;
+            let exact = (x as f64).exp();
+            let rel = approx / exact - 1.0;
+            assert!(rel > -0.0101 && rel < 0.0051, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn accurate_masks_below_range_to_zero() {
+        for x in [-22.0f32, -30.0, -100.0, -1e4, f32::NEG_INFINITY] {
+            assert_eq!(exp_accurate(x), 0.0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn accurate_is_at_least_one_for_non_negative() {
+        for x in sweep(0.0, ACCURATE_HI - 0.1, 10_000) {
+            assert!(exp_accurate(x) >= 1.0, "x={x} -> {}", exp_accurate(x));
+        }
+    }
+
+    #[test]
+    fn fast_agrees_at_powers_of_two_knots() {
+        // At integer y = x/ln2 the interpolation is exact, so the only
+        // error is the 2 ln² 2 scaling.
+        for k in -20..20 {
+            let x = (k as f32) * LN_2;
+            let rel = exp_fast(x) as f64 / (x as f64).exp() - 1.0;
+            assert!((rel - (TWO_LN2_SQ as f64 - 1.0)).abs() < 2e-3, "k={k} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn simd_fast_matches_scalar_bitexact() {
+        for x in sweep(FAST_LO + 0.1, FAST_HI - 0.1, 40_000) {
+            let quad = simd::exp_fast_x4(F32x4::from([x, x / 2.0, -x / 3.0, 0.0])).to_array();
+            for (lane, &xx) in [x, x / 2.0, -x / 3.0, 0.0].iter().enumerate() {
+                if xx >= FAST_LO && xx < FAST_HI {
+                    assert_eq!(quad[lane], exp_fast(xx), "x={xx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_accurate_within_paper_bounds() {
+        // The SSE variant uses RSQRTPS (max rel error 1.5*2^-12 per use),
+        // so its bound is the paper's (−1%, +0.5%) plus ~0.06%.
+        for x in sweep(ACCURATE_LO + 1e-3, -1e-3, 100_000) {
+            let approx = simd::exp_accurate_x4(F32x4::splat(x)).to_array()[0] as f64;
+            let exact = (x as f64).exp();
+            let rel = approx / exact - 1.0;
+            assert!(rel > -0.0108 && rel < 0.0058, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn simd_accurate_masks_and_clamps() {
+        let v = simd::exp_accurate_x4(F32x4::from([-30.0, -22.5, 0.0, 1.5])).to_array();
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[1], 0.0);
+        assert!(v[2] >= 1.0);
+        assert!(v[3] >= 1.0);
+    }
+
+    /// The average relative error of the fast variant should be near zero
+    /// (that is what the 2 ln² 2 factor buys — Appendix).
+    #[test]
+    fn fast_error_averages_near_zero() {
+        let mut acc = 0.0f64;
+        let mut n = 0u64;
+        for x in sweep(-10.0, 10.0, 200_000) {
+            acc += exp_fast(x) as f64 / (x as f64).exp() - 1.0;
+            n += 1;
+        }
+        let mean = acc / n as f64;
+        assert!(mean.abs() < 2e-3, "mean relative error {mean}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Scalar forms of the exponential approximations.
+//!
+//! These are the non-SSE reference used by the A.2 rung and by the tests;
+//! the operation sequence matches the paper's Figure 7 exactly so the SIMD
+//! versions in [`super::simd`] can be validated lane-by-lane against them.
+
+use super::{BIAS_BITS, LOG2_E, TWO_LN2_SQ};
+
+/// Fast approximation (paper §2.4, "4 clock cycles").
+///
+/// `e^x ≈ bitcast<f32>( trunc(x · 2²³ log₂e) + (127 << 23) ) · 2 ln² 2`
+///
+/// No range masking — the caller must keep `x` in `[-126 ln 2, 128 ln 2)`,
+/// as in the paper ("The faster, less accurate approximation skips the
+/// bounds checking").
+#[inline(always)]
+pub fn exp_fast(x: f32) -> f32 {
+    let i = (x * ((1 << 23) as f32 * LOG2_E)) as i32 + BIAS_BITS;
+    f32::from_bits(i as u32) * TWO_LN2_SQ
+}
+
+/// Accurate approximation (paper Fig 7, "11 clock cycles").
+///
+/// Interpolates `2^{4y}` (factor `2²⁵ log₂e`) and takes the 4th root, with
+/// the masking the paper describes: exactly `0.0` for `x < -31.5 ln 2`,
+/// and at least `1.0` for `x ≥ 0` (the Metropolis `min(1, e^x)` semantics
+/// never rejects a downhill move).
+#[inline(always)]
+pub fn exp_accurate(x: f32) -> f32 {
+    if x < super::ACCURATE_LO {
+        return 0.0;
+    }
+    let xc = if x >= super::ACCURATE_HI { super::ACCURATE_HI - 1e-3 } else { x };
+    let i = (xc * ((1 << 25) as f32 * LOG2_E)) as i32 + BIAS_BITS;
+    let interp = f32::from_bits(i as u32) * TWO_LN2_SQ;
+    // 4th root via two square roots (the SIMD form uses RSQRTPS twice).
+    let r = interp.sqrt().sqrt();
+    if x >= 0.0 && r < 1.0 {
+        1.0
+    } else {
+        r
+    }
+}

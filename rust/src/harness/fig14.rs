@@ -1,0 +1,152 @@
+//! Fig 14 — probability of having to wait for a spin flip, per tempering
+//! replica ("Ising model index"), for the scalar CPU (w=1), the
+//! vectorized CPU (w=4) and the accelerator warp (w=32).
+//!
+//! The measured per-replica flip probability `p_i` comes from running the
+//! tempering ladder; the three curves are `1 − (1−p_i)^w` (the paper's §4
+//! analysis), cross-checked against the *directly measured* quadruplet
+//! wait rate of the A.4 rung.
+
+use std::path::Path;
+
+use crate::coordinator::{self, RunConfig};
+use crate::stats::wait_probability;
+use crate::sweep::SweepKind;
+use crate::Result;
+
+use super::report::{f4, Table};
+
+pub struct Fig14Row {
+    pub index: usize,
+    pub beta: f32,
+    pub flip_prob: f64,
+    pub wait_w1: f64,
+    pub wait_w4: f64,
+    pub wait_w32: f64,
+    /// Directly measured quadruplet wait rate (A.4 groups).
+    pub wait_w4_measured: f64,
+}
+
+/// Run the ladder with the A.4 rung and compute the three curves.
+pub fn compute(cfg: &RunConfig) -> Result<Vec<Fig14Row>> {
+    let mut pt = coordinator::build_ensemble(cfg, SweepKind::A4Full)?;
+    let rounds = cfg.sweeps / cfg.sweeps_per_round;
+    for _ in 0..rounds {
+        coordinator::scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round, cfg.threads);
+        pt.exchange();
+    }
+    let ladder = pt.ladder().clone();
+    Ok(pt
+        .reports()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let p = r.stats.flip_prob();
+            Fig14Row {
+                index: i,
+                beta: ladder.beta(i),
+                flip_prob: p,
+                wait_w1: wait_probability(p, 1),
+                wait_w4: wait_probability(p, 4),
+                wait_w32: wait_probability(p, 32),
+                wait_w4_measured: r.stats.wait_prob(),
+            }
+        })
+        .collect())
+}
+
+/// Averages over the ladder — the paper's summary numbers ("the A.1 CPU
+/// application must wait ... 28.6% ... GPU ... 82.8% ... A.4 ... 56.8%").
+pub struct Fig14Summary {
+    pub mean_flip: f64,
+    pub mean_wait_w4: f64,
+    pub mean_wait_w32: f64,
+    /// Ratio wait(w=32)/wait(w=1) — paper: 2.9x.
+    pub gpu_over_cpu: f64,
+    /// Ratio wait(w=4)/wait(w=1) — paper: 2.0x.
+    pub vec_over_cpu: f64,
+}
+
+pub fn summarize(rows: &[Fig14Row]) -> Fig14Summary {
+    let n = rows.len() as f64;
+    let mean_flip = rows.iter().map(|r| r.flip_prob).sum::<f64>() / n;
+    let mean_w4 = rows.iter().map(|r| r.wait_w4).sum::<f64>() / n;
+    let mean_w32 = rows.iter().map(|r| r.wait_w32).sum::<f64>() / n;
+    Fig14Summary {
+        mean_flip,
+        mean_wait_w4: mean_w4,
+        mean_wait_w32: mean_w32,
+        gpu_over_cpu: mean_w32 / mean_flip.max(1e-12),
+        vec_over_cpu: mean_w4 / mean_flip.max(1e-12),
+    }
+}
+
+/// Render the figure as a table (+ optional CSV).
+pub fn run(cfg: &RunConfig, csv: Option<&Path>) -> Result<String> {
+    let rows = compute(cfg)?;
+    let mut t = Table::new(vec![
+        "model",
+        "beta",
+        "P(flip)",
+        "wait w=1 (A.1)",
+        "wait w=4 (A.4)",
+        "w=4 measured",
+        "wait w=32 (GPU)",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.index.to_string(),
+            format!("{:.4}", r.beta),
+            f4(r.flip_prob),
+            f4(r.wait_w1),
+            f4(r.wait_w4),
+            f4(r.wait_w4_measured),
+            f4(r.wait_w32),
+        ]);
+    }
+    if let Some(path) = csv {
+        t.write_csv(path)?;
+    }
+    let s = summarize(&rows);
+    Ok(format!(
+        "{}\nladder means: P(flip)={:.3}  wait(w=4)={:.3} ({:.2}x)  wait(w=32)={:.3} ({:.2}x)\n\
+         paper means:  P(flip)=0.286  wait(w=4)=0.568 (2.0x)  wait(w=32)=0.828 (2.9x)\n",
+        t.render(),
+        s.mean_flip,
+        s.mean_wait_w4,
+        s.vec_over_cpu,
+        s.mean_wait_w32,
+        s.gpu_over_cpu
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RunConfig {
+        RunConfig { n_models: 6, sweeps: 40, sweeps_per_round: 10, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn curves_ordered_and_monotone_in_w() {
+        let rows = compute(&small()).unwrap();
+        for r in &rows {
+            assert!(r.wait_w1 <= r.wait_w4 + 1e-12);
+            assert!(r.wait_w4 <= r.wait_w32 + 1e-12);
+        }
+        // hot end flips more than cold end
+        assert!(rows.last().unwrap().flip_prob > rows[0].flip_prob);
+    }
+
+    #[test]
+    fn measured_quadruplet_wait_matches_analytic() {
+        // The analytic 1-(1-p)^4 assumes independence within a quadruplet;
+        // the measured rate should be close (few percent).
+        let rows = compute(&small()).unwrap();
+        for r in rows.iter().filter(|r| r.flip_prob > 0.05) {
+            let rel = (r.wait_w4_measured - r.wait_w4).abs() / r.wait_w4.max(1e-9);
+            assert!(rel < 0.15, "model {}: measured {} vs analytic {}", r.index, r.wait_w4_measured, r.wait_w4);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Fig 17 — relative error of the fast and accurate exponential
+//! approximations as a function of the input.
+//!
+//! The paper plots the pointwise relative error over the valid input
+//! range; the harness reports per-bucket min/max/mean relative error for
+//! both variants (plus a CSV suitable for plotting), and checks the
+//! headline bounds: fast in roughly (−4%, +2%), accurate in
+//! (−1%, +0.5%).
+
+use std::path::Path;
+
+use crate::expapprox::{exp_accurate, exp_fast, ACCURATE_LO, FAST_HI, FAST_LO};
+use crate::Result;
+
+use super::report::{f4, Table};
+
+/// One bucket of the error sweep.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub x_lo: f64,
+    pub x_hi: f64,
+    pub fast_min: f64,
+    pub fast_max: f64,
+    pub acc_min: f64,
+    pub acc_max: f64,
+}
+
+/// Sweep the error curves over `[lo, hi)` with `samples` points in
+/// `buckets` buckets.  `lo`/`hi` default to the accurate variant's
+/// domain (the paper's Fig-17 x-range is −20…20).
+pub fn sweep(lo: f64, hi: f64, samples: usize, buckets: usize) -> Vec<Bucket> {
+    assert!(hi > lo && buckets > 0 && samples >= buckets);
+    let mut out: Vec<Bucket> = (0..buckets)
+        .map(|b| {
+            let w = (hi - lo) / buckets as f64;
+            Bucket {
+                x_lo: lo + w * b as f64,
+                x_hi: lo + w * (b + 1) as f64,
+                fast_min: f64::INFINITY,
+                fast_max: f64::NEG_INFINITY,
+                acc_min: f64::INFINITY,
+                acc_max: f64::NEG_INFINITY,
+            }
+        })
+        .collect();
+    let step = (hi - lo) / samples as f64;
+    for i in 0..samples {
+        let x = lo + step * (i as f64 + 0.5);
+        let exact = x.exp();
+        let b = ((x - lo) / (hi - lo) * buckets as f64) as usize;
+        let b = b.min(buckets - 1);
+        if x > FAST_LO as f64 && x < FAST_HI as f64 {
+            let rf = exp_fast(x as f32) as f64 / exact - 1.0;
+            out[b].fast_min = out[b].fast_min.min(rf);
+            out[b].fast_max = out[b].fast_max.max(rf);
+        }
+        // Accurate variant is exactly 0 below its domain; relative error
+        // is only meaningful inside it.
+        if x > ACCURATE_LO as f64 {
+            let ra = exp_accurate(x as f32) as f64 / exact - 1.0;
+            // For x >= 0 the paper clamps to >= 1.0 (accept threshold);
+            // error there reflects the clamp, still reported.
+            out[b].acc_min = out[b].acc_min.min(ra);
+            out[b].acc_max = out[b].acc_max.max(ra);
+        }
+    }
+    out
+}
+
+/// Render Fig 17 as a table; write CSV if `csv` is given.
+pub fn run(csv: Option<&Path>) -> Result<String> {
+    let buckets = sweep(-20.0, 20.0, 400_000, 20);
+    let mut t = Table::new(vec!["x range", "fast min", "fast max", "accurate min", "accurate max"]);
+    for b in &buckets {
+        t.row(vec![
+            format!("[{:6.1},{:6.1})", b.x_lo, b.x_hi),
+            f4(b.fast_min),
+            f4(b.fast_max),
+            f4(b.acc_min),
+            f4(b.acc_max),
+        ]);
+    }
+    if let Some(path) = csv {
+        t.write_csv(path)?;
+    }
+    let fast_min = buckets.iter().map(|b| b.fast_min).fold(f64::INFINITY, f64::min);
+    let fast_max = buckets.iter().map(|b| b.fast_max).fold(f64::NEG_INFINITY, f64::max);
+    let acc_min = buckets
+        .iter()
+        .filter(|b| b.x_hi <= 0.0)
+        .map(|b| b.acc_min)
+        .fold(f64::INFINITY, f64::min);
+    let acc_max = buckets
+        .iter()
+        .filter(|b| b.x_hi <= 0.0)
+        .map(|b| b.acc_max)
+        .fold(f64::NEG_INFINITY, f64::max);
+    Ok(format!(
+        "{}\noverall: fast ({:.4}, {:.4})  [paper: ~(-0.04, +0.02)]\n         accurate ({:.4}, {:.4}) over x<0  [paper: ~(-0.01, +0.005)]\n",
+        t.render(),
+        fast_min,
+        fast_max,
+        acc_min,
+        acc_max
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reproduces_paper_bounds() {
+        let buckets = sweep(-20.0, 10.0, 100_000, 10);
+        let fmin = buckets.iter().map(|b| b.fast_min).fold(f64::INFINITY, f64::min);
+        let fmax = buckets.iter().map(|b| b.fast_max).fold(f64::NEG_INFINITY, f64::max);
+        assert!(fmin > -0.040 && fmin < -0.030, "fast min {fmin}");
+        assert!(fmax < 0.0205 && fmax > 0.015, "fast max {fmax}");
+        let neg: Vec<&Bucket> = buckets.iter().filter(|b| b.x_hi <= 0.0).collect();
+        let amin = neg.iter().map(|b| b.acc_min).fold(f64::INFINITY, f64::min);
+        let amax = neg.iter().map(|b| b.acc_max).fold(f64::NEG_INFINITY, f64::max);
+        assert!(amin > -0.0101, "accurate min {amin}");
+        assert!(amax < 0.0051, "accurate max {amax}");
+    }
+
+    #[test]
+    fn run_renders() {
+        let s = run(None).unwrap();
+        assert!(s.contains("fast"));
+        assert!(s.contains("accurate"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Benchmark harness — regenerates every table and figure of the paper's
+//! evaluation (§4).  Each submodule owns one artifact:
+//!
+//! | Module | Paper artifact |
+//! |--------|----------------|
+//! | [`table1`] | Table 1 — the implementation matrix |
+//! | [`fig13`]  | Fig 13 — relative performance, rungs × threads + B.1/B.2 |
+//! | [`table2`] | Table 2 — pairwise speedups A.1a…A.4 on 1 core (+ Fig 15) |
+//! | [`fig14`]  | Fig 14 — P(wait for a flip) per tempering replica |
+//! | [`fig17`]  | Fig 17 — relative error of the exp approximations |
+//!
+//! Output is an aligned text table on stdout plus (optionally) CSV files
+//! under `results/`, so plots can be regenerated offline.
+
+pub mod fig13;
+pub mod fig14;
+pub mod fig17;
+pub mod report;
+pub mod table1;
+pub mod table2;

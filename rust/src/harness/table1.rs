@@ -1,0 +1,38 @@
+//! Table 1 — the implementation matrix (configuration, not measurement).
+
+use super::report::Table;
+
+/// Render the paper's Table 1 for this reproduction.
+pub fn render() -> String {
+    let mut t = Table::new(vec![
+        "Impl",
+        "CPU/Accel",
+        "Multi-Threaded",
+        "Compiler-Opt",
+        "Basic-Opts (S2)",
+        "Vec MT19937+Flip (S3)",
+        "Vec Data-Update (S3.1/3.2)",
+    ]);
+    let y = "x";
+    let n = "";
+    t.row(vec!["A.1a", "CPU", y, n, n, n, n]);
+    t.row(vec!["A.1b", "CPU", y, y, n, n, n]);
+    t.row(vec!["A.2a", "CPU", y, n, y, n, n]);
+    t.row(vec!["A.2b", "CPU", y, y, y, n, n]);
+    t.row(vec!["A.3", "CPU", y, y, y, y, n]);
+    t.row(vec!["A.4", "CPU", y, y, y, y, y]);
+    t.row(vec!["B.1", "Accel", y, y, y, n, n]);
+    t.row(vec!["B.2", "Accel", y, y, y, y, y]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn has_all_eight_rungs() {
+        let s = super::render();
+        for rung in ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "B.1", "B.2"] {
+            assert!(s.contains(rung), "missing {rung}");
+        }
+    }
+}

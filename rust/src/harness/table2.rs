@@ -1,0 +1,180 @@
+//! Table 2 — speedup factors between all pairs of CPU implementations on
+//! 1 core, including the compiler-optimization-disabled rows (A.1a,
+//! A.2a), plus Fig 15 (the A.1b row as a series).
+//!
+//! The `a` rows measure the *same source* built at `opt-level = 0`
+//! (cargo profile `opt0`) — the paper's VC++ "/Od" toggle.  Because a
+//! process cannot re-run itself unoptimized, the harness shells out to
+//! the opt0 binary (`target/opt0/repro bench-rung --json ...`) and merges
+//! its JSON timings; if that binary is absent the a-rows are skipped with
+//! a note telling the user to `make opt0`.
+
+use std::path::Path;
+use std::process::Command;
+
+use crate::coordinator::{self, RunConfig, RungTiming};
+use crate::sweep::SweepKind;
+use crate::Result;
+
+use super::report::{f3, Table};
+
+/// A measured rung in the Table-2 ladder.
+#[derive(Clone, Debug)]
+pub struct LadderTiming {
+    /// Paper row label: "A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4".
+    pub label: String,
+    pub seconds: f64,
+}
+
+/// In-process (optimized-build) timings: A.1b, A.2b, A.3, A.4.
+pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
+    let mut cfg = cfg.clone();
+    cfg.threads = 1;
+    let mut out = Vec::new();
+    for (kind, label) in [
+        (SweepKind::A1Original, "A.1b"),
+        (SweepKind::A2Basic, "A.2b"),
+        (SweepKind::A3VecRng, "A.3"),
+        (SweepKind::A4Full, "A.4"),
+    ] {
+        let t = coordinator::time_sweeps(&cfg, kind)?;
+        out.push(LadderTiming { label: label.to_string(), seconds: t.seconds });
+    }
+    Ok(out)
+}
+
+/// Shell out to the opt0 binary for the compiler-optimization-disabled
+/// rows (A.1a, A.2a).  `opt0_bin` is e.g. `target/opt0/repro`.
+pub fn measure_unoptimized(cfg: &RunConfig, opt0_bin: &Path) -> Result<Vec<LadderTiming>> {
+    let mut out = Vec::new();
+    for (kind, label) in [(SweepKind::A1Original, "A.1a"), (SweepKind::A2Basic, "A.2a")] {
+        let kind_arg = match kind {
+            SweepKind::A1Original => "a1-original",
+            SweepKind::A2Basic => "a2-basic",
+            _ => unreachable!(),
+        };
+        let output = Command::new(opt0_bin)
+            .args([
+                "bench-rung",
+                "--kind",
+                kind_arg,
+                "--width",
+                &cfg.width.to_string(),
+                "--height",
+                &cfg.height.to_string(),
+                "--layers",
+                &cfg.layers.to_string(),
+                "--models",
+                &cfg.n_models.to_string(),
+                "--sweeps",
+                &cfg.sweeps.to_string(),
+                "--json",
+            ])
+            .output()
+            .map_err(|e| anyhow::anyhow!("running opt0 binary {opt0_bin:?}: {e}"))?;
+        if !output.status.success() {
+            anyhow::bail!(
+                "opt0 bench-rung failed: {}",
+                String::from_utf8_lossy(&output.stderr)
+            );
+        }
+        let text = String::from_utf8_lossy(&output.stdout);
+        let timing = RungTiming::from_json(text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing opt0 output {text:?}: {e}"))?;
+        out.push(LadderTiming { label: label.to_string(), seconds: timing.seconds });
+    }
+    Ok(out)
+}
+
+/// The pairwise speedup matrix: entry (row i, col j) = time(i) / time(j),
+/// i.e. "how many times faster is j than i" — the paper's Table 2
+/// orientation (its row A.1b, column A.4 is 11.86).
+pub fn pairwise(rungs: &[LadderTiming]) -> Vec<Vec<f64>> {
+    rungs
+        .iter()
+        .map(|a| rungs.iter().map(|b| a.seconds / b.seconds).collect())
+        .collect()
+}
+
+/// Paper row order: A.1a, A.1b, A.2a, A.2b, A.3, A.4.
+fn paper_order(label: &str) -> usize {
+    ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4"]
+        .iter()
+        .position(|&l| l == label)
+        .unwrap_or(usize::MAX)
+}
+
+/// Render Table 2 (+ Fig 15, the A.1b row) from measured timings.
+pub fn render(rungs: &[LadderTiming], csv: Option<&Path>) -> Result<String> {
+    let mut rungs: Vec<LadderTiming> = rungs.to_vec();
+    rungs.sort_by_key(|r| paper_order(&r.label));
+    let rungs = &rungs[..];
+    let m = pairwise(rungs);
+    let mut header: Vec<String> = vec!["".to_string()];
+    header.extend(rungs.iter().map(|r| r.label.clone()));
+    let mut t = Table::new(header);
+    for (i, r) in rungs.iter().enumerate() {
+        let mut row = vec![r.label.clone()];
+        row.extend(m[i].iter().map(|&x| f3(x)));
+        t.row(row);
+    }
+    if let Some(path) = csv {
+        t.write_csv(path)?;
+    }
+    let mut out = t.render();
+
+    // Fig 15: the A.1b row as a named series.
+    if let Some(i_a1b) = rungs.iter().position(|r| r.label == "A.1b") {
+        out.push_str("\nFig 15 (speedup over A.1b, 1 core):\n");
+        for (j, r) in rungs.iter().enumerate() {
+            out.push_str(&format!("  {:5} {:>8}   paper: {}\n", r.label, f3(m[i_a1b][j]), paper_fig15(&r.label)));
+        }
+    }
+    Ok(out)
+}
+
+/// The paper's published A.1b row of Table 2 (for side-by-side display).
+fn paper_fig15(label: &str) -> &'static str {
+    match label {
+        "A.1a" => "0.663",
+        "A.1b" => "1.000",
+        "A.2a" => "1.274",
+        "A.2b" => "3.748",
+        "A.3" => "7.053",
+        "A.4" => "11.860",
+        _ => "-",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_matrix_properties() {
+        let rungs = vec![
+            LadderTiming { label: "A.1b".into(), seconds: 10.0 },
+            LadderTiming { label: "A.2b".into(), seconds: 4.0 },
+            LadderTiming { label: "A.4".into(), seconds: 1.0 },
+        ];
+        let m = pairwise(&rungs);
+        for i in 0..3 {
+            assert!((m[i][i] - 1.0).abs() < 1e-12, "diagonal is 1");
+            for j in 0..3 {
+                assert!((m[i][j] * m[j][i] - 1.0).abs() < 1e-12, "antisymmetric");
+            }
+        }
+        assert!((m[0][2] - 10.0).abs() < 1e-12, "A.4 is 10x faster than A.1b");
+    }
+
+    #[test]
+    fn render_contains_fig15() {
+        let rungs = vec![
+            LadderTiming { label: "A.1b".into(), seconds: 10.0 },
+            LadderTiming { label: "A.4".into(), seconds: 1.0 },
+        ];
+        let s = render(&rungs, None).unwrap();
+        assert!(s.contains("Fig 15"));
+        assert!(s.contains("10.000"));
+    }
+}

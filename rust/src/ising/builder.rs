@@ -1,0 +1,167 @@
+//! Synthetic QMC workload builder (the paper's AQUA@Home workload
+//! substitute — see DESIGN.md §2.2).
+//!
+//! Produces the structure the paper describes: each spin adjacent to 6–8
+//! others (4–6 space neighbours + exactly 2 tau neighbours), L identical
+//! layers, couplings and fields from the deterministic [`super::lcg::Lcg`]
+//! so the python twin (`python/compile/workload.py`) can generate
+//! bit-identical inputs.  The paper-scale configuration is 96 spins ×
+//! 256 layers × 115 tempering replicas (§4).
+
+use super::graph::BaseGraph;
+use super::lcg::Lcg;
+use super::model::QmcModel;
+
+/// A ready-to-simulate model plus the ancillary data the accelerator path
+/// needs (vertex colouring) and a reproducible initial state.
+#[derive(Clone)]
+pub struct Workload {
+    pub model: QmcModel,
+    /// Proper colouring of the base graph (accelerator checkerboard).
+    pub colors: Vec<u32>,
+    pub n_colors: usize,
+    /// Initial ±1 state in original (layer-major) order.
+    pub s0: Vec<f32>,
+}
+
+/// Toroidal `width × height` grid base graph (degree 4, bipartite when
+/// both dims are even) — mirrors `workload.build_torus_workload` in
+/// python, including LCG call order.
+pub fn torus_workload(width: usize, height: usize, n_layers: usize, seed: u64, jtau: f32) -> Workload {
+    assert!(width % 2 == 0 && height % 2 == 0, "torus dims must be even for a 2-colouring");
+    let n = width * height;
+    let mut rng = Lcg::new(seed);
+    let vid = |x: usize, y: usize| (y % height) * width + (x % width);
+
+    // Couplings on the canonical (+x, +y) edges, generated in (y, x) order
+    // with jx before jy — identical to the python twin.
+    let mut jx = vec![0.0f32; n];
+    let mut jy = vec![0.0f32; n];
+    for y in 0..height {
+        for x in 0..width {
+            jx[vid(x, y)] = rng.next_unit();
+            jy[vid(x, y)] = rng.next_unit();
+        }
+    }
+    let mut edges = Vec::with_capacity(2 * n);
+    for y in 0..height {
+        for x in 0..width {
+            let v = vid(x, y);
+            edges.push((v as u32, vid(x + 1, y) as u32, jx[v]));
+            edges.push((v as u32, vid(x, y + 1) as u32, jy[v]));
+        }
+    }
+    let h: Vec<f32> = (0..n).map(|_| rng.next_unit() * 0.5).collect();
+    let base = BaseGraph::new(n, h, edges);
+
+    let mut colors = vec![0u32; n];
+    for y in 0..height {
+        for x in 0..width {
+            colors[vid(x, y)] = ((x + y) % 2) as u32;
+        }
+    }
+    debug_assert!(base.is_proper_coloring(&colors));
+
+    let model = QmcModel::new(base, n_layers, jtau);
+    let mut s0 = Vec::with_capacity(model.n_spins());
+    for _v in 0..n {
+        for _l in 0..n_layers {
+            s0.push(rng.next_sign());
+        }
+    }
+    // The python twin generates s0 in (v, l) order for its (N, L) array;
+    // convert to original (layer-major) order here.
+    let mut s0_orig = vec![0.0f32; model.n_spins()];
+    for v in 0..n {
+        for l in 0..n_layers {
+            s0_orig[l * n + v] = s0[v * n_layers + l];
+        }
+    }
+
+    Workload { model, colors, n_colors: 2, s0: s0_orig }
+}
+
+/// Torus with added diagonals (degree 6 → 8 total neighbours with tau) —
+/// the denser end of the paper's "6, 7, or 8" connectivity.  Not
+/// bipartite; greedy colouring gives ≤ 4 classes, so this workload is for
+/// the CPU rungs (the shipped accelerator artifacts bake C = 2).
+pub fn diag_torus_workload(width: usize, height: usize, n_layers: usize, seed: u64, jtau: f32) -> Workload {
+    assert!(width % 2 == 0 && height % 2 == 0);
+    let n = width * height;
+    let mut rng = Lcg::new(seed);
+    let vid = |x: usize, y: usize| (y % height) * width + (x % width);
+
+    let mut edges = Vec::with_capacity(3 * n);
+    for y in 0..height {
+        for x in 0..width {
+            let v = vid(x, y) as u32;
+            edges.push((v, vid(x + 1, y) as u32, rng.next_unit()));
+            edges.push((v, vid(x, y + 1) as u32, rng.next_unit()));
+            edges.push((v, vid(x + 1, y + 1) as u32, rng.next_unit()));
+        }
+    }
+    let h: Vec<f32> = (0..n).map(|_| rng.next_unit() * 0.5).collect();
+    let base = BaseGraph::new(n, h, edges);
+    let (colors, n_colors) = base.greedy_coloring();
+    assert!(base.is_proper_coloring(&colors));
+
+    let model = QmcModel::new(base, n_layers, jtau);
+    let mut lcg2 = Lcg::new(seed ^ 0x5eed);
+    let s0 = model.random_state(&mut lcg2);
+    Workload { model, colors, n_colors, s0 }
+}
+
+/// The paper's §4 benchmark geometry: 96 spins per layer (12×8 torus),
+/// 256 layers → 24,576 spins per model.
+pub fn paper_workload(seed: u64) -> Workload {
+    torus_workload(12, 8, 256, seed, 0.3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_degrees_and_counts() {
+        let w = torus_workload(6, 4, 8, 1, 0.3);
+        assert_eq!(w.model.base.n, 24);
+        assert_eq!(w.model.base.edges.len(), 2 * 24);
+        assert_eq!(w.model.base.max_degree(), 4);
+        assert_eq!(w.model.n_spins(), 24 * 8);
+        assert_eq!(w.s0.len(), w.model.n_spins());
+        assert!(w.s0.iter().all(|&s| s == 1.0 || s == -1.0));
+    }
+
+    #[test]
+    fn torus_coloring_proper() {
+        let w = torus_workload(6, 4, 8, 1, 0.3);
+        assert!(w.model.base.is_proper_coloring(&w.colors));
+        assert_eq!(w.n_colors, 2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = torus_workload(4, 4, 8, 9, 0.3);
+        let b = torus_workload(4, 4, 8, 9, 0.3);
+        let c = torus_workload(4, 4, 8, 10, 0.3);
+        assert_eq!(a.s0, b.s0);
+        assert_eq!(a.model.base.h, b.model.base.h);
+        assert_ne!(a.model.base.h, c.model.base.h);
+    }
+
+    #[test]
+    fn diag_torus_degree_six() {
+        let w = diag_torus_workload(4, 4, 8, 2, 0.3);
+        assert_eq!(w.model.base.max_degree(), 6);
+        assert!(w.model.base.is_proper_coloring(&w.colors));
+        assert!(w.n_colors <= 4);
+    }
+
+    #[test]
+    fn paper_geometry() {
+        let w = paper_workload(1);
+        assert_eq!(w.model.base.n, 96);
+        assert_eq!(w.model.n_layers, 256);
+        assert_eq!(w.model.n_spins(), 24_576);
+    }
+}

@@ -1,0 +1,117 @@
+//! Base graphs: the per-layer Ising model (vertices, fields, space edges).
+
+/// An undirected weighted graph with per-vertex fields — one layer of a
+/// QMC model.  Edges are stored once with `u < v`.
+#[derive(Clone, Debug)]
+pub struct BaseGraph {
+    /// Number of vertices (spins per layer).
+    pub n: usize,
+    /// Per-vertex longitudinal field `h_v`.
+    pub h: Vec<f32>,
+    /// Undirected space edges `(u, v, J_uv)` with `u < v`.
+    pub edges: Vec<(u32, u32, f32)>,
+}
+
+impl BaseGraph {
+    /// Construct, normalising edge order and validating indices.
+    pub fn new(n: usize, h: Vec<f32>, mut edges: Vec<(u32, u32, f32)>) -> Self {
+        assert_eq!(h.len(), n, "field vector length mismatch");
+        for e in edges.iter_mut() {
+            assert!(e.0 != e.1, "self loop {e:?}");
+            assert!((e.0 as usize) < n && (e.1 as usize) < n, "vertex out of range {e:?}");
+            if e.0 > e.1 {
+                *e = (e.1, e.0, e.2);
+            }
+        }
+        Self { n, h, edges }
+    }
+
+    /// Adjacency lists: for each vertex, `(neighbour, J)` pairs.
+    pub fn adjacency(&self) -> Vec<Vec<(u32, f32)>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(u, v, j) in &self.edges {
+            adj[u as usize].push((v, j));
+            adj[v as usize].push((u, j));
+        }
+        adj
+    }
+
+    /// Maximum vertex degree (space edges only).
+    pub fn max_degree(&self) -> usize {
+        self.adjacency().iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Greedy colouring in vertex order; returns `(colour per vertex,
+    /// number of colours)`.  For bipartite graphs generated here (e.g.
+    /// even tori) this finds the optimal 2-colouring, which the
+    /// accelerator artifacts require.
+    pub fn greedy_coloring(&self) -> (Vec<u32>, usize) {
+        let adj = self.adjacency();
+        let mut color = vec![u32::MAX; self.n];
+        let mut n_colors = 0usize;
+        for v in 0..self.n {
+            let mut used = 0u64;
+            for &(u, _) in &adj[v] {
+                let c = color[u as usize];
+                if c != u32::MAX && c < 64 {
+                    used |= 1 << c;
+                }
+            }
+            let c = (0..64).find(|&c| used & (1 << c) == 0).expect("degree < 64");
+            color[v] = c as u32;
+            n_colors = n_colors.max(c + 1);
+        }
+        (color, n_colors)
+    }
+
+    /// Check that a colouring is proper (no edge inside one class).
+    pub fn is_proper_coloring(&self, color: &[u32]) -> bool {
+        self.edges.iter().all(|&(u, v, _)| color[u as usize] != color[v as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> BaseGraph {
+        BaseGraph::new(3, vec![0.0; 3], vec![(0, 1, 1.0), (2, 1, -0.5)])
+    }
+
+    #[test]
+    fn edges_normalised() {
+        let g = path3();
+        assert_eq!(g.edges[1], (1, 2, -0.5));
+    }
+
+    #[test]
+    fn adjacency_symmetric() {
+        let g = path3();
+        let adj = g.adjacency();
+        assert_eq!(adj[0], vec![(1, 1.0)]);
+        assert_eq!(adj[1], vec![(0, 1.0), (2, -0.5)]);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn coloring_is_proper_and_minimal_on_path() {
+        let g = path3();
+        let (color, nc) = g.greedy_coloring();
+        assert!(g.is_proper_coloring(&color));
+        assert_eq!(nc, 2);
+    }
+
+    #[test]
+    fn coloring_triangle_needs_three() {
+        let g = BaseGraph::new(3, vec![0.0; 3], vec![(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0)]);
+        let (color, nc) = g.greedy_coloring();
+        assert!(g.is_proper_coloring(&color));
+        assert_eq!(nc, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "self loop")]
+    fn rejects_self_loops() {
+        BaseGraph::new(2, vec![0.0; 2], vec![(1, 1, 1.0)]);
+    }
+}

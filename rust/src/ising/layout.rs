@@ -1,0 +1,199 @@
+//! Memory layouts of the optimization ladder.
+//!
+//! [`OriginalLayout`] reproduces the paper's Figure 4 — the "complex
+//! layout in memory" the original code used: a global edge table indexed
+//! through per-spin incident-edge lists, a parallel `J` array, and the
+//! `isATauEdge` flag array that the branchy Figure-2 loop consults.
+//!
+//! [`CsrLayout`] reproduces Figures 5/6 — "eliminating the middle man":
+//! per-spin flat `(target_spin, J)` arrays with the two tau edges
+//! reordered to the end so the flag disappears and the inner loop becomes
+//! one line.
+
+use super::model::QmcModel;
+
+/// Figure-4 data structures (A.1).  Deliberately pointer-heavy: each
+/// access pattern in the A.1 sweep goes through the same indirections the
+/// paper's original code did.
+#[derive(Clone)]
+pub struct OriginalLayout {
+    /// Per-edge endpoint pairs (global spin indices, original order).
+    pub graph_edges: Vec<[u32; 2]>,
+    /// Per-edge coupling, parallel to `graph_edges`.
+    pub j: Vec<f32>,
+    /// Per-edge tau flag, parallel to `graph_edges`.
+    pub is_a_tau_edge: Vec<bool>,
+    /// Per-spin list of incident edge indices (nested allocation — the
+    /// "middle man" the paper later eliminates).
+    pub incident_edges: Vec<Vec<u32>>,
+    /// Per-spin field (h of the vertex, replicated per layer).
+    pub h: Vec<f32>,
+}
+
+impl OriginalLayout {
+    pub fn build(m: &QmcModel) -> Self {
+        let n = m.base.n;
+        let ns = m.n_spins();
+        let mut graph_edges = Vec::new();
+        let mut j = Vec::new();
+        let mut is_tau = Vec::new();
+        let mut incident: Vec<Vec<u32>> = vec![Vec::new(); ns];
+
+        // Space edges, replicated per layer — interleaved with tau edges in
+        // an arbitrary order, as in the original code ("edges can appear in
+        // any order").
+        for l in 0..m.n_layers {
+            for &(u, v, jj) in &m.base.edges {
+                let (a, b) = (m.spin_index(l, u as usize), m.spin_index(l, v as usize));
+                let e = graph_edges.len() as u32;
+                graph_edges.push([a as u32, b as u32]);
+                j.push(jj);
+                is_tau.push(false);
+                incident[a].push(e);
+                incident[b].push(e);
+            }
+            // tau edges to the next layer
+            for v in 0..n {
+                let (a, b) = (m.spin_index(l, v), m.spin_index((l + 1) % m.n_layers, v));
+                let e = graph_edges.len() as u32;
+                graph_edges.push([a as u32, b as u32]);
+                j.push(m.jtau);
+                is_tau.push(true);
+                incident[a].push(e);
+                incident[b].push(e);
+            }
+        }
+
+        let mut h = Vec::with_capacity(ns);
+        for _l in 0..m.n_layers {
+            h.extend_from_slice(&m.base.h);
+        }
+        Self { graph_edges, j, is_a_tau_edge: is_tau, incident_edges: incident, h }
+    }
+}
+
+/// Figure-5/6 data structures (A.2 and the scalar part of A.3): one flat
+/// `(target, J)` edge array per spin, space edges first, the **two tau
+/// edges always last** (paper §2.2's ahead-of-time edge reordering that
+/// eliminates `isATauEdge`).
+#[derive(Clone)]
+pub struct CsrLayout {
+    /// Edge targets, flattened; spin `i`'s edges at `offsets[i]..offsets[i+1]`.
+    pub edge_target: Vec<u32>,
+    /// Couplings, parallel to `edge_target`.
+    pub edge_j: Vec<f32>,
+    /// Per-spin slice starts (`n_spins + 1` entries).
+    pub offsets: Vec<u32>,
+    /// Per-spin field.
+    pub h: Vec<f32>,
+}
+
+impl CsrLayout {
+    pub fn build(m: &QmcModel) -> Self {
+        let ns = m.n_spins();
+        let adj = m.base.adjacency();
+        let mut edge_target = Vec::new();
+        let mut edge_j = Vec::new();
+        let mut offsets = Vec::with_capacity(ns + 1);
+        offsets.push(0u32);
+        for l in 0..m.n_layers {
+            for v in 0..m.base.n {
+                for &(u, j) in &adj[v] {
+                    edge_target.push(m.spin_index(l, u as usize) as u32);
+                    edge_j.push(j);
+                }
+                // the two tau edges, always last
+                let down = m.spin_index((l + m.n_layers - 1) % m.n_layers, v);
+                let up = m.spin_index((l + 1) % m.n_layers, v);
+                edge_target.push(down as u32);
+                edge_j.push(m.jtau);
+                edge_target.push(up as u32);
+                edge_j.push(m.jtau);
+                offsets.push(edge_target.len() as u32);
+            }
+        }
+        let mut h = Vec::with_capacity(ns);
+        for _ in 0..m.n_layers {
+            h.extend_from_slice(&m.base.h);
+        }
+        Self { edge_target, edge_j, offsets, h }
+    }
+
+    /// Edge slice of spin `i`: space edges followed by exactly 2 tau edges.
+    #[inline]
+    pub fn edges_of(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        (&self.edge_target[a..b], &self.edge_j[a..b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::graph::BaseGraph;
+
+    fn model() -> QmcModel {
+        let base = BaseGraph::new(3, vec![0.1, 0.2, 0.3], vec![(0, 1, 1.0), (1, 2, -1.0)]);
+        QmcModel::new(base, 4, 0.5)
+    }
+
+    #[test]
+    fn original_layout_counts() {
+        let m = model();
+        let lay = OriginalLayout::build(&m);
+        // per layer: 2 space + 3 tau edges
+        assert_eq!(lay.graph_edges.len(), 4 * (2 + 3));
+        assert_eq!(lay.h.len(), 12);
+        // vertex 1 has 2 space edges + 2 tau edges incident per layer
+        assert_eq!(lay.incident_edges[m.spin_index(0, 1)].len(), 4);
+        // every spin has exactly 2 incident tau edges
+        for i in 0..m.n_spins() {
+            let taus = lay.incident_edges[i]
+                .iter()
+                .filter(|&&e| lay.is_a_tau_edge[e as usize])
+                .count();
+            assert_eq!(taus, 2, "spin {i}");
+        }
+    }
+
+    #[test]
+    fn csr_layout_tau_edges_last() {
+        let m = model();
+        let lay = CsrLayout::build(&m);
+        for i in 0..m.n_spins() {
+            let (targets, js) = lay.edges_of(i);
+            let k = targets.len();
+            assert!(k >= 3, "spin {i} has space + 2 tau edges");
+            // last two edges are tau: same vertex, adjacent layers
+            let v = i % m.base.n;
+            for &t in &targets[k - 2..] {
+                assert_eq!(t as usize % m.base.n, v, "tau edge keeps vertex");
+            }
+            assert_eq!(js[k - 2], m.jtau);
+            assert_eq!(js[k - 1], m.jtau);
+        }
+    }
+
+    #[test]
+    fn layouts_agree_on_edge_multiset() {
+        // Every undirected edge appears exactly twice in CSR (once per
+        // endpoint) and once in the original edge table.
+        let m = model();
+        let orig = OriginalLayout::build(&m);
+        let csr = CsrLayout::build(&m);
+        let mut orig_pairs: Vec<(u32, u32)> = orig
+            .graph_edges
+            .iter()
+            .flat_map(|&[a, b]| [(a, b), (b, a)])
+            .collect();
+        let mut csr_pairs: Vec<(u32, u32)> = (0..m.n_spins())
+            .flat_map(|i| {
+                let (t, _) = csr.edges_of(i);
+                t.iter().map(move |&u| (i as u32, u)).collect::<Vec<_>>()
+            })
+            .collect();
+        orig_pairs.sort_unstable();
+        csr_pairs.sort_unstable();
+        assert_eq!(orig_pairs, csr_pairs);
+    }
+}

@@ -1,0 +1,28 @@
+//! Ising-model substrate: base graphs, layered QMC models, memory layouts
+//! and the spin-reordering transformations of the paper.
+//!
+//! The paper's workload is a set of layered Ising models ("all of our
+//! simulated Ising models consist of many (≥64) identical copies of a
+//! smaller Ising model, with edges connecting corresponding spins in
+//! adjacent layers, with a wrap-around", §3.1).  This module builds that
+//! structure and the three memory layouts the optimization ladder needs:
+//!
+//! * [`layout::OriginalLayout`] — the paper's Figure-4 nested edge tables
+//!   (A.1: `graph_edges`, `incident_edges`, `isATauEdge`, per-edge `J`);
+//! * [`layout::CsrLayout`]     — the Figure-5/6 flat per-spin edge arrays
+//!   with the two tau edges reordered last (A.2);
+//! * [`reorder::Interlace4`]   — the §3.1 4-way layer interlacing under
+//!   which quadruplets of corresponding spins are adjacent in memory
+//!   (A.3/A.4), plus the W-way interlacing used by the accelerator
+//!   artifacts (B.2).
+
+pub mod builder;
+pub mod graph;
+pub mod layout;
+pub mod lcg;
+pub mod model;
+pub mod reorder;
+
+pub use builder::{diag_torus_workload, torus_workload, Workload};
+pub use graph::BaseGraph;
+pub use model::QmcModel;

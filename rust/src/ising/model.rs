@@ -1,0 +1,157 @@
+//! Layered QMC Ising models (paper §1, §3.1).
+//!
+//! A [`QmcModel`] is `L` identical copies of a [`BaseGraph`] with tau
+//! edges of uniform coupling `jtau` joining spin `(l, v)` to
+//! `((l±1) mod L, v)`.  Spin `(l, v)` has *original-order* index
+//! `l * n + v` — the layer-major order the unoptimized (A.1/A.2, B.1)
+//! implementations operate in.
+
+use super::graph::BaseGraph;
+use super::lcg::Lcg;
+
+/// A layered (path-integral) Ising model.
+#[derive(Clone, Debug)]
+pub struct QmcModel {
+    pub base: BaseGraph,
+    /// Number of layers `L` (≥ 2; tau edges wrap `L-1 → 0`).
+    pub n_layers: usize,
+    /// Uniform inter-layer coupling.
+    pub jtau: f32,
+}
+
+impl QmcModel {
+    pub fn new(base: BaseGraph, n_layers: usize, jtau: f32) -> Self {
+        assert!(n_layers >= 2, "need at least 2 layers");
+        Self { base, n_layers, jtau }
+    }
+
+    /// Total spin count `L * n`.
+    pub fn n_spins(&self) -> usize {
+        self.n_layers * self.base.n
+    }
+
+    /// Original-order index of spin `(layer, vertex)`.
+    #[inline]
+    pub fn spin_index(&self, layer: usize, vertex: usize) -> usize {
+        layer * self.base.n + vertex
+    }
+
+    /// Random ±1 state in original order, synthesised from the given LCG.
+    pub fn random_state(&self, rng: &mut Lcg) -> Vec<f32> {
+        (0..self.n_spins()).map(|_| rng.next_sign()).collect()
+    }
+
+    /// Total energy of an original-order state:
+    /// `E = -Σ h_v s_{l,v} - Σ_space J s s' - jtau Σ_tau s s'`.
+    pub fn total_energy(&self, s: &[f32]) -> f64 {
+        assert_eq!(s.len(), self.n_spins());
+        let n = self.base.n;
+        let mut e = 0.0f64;
+        for l in 0..self.n_layers {
+            let row = &s[l * n..(l + 1) * n];
+            for v in 0..n {
+                e -= self.base.h[v] as f64 * row[v] as f64;
+            }
+            for &(u, v, j) in &self.base.edges {
+                e -= j as f64 * row[u as usize] as f64 * row[v as usize] as f64;
+            }
+            let up = &s[((l + 1) % self.n_layers) * n..((l + 1) % self.n_layers) * n + n];
+            for v in 0..n {
+                e -= self.jtau as f64 * row[v] as f64 * up[v] as f64;
+            }
+        }
+        e
+    }
+
+    /// Effective fields of every spin recomputed from scratch (the
+    /// invariant the incremental bookkeeping of every sweep rung must
+    /// maintain): returns `(h_eff_space, h_eff_tau)` in original order,
+    /// where `h_eff_space[i] = h_v + Σ_space J s_j` and
+    /// `h_eff_tau[i] = jtau (s_down + s_up)`.
+    pub fn effective_fields(&self, s: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let n = self.base.n;
+        let ns = self.n_spins();
+        let mut hs = vec![0.0f32; ns];
+        let mut ht = vec![0.0f32; ns];
+        let adj = self.base.adjacency();
+        for l in 0..self.n_layers {
+            for v in 0..n {
+                let i = self.spin_index(l, v);
+                let mut acc = self.base.h[v];
+                for &(u, j) in &adj[v] {
+                    acc += j * s[self.spin_index(l, u as usize)];
+                }
+                hs[i] = acc;
+                let down = s[self.spin_index((l + self.n_layers - 1) % self.n_layers, v)];
+                let up = s[self.spin_index((l + 1) % self.n_layers, v)];
+                ht[i] = self.jtau * (down + up);
+            }
+        }
+        (hs, ht)
+    }
+
+    /// Energy change of flipping spin `i` (for oracle tests):
+    /// `ΔE = 2 s_i (h_eff_space_i + h_eff_tau_i)`.
+    pub fn flip_delta(&self, s: &[f32], i: usize) -> f64 {
+        let (hs, ht) = self.effective_fields(s);
+        2.0 * s[i] as f64 * (hs[i] as f64 + ht[i] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> QmcModel {
+        // 2-vertex base graph, 4 layers.
+        let base = BaseGraph::new(2, vec![0.3, -0.2], vec![(0, 1, 0.7)]);
+        QmcModel::new(base, 4, 0.4)
+    }
+
+    #[test]
+    fn energy_of_uniform_state() {
+        let m = tiny();
+        let s = vec![1.0f32; 8];
+        // per layer: -h0 - h1 - J = -0.3 + 0.2 - 0.7 = -0.8; tau: -0.4 * 2 per layer
+        let want = 4.0 * (-0.8) + 4.0 * (-0.4 * 2.0);
+        assert!((m.total_energy(&s) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flip_delta_matches_energy_difference() {
+        let m = tiny();
+        let mut rng = Lcg::new(11);
+        let mut s = m.random_state(&mut rng);
+        for i in 0..m.n_spins() {
+            let e0 = m.total_energy(&s);
+            let de = m.flip_delta(&s, i);
+            s[i] = -s[i];
+            let e1 = m.total_energy(&s);
+            s[i] = -s[i];
+            assert!((e1 - e0 - de).abs() < 1e-5, "spin {i}: {} vs {}", e1 - e0, de);
+        }
+    }
+
+    #[test]
+    fn effective_fields_match_definition() {
+        let m = tiny();
+        let s = vec![1.0, -1.0, -1.0, 1.0, 1.0, 1.0, -1.0, -1.0f32];
+        let (hs, ht) = m.effective_fields(&s);
+        // spin (0,0): h=0.3, space nbr (0,1) = -1 with J=0.7 -> 0.3-0.7
+        assert!((hs[0] - (0.3 - 0.7)).abs() < 1e-6);
+        // tau: layers 3 and 1 vertex 0: s=-1 (l=3 idx 6), s=-1 (l=1 idx 2)
+        assert!((ht[0] - 0.4 * (-1.0 + -1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wraparound_tau_edges_present() {
+        let m = tiny();
+        // Flipping a spin changes tau energy with both neighbours incl. wrap.
+        let s0 = vec![1.0f32; 8];
+        let mut s1 = s0.clone();
+        s1[0] = -1.0; // layer 0, vertex 0: tau partners at layers 1 and 3
+        let de = m.total_energy(&s1) - m.total_energy(&s0);
+        // dE = 2*s*(h + J*s_nbr + jtau*(up+down)) = 2*(0.3+0.7+0.8) = 3.6
+        assert!((de - 3.6).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,221 @@
+//! Spin reordering — the enabling transformation for explicit
+//! vectorization (paper §3.1, Figure 12).
+//!
+//! [`Interlace4`] splits the `L` layers into 4 sections and interlaces
+//! them: spin `(l, v)` with `l = m·L/4 + r` (section `m`, row `r`) moves
+//! to index `(r·n + v)·4 + m`.  The four spins of a *quadruplet*
+//! `q = r·n + v` are then corresponding spins of the 4 sections — at
+//! least `L/4 ≥ 2` layers apart, hence never adjacent — and sit in 4
+//! consecutive memory cells, so
+//!
+//! * flip decisions for a quadruplet are one 4-lane vector op (A.3), and
+//! * a quadruplet's tau neighbours form *another quadruplet* ("they also
+//!   always update spins that form another quadruplet, except when an
+//!   update wraps around between the first and last layers"), so
+//!   neighbour updates are vector ops too (A.4); the section boundaries
+//!   (`r = 0` and `r = L/4 − 1`) wrap with a lane rotation.
+//!
+//! The same construction with W lanes ([`interlace_w`]) is the
+//! accelerator's memory-coalescing reorder (§3.2).
+
+use super::model::QmcModel;
+
+/// 4-way layer interlacing of a [`QmcModel`]'s spin order.
+#[derive(Clone)]
+pub struct Interlace4 {
+    pub n_base: usize,
+    pub n_layers: usize,
+    /// Rows per section, `L / 4`.
+    pub rows: usize,
+    /// `perm[original_index] = new_index`.
+    pub perm: Vec<u32>,
+    /// `inv[new_index] = original_index`.
+    pub inv: Vec<u32>,
+}
+
+impl Interlace4 {
+    pub fn new(m: &QmcModel) -> Self {
+        let (n, l) = (m.base.n, m.n_layers);
+        assert!(l % 4 == 0, "L must be a multiple of 4 for 4-way interlacing");
+        assert!(l / 4 >= 2, "sections must hold >= 2 layers so quadruplet spins are non-adjacent");
+        let rows = l / 4;
+        let ns = n * l;
+        let mut perm = vec![0u32; ns];
+        let mut inv = vec![0u32; ns];
+        for layer in 0..l {
+            let (m_sec, r) = (layer / rows, layer % rows);
+            for v in 0..n {
+                let orig = layer * n + v;
+                let new = (r * n + v) * 4 + m_sec;
+                perm[orig] = new as u32;
+                inv[new] = orig as u32;
+            }
+        }
+        Self { n_base: n, n_layers: l, rows, perm, inv }
+    }
+
+    /// Number of quadruplets (`rows * n_base`).
+    pub fn n_quads(&self) -> usize {
+        self.rows * self.n_base
+    }
+
+    /// Quadruplet id of row `r`, vertex `v`.
+    #[inline]
+    pub fn quad(&self, r: usize, v: usize) -> usize {
+        r * self.n_base + v
+    }
+
+    /// Apply the permutation to an original-order state.
+    pub fn to_interlaced(&self, s: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; s.len()];
+        for (orig, &new) in self.perm.iter().enumerate() {
+            out[new as usize] = s[orig];
+        }
+        out
+    }
+
+    /// Invert the permutation back to original order.
+    pub fn to_original(&self, s: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; s.len()];
+        for (new, &orig) in self.inv.iter().enumerate() {
+            out[orig as usize] = s[new];
+        }
+        out
+    }
+}
+
+/// W-way interlacing permutation for the accelerator's coalesced layout
+/// (B.2): spin `(l, v)` maps to `v * L + l` when `W = L` — i.e. the
+/// layer index becomes the fastest-varying (lane) dimension, the rust-side
+/// mirror of the artifact's `(N, L)` state.  Returns
+/// `perm[original] = new`.
+pub fn interlace_w(n_base: usize, n_layers: usize) -> Vec<u32> {
+    let mut perm = vec![0u32; n_base * n_layers];
+    for l in 0..n_layers {
+        for v in 0..n_base {
+            perm[l * n_base + v] = (v * n_layers + l) as u32;
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::graph::BaseGraph;
+    use crate::ising::lcg::Lcg;
+
+    fn model(n: usize, l: usize) -> QmcModel {
+        let edges = (0..n as u32 - 1).map(|i| (i, i + 1, 0.5)).collect();
+        QmcModel::new(BaseGraph::new(n, vec![0.0; n], edges), l, 0.3)
+    }
+
+    #[test]
+    fn is_a_permutation() {
+        let m = model(5, 12);
+        let it = Interlace4::new(&m);
+        let mut seen = vec![false; m.n_spins()];
+        for &p in &it.perm {
+            assert!(!seen[p as usize], "duplicate target {p}");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn roundtrips() {
+        let m = model(4, 8);
+        let it = Interlace4::new(&m);
+        let mut rng = Lcg::new(3);
+        let s = m.random_state(&mut rng);
+        assert_eq!(it.to_original(&it.to_interlaced(&s)), s);
+    }
+
+    #[test]
+    fn quadruplet_members_are_section_corresponding_spins() {
+        let m = model(3, 16); // rows = 4
+        let it = Interlace4::new(&m);
+        for r in 0..it.rows {
+            for v in 0..3 {
+                let q = it.quad(r, v);
+                for lane in 0..4 {
+                    let orig = it.inv[4 * q + lane] as usize;
+                    let (layer, vert) = (orig / 3, orig % 3);
+                    assert_eq!(vert, v);
+                    assert_eq!(layer, lane * it.rows + r);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadruplet_spins_never_adjacent() {
+        // Members of one quadruplet are >= rows >= 2 layers apart and on
+        // the same vertex, so no tau or space edge can join them.
+        let m = model(4, 8);
+        let it = Interlace4::new(&m);
+        for q in 0..it.n_quads() {
+            let layers: Vec<usize> = (0..4).map(|k| it.inv[4 * q + k] as usize / 4).collect();
+            for a in 0..4 {
+                for b in (a + 1)..4 {
+                    let d = layers[a].abs_diff(layers[b]);
+                    let wrap = m.n_layers - d;
+                    assert!(d.min(wrap) >= 2, "quad {q}: layers {layers:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tau_neighbours_form_quadruplets_off_boundary() {
+        let m = model(3, 16);
+        let it = Interlace4::new(&m);
+        // For rows 0 < r < rows-1: the up-neighbour quadruplet of (r, v)
+        // is (r+1, v), lane-aligned.
+        for r in 1..it.rows - 1 {
+            for v in 0..3 {
+                let q = it.quad(r, v);
+                for lane in 0..4 {
+                    let orig = it.inv[4 * q + lane] as usize;
+                    let (layer, vert) = (orig / 3, orig % 3);
+                    let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
+                    assert_eq!(it.perm[up_orig] as usize, 4 * it.quad(r + 1, v) + lane);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_wrap_is_lane_rotation() {
+        // At r = rows-1 the up-neighbour is lane+1 of quadruplet (0, v)
+        // (section m -> m+1; section 3 wraps to layer 0 = section 0).
+        let m = model(3, 16);
+        let it = Interlace4::new(&m);
+        let r = it.rows - 1;
+        for v in 0..3 {
+            let q = it.quad(r, v);
+            for lane in 0..4 {
+                let orig = it.inv[4 * q + lane] as usize;
+                let (layer, vert) = (orig / 3, orig % 3);
+                let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
+                assert_eq!(
+                    it.perm[up_orig] as usize,
+                    4 * it.quad(0, v) + (lane + 1) % 4,
+                    "lane {lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interlace_w_is_transpose() {
+        let perm = interlace_w(3, 4);
+        // spin (l=1, v=2) at original 1*3+2=5 -> new 2*4+1=9
+        assert_eq!(perm[5], 9);
+        let mut seen = vec![false; 12];
+        for &p in &perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+    }
+}

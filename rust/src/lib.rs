@@ -1,0 +1,53 @@
+//! # vectorising — explicit-vectorization reproduction
+//!
+//! A production reproduction of Dickson, Karimi & Hamze,
+//! *Importance of Explicit Vectorization for CPU and GPU Software
+//! Performance* (2010): a Metropolis Monte Carlo engine for layered (QMC)
+//! Ising models with the paper's full explicit-optimization ladder —
+//!
+//! * **A.1** original scalar code (branchy inner loop, nested edge tables,
+//!   library `exp`),
+//! * **A.2** + basic optimizations (branch elimination, flat edge arrays
+//!   with tau edges last, result caching, bit-trick `exp` approximation),
+//! * **A.3** + explicitly vectorized MT19937 (4 interlaced generators,
+//!   SSE2) and vectorized flip decisions over spin quadruplets,
+//! * **A.4** + fully vectorized neighbour updates via 4-way layer
+//!   interlacing of the spin order,
+//! * **B.1/B.2** the accelerator ports (XLA artifacts AOT-compiled from
+//!   JAX+Pallas, executed through PJRT): naive gathered layout vs
+//!   coalesced interlaced layout.
+//!
+//! On top of the sweep ladder sit the systems the paper's workload needs:
+//! a parallel-tempering engine ([`tempering`]), a multi-threaded
+//! coordinator ([`coordinator`]), the PJRT runtime ([`runtime`]) and the
+//! benchmark harness that regenerates every table and figure of the
+//! paper's evaluation ([`harness`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use vectorising::ising::builder::torus_workload;
+//! use vectorising::sweep::{self, SweepKind};
+//!
+//! let wl = torus_workload(8, 8, 32, 1, 0.3);
+//! let mut sim = sweep::make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489);
+//! sim.run(100, 0.5);
+//! println!("energy = {}", sim.energy());
+//! ```
+
+pub mod coordinator;
+pub mod expapprox;
+pub mod harness;
+pub mod ising;
+pub mod rng;
+pub mod runtime;
+pub mod simd;
+pub mod stats;
+pub mod sweep;
+pub mod tempering;
+pub mod util;
+
+/// Crate-wide error type (wraps IO, JSON and XLA failures).
+pub type Error = anyhow::Error;
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

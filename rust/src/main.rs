@@ -1,0 +1,269 @@
+//! `repro` — CLI for the explicit-vectorization reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! repro run        --kind a4-full ...     # full PT simulation + report
+//! repro table1                            # implementation matrix
+//! repro table2     [--opt0-bin PATH]      # pairwise speedups (+ Fig 15)
+//! repro fig13      [--accel]              # ladder x threads (+ B.1/B.2)
+//! repro fig14                             # wait-probability curves
+//! repro fig17                             # exp approximation error
+//! repro bench-rung --kind ... --json      # timing probe (used across build profiles)
+//! repro artifacts-check                   # load + execute every artifact once
+//! ```
+//!
+//! Workload flags (shared by most subcommands):
+//! `--width 8 --height 8 --layers 32 --models 8 --sweeps 200
+//!  --sweeps-per-round 10 --threads 1 --seed 1 --paper-scale`
+
+use std::path::PathBuf;
+use std::str::FromStr;
+
+use vectorising::coordinator::{self, RunConfig};
+use vectorising::harness::{fig13, fig14, fig17, table1, table2};
+use vectorising::ising::builder::torus_workload;
+use vectorising::runtime::{artifact, Runtime};
+use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
+use vectorising::sweep::{SweepKind, Sweeper};
+use vectorising::util::cli::Args;
+use vectorising::Result;
+
+const USAGE: &str = "\
+repro — reproduction of 'Importance of Explicit Vectorization for CPU and GPU Software Performance'
+
+USAGE: repro <subcommand> [flags]
+
+SUBCOMMANDS
+  run              full parallel-tempering simulation (--kind a1..a4|b1|b2, --json)
+  table1           implementation matrix (paper Table 1)
+  table2           pairwise CPU speedups, 1 core (paper Table 2 + Fig 15)
+                   [--opt0-bin target/opt0/repro | --skip-opt0] [--csv PATH]
+  fig13            ladder x thread-counts (+ --accel for B.1/B.2) [--csv PATH]
+  fig14            wait-probability curves per replica [--csv PATH]
+  fig17            exponential approximation error [--csv PATH]
+  bench-rung       timing probe for one rung (--kind ..., --json)
+  artifacts-check  load + execute every artifact once
+
+WORKLOAD FLAGS (run/table2/fig13/fig14/bench-rung)
+  --width N --height N   torus dims (default 8x8)
+  --layers N             QMC layers (default 32; multiple of 4)
+  --models N             tempering replicas (default 8)
+  --sweeps N             sweeps per replica (default 200)
+  --sweeps-per-round N   sweeps between exchanges (default 10)
+  --threads N            worker threads (default 1)
+  --seed N               workload seed (default 1)
+  --paper-scale          paper geometry: 96x256 spins, 115 models, 30000 sweeps
+";
+
+fn workload_config(a: &Args) -> Result<RunConfig> {
+    if a.switch("paper-scale") {
+        let mut c = RunConfig::paper();
+        c.threads = a.usize_or("threads", 1)?;
+        c.seed = a.u64_or("seed", 1)?;
+        return Ok(c);
+    }
+    Ok(RunConfig {
+        width: a.usize_or("width", 8)?,
+        height: a.usize_or("height", 8)?,
+        layers: a.usize_or("layers", 32)?,
+        n_models: a.usize_or("models", 8)?,
+        sweeps: a.usize_or("sweeps", 200)?,
+        sweeps_per_round: a.usize_or("sweeps-per-round", 10)?,
+        threads: a.usize_or("threads", 1)?,
+        beta_cold: a.f32_or("beta-cold", 3.0)?,
+        beta_hot: a.f32_or("beta-hot", 0.5)?,
+        jtau: a.f32_or("jtau", 0.3)?,
+        seed: a.u64_or("seed", 1)?,
+    })
+}
+
+fn csv_path(a: &Args) -> Option<PathBuf> {
+    a.str_opt("csv").map(PathBuf::from)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = match args.subcommand.as_deref() {
+        Some(s) => s.to_string(),
+        None => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match sub.as_str() {
+        "run" => {
+            let cfg = workload_config(&args)?;
+            let kind = SweepKind::from_str(args.str_or("kind", "a4-full"))?;
+            let report = match kind {
+                SweepKind::B1Accel | SweepKind::B2Accel => run_accel(&cfg, kind)?,
+                _ => coordinator::run(&cfg, kind)?,
+            };
+            if args.switch("json") {
+                println!("{}", report.to_json());
+            } else {
+                println!(
+                    "{} | {} models x {} sweeps x {} spins | threads={}",
+                    report.kind,
+                    report.n_models,
+                    report.sweeps,
+                    cfg.n_spins_per_model(),
+                    report.threads
+                );
+                println!(
+                    "wall {:.3}s | {:.2}M updates/s | flip rate {:.4} | swap acc {:.3}",
+                    report.wall_seconds,
+                    report.updates_per_sec / 1e6,
+                    report.total_flips as f64 / report.total_attempts.max(1) as f64,
+                    report.swap_acceptance
+                );
+                for (i, (p, e)) in report.flip_probs.iter().zip(&report.energies).enumerate() {
+                    println!("  model {i:3}  P(flip)={p:.4}  E={e:.2}");
+                }
+            }
+        }
+        "table1" => print!("{}", table1::render()),
+        "table2" => {
+            let cfg = workload_config(&args)?;
+            eprintln!("measuring optimized rungs (A.1b, A.2b, A.3, A.4)...");
+            let mut rungs = table2::measure_optimized(&cfg)?;
+            if !args.switch("skip-opt0") {
+                let opt0_bin = PathBuf::from(args.str_or("opt0-bin", "target/opt0/repro"));
+                if opt0_bin.exists() {
+                    eprintln!("measuring opt0 rungs (A.1a, A.2a) via {opt0_bin:?}...");
+                    let mut un = table2::measure_unoptimized(&cfg, &opt0_bin)?;
+                    un.append(&mut rungs);
+                    rungs = un;
+                } else {
+                    eprintln!(
+                        "note: {opt0_bin:?} not found — build it with `make opt0` for the A.1a/A.2a rows"
+                    );
+                }
+            }
+            print!("{}", table2::render(&rungs, csv_path(&args).as_deref())?);
+        }
+        "fig13" => {
+            let cfg = workload_config(&args)?;
+            let counts = args.usize_list_or("thread-counts", &[1, 2, 4, 6, 8])?;
+            let rows = fig13::compute(&cfg, &counts, args.switch("accel"))?;
+            print!("{}", fig13::render(&rows, csv_path(&args).as_deref())?);
+        }
+        "fig14" => {
+            let cfg = workload_config(&args)?;
+            print!("{}", fig14::run(&cfg, csv_path(&args).as_deref())?);
+        }
+        "fig17" => print!("{}", fig17::run(csv_path(&args).as_deref())?),
+        "bench-rung" => {
+            let cfg = workload_config(&args)?;
+            let kind = SweepKind::from_str(
+                args.str_opt("kind").ok_or_else(|| anyhow::anyhow!("--kind required"))?,
+            )?;
+            let t = coordinator::time_sweeps(&cfg, kind)?;
+            if args.switch("json") {
+                println!("{}", t.to_json());
+            } else {
+                println!(
+                    "{} threads={} {:.3}s ({:.2}M updates/s){}",
+                    t.kind,
+                    t.threads,
+                    t.seconds,
+                    t.updates_per_sec / 1e6,
+                    if t.opt_disabled { " [opt0]" } else { "" }
+                );
+            }
+        }
+        "artifacts-check" => {
+            let dir = args.str_opt("dir").map(PathBuf::from).unwrap_or_else(artifact::default_dir);
+            let rt = Runtime::cpu()?;
+            let manifest = artifact::Manifest::load(&dir)?;
+            println!("platform: {} ({} devices)", rt.platform_name(), rt.device_count());
+            for meta in &manifest.artifacts {
+                let cfg = &meta.static_cfg;
+                let (w, h) = factor_torus(cfg.n_base);
+                let wl = torus_workload(w, h, cfg.n_layers, 1, 0.3);
+                let variant = if meta.variant.starts_with("b1") {
+                    AccelVariant::B1Naive
+                } else {
+                    AccelVariant::B2Coalesced
+                };
+                let mut sw = AccelSweeper::new(&rt, &dir, &meta.config, variant, &wl, 5489)?;
+                let stats = sw.run(cfg.sweeps_per_call, 0.5);
+                let consistency = sw.validate();
+                println!(
+                    "  {:24} OK: {} sweeps, {} flips, |E_artifact - E_host| = {:.3e}",
+                    meta.name, cfg.sweeps_per_call, stats.flips, consistency
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Run a full tempering simulation on the accelerator rungs (single
+/// device, sequential over replicas, exchanges on the host).
+fn run_accel(cfg: &RunConfig, kind: SweepKind) -> Result<coordinator::RunReport> {
+    use vectorising::tempering::{Ladder, LocalPtEnsemble};
+    cfg.validate()?;
+    let variant = match kind {
+        SweepKind::B1Accel => AccelVariant::B1Naive,
+        SweepKind::B2Accel => AccelVariant::B2Coalesced,
+        _ => unreachable!(),
+    };
+    let rt = Runtime::cpu()?;
+    let dir = artifact::default_dir();
+    let config_name = fig13::artifact_config_for(cfg)?;
+    let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
+    let replicas: Vec<Box<dyn Sweeper>> = (0..cfg.n_models)
+        .map(|i| -> Result<Box<dyn Sweeper>> {
+            let wl = torus_workload(cfg.width, cfg.height, cfg.layers, cfg.seed, cfg.jtau);
+            Ok(Box::new(AccelSweeper::new(
+                &rt,
+                &dir,
+                &config_name,
+                variant,
+                &wl,
+                cfg.seed as u32 + 1000 * i as u32,
+            )?))
+        })
+        .collect::<Result<_>>()?;
+    let mut pt = LocalPtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a);
+    let gran = pt.granularity();
+    let per_round = cfg.sweeps_per_round.max(gran) / gran * gran;
+    let rounds = cfg.sweeps / per_round;
+    let timer = coordinator::Timer::start();
+    for _ in 0..rounds {
+        pt.sweep_all(per_round);
+        pt.exchange();
+    }
+    let wall = timer.seconds();
+    let rows: Vec<(f32, vectorising::sweep::SweepStats, f64)> =
+        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
+    Ok(coordinator::RunReport::from_stats(
+        kind.label(),
+        1,
+        rounds * per_round,
+        wall,
+        &rows,
+        pt.swap_acceptance(),
+    ))
+}
+
+/// Factor n into the most square even-by-even torus (for artifacts-check).
+fn factor_torus(n: usize) -> (usize, usize) {
+    let mut best = (n, 1);
+    for w in 2..=n {
+        if n % w == 0 {
+            let h = n / w;
+            if w % 2 == 0 && h % 2 == 0 && w >= h && (w - h) < (best.0 - best.1) {
+                best = (w, h);
+            }
+        }
+    }
+    best
+}

@@ -1,0 +1,128 @@
+//! Mersenne Twister 19937 — scalar reference, 4-way SSE interlaced, and
+//! W-way interlaced generators.
+//!
+//! The paper (§3) observes that after the basic optimizations "a majority
+//! of CPU time was being spent generating the large volume of random
+//! numbers", and interlaces 4 MT19937 generators with different seeds so
+//! that SSE advances all 4 in lock-step — "keeps 4x624 = 2,496 numbers and
+//! uses SSE to generate 4 random numbers in roughly the same time as each
+//! random number before".
+//!
+//! * [`Mt19937`]    — scalar reference (A.1/A.2 rungs), transcribed from
+//!                    Matsumoto & Nishimura's published code.
+//! * [`Mt19937x4`]  — the paper's 4-way interlaced SSE generator
+//!                    (A.3/A.4 rungs); lane `k` is bit-exact to a scalar
+//!                    generator seeded with `seeds[k]`.
+//! * [`Mt19937Wide`]— W-way interlaced generator (any W), the rust twin of
+//!                    the accelerator's `(624, W)` kernel; used to produce
+//!                    host-side streams matching the artifacts and to seed
+//!                    their state buffers.
+//!
+//! All variants map `u32 -> f32` uniforms identically: the top 24 bits,
+//! `(u >> 8) * 2^-24`, so a decision made on any rung is reproducible on
+//! any other.
+
+mod mt19937;
+mod mt19937x4;
+mod wide;
+
+pub use mt19937::Mt19937;
+pub use mt19937x4::Mt19937x4;
+pub use wide::Mt19937Wide;
+
+pub(crate) const N: usize = 624;
+pub(crate) const M: usize = 397;
+pub(crate) const MATRIX_A: u32 = 0x9908_b0df;
+pub(crate) const UPPER_MASK: u32 = 0x8000_0000;
+pub(crate) const LOWER_MASK: u32 = 0x7fff_ffff;
+
+/// Map a raw output to a uniform in `[0, 1)` with 24-bit resolution.
+#[inline(always)]
+pub fn u32_to_unit_f32(u: u32) -> f32 {
+    (u >> 8) as f32 * (1.0 / 16_777_216.0)
+}
+
+/// `init_genrand` from the reference implementation (also used by the
+/// python side's `mt19937.init_state`; keep in sync).
+pub(crate) fn seed_array(seed: u32) -> [u32; N] {
+    let mut mt = [0u32; N];
+    mt[0] = seed;
+    for i in 1..N {
+        mt[i] = 1_812_433_253u32
+            .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+            .wrapping_add(i as u32);
+    }
+    mt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First outputs of the reference MT19937 for seed 5489 (the canonical
+    /// default seed) — published golden values.
+    pub(crate) const GOLDEN_5489: [u32; 10] = [
+        3499211612, 581869302, 3890346734, 3586334585, 545404204, 4161255391, 3922919429,
+        949333985, 2715962298, 1323567403,
+    ];
+
+    #[test]
+    fn scalar_matches_golden_vector() {
+        let mut rng = Mt19937::new(5489);
+        for (i, &want) in GOLDEN_5489.iter().enumerate() {
+            assert_eq!(rng.next_u32(), want, "output {i}");
+        }
+    }
+
+    #[test]
+    fn x4_lanes_match_scalar_streams() {
+        let seeds = [5489u32, 1, 0xdead_beef, 4294967295];
+        let mut vec_rng = Mt19937x4::new(seeds);
+        let mut scalars: Vec<Mt19937> = seeds.iter().map(|&s| Mt19937::new(s)).collect();
+        // cross two twist boundaries
+        for step in 0..1400 {
+            let quad = vec_rng.next4_u32();
+            for k in 0..4 {
+                assert_eq!(quad[k], scalars[k].next_u32(), "step {step} lane {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_lanes_match_scalar_streams() {
+        let seeds: Vec<u32> = (0..7).map(|k| 100 + k).collect();
+        let mut wide = Mt19937Wide::new(&seeds);
+        let mut scalars: Vec<Mt19937> = seeds.iter().map(|&s| Mt19937::new(s)).collect();
+        for step in 0..1300 {
+            let row = wide.next_row();
+            for (k, &v) in row.iter().enumerate() {
+                assert_eq!(v, scalars[k].next_u32(), "step {step} lane {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_f32_mapping_is_24_bit() {
+        assert_eq!(u32_to_unit_f32(0), 0.0);
+        assert_eq!(u32_to_unit_f32(u32::MAX), (16_777_215.0) / 16_777_216.0);
+        assert!(u32_to_unit_f32(u32::MAX) < 1.0);
+        assert_eq!(u32_to_unit_f32(1 << 8), 1.0 / 16_777_216.0);
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let mut a = Mt19937::new(1);
+        let mut b = Mt19937::new(2);
+        let same = (0..1000).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3, "streams should not collide ({same} collisions)");
+    }
+
+    #[test]
+    fn next_f32_in_unit_interval() {
+        let mut rng = Mt19937::new(42);
+        for _ in 0..10_000 {
+            let u = rng.next_f32();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Scalar MT19937 — the generator the paper's original (A.1/A.2) rungs
+//! use, transcribed from the Matsumoto & Nishimura reference C code.
+
+use super::{seed_array, u32_to_unit_f32, LOWER_MASK, MATRIX_A, M, N, UPPER_MASK};
+
+/// Scalar Mersenne Twister (period 2^19937 - 1).
+#[derive(Clone)]
+pub struct Mt19937 {
+    mt: [u32; N],
+    idx: usize,
+}
+
+impl Mt19937 {
+    /// Seed with `init_genrand(seed)`.
+    pub fn new(seed: u32) -> Self {
+        Self { mt: seed_array(seed), idx: N }
+    }
+
+    /// Regenerate all 624 words — the sequential loop of the paper's
+    /// Figure 8 ("two example lines of MT19937").
+    fn generate(&mut self) {
+        let mt = &mut self.mt;
+        for i in 0..N {
+            let y = (mt[i] & UPPER_MASK) | (mt[(i + 1) % N] & LOWER_MASK);
+            mt[i] = mt[(i + M) % N] ^ (y >> 1) ^ if y & 1 == 1 { MATRIX_A } else { 0 };
+        }
+        self.idx = 0;
+    }
+
+    /// Next raw 32-bit output (tempered).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.idx >= N {
+            self.generate();
+        }
+        let mut y = self.mt[self.idx];
+        self.idx += 1;
+        y ^= y >> 11;
+        y ^= (y << 7) & 0x9d2c_5680;
+        y ^= (y << 15) & 0xefc6_0000;
+        y ^ (y >> 18)
+    }
+
+    /// Next uniform in `[0, 1)` (top 24 bits).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        u32_to_unit_f32(self.next_u32())
+    }
+}

@@ -1,0 +1,91 @@
+//! W-way interlaced MT19937 — the host twin of the accelerator's
+//! `(624, W)` generator (paper §3.2: "the GPU version of the code has a
+//! random number generator for each GPU thread ... interlacing the random
+//! number generators was implemented simply by swapping the order of two
+//! array indices").
+//!
+//! Lane `k` is bit-exact to a scalar [`super::Mt19937`] seeded with
+//! `seeds[k]`, and the block layout (row r, lane k) matches the python
+//! kernel's `(624, W)` buffer exactly, which the integration tests use to
+//! cross-check rust against the AOT artifacts.
+
+use super::{seed_array, u32_to_unit_f32, LOWER_MASK, MATRIX_A, M, N, UPPER_MASK};
+
+/// W interlaced Mersenne Twisters (row-major `(624, W)` state).
+#[derive(Clone)]
+pub struct Mt19937Wide {
+    w: usize,
+    /// Row-major state: word `i` of lane `k` at `mt[w*i + k]`.
+    mt: Vec<u32>,
+    out: Vec<u32>,
+    row: usize,
+}
+
+impl Mt19937Wide {
+    pub fn new(seeds: &[u32]) -> Self {
+        let w = seeds.len();
+        assert!(w > 0, "need at least one lane");
+        let mut mt = vec![0u32; w * N];
+        for (k, &s) in seeds.iter().enumerate() {
+            let lane = seed_array(s);
+            for i in 0..N {
+                mt[w * i + k] = lane[i];
+            }
+        }
+        Self { w, mt, out: vec![0u32; w * N], row: N }
+    }
+
+    /// Number of interlaced lanes.
+    pub fn lanes(&self) -> usize {
+        self.w
+    }
+
+    /// Raw `(624, W)` state snapshot (row-major) — feeds the accelerator
+    /// artifacts' `mt` input buffer.
+    pub fn state_rows(&self) -> &[u32] {
+        &self.mt
+    }
+
+    fn generate(&mut self) {
+        let w = self.w;
+        let mt = &mut self.mt;
+        for i in 0..N {
+            let (i1, im) = ((i + 1) % N, (i + M) % N);
+            for k in 0..w {
+                let y = (mt[w * i + k] & UPPER_MASK) | (mt[w * i1 + k] & LOWER_MASK);
+                mt[w * i + k] =
+                    mt[w * im + k] ^ (y >> 1) ^ if y & 1 == 1 { MATRIX_A } else { 0 };
+            }
+        }
+        for (o, &v) in self.out.iter_mut().zip(mt.iter()) {
+            let mut y = v;
+            y ^= y >> 11;
+            y ^= (y << 7) & 0x9d2c_5680;
+            y ^= (y << 15) & 0xefc6_0000;
+            *o = y ^ (y >> 18);
+        }
+        self.row = 0;
+    }
+
+    /// Next row of the block: one output from each of the W lanes.
+    #[inline]
+    pub fn next_row(&mut self) -> &[u32] {
+        if self.row >= N {
+            self.generate();
+        }
+        let r = self.row;
+        self.row += 1;
+        &self.out[self.w * r..self.w * (r + 1)]
+    }
+
+    /// Next row mapped to uniforms in `[0, 1)`, appended to `dst`.
+    pub fn next_row_f32_into(&mut self, dst: &mut Vec<f32>) {
+        let w = self.w;
+        if self.row >= N {
+            self.generate();
+        }
+        let r = self.row;
+        self.row += 1;
+        dst.extend(self.out[w * r..w * (r + 1)].iter().map(|&u| u32_to_unit_f32(u)));
+    }
+}

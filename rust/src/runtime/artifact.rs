@@ -1,0 +1,188 @@
+//! Artifact metadata: the JSON sidecars written next to each HLO file by
+//! `python/compile/aot.py`, and the manifest indexing them.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+use crate::Result;
+
+/// Shape + dtype of one artifact input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: v.get("dtype")?.as_str()?.to_string() })
+    }
+}
+
+/// The static (baked) configuration of a sweep artifact — must mirror
+/// `python/compile/model.py::ModelConfig`.
+#[derive(Clone, Debug)]
+pub struct StaticCfg {
+    pub n_base: usize,
+    pub n_layers: usize,
+    pub max_degree: usize,
+    pub n_colors: usize,
+    pub sweeps_per_call: usize,
+}
+
+impl StaticCfg {
+    pub fn n_spins(&self) -> usize {
+        self.n_base * self.n_layers
+    }
+
+    pub fn phases_per_sweep(&self) -> usize {
+        2 * self.n_colors
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            n_base: v.get("n_base")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            max_degree: v.get("max_degree")?.as_usize()?,
+            n_colors: v.get("n_colors")?.as_usize()?,
+            sweeps_per_call: v.get("sweeps_per_call")?.as_usize()?,
+        })
+    }
+}
+
+/// Sidecar metadata of one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// `"b1_naive"` or `"b2_coalesced"`.
+    pub variant: String,
+    pub config: String,
+    pub static_cfg: StaticCfg,
+    pub inputs: Vec<TensorSig>,
+    pub n_outputs: usize,
+    pub hlo_file: String,
+    pub hlo_bytes: usize,
+}
+
+impl ArtifactMeta {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            config: v.get("config")?.as_str()?.to_string(),
+            static_cfg: StaticCfg::from_json(v.get("static")?)?,
+            inputs: v
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            n_outputs: v.get("n_outputs")?.as_usize()?,
+            hlo_file: v.get("hlo_file")?.as_str()?.to_string(),
+            hlo_bytes: v.get("hlo_bytes")?.as_usize()?,
+        })
+    }
+}
+
+/// The manifest written by `make artifacts`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts`): {e}"))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("malformed manifest {path:?}: {e}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { artifacts })
+    }
+
+    /// Find an artifact by name (e.g. `"b2_coalesced_default"`).
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
+            let have: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+            anyhow::anyhow!("artifact {name:?} not in manifest (have {have:?})")
+        })
+    }
+}
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or the nearest
+/// ancestor `artifacts/` containing a manifest (so tests and benches work
+/// from any subdirectory).
+pub fn default_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIDECAR: &str = r#"{
+        "name": "b2_coalesced_default", "variant": "b2_coalesced",
+        "config": "default",
+        "static": {"n_base": 64, "n_layers": 32, "max_degree": 4,
+                    "n_colors": 2, "sweeps_per_call": 10},
+        "inputs": [{"shape": [64, 32], "dtype": "float32"},
+                    {"shape": [], "dtype": "int32"}],
+        "n_outputs": 6, "hlo_file": "x.hlo.txt", "hlo_bytes": 10
+    }"#;
+
+    #[test]
+    fn sidecar_parses() {
+        let v = Value::parse(SIDECAR).unwrap();
+        let m = ArtifactMeta::from_json(&v).unwrap();
+        assert_eq!(m.static_cfg.n_spins(), 2048);
+        assert_eq!(m.static_cfg.phases_per_sweep(), 4);
+        assert_eq!(m.inputs[0].element_count(), 2048);
+        assert_eq!(m.inputs[1].element_count(), 1); // scalar
+    }
+
+    #[test]
+    fn manifest_lookup_errors_are_descriptive() {
+        let man = Manifest::parse(&format!(r#"{{"artifacts": [{SIDECAR}]}}"#)).unwrap();
+        assert!(man.get("b2_coalesced_default").is_ok());
+        let err = man.get("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("b2_coalesced_default"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+}

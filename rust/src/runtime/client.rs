@@ -1,0 +1,57 @@
+//! PJRT client wrapper: compile HLO-text artifacts on the CPU device.
+
+use std::path::Path;
+
+use crate::Result;
+
+use super::artifact::{ArtifactMeta, Manifest};
+use super::executor::Executor;
+
+/// A PJRT client plus artifact-loading conveniences.  One `Runtime` per
+/// process (the accelerator analogue of "the GPU"); executables created
+/// from it share the device.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the backend the interpret-mode Pallas artifacts
+    /// target in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one artifact by name from a directory containing
+    /// `manifest.json` (see [`super::artifact::default_dir`]).
+    pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<Executor> {
+        let manifest = Manifest::load(dir)?;
+        let meta = manifest.get(name)?.clone();
+        self.compile_meta(dir, meta)
+    }
+
+    /// Compile an artifact whose metadata is already known.
+    pub fn compile_meta(&self, dir: &Path, meta: ArtifactMeta) -> Result<Executor> {
+        let hlo_path = dir.join(&meta.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path {hlo_path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO {hlo_path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile artifact {}: {e}", meta.name))?;
+        Ok(Executor::new(exe, meta))
+    }
+}

@@ -1,0 +1,111 @@
+//! A compiled sweep executable with typed input marshalling and shape
+//! validation against the artifact sidecar.
+
+use crate::Result;
+
+use super::artifact::{ArtifactMeta, TensorSig};
+
+/// Host-side tensor value matching one artifact input slot.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32(&'a [u32]),
+}
+
+impl Input<'_> {
+    fn dtype(&self) -> &'static str {
+        match self {
+            Input::F32(_) => "float32",
+            Input::I32(_) => "int32",
+            Input::U32(_) => "uint32",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+            Input::U32(v) => v.len(),
+        }
+    }
+
+    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let flat = match self {
+            Input::F32(v) => xla::Literal::vec1(v),
+            Input::I32(v) => xla::Literal::vec1(v),
+            Input::U32(v) => xla::Literal::vec1(v),
+        };
+        if sig.shape.is_empty() {
+            // rank-0: reshape a 1-element vector to scalar
+            flat.reshape(&[]).map_err(|e| anyhow::anyhow!("scalar reshape: {e}"))
+        } else {
+            flat.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Executor {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, meta: ArtifactMeta) -> Self {
+        Self { exe, meta }
+    }
+
+    /// Validate inputs against the sidecar signature, execute, and return
+    /// the flattened output tuple as literals.
+    pub fn execute(&self, inputs: &[Input<'_>]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            anyhow::bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (slot, (inp, sig)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if inp.dtype() != sig.dtype {
+                anyhow::bail!(
+                    "artifact {} input {slot}: dtype {} != expected {}",
+                    self.meta.name,
+                    inp.dtype(),
+                    sig.dtype
+                );
+            }
+            if inp.len() != sig.element_count() {
+                anyhow::bail!(
+                    "artifact {} input {slot}: {} elements != expected {} (shape {:?})",
+                    self.meta.name,
+                    inp.len(),
+                    sig.element_count(),
+                    sig.shape
+                );
+            }
+            literals.push(inp.to_literal(sig)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {}: {e}", self.meta.name))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {}: {e}", self.meta.name))?;
+        if outs.len() != self.meta.n_outputs {
+            anyhow::bail!(
+                "artifact {} returned {} outputs, sidecar says {}",
+                self.meta.name,
+                outs.len(),
+                self.meta.n_outputs
+            );
+        }
+        Ok(outs)
+    }
+}

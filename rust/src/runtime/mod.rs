@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Interchange is HLO *text* (jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized protos, which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).  Python never runs at request time: `make artifacts`
+//! is the only compile step, and this module is self-contained afterwards.
+//!
+//! * [`artifact`] — manifest / sidecar metadata, shape validation;
+//! * [`client`]   — PJRT CPU client wrapper;
+//! * [`executor`] — compiled executable + typed input marshalling.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest, StaticCfg, TensorSig};
+pub use client::Runtime;
+pub use executor::Executor;

@@ -1,0 +1,139 @@
+//! 4-wide SIMD primitives — the substrate for the paper's §3 explicit
+//! vectorization.
+//!
+//! The paper hand-writes SSE assembly because "C++ compilers do not yet
+//! natively provide operators on 128-bit data types".  Stable Rust exposes
+//! the same instructions through `core::arch::x86_64`, so [`U32x4`] and
+//! [`F32x4`] are thin, safe, `#[inline(always)]` wrappers over exactly the
+//! intrinsics the paper's assembly uses (PAND/POR/PXOR/PSRLD/PSLLD for the
+//! Mersenne Twister, CVTTPS2DQ/PADDD/MULPS for the exponential trick,
+//! CMPLTPS + mask blending for the Figure-10 ternary operator).
+//!
+//! A portable scalar-quad fallback keeps every other architecture working
+//! (and doubles as a differential-testing oracle on x86_64).
+
+#[cfg(target_arch = "x86_64")]
+mod sse;
+#[cfg(target_arch = "x86_64")]
+pub use sse::{F32x4, U32x4};
+
+#[cfg(not(target_arch = "x86_64"))]
+mod portable;
+#[cfg(not(target_arch = "x86_64"))]
+pub use portable::{F32x4, U32x4};
+
+// The portable implementation is always compiled on x86_64 too, as a
+// differential oracle for the SSE wrappers.
+#[cfg(target_arch = "x86_64")]
+pub mod portable;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const US: [[u32; 4]; 4] = [
+        [0, 1, 0x8000_0000, 0xffff_ffff],
+        [0x9908_b0df, 0x7fff_ffff, 2, 0x1234_5678],
+        [1, 1, 1, 1],
+        [0xdead_beef, 0, 0xffff_fffe, 42],
+    ];
+
+    #[test]
+    fn u32_bit_ops_match_scalar() {
+        for a in US {
+            for b in US {
+                let (va, vb) = (U32x4::from(a), U32x4::from(b));
+                assert_eq!((va & vb).to_array(), [a[0] & b[0], a[1] & b[1], a[2] & b[2], a[3] & b[3]]);
+                assert_eq!((va | vb).to_array(), [a[0] | b[0], a[1] | b[1], a[2] | b[2], a[3] | b[3]]);
+                assert_eq!((va ^ vb).to_array(), [a[0] ^ b[0], a[1] ^ b[1], a[2] ^ b[2], a[3] ^ b[3]]);
+                assert_eq!(
+                    va.wrapping_add(vb).to_array(),
+                    [
+                        a[0].wrapping_add(b[0]),
+                        a[1].wrapping_add(b[1]),
+                        a[2].wrapping_add(b[2]),
+                        a[3].wrapping_add(b[3])
+                    ]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn u32_shifts_match_scalar() {
+        for a in US {
+            let v = U32x4::from(a);
+            for sh in [1u32, 7, 11, 15, 18, 30] {
+                assert_eq!(v.shr(sh as i32).to_array(), a.map(|x| x >> sh));
+                assert_eq!(v.shl(sh as i32).to_array(), a.map(|x| x << sh));
+            }
+        }
+    }
+
+    #[test]
+    fn select_is_figure_10_ternary() {
+        // mask ? a : b with an all-ones/all-zeros lane mask.
+        let mask = U32x4::from([0xffff_ffff, 0, 0xffff_ffff, 0]);
+        let a = U32x4::from([1, 2, 3, 4]);
+        let b = U32x4::from([10, 20, 30, 40]);
+        assert_eq!(U32x4::select(mask, a, b).to_array(), [1, 20, 3, 40]);
+    }
+
+    #[test]
+    fn f32_arith_matches_scalar() {
+        let a = F32x4::from([1.5, -2.0, 0.0, 1e8]);
+        let b = F32x4::from([0.5, 4.0, -1.0, 2.0]);
+        assert_eq!((a * b).to_array(), [0.75, -8.0, -0.0, 2e8]);
+        assert_eq!((a + b).to_array(), [2.0, 2.0, -1.0, 1e8 + 2.0]);
+        assert_eq!((a - b).to_array(), [1.0, -6.0, 1.0, 1e8 - 2.0]);
+    }
+
+    #[test]
+    fn f32_compare_produces_lane_masks() {
+        let a = F32x4::from([1.0, 5.0, -1.0, 2.0]);
+        let b = F32x4::from([2.0, 4.0, -1.0, 3.0]);
+        assert_eq!(a.lt(b).to_array(), [0xffff_ffff, 0, 0, 0xffff_ffff]);
+    }
+
+    #[test]
+    fn truncating_convert_matches_as_cast() {
+        let a = F32x4::from([1.9, -1.9, 123.456, -0.4]);
+        assert_eq!(a.to_i32_trunc().to_array_i32(), [1, -1, 123, 0]);
+    }
+
+    #[test]
+    fn bitcasts_roundtrip() {
+        let a = F32x4::from([1.0, -2.5, 0.0, 3.14]);
+        assert_eq!(a.bitcast_u32().bitcast_f32().to_array(), a.to_array());
+        let u = U32x4::from([0x3f80_0000, 0x4000_0000, 0, 0xc000_0000]);
+        assert_eq!(u.bitcast_f32().to_array(), [1.0, 2.0, 0.0, -2.0]);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse_matches_portable_on_random_inputs() {
+        // Differential test: every op, SSE vs the portable oracle.
+        let mut st = 0x1234_5678_9abc_def0u64;
+        let mut next = move || {
+            st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (st >> 32) as u32
+        };
+        for _ in 0..2000 {
+            let a: [u32; 4] = [next(), next(), next(), next()];
+            let b: [u32; 4] = [next(), next(), next(), next()];
+            let (sa, sb) = (U32x4::from(a), U32x4::from(b));
+            let (pa, pb) = (portable::U32x4::from(a), portable::U32x4::from(b));
+            assert_eq!((sa & sb).to_array(), (pa & pb).to_array());
+            assert_eq!((sa | sb).to_array(), (pa | pb).to_array());
+            assert_eq!((sa ^ sb).to_array(), (pa ^ pb).to_array());
+            assert_eq!(sa.wrapping_add(sb).to_array(), pa.wrapping_add(pb).to_array());
+            assert_eq!(sa.shr(11).to_array(), pa.shr(11).to_array());
+            assert_eq!(sa.shl(7).to_array(), pa.shl(7).to_array());
+            let fa = [a[0] as f32 / 1e4, a[1] as f32 / 1e4, a[2] as f32 / 1e4, a[3] as f32 / 1e4];
+            let sfa = F32x4::from(fa);
+            let pfa = portable::F32x4::from(fa);
+            assert_eq!(sfa.to_i32_trunc().to_array_i32(), pfa.to_i32_trunc().to_array_i32());
+            assert_eq!(sfa.bitcast_u32().to_array(), pfa.bitcast_u32().to_array());
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Portable scalar-quad implementations of the 4-wide primitives.
+//!
+//! Semantics-identical to the SSE versions (the x86_64 test suite checks
+//! this differentially).  Used as the real implementation on non-x86_64
+//! targets and as an oracle on x86_64.
+
+use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
+
+/// Four `u32` lanes.
+#[derive(Copy, Clone)]
+pub struct U32x4(pub [u32; 4]);
+
+/// Four `f32` lanes.
+#[derive(Copy, Clone)]
+pub struct F32x4(pub [f32; 4]);
+
+impl From<[u32; 4]> for U32x4 {
+    #[inline(always)]
+    fn from(a: [u32; 4]) -> Self {
+        Self(a)
+    }
+}
+
+impl From<[f32; 4]> for F32x4 {
+    #[inline(always)]
+    fn from(a: [f32; 4]) -> Self {
+        Self(a)
+    }
+}
+
+macro_rules! lanes {
+    ($a:expr, $b:expr, $op:expr) => {{
+        let (a, b) = ($a, $b);
+        [$op(a[0], b[0]), $op(a[1], b[1]), $op(a[2], b[2]), $op(a[3], b[3])]
+    }};
+}
+
+impl U32x4 {
+    #[inline(always)]
+    pub fn splat(v: u32) -> Self {
+        Self([v; 4])
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Self([0; 4])
+    }
+
+    #[inline(always)]
+    pub fn load(src: &[u32]) -> Self {
+        Self([src[0], src[1], src[2], src[3]])
+    }
+
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u32]) {
+        dst[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [u32; 4] {
+        self.0
+    }
+
+    #[inline(always)]
+    pub fn shr(self, count: i32) -> Self {
+        Self(self.0.map(|x| x >> count))
+    }
+
+    #[inline(always)]
+    pub fn shl(self, count: i32) -> Self {
+        Self(self.0.map(|x| x << count))
+    }
+
+    #[inline(always)]
+    pub fn wrapping_add(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, u32::wrapping_add))
+    }
+
+    #[inline(always)]
+    pub fn select(mask: Self, a: Self, b: Self) -> Self {
+        Self(lanes!(
+            lanes!(mask.0, a.0, |m: u32, x: u32| m & x),
+            lanes!(mask.0, b.0, |m: u32, x: u32| !m & x),
+            |x: u32, y: u32| x | y
+        ))
+    }
+
+    #[inline(always)]
+    pub fn lsb_mask(self) -> Self {
+        Self(self.0.map(|x| if x & 1 == 1 { 0xffff_ffff } else { 0 }))
+    }
+
+    #[inline(always)]
+    pub fn bitcast_f32(self) -> F32x4 {
+        F32x4(self.0.map(f32::from_bits))
+    }
+
+    #[inline(always)]
+    pub fn to_array_i32(self) -> [i32; 4] {
+        self.0.map(|x| x as i32)
+    }
+
+    #[inline(always)]
+    pub fn to_f32_from_i32(self) -> F32x4 {
+        F32x4(self.0.map(|x| x as i32 as f32))
+    }
+
+    /// Bit k set iff the top bit of lane k is set (MOVMSKPS semantics).
+    #[inline(always)]
+    pub fn movemask(self) -> u32 {
+        (0..4).map(|k| ((self.0[k] >> 31) as u32) << k).sum()
+    }
+}
+
+impl BitAnd for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitand(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a & b))
+    }
+}
+
+impl BitOr for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitor(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a | b))
+    }
+}
+
+impl BitXor for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitxor(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a ^ b))
+    }
+}
+
+impl F32x4 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; 4])
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Self([0.0; 4])
+    }
+
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        Self([src[0], src[1], src[2], src[3]])
+    }
+
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 4] {
+        self.0
+    }
+
+    /// Unchecked load (portable form still range-checked in debug).
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 4 <= src.len()`.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 <= src.len());
+        Self([
+            *src.get_unchecked(off),
+            *src.get_unchecked(off + 1),
+            *src.get_unchecked(off + 2),
+            *src.get_unchecked(off + 3),
+        ])
+    }
+
+    /// Unchecked store.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 4 <= dst.len()`.
+    #[inline(always)]
+    pub unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 4 <= dst.len());
+        for k in 0..4 {
+            *dst.get_unchecked_mut(off + k) = self.0[k];
+        }
+    }
+
+    #[inline(always)]
+    pub fn lt(self, rhs: Self) -> U32x4 {
+        U32x4(lanes!(self.0, rhs.0, |a: f32, b: f32| if a < b { 0xffff_ffffu32 } else { 0 }))
+    }
+
+    /// Truncating conversion with x86 CVTTPS2DQ out-of-range semantics
+    /// (0x8000_0000 for unrepresentable values — only hit outside the exp
+    /// approximations' documented domains).
+    #[inline(always)]
+    pub fn to_i32_trunc(self) -> U32x4 {
+        U32x4(self.0.map(|x| {
+            if x.is_nan() || x >= 2_147_483_648.0 || x < -2_147_483_648.0 {
+                0x8000_0000u32
+            } else {
+                (x as i32) as u32
+            }
+        }))
+    }
+
+    #[inline(always)]
+    pub fn bitcast_u32(self) -> U32x4 {
+        U32x4(self.0.map(f32::to_bits))
+    }
+
+    /// Models RSQRTPS within its error spec using the exact computation
+    /// (portable targets have no approximate instruction to match).
+    #[inline(always)]
+    pub fn rsqrt_approx(self) -> Self {
+        Self(self.0.map(|x| 1.0 / x.sqrt()))
+    }
+
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        Self(self.0.map(f32::sqrt))
+    }
+
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| if a > b { a } else { b }))
+    }
+
+    #[inline(always)]
+    pub fn min(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| if a < b { a } else { b }))
+    }
+
+    /// Lane-wise negation.
+    #[inline(always)]
+    pub fn neg(self) -> Self {
+        Self(self.0.map(|x| f32::from_bits(x.to_bits() ^ 0x8000_0000)))
+    }
+
+    /// `out[k] = in[(k+3) % 4]` — values move one lane up.
+    #[inline(always)]
+    pub fn rot_up(self) -> Self {
+        let a = self.0;
+        Self([a[3], a[0], a[1], a[2]])
+    }
+
+    /// `out[k] = in[(k+1) % 4]` — values move one lane down.
+    #[inline(always)]
+    pub fn rot_down(self) -> Self {
+        let a = self.0;
+        Self([a[1], a[2], a[3], a[0]])
+    }
+}
+
+impl Add for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a + b))
+    }
+}
+
+impl Sub for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a - b))
+    }
+}
+
+impl Mul for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a * b))
+    }
+}

@@ -1,0 +1,296 @@
+//! SSE2 implementations of the 4-wide primitives (x86_64).
+//!
+//! Every method is a single instruction (or two for `select`) from the set
+//! the paper's hand-written assembly uses.  SSE2 is part of the x86_64
+//! baseline, so no runtime feature detection is needed — exactly the
+//! "present on modern commodity CPUs since 2001" situation the paper
+//! describes.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
+
+/// Four packed `u32` lanes (one `__m128i`).
+#[derive(Copy, Clone)]
+pub struct U32x4(pub(crate) __m128i);
+
+/// Four packed `f32` lanes (one `__m128`).
+#[derive(Copy, Clone)]
+pub struct F32x4(pub(crate) __m128);
+
+impl From<[u32; 4]> for U32x4 {
+    #[inline(always)]
+    fn from(a: [u32; 4]) -> Self {
+        unsafe { Self(_mm_loadu_si128(a.as_ptr() as *const __m128i)) }
+    }
+}
+
+impl From<[f32; 4]> for F32x4 {
+    #[inline(always)]
+    fn from(a: [f32; 4]) -> Self {
+        unsafe { Self(_mm_loadu_ps(a.as_ptr())) }
+    }
+}
+
+impl U32x4 {
+    /// All four lanes set to `v` (PSHUFD broadcast).
+    #[inline(always)]
+    pub fn splat(v: u32) -> Self {
+        unsafe { Self(_mm_set1_epi32(v as i32)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        unsafe { Self(_mm_setzero_si128()) }
+    }
+
+    /// Unaligned load of 4 consecutive values.
+    #[inline(always)]
+    pub fn load(src: &[u32]) -> Self {
+        debug_assert!(src.len() >= 4);
+        unsafe { Self(_mm_loadu_si128(src.as_ptr() as *const __m128i)) }
+    }
+
+    /// Unaligned store of the 4 lanes.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u32]) {
+        debug_assert!(dst.len() >= 4);
+        unsafe { _mm_storeu_si128(dst.as_mut_ptr() as *mut __m128i, self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [u32; 4] {
+        let mut out = [0u32; 4];
+        unsafe { _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, self.0) };
+        out
+    }
+
+    /// Logical shift right by an immediate count (PSRLD).
+    #[inline(always)]
+    pub fn shr(self, count: i32) -> Self {
+        unsafe { Self(_mm_srl_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Logical shift left by an immediate count (PSLLD).
+    #[inline(always)]
+    pub fn shl(self, count: i32) -> Self {
+        unsafe { Self(_mm_sll_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Wrapping lane-wise addition (PADDD).
+    #[inline(always)]
+    pub fn wrapping_add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_add_epi32(self.0, rhs.0)) }
+    }
+
+    /// `mask ? a : b` per lane — the paper's Figure-10 ternary: since SSE2
+    /// has no blend, this is `(mask & a) | (andnot(mask) & b)`.
+    #[inline(always)]
+    pub fn select(mask: Self, a: Self, b: Self) -> Self {
+        unsafe { Self(_mm_or_si128(_mm_and_si128(mask.0, a.0), _mm_andnot_si128(mask.0, b.0))) }
+    }
+
+    /// Lane mask: all-ones where `(lane & 1) == 1` — the MT19937 `y & 1 ?
+    /// MATRIX_A : 0` condition, computed branch-free by comparing the low
+    /// bit against 1 (PCMPEQD).
+    #[inline(always)]
+    pub fn lsb_mask(self) -> Self {
+        unsafe {
+            let one = _mm_set1_epi32(1);
+            Self(_mm_cmpeq_epi32(_mm_and_si128(self.0, one), one))
+        }
+    }
+
+    /// Reinterpret the 128 bits as 4 floats (no conversion).
+    #[inline(always)]
+    pub fn bitcast_f32(self) -> F32x4 {
+        unsafe { F32x4(_mm_castsi128_ps(self.0)) }
+    }
+
+    /// Signed-i32 lane view of a store (for the exp trick's PADDD result).
+    #[inline(always)]
+    pub fn to_array_i32(self) -> [i32; 4] {
+        let a = self.to_array();
+        [a[0] as i32, a[1] as i32, a[2] as i32, a[3] as i32]
+    }
+
+    /// Convert each lane's *signed* value to f32 (CVTDQ2PS).
+    #[inline(always)]
+    pub fn to_f32_from_i32(self) -> F32x4 {
+        unsafe { F32x4(_mm_cvtepi32_ps(self.0)) }
+    }
+
+    /// 4-bit mask of each lane's sign bit (MOVMSKPS) — bit k set iff the
+    /// top bit of lane k is set.  Comparison results are all-ones/all-zero
+    /// lanes, so this extracts a flip mask in one instruction.
+    #[inline(always)]
+    pub fn movemask(self) -> u32 {
+        unsafe { _mm_movemask_ps(_mm_castsi128_ps(self.0)) as u32 }
+    }
+}
+
+impl BitAnd for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitand(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_and_si128(self.0, rhs.0)) }
+    }
+}
+
+impl BitOr for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_or_si128(self.0, rhs.0)) }
+    }
+}
+
+impl BitXor for U32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitxor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_xor_si128(self.0, rhs.0)) }
+    }
+}
+
+impl F32x4 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        unsafe { Self(_mm_set1_ps(v)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        unsafe { Self(_mm_setzero_ps()) }
+    }
+
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= 4);
+        unsafe { Self(_mm_loadu_ps(src.as_ptr())) }
+    }
+
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 4);
+        unsafe { _mm_storeu_ps(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 4] {
+        let mut out = [0f32; 4];
+        unsafe { _mm_storeu_ps(out.as_mut_ptr(), self.0) };
+        out
+    }
+
+    /// Unchecked load of 4 values at `src[off..off+4]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 4 <= src.len()`.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        debug_assert!(off + 4 <= src.len());
+        Self(_mm_loadu_ps(src.as_ptr().add(off)))
+    }
+
+    /// Unchecked store of the 4 lanes to `dst[off..off+4]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 4 <= dst.len()`.
+    #[inline(always)]
+    pub unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 4 <= dst.len());
+        _mm_storeu_ps(dst.as_mut_ptr().add(off), self.0)
+    }
+
+    /// Lane mask (all-ones u32) where `self < rhs` (CMPLTPS).
+    #[inline(always)]
+    pub fn lt(self, rhs: Self) -> U32x4 {
+        unsafe { U32x4(_mm_castps_si128(_mm_cmplt_ps(self.0, rhs.0))) }
+    }
+
+    /// Truncating float→int conversion (CVTTPS2DQ) — C cast semantics,
+    /// matching both `x as i32` and jnp's `astype(int32)`.
+    #[inline(always)]
+    pub fn to_i32_trunc(self) -> U32x4 {
+        unsafe { U32x4(_mm_cvttps_epi32(self.0)) }
+    }
+
+    /// Reinterpret the 128 bits as 4 u32 lanes (no conversion).
+    #[inline(always)]
+    pub fn bitcast_u32(self) -> U32x4 {
+        unsafe { U32x4(_mm_castps_si128(self.0)) }
+    }
+
+    /// Approximate reciprocal square root (RSQRTPS) — the instruction the
+    /// paper's accurate exp variant builds its 4th root from.  Max relative
+    /// error 1.5 * 2^-12.
+    #[inline(always)]
+    pub fn rsqrt_approx(self) -> Self {
+        unsafe { Self(_mm_rsqrt_ps(self.0)) }
+    }
+
+    /// Exact lane-wise square root (SQRTPS).
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        unsafe { Self(_mm_sqrt_ps(self.0)) }
+    }
+
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_max_ps(self.0, rhs.0)) }
+    }
+
+    #[inline(always)]
+    pub fn min(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_min_ps(self.0, rhs.0)) }
+    }
+
+    /// Lane-wise negation (sign-bit XOR — one PXOR).
+    #[inline(always)]
+    pub fn neg(self) -> Self {
+        unsafe {
+            Self(_mm_xor_ps(self.0, _mm_castsi128_ps(_mm_set1_epi32(i32::MIN))))
+        }
+    }
+
+    /// Rotate values one lane upward: `out[k] = in[(k+3) % 4]`, i.e. each
+    /// value moves to the next-higher lane (lane 3 wraps to lane 0).  Used
+    /// by the A.4 boundary-row tau update: section `m` wraps to `m+1`.
+    #[inline(always)]
+    pub fn rot_up(self) -> Self {
+        unsafe { Self(_mm_shuffle_ps::<0x93>(self.0, self.0)) }
+    }
+
+    /// Rotate values one lane downward: `out[k] = in[(k+1) % 4]` (lane 0
+    /// wraps to lane 3) — the inverse boundary wrap.
+    #[inline(always)]
+    pub fn rot_down(self) -> Self {
+        unsafe { Self(_mm_shuffle_ps::<0x39>(self.0, self.0)) }
+    }
+}
+
+impl Add for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_add_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Sub for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_sub_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Mul for F32x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        unsafe { Self(_mm_mul_ps(self.0, rhs.0)) }
+    }
+}

@@ -1,0 +1,135 @@
+//! Small statistics toolkit used by the coordinator, the tempering engine
+//! and the benchmark harness.
+
+/// Streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.stddev() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Fixed-range histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Self { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let last = self.bins.len() - 1;
+            self.bins[b.min(last)] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+/// Probability that a group of `w` independent spins with per-spin flip
+/// probability `p` contains at least one flip — the paper's Fig-14
+/// "probability of having to wait for a spin flip": `1 - (1-p)^w`.
+pub fn wait_probability(p: f64, w: usize) -> f64 {
+    1.0 - (1.0 - p).powi(w as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic set is 32/7
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for x in [-0.1, 0.0, 0.24, 0.25, 0.99, 1.0, 2.0] {
+            h.push(x);
+        }
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.bins(), &[2, 1, 0, 1]);
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn wait_probability_matches_paper_examples() {
+        // Paper §4: average flip chance 28.6% -> CPU(A.1) waits 28.6%,
+        // A.4 (w=4) ~56.8%, GPU (w=32) ~82.8% *per-model averages*; check
+        // the function against the w=1 identity and monotonicity.
+        assert!((wait_probability(0.286, 1) - 0.286).abs() < 1e-12);
+        let p4 = wait_probability(0.2, 4);
+        assert!((p4 - (1.0 - 0.8f64.powi(4))).abs() < 1e-12);
+        assert!(wait_probability(0.2, 32) > p4);
+        assert_eq!(wait_probability(0.0, 32), 0.0);
+        assert!((wait_probability(1.0, 7) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,111 @@
+//! A.2 — the paper's §2 *basic optimizations*: branch elimination, the
+//! simplified Figure-5/6 data structure (flat per-spin edge arrays with
+//! the two tau edges last), result caching, and the fast exponential
+//! approximation.
+//!
+//! The inner update loop is the paper's Figure 6 verbatim: one line per
+//! space edge, then the two tau edges unrolled, no `isATauEdge` flag, no
+//! endpoint branch, and `2 * S_mul` hoisted out of the loop.
+
+use crate::ising::layout::CsrLayout;
+use crate::ising::QmcModel;
+use crate::rng::Mt19937;
+
+use super::{ExpMode, SweepKind, SweepStats, Sweeper};
+
+pub struct A2Basic {
+    model: QmcModel,
+    lay: CsrLayout,
+    s: Vec<f32>,
+    h_eff_space: Vec<f32>,
+    h_eff_tau: Vec<f32>,
+    rng: Mt19937,
+    exp: ExpMode,
+}
+
+impl A2Basic {
+    pub fn new(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Self {
+        assert_eq!(s0.len(), model.n_spins());
+        let lay = CsrLayout::build(model);
+        let (h_eff_space, h_eff_tau) = model.effective_fields(s0);
+        Self {
+            model: model.clone(),
+            lay,
+            s: s0.to_vec(),
+            h_eff_space,
+            h_eff_tau,
+            rng: Mt19937::new(seed),
+            exp,
+        }
+    }
+
+    fn sweep_once(&mut self, beta: f32, stats: &mut SweepStats) {
+        let n_spins = self.s.len();
+        let neg_beta = -beta; // result caching: hoisted once per sweep
+        for i in 0..n_spins {
+            let u = self.rng.next_f32();
+            let de = 2.0 * self.s[i] * (self.h_eff_space[i] + self.h_eff_tau[i]);
+            let p = self.exp.eval(neg_beta * de);
+            stats.attempts += 1;
+            stats.groups += 1;
+            if u < p {
+                stats.flips += 1;
+                stats.groups_with_flip += 1;
+                // §2.3 result caching: S_mul never read without doubling.
+                let two_s_mul = 2.0 * self.s[i];
+                self.s[i] = -self.s[i];
+                // Figure 6: flat edges, tau pair last, branch-free body.
+                let (lo, hi) = (self.lay.offsets[i] as usize, self.lay.offsets[i + 1] as usize);
+                let targets = &self.lay.edge_target[lo..hi];
+                let js = &self.lay.edge_j[lo..hi];
+                let k = targets.len();
+                for e in 0..k - 2 {
+                    self.h_eff_space[targets[e] as usize] -= two_s_mul * js[e];
+                }
+                self.h_eff_tau[targets[k - 2] as usize] -= two_s_mul * js[k - 2];
+                self.h_eff_tau[targets[k - 1] as usize] -= two_s_mul * js[k - 1];
+            }
+        }
+    }
+}
+
+impl Sweeper for A2Basic {
+    fn kind(&self) -> SweepKind {
+        SweepKind::A2Basic
+    }
+
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
+        let mut stats = SweepStats::default();
+        for _ in 0..n_sweeps {
+            self.sweep_once(beta, &mut stats);
+        }
+        stats
+    }
+
+    fn energy(&mut self) -> f64 {
+        self.model.total_energy(&self.s)
+    }
+
+    fn state(&mut self) -> Vec<f32> {
+        self.s.clone()
+    }
+
+    fn set_state(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.s.len());
+        self.s.copy_from_slice(s);
+        let (hs, ht) = self.model.effective_fields(s);
+        self.h_eff_space = hs;
+        self.h_eff_tau = ht;
+    }
+
+    fn validate(&mut self) -> f64 {
+        let (hs, ht) = self.model.effective_fields(&self.s);
+        let mut worst = 0.0f64;
+        for i in 0..self.s.len() {
+            worst = worst
+                .max((hs[i] - self.h_eff_space[i]).abs() as f64)
+                .max((ht[i] - self.h_eff_tau[i]).abs() as f64);
+        }
+        worst
+    }
+}

@@ -1,0 +1,291 @@
+//! Ablation of the paper's §2 *basic optimizations* — each ingredient of
+//! the A.1 → A.2 jump toggled independently:
+//!
+//! * **branch elimination** (§2.1): Figure-2 branchy endpoint/tau selection
+//!   vs the Figure-3 branch-free form ("this optimization had a large
+//!   impact");
+//! * **data-structure simplification** (§2.2): Figure-4 nested edge tables
+//!   vs the Figure-5/6 flat tau-last layout ("a large performance impact
+//!   on top of the branch elimination");
+//! * **result caching** (§2.3): recomputing `2*S_mul*J` per edge vs
+//!   hoisting `2*S_mul` ("improved performance slightly, but noticeably");
+//! * **exponential approximation** (§2.4): library `exp` vs the fast
+//!   bit-trick variant.
+//!
+//! `bench ablation_basic_opts` measures the 2^-style ladder the paper
+//! narrates, quantifying each ingredient on this machine.
+
+use crate::ising::layout::{CsrLayout, OriginalLayout};
+use crate::ising::QmcModel;
+use crate::rng::Mt19937;
+
+use super::{ExpMode, SweepKind, SweepStats, Sweeper};
+
+/// Which §2 ingredients are enabled.
+#[derive(Copy, Clone, Debug)]
+pub struct BasicOptFlags {
+    /// §2.1 — branch-free inner update loop.
+    pub branch_free: bool,
+    /// §2.2 — flat tau-last edge layout (implies branch-free tau handling).
+    pub flat_layout: bool,
+    /// §2.3 — hoist `2 * S_mul` out of the update loop.
+    pub cache_two_smul: bool,
+    /// §2.4 — exponential mode.
+    pub exp: ExpMode,
+}
+
+impl BasicOptFlags {
+    /// A.1: nothing enabled, library exp.
+    pub fn none() -> Self {
+        Self { branch_free: false, flat_layout: false, cache_two_smul: false, exp: ExpMode::Exact }
+    }
+
+    /// A.2: everything enabled, fast exp.
+    pub fn all() -> Self {
+        Self { branch_free: true, flat_layout: true, cache_two_smul: true, exp: ExpMode::Fast }
+    }
+
+    pub fn label(&self) -> String {
+        if !self.branch_free && !self.flat_layout && !self.cache_two_smul && self.exp == ExpMode::Exact {
+            return "A.1 (none)".to_string();
+        }
+        if self.branch_free && self.flat_layout && self.cache_two_smul && self.exp == ExpMode::Fast {
+            return "A.2 (all)".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.branch_free {
+            parts.push("branchfree");
+        }
+        if self.flat_layout {
+            parts.push("flat");
+        }
+        if self.cache_two_smul {
+            parts.push("cache");
+        }
+        match self.exp {
+            ExpMode::Fast => parts.push("fastexp"),
+            ExpMode::Accurate => parts.push("accexp"),
+            ExpMode::Exact => {}
+        }
+        format!("+{}", parts.join("+"))
+    }
+}
+
+/// A.1-to-A.2 sweeper with individually toggleable optimizations.
+pub struct BasicOptAblation {
+    model: QmcModel,
+    flags: BasicOptFlags,
+    orig: OriginalLayout,
+    csr: CsrLayout,
+    s: Vec<f32>,
+    h_eff_space: Vec<f32>,
+    h_eff_tau: Vec<f32>,
+    rng: Mt19937,
+}
+
+impl BasicOptAblation {
+    pub fn new(model: &QmcModel, s0: &[f32], seed: u32, flags: BasicOptFlags) -> Self {
+        let (h_eff_space, h_eff_tau) = model.effective_fields(s0);
+        Self {
+            model: model.clone(),
+            flags,
+            orig: OriginalLayout::build(model),
+            csr: CsrLayout::build(model),
+            s: s0.to_vec(),
+            h_eff_space,
+            h_eff_tau,
+            rng: Mt19937::new(seed),
+        }
+    }
+
+    #[inline]
+    fn update_original_branchy(&mut self, curr_spin: usize, s_mul: f32) {
+        // Figure 2, verbatim (including the in-loop 2*S_mul*J).
+        let incident = &self.orig.incident_edges[curr_spin];
+        for edge_index in 0..incident.len() {
+            let curr_edge = incident[edge_index] as usize;
+            let ge = &self.orig.graph_edges[curr_edge];
+            let curr_nbr;
+            if ge[0] == curr_spin as u32 {
+                curr_nbr = ge[1] as usize;
+            } else {
+                curr_nbr = ge[0] as usize;
+            }
+            if self.orig.is_a_tau_edge[curr_edge] {
+                self.h_eff_tau[curr_nbr] -= 2.0 * s_mul * self.orig.j[curr_edge];
+            } else {
+                self.h_eff_space[curr_nbr] -= 2.0 * s_mul * self.orig.j[curr_edge];
+            }
+        }
+    }
+
+    #[inline]
+    fn update_original_branchfree(&mut self, curr_spin: usize, s_mul: f32, cache: bool) {
+        // Figure 3: endpoint select by boolean index, tau/space select by
+        // conditional pointer — still the nested Figure-4 structures.
+        let two_s_mul = 2.0 * s_mul;
+        let incident = &self.orig.incident_edges[curr_spin];
+        for &e in incident.iter() {
+            let curr_edge = e as usize;
+            let ge = &self.orig.graph_edges[curr_edge];
+            let curr_nbr = ge[(ge[0] == curr_spin as u32) as usize] as usize;
+            let h_eff = if self.orig.is_a_tau_edge[curr_edge] {
+                &mut self.h_eff_tau
+            } else {
+                &mut self.h_eff_space
+            };
+            if cache {
+                h_eff[curr_nbr] -= two_s_mul * self.orig.j[curr_edge];
+            } else {
+                h_eff[curr_nbr] -= 2.0 * s_mul * self.orig.j[curr_edge];
+            }
+        }
+    }
+
+    #[inline]
+    fn update_flat(&mut self, i: usize, s_mul: f32, cache: bool) {
+        // Figure 6: flat slice, space edges then exactly two tau edges.
+        let (lo, hi) = (self.csr.offsets[i] as usize, self.csr.offsets[i + 1] as usize);
+        let k = hi - lo;
+        let two_s_mul = 2.0 * s_mul;
+        for e in lo..hi - 2 {
+            let t = self.csr.edge_target[e] as usize;
+            if cache {
+                self.h_eff_space[t] -= two_s_mul * self.csr.edge_j[e];
+            } else {
+                self.h_eff_space[t] -= 2.0 * s_mul * self.csr.edge_j[e];
+            }
+        }
+        let _ = k;
+        let (t1, t2) = (self.csr.edge_target[hi - 2] as usize, self.csr.edge_target[hi - 1] as usize);
+        if cache {
+            self.h_eff_tau[t1] -= two_s_mul * self.csr.edge_j[hi - 2];
+            self.h_eff_tau[t2] -= two_s_mul * self.csr.edge_j[hi - 1];
+        } else {
+            self.h_eff_tau[t1] -= 2.0 * s_mul * self.csr.edge_j[hi - 2];
+            self.h_eff_tau[t2] -= 2.0 * s_mul * self.csr.edge_j[hi - 1];
+        }
+    }
+
+    fn sweep_once(&mut self, beta: f32, stats: &mut SweepStats) {
+        let n_spins = self.s.len();
+        for i in 0..n_spins {
+            let u = self.rng.next_f32();
+            let de = 2.0 * self.s[i] * (self.h_eff_space[i] + self.h_eff_tau[i]);
+            let p = self.flags.exp.eval(-beta * de);
+            stats.attempts += 1;
+            stats.groups += 1;
+            if u < p {
+                stats.flips += 1;
+                stats.groups_with_flip += 1;
+                let s_mul = self.s[i];
+                self.s[i] = -s_mul;
+                match (self.flags.flat_layout, self.flags.branch_free) {
+                    (true, _) => self.update_flat(i, s_mul, self.flags.cache_two_smul),
+                    (false, true) => {
+                        self.update_original_branchfree(i, s_mul, self.flags.cache_two_smul)
+                    }
+                    (false, false) => self.update_original_branchy(i, s_mul),
+                }
+            }
+        }
+    }
+}
+
+impl Sweeper for BasicOptAblation {
+    fn kind(&self) -> SweepKind {
+        // Ablations report as A.2 (they live between A.1 and A.2).
+        SweepKind::A2Basic
+    }
+
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
+        let mut stats = SweepStats::default();
+        for _ in 0..n_sweeps {
+            self.sweep_once(beta, &mut stats);
+        }
+        stats
+    }
+
+    fn energy(&mut self) -> f64 {
+        self.model.total_energy(&self.s)
+    }
+
+    fn state(&mut self) -> Vec<f32> {
+        self.s.clone()
+    }
+
+    fn set_state(&mut self, s: &[f32]) {
+        self.s.copy_from_slice(s);
+        let (hs, ht) = self.model.effective_fields(s);
+        self.h_eff_space = hs;
+        self.h_eff_tau = ht;
+    }
+
+    fn validate(&mut self) -> f64 {
+        let (hs, ht) = self.model.effective_fields(&self.s);
+        let mut worst = 0.0f64;
+        for i in 0..self.s.len() {
+            worst = worst
+                .max((hs[i] - self.h_eff_space[i]).abs() as f64)
+                .max((ht[i] - self.h_eff_tau[i]).abs() as f64);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+
+    /// Every flag combination computes the exact same trajectory — the
+    /// optimizations are purely mechanical.
+    #[test]
+    fn all_ablations_are_trajectory_identical() {
+        let wl = torus_workload(6, 4, 8, 9, 0.3);
+        let combos: Vec<BasicOptFlags> = (0..8)
+            .map(|bits| BasicOptFlags {
+                branch_free: bits & 1 != 0,
+                flat_layout: bits & 2 != 0,
+                cache_two_smul: bits & 4 != 0,
+                exp: ExpMode::Fast,
+            })
+            .collect();
+        let mut reference: Option<Vec<f32>> = None;
+        for flags in combos {
+            let mut sw = BasicOptAblation::new(&wl.model, &wl.s0, 31, flags);
+            sw.run(15, 0.7);
+            let state = sw.state();
+            assert!(sw.validate() < 1e-3, "{}", flags.label());
+            match &reference {
+                None => reference = Some(state),
+                Some(r) => assert_eq!(&state, r, "{} diverged", flags.label()),
+            }
+        }
+    }
+
+    #[test]
+    fn none_matches_a1_and_all_matches_a2() {
+        use crate::sweep::{make_sweeper_with_exp, SweepKind};
+        let wl = torus_workload(4, 4, 8, 2, 0.3);
+        let mut none = BasicOptAblation::new(&wl.model, &wl.s0, 5, BasicOptFlags::none());
+        let mut a1 = make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 5, ExpMode::Exact);
+        none.run(10, 0.8);
+        a1.run(10, 0.8);
+        assert_eq!(none.state(), a1.state());
+
+        let mut all = BasicOptAblation::new(&wl.model, &wl.s0, 5, BasicOptFlags::all());
+        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 5, ExpMode::Fast);
+        all.run(10, 0.8);
+        a2.run(10, 0.8);
+        assert_eq!(all.state(), a2.state());
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert_eq!(BasicOptFlags::none().label(), "A.1 (none)");
+        assert_eq!(BasicOptFlags::all().label(), "A.2 (all)");
+        let one = BasicOptFlags { branch_free: true, ..BasicOptFlags::none() };
+        assert_eq!(one.label(), "+branchfree");
+    }
+}

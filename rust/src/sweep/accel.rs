@@ -1,0 +1,352 @@
+//! B.1 / B.2 — the accelerator rungs: AOT-compiled XLA artifacts executed
+//! through PJRT (the reproduction's stand-in for the paper's CUDA
+//! implementations; see DESIGN.md §2.1).
+//!
+//! Both variants run the same algorithm with the same interlaced MT19937
+//! stream; they differ *only* in memory layout — B.1 keeps the original
+//! layer-major flat order and reaches every neighbour through an index
+//! table (irregular gathers), B.2 stores the state interlaced
+//! (vertex-major, layer = lane) so every access is a contiguous vector op.
+//! This mirrors the paper's §3.2: "this reorganization of memory was the
+//! only difference between the two GPU versions".
+
+use std::path::Path;
+
+use crate::ising::builder::Workload;
+use crate::ising::QmcModel;
+use crate::rng::Mt19937Wide;
+use crate::runtime::executor::Input;
+use crate::runtime::{Executor, Runtime, StaticCfg};
+use crate::Result;
+
+use super::{SweepKind, SweepStats, Sweeper};
+
+/// Which artifact variant a sweeper runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum AccelVariant {
+    B1Naive,
+    B2Coalesced,
+}
+
+impl AccelVariant {
+    pub fn artifact_prefix(self) -> &'static str {
+        match self {
+            AccelVariant::B1Naive => "b1_naive",
+            AccelVariant::B2Coalesced => "b2_coalesced",
+        }
+    }
+
+    pub fn kind(self) -> SweepKind {
+        match self {
+            AccelVariant::B1Naive => SweepKind::B1Accel,
+            AccelVariant::B2Coalesced => SweepKind::B2Accel,
+        }
+    }
+}
+
+pub struct AccelSweeper {
+    variant: AccelVariant,
+    exec: Executor,
+    cfg: StaticCfg,
+    model: QmcModel,
+    /// State in the artifact's own layout (see `to_artifact_layout`).
+    s: Vec<f32>,
+    mt: Vec<u32>,
+    buf: Vec<u32>,
+    cur: i32,
+    /// Constant inputs (layout depends on variant).
+    consts: ConstInputs,
+    /// Energy reported by the last execute (artifact-side f32), used by
+    /// `validate` against the host-side recomputation.
+    last_artifact_energy: Option<f64>,
+}
+
+enum ConstInputs {
+    B2 { h: Vec<f32>, nbr_idx: Vec<i32>, nbr_j: Vec<f32>, masks: Vec<f32>, jtau: f32 },
+    B1 { h_flat: Vec<f32>, fnbr_idx: Vec<i32>, fnbr_j: Vec<f32>, masks: Vec<f32> },
+}
+
+impl AccelSweeper {
+    /// Load the artifact matching `variant` + `config` from `dir`,
+    /// validate it against the workload's geometry, and initialise state.
+    pub fn new(
+        rt: &Runtime,
+        dir: &Path,
+        config: &str,
+        variant: AccelVariant,
+        wl: &Workload,
+        seed: u32,
+    ) -> Result<Self> {
+        let name = format!("{}_{}", variant.artifact_prefix(), config);
+        let exec = rt.load_artifact(dir, &name)?;
+        let cfg = exec.meta.static_cfg.clone();
+        let m = &wl.model;
+        if cfg.n_base != m.base.n || cfg.n_layers != m.n_layers {
+            anyhow::bail!(
+                "artifact {name} is {}x{} but workload is {}x{}",
+                cfg.n_base, cfg.n_layers, m.base.n, m.n_layers
+            );
+        }
+        if m.base.max_degree() > cfg.max_degree {
+            anyhow::bail!("workload degree {} exceeds artifact K={}", m.base.max_degree(), cfg.max_degree);
+        }
+        if wl.n_colors > cfg.n_colors {
+            anyhow::bail!("workload needs {} colours, artifact bakes {}", wl.n_colors, cfg.n_colors);
+        }
+
+        let consts = match variant {
+            AccelVariant::B2Coalesced => build_b2_consts(wl, &cfg),
+            AccelVariant::B1Naive => build_b1_consts(wl, &cfg),
+        };
+
+        // Interlaced MT19937, one lane per layer, seeds seed..seed+L-1 —
+        // identical to the python side's `workload.fresh_rng`.
+        let seeds: Vec<u32> = (0..cfg.n_layers as u32).map(|j| seed.wrapping_add(j)).collect();
+        let wide = Mt19937Wide::new(&seeds);
+        let mt = wide.state_rows().to_vec();
+        let buf = vec![0u32; mt.len()];
+
+        let mut sw = Self {
+            variant,
+            exec,
+            cfg,
+            model: m.clone(),
+            s: Vec::new(),
+            mt,
+            buf,
+            cur: 624, // cursor == N_STATE forces a refill on the first draw
+            consts,
+            last_artifact_energy: None,
+        };
+        sw.set_state(&wl.s0);
+        Ok(sw)
+    }
+
+    fn to_artifact_layout(&self, s_orig: &[f32]) -> Vec<f32> {
+        let (n, l) = (self.cfg.n_base, self.cfg.n_layers);
+        match self.variant {
+            // (N, L): s[v*L + l] = s_orig[l*n + v]
+            AccelVariant::B2Coalesced => {
+                let mut out = vec![0.0f32; n * l];
+                for layer in 0..l {
+                    for v in 0..n {
+                        out[v * l + layer] = s_orig[layer * n + v];
+                    }
+                }
+                out
+            }
+            AccelVariant::B1Naive => s_orig.to_vec(),
+        }
+    }
+
+    fn to_original_layout(&self, s_art: &[f32]) -> Vec<f32> {
+        let (n, l) = (self.cfg.n_base, self.cfg.n_layers);
+        match self.variant {
+            AccelVariant::B2Coalesced => {
+                let mut out = vec![0.0f32; n * l];
+                for layer in 0..l {
+                    for v in 0..n {
+                        out[layer * n + v] = s_art[v * l + layer];
+                    }
+                }
+                out
+            }
+            AccelVariant::B1Naive => s_art.to_vec(),
+        }
+    }
+
+    /// One execute() — `sweeps_per_call` Metropolis sweeps on-device.
+    fn call(&mut self, beta: f32) -> Result<f64> {
+        let cur_arr = [self.cur];
+        let beta_arr = [beta];
+        let outs = match &self.consts {
+            ConstInputs::B2 { h, nbr_idx, nbr_j, masks, jtau } => {
+                let jtau_arr = [*jtau];
+                self.exec.execute(&[
+                    Input::F32(&self.s),
+                    Input::U32(&self.mt),
+                    Input::U32(&self.buf),
+                    Input::I32(&cur_arr),
+                    Input::F32(h),
+                    Input::I32(nbr_idx),
+                    Input::F32(nbr_j),
+                    Input::F32(masks),
+                    Input::F32(&beta_arr),
+                    Input::F32(&jtau_arr),
+                ])?
+            }
+            ConstInputs::B1 { h_flat, fnbr_idx, fnbr_j, masks } => self.exec.execute(&[
+                Input::F32(&self.s),
+                Input::U32(&self.mt),
+                Input::U32(&self.buf),
+                Input::I32(&cur_arr),
+                Input::F32(h_flat),
+                Input::I32(fnbr_idx),
+                Input::F32(fnbr_j),
+                Input::F32(masks),
+                Input::F32(&beta_arr),
+            ])?,
+        };
+        self.s = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("fetch s: {e}"))?;
+        self.mt = outs[1].to_vec::<u32>().map_err(|e| anyhow::anyhow!("fetch mt: {e}"))?;
+        self.buf = outs[2].to_vec::<u32>().map_err(|e| anyhow::anyhow!("fetch buf: {e}"))?;
+        self.cur = outs[3].to_vec::<i32>().map_err(|e| anyhow::anyhow!("fetch cur: {e}"))?[0];
+        let flips = outs[4].to_vec::<f32>().map_err(|e| anyhow::anyhow!("fetch flips: {e}"))?[0];
+        let energy = outs[5].to_vec::<f32>().map_err(|e| anyhow::anyhow!("fetch energy: {e}"))?[0];
+        self.last_artifact_energy = Some(energy as f64);
+        Ok(flips as f64)
+    }
+
+    /// Energy as computed on-device by the last call (f32 precision).
+    pub fn artifact_energy(&self) -> Option<f64> {
+        self.last_artifact_energy
+    }
+
+    /// Debug: checksums of every input buffer (cross-language comparison).
+    pub fn debug_input_checksums(&self) -> String {
+        let fsum = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>();
+        let isum = |v: &[i32]| v.iter().map(|&x| x as i64).sum::<i64>();
+        let usum = |v: &[u32]| v.iter().map(|&x| x as u64).sum::<u64>();
+        let mut out = format!(
+            "s.sum={} s[..4]={:?} mt.sum={} mt[..4]={:?} cur={}",
+            fsum(&self.s),
+            &self.s[..4],
+            usum(&self.mt),
+            &self.mt[..4],
+            self.cur
+        );
+        match &self.consts {
+            ConstInputs::B2 { h, nbr_idx, nbr_j, masks, jtau } => {
+                out += &format!(
+                    " | B2 h.sum={} nbr_idx.sum={} nbr_idx[..8]={:?} nbr_j.sum={} masks.sum={} jtau={}",
+                    fsum(h), isum(nbr_idx), &nbr_idx[..8], fsum(nbr_j), fsum(masks), jtau
+                );
+            }
+            ConstInputs::B1 { h_flat, fnbr_idx, fnbr_j, masks } => {
+                out += &format!(
+                    " | B1 h.sum={} fnbr_idx.sum={} fnbr_j.sum={} masks.sum={}",
+                    fsum(h_flat), isum(fnbr_idx), fsum(fnbr_j), fsum(masks)
+                );
+            }
+        }
+        out
+    }
+}
+
+fn build_b2_consts(wl: &Workload, cfg: &StaticCfg) -> ConstInputs {
+    let m = &wl.model;
+    let (n, k, c) = (cfg.n_base, cfg.max_degree, cfg.n_colors);
+    let adj = m.base.adjacency();
+    let mut nbr_idx = vec![0i32; n * k];
+    let mut nbr_j = vec![0.0f32; n * k];
+    for v in 0..n {
+        for (slot, &(u, j)) in adj[v].iter().enumerate() {
+            nbr_idx[v * k + slot] = u as i32;
+            nbr_j[v * k + slot] = j;
+        }
+        // padding stays (idx 0, J 0.0): contributes 0 to the field sum
+    }
+    // Per-phase sublattice masks (2C, N, L), phase = parity*C + colour.
+    // Runtime inputs rather than in-graph constants — mirrors the paper's
+    // ahead-of-time reordering, and works around an xla_extension 0.5.1
+    // miscompile of the constant-folded broadcast (see model.py docstring).
+    let l = cfg.n_layers;
+    let phases = cfg.phases_per_sweep();
+    let mut masks = vec![0.0f32; phases * n * l];
+    for layer in 0..l {
+        for v in 0..n {
+            let ph = (layer % 2) * c + wl.colors[v] as usize;
+            masks[(ph * n + v) * l + layer] = 1.0;
+        }
+    }
+    ConstInputs::B2 { h: m.base.h.clone(), nbr_idx, nbr_j, masks, jtau: m.jtau }
+}
+
+fn build_b1_consts(wl: &Workload, cfg: &StaticCfg) -> ConstInputs {
+    let m = &wl.model;
+    let (n, l, k) = (cfg.n_base, cfg.n_layers, cfg.max_degree);
+    let kk = k + 2;
+    let total = n * l;
+    let adj = m.base.adjacency();
+    let mut h_flat = vec![0.0f32; total];
+    let mut fnbr_idx = vec![0i32; total * kk];
+    let mut fnbr_j = vec![0.0f32; total * kk];
+    for layer in 0..l {
+        for v in 0..n {
+            let f = layer * n + v;
+            h_flat[f] = m.base.h[v];
+            for (slot, &(u, j)) in adj[v].iter().enumerate() {
+                fnbr_idx[f * kk + slot] = (layer * n + u as usize) as i32;
+                fnbr_j[f * kk + slot] = j;
+            }
+            // the two tau edges, last (paper §2.2)
+            fnbr_idx[f * kk + kk - 2] = (((layer + l - 1) % l) * n + v) as i32;
+            fnbr_idx[f * kk + kk - 1] = (((layer + 1) % l) * n + v) as i32;
+            fnbr_j[f * kk + kk - 2] = m.jtau;
+            fnbr_j[f * kk + kk - 1] = m.jtau;
+        }
+    }
+    let phases = cfg.phases_per_sweep();
+    let mut masks = vec![0.0f32; phases * total];
+    for layer in 0..l {
+        for v in 0..n {
+            let ph = (layer % 2) * cfg.n_colors + wl.colors[v] as usize;
+            masks[ph * total + layer * n + v] = 1.0;
+        }
+    }
+    ConstInputs::B1 { h_flat, fnbr_idx, fnbr_j, masks }
+}
+
+impl Sweeper for AccelSweeper {
+    fn kind(&self) -> SweepKind {
+        self.variant.kind()
+    }
+
+    fn granularity(&self) -> usize {
+        self.cfg.sweeps_per_call
+    }
+
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
+        assert!(
+            n_sweeps % self.cfg.sweeps_per_call == 0,
+            "n_sweeps={} must be a multiple of sweeps_per_call={}",
+            n_sweeps,
+            self.cfg.sweeps_per_call
+        );
+        let mut stats = SweepStats::default();
+        let calls = n_sweeps / self.cfg.sweeps_per_call;
+        for _ in 0..calls {
+            let flips = self.call(beta).expect("artifact execution failed");
+            stats.flips += flips as u64;
+            stats.attempts += (self.cfg.n_spins() * self.cfg.sweeps_per_call) as u64;
+            // Group (warp-width) wait statistics are analytic for the
+            // accelerator (Fig 14): groups stay 0 and the harness derives
+            // P(wait) = 1 - (1-p)^W from the flip probability.
+        }
+        stats
+    }
+
+    fn energy(&mut self) -> f64 {
+        let orig = self.to_original_layout(&self.s);
+        self.model.total_energy(&orig)
+    }
+
+    fn state(&mut self) -> Vec<f32> {
+        self.to_original_layout(&self.s)
+    }
+
+    fn set_state(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cfg.n_spins());
+        self.s = self.to_artifact_layout(s);
+        self.last_artifact_energy = None;
+    }
+
+    /// For the accelerator, `validate` compares the artifact's on-device
+    /// energy against the host recomputation (f32 tolerance).
+    fn validate(&mut self) -> f64 {
+        match self.last_artifact_energy {
+            Some(e) => (e - self.energy()).abs(),
+            None => 0.0,
+        }
+    }
+}

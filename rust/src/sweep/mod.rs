@@ -1,0 +1,223 @@
+//! The Metropolis sweep optimization ladder — the paper's Table 1.
+//!
+//! Every rung implements [`Sweeper`] over the same [`QmcModel`], so the
+//! benchmark harness can time them interchangeably and the tests can
+//! check trajectory/statistical equivalence:
+//!
+//! | Rung | Module | Paper ingredients |
+//! |------|--------|-------------------|
+//! | A.1  | [`a1_original`] | Fig-2 branchy loop, Fig-4 nested tables, library `exp` |
+//! | A.2  | [`a2_basic`]    | Fig-3/6 branch-free flat loop, tau-last edges, result caching, fast `exp` (§2) |
+//! | A.3  | [`a3_vecrng`]   | + SSE-interlaced MT19937 and vector flip decisions (§3) |
+//! | A.4  | [`a4_full`]     | + vectorized neighbour updates via 4-way layer interlacing (§3.1) |
+//! | B.1  | [`accel`]       | accelerator, naive gathered layout |
+//! | B.2  | [`accel`]       | accelerator, coalesced interlaced layout (§3.2) |
+//!
+//! The a/b compiler-optimization split of the paper (A.1a vs A.1b etc.) is
+//! not a code difference — the harness measures the same rungs from a
+//! binary built with `--profile opt0`.
+
+pub mod a1_original;
+pub mod ablation;
+pub mod a2_basic;
+pub mod a3_vecrng;
+pub mod a4_full;
+pub mod accel;
+pub mod interlaced;
+
+use crate::ising::QmcModel;
+
+/// Which exponential the flip probability uses.  The paper's defaults:
+/// A.1 the library `exp`; A.2–A.4 and B.x the fast approximation ("this
+/// faster approximation was used in the performance tests for all
+/// implementations with these basic optimizations").  Tests override the
+/// mode to get bit-identical trajectories across rungs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ExpMode {
+    Exact,
+    Fast,
+    Accurate,
+}
+
+impl ExpMode {
+    /// Scalar flip probability for `x = -beta * dE`.
+    #[inline(always)]
+    pub fn eval(self, x: f32) -> f32 {
+        match self {
+            ExpMode::Exact => x.exp(),
+            ExpMode::Fast => crate::expapprox::exp_fast(x.max(-80.0)),
+            ExpMode::Accurate => crate::expapprox::exp_accurate(x),
+        }
+    }
+}
+
+/// The implementation rungs of the paper's Table 1.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SweepKind {
+    /// A.1 — original scalar implementation.
+    A1Original,
+    /// A.2 — basic optimizations (§2).
+    A2Basic,
+    /// A.3 — vectorized MT19937 + flip decisions (§3).
+    A3VecRng,
+    /// A.4 — fully vectorized, incl. neighbour updates (§3.1).
+    A4Full,
+    /// B.1 — accelerator, naive layout.
+    B1Accel,
+    /// B.2 — accelerator, coalesced layout (§3.2).
+    B2Accel,
+}
+
+impl std::str::FromStr for SweepKind {
+    type Err = crate::Error;
+
+    /// Parse CLI spellings: `a1-original`/`a1`/`A.1`, …
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "a1-original" | "a1" | "a.1" => Ok(SweepKind::A1Original),
+            "a2-basic" | "a2" | "a.2" => Ok(SweepKind::A2Basic),
+            "a3-vec-rng" | "a3-vecrng" | "a3" | "a.3" => Ok(SweepKind::A3VecRng),
+            "a4-full" | "a4" | "a.4" => Ok(SweepKind::A4Full),
+            "b1-accel" | "b1" | "b.1" => Ok(SweepKind::B1Accel),
+            "b2-accel" | "b2" | "b.2" => Ok(SweepKind::B2Accel),
+            other => anyhow::bail!(
+                "unknown rung {other:?} (expected a1-original, a2-basic, a3-vec-rng, a4-full, b1-accel, b2-accel)"
+            ),
+        }
+    }
+}
+
+impl SweepKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SweepKind::A1Original => "A.1",
+            SweepKind::A2Basic => "A.2",
+            SweepKind::A3VecRng => "A.3",
+            SweepKind::A4Full => "A.4",
+            SweepKind::B1Accel => "B.1",
+            SweepKind::B2Accel => "B.2",
+        }
+    }
+
+    /// Paper-default exponential mode of this rung.
+    pub fn default_exp(self) -> ExpMode {
+        match self {
+            SweepKind::A1Original => ExpMode::Exact,
+            _ => ExpMode::Fast,
+        }
+    }
+
+    /// Width of the group that must be decided together — 1 for scalar
+    /// rungs, 4 for the SSE rungs, the interlace width for the
+    /// accelerator (Fig 14's "1 spin out of W flips" analysis).
+    pub fn group_width(self) -> usize {
+        match self {
+            SweepKind::A1Original | SweepKind::A2Basic => 1,
+            SweepKind::A3VecRng | SweepKind::A4Full => 4,
+            SweepKind::B1Accel | SweepKind::B2Accel => 32,
+        }
+    }
+
+    pub fn all_cpu() -> [SweepKind; 4] {
+        [SweepKind::A1Original, SweepKind::A2Basic, SweepKind::A3VecRng, SweepKind::A4Full]
+    }
+}
+
+/// Counters accumulated over [`Sweeper::run`] calls.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct SweepStats {
+    /// Flip attempts (= spins visited).
+    pub attempts: u64,
+    /// Accepted flips.
+    pub flips: u64,
+    /// Decision groups processed (quadruplets for the SSE rungs).
+    pub groups: u64,
+    /// Groups in which at least one spin flipped — the paper's Fig-14
+    /// "must wait for a flip" event.
+    pub groups_with_flip: u64,
+}
+
+impl SweepStats {
+    pub fn merge(&mut self, o: &SweepStats) {
+        self.attempts += o.attempts;
+        self.flips += o.flips;
+        self.groups += o.groups;
+        self.groups_with_flip += o.groups_with_flip;
+    }
+
+    /// Observed per-spin flip probability.
+    pub fn flip_prob(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else {
+            self.flips as f64 / self.attempts as f64
+        }
+    }
+
+    /// Observed probability that a decision group contains a flip.
+    pub fn wait_prob(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.groups_with_flip as f64 / self.groups as f64
+        }
+    }
+}
+
+/// A Metropolis sweep engine over one QMC Ising model.
+pub trait Sweeper {
+    fn kind(&self) -> SweepKind;
+
+    /// Smallest number of sweeps a single `run` call can execute (1 for
+    /// CPU rungs; `sweeps_per_call` for accelerator artifacts).
+    fn granularity(&self) -> usize {
+        1
+    }
+
+    /// Execute `n_sweeps` Metropolis sweeps at inverse temperature `beta`;
+    /// `n_sweeps` must be a multiple of [`Self::granularity`].
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats;
+
+    /// Current total energy.
+    fn energy(&mut self) -> f64;
+
+    /// Current state in original (layer-major) order.
+    fn state(&mut self) -> Vec<f32>;
+
+    /// Replace the state (original order) — used by parallel tempering
+    /// swaps and by the equivalence tests.
+    fn set_state(&mut self, s: &[f32]);
+
+    /// Maximum absolute inconsistency between the incrementally-maintained
+    /// effective fields and a from-scratch recomputation (0 when exact).
+    fn validate(&mut self) -> f64;
+}
+
+/// Construct a sweeper with the rung's paper-default exponential mode.
+///
+/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  For the
+/// accelerator rungs use [`accel::AccelSweeper::new`] directly (they need
+/// a [`crate::runtime::Runtime`] and artifacts on disk).
+pub fn make_sweeper(kind: SweepKind, model: &QmcModel, s0: &[f32], seed: u32) -> Box<dyn Sweeper + Send> {
+    make_sweeper_with_exp(kind, model, s0, seed, kind.default_exp())
+}
+
+/// [`make_sweeper`] with an explicit exponential mode (tests use this to
+/// align trajectories across rungs).
+pub fn make_sweeper_with_exp(
+    kind: SweepKind,
+    model: &QmcModel,
+    s0: &[f32],
+    seed: u32,
+    exp: ExpMode,
+) -> Box<dyn Sweeper + Send> {
+    match kind {
+        SweepKind::A1Original => Box::new(a1_original::A1Original::new(model, s0, seed, exp)),
+        SweepKind::A2Basic => Box::new(a2_basic::A2Basic::new(model, s0, seed, exp)),
+        SweepKind::A3VecRng => Box::new(a3_vecrng::A3VecRng::new(model, s0, seed, exp)),
+        SweepKind::A4Full => Box::new(a4_full::A4Full::new(model, s0, seed, exp)),
+        SweepKind::B1Accel | SweepKind::B2Accel => {
+            panic!("accelerator rungs need a Runtime; use accel::AccelSweeper::new")
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Inverse-temperature ladders.
+//!
+//! The paper's Fig-14 x-axis is "Ising model index" over the 115-replica
+//! ladder, ordered cold (index 0, rarely flips) to hot (index 114, flips
+//! often).  A geometric β ladder reproduces that qualitative shape; the
+//! robust-selection scheme of the authors' companion paper [17] is
+//! approximated by the constant-overlap geometric spacing.
+
+/// An ordered set of inverse temperatures, coldest (largest β) first.
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    betas: Vec<f32>,
+}
+
+impl Ladder {
+    /// Geometric ladder of `n` betas from `beta_cold` down to `beta_hot`
+    /// (n = 1 degenerates to a single rung at `beta_cold`).
+    pub fn geometric(beta_cold: f32, beta_hot: f32, n: usize) -> Self {
+        assert!(n >= 1, "a ladder needs at least 1 rung");
+        if n == 1 {
+            return Self { betas: vec![beta_cold] };
+        }
+        assert!(beta_cold > beta_hot && beta_hot > 0.0, "need beta_cold > beta_hot > 0");
+        let ratio = (beta_hot as f64 / beta_cold as f64).powf(1.0 / (n - 1) as f64);
+        let betas = (0..n).map(|i| (beta_cold as f64 * ratio.powi(i as i32)) as f32).collect();
+        Self { betas }
+    }
+
+    /// The paper's §4 configuration: 115 replicas.  β range chosen so the
+    /// flip probability spans ~2%…45% on the synthetic workload, matching
+    /// the qualitative range of Fig 14 (ladder mean P(flip) ≈ 0.286).
+    pub fn paper_default() -> Self {
+        Self::geometric(3.0, 0.5, 115)
+    }
+
+    pub fn len(&self) -> usize {
+        self.betas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.betas.is_empty()
+    }
+
+    pub fn beta(&self, i: usize) -> f32 {
+        self.betas[i]
+    }
+
+    pub fn betas(&self) -> &[f32] {
+        &self.betas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_endpoints_and_monotonicity() {
+        let l = Ladder::geometric(4.0, 0.1, 16);
+        assert_eq!(l.len(), 16);
+        assert!((l.beta(0) - 4.0).abs() < 1e-6);
+        assert!((l.beta(15) - 0.1).abs() < 1e-5);
+        for i in 1..16 {
+            assert!(l.beta(i) < l.beta(i - 1), "monotone decreasing");
+        }
+    }
+
+    #[test]
+    fn geometric_constant_ratio() {
+        let l = Ladder::geometric(2.0, 0.5, 8);
+        let r0 = l.beta(1) / l.beta(0);
+        for i in 2..8 {
+            let r = l.beta(i) / l.beta(i - 1);
+            assert!((r - r0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn paper_default_has_115_rungs() {
+        assert_eq!(Ladder::paper_default().len(), 115);
+    }
+
+    #[test]
+    #[should_panic(expected = "beta_cold > beta_hot")]
+    fn rejects_inverted_range() {
+        Ladder::geometric(0.1, 4.0, 8);
+    }
+}

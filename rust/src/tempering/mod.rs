@@ -1,0 +1,15 @@
+//! Parallel tempering (replica exchange) — the simulation context the
+//! paper's workload runs in ("the optimized implementations were
+//! developed in a Quantum Monte Carlo simulation context and use Parallel
+//! Tempering", §1; the 115 Ising models of §4 are one tempering ladder,
+//! Fig 14: "models with lower indices ... represent lower effective
+//! temperatures").
+//!
+//! * [`ladder`] — inverse-temperature ladders (geometric by default);
+//! * [`pt`]     — the replica-exchange engine over any [`crate::sweep::Sweeper`].
+
+pub mod ladder;
+pub mod pt;
+
+pub use ladder::Ladder;
+pub use pt::{LocalPtEnsemble, PtEnsemble, PtEnsembleImpl, ReplicaReport};

@@ -1,0 +1,209 @@
+//! The replica-exchange engine.
+//!
+//! An ensemble holds one [`Sweeper`] per ladder rung.  A *round* runs a
+//! batch of Metropolis sweeps on every replica at its current β, then
+//! attempts exchanges between adjacent rungs (even pairs and odd pairs on
+//! alternating rounds) with the standard acceptance probability
+//! `min(1, exp(Δβ · ΔE))`.  Exchanges swap *states* between the rungs
+//! ("the Parallel Tempering must be able to swap out the states of these
+//! systems independently", §3.1), so each rung's β is fixed and the
+//! per-rung flip statistics feed Fig 14 directly.
+
+use crate::rng::Mt19937;
+use crate::sweep::{SweepStats, Sweeper};
+
+use super::ladder::Ladder;
+
+/// Ensemble of `Send` sweepers (the CPU rungs).
+pub type PtEnsemble = PtEnsembleImpl<dyn Sweeper + Send>;
+/// Ensemble of thread-local sweepers (the accelerator rungs).
+pub type LocalPtEnsemble = PtEnsembleImpl<dyn Sweeper>;
+
+/// Per-rung outcome summary.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub beta: f32,
+    pub stats: SweepStats,
+    pub energy: f64,
+}
+
+/// A parallel-tempering ensemble over boxed sweepers, generic over the
+/// trait-object flavour: [`PtEnsemble`] (Send sweepers — CPU rungs, can be
+/// swept by the multi-threaded scheduler) or [`LocalPtEnsemble`]
+/// (accelerator rungs: PJRT handles are not `Send`, one device thread).
+pub struct PtEnsembleImpl<S: ?Sized> {
+    ladder: Ladder,
+    replicas: Vec<Box<S>>,
+    stats: Vec<SweepStats>,
+    swap_rng: Mt19937,
+    round: u64,
+    swaps_attempted: u64,
+    swaps_accepted: u64,
+}
+
+impl<S: Sweeper + ?Sized> PtEnsembleImpl<S> {
+    /// `replicas[i]` runs at `ladder.beta(i)`.
+    pub fn new(ladder: Ladder, replicas: Vec<Box<S>>, swap_seed: u32) -> Self {
+        assert_eq!(ladder.len(), replicas.len(), "one replica per rung");
+        let n = replicas.len();
+        Self {
+            ladder,
+            replicas,
+            stats: vec![SweepStats::default(); n],
+            swap_rng: Mt19937::new(swap_seed),
+            round: 0,
+            swaps_attempted: 0,
+            swaps_accepted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn ladder(&self) -> &Ladder {
+        &self.ladder
+    }
+
+    /// Smallest sweep batch every replica can execute (max of the
+    /// replicas' granularities; 1 for CPU rungs, `sweeps_per_call` for
+    /// accelerator rungs).
+    pub fn granularity(&self) -> usize {
+        self.replicas.iter().map(|r| r.granularity()).max().unwrap_or(1)
+    }
+
+    /// Sweep phase of one round (no exchanges) — exposed separately so a
+    /// multi-threaded coordinator can parallelise it over replicas.
+    pub fn sweep_all(&mut self, n_sweeps: usize) {
+        for i in 0..self.replicas.len() {
+            let beta = self.ladder.beta(i);
+            let s = self.replicas[i].run(n_sweeps, beta);
+            self.stats[i].merge(&s);
+        }
+    }
+
+    /// Exchange phase of one round: alternating even/odd adjacent pairs.
+    pub fn exchange(&mut self) {
+        let start = (self.round % 2) as usize;
+        self.round += 1;
+        for i in (start..self.replicas.len().saturating_sub(1)).step_by(2) {
+            let e_i = self.replicas[i].energy();
+            let e_j = self.replicas[i + 1].energy();
+            let d_beta = (self.ladder.beta(i) - self.ladder.beta(i + 1)) as f64;
+            // Accept with min(1, exp(Δβ · ΔE)); Δβ > 0 (cold minus hot).
+            let log_acc = d_beta * (e_i - e_j);
+            self.swaps_attempted += 1;
+            let u = self.swap_rng.next_f32() as f64;
+            if log_acc >= 0.0 || u < log_acc.exp() {
+                self.swaps_accepted += 1;
+                let s_i = self.replicas[i].state();
+                let s_j = self.replicas[i + 1].state();
+                self.replicas[i].set_state(&s_j);
+                self.replicas[i + 1].set_state(&s_i);
+            }
+        }
+    }
+
+    /// One full round: sweep batch + exchange.
+    pub fn round(&mut self, sweeps_per_round: usize) {
+        self.sweep_all(sweeps_per_round);
+        self.exchange();
+    }
+
+    /// Fraction of attempted exchanges accepted.
+    pub fn swap_acceptance(&self) -> f64 {
+        if self.swaps_attempted == 0 {
+            0.0
+        } else {
+            self.swaps_accepted as f64 / self.swaps_attempted as f64
+        }
+    }
+
+    /// State of replica `i` in original order (tests, checkpointing).
+    pub fn state_of(&mut self, i: usize) -> Vec<f32> {
+        self.replicas[i].state()
+    }
+
+    /// Overwrite replica `i`'s state (checkpoint restore).
+    pub fn set_state_of(&mut self, i: usize, s: &[f32]) {
+        self.replicas[i].set_state(s);
+    }
+
+    /// Per-rung reports (β is the rung's fixed temperature).
+    pub fn reports(&mut self) -> Vec<ReplicaReport> {
+        (0..self.replicas.len())
+            .map(|i| ReplicaReport {
+                beta: self.ladder.beta(i),
+                stats: self.stats[i],
+                energy: self.replicas[i].energy(),
+            })
+            .collect()
+    }
+
+    /// Mutable access for the coordinator's parallel sweep phase.
+    pub(crate) fn split_mut(&mut self) -> (&Ladder, &mut [Box<S>], &mut [SweepStats]) {
+        (&self.ladder, &mut self.replicas, &mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+    use crate::sweep::{make_sweeper, SweepKind};
+
+    fn ensemble(n: usize) -> PtEnsemble {
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let replicas = (0..n)
+            .map(|i| {
+                let wl = torus_workload(4, 4, 8, 7, 0.3);
+                make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 100 + i as u32)
+            })
+            .collect();
+        PtEnsemble::new(ladder, replicas, 999)
+    }
+
+    #[test]
+    fn exchange_preserves_state_multiset() {
+        let mut pt = ensemble(6);
+        pt.sweep_all(5);
+        let mut before: Vec<Vec<u32>> = (0..6)
+            .map(|i| pt.replicas[i].state().iter().map(|&x| x.to_bits()).collect())
+            .collect();
+        pt.exchange();
+        let mut after: Vec<Vec<u32>> = (0..6)
+            .map(|i| pt.replicas[i].state().iter().map(|&x| x.to_bits()).collect())
+            .collect();
+        before.sort();
+        after.sort();
+        assert_eq!(before, after, "exchange must permute states, not mutate them");
+    }
+
+    #[test]
+    fn hot_replicas_flip_more() {
+        let mut pt = ensemble(6);
+        pt.sweep_all(40);
+        let reports = pt.reports();
+        let cold = reports.first().unwrap().stats.flip_prob();
+        let hot = reports.last().unwrap().stats.flip_prob();
+        assert!(hot > cold, "hot {hot} should flip more than cold {cold}");
+    }
+
+    #[test]
+    fn rounds_accumulate_stats_and_swap() {
+        let mut pt = ensemble(8);
+        for _ in 0..10 {
+            pt.round(5);
+        }
+        assert!(pt.swap_acceptance() > 0.0, "dense ladder should accept some swaps");
+        let reports = pt.reports();
+        assert_eq!(reports.len(), 8);
+        for r in &reports {
+            assert_eq!(r.stats.attempts, 10 * 5 * 4 * 4 * 8);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! In-crate utility substrates.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so
+//! the facilities a framework normally pulls from crates.io are built
+//! here from scratch:
+//!
+//! * [`json`] — a minimal, spec-conformant-enough JSON parser/serializer
+//!   (artifact sidecars, cross-profile timing exchange, report output);
+//! * [`cli`]  — a declarative flag parser for the `repro` binary and the
+//!   bench harnesses.
+
+pub mod cli;
+pub mod json;

@@ -1,0 +1,166 @@
+//! Integration tests over the PJRT runtime + accelerator sweeps.
+//!
+//! These need `make artifacts` to have run; if no artifacts are present
+//! the tests report that loudly via panic with a clear message (the
+//! Makefile always builds artifacts before `cargo test`).
+
+use std::path::PathBuf;
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::runtime::{artifact, Runtime};
+use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = artifact::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping accel test: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn default_workload() -> vectorising::ising::builder::Workload {
+    torus_workload(8, 8, 32, 1, 0.3)
+}
+
+#[test]
+fn manifest_lists_both_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = artifact::Manifest::load(&dir).unwrap();
+    assert!(man.get("b1_naive_default").is_ok());
+    assert!(man.get("b2_coalesced_default").is_ok());
+    for a in &man.artifacts {
+        assert!(dir.join(&a.hlo_file).exists(), "missing {:?}", a.hlo_file);
+        assert!(a.hlo_bytes > 1000);
+    }
+}
+
+#[test]
+fn b1_and_b2_produce_identical_trajectories() {
+    // The paper's B.1/B.2 differ only in memory layout; our artifacts
+    // consume the same RNG stream, so trajectories must be bit-equal.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let wl = default_workload();
+    let mut b1 = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B1Naive, &wl, 5489).unwrap();
+    let mut b2 = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wl, 5489).unwrap();
+    for round in 0..3 {
+        let s1 = b1.run(10, 0.5);
+        let s2 = b2.run(10, 0.5);
+        assert_eq!(s1.flips, s2.flips, "round {round}");
+        assert_eq!(b1.state(), b2.state(), "round {round}");
+    }
+}
+
+#[test]
+fn accel_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let wl = default_workload();
+    let mut x = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wl, 7).unwrap();
+    let mut y = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wl, 7).unwrap();
+    x.run(20, 0.8);
+    y.run(20, 0.8);
+    assert_eq!(x.state(), y.state());
+    assert_eq!(x.energy(), y.energy());
+}
+
+#[test]
+fn artifact_energy_matches_host_energy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let wl = default_workload();
+    for variant in [AccelVariant::B1Naive, AccelVariant::B2Coalesced] {
+        let mut sw = AccelSweeper::new(&rt, &dir, "default", variant, &wl, 11).unwrap();
+        sw.run(10, 0.6);
+        let diff = sw.validate();
+        assert!(diff < 0.05, "{variant:?}: |E_artifact - E_host| = {diff}");
+    }
+}
+
+#[test]
+fn accel_matches_cpu_rungs_statistically() {
+    // B.2 and A.4 run different schedules (checkerboard vs sequential) but
+    // sample the same Boltzmann distribution; equilibrium energies at the
+    // same β must agree within a few percent.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let beta = 0.9f32;
+    let wl = default_workload();
+    let mut b2 = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wl, 3).unwrap();
+    b2.run(100, beta);
+    let mut acc_b = 0.0;
+    for _ in 0..20 {
+        b2.run(10, beta);
+        acc_b += b2.energy();
+    }
+    let e_accel = acc_b / 20.0;
+
+    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3);
+    a4.run(100, beta);
+    let mut acc_a = 0.0;
+    for _ in 0..40 {
+        a4.run(5, beta);
+        acc_a += a4.energy();
+    }
+    let e_cpu = acc_a / 40.0;
+    let rel = (e_accel - e_cpu).abs() / e_cpu.abs();
+    assert!(rel < 0.05, "accel {e_accel} vs cpu {e_cpu} (rel {rel})");
+}
+
+#[test]
+fn geometry_mismatch_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let wrong = torus_workload(4, 4, 8, 1, 0.3); // artifact is 64x32
+    let err = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wrong, 1);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("workload"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let err = match rt.load_artifact(&dir, "b9_nonexistent") {
+        Err(e) => e,
+        Ok(_) => panic!("expected missing-artifact error"),
+    };
+    assert!(format!("{err:#}").contains("not in manifest"));
+}
+
+#[test]
+fn corrupt_hlo_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Copy the manifest entry but point it at a garbage HLO file.
+    let tmp = std::env::temp_dir().join("vectorising_corrupt_artifacts");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "HloModule nonsense ENTRY { broken").unwrap();
+    let man = artifact::Manifest::load(&dir).unwrap();
+    let mut meta = man.get("b2_coalesced_default").unwrap().clone();
+    meta.hlo_file = "bad.hlo.txt".to_string();
+    let rt = Runtime::cpu().unwrap();
+    let err = match rt.compile_meta(&tmp, meta) {
+        Err(e) => e,
+        Ok(_) => panic!("expected corrupt-HLO error"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("parse HLO") || msg.contains("compile"), "{msg}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn set_state_roundtrip_on_accel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let wl = default_workload();
+    let mut sw = AccelSweeper::new(&rt, &dir, "default", AccelVariant::B2Coalesced, &wl, 5).unwrap();
+    sw.run(10, 0.5);
+    let snap = sw.state();
+    sw.run(10, 0.5);
+    sw.set_state(&snap);
+    assert_eq!(sw.state(), snap);
+}

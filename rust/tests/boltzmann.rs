@@ -1,0 +1,118 @@
+//! Statistical correctness: every rung must sample the exact Boltzmann
+//! distribution of a small, exactly-enumerable model.
+//!
+//! The model (2x2 torus base graph x 8 layers = 32 spins) is too big for
+//! state-space enumeration, so we check exact *observables* on an even
+//! smaller 2-spin-per-layer chain by comparing against full enumeration
+//! over 2^8 states of a 4-layer model, using total-variation distance of
+//! the energy histogram.
+
+use std::collections::HashMap;
+
+use vectorising::ising::graph::BaseGraph;
+use vectorising::ising::QmcModel;
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind};
+
+/// Exact Boltzmann distribution over energies of a tiny model (<= 2^16
+/// states), as a map from energy bits to probability.
+fn exact_energy_distribution(m: &QmcModel, beta: f64) -> HashMap<i64, f64> {
+    let n = m.n_spins();
+    assert!(n <= 16, "enumeration limit");
+    let mut z = 0.0f64;
+    let mut acc: HashMap<i64, f64> = HashMap::new();
+    for mask in 0u32..(1 << n) {
+        let s: Vec<f32> = (0..n).map(|i| if mask >> i & 1 == 1 { 1.0 } else { -1.0 }).collect();
+        let e = m.total_energy(&s);
+        let w = (-beta * e).exp();
+        z += w;
+        *acc.entry(quantize(e)).or_insert(0.0) += w;
+    }
+    for v in acc.values_mut() {
+        *v /= z;
+    }
+    acc
+}
+
+fn quantize(e: f64) -> i64 {
+    (e * 1024.0).round() as i64
+}
+
+fn tv_distance(p: &HashMap<i64, f64>, q: &HashMap<i64, f64>) -> f64 {
+    let keys: std::collections::BTreeSet<i64> = p.keys().chain(q.keys()).copied().collect();
+    keys.iter()
+        .map(|k| (p.get(k).unwrap_or(&0.0) - q.get(k).unwrap_or(&0.0)).abs())
+        .sum::<f64>()
+        / 2.0
+}
+
+fn tiny_model() -> QmcModel {
+    // 2 vertices with one coupling, 8 layers -> 16 spins, 2^16 states.
+    let base = BaseGraph::new(2, vec![0.25, -0.15], vec![(0, 1, 0.6)]);
+    QmcModel::new(base, 8, 0.35)
+}
+
+fn sampled_energy_distribution(
+    kind: SweepKind,
+    exp: ExpMode,
+    beta: f32,
+    n_samples: usize,
+) -> HashMap<i64, f64> {
+    let m = tiny_model();
+    let s0 = vec![1.0f32; m.n_spins()];
+    let mut sw = make_sweeper_with_exp(kind, &m, &s0, 4242, exp);
+    sw.run(500, beta); // burn-in
+    let mut acc: HashMap<i64, f64> = HashMap::new();
+    for _ in 0..n_samples {
+        sw.run(3, beta); // decorrelate
+        *acc.entry(quantize(sw.energy())).or_insert(0.0) += 1.0;
+    }
+    for v in acc.values_mut() {
+        *v /= n_samples as f64;
+    }
+    acc
+}
+
+#[test]
+fn a1_samples_boltzmann() {
+    let exact = exact_energy_distribution(&tiny_model(), 0.7);
+    let got = sampled_energy_distribution(SweepKind::A1Original, ExpMode::Exact, 0.7, 12000);
+    let tv = tv_distance(&exact, &got);
+    assert!(tv < 0.05, "A.1 TV distance {tv}");
+}
+
+#[test]
+fn a2_samples_boltzmann_with_fast_exp() {
+    // The fast approximation perturbs acceptance ratios by up to ~4%; the
+    // sampled distribution stays close but a looser bound applies.
+    let exact = exact_energy_distribution(&tiny_model(), 0.7);
+    let got = sampled_energy_distribution(SweepKind::A2Basic, ExpMode::Fast, 0.7, 12000);
+    let tv = tv_distance(&exact, &got);
+    assert!(tv < 0.06, "A.2(fast) TV distance {tv}");
+}
+
+#[test]
+fn a4_samples_boltzmann() {
+    let exact = exact_energy_distribution(&tiny_model(), 0.7);
+    let got = sampled_energy_distribution(SweepKind::A4Full, ExpMode::Exact, 0.7, 12000);
+    let tv = tv_distance(&exact, &got);
+    assert!(tv < 0.05, "A.4 TV distance {tv}");
+}
+
+#[test]
+fn magnetization_tracks_field_sign() {
+    // h > 0 on vertex 0 must bias <s_0> positive at low temperature.
+    let m = tiny_model();
+    let s0 = vec![-1.0f32; m.n_spins()];
+    let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &m, &s0, 7, ExpMode::Exact);
+    sw.run(500, 1.5);
+    let mut mag0 = 0.0f64;
+    let n = 2000;
+    for _ in 0..n {
+        sw.run(2, 1.5);
+        let st = sw.state();
+        // vertex 0 across layers: indices l*2
+        mag0 += (0..8).map(|l| st[l * 2] as f64).sum::<f64>() / 8.0;
+    }
+    mag0 /= n as f64;
+    assert!(mag0 > 0.2, "<s_0> = {mag0}, expected positive (h_0 = +0.25)");
+}

@@ -1,0 +1,145 @@
+//! Cross-rung equivalence tests — the core correctness argument of the
+//! optimization ladder: every rung is *the same algorithm*.
+//!
+//! * A.1 and A.2 differ only in data structures (and default exp mode);
+//!   with the exp mode pinned they must produce identical trajectories.
+//! * A.3 and A.4 differ only in how updates are applied; they must be
+//!   bit-identical always.
+//! * Every rung must keep its incremental effective fields consistent
+//!   with a from-scratch recomputation (the paper's h_eff bookkeeping).
+
+use vectorising::ising::builder::{diag_torus_workload, torus_workload};
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind};
+
+#[test]
+fn a1_equals_a2_with_same_exp_mode() {
+    for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
+        let wl = torus_workload(6, 4, 8, 3, 0.3);
+        let mut a1 = make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 42, exp);
+        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 42, exp);
+        for round in 0..20 {
+            let s1 = a1.run(1, 0.8);
+            let s2 = a2.run(1, 0.8);
+            assert_eq!(s1.flips, s2.flips, "round {round} exp {exp:?}");
+            assert_eq!(a1.state(), a2.state(), "round {round} exp {exp:?}");
+        }
+    }
+}
+
+#[test]
+fn a3_equals_a4_bitexact() {
+    for (w, h, l, seed) in [(4usize, 4usize, 8usize, 1u32), (6, 4, 16, 7), (8, 8, 32, 99)] {
+        let wl = torus_workload(w, h, l, seed as u64, 0.3);
+        let mut a3 = make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, seed, ExpMode::Fast);
+        let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, seed, ExpMode::Fast);
+        for round in 0..10 {
+            let beta = 0.2 + 0.2 * (round % 4) as f32;
+            let s3 = a3.run(1, beta);
+            let s4 = a4.run(1, beta);
+            assert_eq!(s3.flips, s4.flips, "cfg ({w},{h},{l}) round {round}");
+            assert_eq!(s3.groups_with_flip, s4.groups_with_flip);
+            let st3 = a3.state();
+            let st4 = a4.state();
+            assert_eq!(st3, st4, "cfg ({w},{h},{l}) round {round}");
+        }
+    }
+}
+
+#[test]
+fn a3_a4_also_agree_on_degree6_graph() {
+    let wl = diag_torus_workload(6, 4, 12, 5, 0.25);
+    let mut a3 = make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, 11, ExpMode::Fast);
+    let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 11, ExpMode::Fast);
+    for _ in 0..8 {
+        a3.run(1, 0.6);
+        a4.run(1, 0.6);
+    }
+    assert_eq!(a3.state(), a4.state());
+}
+
+#[test]
+fn effective_fields_stay_consistent_on_every_rung() {
+    let wl = torus_workload(6, 6, 16, 13, 0.35);
+    for kind in SweepKind::all_cpu() {
+        let mut sw =
+            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 77, kind.default_exp());
+        sw.run(25, 0.7);
+        let err = sw.validate();
+        assert!(err < 1e-3, "{kind:?} h_eff drift {err}");
+    }
+}
+
+#[test]
+fn all_rungs_sample_the_same_distribution() {
+    // Statistical equivalence: long runs at the same β must produce mean
+    // energies within a few standard errors of each other.
+    let beta = 0.9f32;
+    let mut means = Vec::new();
+    for kind in SweepKind::all_cpu() {
+        let wl = torus_workload(4, 4, 8, 21, 0.3);
+        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 5489, ExpMode::Exact);
+        sw.run(200, beta); // burn-in
+        let mut acc = 0.0;
+        let n = 300;
+        for _ in 0..n {
+            sw.run(2, beta);
+            acc += sw.energy();
+        }
+        means.push(acc / n as f64);
+    }
+    let avg = means.iter().sum::<f64>() / means.len() as f64;
+    for (kind, m) in SweepKind::all_cpu().iter().zip(&means) {
+        let rel = (m - avg).abs() / avg.abs();
+        assert!(rel < 0.05, "{kind:?}: mean energy {m} vs ensemble {avg}");
+    }
+}
+
+#[test]
+fn fast_exp_mode_does_not_bias_sampling() {
+    // The paper uses the fast approximation in production; its ±4% error
+    // on probabilities must not visibly shift the sampled energy.
+    let beta = 0.8f32;
+    let mut res = Vec::new();
+    for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
+        let wl = torus_workload(4, 4, 8, 33, 0.3);
+        let mut sw = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 123, exp);
+        sw.run(200, beta);
+        let mut acc = 0.0;
+        let n = 300;
+        for _ in 0..n {
+            sw.run(2, beta);
+            acc += sw.energy();
+        }
+        res.push(acc / n as f64);
+    }
+    let rel_fast = (res[1] - res[0]).abs() / res[0].abs();
+    let rel_acc = (res[2] - res[0]).abs() / res[0].abs();
+    assert!(rel_fast < 0.05, "fast-exp bias {rel_fast}");
+    assert!(rel_acc < 0.05, "accurate-exp bias {rel_acc}");
+}
+
+#[test]
+fn set_state_resets_trajectory() {
+    let wl = torus_workload(4, 4, 8, 8, 0.3);
+    let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 9, ExpMode::Fast);
+    sw.run(5, 0.5);
+    let snapshot = sw.state();
+    sw.run(5, 0.5);
+    assert_ne!(sw.state(), snapshot);
+    sw.set_state(&snapshot);
+    assert_eq!(sw.state(), snapshot);
+    assert!(sw.validate() < 1e-4);
+}
+
+#[test]
+fn flip_probability_monotone_in_temperature() {
+    let wl = torus_workload(6, 4, 8, 17, 0.3);
+    let mut probs = Vec::new();
+    for beta in [3.0f32, 1.0, 0.2] {
+        let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 50, ExpMode::Fast);
+        sw.run(10, beta); // settle
+        let st = sw.run(30, beta);
+        probs.push(st.flip_prob());
+    }
+    assert!(probs[0] < probs[1] && probs[1] < probs[2], "{probs:?}");
+}

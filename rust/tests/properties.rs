@@ -1,0 +1,145 @@
+//! Randomized property tests over the coordinator-level invariants.
+//!
+//! The offline build image has no `proptest`, so these use the crate's
+//! own deterministic LCG to drive many randomized cases per property —
+//! same methodology (generate, check invariant, shrink by rerunning the
+//! failing seed manually), reproducible by construction.
+
+use vectorising::ising::builder::{torus_workload, Workload};
+use vectorising::ising::lcg::Lcg;
+use vectorising::ising::reorder::Interlace4;
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind};
+use vectorising::tempering::{Ladder, PtEnsemble};
+use vectorising::util::json::Value;
+
+fn random_workload(rng: &mut Lcg) -> Workload {
+    let dims = [(4usize, 4usize), (6, 4), (8, 4), (6, 6)];
+    let layers = [8usize, 12, 16, 32];
+    let (w, h) = dims[(rng.next_u64() % 4) as usize];
+    let l = layers[(rng.next_u64() % 4) as usize];
+    torus_workload(w, h, l, rng.next_u64() % 1000, 0.1 + 0.4 * (rng.next_unit().abs()))
+}
+
+/// Property: the 4-way interlace is a permutation that round-trips any
+/// state, for every valid geometry.
+#[test]
+fn prop_interlace_roundtrips() {
+    let mut rng = Lcg::new(2024);
+    for case in 0..40 {
+        let wl = random_workload(&mut rng);
+        let it = Interlace4::new(&wl.model);
+        let s = wl.model.random_state(&mut rng);
+        let back = it.to_original(&it.to_interlaced(&s));
+        assert_eq!(back, s, "case {case}");
+        // permutation bijectivity
+        let mut seen = vec![false; s.len()];
+        for &p in &it.perm {
+            assert!(!seen[p as usize], "case {case}: duplicate");
+            seen[p as usize] = true;
+        }
+    }
+}
+
+/// Property: incremental h_eff equals recomputation after arbitrary sweep
+/// sequences with arbitrary β schedules, on every rung.
+#[test]
+fn prop_heff_consistency_under_random_schedules() {
+    let mut rng = Lcg::new(777);
+    for case in 0..12 {
+        let wl = random_workload(&mut rng);
+        let kind = SweepKind::all_cpu()[(rng.next_u64() % 4) as usize];
+        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, case as u32, ExpMode::Fast);
+        for _ in 0..5 {
+            let beta = 0.1 + rng.next_unit().abs() * 2.0;
+            let n = 1 + (rng.next_u64() % 4) as usize;
+            sw.run(n, beta);
+        }
+        let err = sw.validate();
+        assert!(err < 1e-3, "case {case} {kind:?}: h_eff drift {err}");
+    }
+}
+
+/// Property: states remain ±1 and flip counts stay within attempts.
+#[test]
+fn prop_stats_and_domain_invariants() {
+    let mut rng = Lcg::new(31337);
+    for case in 0..12 {
+        let wl = random_workload(&mut rng);
+        let kind = SweepKind::all_cpu()[(rng.next_u64() % 4) as usize];
+        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 1 + case as u32, ExpMode::Fast);
+        let stats = sw.run(4, 0.9);
+        assert_eq!(stats.attempts, 4 * wl.model.n_spins() as u64, "case {case}");
+        assert!(stats.flips <= stats.attempts);
+        assert!(stats.groups_with_flip <= stats.groups);
+        assert!(sw.state().iter().all(|&s| s == 1.0 || s == -1.0), "case {case}");
+    }
+}
+
+/// Property: replica exchange permutes states (never invents or loses
+/// one) and preserves per-rung β assignment, under random ladders.
+#[test]
+fn prop_exchange_preserves_state_multiset() {
+    let mut rng = Lcg::new(99);
+    for case in 0..8 {
+        let n = 3 + (rng.next_u64() % 6) as usize;
+        let ladder = Ladder::geometric(2.0 + rng.next_unit().abs(), 0.1, n);
+        let betas: Vec<f32> = (0..n).map(|i| ladder.beta(i)).collect();
+        let replicas = (0..n)
+            .map(|i| {
+                let wl = torus_workload(4, 4, 8, 5, 0.3);
+                make_sweeper_with_exp(
+                    SweepKind::A2Basic,
+                    &wl.model,
+                    &wl.s0,
+                    case as u32 * 100 + i as u32,
+                    ExpMode::Fast,
+                )
+            })
+            .collect();
+        let mut pt = PtEnsemble::new(ladder, replicas, case as u32);
+        pt.sweep_all(3);
+        let fingerprint = |pt: &mut PtEnsemble| -> Vec<Vec<u32>> {
+            (0..pt.len())
+                .map(|i| pt.state_of(i).iter().map(|x| x.to_bits()).collect())
+                .collect()
+        };
+        let mut before = fingerprint(&mut pt);
+        pt.exchange();
+        let mut after = fingerprint(&mut pt);
+        before.sort();
+        after.sort();
+        assert_eq!(before, after, "case {case}");
+        // β assignment per rung is unchanged
+        let reports = pt.reports();
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.beta, betas[i]);
+        }
+    }
+}
+
+/// Property: the JSON substrate round-trips every value it can produce.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    let mut rng = Lcg::new(4096);
+    for case in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Lcg, depth: usize) -> Value {
+    match rng.next_u64() % if depth == 0 { 4 } else { 6 } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_u64() % 2 == 0),
+        2 => Value::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+        3 => Value::Str(format!("s{}-\"quoted\"\n\t λ", rng.next_u64() % 100)),
+        4 => Value::Arr((0..rng.next_u64() % 5).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.next_u64() % 5)
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
