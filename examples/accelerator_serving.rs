@@ -54,7 +54,7 @@ fn main() -> vectorising::Result<()> {
 
     // Native fully-vectorized CPU rung for comparison (paper: A.4 on 8
     // cores beats the GPU by 2.04x; on 1 core it roughly ties 4 GPU-ish).
-    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489);
+    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
     a4.run(10, beta);
     let t0 = Instant::now();
     let stats = a4.run(sweeps, beta);

@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use vectorising::ising::builder::torus_workload;
-use vectorising::sweep::{make_sweeper, SweepKind};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
 
 fn main() {
     let sweeps = 300;
@@ -17,9 +17,9 @@ fn main() {
     println!("timing {sweeps} sweeps of a 64x32 (2,048-spin) model per rung\n");
 
     let mut results = Vec::new();
-    for kind in SweepKind::all_cpu() {
+    for kind in SweepKind::all_cpu_wide() {
         let wl = torus_workload(8, 8, 32, 1, 0.3);
-        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489);
+        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
         sw.run(20, beta); // warm-up
         let t0 = Instant::now();
         let stats = sw.run(sweeps, beta);

@@ -6,7 +6,7 @@
 //! ```
 
 use vectorising::ising::builder::torus_workload;
-use vectorising::sweep::{make_sweeper, SweepKind};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
 
 fn main() {
     // 8x8 torus base graph (64 spins/layer), 32 layers -> 2,048 spins.
@@ -19,7 +19,10 @@ fn main() {
         wl.model.base.edges.len()
     );
 
-    let mut sim = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489);
+    // The widest rung this host has a backend for (A.4w8 on AVX2 CPUs).
+    let kind = SweepKind::preferred_cpu();
+    println!("rung: {} ({} lanes)", kind.label(), kind.group_width());
+    let mut sim = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
     let beta = 1.2f32;
     println!("initial energy: {:.2}", sim.energy());
     for round in 1..=10 {

@@ -18,9 +18,9 @@ fn main() {
     println!("per-update cost, 64x32 model (2,048 spins), {SWEEPS} sweeps/run, {REPS} runs\n");
     let updates = (SWEEPS * 2048) as f64;
 
-    for kind in SweepKind::all_cpu() {
+    for kind in SweepKind::all_cpu_wide() {
         let wl = torus_workload(8, 8, 32, 1, 0.3);
-        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489);
+        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
         sw.run(20, beta);
         let secs = support::time_reps(1, REPS, || {
             sw.run(SWEEPS, beta);

@@ -1,0 +1,68 @@
+//! Width scaling: the A.3/A.4 rungs at lane widths 4 (SSE2) and 8 (AVX2
+//! when the host has it, portable lanes otherwise) on a paper-scale
+//! workload — the vector-width axis the ISSUE-1 refactor opens.
+//!
+//! Reports spin-updates/sec per (rung, width) and the W=8-over-W=4
+//! speedup.  On AVX2 hosts the W=8 rows should be at least as fast as
+//! W=4 (wider registers, same instruction count per group); without AVX2
+//! the portable fallback documents the cost of not having the backend.
+
+mod support;
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::simd::{avx2_available, widest_supported_width};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+
+const SWEEPS: usize = 40;
+const REPS: usize = 8;
+
+fn time_kind(kind: SweepKind, beta: f32) -> (Vec<f64>, f64) {
+    // Paper geometry per model: 96 base spins x 256 layers = 24,576 spins
+    // (256 is divisible by both widths with >= 2 layers per section).
+    let wl = torus_workload(12, 8, 256, 1, 0.3);
+    let updates = (SWEEPS * wl.model.n_spins()) as f64;
+    let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    sw.run(10, beta); // reach a representative flip regime
+    let secs = support::time_reps(1, REPS, || {
+        sw.run(SWEEPS, beta);
+    });
+    (secs, updates)
+}
+
+fn main() {
+    let beta = 0.8f32;
+    println!(
+        "width scaling, 96x256 paper-scale model (24,576 spins), {SWEEPS} sweeps/run, {REPS} runs"
+    );
+    println!(
+        "host: avx2={}  widest backend width={}\n",
+        avx2_available(),
+        widest_supported_width()
+    );
+
+    let mut means = std::collections::HashMap::new();
+    for kind in [
+        SweepKind::A3VecRng,
+        SweepKind::A3VecRngW8,
+        SweepKind::A4Full,
+        SweepKind::A4FullW8,
+    ] {
+        let (secs, updates) = time_kind(kind, beta);
+        let ns = support::mean(&secs) / updates * 1e9;
+        support::report(
+            &format!("{} w={} ({ns:.2} ns/update)", kind.label(), kind.group_width()),
+            &secs,
+            updates,
+            "Mupd",
+        );
+        means.insert(kind.label(), support::mean(&secs));
+    }
+
+    let speedup = |w4: &str, w8: &str| means[w4] / means[w8];
+    println!(
+        "\nA.3: w8 over w4 speedup {:.2}x   A.4: w8 over w4 speedup {:.2}x{}",
+        speedup("A.3", "A.3w8"),
+        speedup("A.4", "A.4w8"),
+        if avx2_available() { "" } else { "   (portable fallback — no AVX2 on this host)" }
+    );
+}

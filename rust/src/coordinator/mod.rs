@@ -37,7 +37,7 @@ pub fn build_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<PtEnsemble> {
         .iter()
         .enumerate()
         .map(|(i, wl)| make_sweeper(kind, &wl.model, &wl.s0, cfg.seed as u32 + 1000 * i as u32))
-        .collect();
+        .collect::<Result<_>>()?;
     Ok(PtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a))
 }
 

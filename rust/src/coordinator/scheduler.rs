@@ -62,7 +62,7 @@ mod tests {
         let replicas = (0..n)
             .map(|i| {
                 let wl = torus_workload(4, 4, 8, 21, 0.3);
-                make_sweeper(kind, &wl.model, &wl.s0, 500 + i as u32)
+                make_sweeper(kind, &wl.model, &wl.s0, 500 + i as u32).unwrap()
             })
             .collect();
         PtEnsemble::new(ladder, replicas, 1234)

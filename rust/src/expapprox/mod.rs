@@ -137,6 +137,49 @@ mod tests {
         assert!(v[3] >= 1.0);
     }
 
+    #[test]
+    fn wide_fast_is_lane_exact_to_scalar_at_w8() {
+        use crate::simd::portable::F32xN;
+        for x in sweep(FAST_LO + 0.1, FAST_HI - 0.1, 20_000) {
+            let xs: [f32; 8] = std::array::from_fn(|k| x / (k as f32 + 1.0));
+            let oct = simd::exp_fast_wide(F32xN::<8>::from(xs)).to_array();
+            for (lane, &xx) in xs.iter().enumerate() {
+                if xx >= FAST_LO && xx < FAST_HI {
+                    assert_eq!(oct[lane], exp_fast(xx), "x={xx}");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_exp_variants_match_paper_bounds() {
+        use crate::simd::avx2::F32x8;
+        if !crate::simd::avx2_available() {
+            eprintln!("skipping avx2 exp test: host has no AVX2");
+            return;
+        }
+        for x in sweep(FAST_LO + 0.1, FAST_HI - 0.1, 20_000) {
+            // fast: lane-exact to scalar (same CVTTPS2DQ semantics).
+            let oct = simd::exp_fast_wide(F32x8::splat(x)).to_array();
+            assert_eq!(oct[0], exp_fast(x), "x={x}");
+            assert_eq!(oct[7], exp_fast(x), "x={x}");
+        }
+        // accurate: VRSQRTPS has the SSE error spec, so the SSE bound holds.
+        for x in sweep(ACCURATE_LO + 1e-3, -1e-3, 50_000) {
+            let approx = simd::exp_accurate_wide(F32x8::splat(x)).to_array()[0] as f64;
+            let exact = (x as f64).exp();
+            let rel = approx / exact - 1.0;
+            assert!(rel > -0.0108 && rel < 0.0058, "x={x} rel={rel}");
+        }
+        let v = simd::exp_accurate_wide(F32x8::from([-30.0, -22.5, 0.0, 1.5, -5.0, -1.0, 2.0, 0.5]))
+            .to_array();
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[1], 0.0);
+        assert!(v[2] >= 1.0);
+        assert!(v[3] >= 1.0);
+    }
+
     /// The average relative error of the fast variant should be near zero
     /// (that is what the 2 ln² 2 factor buys — Appendix).
     #[test]

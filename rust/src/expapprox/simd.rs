@@ -1,65 +1,75 @@
-//! 4-wide forms of the exponential approximations — compute four
-//! Metropolis flip probabilities per call (paper: "it was important that
-//! this approximation does not use lookup tables, so that it can also be
-//! vectorized, i.e. to compute 4 approximate exponentials at once").
+//! Vector forms of the exponential approximations — compute `W` Metropolis
+//! flip probabilities per call (paper: "it was important that this
+//! approximation does not use lookup tables, so that it can also be
+//! vectorized, i.e. to compute 4 approximate exponentials at once" — and,
+//! width-generically, 8 at once on AVX2).
+//!
+//! [`exp_fast_wide`]/[`exp_accurate_wide`] are generic over the
+//! [`SimdF32`] backend; [`exp_fast_x4`]/[`exp_accurate_x4`] are the
+//! paper-width instantiations kept for the 4-lane call sites.
 
 use super::{ACCURATE_HI, ACCURATE_LO, BIAS_BITS, LOG2_E, TWO_LN2_SQ};
-use crate::simd::{F32x4, U32x4};
+use crate::simd::{F32x4, SimdF32, SimdU32};
 
-/// 4-wide fast approximation; lane-exact to [`super::scalar::exp_fast`]
+/// `W`-wide fast approximation; lane-exact to [`super::scalar::exp_fast`]
 /// (both use truncating conversion — CVTTPS2DQ vs `as i32`).
 #[inline(always)]
-pub fn exp_fast_x4(x: F32x4) -> F32x4 {
-    let scaled = x * F32x4::splat((1 << 23) as f32 * LOG2_E);
-    let i = scaled.to_i32_trunc().wrapping_add(U32x4::splat(BIAS_BITS as u32));
-    i.bitcast_f32() * F32x4::splat(TWO_LN2_SQ)
+pub fn exp_fast_wide<F: SimdF32>(x: F) -> F {
+    let scaled = x * F::splat((1 << 23) as f32 * LOG2_E);
+    let i = scaled.to_i32_trunc().wrapping_add(<F::U as SimdU32>::splat(BIAS_BITS as u32));
+    i.bitcast_f32() * F::splat(TWO_LN2_SQ)
 }
 
-/// 4-wide accurate approximation with the paper's "special masking".
+/// `W`-wide accurate approximation with the paper's "special masking".
 ///
 /// The 4th root uses RSQRTPS twice with one Newton-Raphson refinement on
 /// the *first* rsqrt (the cheap half of the paper's accuracy budget); the
 /// second stays raw approximate, keeping the whole thing at ~11 cycle
 /// cost parity while staying inside the Appendix error bounds.
 #[inline(always)]
-pub fn exp_accurate_x4(x: F32x4) -> F32x4 {
+pub fn exp_accurate_wide<F: SimdF32>(x: F) -> F {
     // Clamp into the valid interpolation domain first; the below-range
     // lanes are zeroed by mask at the end.
-    let lo = F32x4::splat(ACCURATE_LO);
-    let hi = F32x4::splat(ACCURATE_HI - 1e-3);
+    let lo = F::splat(ACCURATE_LO);
+    let hi = F::splat(ACCURATE_HI - 1e-3);
     let xc = x.max(lo).min(hi);
 
-    let scaled = xc * F32x4::splat((1 << 25) as f32 * LOG2_E);
-    let i = scaled.to_i32_trunc().wrapping_add(U32x4::splat(BIAS_BITS as u32));
+    let scaled = xc * F::splat((1 << 25) as f32 * LOG2_E);
+    let i = scaled.to_i32_trunc().wrapping_add(<F::U as SimdU32>::splat(BIAS_BITS as u32));
     // At the very bottom of the domain the interpolant is denormal, which
     // RSQRTPS flushes to +inf (NaN after the refinement).  Clamp to the
     // smallest normal: its 4th root (~3.3e-10 = e^-21.83) is exactly the
     // correct boundary value.
-    let interp = (i.bitcast_f32() * F32x4::splat(TWO_LN2_SQ)).max(F32x4::splat(f32::MIN_POSITIVE));
+    let interp = (i.bitcast_f32() * F::splat(TWO_LN2_SQ)).max(F::splat(f32::MIN_POSITIVE));
 
     // v^(1/4) = rsqrt(rsqrt(v)); refine the inner rsqrt one NR step:
     // r' = r * (1.5 - 0.5 * v * r * r).
     let r = interp.rsqrt_approx();
-    let half_v = interp * F32x4::splat(0.5);
-    let r = r * (F32x4::splat(1.5) - half_v * r * r);
+    let half_v = interp * F::splat(0.5);
+    let r = r * (F::splat(1.5) - half_v * r * r);
     let root4 = r.rsqrt_approx();
 
     // Mask: 0.0 where x < ACCURATE_LO (strictly below the domain) —
     // the paper's "special masking to produce 0.0 for all x < -31.5 ln 2".
     let below = x.lt(lo);
-    let masked = U32x4::select(below, U32x4::zero(), root4.bitcast_u32()).bitcast_f32();
+    let masked =
+        <F::U as SimdU32>::select(below, <F::U as SimdU32>::zero(), root4.bitcast_u32()).bitcast_f32();
 
     // Clamp: "at least 1.0 for x > 0" — keep the raw value on negative
     // lanes, take max(1.0, value) on non-negative lanes.
-    let neg = x.lt(F32x4::zero());
-    let clamped = masked.max(F32x4::splat(1.0));
-    F32x4::from_bits_select(neg, masked, clamped)
+    let neg = x.lt(F::zero());
+    let clamped = masked.max(F::splat(1.0));
+    F::select_bits(neg, masked, clamped)
 }
 
-impl F32x4 {
-    /// `mask ? a : b` on float payloads (bitwise select).
-    #[inline(always)]
-    pub fn from_bits_select(mask: U32x4, a: F32x4, b: F32x4) -> F32x4 {
-        U32x4::select(mask, a.bitcast_u32(), b.bitcast_u32()).bitcast_f32()
-    }
+/// 4-wide fast approximation (the paper's width).
+#[inline(always)]
+pub fn exp_fast_x4(x: F32x4) -> F32x4 {
+    exp_fast_wide(x)
+}
+
+/// 4-wide accurate approximation (the paper's width).
+#[inline(always)]
+pub fn exp_accurate_x4(x: F32x4) -> F32x4 {
+    exp_accurate_wide(x)
 }

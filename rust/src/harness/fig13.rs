@@ -57,12 +57,18 @@ pub fn time_accel(cfg: &RunConfig, variant: AccelVariant, config_name: &str) -> 
 pub fn compute(cfg: &RunConfig, thread_counts: &[usize], with_accel: bool) -> Result<Vec<Fig13Row>> {
     let mut rows = Vec::new();
     let mut baseline = None;
-    for (kind, label) in [
+    let mut ladder = vec![
         (SweepKind::A1Original, "A.1"),
         (SweepKind::A2Basic, "A.2"),
         (SweepKind::A3VecRng, "A.3"),
         (SweepKind::A4Full, "A.4"),
-    ] {
+    ];
+    // The width-8 column needs a layer count the octet interlacing supports.
+    if SweepKind::A4FullW8.supports_layers(cfg.layers) {
+        ladder.push((SweepKind::A3VecRngW8, "A.3w8"));
+        ladder.push((SweepKind::A4FullW8, "A.4w8"));
+    }
+    for (kind, label) in ladder {
         for &threads in thread_counts {
             let mut c = cfg.clone();
             c.threads = threads;

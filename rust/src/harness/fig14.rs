@@ -1,6 +1,6 @@
 //! Fig 14 — probability of having to wait for a spin flip, per tempering
 //! replica ("Ising model index"), for the scalar CPU (w=1), the
-//! vectorized CPU (w=4) and the accelerator warp (w=32).
+//! vectorized CPU (w=4 SSE, w=8 AVX2) and the accelerator warp (w=32).
 //!
 //! The measured per-replica flip probability `p_i` comes from running the
 //! tempering ladder; the three curves are `1 − (1−p_i)^w` (the paper's §4
@@ -22,6 +22,7 @@ pub struct Fig14Row {
     pub flip_prob: f64,
     pub wait_w1: f64,
     pub wait_w4: f64,
+    pub wait_w8: f64,
     pub wait_w32: f64,
     /// Directly measured quadruplet wait rate (A.4 groups).
     pub wait_w4_measured: f64,
@@ -48,6 +49,7 @@ pub fn compute(cfg: &RunConfig) -> Result<Vec<Fig14Row>> {
                 flip_prob: p,
                 wait_w1: wait_probability(p, 1),
                 wait_w4: wait_probability(p, 4),
+                wait_w8: wait_probability(p, 8),
                 wait_w32: wait_probability(p, 32),
                 wait_w4_measured: r.stats.wait_prob(),
             }
@@ -60,6 +62,7 @@ pub fn compute(cfg: &RunConfig) -> Result<Vec<Fig14Row>> {
 pub struct Fig14Summary {
     pub mean_flip: f64,
     pub mean_wait_w4: f64,
+    pub mean_wait_w8: f64,
     pub mean_wait_w32: f64,
     /// Ratio wait(w=32)/wait(w=1) — paper: 2.9x.
     pub gpu_over_cpu: f64,
@@ -71,10 +74,12 @@ pub fn summarize(rows: &[Fig14Row]) -> Fig14Summary {
     let n = rows.len() as f64;
     let mean_flip = rows.iter().map(|r| r.flip_prob).sum::<f64>() / n;
     let mean_w4 = rows.iter().map(|r| r.wait_w4).sum::<f64>() / n;
+    let mean_w8 = rows.iter().map(|r| r.wait_w8).sum::<f64>() / n;
     let mean_w32 = rows.iter().map(|r| r.wait_w32).sum::<f64>() / n;
     Fig14Summary {
         mean_flip,
         mean_wait_w4: mean_w4,
+        mean_wait_w8: mean_w8,
         mean_wait_w32: mean_w32,
         gpu_over_cpu: mean_w32 / mean_flip.max(1e-12),
         vec_over_cpu: mean_w4 / mean_flip.max(1e-12),
@@ -91,6 +96,7 @@ pub fn run(cfg: &RunConfig, csv: Option<&Path>) -> Result<String> {
         "wait w=1 (A.1)",
         "wait w=4 (A.4)",
         "w=4 measured",
+        "wait w=8 (A.4w8)",
         "wait w=32 (GPU)",
     ]);
     for r in &rows {
@@ -101,6 +107,7 @@ pub fn run(cfg: &RunConfig, csv: Option<&Path>) -> Result<String> {
             f4(r.wait_w1),
             f4(r.wait_w4),
             f4(r.wait_w4_measured),
+            f4(r.wait_w8),
             f4(r.wait_w32),
         ]);
     }
@@ -109,12 +116,14 @@ pub fn run(cfg: &RunConfig, csv: Option<&Path>) -> Result<String> {
     }
     let s = summarize(&rows);
     Ok(format!(
-        "{}\nladder means: P(flip)={:.3}  wait(w=4)={:.3} ({:.2}x)  wait(w=32)={:.3} ({:.2}x)\n\
+        "{}\nladder means: P(flip)={:.3}  wait(w=4)={:.3} ({:.2}x)  wait(w=8)={:.3}  \
+         wait(w=32)={:.3} ({:.2}x)\n\
          paper means:  P(flip)=0.286  wait(w=4)=0.568 (2.0x)  wait(w=32)=0.828 (2.9x)\n",
         t.render(),
         s.mean_flip,
         s.mean_wait_w4,
         s.vec_over_cpu,
+        s.mean_wait_w8,
         s.mean_wait_w32,
         s.gpu_over_cpu
     ))
@@ -133,7 +142,8 @@ mod tests {
         let rows = compute(&small()).unwrap();
         for r in &rows {
             assert!(r.wait_w1 <= r.wait_w4 + 1e-12);
-            assert!(r.wait_w4 <= r.wait_w32 + 1e-12);
+            assert!(r.wait_w4 <= r.wait_w8 + 1e-12);
+            assert!(r.wait_w8 <= r.wait_w32 + 1e-12);
         }
         // hot end flips more than cold end
         assert!(rows.last().unwrap().flip_prob > rows[0].flip_prob);

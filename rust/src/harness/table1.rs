@@ -1,4 +1,6 @@
-//! Table 1 — the implementation matrix (configuration, not measurement).
+//! Table 1 — the implementation matrix (configuration, not measurement),
+//! extended with the vector-width axis (the `Lanes` column and the
+//! width-8 CPU rungs).
 
 use super::report::Table;
 
@@ -7,6 +9,7 @@ pub fn render() -> String {
     let mut t = Table::new(vec![
         "Impl",
         "CPU/Accel",
+        "Lanes",
         "Multi-Threaded",
         "Compiler-Opt",
         "Basic-Opts (S2)",
@@ -15,24 +18,29 @@ pub fn render() -> String {
     ]);
     let y = "x";
     let n = "";
-    t.row(vec!["A.1a", "CPU", y, n, n, n, n]);
-    t.row(vec!["A.1b", "CPU", y, y, n, n, n]);
-    t.row(vec!["A.2a", "CPU", y, n, y, n, n]);
-    t.row(vec!["A.2b", "CPU", y, y, y, n, n]);
-    t.row(vec!["A.3", "CPU", y, y, y, y, n]);
-    t.row(vec!["A.4", "CPU", y, y, y, y, y]);
-    t.row(vec!["B.1", "Accel", y, y, y, n, n]);
-    t.row(vec!["B.2", "Accel", y, y, y, y, y]);
+    t.row(vec!["A.1a", "CPU", "1", y, n, n, n, n]);
+    t.row(vec!["A.1b", "CPU", "1", y, y, n, n, n]);
+    t.row(vec!["A.2a", "CPU", "1", y, n, y, n, n]);
+    t.row(vec!["A.2b", "CPU", "1", y, y, y, n, n]);
+    t.row(vec!["A.3", "CPU", "4", y, y, y, y, n]);
+    t.row(vec!["A.4", "CPU", "4", y, y, y, y, y]);
+    t.row(vec!["A.3w8", "CPU", "8", y, y, y, y, n]);
+    t.row(vec!["A.4w8", "CPU", "8", y, y, y, y, y]);
+    t.row(vec!["B.1", "Accel", "32", y, y, y, n, n]);
+    t.row(vec!["B.2", "Accel", "32", y, y, y, y, y]);
     t.render()
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
-    fn has_all_eight_rungs() {
+    fn has_all_ten_rungs() {
         let s = super::render();
-        for rung in ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "B.1", "B.2"] {
+        for rung in
+            ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "B.1", "B.2"]
+        {
             assert!(s.contains(rung), "missing {rung}");
         }
+        assert!(s.contains("Lanes"));
     }
 }

@@ -26,17 +26,23 @@ pub struct LadderTiming {
     pub seconds: f64,
 }
 
-/// In-process (optimized-build) timings: A.1b, A.2b, A.3, A.4.
+/// In-process (optimized-build) timings: A.1b, A.2b, A.3, A.4, plus the
+/// width-8 rungs when the workload's layer count allows them.
 pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
     let mut cfg = cfg.clone();
     cfg.threads = 1;
-    let mut out = Vec::new();
-    for (kind, label) in [
+    let mut ladder = vec![
         (SweepKind::A1Original, "A.1b"),
         (SweepKind::A2Basic, "A.2b"),
         (SweepKind::A3VecRng, "A.3"),
         (SweepKind::A4Full, "A.4"),
-    ] {
+    ];
+    if SweepKind::A4FullW8.supports_layers(cfg.layers) {
+        ladder.push((SweepKind::A3VecRngW8, "A.3w8"));
+        ladder.push((SweepKind::A4FullW8, "A.4w8"));
+    }
+    let mut out = Vec::new();
+    for (kind, label) in ladder {
         let t = coordinator::time_sweeps(&cfg, kind)?;
         out.push(LadderTiming { label: label.to_string(), seconds: t.seconds });
     }
@@ -96,9 +102,10 @@ pub fn pairwise(rungs: &[LadderTiming]) -> Vec<Vec<f64>> {
         .collect()
 }
 
-/// Paper row order: A.1a, A.1b, A.2a, A.2b, A.3, A.4.
+/// Paper row order: A.1a, A.1b, A.2a, A.2b, A.3, A.4, then the width-8
+/// rungs (not in the paper — this testbed's AVX2 extension).
 fn paper_order(label: &str) -> usize {
-    ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4"]
+    ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8"]
         .iter()
         .position(|&l| l == label)
         .unwrap_or(usize::MAX)

@@ -11,10 +11,10 @@
 //!   (A.1: `graph_edges`, `incident_edges`, `isATauEdge`, per-edge `J`);
 //! * [`layout::CsrLayout`]     — the Figure-5/6 flat per-spin edge arrays
 //!   with the two tau edges reordered last (A.2);
-//! * [`reorder::Interlace4`]   — the §3.1 4-way layer interlacing under
-//!   which quadruplets of corresponding spins are adjacent in memory
-//!   (A.3/A.4), plus the W-way interlacing used by the accelerator
-//!   artifacts (B.2).
+//! * [`reorder::InterlaceW`]   — the §3.1 W-way layer interlacing under
+//!   which groups of corresponding spins are adjacent in memory (W = 4
+//!   for the SSE rungs, W = 8 for AVX2), plus the W = L interlacing used
+//!   by the accelerator artifacts (B.2).
 
 pub mod builder;
 pub mod graph;

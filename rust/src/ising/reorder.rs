@@ -1,31 +1,34 @@
 //! Spin reordering — the enabling transformation for explicit
-//! vectorization (paper §3.1, Figure 12).
+//! vectorization (paper §3.1, Figure 12), generic over the lane width.
 //!
-//! [`Interlace4`] splits the `L` layers into 4 sections and interlaces
-//! them: spin `(l, v)` with `l = m·L/4 + r` (section `m`, row `r`) moves
-//! to index `(r·n + v)·4 + m`.  The four spins of a *quadruplet*
-//! `q = r·n + v` are then corresponding spins of the 4 sections — at
-//! least `L/4 ≥ 2` layers apart, hence never adjacent — and sit in 4
+//! [`InterlaceW`] splits the `L` layers into `W` sections and interlaces
+//! them: spin `(l, v)` with `l = m·L/W + r` (section `m`, row `r`) moves
+//! to index `(r·n + v)·W + m`.  The `W` spins of a *group*
+//! `g = r·n + v` are then corresponding spins of the `W` sections — at
+//! least `L/W ≥ 2` layers apart, hence never adjacent — and sit in `W`
 //! consecutive memory cells, so
 //!
-//! * flip decisions for a quadruplet are one 4-lane vector op (A.3), and
-//! * a quadruplet's tau neighbours form *another quadruplet* ("they also
-//!   always update spins that form another quadruplet, except when an
-//!   update wraps around between the first and last layers"), so
-//!   neighbour updates are vector ops too (A.4); the section boundaries
-//!   (`r = 0` and `r = L/4 − 1`) wrap with a lane rotation.
+//! * flip decisions for a group are one `W`-lane vector op (A.3), and
+//! * a group's tau neighbours form *another group* ("they also always
+//!   update spins that form another quadruplet, except when an update
+//!   wraps around between the first and last layers"), so neighbour
+//!   updates are vector ops too (A.4); the section boundaries (`r = 0`
+//!   and `r = L/W − 1`) wrap with a lane rotation.
 //!
-//! The same construction with W lanes ([`interlace_w`]) is the
+//! `W = 4` is the paper's SSE quadruplet layout, `W = 8` the AVX2 octet
+//! layout.  The same construction with `W = L` ([`interlace_w`]) is the
 //! accelerator's memory-coalescing reorder (§3.2).
 
 use super::model::QmcModel;
 
-/// 4-way layer interlacing of a [`QmcModel`]'s spin order.
+/// W-way layer interlacing of a [`QmcModel`]'s spin order.
 #[derive(Clone)]
-pub struct Interlace4 {
+pub struct InterlaceW {
     pub n_base: usize,
     pub n_layers: usize,
-    /// Rows per section, `L / 4`.
+    /// Lane count (number of sections).
+    pub w: usize,
+    /// Rows per section, `L / W`.
     pub rows: usize,
     /// `perm[original_index] = new_index`.
     pub perm: Vec<u32>,
@@ -33,12 +36,13 @@ pub struct Interlace4 {
     pub inv: Vec<u32>,
 }
 
-impl Interlace4 {
-    pub fn new(m: &QmcModel) -> Self {
+impl InterlaceW {
+    pub fn new(m: &QmcModel, w: usize) -> Self {
         let (n, l) = (m.base.n, m.n_layers);
-        assert!(l % 4 == 0, "L must be a multiple of 4 for 4-way interlacing");
-        assert!(l / 4 >= 2, "sections must hold >= 2 layers so quadruplet spins are non-adjacent");
-        let rows = l / 4;
+        assert!(w >= 2, "need at least 2 sections");
+        assert!(l % w == 0, "L must be a multiple of {w} for {w}-way interlacing");
+        assert!(l / w >= 2, "sections must hold >= 2 layers so group spins are non-adjacent");
+        let rows = l / w;
         let ns = n * l;
         let mut perm = vec![0u32; ns];
         let mut inv = vec![0u32; ns];
@@ -46,22 +50,22 @@ impl Interlace4 {
             let (m_sec, r) = (layer / rows, layer % rows);
             for v in 0..n {
                 let orig = layer * n + v;
-                let new = (r * n + v) * 4 + m_sec;
+                let new = (r * n + v) * w + m_sec;
                 perm[orig] = new as u32;
                 inv[new] = orig as u32;
             }
         }
-        Self { n_base: n, n_layers: l, rows, perm, inv }
+        Self { n_base: n, n_layers: l, w, rows, perm, inv }
     }
 
-    /// Number of quadruplets (`rows * n_base`).
-    pub fn n_quads(&self) -> usize {
+    /// Number of groups (`rows * n_base`).
+    pub fn n_groups(&self) -> usize {
         self.rows * self.n_base
     }
 
-    /// Quadruplet id of row `r`, vertex `v`.
+    /// Group id of row `r`, vertex `v`.
     #[inline]
-    pub fn quad(&self, r: usize, v: usize) -> usize {
+    pub fn group(&self, r: usize, v: usize) -> usize {
         r * self.n_base + v
     }
 
@@ -111,75 +115,90 @@ mod tests {
     }
 
     #[test]
-    fn is_a_permutation() {
-        let m = model(5, 12);
-        let it = Interlace4::new(&m);
-        let mut seen = vec![false; m.n_spins()];
-        for &p in &it.perm {
-            assert!(!seen[p as usize], "duplicate target {p}");
-            seen[p as usize] = true;
+    fn is_a_permutation_at_both_widths() {
+        for (l, w) in [(12, 4), (16, 8), (32, 8)] {
+            let m = model(5, l);
+            let it = InterlaceW::new(&m, w);
+            let mut seen = vec![false; m.n_spins()];
+            for &p in &it.perm {
+                assert!(!seen[p as usize], "w={w}: duplicate target {p}");
+                seen[p as usize] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
         }
-        assert!(seen.iter().all(|&b| b));
     }
 
     #[test]
     fn roundtrips() {
-        let m = model(4, 8);
-        let it = Interlace4::new(&m);
-        let mut rng = Lcg::new(3);
-        let s = m.random_state(&mut rng);
-        assert_eq!(it.to_original(&it.to_interlaced(&s)), s);
+        for w in [4usize, 8] {
+            let m = model(4, 16);
+            let it = InterlaceW::new(&m, w);
+            let mut rng = Lcg::new(3);
+            let s = m.random_state(&mut rng);
+            assert_eq!(it.to_original(&it.to_interlaced(&s)), s);
+        }
     }
 
     #[test]
-    fn quadruplet_members_are_section_corresponding_spins() {
-        let m = model(3, 16); // rows = 4
-        let it = Interlace4::new(&m);
-        for r in 0..it.rows {
-            for v in 0..3 {
-                let q = it.quad(r, v);
-                for lane in 0..4 {
-                    let orig = it.inv[4 * q + lane] as usize;
-                    let (layer, vert) = (orig / 3, orig % 3);
-                    assert_eq!(vert, v);
-                    assert_eq!(layer, lane * it.rows + r);
+    fn group_members_are_section_corresponding_spins() {
+        for w in [4usize, 8] {
+            let m = model(3, 4 * w); // rows = 4
+            let it = InterlaceW::new(&m, w);
+            for r in 0..it.rows {
+                for v in 0..3 {
+                    let g = it.group(r, v);
+                    for lane in 0..w {
+                        let orig = it.inv[w * g + lane] as usize;
+                        let (layer, vert) = (orig / 3, orig % 3);
+                        assert_eq!(vert, v);
+                        assert_eq!(layer, lane * it.rows + r);
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn quadruplet_spins_never_adjacent() {
-        // Members of one quadruplet are >= rows >= 2 layers apart and on
-        // the same vertex, so no tau or space edge can join them.
-        let m = model(4, 8);
-        let it = Interlace4::new(&m);
-        for q in 0..it.n_quads() {
-            let layers: Vec<usize> = (0..4).map(|k| it.inv[4 * q + k] as usize / 4).collect();
-            for a in 0..4 {
-                for b in (a + 1)..4 {
-                    let d = layers[a].abs_diff(layers[b]);
-                    let wrap = m.n_layers - d;
-                    assert!(d.min(wrap) >= 2, "quad {q}: layers {layers:?}");
+    fn group_spins_never_adjacent() {
+        // Members of one group are >= rows >= 2 layers apart and on the
+        // same vertex, so no tau or space edge can join them.
+        for w in [4usize, 8] {
+            let m = model(4, 2 * w);
+            let it = InterlaceW::new(&m, w);
+            for g in 0..it.n_groups() {
+                let layers: Vec<usize> =
+                    (0..w).map(|k| it.inv[w * g + k] as usize / 4).collect();
+                for a in 0..w {
+                    for b in (a + 1)..w {
+                        let d = layers[a].abs_diff(layers[b]);
+                        let wrap = m.n_layers - d;
+                        assert!(d.min(wrap) >= 2, "w={w} group {g}: layers {layers:?}");
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn tau_neighbours_form_quadruplets_off_boundary() {
-        let m = model(3, 16);
-        let it = Interlace4::new(&m);
-        // For rows 0 < r < rows-1: the up-neighbour quadruplet of (r, v)
-        // is (r+1, v), lane-aligned.
-        for r in 1..it.rows - 1 {
-            for v in 0..3 {
-                let q = it.quad(r, v);
-                for lane in 0..4 {
-                    let orig = it.inv[4 * q + lane] as usize;
-                    let (layer, vert) = (orig / 3, orig % 3);
-                    let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
-                    assert_eq!(it.perm[up_orig] as usize, 4 * it.quad(r + 1, v) + lane);
+    fn tau_neighbours_form_groups_off_boundary() {
+        for w in [4usize, 8] {
+            let m = model(3, 4 * w);
+            let it = InterlaceW::new(&m, w);
+            // For rows 0 < r < rows-1: the up-neighbour group of (r, v) is
+            // (r+1, v), lane-aligned.
+            for r in 1..it.rows - 1 {
+                for v in 0..3 {
+                    let g = it.group(r, v);
+                    for lane in 0..w {
+                        let orig = it.inv[w * g + lane] as usize;
+                        let (layer, vert) = (orig / 3, orig % 3);
+                        let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
+                        assert_eq!(
+                            it.perm[up_orig] as usize,
+                            w * it.group(r + 1, v) + lane,
+                            "w={w}"
+                        );
+                    }
                 }
             }
         }
@@ -187,24 +206,34 @@ mod tests {
 
     #[test]
     fn boundary_wrap_is_lane_rotation() {
-        // At r = rows-1 the up-neighbour is lane+1 of quadruplet (0, v)
-        // (section m -> m+1; section 3 wraps to layer 0 = section 0).
-        let m = model(3, 16);
-        let it = Interlace4::new(&m);
-        let r = it.rows - 1;
-        for v in 0..3 {
-            let q = it.quad(r, v);
-            for lane in 0..4 {
-                let orig = it.inv[4 * q + lane] as usize;
-                let (layer, vert) = (orig / 3, orig % 3);
-                let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
-                assert_eq!(
-                    it.perm[up_orig] as usize,
-                    4 * it.quad(0, v) + (lane + 1) % 4,
-                    "lane {lane}"
-                );
+        // At r = rows-1 the up-neighbour is lane+1 of group (0, v)
+        // (section m -> m+1; the last section wraps to layer 0 = section 0).
+        for w in [4usize, 8] {
+            let m = model(3, 4 * w);
+            let it = InterlaceW::new(&m, w);
+            let r = it.rows - 1;
+            for v in 0..3 {
+                let g = it.group(r, v);
+                for lane in 0..w {
+                    let orig = it.inv[w * g + lane] as usize;
+                    let (layer, vert) = (orig / 3, orig % 3);
+                    let up_orig = ((layer + 1) % m.n_layers) * 3 + vert;
+                    assert_eq!(
+                        it.perm[up_orig] as usize,
+                        w * it.group(0, v) + (lane + 1) % w,
+                        "w={w} lane {lane}"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn invalid_widths_are_rejected() {
+        let m = model(3, 12);
+        assert!(std::panic::catch_unwind(|| InterlaceW::new(&m, 8)).is_err()); // 12 % 8 != 0
+        let m2 = model(3, 8);
+        assert!(std::panic::catch_unwind(|| InterlaceW::new(&m2, 8)).is_err()); // rows = 1
     }
 
     #[test]

@@ -9,13 +9,21 @@
 //!   library `exp`),
 //! * **A.2** + basic optimizations (branch elimination, flat edge arrays
 //!   with tau edges last, result caching, bit-trick `exp` approximation),
-//! * **A.3** + explicitly vectorized MT19937 (4 interlaced generators,
-//!   SSE2) and vectorized flip decisions over spin quadruplets,
-//! * **A.4** + fully vectorized neighbour updates via 4-way layer
+//! * **A.3** + explicitly vectorized MT19937 (W interlaced generators)
+//!   and vectorized flip decisions over spin groups,
+//! * **A.4** + fully vectorized neighbour updates via W-way layer
 //!   interlacing of the spin order,
+//! * **A.3w8/A.4w8** the same rungs at 8 lanes — AVX2 when the host has
+//!   it (runtime-detected), portable lanes otherwise,
 //! * **B.1/B.2** the accelerator ports (XLA artifacts AOT-compiled from
 //!   JAX+Pallas, executed through PJRT): naive gathered layout vs
 //!   coalesced interlaced layout.
+//!
+//! The whole CPU vector stack ([`simd`], [`rng`], [`expapprox`],
+//! [`ising::reorder`], [`sweep`]) is generic over the lane width `W`:
+//! SSE2 backs width 4, AVX2 width 8, and a const-generic portable
+//! implementation backs every other width and architecture.
+//! `sweep::make_sweeper` picks the backend at runtime.
 //!
 //! On top of the sweep ladder sit the systems the paper's workload needs:
 //! a parallel-tempering engine ([`tempering`]), a multi-threaded
@@ -27,10 +35,12 @@
 //!
 //! ```no_run
 //! use vectorising::ising::builder::torus_workload;
-//! use vectorising::sweep::{self, SweepKind};
+//! use vectorising::sweep::{self, SweepKind, Sweeper};
 //!
 //! let wl = torus_workload(8, 8, 32, 1, 0.3);
-//! let mut sim = sweep::make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489);
+//! // The widest rung this host supports (A.4w8 on AVX2, A.4 otherwise).
+//! let kind = SweepKind::preferred_cpu();
+//! let mut sim = sweep::make_sweeper(kind, &wl.model, &wl.s0, 5489).unwrap();
 //! sim.run(100, 0.5);
 //! println!("energy = {}", sim.energy());
 //! ```

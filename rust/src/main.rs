@@ -3,7 +3,7 @@
 //! Subcommands map one-to-one onto the paper's evaluation artifacts:
 //!
 //! ```text
-//! repro run        --kind a4-full ...     # full PT simulation + report
+//! repro run        --kind a4-full-w8 ...  # full PT simulation + report
 //! repro table1                            # implementation matrix
 //! repro table2     [--opt0-bin PATH]      # pairwise speedups (+ Fig 15)
 //! repro fig13      [--accel]              # ladder x threads (+ B.1/B.2)
@@ -35,7 +35,10 @@ repro — reproduction of 'Importance of Explicit Vectorization for CPU and GPU 
 USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
-  run              full parallel-tempering simulation (--kind a1..a4|b1|b2, --json)
+  run              full parallel-tempering simulation (--json)
+                   --kind a1..a4 | a3-vec-rng-w8 | a4-full-w8 | b1 | b2
+                   (default: widest CPU rung the host + layer count support
+                    — a4-full-w8 with AVX2 and 8|layers, a4-full otherwise)
   table1           implementation matrix (paper Table 1)
   table2           pairwise CPU speedups, 1 core (paper Table 2 + Fig 15)
                    [--opt0-bin target/opt0/repro | --skip-opt0] [--csv PATH]
@@ -94,7 +97,13 @@ fn main() -> Result<()> {
     match sub.as_str() {
         "run" => {
             let cfg = workload_config(&args)?;
-            let kind = SweepKind::from_str(args.str_or("kind", "a4-full"))?;
+            let kind = match args.str_opt("kind") {
+                Some(s) => SweepKind::from_str(s)?,
+                // Default: the widest lane count this host has a backend
+                // for (AVX2 octets when detected, SSE quadruplets else),
+                // narrowed to what the layer count supports.
+                None => SweepKind::preferred_cpu_for_layers(cfg.layers),
+            };
             let report = match kind {
                 SweepKind::B1Accel | SweepKind::B2Accel => run_accel(&cfg, kind)?,
                 _ => coordinator::run(&cfg, kind)?,

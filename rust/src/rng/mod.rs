@@ -1,34 +1,43 @@
-//! Mersenne Twister 19937 — scalar reference, 4-way SSE interlaced, and
-//! W-way interlaced generators.
+//! Mersenne Twister 19937 — scalar reference, width-generic SIMD
+//! interlaced, and W-way scalar-interlaced generators.
 //!
 //! The paper (§3) observes that after the basic optimizations "a majority
 //! of CPU time was being spent generating the large volume of random
 //! numbers", and interlaces 4 MT19937 generators with different seeds so
 //! that SSE advances all 4 in lock-step — "keeps 4x624 = 2,496 numbers and
 //! uses SSE to generate 4 random numbers in roughly the same time as each
-//! random number before".
+//! random number before".  Modern x86 doubles that: the same loop on AVX2
+//! advances 8 generators per instruction.
 //!
-//! * [`Mt19937`]    — scalar reference (A.1/A.2 rungs), transcribed from
-//!                    Matsumoto & Nishimura's published code.
-//! * [`Mt19937x4`]  — the paper's 4-way interlaced SSE generator
-//!                    (A.3/A.4 rungs); lane `k` is bit-exact to a scalar
-//!                    generator seeded with `seeds[k]`.
-//! * [`Mt19937Wide`]— W-way interlaced generator (any W), the rust twin of
-//!                    the accelerator's `(624, W)` kernel; used to produce
-//!                    host-side streams matching the artifacts and to seed
-//!                    their state buffers.
+//! * [`Mt19937`]     — scalar reference (A.1/A.2 rungs), transcribed from
+//!                     Matsumoto & Nishimura's published code.
+//! * [`Mt19937Simd`] — W-way interlaced SIMD generator, generic over the
+//!                     [`crate::simd::SimdU32`] backend: `U32x4` is the
+//!                     paper's 4-way SSE form (alias [`Mt19937x4`]),
+//!                     `avx2::U32x8` the 8-way AVX2 form, and the portable
+//!                     lanes cover every other width/arch.  Lane `k` is
+//!                     bit-exact to a scalar generator seeded with
+//!                     `seeds[k]`.
+//! * [`Mt19937Wide`] — W-way interlaced scalar generator (any W), the rust
+//!                     twin of the accelerator's `(624, W)` kernel; used to
+//!                     produce host-side streams matching the artifacts and
+//!                     to seed their state buffers.
 //!
 //! All variants map `u32 -> f32` uniforms identically: the top 24 bits,
 //! `(u >> 8) * 2^-24`, so a decision made on any rung is reproducible on
 //! any other.
 
 mod mt19937;
-mod mt19937x4;
+mod mt19937simd;
 mod wide;
 
 pub use mt19937::Mt19937;
-pub use mt19937x4::Mt19937x4;
+pub use mt19937simd::Mt19937Simd;
 pub use wide::Mt19937Wide;
+
+/// The paper's 4-way interlaced SSE generator (A.3/A.4 rungs at the
+/// paper's width) — [`Mt19937Simd`] on the default 4-lane backend.
+pub type Mt19937x4 = Mt19937Simd<crate::simd::U32x4>;
 
 pub(crate) const N: usize = 624;
 pub(crate) const M: usize = 397;
@@ -58,6 +67,7 @@ pub(crate) fn seed_array(seed: u32) -> [u32; N] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simd::{portable, SimdU32};
 
     /// First outputs of the reference MT19937 for seed 5489 (the canonical
     /// default seed) — published golden values.
@@ -74,17 +84,53 @@ mod tests {
         }
     }
 
+    /// Lane-exactness of the SIMD generator on backend `U`: every lane
+    /// reproduces the scalar stream for its seed, across two twist
+    /// boundaries.
+    fn assert_lanes_match_scalar<U: SimdU32>(seeds: &[u32]) {
+        let mut vec_rng = Mt19937Simd::<U>::new(seeds);
+        let mut scalars: Vec<Mt19937> = seeds.iter().map(|&s| Mt19937::new(s)).collect();
+        let mut row = vec![0u32; U::LANES];
+        for step in 0..1400 {
+            vec_rng.next_into(&mut row);
+            for (k, &v) in row.iter().enumerate() {
+                assert_eq!(v, scalars[k].next_u32(), "step {step} lane {k}");
+            }
+        }
+    }
+
     #[test]
     fn x4_lanes_match_scalar_streams() {
-        let seeds = [5489u32, 1, 0xdead_beef, 4294967295];
-        let mut vec_rng = Mt19937x4::new(seeds);
-        let mut scalars: Vec<Mt19937> = seeds.iter().map(|&s| Mt19937::new(s)).collect();
-        // cross two twist boundaries
-        for step in 0..1400 {
-            let quad = vec_rng.next4_u32();
-            for k in 0..4 {
-                assert_eq!(quad[k], scalars[k].next_u32(), "step {step} lane {k}");
-            }
+        assert_lanes_match_scalar::<crate::simd::U32x4>(&[5489, 1, 0xdead_beef, 4294967295]);
+    }
+
+    #[test]
+    fn portable_w4_and_w8_lanes_match_scalar_streams() {
+        assert_lanes_match_scalar::<portable::U32xN<4>>(&[5489, 1, 0xdead_beef, 4294967295]);
+        let seeds8: Vec<u32> = (0..8).map(|k| 42 + 7 * k).collect();
+        assert_lanes_match_scalar::<portable::U32xN<8>>(&seeds8);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_lanes_match_scalar_streams() {
+        if !crate::simd::avx2_available() {
+            eprintln!("skipping avx2 MT19937 test: host has no AVX2");
+            return;
+        }
+        let seeds8: Vec<u32> = (0..8).map(|k| 42 + 7 * k).collect();
+        assert_lanes_match_scalar::<crate::simd::avx2::U32x8>(&seeds8);
+    }
+
+    #[test]
+    fn from_base_seed_uses_consecutive_seeds() {
+        let mut a = Mt19937Simd::<portable::U32xN<4>>::from_base_seed(100);
+        let mut b = Mt19937Simd::<portable::U32xN<4>>::new(&[100, 101, 102, 103]);
+        let (mut ra, mut rb) = ([0u32; 4], [0u32; 4]);
+        for _ in 0..100 {
+            a.next_into(&mut ra);
+            b.next_into(&mut rb);
+            assert_eq!(ra, rb);
         }
     }
 

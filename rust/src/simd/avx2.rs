@@ -1,0 +1,467 @@
+//! AVX2 implementations of the 8-wide primitives (x86_64).
+//!
+//! The same operation set as the SSE2 backend, twice as wide: one `__m256i`
+//! / `__m256` register holds a whole octet, so the paper's Figure-10 mask
+//! sequence, the MT19937 recurrence, and the bit-trick exponential all run
+//! on 8 lanes per instruction.  Unlike SSE2, AVX2 is *not* part of the
+//! x86_64 baseline, so these types must only be constructed after
+//! [`super::avx2_available`] returned `true`; `make_sweeper` and the
+//! benches do that runtime dispatch.
+//!
+//! The hot loops that use these wrappers run inside
+//! [`SimdU32::with_features`], which re-enters codegen with
+//! `#[target_feature(enable = "avx2")]` so the intrinsics inline instead of
+//! staying opaque calls.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
+
+use super::{SimdF32, SimdU32};
+
+/// Debug-build guard on every constructor: all `U32x8`/`F32x8` values
+/// originate from a splat/zero/load/`From`, so asserting detection here
+/// catches safe-code misuse on non-AVX2 hosts before it reaches UB.
+/// Release builds compile this away (the construction invariant is
+/// upheld by `make_sweeper`'s runtime dispatch).
+#[inline(always)]
+fn debug_check_avx2() {
+    debug_assert!(
+        super::avx2_available(),
+        "avx2::U32x8/F32x8 constructed on a host without AVX2 — gate on simd::avx2_available()"
+    );
+}
+
+/// Eight packed `u32` lanes (one `__m256i`).
+#[derive(Copy, Clone)]
+pub struct U32x8(pub(crate) __m256i);
+
+/// Eight packed `f32` lanes (one `__m256`).
+#[derive(Copy, Clone)]
+pub struct F32x8(pub(crate) __m256);
+
+impl From<[u32; 8]> for U32x8 {
+    #[inline(always)]
+    fn from(a: [u32; 8]) -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_loadu_si256(a.as_ptr() as *const __m256i)) }
+    }
+}
+
+impl From<[f32; 8]> for F32x8 {
+    #[inline(always)]
+    fn from(a: [f32; 8]) -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_loadu_ps(a.as_ptr())) }
+    }
+}
+
+impl U32x8 {
+    /// All eight lanes set to `v` (VPBROADCASTD).
+    #[inline(always)]
+    pub fn splat(v: u32) -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_set1_epi32(v as i32)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_setzero_si256()) }
+    }
+
+    /// Unaligned load of 8 consecutive values.
+    #[inline(always)]
+    pub fn load(src: &[u32]) -> Self {
+        debug_check_avx2();
+        debug_assert!(src.len() >= 8);
+        unsafe { Self(_mm256_loadu_si256(src.as_ptr() as *const __m256i)) }
+    }
+
+    /// Unaligned store of the 8 lanes.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u32]) {
+        debug_assert!(dst.len() >= 8);
+        unsafe { _mm256_storeu_si256(dst.as_mut_ptr() as *mut __m256i, self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [u32; 8] {
+        let mut out = [0u32; 8];
+        unsafe { _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, self.0) };
+        out
+    }
+
+    /// Logical shift right by a count (VPSRLD).
+    #[inline(always)]
+    pub fn shr(self, count: i32) -> Self {
+        unsafe { Self(_mm256_srl_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Logical shift left by a count (VPSLLD).
+    #[inline(always)]
+    pub fn shl(self, count: i32) -> Self {
+        unsafe { Self(_mm256_sll_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Wrapping lane-wise addition (VPADDD).
+    #[inline(always)]
+    pub fn wrapping_add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_add_epi32(self.0, rhs.0)) }
+    }
+
+    /// `mask ? a : b` per lane — the Figure-10 ternary as
+    /// `(mask & a) | (andnot(mask) & b)`.
+    #[inline(always)]
+    pub fn select(mask: Self, a: Self, b: Self) -> Self {
+        unsafe {
+            Self(_mm256_or_si256(_mm256_and_si256(mask.0, a.0), _mm256_andnot_si256(mask.0, b.0)))
+        }
+    }
+
+    /// Lane mask: all-ones where `(lane & 1) == 1` (VPAND + VPCMPEQD).
+    #[inline(always)]
+    pub fn lsb_mask(self) -> Self {
+        unsafe {
+            let one = _mm256_set1_epi32(1);
+            Self(_mm256_cmpeq_epi32(_mm256_and_si256(self.0, one), one))
+        }
+    }
+
+    /// Reinterpret the 256 bits as 8 floats (no conversion).
+    #[inline(always)]
+    pub fn bitcast_f32(self) -> F32x8 {
+        unsafe { F32x8(_mm256_castsi256_ps(self.0)) }
+    }
+
+    /// Signed-i32 lane view of a store.
+    #[inline(always)]
+    pub fn to_array_i32(self) -> [i32; 8] {
+        self.to_array().map(|x| x as i32)
+    }
+
+    /// Convert each lane's *signed* value to f32 (VCVTDQ2PS).
+    #[inline(always)]
+    pub fn to_f32_from_i32(self) -> F32x8 {
+        unsafe { F32x8(_mm256_cvtepi32_ps(self.0)) }
+    }
+
+    /// 8-bit mask of each lane's sign bit (VMOVMSKPS).
+    #[inline(always)]
+    pub fn movemask(self) -> u32 {
+        unsafe { _mm256_movemask_ps(_mm256_castsi256_ps(self.0)) as u32 }
+    }
+}
+
+impl BitAnd for U32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitand(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_and_si256(self.0, rhs.0)) }
+    }
+}
+
+impl BitOr for U32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_or_si256(self.0, rhs.0)) }
+    }
+}
+
+impl BitXor for U32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitxor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_xor_si256(self.0, rhs.0)) }
+    }
+}
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_set1_ps(v)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        debug_check_avx2();
+        unsafe { Self(_mm256_setzero_ps()) }
+    }
+
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        debug_check_avx2();
+        debug_assert!(src.len() >= 8);
+        unsafe { Self(_mm256_loadu_ps(src.as_ptr())) }
+    }
+
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 8);
+        unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), self.0) };
+        out
+    }
+
+    /// Unchecked load of 8 values at `src[off..off+8]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 8 <= src.len()`.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        debug_check_avx2();
+        debug_assert!(off + 8 <= src.len());
+        Self(_mm256_loadu_ps(src.as_ptr().add(off)))
+    }
+
+    /// Unchecked store of the 8 lanes to `dst[off..off+8]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 8 <= dst.len()`.
+    #[inline(always)]
+    pub unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 8 <= dst.len());
+        _mm256_storeu_ps(dst.as_mut_ptr().add(off), self.0)
+    }
+
+    /// Lane mask (all-ones u32) where `self < rhs` (VCMPPS, LT_OS — the
+    /// predicate `_mm_cmplt_ps` encodes).
+    #[inline(always)]
+    pub fn lt(self, rhs: Self) -> U32x8 {
+        unsafe { U32x8(_mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OS>(self.0, rhs.0))) }
+    }
+
+    /// Truncating float→int conversion (VCVTTPS2DQ) — C cast semantics.
+    #[inline(always)]
+    pub fn to_i32_trunc(self) -> U32x8 {
+        unsafe { U32x8(_mm256_cvttps_epi32(self.0)) }
+    }
+
+    /// Reinterpret the 256 bits as 8 u32 lanes (no conversion).
+    #[inline(always)]
+    pub fn bitcast_u32(self) -> U32x8 {
+        unsafe { U32x8(_mm256_castps_si256(self.0)) }
+    }
+
+    /// Approximate reciprocal square root (VRSQRTPS) — same 1.5 * 2^-12
+    /// error spec as the SSE instruction.
+    #[inline(always)]
+    pub fn rsqrt_approx(self) -> Self {
+        unsafe { Self(_mm256_rsqrt_ps(self.0)) }
+    }
+
+    /// Exact lane-wise square root (VSQRTPS).
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        unsafe { Self(_mm256_sqrt_ps(self.0)) }
+    }
+
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_max_ps(self.0, rhs.0)) }
+    }
+
+    #[inline(always)]
+    pub fn min(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_min_ps(self.0, rhs.0)) }
+    }
+
+    /// Lane-wise negation (sign-bit XOR — one VXORPS).
+    #[inline(always)]
+    pub fn neg(self) -> Self {
+        unsafe { Self(_mm256_xor_ps(self.0, _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN)))) }
+    }
+
+    /// Rotate values one lane upward: `out[k] = in[(k+7) % 8]` — each value
+    /// moves to the next-higher lane, lane 7 wraps to lane 0
+    /// (VPERMPS crosses the 128-bit halves, which VSHUFPS cannot).
+    #[inline(always)]
+    pub fn rot_up(self) -> Self {
+        unsafe {
+            let idx = _mm256_setr_epi32(7, 0, 1, 2, 3, 4, 5, 6);
+            Self(_mm256_permutevar8x32_ps(self.0, idx))
+        }
+    }
+
+    /// Rotate values one lane downward: `out[k] = in[(k+1) % 8]` (lane 0
+    /// wraps to lane 7) — the inverse boundary wrap.
+    #[inline(always)]
+    pub fn rot_down(self) -> Self {
+        unsafe {
+            let idx = _mm256_setr_epi32(1, 2, 3, 4, 5, 6, 7, 0);
+            Self(_mm256_permutevar8x32_ps(self.0, idx))
+        }
+    }
+}
+
+impl Add for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_add_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Sub for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_sub_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Mul for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        unsafe { Self(_mm256_mul_ps(self.0, rhs.0)) }
+    }
+}
+
+// ---- width-generic trait plumbing (delegates to the inherent methods) ----
+
+impl SimdU32 for U32x8 {
+    const LANES: usize = 8;
+    type F = F32x8;
+
+    #[inline(always)]
+    fn splat(v: u32) -> Self {
+        U32x8::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        U32x8::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[u32]) -> Self {
+        U32x8::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [u32]) {
+        U32x8::store(self, dst)
+    }
+    #[inline(always)]
+    fn shr(self, count: i32) -> Self {
+        U32x8::shr(self, count)
+    }
+    #[inline(always)]
+    fn shl(self, count: i32) -> Self {
+        U32x8::shl(self, count)
+    }
+    #[inline(always)]
+    fn wrapping_add(self, rhs: Self) -> Self {
+        U32x8::wrapping_add(self, rhs)
+    }
+    #[inline(always)]
+    fn select(mask: Self, a: Self, b: Self) -> Self {
+        U32x8::select(mask, a, b)
+    }
+    #[inline(always)]
+    fn lsb_mask(self) -> Self {
+        U32x8::lsb_mask(self)
+    }
+    #[inline(always)]
+    fn bitcast_f32(self) -> F32x8 {
+        U32x8::bitcast_f32(self)
+    }
+    #[inline(always)]
+    fn to_f32_from_i32(self) -> F32x8 {
+        U32x8::to_f32_from_i32(self)
+    }
+    #[inline(always)]
+    fn movemask(self) -> u32 {
+        U32x8::movemask(self)
+    }
+
+    /// Re-enter codegen with AVX2 enabled so the wrapped intrinsics
+    /// inline into one contiguous vector loop.
+    ///
+    /// The debug assertion (not a runtime branch in release builds)
+    /// documents the construction invariant: `U32x8` values only exist
+    /// after [`super::avx2_available`] returned `true`.
+    #[inline(always)]
+    fn with_features<R, G: FnOnce() -> R>(f: G) -> R {
+        #[target_feature(enable = "avx2")]
+        unsafe fn vectorized<R, G: FnOnce() -> R>(f: G) -> R {
+            f()
+        }
+        debug_assert!(super::avx2_available());
+        // SAFETY: callers uphold the module invariant that AVX2 was
+        // detected before any U32x8/F32x8 value was created.
+        unsafe { vectorized(f) }
+    }
+}
+
+impl SimdF32 for F32x8 {
+    const LANES: usize = 8;
+    type U = U32x8;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x8::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        F32x8::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        F32x8::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        F32x8::store(self, dst)
+    }
+    #[inline(always)]
+    unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        F32x8::load_unchecked(src, off)
+    }
+    #[inline(always)]
+    unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        F32x8::store_unchecked(self, dst, off)
+    }
+    #[inline(always)]
+    fn lt(self, rhs: Self) -> U32x8 {
+        F32x8::lt(self, rhs)
+    }
+    #[inline(always)]
+    fn to_i32_trunc(self) -> U32x8 {
+        F32x8::to_i32_trunc(self)
+    }
+    #[inline(always)]
+    fn bitcast_u32(self) -> U32x8 {
+        F32x8::bitcast_u32(self)
+    }
+    #[inline(always)]
+    fn rsqrt_approx(self) -> Self {
+        F32x8::rsqrt_approx(self)
+    }
+    #[inline(always)]
+    fn max(self, rhs: Self) -> Self {
+        F32x8::max(self, rhs)
+    }
+    #[inline(always)]
+    fn min(self, rhs: Self) -> Self {
+        F32x8::min(self, rhs)
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        F32x8::neg(self)
+    }
+    #[inline(always)]
+    fn rot_up(self) -> Self {
+        F32x8::rot_up(self)
+    }
+    #[inline(always)]
+    fn rot_down(self) -> Self {
+        F32x8::rot_down(self)
+    }
+}

@@ -1,31 +1,160 @@
-//! 4-wide SIMD primitives — the substrate for the paper's §3 explicit
-//! vectorization.
+//! Width-generic SIMD primitives — the substrate for the paper's §3
+//! explicit vectorization.
 //!
-//! The paper hand-writes SSE assembly because "C++ compilers do not yet
-//! natively provide operators on 128-bit data types".  Stable Rust exposes
-//! the same instructions through `core::arch::x86_64`, so [`U32x4`] and
-//! [`F32x4`] are thin, safe, `#[inline(always)]` wrappers over exactly the
-//! intrinsics the paper's assembly uses (PAND/POR/PXOR/PSRLD/PSLLD for the
-//! Mersenne Twister, CVTTPS2DQ/PADDD/MULPS for the exponential trick,
-//! CMPLTPS + mask blending for the Figure-10 ternary operator).
+//! The paper hand-writes 4-lane SSE assembly because "C++ compilers do not
+//! yet natively provide operators on 128-bit data types".  Stable Rust
+//! exposes the same instructions through `core::arch::x86_64`, and this
+//! module generalizes them over the lane count `W`:
 //!
-//! A portable scalar-quad fallback keeps every other architecture working
-//! (and doubles as a differential-testing oracle on x86_64).
+//! * [`SimdU32`] / [`SimdF32`] — the operation set every backend provides
+//!   (exactly the instructions the paper's assembly uses: PAND/POR/PXOR/
+//!   PSRLD/PSLLD for the Mersenne Twister, CVTTPS2DQ/PADDD/MULPS for the
+//!   exponential trick, CMPLTPS + mask blending for the Figure-10 ternary);
+//! * [`sse`] — the 4-lane SSE2 backend (x86_64 baseline, no detection
+//!   needed — the paper's "present on modern commodity CPUs since 2001");
+//! * [`avx2`] — the 8-lane AVX2 backend (runtime-detected via
+//!   [`avx2_available`]);
+//! * [`portable`] — const-generic scalar lanes for *any* `W`: the real
+//!   implementation on non-x86_64 targets, the fallback for widths without
+//!   a hand-written backend, and the differential-testing oracle.
+//!
+//! Code that should run at any width is written against the traits; the
+//! concrete backend is chosen once at construction time (see
+//! `sweep::make_sweeper`), never per operation.
+
+use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
+
+pub mod portable;
 
 #[cfg(target_arch = "x86_64")]
-mod sse;
+pub mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub mod sse;
 #[cfg(target_arch = "x86_64")]
 pub use sse::{F32x4, U32x4};
 
 #[cfg(not(target_arch = "x86_64"))]
-mod portable;
-#[cfg(not(target_arch = "x86_64"))]
 pub use portable::{F32x4, U32x4};
 
-// The portable implementation is always compiled on x86_64 too, as a
-// differential oracle for the SSE wrappers.
-#[cfg(target_arch = "x86_64")]
-pub mod portable;
+/// Upper bound on the lane count of any backend (sizes the stack buffers
+/// generic code uses for per-lane fallbacks).
+pub const MAX_LANES: usize = 32;
+
+/// True when the 8-lane AVX2 backend can run on this host.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Widest lane count with a hand-written intrinsic backend on this host
+/// (8 with AVX2, otherwise the SSE2/portable width 4).
+pub fn widest_supported_width() -> usize {
+    if avx2_available() {
+        8
+    } else {
+        4
+    }
+}
+
+/// `W` unsigned 32-bit lanes — the integer half of a SIMD backend.
+///
+/// Implementations are thin wrappers over single instructions; every
+/// method is `#[inline(always)]` so the traits add no call overhead once
+/// the surrounding loop is monomorphized.
+pub trait SimdU32:
+    Copy + Send + Sync + 'static + BitAnd<Output = Self> + BitOr<Output = Self> + BitXor<Output = Self>
+{
+    /// Lane count `W`.
+    const LANES: usize;
+    /// The float type sharing this backend's registers.
+    type F: SimdF32<U = Self>;
+
+    fn splat(v: u32) -> Self;
+    fn zero() -> Self;
+    /// Unaligned load of `W` consecutive values from `src[..W]`.
+    fn load(src: &[u32]) -> Self;
+    /// Unaligned store of the `W` lanes to `dst[..W]`.
+    fn store(self, dst: &mut [u32]);
+    /// Logical shift right of every lane.
+    fn shr(self, count: i32) -> Self;
+    /// Logical shift left of every lane.
+    fn shl(self, count: i32) -> Self;
+    fn wrapping_add(self, rhs: Self) -> Self;
+    /// `mask ? a : b` per lane (mask lanes all-ones or all-zero).
+    fn select(mask: Self, a: Self, b: Self) -> Self;
+    /// All-ones where `(lane & 1) == 1` — the MT19937 ternary mask.
+    fn lsb_mask(self) -> Self;
+    fn bitcast_f32(self) -> Self::F;
+    /// Convert each lane's *signed* value to f32.
+    fn to_f32_from_i32(self) -> Self::F;
+    /// Bit k of the result = sign bit of lane k.
+    fn movemask(self) -> u32;
+
+    /// Run `f` inside a function compiled with this backend's target
+    /// features enabled, so the wrapped intrinsics inline into one
+    /// contiguous vector loop.  The default is a plain call (SSE2 and the
+    /// portable lanes need no extra features); the AVX2 backend overrides
+    /// it with an `#[target_feature(enable = "avx2")]` trampoline.
+    #[inline(always)]
+    fn with_features<R, G: FnOnce() -> R>(f: G) -> R {
+        f()
+    }
+}
+
+/// `W` `f32` lanes — the float half of a SIMD backend.
+pub trait SimdF32:
+    Copy + Send + Sync + 'static + Add<Output = Self> + Sub<Output = Self> + Mul<Output = Self>
+{
+    /// Lane count `W`.
+    const LANES: usize;
+    /// The integer type sharing this backend's registers.
+    type U: SimdU32<F = Self>;
+
+    fn splat(v: f32) -> Self;
+    fn zero() -> Self;
+    /// Unaligned load of `W` consecutive values from `src[..W]`.
+    fn load(src: &[f32]) -> Self;
+    /// Unaligned store of the `W` lanes to `dst[..W]`.
+    fn store(self, dst: &mut [f32]);
+    /// Unchecked load of `W` values at `src[off..off+W]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + W <= src.len()`.
+    unsafe fn load_unchecked(src: &[f32], off: usize) -> Self;
+    /// Unchecked store of the `W` lanes to `dst[off..off+W]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + W <= dst.len()`.
+    unsafe fn store_unchecked(self, dst: &mut [f32], off: usize);
+    /// Lane mask (all-ones u32) where `self < rhs`.
+    fn lt(self, rhs: Self) -> Self::U;
+    /// Truncating float→int conversion (CVTTPS2DQ semantics).
+    fn to_i32_trunc(self) -> Self::U;
+    fn bitcast_u32(self) -> Self::U;
+    /// Approximate reciprocal square root (RSQRTPS error spec).
+    fn rsqrt_approx(self) -> Self;
+    fn max(self, rhs: Self) -> Self;
+    fn min(self, rhs: Self) -> Self;
+    /// Lane-wise negation (sign-bit XOR).
+    fn neg(self) -> Self;
+    /// `out[k] = in[(k+W-1) % W]` — values move one lane up (the A.4
+    /// boundary-row tau wrap: section `m` to `m+1`).
+    fn rot_up(self) -> Self;
+    /// `out[k] = in[(k+1) % W]` — the inverse boundary wrap.
+    fn rot_down(self) -> Self;
+
+    /// `mask ? a : b` on float payloads (bitwise select).
+    #[inline(always)]
+    fn select_bits(mask: Self::U, a: Self, b: Self) -> Self {
+        <Self::U as SimdU32>::select(mask, a.bitcast_u32(), b.bitcast_u32()).bitcast_f32()
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -109,6 +238,40 @@ mod tests {
         assert_eq!(u.bitcast_f32().to_array(), [1.0, 2.0, 0.0, -2.0]);
     }
 
+    #[test]
+    fn portable_rotations_generalize_to_any_width() {
+        let v8 = portable::F32xN::<8>::from([0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(v8.rot_up().to_array(), [7.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(v8.rot_down().to_array(), [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 0.0]);
+        let v4 = portable::F32xN::<4>::from([0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(v4.rot_up().to_array(), [3.0, 0.0, 1.0, 2.0]);
+        assert_eq!(v4.rot_down().to_array(), [1.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn portable_w8_ops_match_scalar() {
+        let mut st = 0x9e37_79b9_7f4a_7c15u64;
+        let mut next = move || {
+            st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (st >> 32) as u32
+        };
+        for _ in 0..500 {
+            let a: [u32; 8] = std::array::from_fn(|_| next());
+            let b: [u32; 8] = std::array::from_fn(|_| next());
+            let (va, vb) = (portable::U32xN::<8>::from(a), portable::U32xN::<8>::from(b));
+            assert_eq!((va & vb).to_array(), std::array::from_fn(|k| a[k] & b[k]));
+            assert_eq!((va ^ vb).to_array(), std::array::from_fn(|k| a[k] ^ b[k]));
+            assert_eq!(
+                va.wrapping_add(vb).to_array(),
+                std::array::from_fn(|k| a[k].wrapping_add(b[k]))
+            );
+            assert_eq!(va.shr(11).to_array(), a.map(|x| x >> 11));
+            assert_eq!(va.lsb_mask().to_array(), a.map(|x| if x & 1 == 1 { !0u32 } else { 0 }));
+            let expect_mm = (0..8).map(|k| (a[k] >> 31) << k).sum::<u32>();
+            assert_eq!(va.movemask(), expect_mm);
+        }
+    }
+
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn sse_matches_portable_on_random_inputs() {
@@ -134,6 +297,66 @@ mod tests {
             let pfa = portable::F32x4::from(fa);
             assert_eq!(sfa.to_i32_trunc().to_array_i32(), pfa.to_i32_trunc().to_array_i32());
             assert_eq!(sfa.bitcast_u32().to_array(), pfa.bitcast_u32().to_array());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_portable_on_random_inputs() {
+        // Differential test: every op, AVX2 vs the 8-lane portable oracle.
+        if !avx2_available() {
+            eprintln!("skipping avx2 differential test: host has no AVX2");
+            return;
+        }
+        let mut st = 0x0dd0_2d2a_1357_9bdfu64;
+        let mut next = move || {
+            st = st.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (st >> 32) as u32
+        };
+        for _ in 0..2000 {
+            let a: [u32; 8] = std::array::from_fn(|_| next());
+            let b: [u32; 8] = std::array::from_fn(|_| next());
+            let (va, vb) = (avx2::U32x8::from(a), avx2::U32x8::from(b));
+            let (pa, pb) = (portable::U32xN::<8>::from(a), portable::U32xN::<8>::from(b));
+            assert_eq!((va & vb).to_array(), (pa & pb).to_array());
+            assert_eq!((va | vb).to_array(), (pa | pb).to_array());
+            assert_eq!((va ^ vb).to_array(), (pa ^ pb).to_array());
+            assert_eq!(va.wrapping_add(vb).to_array(), pa.wrapping_add(pb).to_array());
+            for sh in [1, 7, 8, 11, 15, 18, 30] {
+                assert_eq!(va.shr(sh).to_array(), pa.shr(sh).to_array());
+                assert_eq!(va.shl(sh).to_array(), pa.shl(sh).to_array());
+            }
+            assert_eq!(va.lsb_mask().to_array(), pa.lsb_mask().to_array());
+            assert_eq!(va.movemask(), pa.movemask());
+            assert_eq!(
+                avx2::U32x8::select(va.lsb_mask(), va, vb).to_array(),
+                portable::U32xN::<8>::select(pa.lsb_mask(), pa, pb).to_array()
+            );
+
+            let fa: [f32; 8] = std::array::from_fn(|k| a[k] as f32 / 1e4 - 100_000.0);
+            let fb: [f32; 8] = std::array::from_fn(|k| b[k] as f32 / 1e4 - 100_000.0);
+            let (vfa, vfb) = (avx2::F32x8::from(fa), avx2::F32x8::from(fb));
+            let (pfa, pfb) = (portable::F32xN::<8>::from(fa), portable::F32xN::<8>::from(fb));
+            assert_eq!((vfa + vfb).to_array(), (pfa + pfb).to_array());
+            assert_eq!((vfa - vfb).to_array(), (pfa - pfb).to_array());
+            assert_eq!((vfa * vfb).to_array(), (pfa * pfb).to_array());
+            assert_eq!(vfa.lt(vfb).to_array(), pfa.lt(pfb).to_array());
+            assert_eq!(vfa.max(vfb).to_array(), pfa.max(pfb).to_array());
+            assert_eq!(vfa.min(vfb).to_array(), pfa.min(pfb).to_array());
+            assert_eq!(vfa.neg().to_array(), pfa.neg().to_array());
+            assert_eq!(vfa.to_i32_trunc().to_array_i32(), pfa.to_i32_trunc().to_array_i32());
+            assert_eq!(vfa.bitcast_u32().to_array(), pfa.bitcast_u32().to_array());
+            assert_eq!(vfa.rot_up().to_array(), pfa.rot_up().to_array());
+            assert_eq!(vfa.rot_down().to_array(), pfa.rot_down().to_array());
+        }
+    }
+
+    #[test]
+    fn widest_width_is_sane() {
+        let w = widest_supported_width();
+        assert!(w == 4 || w == 8);
+        if avx2_available() {
+            assert_eq!(w, 8);
         }
     }
 }

@@ -1,63 +1,79 @@
-//! Portable scalar-quad implementations of the 4-wide primitives.
+//! Portable width-generic implementations of the SIMD primitives.
 //!
-//! Semantics-identical to the SSE versions (the x86_64 test suite checks
-//! this differentially).  Used as the real implementation on non-x86_64
-//! targets and as an oracle on x86_64.
+//! [`U32xN<W>`]/[`F32xN<W>`] carry `W` scalar lanes in a plain array and
+//! implement every operation with per-lane scalar code, semantics-identical
+//! to the intrinsic backends (the x86_64 test suite checks this
+//! differentially against both SSE2 and AVX2).  They are
+//!
+//! * the real implementation on non-x86_64 targets (any `W`),
+//! * the universal fallback for widths without a hand-written backend
+//!   (e.g. `W = 8` on x86_64 CPUs without AVX2), and
+//! * the differential-testing oracle for the intrinsic backends.
 
 use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
 
-/// Four `u32` lanes.
-#[derive(Copy, Clone)]
-pub struct U32x4(pub [u32; 4]);
+use super::{SimdF32, SimdU32};
 
-/// Four `f32` lanes.
+/// `W` `u32` lanes.
 #[derive(Copy, Clone)]
-pub struct F32x4(pub [f32; 4]);
+pub struct U32xN<const W: usize>(pub [u32; W]);
 
-impl From<[u32; 4]> for U32x4 {
+/// `W` `f32` lanes.
+#[derive(Copy, Clone)]
+pub struct F32xN<const W: usize>(pub [f32; W]);
+
+/// The 4-lane instantiation (the paper's SSE width).
+pub type U32x4 = U32xN<4>;
+/// The 4-lane instantiation (the paper's SSE width).
+pub type F32x4 = F32xN<4>;
+
+/// The 8-lane instantiation (the AVX2 width).
+pub type U32x8 = U32xN<8>;
+/// The 8-lane instantiation (the AVX2 width).
+pub type F32x8 = F32xN<8>;
+
+impl<const W: usize> From<[u32; W]> for U32xN<W> {
     #[inline(always)]
-    fn from(a: [u32; 4]) -> Self {
+    fn from(a: [u32; W]) -> Self {
         Self(a)
     }
 }
 
-impl From<[f32; 4]> for F32x4 {
+impl<const W: usize> From<[f32; W]> for F32xN<W> {
     #[inline(always)]
-    fn from(a: [f32; 4]) -> Self {
+    fn from(a: [f32; W]) -> Self {
         Self(a)
     }
 }
 
-macro_rules! lanes {
-    ($a:expr, $b:expr, $op:expr) => {{
-        let (a, b) = ($a, $b);
-        [$op(a[0], b[0]), $op(a[1], b[1]), $op(a[2], b[2]), $op(a[3], b[3])]
-    }};
-}
+impl<const W: usize> U32xN<W> {
+    #[inline(always)]
+    fn zip(self, rhs: Self, f: impl Fn(u32, u32) -> u32) -> Self {
+        Self(std::array::from_fn(|k| f(self.0[k], rhs.0[k])))
+    }
 
-impl U32x4 {
     #[inline(always)]
     pub fn splat(v: u32) -> Self {
-        Self([v; 4])
+        Self([v; W])
     }
 
     #[inline(always)]
     pub fn zero() -> Self {
-        Self([0; 4])
+        Self([0; W])
     }
 
     #[inline(always)]
     pub fn load(src: &[u32]) -> Self {
-        Self([src[0], src[1], src[2], src[3]])
+        Self(std::array::from_fn(|k| src[k]))
     }
 
     #[inline(always)]
     pub fn store(self, dst: &mut [u32]) {
-        dst[..4].copy_from_slice(&self.0);
+        dst[..W].copy_from_slice(&self.0);
     }
 
     #[inline(always)]
-    pub fn to_array(self) -> [u32; 4] {
+    pub fn to_array(self) -> [u32; W] {
         self.0
     }
 
@@ -73,16 +89,12 @@ impl U32x4 {
 
     #[inline(always)]
     pub fn wrapping_add(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, u32::wrapping_add))
+        self.zip(rhs, u32::wrapping_add)
     }
 
     #[inline(always)]
     pub fn select(mask: Self, a: Self, b: Self) -> Self {
-        Self(lanes!(
-            lanes!(mask.0, a.0, |m: u32, x: u32| m & x),
-            lanes!(mask.0, b.0, |m: u32, x: u32| !m & x),
-            |x: u32, y: u32| x | y
-        ))
+        Self(std::array::from_fn(|k| (mask.0[k] & a.0[k]) | (!mask.0[k] & b.0[k])))
     }
 
     #[inline(always)]
@@ -91,115 +103,115 @@ impl U32x4 {
     }
 
     #[inline(always)]
-    pub fn bitcast_f32(self) -> F32x4 {
-        F32x4(self.0.map(f32::from_bits))
+    pub fn bitcast_f32(self) -> F32xN<W> {
+        F32xN(self.0.map(f32::from_bits))
     }
 
     #[inline(always)]
-    pub fn to_array_i32(self) -> [i32; 4] {
+    pub fn to_array_i32(self) -> [i32; W] {
         self.0.map(|x| x as i32)
     }
 
     #[inline(always)]
-    pub fn to_f32_from_i32(self) -> F32x4 {
-        F32x4(self.0.map(|x| x as i32 as f32))
+    pub fn to_f32_from_i32(self) -> F32xN<W> {
+        F32xN(self.0.map(|x| x as i32 as f32))
     }
 
     /// Bit k set iff the top bit of lane k is set (MOVMSKPS semantics).
     #[inline(always)]
     pub fn movemask(self) -> u32 {
-        (0..4).map(|k| ((self.0[k] >> 31) as u32) << k).sum()
+        (0..W).map(|k| (self.0[k] >> 31) << k).sum()
     }
 }
 
-impl BitAnd for U32x4 {
+impl<const W: usize> BitAnd for U32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn bitand(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a & b))
+        self.zip(rhs, |a, b| a & b)
     }
 }
 
-impl BitOr for U32x4 {
+impl<const W: usize> BitOr for U32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn bitor(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a | b))
+        self.zip(rhs, |a, b| a | b)
     }
 }
 
-impl BitXor for U32x4 {
+impl<const W: usize> BitXor for U32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn bitxor(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: u32, b: u32| a ^ b))
+        self.zip(rhs, |a, b| a ^ b)
     }
 }
 
-impl F32x4 {
+impl<const W: usize> F32xN<W> {
+    #[inline(always)]
+    fn zip(self, rhs: Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        Self(std::array::from_fn(|k| f(self.0[k], rhs.0[k])))
+    }
+
     #[inline(always)]
     pub fn splat(v: f32) -> Self {
-        Self([v; 4])
+        Self([v; W])
     }
 
     #[inline(always)]
     pub fn zero() -> Self {
-        Self([0.0; 4])
+        Self([0.0; W])
     }
 
     #[inline(always)]
     pub fn load(src: &[f32]) -> Self {
-        Self([src[0], src[1], src[2], src[3]])
+        Self(std::array::from_fn(|k| src[k]))
     }
 
     #[inline(always)]
     pub fn store(self, dst: &mut [f32]) {
-        dst[..4].copy_from_slice(&self.0);
+        dst[..W].copy_from_slice(&self.0);
     }
 
     #[inline(always)]
-    pub fn to_array(self) -> [f32; 4] {
+    pub fn to_array(self) -> [f32; W] {
         self.0
     }
 
     /// Unchecked load (portable form still range-checked in debug).
     ///
     /// # Safety
-    /// Caller guarantees `off + 4 <= src.len()`.
+    /// Caller guarantees `off + W <= src.len()`.
     #[inline(always)]
     pub unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
-        debug_assert!(off + 4 <= src.len());
-        Self([
-            *src.get_unchecked(off),
-            *src.get_unchecked(off + 1),
-            *src.get_unchecked(off + 2),
-            *src.get_unchecked(off + 3),
-        ])
+        debug_assert!(off + W <= src.len());
+        Self(std::array::from_fn(|k| *src.get_unchecked(off + k)))
     }
 
     /// Unchecked store.
     ///
     /// # Safety
-    /// Caller guarantees `off + 4 <= dst.len()`.
+    /// Caller guarantees `off + W <= dst.len()`.
     #[inline(always)]
     pub unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
-        debug_assert!(off + 4 <= dst.len());
-        for k in 0..4 {
+        debug_assert!(off + W <= dst.len());
+        for k in 0..W {
             *dst.get_unchecked_mut(off + k) = self.0[k];
         }
     }
 
     #[inline(always)]
-    pub fn lt(self, rhs: Self) -> U32x4 {
-        U32x4(lanes!(self.0, rhs.0, |a: f32, b: f32| if a < b { 0xffff_ffffu32 } else { 0 }))
+    pub fn lt(self, rhs: Self) -> U32xN<W> {
+        U32xN(std::array::from_fn(|k| if self.0[k] < rhs.0[k] { 0xffff_ffffu32 } else { 0 }))
     }
 
     /// Truncating conversion with x86 CVTTPS2DQ out-of-range semantics
     /// (0x8000_0000 for unrepresentable values — only hit outside the exp
     /// approximations' documented domains).
     #[inline(always)]
-    pub fn to_i32_trunc(self) -> U32x4 {
-        U32x4(self.0.map(|x| {
+    pub fn to_i32_trunc(self) -> U32xN<W> {
+        U32xN(self.0.map(|x| {
             if x.is_nan() || x >= 2_147_483_648.0 || x < -2_147_483_648.0 {
                 0x8000_0000u32
             } else {
@@ -209,12 +221,13 @@ impl F32x4 {
     }
 
     #[inline(always)]
-    pub fn bitcast_u32(self) -> U32x4 {
-        U32x4(self.0.map(f32::to_bits))
+    pub fn bitcast_u32(self) -> U32xN<W> {
+        U32xN(self.0.map(f32::to_bits))
     }
 
-    /// Models RSQRTPS within its error spec using the exact computation
-    /// (portable targets have no approximate instruction to match).
+    /// Models RSQRTPS/VRSQRTPS within its error spec using the exact
+    /// computation (portable targets have no approximate instruction to
+    /// match).
     #[inline(always)]
     pub fn rsqrt_approx(self) -> Self {
         Self(self.0.map(|x| 1.0 / x.sqrt()))
@@ -227,12 +240,12 @@ impl F32x4 {
 
     #[inline(always)]
     pub fn max(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| if a > b { a } else { b }))
+        self.zip(rhs, |a, b| if a > b { a } else { b })
     }
 
     #[inline(always)]
     pub fn min(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| if a < b { a } else { b }))
+        self.zip(rhs, |a, b| if a < b { a } else { b })
     }
 
     /// Lane-wise negation.
@@ -241,41 +254,161 @@ impl F32x4 {
         Self(self.0.map(|x| f32::from_bits(x.to_bits() ^ 0x8000_0000)))
     }
 
-    /// `out[k] = in[(k+3) % 4]` — values move one lane up.
+    /// `out[k] = in[(k+W-1) % W]` — values move one lane up.
     #[inline(always)]
     pub fn rot_up(self) -> Self {
-        let a = self.0;
-        Self([a[3], a[0], a[1], a[2]])
+        Self(std::array::from_fn(|k| self.0[(k + W - 1) % W]))
     }
 
-    /// `out[k] = in[(k+1) % 4]` — values move one lane down.
+    /// `out[k] = in[(k+1) % W]` — values move one lane down.
     #[inline(always)]
     pub fn rot_down(self) -> Self {
-        let a = self.0;
-        Self([a[1], a[2], a[3], a[0]])
+        Self(std::array::from_fn(|k| self.0[(k + 1) % W]))
     }
 }
 
-impl Add for F32x4 {
+impl<const W: usize> Add for F32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn add(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a + b))
+        self.zip(rhs, |a, b| a + b)
     }
 }
 
-impl Sub for F32x4 {
+impl<const W: usize> Sub for F32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn sub(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a - b))
+        self.zip(rhs, |a, b| a - b)
     }
 }
 
-impl Mul for F32x4 {
+impl<const W: usize> Mul for F32xN<W> {
     type Output = Self;
     #[inline(always)]
     fn mul(self, rhs: Self) -> Self {
-        Self(lanes!(self.0, rhs.0, |a: f32, b: f32| a * b))
+        self.zip(rhs, |a, b| a * b)
+    }
+}
+
+// ---- width-generic trait plumbing (delegates to the inherent methods) ----
+
+impl<const W: usize> SimdU32 for U32xN<W> {
+    const LANES: usize = W;
+    type F = F32xN<W>;
+
+    #[inline(always)]
+    fn splat(v: u32) -> Self {
+        U32xN::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        U32xN::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[u32]) -> Self {
+        U32xN::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [u32]) {
+        U32xN::store(self, dst)
+    }
+    #[inline(always)]
+    fn shr(self, count: i32) -> Self {
+        U32xN::shr(self, count)
+    }
+    #[inline(always)]
+    fn shl(self, count: i32) -> Self {
+        U32xN::shl(self, count)
+    }
+    #[inline(always)]
+    fn wrapping_add(self, rhs: Self) -> Self {
+        U32xN::wrapping_add(self, rhs)
+    }
+    #[inline(always)]
+    fn select(mask: Self, a: Self, b: Self) -> Self {
+        U32xN::select(mask, a, b)
+    }
+    #[inline(always)]
+    fn lsb_mask(self) -> Self {
+        U32xN::lsb_mask(self)
+    }
+    #[inline(always)]
+    fn bitcast_f32(self) -> F32xN<W> {
+        U32xN::bitcast_f32(self)
+    }
+    #[inline(always)]
+    fn to_f32_from_i32(self) -> F32xN<W> {
+        U32xN::to_f32_from_i32(self)
+    }
+    #[inline(always)]
+    fn movemask(self) -> u32 {
+        U32xN::movemask(self)
+    }
+}
+
+impl<const W: usize> SimdF32 for F32xN<W> {
+    const LANES: usize = W;
+    type U = U32xN<W>;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32xN::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        F32xN::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        F32xN::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        F32xN::store(self, dst)
+    }
+    #[inline(always)]
+    unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        F32xN::load_unchecked(src, off)
+    }
+    #[inline(always)]
+    unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        F32xN::store_unchecked(self, dst, off)
+    }
+    #[inline(always)]
+    fn lt(self, rhs: Self) -> U32xN<W> {
+        F32xN::lt(self, rhs)
+    }
+    #[inline(always)]
+    fn to_i32_trunc(self) -> U32xN<W> {
+        F32xN::to_i32_trunc(self)
+    }
+    #[inline(always)]
+    fn bitcast_u32(self) -> U32xN<W> {
+        F32xN::bitcast_u32(self)
+    }
+    #[inline(always)]
+    fn rsqrt_approx(self) -> Self {
+        F32xN::rsqrt_approx(self)
+    }
+    #[inline(always)]
+    fn max(self, rhs: Self) -> Self {
+        F32xN::max(self, rhs)
+    }
+    #[inline(always)]
+    fn min(self, rhs: Self) -> Self {
+        F32xN::min(self, rhs)
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        F32xN::neg(self)
+    }
+    #[inline(always)]
+    fn rot_up(self) -> Self {
+        F32xN::rot_up(self)
+    }
+    #[inline(always)]
+    fn rot_down(self) -> Self {
+        F32xN::rot_down(self)
     }
 }

@@ -271,6 +271,128 @@ impl F32x4 {
     }
 }
 
+// ---- width-generic trait plumbing (delegates to the inherent methods) ----
+
+impl super::SimdU32 for U32x4 {
+    const LANES: usize = 4;
+    type F = F32x4;
+
+    #[inline(always)]
+    fn splat(v: u32) -> Self {
+        U32x4::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        U32x4::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[u32]) -> Self {
+        U32x4::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [u32]) {
+        U32x4::store(self, dst)
+    }
+    #[inline(always)]
+    fn shr(self, count: i32) -> Self {
+        U32x4::shr(self, count)
+    }
+    #[inline(always)]
+    fn shl(self, count: i32) -> Self {
+        U32x4::shl(self, count)
+    }
+    #[inline(always)]
+    fn wrapping_add(self, rhs: Self) -> Self {
+        U32x4::wrapping_add(self, rhs)
+    }
+    #[inline(always)]
+    fn select(mask: Self, a: Self, b: Self) -> Self {
+        U32x4::select(mask, a, b)
+    }
+    #[inline(always)]
+    fn lsb_mask(self) -> Self {
+        U32x4::lsb_mask(self)
+    }
+    #[inline(always)]
+    fn bitcast_f32(self) -> F32x4 {
+        U32x4::bitcast_f32(self)
+    }
+    #[inline(always)]
+    fn to_f32_from_i32(self) -> F32x4 {
+        U32x4::to_f32_from_i32(self)
+    }
+    #[inline(always)]
+    fn movemask(self) -> u32 {
+        U32x4::movemask(self)
+    }
+}
+
+impl super::SimdF32 for F32x4 {
+    const LANES: usize = 4;
+    type U = U32x4;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x4::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        F32x4::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        F32x4::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        F32x4::store(self, dst)
+    }
+    #[inline(always)]
+    unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        F32x4::load_unchecked(src, off)
+    }
+    #[inline(always)]
+    unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        F32x4::store_unchecked(self, dst, off)
+    }
+    #[inline(always)]
+    fn lt(self, rhs: Self) -> U32x4 {
+        F32x4::lt(self, rhs)
+    }
+    #[inline(always)]
+    fn to_i32_trunc(self) -> U32x4 {
+        F32x4::to_i32_trunc(self)
+    }
+    #[inline(always)]
+    fn bitcast_u32(self) -> U32x4 {
+        F32x4::bitcast_u32(self)
+    }
+    #[inline(always)]
+    fn rsqrt_approx(self) -> Self {
+        F32x4::rsqrt_approx(self)
+    }
+    #[inline(always)]
+    fn max(self, rhs: Self) -> Self {
+        F32x4::max(self, rhs)
+    }
+    #[inline(always)]
+    fn min(self, rhs: Self) -> Self {
+        F32x4::min(self, rhs)
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        F32x4::neg(self)
+    }
+    #[inline(always)]
+    fn rot_up(self) -> Self {
+        F32x4::rot_up(self)
+    }
+    #[inline(always)]
+    fn rot_down(self) -> Self {
+        F32x4::rot_down(self)
+    }
+}
+
 impl Add for F32x4 {
     type Output = Self;
     #[inline(always)]

@@ -1,21 +1,25 @@
-//! A.3 — vectorized MT19937 and vectorized flip decisions (paper §3).
+//! A.3 — vectorized MT19937 and vectorized flip decisions (paper §3),
+//! generic over the SIMD lane width.
 //!
-//! Spins are processed in the 4-way interlaced order, one *quadruplet*
-//! per step: four uniforms arrive as one SSE register from the interlaced
-//! generator, four energy deltas and four flip probabilities are computed
-//! with 4-wide ops, and the accept comparison produces a lane mask
+//! Spins are processed in the W-way interlaced order, one *group* per
+//! step: `W` uniforms arrive as one vector register from the interlaced
+//! generator, `W` energy deltas and `W` flip probabilities are computed
+//! with `W`-wide ops, and the accept comparison produces a lane mask
 //! (Figure 10).  The neighbour updates, however, are still the scalar
 //! Figure-6 loop per flipped lane — that is precisely what A.4 adds.
+//!
+//! `A3VecRng<U32x4>` is the paper's SSE rung; `A3VecRng<avx2::U32x8>` the
+//! AVX2 octet form; the portable lanes run any width on any arch.
 
-use crate::expapprox::simd::exp_fast_x4;
+use crate::expapprox::simd::exp_fast_wide;
 use crate::ising::QmcModel;
-use crate::rng::Mt19937x4;
-use crate::simd::F32x4;
+use crate::rng::Mt19937Simd;
+use crate::simd::{MAX_LANES, SimdF32, SimdU32};
 
 use super::interlaced::InterlacedModel;
 use super::{ExpMode, SweepKind, SweepStats, Sweeper};
 
-pub struct A3VecRng {
+pub struct A3VecRng<U: SimdU32> {
     model: QmcModel,
     im: InterlacedModel,
     /// Spins in interlaced order.
@@ -23,81 +27,89 @@ pub struct A3VecRng {
     /// Effective fields in interlaced order.
     hs: Vec<f32>,
     ht: Vec<f32>,
-    rng: Mt19937x4,
+    rng: Mt19937Simd<U>,
     exp: ExpMode,
 }
 
-/// Compute four flip probabilities for `x = -beta*dE` lanes.
+/// Compute `W` flip probabilities for `x = -beta*dE` lanes.
 #[inline(always)]
-pub(super) fn probs_x4(exp: ExpMode, x: F32x4) -> F32x4 {
+pub(super) fn probs_wide<F: SimdF32>(exp: ExpMode, x: F) -> F {
     match exp {
-        ExpMode::Fast => exp_fast_x4(x.max(F32x4::splat(-80.0))),
+        ExpMode::Fast => exp_fast_wide(x.max(F::splat(-80.0))),
         // Non-default modes (test alignment) evaluated per lane.
         other => {
-            let a = x.to_array();
-            F32x4::from([other.eval(a[0]), other.eval(a[1]), other.eval(a[2]), other.eval(a[3])])
+            debug_assert!(F::LANES <= MAX_LANES);
+            let mut buf = [0.0f32; MAX_LANES];
+            x.store(&mut buf);
+            for v in buf.iter_mut().take(F::LANES) {
+                *v = other.eval(*v);
+            }
+            F::load(&buf)
         }
     }
 }
 
-impl A3VecRng {
+impl<U: SimdU32> A3VecRng<U> {
     pub fn new(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Self {
         assert_eq!(s0.len(), model.n_spins());
-        let im = InterlacedModel::build(model);
+        let im = InterlacedModel::build_w(model, U::LANES);
         let s = im.it.to_interlaced(s0);
         let (hs0, ht0) = model.effective_fields(s0);
         let hs = im.it.to_interlaced(&hs0);
         let ht = im.it.to_interlaced(&ht0);
-        // The paper's 4 interlaced generators "with different seeds".
-        let rng = Mt19937x4::new([seed, seed.wrapping_add(1), seed.wrapping_add(2), seed.wrapping_add(3)]);
+        // The paper's W interlaced generators "with different seeds".
+        let rng = Mt19937Simd::from_base_seed(seed);
         Self { model: model.clone(), im, s, hs, ht, rng, exp }
     }
 
-    /// Scalar flip of lane `lane` of quadruplet `q` — the A.2-style
-    /// update loop over the shared quad-edge table.
+    /// Scalar flip of lane `lane` of group `g` — the A.2-style update
+    /// loop over the shared group-edge table.
     #[inline]
-    fn flip_scalar(&mut self, q: usize, lane: usize) {
-        let i = 4 * q + lane;
+    fn flip_scalar(&mut self, g: usize, lane: usize) {
+        let w = U::LANES;
+        let i = w * g + lane;
         let two_s_mul = 2.0 * self.s[i];
         self.s[i] = -self.s[i];
-        let (lo, hi) = (self.im.qoffsets[q] as usize, self.im.qoffsets[q + 1] as usize);
+        let (lo, hi) = (self.im.qoffsets[g] as usize, self.im.qoffsets[g + 1] as usize);
         for e in lo..hi {
             let t = self.im.qedge_target[e] as usize + lane;
             self.hs[t] -= two_s_mul * self.im.qedge_j[e];
         }
-        let up = match self.im.up_quad(q) {
+        let up = match self.im.up_base(g) {
             Some(b) => b + lane,
-            None => self.im.up_wrap_quad(q) + (lane + 1) % 4,
+            None => self.im.up_wrap_base(g) + (lane + 1) % w,
         };
-        let down = match self.im.down_quad(q) {
+        let down = match self.im.down_base(g) {
             Some(b) => b + lane,
-            None => self.im.down_wrap_quad(q) + (lane + 3) % 4,
+            None => self.im.down_wrap_base(g) + (lane + w - 1) % w,
         };
         self.ht[up] -= two_s_mul * self.im.jtau;
         self.ht[down] -= two_s_mul * self.im.jtau;
     }
 
+    #[inline(always)]
     fn sweep_once(&mut self, beta: f32, stats: &mut SweepStats) {
-        let n_quads = self.im.n_quads();
-        let neg_beta = F32x4::splat(-beta);
-        let two = F32x4::splat(2.0);
-        for q in 0..n_quads {
-            let u4 = self.rng.next4_f32();
-            let s4 = F32x4::load(&self.s[4 * q..]);
-            let hs4 = F32x4::load(&self.hs[4 * q..]);
-            let ht4 = F32x4::load(&self.ht[4 * q..]);
-            let de4 = two * s4 * (hs4 + ht4);
-            let p4 = probs_x4(self.exp, neg_beta * de4);
-            let mask = u4.lt(p4);
+        let w = U::LANES;
+        let n_groups = self.im.n_groups();
+        let neg_beta = <U::F as SimdF32>::splat(-beta);
+        let two = <U::F as SimdF32>::splat(2.0);
+        for g in 0..n_groups {
+            let u = self.rng.next_vec_f32();
+            let sv = <U::F as SimdF32>::load(&self.s[w * g..]);
+            let hsv = <U::F as SimdF32>::load(&self.hs[w * g..]);
+            let htv = <U::F as SimdF32>::load(&self.ht[w * g..]);
+            let de = two * sv * (hsv + htv);
+            let p = probs_wide(self.exp, neg_beta * de);
+            let mask = u.lt(p);
             let mm = mask.movemask();
-            stats.attempts += 4;
+            stats.attempts += w as u64;
             stats.groups += 1;
             if mm != 0 {
                 stats.groups_with_flip += 1;
                 stats.flips += mm.count_ones() as u64;
-                for lane in 0..4 {
+                for lane in 0..w {
                     if mm & (1 << lane) != 0 {
-                        self.flip_scalar(q, lane);
+                        self.flip_scalar(g, lane);
                     }
                 }
             }
@@ -105,16 +117,18 @@ impl A3VecRng {
     }
 }
 
-impl Sweeper for A3VecRng {
+impl<U: SimdU32> Sweeper for A3VecRng<U> {
     fn kind(&self) -> SweepKind {
-        SweepKind::A3VecRng
+        SweepKind::a3_for_width(U::LANES)
     }
 
     fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
         let mut stats = SweepStats::default();
-        for _ in 0..n_sweeps {
-            self.sweep_once(beta, &mut stats);
-        }
+        U::with_features(|| {
+            for _ in 0..n_sweeps {
+                self.sweep_once(beta, &mut stats);
+            }
+        });
         stats
     }
 

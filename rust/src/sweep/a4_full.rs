@@ -1,69 +1,71 @@
 //! A.4 — full vectorization (paper §3.1): flip decisions *and* neighbour
-//! updates are 4-wide.
+//! updates are `W`-wide.
 //!
-//! Because the four lanes of a quadruplet are corresponding spins of
-//! identical layer sections, the spins they must update after flipping
-//! "always update spins that form another quadruplet": every space edge
-//! becomes one masked vector FMA on `h_eff_space`, and the two tau edges
-//! become one each on `h_eff_tau` — with the section-boundary rows
-//! (`r = 0` and `r = rows−1`) handled by a lane rotation, the paper's
-//! "first and last layers treated as a special case to handle wrapping".
+//! Because the `W` lanes of a group are corresponding spins of identical
+//! layer sections, the spins they must update after flipping "always
+//! update spins that form another quadruplet": every space edge becomes
+//! one masked vector FMA on `h_eff_space`, and the two tau edges become
+//! one each on `h_eff_tau` — with the section-boundary rows (`r = 0` and
+//! `r = rows−1`) handled by a lane rotation, the paper's "first and last
+//! layers treated as a special case to handle wrapping".
 //!
-//! Trajectory-identical to A.3 by construction (same interlaced RNG, same
-//! decision math); only the update mechanics differ.  The test suite
-//! asserts this bit-for-bit.
+//! Trajectory-identical to A.3 *at the same width* by construction (same
+//! interlaced RNG, same decision math); only the update mechanics differ.
+//! The test suite asserts this bit-for-bit for W = 4 and W = 8.
 
 use crate::ising::QmcModel;
-use crate::rng::Mt19937x4;
-use crate::simd::F32x4;
+use crate::rng::Mt19937Simd;
+use crate::simd::{SimdF32, SimdU32};
 
-use super::a3_vecrng::probs_x4;
+use super::a3_vecrng::probs_wide;
 use super::interlaced::InterlacedModel;
 use super::{ExpMode, SweepKind, SweepStats, Sweeper};
 
-pub struct A4Full {
+pub struct A4Full<U: SimdU32> {
     model: QmcModel,
     im: InterlacedModel,
     s: Vec<f32>,
     hs: Vec<f32>,
     ht: Vec<f32>,
-    rng: Mt19937x4,
+    rng: Mt19937Simd<U>,
     exp: ExpMode,
 }
 
-impl A4Full {
+impl<U: SimdU32> A4Full<U> {
     pub fn new(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Self {
         assert_eq!(s0.len(), model.n_spins());
-        let im = InterlacedModel::build(model);
+        let im = InterlacedModel::build_w(model, U::LANES);
         let s = im.it.to_interlaced(s0);
         let (hs0, ht0) = model.effective_fields(s0);
         let hs = im.it.to_interlaced(&hs0);
         let ht = im.it.to_interlaced(&ht0);
-        let rng = Mt19937x4::new([seed, seed.wrapping_add(1), seed.wrapping_add(2), seed.wrapping_add(3)]);
+        let rng = Mt19937Simd::from_base_seed(seed);
         Self { model: model.clone(), im, s, hs, ht, rng, exp }
     }
 
+    #[inline(always)]
     fn sweep_once(&mut self, beta: f32, stats: &mut SweepStats) {
-        let n_quads = self.im.n_quads();
-        let neg_beta = F32x4::splat(-beta);
-        let two = F32x4::splat(2.0);
-        let jtau = F32x4::splat(self.im.jtau);
-        for q in 0..n_quads {
-            let u4 = self.rng.next4_f32();
-            // Perf: the three quadruplet loads and the edge-table walk are
-            // the hot path; bounds checks cost ~8% here (see EXPERIMENTS.md
-            // §Perf).  All indices are structurally in range: q < n_quads
-            // and every quad-edge target is 4*(quad id) by construction
+        let w = U::LANES;
+        let n_groups = self.im.n_groups();
+        let neg_beta = <U::F as SimdF32>::splat(-beta);
+        let two = <U::F as SimdF32>::splat(2.0);
+        let jtau = <U::F as SimdF32>::splat(self.im.jtau);
+        for g in 0..n_groups {
+            let u = self.rng.next_vec_f32();
+            // Perf: the three group loads and the edge-table walk are the
+            // hot path; bounds checks cost ~8% here (see EXPERIMENTS.md
+            // §Perf).  All indices are structurally in range: g < n_groups
+            // and every group-edge target is W*(group id) by construction
             // (validated by InterlacedModel's tests and debug asserts).
-            debug_assert!(4 * q + 4 <= self.s.len());
-            let s4 = unsafe { F32x4::load_unchecked(&self.s, 4 * q) };
-            let hs4 = unsafe { F32x4::load_unchecked(&self.hs, 4 * q) };
-            let ht4 = unsafe { F32x4::load_unchecked(&self.ht, 4 * q) };
-            let de4 = two * s4 * (hs4 + ht4);
-            let p4 = probs_x4(self.exp, neg_beta * de4);
-            let mask = u4.lt(p4);
+            debug_assert!(w * g + w <= self.s.len());
+            let sv = unsafe { <U::F as SimdF32>::load_unchecked(&self.s, w * g) };
+            let hsv = unsafe { <U::F as SimdF32>::load_unchecked(&self.hs, w * g) };
+            let htv = unsafe { <U::F as SimdF32>::load_unchecked(&self.ht, w * g) };
+            let de = two * sv * (hsv + htv);
+            let p = probs_wide(self.exp, neg_beta * de);
+            let mask = u.lt(p);
             let mm = mask.movemask();
-            stats.attempts += 4;
+            stats.attempts += w as u64;
             stats.groups += 1;
             if mm == 0 {
                 continue;
@@ -72,61 +74,64 @@ impl A4Full {
             stats.flips += mm.count_ones() as u64;
 
             // Masked vector flip (Figure 10 style): s' = mask ? -s : s.
-            let s_new = F32x4::from_bits_select(mask, s4.neg(), s4);
-            unsafe { s_new.store_unchecked(&mut self.s, 4 * q) };
+            let s_new = <U::F as SimdF32>::select_bits(mask, sv.neg(), sv);
+            unsafe { s_new.store_unchecked(&mut self.s, w * g) };
 
             // Masked update vector: 2*s_old on flipped lanes, 0 elsewhere.
-            let upd = F32x4::from_bits_select(mask, two * s4, F32x4::zero());
+            let upd =
+                <U::F as SimdF32>::select_bits(mask, two * sv, <U::F as SimdF32>::zero());
 
-            // One vector op per space edge — all four lanes at once.
-            let (lo, hi) = (self.im.qoffsets[q] as usize, self.im.qoffsets[q + 1] as usize);
+            // One vector op per space edge — all `W` lanes at once.
+            let (lo, hi) = (self.im.qoffsets[g] as usize, self.im.qoffsets[g + 1] as usize);
             for e in lo..hi {
                 let t = unsafe { *self.im.qedge_target.get_unchecked(e) } as usize;
-                let j = F32x4::splat(unsafe { *self.im.qedge_j.get_unchecked(e) });
-                debug_assert!(t + 4 <= self.hs.len());
-                let cur = unsafe { F32x4::load_unchecked(&self.hs, t) };
+                let j = <U::F as SimdF32>::splat(unsafe { *self.im.qedge_j.get_unchecked(e) });
+                debug_assert!(t + w <= self.hs.len());
+                let cur = unsafe { <U::F as SimdF32>::load_unchecked(&self.hs, t) };
                 unsafe { (cur - upd * j).store_unchecked(&mut self.hs, t) };
             }
 
             // Tau edges: lane-aligned in the bulk, lane-rotated at the
             // section boundaries.
             let tau_upd = upd * jtau;
-            match self.im.up_quad(q) {
+            match self.im.up_base(g) {
                 Some(b) => {
-                    let cur = F32x4::load(&self.ht[b..]);
-                    (cur - tau_upd).store(&mut self.ht[b..b + 4]);
+                    let cur = <U::F as SimdF32>::load(&self.ht[b..]);
+                    (cur - tau_upd).store(&mut self.ht[b..b + w]);
                 }
                 None => {
-                    let b = self.im.up_wrap_quad(q);
-                    let cur = F32x4::load(&self.ht[b..]);
-                    (cur - tau_upd.rot_up()).store(&mut self.ht[b..b + 4]);
+                    let b = self.im.up_wrap_base(g);
+                    let cur = <U::F as SimdF32>::load(&self.ht[b..]);
+                    (cur - tau_upd.rot_up()).store(&mut self.ht[b..b + w]);
                 }
             }
-            match self.im.down_quad(q) {
+            match self.im.down_base(g) {
                 Some(b) => {
-                    let cur = F32x4::load(&self.ht[b..]);
-                    (cur - tau_upd).store(&mut self.ht[b..b + 4]);
+                    let cur = <U::F as SimdF32>::load(&self.ht[b..]);
+                    (cur - tau_upd).store(&mut self.ht[b..b + w]);
                 }
                 None => {
-                    let b = self.im.down_wrap_quad(q);
-                    let cur = F32x4::load(&self.ht[b..]);
-                    (cur - tau_upd.rot_down()).store(&mut self.ht[b..b + 4]);
+                    let b = self.im.down_wrap_base(g);
+                    let cur = <U::F as SimdF32>::load(&self.ht[b..]);
+                    (cur - tau_upd.rot_down()).store(&mut self.ht[b..b + w]);
                 }
             }
         }
     }
 }
 
-impl Sweeper for A4Full {
+impl<U: SimdU32> Sweeper for A4Full<U> {
     fn kind(&self) -> SweepKind {
-        SweepKind::A4Full
+        SweepKind::a4_for_width(U::LANES)
     }
 
     fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
         let mut stats = SweepStats::default();
-        for _ in 0..n_sweeps {
-            self.sweep_once(beta, &mut stats);
-        }
+        U::with_features(|| {
+            for _ in 0..n_sweeps {
+                self.sweep_once(beta, &mut stats);
+            }
+        });
         stats
     }
 

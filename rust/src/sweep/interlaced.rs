@@ -1,45 +1,54 @@
-//! Shared substrate of the A.3/A.4 rungs: the model rebuilt in the 4-way
-//! interlaced spin order of [`crate::ising::reorder::Interlace4`].
+//! Shared substrate of the A.3/A.4 rungs: the model rebuilt in the W-way
+//! interlaced spin order of [`crate::ising::reorder::InterlaceW`].
 //!
-//! A quadruplet `q = r·n + v` holds the four corresponding spins of the 4
-//! layer sections at consecutive indices `4q .. 4q+4`.  Because all
-//! layers are identical, the four lanes of a quadruplet share one edge
+//! A group `g = r·n + v` holds the `W` corresponding spins of the `W`
+//! layer sections at consecutive indices `W·g .. W·g+W`.  Because all
+//! layers are identical, the `W` lanes of a group share one edge
 //! structure:
 //!
-//! * each space edge of vertex `v` maps to a *quad edge* `(4·(r·n+u), J)`
-//!   — a vector of 4 adjacent targets;
-//! * the tau up/down neighbours are the lane-aligned quadruplets
-//!   `(r±1, v)`, except at the section boundaries `r = 0` (down wraps
-//!   with a lane rotation) and `r = rows−1` (up wraps likewise).
+//! * each space edge of vertex `v` maps to a *group edge* `(W·(r·n+u), J)`
+//!   — a vector of `W` adjacent targets;
+//! * the tau up/down neighbours are the lane-aligned groups `(r±1, v)`,
+//!   except at the section boundaries `r = 0` (down wraps with a lane
+//!   rotation) and `r = rows−1` (up wraps likewise).
+//!
+//! `W = 4` reproduces the paper's quadruplet tables bit-for-bit; `W = 8`
+//! is the AVX2 octet layout.
 
-use crate::ising::reorder::Interlace4;
+use crate::ising::reorder::InterlaceW;
 use crate::ising::QmcModel;
 
-/// Per-quadruplet edge tables + interlaced field bookkeeping.
+/// Per-group edge tables + interlaced field bookkeeping.
 pub struct InterlacedModel {
-    pub it: Interlace4,
+    pub it: InterlaceW,
     pub jtau: f32,
-    /// Flattened quad-edge targets (base index `4*q_u`), grouped per quad.
+    /// Flattened group-edge targets (base index `W*g_u`), grouped per group.
     pub qedge_target: Vec<u32>,
     /// Couplings parallel to `qedge_target`.
     pub qedge_j: Vec<f32>,
-    /// Per-quad slice starts into the above (`n_quads + 1`).
+    /// Per-group slice starts into the above (`n_groups + 1`).
     pub qoffsets: Vec<u32>,
 }
 
 impl InterlacedModel {
+    /// Build at the paper's width (4 — the SSE quadruplet layout).
     pub fn build(m: &QmcModel) -> Self {
-        let it = Interlace4::new(m);
+        Self::build_w(m, 4)
+    }
+
+    /// Build at lane width `w` (requires `L % w == 0` and `L / w >= 2`).
+    pub fn build_w(m: &QmcModel, w: usize) -> Self {
+        let it = InterlaceW::new(m, w);
         let n = m.base.n;
         let adj = m.base.adjacency();
         let mut qedge_target = Vec::new();
         let mut qedge_j = Vec::new();
-        let mut qoffsets = Vec::with_capacity(it.n_quads() + 1);
+        let mut qoffsets = Vec::with_capacity(it.n_groups() + 1);
         qoffsets.push(0u32);
         for r in 0..it.rows {
             for v in 0..n {
                 for &(u, j) in &adj[v] {
-                    qedge_target.push((4 * it.quad(r, u as usize)) as u32);
+                    qedge_target.push((w * it.group(r, u as usize)) as u32);
                     qedge_j.push(j);
                 }
                 qoffsets.push(qedge_target.len() as u32);
@@ -48,61 +57,67 @@ impl InterlacedModel {
         Self { it, jtau: m.jtau, qedge_target, qedge_j, qoffsets }
     }
 
-    pub fn n_quads(&self) -> usize {
-        self.it.n_quads()
+    /// Lane width of this layout.
+    #[inline]
+    pub fn w(&self) -> usize {
+        self.it.w
     }
 
-    /// Space quad-edges of quadruplet `q`: `(targets, js)`.
+    pub fn n_groups(&self) -> usize {
+        self.it.n_groups()
+    }
+
+    /// Space group-edges of group `g`: `(targets, js)`.
     #[inline]
-    pub fn qedges(&self, q: usize) -> (&[u32], &[f32]) {
-        let (a, b) = (self.qoffsets[q] as usize, self.qoffsets[q + 1] as usize);
+    pub fn group_edges(&self, g: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.qoffsets[g] as usize, self.qoffsets[g + 1] as usize);
         (&self.qedge_target[a..b], &self.qedge_j[a..b])
     }
 
-    /// Row and vertex of quadruplet `q`.
+    /// Row and vertex of group `g`.
     #[inline]
-    pub fn row_vertex(&self, q: usize) -> (usize, usize) {
-        (q / self.it.n_base, q % self.it.n_base)
+    pub fn row_vertex(&self, g: usize) -> (usize, usize) {
+        (g / self.it.n_base, g % self.it.n_base)
     }
 
-    /// Base index (`4*quad`) of the lane-aligned up-neighbour quadruplet,
-    /// or `None` at the wrapping boundary (`r = rows-1`).
+    /// Base index (`W*group`) of the lane-aligned up-neighbour group, or
+    /// `None` at the wrapping boundary (`r = rows-1`).
     #[inline]
-    pub fn up_quad(&self, q: usize) -> Option<usize> {
-        let (r, v) = self.row_vertex(q);
+    pub fn up_base(&self, g: usize) -> Option<usize> {
+        let (r, v) = self.row_vertex(g);
         if r + 1 < self.it.rows {
-            Some(4 * self.it.quad(r + 1, v))
+            Some(self.it.w * self.it.group(r + 1, v))
         } else {
             None
         }
     }
 
-    /// Base index of the lane-aligned down-neighbour quadruplet, or
-    /// `None` at the wrapping boundary (`r = 0`).
+    /// Base index of the lane-aligned down-neighbour group, or `None` at
+    /// the wrapping boundary (`r = 0`).
     #[inline]
-    pub fn down_quad(&self, q: usize) -> Option<usize> {
-        let (r, v) = self.row_vertex(q);
+    pub fn down_base(&self, g: usize) -> Option<usize> {
+        let (r, v) = self.row_vertex(g);
         if r > 0 {
-            Some(4 * self.it.quad(r - 1, v))
+            Some(self.it.w * self.it.group(r - 1, v))
         } else {
             None
         }
     }
 
     /// Boundary targets: the up-neighbour of lane `m` at `r = rows-1` is
-    /// lane `(m+1) % 4` of quadruplet `(0, v)`.
+    /// lane `(m+1) % W` of group `(0, v)`.
     #[inline]
-    pub fn up_wrap_quad(&self, q: usize) -> usize {
-        let (_, v) = self.row_vertex(q);
-        4 * self.it.quad(0, v)
+    pub fn up_wrap_base(&self, g: usize) -> usize {
+        let (_, v) = self.row_vertex(g);
+        self.it.w * self.it.group(0, v)
     }
 
-    /// The down-neighbour of lane `m` at `r = 0` is lane `(m+3) % 4` of
-    /// quadruplet `(rows-1, v)`.
+    /// The down-neighbour of lane `m` at `r = 0` is lane `(m+W-1) % W` of
+    /// group `(rows-1, v)`.
     #[inline]
-    pub fn down_wrap_quad(&self, q: usize) -> usize {
-        let (_, v) = self.row_vertex(q);
-        4 * self.it.quad(self.it.rows - 1, v)
+    pub fn down_wrap_base(&self, g: usize) -> usize {
+        let (_, v) = self.row_vertex(g);
+        self.it.w * self.it.group(self.it.rows - 1, v)
     }
 }
 
@@ -112,44 +127,57 @@ mod tests {
     use crate::ising::builder::torus_workload;
 
     #[test]
-    fn quad_edges_mirror_base_adjacency() {
-        let w = torus_workload(4, 4, 8, 3, 0.25);
-        let im = InterlacedModel::build(&w.model);
-        let adj = w.model.base.adjacency();
-        for q in 0..im.n_quads() {
-            let (r, v) = im.row_vertex(q);
-            let (targets, js) = im.qedges(q);
-            assert_eq!(targets.len(), adj[v].len());
-            for (k, &(u, j)) in adj[v].iter().enumerate() {
-                assert_eq!(targets[k] as usize, 4 * im.it.quad(r, u as usize));
-                assert_eq!(js[k], j);
+    fn group_edges_mirror_base_adjacency() {
+        for w in [4usize, 8] {
+            let wl = torus_workload(4, 4, 4 * w, 3, 0.25);
+            let im = InterlacedModel::build_w(&wl.model, w);
+            let adj = wl.model.base.adjacency();
+            for g in 0..im.n_groups() {
+                let (r, v) = im.row_vertex(g);
+                let (targets, js) = im.group_edges(g);
+                assert_eq!(targets.len(), adj[v].len());
+                for (k, &(u, j)) in adj[v].iter().enumerate() {
+                    assert_eq!(targets[k] as usize, w * im.it.group(r, u as usize), "w={w}");
+                    assert_eq!(js[k], j);
+                }
             }
         }
     }
 
     #[test]
-    fn tau_quads_consistent_with_permutation() {
-        let w = torus_workload(4, 4, 16, 3, 0.25);
-        let m = &w.model;
-        let im = InterlacedModel::build(m);
-        let n = m.base.n;
-        for q in 0..im.n_quads() {
-            for lane in 0..4 {
-                let orig = im.it.inv[4 * q + lane] as usize;
-                let (layer, v) = (orig / n, orig % n);
-                let up_orig = ((layer + 1) % m.n_layers) * n + v;
-                let up_new = im.it.perm[up_orig] as usize;
-                match im.up_quad(q) {
-                    Some(base) => assert_eq!(up_new, base + lane),
-                    None => assert_eq!(up_new, im.up_wrap_quad(q) + (lane + 1) % 4),
-                }
-                let down_orig = ((layer + m.n_layers - 1) % m.n_layers) * n + v;
-                let down_new = im.it.perm[down_orig] as usize;
-                match im.down_quad(q) {
-                    Some(base) => assert_eq!(down_new, base + lane),
-                    None => assert_eq!(down_new, im.down_wrap_quad(q) + (lane + 3) % 4),
+    fn tau_groups_consistent_with_permutation() {
+        for w in [4usize, 8] {
+            let wl = torus_workload(4, 4, 4 * w, 3, 0.25);
+            let m = &wl.model;
+            let im = InterlacedModel::build_w(m, w);
+            let n = m.base.n;
+            for g in 0..im.n_groups() {
+                for lane in 0..w {
+                    let orig = im.it.inv[w * g + lane] as usize;
+                    let (layer, v) = (orig / n, orig % n);
+                    let up_orig = ((layer + 1) % m.n_layers) * n + v;
+                    let up_new = im.it.perm[up_orig] as usize;
+                    match im.up_base(g) {
+                        Some(base) => assert_eq!(up_new, base + lane, "w={w}"),
+                        None => assert_eq!(up_new, im.up_wrap_base(g) + (lane + 1) % w, "w={w}"),
+                    }
+                    let down_orig = ((layer + m.n_layers - 1) % m.n_layers) * n + v;
+                    let down_new = im.it.perm[down_orig] as usize;
+                    match im.down_base(g) {
+                        Some(base) => assert_eq!(down_new, base + lane, "w={w}"),
+                        None => {
+                            assert_eq!(down_new, im.down_wrap_base(g) + (lane + w - 1) % w, "w={w}")
+                        }
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn default_build_is_width_4() {
+        let wl = torus_workload(4, 4, 16, 3, 0.25);
+        let im = InterlacedModel::build(&wl.model);
+        assert_eq!(im.w(), 4);
     }
 }

@@ -1,17 +1,25 @@
-//! The Metropolis sweep optimization ladder — the paper's Table 1.
+//! The Metropolis sweep optimization ladder — the paper's Table 1,
+//! extended along the vector-width axis.
 //!
 //! Every rung implements [`Sweeper`] over the same [`QmcModel`], so the
 //! benchmark harness can time them interchangeably and the tests can
 //! check trajectory/statistical equivalence:
 //!
-//! | Rung | Module | Paper ingredients |
-//! |------|--------|-------------------|
-//! | A.1  | [`a1_original`] | Fig-2 branchy loop, Fig-4 nested tables, library `exp` |
-//! | A.2  | [`a2_basic`]    | Fig-3/6 branch-free flat loop, tau-last edges, result caching, fast `exp` (§2) |
-//! | A.3  | [`a3_vecrng`]   | + SSE-interlaced MT19937 and vector flip decisions (§3) |
-//! | A.4  | [`a4_full`]     | + vectorized neighbour updates via 4-way layer interlacing (§3.1) |
-//! | B.1  | [`accel`]       | accelerator, naive gathered layout |
-//! | B.2  | [`accel`]       | accelerator, coalesced interlaced layout (§3.2) |
+//! | Rung   | Module | Lanes | Paper ingredients |
+//! |--------|--------|-------|-------------------|
+//! | A.1    | [`a1_original`] | 1 | Fig-2 branchy loop, Fig-4 nested tables, library `exp` |
+//! | A.2    | [`a2_basic`]    | 1 | Fig-3/6 branch-free flat loop, tau-last edges, result caching, fast `exp` (§2) |
+//! | A.3    | [`a3_vecrng`]   | 4 | + SSE-interlaced MT19937 and vector flip decisions (§3) |
+//! | A.4    | [`a4_full`]     | 4 | + vectorized neighbour updates via 4-way layer interlacing (§3.1) |
+//! | A.3w8  | [`a3_vecrng`]   | 8 | A.3 on the AVX2 octet substrate (portable fallback without AVX2) |
+//! | A.4w8  | [`a4_full`]     | 8 | A.4 on the AVX2 octet substrate (portable fallback without AVX2) |
+//! | B.1    | [`accel`]       | 32 | accelerator, naive gathered layout |
+//! | B.2    | [`accel`]       | 32 | accelerator, coalesced interlaced layout (§3.2) |
+//!
+//! The A.3/A.4 sweepers are generic over the [`crate::simd::SimdU32`]
+//! backend; [`make_sweeper`] does the runtime dispatch (SSE2 at width 4 —
+//! always present on x86_64 — and `is_x86_feature_detected!("avx2")` for
+//! width 8, with the portable lanes as the universal fallback).
 //!
 //! The a/b compiler-optimization split of the paper (A.1a vs A.1b etc.) is
 //! not a code difference — the harness measures the same rungs from a
@@ -51,17 +59,22 @@ impl ExpMode {
     }
 }
 
-/// The implementation rungs of the paper's Table 1.
+/// The implementation rungs of the paper's Table 1, plus the width-8
+/// variants of the vectorized CPU rungs.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum SweepKind {
     /// A.1 — original scalar implementation.
     A1Original,
     /// A.2 — basic optimizations (§2).
     A2Basic,
-    /// A.3 — vectorized MT19937 + flip decisions (§3).
+    /// A.3 — vectorized MT19937 + flip decisions (§3), 4 lanes (SSE2).
     A3VecRng,
-    /// A.4 — fully vectorized, incl. neighbour updates (§3.1).
+    /// A.4 — fully vectorized, incl. neighbour updates (§3.1), 4 lanes.
     A4Full,
+    /// A.3 at 8 lanes (AVX2 when available, portable otherwise).
+    A3VecRngW8,
+    /// A.4 at 8 lanes (AVX2 when available, portable otherwise).
+    A4FullW8,
     /// B.1 — accelerator, naive layout.
     B1Accel,
     /// B.2 — accelerator, coalesced layout (§3.2).
@@ -71,17 +84,24 @@ pub enum SweepKind {
 impl std::str::FromStr for SweepKind {
     type Err = crate::Error;
 
-    /// Parse CLI spellings: `a1-original`/`a1`/`A.1`, …
+    /// Parse CLI spellings: `a1-original`/`a1`/`A.1`, …, plus explicit
+    /// width suffixes `a3-vec-rng-w8`/`a4-full-w8` (and `-w4` aliases for
+    /// the paper-width rungs).
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
             "a1-original" | "a1" | "a.1" => Ok(SweepKind::A1Original),
             "a2-basic" | "a2" | "a.2" => Ok(SweepKind::A2Basic),
-            "a3-vec-rng" | "a3-vecrng" | "a3" | "a.3" => Ok(SweepKind::A3VecRng),
-            "a4-full" | "a4" | "a.4" => Ok(SweepKind::A4Full),
+            "a3-vec-rng" | "a3-vecrng" | "a3" | "a.3" | "a3-vec-rng-w4" | "a3-w4" => {
+                Ok(SweepKind::A3VecRng)
+            }
+            "a4-full" | "a4" | "a.4" | "a4-full-w4" | "a4-w4" => Ok(SweepKind::A4Full),
+            "a3-vec-rng-w8" | "a3-vecrng-w8" | "a3-w8" | "a.3w8" => Ok(SweepKind::A3VecRngW8),
+            "a4-full-w8" | "a4-w8" | "a.4w8" => Ok(SweepKind::A4FullW8),
             "b1-accel" | "b1" | "b.1" => Ok(SweepKind::B1Accel),
             "b2-accel" | "b2" | "b.2" => Ok(SweepKind::B2Accel),
             other => anyhow::bail!(
-                "unknown rung {other:?} (expected a1-original, a2-basic, a3-vec-rng, a4-full, b1-accel, b2-accel)"
+                "unknown rung {other:?} (expected a1-original, a2-basic, a3-vec-rng, a4-full, \
+                 a3-vec-rng-w8, a4-full-w8, b1-accel, b2-accel)"
             ),
         }
     }
@@ -94,6 +114,8 @@ impl SweepKind {
             SweepKind::A2Basic => "A.2",
             SweepKind::A3VecRng => "A.3",
             SweepKind::A4Full => "A.4",
+            SweepKind::A3VecRngW8 => "A.3w8",
+            SweepKind::A4FullW8 => "A.4w8",
             SweepKind::B1Accel => "B.1",
             SweepKind::B2Accel => "B.2",
         }
@@ -108,18 +130,86 @@ impl SweepKind {
     }
 
     /// Width of the group that must be decided together — 1 for scalar
-    /// rungs, 4 for the SSE rungs, the interlace width for the
-    /// accelerator (Fig 14's "1 spin out of W flips" analysis).
+    /// rungs, the lane count for the SIMD rungs, the interlace width for
+    /// the accelerator (Fig 14's "1 spin out of W flips" analysis).
     pub fn group_width(self) -> usize {
         match self {
             SweepKind::A1Original | SweepKind::A2Basic => 1,
             SweepKind::A3VecRng | SweepKind::A4Full => 4,
+            SweepKind::A3VecRngW8 | SweepKind::A4FullW8 => 8,
             SweepKind::B1Accel | SweepKind::B2Accel => 32,
         }
     }
 
+    /// The A.3 rung at lane width `w` (4 or 8).
+    pub fn a3_for_width(w: usize) -> SweepKind {
+        if w == 8 {
+            SweepKind::A3VecRngW8
+        } else {
+            SweepKind::A3VecRng
+        }
+    }
+
+    /// The A.4 rung at lane width `w` (4 or 8).
+    pub fn a4_for_width(w: usize) -> SweepKind {
+        if w == 8 {
+            SweepKind::A4FullW8
+        } else {
+            SweepKind::A4Full
+        }
+    }
+
+    /// The fastest CPU rung at the widest lane count this host has a
+    /// hand-written backend for — A.4w8 on AVX2 machines, A.4 otherwise.
+    pub fn preferred_cpu() -> SweepKind {
+        SweepKind::a4_for_width(crate::simd::widest_supported_width())
+    }
+
+    /// [`SweepKind::preferred_cpu`] constrained by the model geometry: the
+    /// widest A.4 rung whose lane count the layer count supports.  The
+    /// CLI's default `--kind`.
+    pub fn preferred_cpu_for_layers(n_layers: usize) -> SweepKind {
+        let wide = SweepKind::preferred_cpu();
+        if wide.supports_layers(n_layers) {
+            wide
+        } else {
+            SweepKind::A4Full
+        }
+    }
+
+    /// Whether a model with `n_layers` QMC layers can run on this rung:
+    /// the SIMD rungs interlace the layers into `group_width()` sections
+    /// of at least 2 layers each.  (The accelerator rungs have their own
+    /// geometry checks against the compiled artifacts.)
+    pub fn supports_layers(self, n_layers: usize) -> bool {
+        match self {
+            SweepKind::A3VecRng
+            | SweepKind::A4Full
+            | SweepKind::A3VecRngW8
+            | SweepKind::A4FullW8 => {
+                let w = self.group_width();
+                n_layers % w == 0 && n_layers / w >= 2
+            }
+            _ => true,
+        }
+    }
+
+    /// The paper's four CPU rungs (widths 1 and 4).
     pub fn all_cpu() -> [SweepKind; 4] {
         [SweepKind::A1Original, SweepKind::A2Basic, SweepKind::A3VecRng, SweepKind::A4Full]
+    }
+
+    /// All six CPU rungs including the width-8 variants.  The W8 rungs
+    /// need `n_layers` divisible by 8 with `n_layers/8 >= 2`.
+    pub fn all_cpu_wide() -> [SweepKind; 6] {
+        [
+            SweepKind::A1Original,
+            SweepKind::A2Basic,
+            SweepKind::A3VecRng,
+            SweepKind::A4Full,
+            SweepKind::A3VecRngW8,
+            SweepKind::A4FullW8,
+        ]
     }
 }
 
@@ -130,7 +220,7 @@ pub struct SweepStats {
     pub attempts: u64,
     /// Accepted flips.
     pub flips: u64,
-    /// Decision groups processed (quadruplets for the SSE rungs).
+    /// Decision groups processed (quadruplets/octets for the SIMD rungs).
     pub groups: u64,
     /// Groups in which at least one spin flipped — the paper's Fig-14
     /// "must wait for a flip" event.
@@ -195,11 +285,28 @@ pub trait Sweeper {
 
 /// Construct a sweeper with the rung's paper-default exponential mode.
 ///
-/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  For the
-/// accelerator rungs use [`accel::AccelSweeper::new`] directly (they need
-/// a [`crate::runtime::Runtime`] and artifacts on disk).
-pub fn make_sweeper(kind: SweepKind, model: &QmcModel, s0: &[f32], seed: u32) -> Box<dyn Sweeper + Send> {
-    make_sweeper_with_exp(kind, model, s0, seed, kind.default_exp())
+/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  Errors
+/// on the accelerator rungs (they need a [`crate::runtime::Runtime`] and
+/// artifacts on disk — use [`accel::AccelSweeper::new`]) and on SIMD
+/// rungs whose lane width does not divide the model's layer count.
+pub fn make_sweeper(
+    kind: SweepKind,
+    model: &QmcModel,
+    s0: &[f32],
+    seed: u32,
+) -> crate::Result<Box<dyn Sweeper + Send>> {
+    try_make_sweeper(kind, model, s0, seed)
+}
+
+/// Fallible construction — alias of [`make_sweeper`], kept so call sites
+/// can spell out that they handle the error.
+pub fn try_make_sweeper(
+    kind: SweepKind,
+    model: &QmcModel,
+    s0: &[f32],
+    seed: u32,
+) -> crate::Result<Box<dyn Sweeper + Send>> {
+    try_make_sweeper_with_exp(kind, model, s0, seed, kind.default_exp())
 }
 
 /// [`make_sweeper`] with an explicit exponential mode (tests use this to
@@ -210,14 +317,148 @@ pub fn make_sweeper_with_exp(
     s0: &[f32],
     seed: u32,
     exp: ExpMode,
-) -> Box<dyn Sweeper + Send> {
-    match kind {
+) -> crate::Result<Box<dyn Sweeper + Send>> {
+    try_make_sweeper_with_exp(kind, model, s0, seed, exp)
+}
+
+/// Fallible construction with an explicit exponential mode.  This is the
+/// single dispatch point: width-4 rungs use SSE2 on x86_64 (baseline, no
+/// detection needed) and the portable lanes elsewhere; width-8 rungs use
+/// AVX2 when `is_x86_feature_detected!("avx2")` says so and the portable
+/// 8-lane fallback otherwise.
+pub fn try_make_sweeper_with_exp(
+    kind: SweepKind,
+    model: &QmcModel,
+    s0: &[f32],
+    seed: u32,
+    exp: ExpMode,
+) -> crate::Result<Box<dyn Sweeper + Send>> {
+    if !kind.supports_layers(model.n_layers) {
+        anyhow::bail!(
+            "rung {} needs n_layers divisible by {} with at least 2 layers per section (got {})",
+            kind.label(),
+            kind.group_width(),
+            model.n_layers
+        );
+    }
+    Ok(match kind {
         SweepKind::A1Original => Box::new(a1_original::A1Original::new(model, s0, seed, exp)),
         SweepKind::A2Basic => Box::new(a2_basic::A2Basic::new(model, s0, seed, exp)),
-        SweepKind::A3VecRng => Box::new(a3_vecrng::A3VecRng::new(model, s0, seed, exp)),
-        SweepKind::A4Full => Box::new(a4_full::A4Full::new(model, s0, seed, exp)),
-        SweepKind::B1Accel | SweepKind::B2Accel => {
-            panic!("accelerator rungs need a Runtime; use accel::AccelSweeper::new")
+        SweepKind::A3VecRng => {
+            Box::new(a3_vecrng::A3VecRng::<crate::simd::U32x4>::new(model, s0, seed, exp))
         }
+        SweepKind::A4Full => {
+            Box::new(a4_full::A4Full::<crate::simd::U32x4>::new(model, s0, seed, exp))
+        }
+        SweepKind::A3VecRngW8 => make_a3_w8(model, s0, seed, exp),
+        SweepKind::A4FullW8 => make_a4_w8(model, s0, seed, exp),
+        SweepKind::B1Accel | SweepKind::B2Accel => anyhow::bail!(
+            "accelerator rung {} needs a Runtime and on-disk artifacts; \
+             use sweep::accel::AccelSweeper::new",
+            kind.label()
+        ),
+    })
+}
+
+/// Runtime-dispatched 8-lane A.3: AVX2 backend when detected, portable
+/// octet lanes otherwise.
+fn make_a3_w8(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Box<dyn Sweeper + Send> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::simd::avx2_available() {
+            return Box::new(a3_vecrng::A3VecRng::<crate::simd::avx2::U32x8>::new(
+                model, s0, seed, exp,
+            ));
+        }
+    }
+    Box::new(a3_vecrng::A3VecRng::<crate::simd::portable::U32xN<8>>::new(model, s0, seed, exp))
+}
+
+/// Runtime-dispatched 8-lane A.4: AVX2 backend when detected, portable
+/// octet lanes otherwise.
+fn make_a4_w8(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Box<dyn Sweeper + Send> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::simd::avx2_available() {
+            return Box::new(a4_full::A4Full::<crate::simd::avx2::U32x8>::new(
+                model, s0, seed, exp,
+            ));
+        }
+    }
+    Box::new(a4_full::A4Full::<crate::simd::portable::U32xN<8>>::new(model, s0, seed, exp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+    use std::str::FromStr;
+
+    #[test]
+    fn accel_rungs_error_instead_of_panicking() {
+        let wl = torus_workload(4, 4, 8, 1, 0.3);
+        for kind in [SweepKind::B1Accel, SweepKind::B2Accel] {
+            let err = try_make_sweeper(kind, &wl.model, &wl.s0, 1);
+            assert!(err.is_err(), "{kind:?} should be an error without a Runtime");
+            let msg = format!("{:#}", err.err().unwrap());
+            assert!(msg.contains("AccelSweeper"), "unhelpful message: {msg}");
+        }
+    }
+
+    #[test]
+    fn w8_rungs_reject_incompatible_layer_counts() {
+        // 12 % 8 != 0, and 8/8 = 1 < 2 sections.
+        for layers in [12usize, 8] {
+            let wl = torus_workload(4, 4, layers, 1, 0.3);
+            let err = try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1);
+            assert!(err.is_err(), "layers={layers} should be rejected for W8");
+        }
+        let wl = torus_workload(4, 4, 16, 1, 0.3);
+        assert!(try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1).is_ok());
+    }
+
+    #[test]
+    fn width_spellings_parse() {
+        assert_eq!(SweepKind::from_str("a4-full-w8").unwrap(), SweepKind::A4FullW8);
+        assert_eq!(SweepKind::from_str("a3-w8").unwrap(), SweepKind::A3VecRngW8);
+        assert_eq!(SweepKind::from_str("a4-full-w4").unwrap(), SweepKind::A4Full);
+        assert_eq!(SweepKind::from_str("A.4w8").unwrap(), SweepKind::A4FullW8);
+        assert!(SweepKind::from_str("a4-full-w16").is_err());
+    }
+
+    #[test]
+    fn group_widths_follow_lanes() {
+        assert_eq!(SweepKind::A4Full.group_width(), 4);
+        assert_eq!(SweepKind::A4FullW8.group_width(), 8);
+        assert_eq!(SweepKind::A3VecRngW8.group_width(), 8);
+        assert_eq!(SweepKind::preferred_cpu().group_width(), crate::simd::widest_supported_width());
+    }
+
+    #[test]
+    fn layer_support_predicate_matches_interlacing_rules() {
+        assert!(SweepKind::A4Full.supports_layers(8));
+        assert!(!SweepKind::A4Full.supports_layers(6)); // 6 % 4 != 0
+        assert!(!SweepKind::A4FullW8.supports_layers(8)); // one layer/section
+        assert!(!SweepKind::A4FullW8.supports_layers(12)); // 12 % 8 != 0
+        assert!(SweepKind::A4FullW8.supports_layers(16));
+        assert!(SweepKind::A1Original.supports_layers(6)); // scalar: anything
+        // The geometry-aware default never picks a rung the layers reject,
+        // regardless of host features.
+        assert_eq!(SweepKind::preferred_cpu_for_layers(12), SweepKind::A4Full);
+        let k16 = SweepKind::preferred_cpu_for_layers(16);
+        assert!(k16 == SweepKind::A4Full || k16 == SweepKind::A4FullW8);
+        assert!(k16.supports_layers(16));
+    }
+
+    #[test]
+    fn sweeper_kind_reports_width_variant() {
+        let wl = torus_workload(4, 4, 16, 1, 0.3);
+        let mut w4 = try_make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 1).unwrap();
+        let mut w8 = try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1).unwrap();
+        assert_eq!(w4.kind(), SweepKind::A4Full);
+        assert_eq!(w8.kind(), SweepKind::A4FullW8);
+        // Both must actually sweep.
+        assert!(w4.run(2, 0.8).attempts > 0);
+        assert!(w8.run(2, 0.8).attempts > 0);
     }
 }

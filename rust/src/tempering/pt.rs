@@ -161,7 +161,7 @@ mod tests {
         let replicas = (0..n)
             .map(|i| {
                 let wl = torus_workload(4, 4, 8, 7, 0.3);
-                make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 100 + i as u32)
+                make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 100 + i as u32).unwrap()
             })
             .collect();
         PtEnsemble::new(ladder, replicas, 999)

@@ -98,7 +98,7 @@ fn accel_matches_cpu_rungs_statistically() {
     }
     let e_accel = acc_b / 20.0;
 
-    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3);
+    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
     a4.run(100, beta);
     let mut acc_a = 0.0;
     for _ in 0..40 {

@@ -4,19 +4,24 @@
 //! * A.1 and A.2 differ only in data structures (and default exp mode);
 //!   with the exp mode pinned they must produce identical trajectories.
 //! * A.3 and A.4 differ only in how updates are applied; they must be
-//!   bit-identical always.
+//!   bit-identical always — at width 4 and at width 8.
+//! * The width-8 rungs run a different (8-generator) RNG schedule, so
+//!   they cannot match the width-4 trajectories bit-for-bit; they must
+//!   sample the same distribution (checked statistically, under
+//!   `ExpMode::Exact` like the W=4 rungs).
 //! * Every rung must keep its incremental effective fields consistent
 //!   with a from-scratch recomputation (the paper's h_eff bookkeeping).
 
 use vectorising::ising::builder::{diag_torus_workload, torus_workload};
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind};
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 
 #[test]
 fn a1_equals_a2_with_same_exp_mode() {
     for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
         let wl = torus_workload(6, 4, 8, 3, 0.3);
-        let mut a1 = make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 42, exp);
-        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 42, exp);
+        let mut a1 =
+            make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 42, exp).unwrap();
+        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 42, exp).unwrap();
         for round in 0..20 {
             let s1 = a1.run(1, 0.8);
             let s2 = a2.run(1, 0.8);
@@ -30,8 +35,11 @@ fn a1_equals_a2_with_same_exp_mode() {
 fn a3_equals_a4_bitexact() {
     for (w, h, l, seed) in [(4usize, 4usize, 8usize, 1u32), (6, 4, 16, 7), (8, 8, 32, 99)] {
         let wl = torus_workload(w, h, l, seed as u64, 0.3);
-        let mut a3 = make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, seed, ExpMode::Fast);
-        let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, seed, ExpMode::Fast);
+        let mut a3 =
+            make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, seed, ExpMode::Fast)
+                .unwrap();
+        let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, seed, ExpMode::Fast)
+            .unwrap();
         for round in 0..10 {
             let beta = 0.2 + 0.2 * (round % 4) as f32;
             let s3 = a3.run(1, beta);
@@ -46,10 +54,50 @@ fn a3_equals_a4_bitexact() {
 }
 
 #[test]
+fn a3_w8_equals_a4_w8_bitexact() {
+    // The width-8 twin of the test above: same interlaced RNG and decision
+    // math, different update mechanics — trajectories must be identical
+    // whether the backend is AVX2 or the portable octet lanes.
+    for (w, h, l, seed) in [(4usize, 4usize, 16usize, 1u32), (6, 4, 24, 7), (8, 8, 32, 99)] {
+        let wl = torus_workload(w, h, l, seed as u64, 0.3);
+        let mut a3 =
+            make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
+                .unwrap();
+        let mut a4 =
+            make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
+                .unwrap();
+        for round in 0..10 {
+            let beta = 0.2 + 0.2 * (round % 4) as f32;
+            let s3 = a3.run(1, beta);
+            let s4 = a4.run(1, beta);
+            assert_eq!(s3.flips, s4.flips, "cfg ({w},{h},{l}) round {round}");
+            assert_eq!(s3.groups_with_flip, s4.groups_with_flip);
+            assert_eq!(a3.state(), a4.state(), "cfg ({w},{h},{l}) round {round}");
+        }
+    }
+}
+
+#[test]
 fn a3_a4_also_agree_on_degree6_graph() {
     let wl = diag_torus_workload(6, 4, 12, 5, 0.25);
-    let mut a3 = make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, 11, ExpMode::Fast);
-    let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 11, ExpMode::Fast);
+    let mut a3 =
+        make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+    let mut a4 =
+        make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+    for _ in 0..8 {
+        a3.run(1, 0.6);
+        a4.run(1, 0.6);
+    }
+    assert_eq!(a3.state(), a4.state());
+}
+
+#[test]
+fn a3_a4_w8_also_agree_on_degree6_graph() {
+    let wl = diag_torus_workload(6, 4, 16, 5, 0.25);
+    let mut a3 =
+        make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+    let mut a4 =
+        make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
     for _ in 0..8 {
         a3.run(1, 0.6);
         a4.run(1, 0.6);
@@ -60,9 +108,9 @@ fn a3_a4_also_agree_on_degree6_graph() {
 #[test]
 fn effective_fields_stay_consistent_on_every_rung() {
     let wl = torus_workload(6, 6, 16, 13, 0.35);
-    for kind in SweepKind::all_cpu() {
+    for kind in SweepKind::all_cpu_wide() {
         let mut sw =
-            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 77, kind.default_exp());
+            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 77, kind.default_exp()).unwrap();
         sw.run(25, 0.7);
         let err = sw.validate();
         assert!(err < 1e-3, "{kind:?} h_eff drift {err}");
@@ -71,13 +119,16 @@ fn effective_fields_stay_consistent_on_every_rung() {
 
 #[test]
 fn all_rungs_sample_the_same_distribution() {
-    // Statistical equivalence: long runs at the same β must produce mean
-    // energies within a few standard errors of each other.
+    // Statistical equivalence across *all six* CPU rungs, including the
+    // width-8 variants: long runs at the same β with the exact exp must
+    // produce mean energies within a few percent of each other.  This is
+    // the acceptance check that a4-full-w8 matches the A.1/A.2
+    // trajectories in distribution, exactly like the W=4 rungs do.
     let beta = 0.9f32;
     let mut means = Vec::new();
-    for kind in SweepKind::all_cpu() {
-        let wl = torus_workload(4, 4, 8, 21, 0.3);
-        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 5489, ExpMode::Exact);
+    for kind in SweepKind::all_cpu_wide() {
+        let wl = torus_workload(4, 4, 16, 21, 0.3);
+        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 5489, ExpMode::Exact).unwrap();
         sw.run(200, beta); // burn-in
         let mut acc = 0.0;
         let n = 300;
@@ -88,7 +139,7 @@ fn all_rungs_sample_the_same_distribution() {
         means.push(acc / n as f64);
     }
     let avg = means.iter().sum::<f64>() / means.len() as f64;
-    for (kind, m) in SweepKind::all_cpu().iter().zip(&means) {
+    for (kind, m) in SweepKind::all_cpu_wide().iter().zip(&means) {
         let rel = (m - avg).abs() / avg.abs();
         assert!(rel < 0.05, "{kind:?}: mean energy {m} vs ensemble {avg}");
     }
@@ -102,7 +153,7 @@ fn fast_exp_mode_does_not_bias_sampling() {
     let mut res = Vec::new();
     for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
         let wl = torus_workload(4, 4, 8, 33, 0.3);
-        let mut sw = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 123, exp);
+        let mut sw = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 123, exp).unwrap();
         sw.run(200, beta);
         let mut acc = 0.0;
         let n = 300;
@@ -120,15 +171,17 @@ fn fast_exp_mode_does_not_bias_sampling() {
 
 #[test]
 fn set_state_resets_trajectory() {
-    let wl = torus_workload(4, 4, 8, 8, 0.3);
-    let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 9, ExpMode::Fast);
-    sw.run(5, 0.5);
-    let snapshot = sw.state();
-    sw.run(5, 0.5);
-    assert_ne!(sw.state(), snapshot);
-    sw.set_state(&snapshot);
-    assert_eq!(sw.state(), snapshot);
-    assert!(sw.validate() < 1e-4);
+    for kind in [SweepKind::A4Full, SweepKind::A4FullW8] {
+        let wl = torus_workload(4, 4, 16, 8, 0.3);
+        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 9, ExpMode::Fast).unwrap();
+        sw.run(5, 0.5);
+        let snapshot = sw.state();
+        sw.run(5, 0.5);
+        assert_ne!(sw.state(), snapshot, "{kind:?}");
+        sw.set_state(&snapshot);
+        assert_eq!(sw.state(), snapshot, "{kind:?}");
+        assert!(sw.validate() < 1e-4, "{kind:?}");
+    }
 }
 
 #[test]
@@ -136,7 +189,8 @@ fn flip_probability_monotone_in_temperature() {
     let wl = torus_workload(6, 4, 8, 17, 0.3);
     let mut probs = Vec::new();
     for beta in [3.0f32, 1.0, 0.2] {
-        let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 50, ExpMode::Fast);
+        let mut sw =
+            make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 50, ExpMode::Fast).unwrap();
         sw.run(10, beta); // settle
         let st = sw.run(30, beta);
         probs.push(st.flip_prob());

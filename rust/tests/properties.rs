@@ -7,8 +7,10 @@
 
 use vectorising::ising::builder::{torus_workload, Workload};
 use vectorising::ising::lcg::Lcg;
-use vectorising::ising::reorder::Interlace4;
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind};
+use vectorising::ising::reorder::InterlaceW;
+use vectorising::rng::{Mt19937, Mt19937Simd};
+use vectorising::simd::{portable, SimdU32};
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 use vectorising::tempering::{Ladder, PtEnsemble};
 use vectorising::util::json::Value;
 
@@ -20,35 +22,89 @@ fn random_workload(rng: &mut Lcg) -> Workload {
     torus_workload(w, h, l, rng.next_u64() % 1000, 0.1 + 0.4 * (rng.next_unit().abs()))
 }
 
-/// Property: the 4-way interlace is a permutation that round-trips any
-/// state, for every valid geometry.
+/// Valid interlace widths for a layer count (of the two SIMD widths).
+fn valid_widths(l: usize) -> Vec<usize> {
+    [4usize, 8].iter().copied().filter(|&w| l % w == 0 && l / w >= 2).collect()
+}
+
+/// Property: the W-way interlace is a permutation that round-trips any
+/// state, for every valid (geometry, width) pair.
 #[test]
 fn prop_interlace_roundtrips() {
     let mut rng = Lcg::new(2024);
     for case in 0..40 {
         let wl = random_workload(&mut rng);
-        let it = Interlace4::new(&wl.model);
-        let s = wl.model.random_state(&mut rng);
-        let back = it.to_original(&it.to_interlaced(&s));
-        assert_eq!(back, s, "case {case}");
-        // permutation bijectivity
-        let mut seen = vec![false; s.len()];
-        for &p in &it.perm {
-            assert!(!seen[p as usize], "case {case}: duplicate");
-            seen[p as usize] = true;
+        for w in valid_widths(wl.model.n_layers) {
+            let it = InterlaceW::new(&wl.model, w);
+            let s = wl.model.random_state(&mut rng);
+            let back = it.to_original(&it.to_interlaced(&s));
+            assert_eq!(back, s, "case {case} w={w}");
+            // permutation bijectivity
+            let mut seen = vec![false; s.len()];
+            for &p in &it.perm {
+                assert!(!seen[p as usize], "case {case} w={w}: duplicate");
+                seen[p as usize] = true;
+            }
         }
     }
 }
 
+/// Property: each lane of the SIMD MT19937 is bit-exact to a scalar
+/// generator with that lane's seed — for W = 4 and W = 8, across block
+/// boundaries, from random base seeds.
+#[test]
+fn prop_simd_mt19937_lane_exact_for_w4_and_w8() {
+    fn check<U: SimdU32>(base: u32) {
+        let seeds: Vec<u32> = (0..U::LANES as u32).map(|k| base.wrapping_add(k)).collect();
+        let mut simd = Mt19937Simd::<U>::new(&seeds);
+        let mut scalars: Vec<Mt19937> = seeds.iter().map(|&s| Mt19937::new(s)).collect();
+        let mut row = vec![0u32; U::LANES];
+        for step in 0..700 {
+            simd.next_into(&mut row);
+            for (k, &v) in row.iter().enumerate() {
+                assert_eq!(v, scalars[k].next_u32(), "base {base} step {step} lane {k}");
+            }
+        }
+    }
+    let mut rng = Lcg::new(1312);
+    for _ in 0..6 {
+        let base = (rng.next_u64() >> 16) as u32;
+        check::<portable::U32xN<4>>(base);
+        check::<portable::U32xN<8>>(base);
+        check::<vectorising::simd::U32x4>(base);
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if vectorising::simd::avx2_available() {
+            let mut rng = Lcg::new(1729);
+            for _ in 0..6 {
+                check::<vectorising::simd::avx2::U32x8>((rng.next_u64() >> 16) as u32);
+            }
+        }
+    }
+}
+
+/// Pick a CPU rung compatible with the workload's layer count.
+fn random_cpu_kind(rng: &mut Lcg, l: usize) -> SweepKind {
+    let pool = SweepKind::all_cpu_wide();
+    let kind = pool[(rng.next_u64() % pool.len() as u64) as usize];
+    if kind.group_width() > 1 && !valid_widths(l).contains(&kind.group_width()) {
+        SweepKind::A4Full // every random workload supports width 4
+    } else {
+        kind
+    }
+}
+
 /// Property: incremental h_eff equals recomputation after arbitrary sweep
-/// sequences with arbitrary β schedules, on every rung.
+/// sequences with arbitrary β schedules, on every rung (both widths).
 #[test]
 fn prop_heff_consistency_under_random_schedules() {
     let mut rng = Lcg::new(777);
     for case in 0..12 {
         let wl = random_workload(&mut rng);
-        let kind = SweepKind::all_cpu()[(rng.next_u64() % 4) as usize];
-        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, case as u32, ExpMode::Fast);
+        let kind = random_cpu_kind(&mut rng, wl.model.n_layers);
+        let mut sw =
+            make_sweeper_with_exp(kind, &wl.model, &wl.s0, case as u32, ExpMode::Fast).unwrap();
         for _ in 0..5 {
             let beta = 0.1 + rng.next_unit().abs() * 2.0;
             let n = 1 + (rng.next_u64() % 4) as usize;
@@ -65,8 +121,9 @@ fn prop_stats_and_domain_invariants() {
     let mut rng = Lcg::new(31337);
     for case in 0..12 {
         let wl = random_workload(&mut rng);
-        let kind = SweepKind::all_cpu()[(rng.next_u64() % 4) as usize];
-        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 1 + case as u32, ExpMode::Fast);
+        let kind = random_cpu_kind(&mut rng, wl.model.n_layers);
+        let mut sw =
+            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 1 + case as u32, ExpMode::Fast).unwrap();
         let stats = sw.run(4, 0.9);
         assert_eq!(stats.attempts, 4 * wl.model.n_spins() as u64, "case {case}");
         assert!(stats.flips <= stats.attempts);
@@ -94,6 +151,7 @@ fn prop_exchange_preserves_state_multiset() {
                     case as u32 * 100 + i as u32,
                     ExpMode::Fast,
                 )
+                .unwrap()
             })
             .collect();
         let mut pt = PtEnsemble::new(ladder, replicas, case as u32);
