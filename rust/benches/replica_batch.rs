@@ -1,0 +1,138 @@
+//! Replica-batched sweeping (C.1/C.1w8) vs per-replica scalar/vector
+//! rungs on a paper-scale 115-replica tempering ladder — replicas/sec,
+//! i.e. how many full replica-sweeps of the ladder the engine retires
+//! per second.
+//!
+//! Two workloads:
+//!
+//! * **paper-scale** (96 x 256 spins): the A-rungs can interlace layers
+//!   here, so this measures lane-per-replica batching against the
+//!   strongest per-replica baselines (A.2 scalar and the widest A.4);
+//! * **shallow** (`layers = 2`, 96 x 2 spins): the geometry the A.3/A.4
+//!   interlacing must reject — per-replica sweeping degrades to scalar
+//!   A.2, while the C-rungs keep their full vector width.  This is the
+//!   ISSUE-2 acceptance scenario: C.1w8 must beat per-replica A.2 by
+//!   >= 2x replicas/sec.
+
+mod support;
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::simd::{avx2_available, widest_supported_width};
+use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::tempering::{BatchedPtEnsemble, Ladder};
+
+const N_REPLICAS: usize = 115;
+
+struct Scenario {
+    name: &'static str,
+    layers: usize,
+    sweeps: usize,
+    reps: usize,
+}
+
+/// Per-replica baseline: one boxed sweeper per ladder rung, swept
+/// serially (the single-thread view of the scalar ensemble engine).
+fn time_per_replica(kind: SweepKind, sc: &Scenario, ladder: &Ladder) -> Option<Vec<f64>> {
+    let wl = torus_workload(12, 8, sc.layers, 1, 0.3);
+    if !kind.supports_layers(wl.model.n_layers) {
+        return None;
+    }
+    let mut sweepers: Vec<Box<dyn Sweeper + Send>> = (0..N_REPLICAS)
+        .map(|i| make_sweeper(kind, &wl.model, &wl.s0, 1 + 1000 * i as u32).unwrap())
+        .collect();
+    // settle into a representative flip regime
+    for (i, sw) in sweepers.iter_mut().enumerate() {
+        sw.run(2, ladder.beta(i));
+    }
+    Some(support::time_reps(1, sc.reps, || {
+        for (i, sw) in sweepers.iter_mut().enumerate() {
+            sw.run(sc.sweeps, ladder.beta(i));
+        }
+    }))
+}
+
+/// C-rung: the ladder grouped into lane-batches, swept serially batch by
+/// batch (same single-thread view; the pool parallelises both engines
+/// identically).
+fn time_batched(kind: SweepKind, sc: &Scenario, ladder: &Ladder) -> Vec<f64> {
+    let wl = torus_workload(12, 8, sc.layers, 1, 0.3);
+    let models = vec![wl.model.clone(); N_REPLICAS];
+    let states = vec![wl.s0.clone(); N_REPLICAS];
+    let seeds: Vec<u32> = (0..N_REPLICAS as u32).map(|i| 1 + 1000 * i).collect();
+    let mut pt = BatchedPtEnsemble::new(
+        ladder.clone(),
+        kind,
+        &models,
+        &states,
+        &seeds,
+        0x5a5a,
+        kind.default_exp(),
+    )
+    .unwrap();
+    pt.sweep_all(2); // settle
+    support::time_reps(1, sc.reps, || {
+        pt.sweep_all(sc.sweeps);
+    })
+}
+
+fn main() {
+    println!(
+        "replica batching: {N_REPLICAS}-replica ladder (paper §4 count), 12x8 torus base, \
+         replica-sweeps/sec"
+    );
+    println!(
+        "host: avx2={}  widest backend width={}\n",
+        avx2_available(),
+        widest_supported_width()
+    );
+    let ladder = Ladder::geometric(3.0, 0.5, N_REPLICAS);
+
+    let scenarios = [
+        Scenario { name: "paper-scale (96x256)", layers: 256, sweeps: 2, reps: 3 },
+        Scenario { name: "shallow (96x2, A-rungs can't widen)", layers: 2, sweeps: 200, reps: 5 },
+    ];
+
+    for sc in &scenarios {
+        println!("== {} ==", sc.name);
+        // work unit: one sweep of one replica
+        let replica_sweeps = (N_REPLICAS * sc.sweeps) as f64;
+        let mut means: Vec<(&str, f64)> = Vec::new();
+        for kind in [
+            SweepKind::A2Basic,
+            SweepKind::A4Full,
+            SweepKind::A4FullW8,
+            SweepKind::C1ReplicaBatch,
+            SweepKind::C1ReplicaBatchW8,
+        ] {
+            let secs = if kind.is_replica_batch() {
+                Some(time_batched(kind, sc, &ladder))
+            } else {
+                time_per_replica(kind, sc, &ladder)
+            };
+            match secs {
+                Some(secs) => {
+                    support::report(
+                        &format!("{} (w={})", kind.label(), kind.group_width()),
+                        &secs,
+                        replica_sweeps,
+                        "replica-sweeps",
+                    );
+                    means.push((kind.label(), support::mean(&secs)));
+                }
+                None => println!(
+                    "{:38} (skipped: layers={} unsupported)",
+                    kind.label(),
+                    sc.layers
+                ),
+            }
+        }
+        let mean_of = |label: &str| means.iter().find(|(l, _)| *l == label).map(|(_, m)| *m);
+        if let (Some(a2), Some(c1w8)) = (mean_of("A.2"), mean_of("C.1w8")) {
+            println!(
+                "\nC.1w8 over per-replica A.2: {:.2}x replicas/sec{}\n",
+                a2 / c1w8,
+                if avx2_available() { "" } else { "   (portable fallback — no AVX2)" }
+            );
+        }
+    }
+}

@@ -8,16 +8,28 @@
 //! re-derives the effective fields (h_eff is a pure function of state, so
 //! it is never serialized).
 //!
-//! Note on RNG state: MT19937 state is deliberately *not* checkpointed —
-//! resuming re-seeds from `seed + resume_epoch`, which preserves the
-//! statistical guarantees (independent streams) without serializing
-//! 2,496-word generator states; bit-exact resume of a trajectory is not a
-//! goal of checkpointing (it is covered by the deterministic-seed tests).
+//! Note on RNG state: the CPU rungs serialize their full MT19937 state
+//! (624 words per lane, hex-packed), so save → load → resume continues
+//! the *identical* trajectory the checkpointing run produces — the
+//! property the resume tests assert for both scalar and C-rung
+//! ensembles.  Capturing is itself a (statistically invisible) bit-level
+//! event: `capture` canonicalizes the live ensemble's effective fields
+//! by re-deriving them from the states, because a resumed run can only
+//! recompute fields, and incrementally maintained fields agree with that
+//! recomputation only up to floating-point rounding.  A run with
+//! periodic checkpoints therefore bit-diverges from the same seed run
+//! without them (same distribution, different rounding path).  Rungs
+//! that cannot serialize their generator (accelerator artifacts keep
+//! theirs on device) checkpoint states only; restoring such a checkpoint
+//! requires the caller to rebuild the ensemble with *fresh* sweeper
+//! seeds for the resumed segment (offset by the checkpoint epoch, say) —
+//! reusing the original seeds would replay the already-consumed uniform
+//! stream and correlate the continuation with the recorded segment.
 
 use std::path::Path;
 
 use crate::sweep::{SweepKind, Sweeper};
-use crate::tempering::PtEnsembleImpl;
+use crate::tempering::{BatchedPtEnsemble, PtEnsembleImpl};
 use crate::util::json::{self, Value};
 use crate::Result;
 
@@ -32,10 +44,26 @@ pub struct Checkpoint {
     pub config: RunConfig,
     /// Per-replica ±1 states in original order, ladder-ordered.
     pub states: Vec<Vec<f32>>,
+    /// Serialized sweep-RNG states for bit-exact resume: one entry per
+    /// replica (scalar ensembles) or per lane-batch (batched ensembles).
+    /// Empty when the rung cannot serialize its generator.
+    pub rngs: Vec<Vec<u32>>,
+    /// Serialized exchange-RNG state (empty when not captured).
+    pub swap_rng: Vec<u32>,
+    /// Exchange-round counter at capture time (even/odd pairing parity).
+    pub round: u64,
 }
 
 impl Checkpoint {
-    /// Capture the current ensemble state.
+    /// Capture the current ensemble state, including the full RNG states
+    /// (when every replica's rung can serialize its generator) so resume
+    /// is bit-exact.
+    ///
+    /// Note: capture *canonicalizes* the live ensemble — every replica's
+    /// effective fields are re-derived from its state (see the module
+    /// docs), so taking a checkpoint perturbs the run's subsequent
+    /// trajectory at the floating-point-rounding level (never its
+    /// distribution).
     pub fn capture<S: Sweeper + ?Sized>(
         kind: SweepKind,
         epoch: u64,
@@ -43,18 +71,69 @@ impl Checkpoint {
         config: &RunConfig,
         pt: &mut PtEnsembleImpl<S>,
     ) -> Self {
-        let states = (0..pt.len()).map(|i| pt.state_of(i)).collect();
+        let states: Vec<Vec<f32>> = (0..pt.len()).map(|i| pt.state_of(i)).collect();
+        // Canonicalize the live ensemble at the snapshot point: re-derive
+        // every replica's effective fields from its state.  A resumed run
+        // must recompute fields from the serialized states; incrementally
+        // maintained fields agree with that recomputation only to rounding,
+        // so without this step the live and resumed trajectories would
+        // drift apart at the bit level.
+        for (i, s) in states.iter().enumerate() {
+            pt.set_state_of(i, s);
+        }
+        let rngs: Vec<Vec<u32>> =
+            (0..pt.len()).filter_map(|i| pt.rng_state_of(i)).collect();
+        let rngs = if rngs.len() == pt.len() { rngs } else { Vec::new() };
         Self {
             kind: kind.label().to_string(),
             epoch,
             sweeps_done,
             config: config.clone(),
             states,
+            rngs,
+            swap_rng: pt.swap_rng_state(),
+            round: pt.round_index(),
         }
     }
 
-    /// Restore the states into a freshly built ensemble (replica count and
-    /// spin count must match the checkpoint).
+    /// Capture a lane-batched (C-rung) ensemble: states per active
+    /// replica, RNG states per lane-batch.
+    pub fn capture_batched(
+        epoch: u64,
+        sweeps_done: usize,
+        config: &RunConfig,
+        pt: &mut BatchedPtEnsemble,
+    ) -> Self {
+        let states: Vec<Vec<f32>> = (0..pt.len()).map(|i| pt.state_of(i)).collect();
+        // Same field canonicalization as `capture` (active lanes only —
+        // padded lanes never influence them).
+        for (i, s) in states.iter().enumerate() {
+            pt.set_state_of(i, s);
+        }
+        Self {
+            kind: pt.kind().label().to_string(),
+            epoch,
+            sweeps_done,
+            config: config.clone(),
+            states,
+            rngs: pt.rng_states(),
+            swap_rng: pt.swap_rng_state(),
+            round: pt.round_index(),
+        }
+    }
+
+    /// Restore the states into a freshly built ensemble (replica count,
+    /// spin count and rung must match the checkpoint).  When the
+    /// checkpoint carries RNG payloads they are restored too, making the
+    /// resume bit-exact.
+    ///
+    /// When the checkpoint has **no** RNG payload (legacy format, or a
+    /// rung that cannot serialize its generator), the generators keep
+    /// whatever seeds the rebuilt ensemble was constructed with.  Do not
+    /// rebuild with the pre-checkpoint sweeper seeds in that case: the
+    /// resumed segment would replay the exact uniform stream the original
+    /// run already consumed.  Derive fresh sweeper seeds for the resumed
+    /// segment instead (e.g. offset them by [`Checkpoint::epoch`]).
     pub fn restore<S: Sweeper + ?Sized>(&self, pt: &mut PtEnsembleImpl<S>) -> Result<()> {
         if pt.len() != self.states.len() {
             anyhow::bail!(
@@ -63,28 +142,101 @@ impl Checkpoint {
                 pt.len()
             );
         }
+        if !pt.is_empty() && pt.kind_of(0).label() != self.kind {
+            anyhow::bail!(
+                "checkpoint was captured on rung {}, ensemble runs {} — resuming would \
+                 continue a different algorithm",
+                self.kind,
+                pt.kind_of(0).label()
+            );
+        }
         for (i, s) in self.states.iter().enumerate() {
             if s.len() != pt.state_of(i).len() {
                 anyhow::bail!("replica {i}: state length {} != model {}", s.len(), pt.state_of(i).len());
             }
             pt.set_state_of(i, s);
         }
+        if !self.rngs.is_empty() {
+            if self.rngs.len() != pt.len() {
+                anyhow::bail!(
+                    "checkpoint has {} RNG states, ensemble has {} replicas",
+                    self.rngs.len(),
+                    pt.len()
+                );
+            }
+            for (i, words) in self.rngs.iter().enumerate() {
+                if !pt.set_rng_state_of(i, words) {
+                    anyhow::bail!("replica {i}: RNG payload does not match this rung");
+                }
+            }
+        }
+        if !self.swap_rng.is_empty() {
+            if !pt.set_swap_rng_state(&self.swap_rng) {
+                anyhow::bail!("malformed exchange-RNG payload");
+            }
+            pt.set_round_index(self.round);
+        }
+        Ok(())
+    }
+
+    /// Restore into a freshly built lane-batched ensemble.
+    pub fn restore_batched(&self, pt: &mut BatchedPtEnsemble) -> Result<()> {
+        if pt.len() != self.states.len() {
+            anyhow::bail!(
+                "checkpoint has {} replicas, batched ensemble has {}",
+                self.states.len(),
+                pt.len()
+            );
+        }
+        if pt.kind().label() != self.kind {
+            anyhow::bail!(
+                "checkpoint was captured on rung {}, ensemble runs {} — resuming would \
+                 continue a different algorithm",
+                self.kind,
+                pt.kind().label()
+            );
+        }
+        for (i, s) in self.states.iter().enumerate() {
+            if s.len() != pt.state_of(i).len() {
+                anyhow::bail!("replica {i}: state length {} != model {}", s.len(), pt.state_of(i).len());
+            }
+            pt.set_state_of(i, s);
+        }
+        if !self.rngs.is_empty() && !pt.set_rng_states(&self.rngs) {
+            anyhow::bail!(
+                "checkpoint RNG payload ({} entries) does not match the ensemble's {} batches",
+                self.rngs.len(),
+                pt.n_batches()
+            );
+        }
+        if !self.swap_rng.is_empty() {
+            if !pt.set_swap_rng_state(&self.swap_rng) {
+                anyhow::bail!("malformed exchange-RNG payload");
+            }
+            pt.set_round_index(self.round);
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> String {
         // Spins are ±1; serialize compactly as sign bits per replica.
+        // RNG payloads are hex-packed words (8 chars per u32).
         let states: Vec<Value> = self
             .states
             .iter()
             .map(|s| Value::Str(s.iter().map(|&x| if x > 0.0 { '1' } else { '0' }).collect()))
             .collect();
+        let rngs: Vec<Value> =
+            self.rngs.iter().map(|w| Value::Str(words_to_hex(w))).collect();
         json::obj(vec![
             ("kind", json::str_v(&self.kind)),
             ("epoch", json::num(self.epoch as f64)),
             ("sweeps_done", json::num(self.sweeps_done as f64)),
             ("config", config_to_json(&self.config)),
             ("states", Value::Arr(states)),
+            ("rngs", Value::Arr(rngs)),
+            ("swap_rng", Value::Str(words_to_hex(&self.swap_rng))),
+            ("round", json::num(self.round as f64)),
         ])
         .to_string()
     }
@@ -102,12 +254,33 @@ impl Checkpoint {
                     .collect())
             })
             .collect::<Result<Vec<Vec<f32>>>>()?;
+        // RNG fields are optional: checkpoints written by earlier
+        // revisions (states only) still load.
+        let rngs = match v.opt("rngs") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|s| hex_to_words(s.as_str()?))
+                .collect::<Result<Vec<Vec<u32>>>>()?,
+            None => Vec::new(),
+        };
+        let swap_rng = match v.opt("swap_rng") {
+            Some(s) => hex_to_words(s.as_str()?)?,
+            None => Vec::new(),
+        };
+        let round = match v.opt("round") {
+            Some(r) => r.as_f64()? as u64,
+            None => 0,
+        };
         Ok(Self {
             kind: v.get("kind")?.as_str()?.to_string(),
             epoch: v.get("epoch")?.as_f64()? as u64,
             sweeps_done: v.get("sweeps_done")?.as_usize()?,
             config: config_from_json(v.get("config")?)?,
             states,
+            rngs,
+            swap_rng,
+            round,
         })
     }
 
@@ -128,6 +301,28 @@ impl Checkpoint {
             .map_err(|e| anyhow::anyhow!("cannot read checkpoint {path:?}: {e}"))?;
         Self::from_json(&text).map_err(|e| anyhow::anyhow!("malformed checkpoint {path:?}: {e}"))
     }
+}
+
+fn words_to_hex(words: &[u32]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(8 * words.len());
+    for w in words {
+        let _ = write!(s, "{w:08x}");
+    }
+    s
+}
+
+fn hex_to_words(s: &str) -> Result<Vec<u32>> {
+    if s.len() % 8 != 0 || !s.is_ascii() {
+        anyhow::bail!("malformed hex word payload (length {})", s.len());
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|chunk| {
+            let text = std::str::from_utf8(chunk)?;
+            u32::from_str_radix(text, 16).map_err(|e| anyhow::anyhow!("bad hex word {text:?}: {e}"))
+        })
+        .collect()
 }
 
 fn config_to_json(c: &RunConfig) -> Value {
@@ -215,6 +410,93 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.states, ck.states);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hex_word_codec_roundtrips() {
+        let words = vec![0u32, 1, 0xdead_beef, u32::MAX, 0x0000_00ff];
+        let hex = words_to_hex(&words);
+        assert_eq!(hex.len(), 8 * words.len());
+        assert_eq!(hex_to_words(&hex).unwrap(), words);
+        assert!(hex_to_words("abc").is_err()); // not a multiple of 8
+        assert!(hex_to_words("zzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn rng_payload_survives_json_roundtrip() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        pt.sweep_all(5);
+        pt.exchange();
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 1, 5, &cfg, &mut pt);
+        assert_eq!(ck.rngs.len(), 3, "A.2 serializes its generator");
+        assert!(!ck.swap_rng.is_empty());
+        assert_eq!(ck.round, 1);
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back.rngs, ck.rngs);
+        assert_eq!(back.swap_rng, ck.swap_rng);
+        assert_eq!(back.round, 1);
+    }
+
+    #[test]
+    fn legacy_checkpoints_without_rng_fields_still_load() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 0, 0, &cfg, &mut pt);
+        // Strip the new fields the way an old writer would have.
+        let v = crate::util::json::Value::parse(&ck.to_json()).unwrap();
+        let mut m = match v {
+            crate::util::json::Value::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("rngs");
+        m.remove("swap_rng");
+        m.remove("round");
+        let legacy = crate::util::json::Value::Obj(m).to_string();
+        let back = Checkpoint::from_json(&legacy).unwrap();
+        assert!(back.rngs.is_empty());
+        assert!(back.swap_rng.is_empty());
+        back.restore(&mut pt).unwrap(); // states-only restore still works
+    }
+
+    #[test]
+    fn batched_capture_restores_states() {
+        let cfg = cfg();
+        let mut pt =
+            coordinator::build_batched_ensemble(&cfg, SweepKind::C1ReplicaBatch).unwrap();
+        pt.sweep_all(5);
+        let ck = Checkpoint::capture_batched(1, 5, &cfg, &mut pt);
+        assert_eq!(ck.kind, "C.1");
+        assert_eq!(ck.states.len(), 3);
+        assert_eq!(ck.rngs.len(), pt.n_batches());
+        let mut fresh =
+            coordinator::build_batched_ensemble(&cfg, SweepKind::C1ReplicaBatch).unwrap();
+        ck.restore_batched(&mut fresh).unwrap();
+        for i in 0..pt.len() {
+            assert_eq!(pt.state_of(i), fresh.state_of(i));
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_rung_kind() {
+        // An RNG-bearing A.2 checkpoint must not resume an A.1 ensemble:
+        // replica counts and state lengths match, and A.1 would even
+        // accept the 625-word payload — only the kind check catches it.
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        pt.sweep_all(3);
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 0, 3, &cfg, &mut pt);
+        let mut other = coordinator::build_ensemble(&cfg, SweepKind::A1Original).unwrap();
+        let err = ck.restore(&mut other);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("A.2") && msg.contains("A.1"), "unhelpful message: {msg}");
+        // Batched likewise: a C.1 checkpoint cannot resume a C.1w8 ensemble.
+        let mut b4 = coordinator::build_batched_ensemble(&cfg, SweepKind::C1ReplicaBatch).unwrap();
+        let bck = Checkpoint::capture_batched(0, 0, &cfg, &mut b4);
+        let mut b8 =
+            coordinator::build_batched_ensemble(&cfg, SweepKind::C1ReplicaBatchW8).unwrap();
+        assert!(bck.restore_batched(&mut b8).is_err());
     }
 
     #[test]

@@ -89,6 +89,24 @@ impl RunConfig {
         if self.layers % 4 != 0 || self.layers < 8 {
             anyhow::bail!("layers must be a multiple of 4 and >= 8 (got {})", self.layers);
         }
+        self.validate_common()
+    }
+
+    /// Rung-aware validation: the replica-batch (C) rungs vectorize
+    /// across the ensemble instead of across layers, so they accept any
+    /// layer count ≥ 2 — including the shallow models the A-ladder
+    /// geometry rule exists for.  Every other rung keeps [`Self::validate`].
+    pub fn validate_for(&self, kind: SweepKind) -> crate::Result<()> {
+        if !kind.is_replica_batch() {
+            return self.validate();
+        }
+        if self.layers < 2 {
+            anyhow::bail!("layers must be >= 2 (got {})", self.layers);
+        }
+        self.validate_common()
+    }
+
+    fn validate_common(&self) -> crate::Result<()> {
         if self.width % 2 != 0 || self.height % 2 != 0 {
             anyhow::bail!("torus dims must be even (got {}x{})", self.width, self.height);
         }
@@ -184,6 +202,20 @@ mod tests {
         assert_eq!(c.n_spins_per_model(), 24_576);
         assert_eq!(c.total_spins(), 2_826_240);
         assert_eq!(c.total_updates(), 2_826_240u64 * 30_000);
+    }
+
+    #[test]
+    fn rung_aware_validation_relaxes_layers_for_c_rungs() {
+        let shallow = RunConfig { layers: 2, ..RunConfig::default() };
+        assert!(shallow.validate().is_err(), "A-ladder geometry still rejects layers=2");
+        shallow.validate_for(SweepKind::C1ReplicaBatch).unwrap();
+        shallow.validate_for(SweepKind::C1ReplicaBatchW8).unwrap();
+        assert!(shallow.validate_for(SweepKind::A4Full).is_err());
+        // the common rules still apply to C-rungs
+        let bad = RunConfig { layers: 2, width: 7, ..RunConfig::default() };
+        assert!(bad.validate_for(SweepKind::C1ReplicaBatch).is_err());
+        let one_layer = RunConfig { layers: 1, ..RunConfig::default() };
+        assert!(one_layer.validate_for(SweepKind::C1ReplicaBatch).is_err());
     }
 
     #[test]

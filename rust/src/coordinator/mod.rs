@@ -1,6 +1,8 @@
-//! The L3 coordinator: builds a tempering ensemble from a [`RunConfig`],
-//! schedules sweep rounds across worker threads, interleaves replica
-//! exchanges, and reports throughput + per-replica statistics.
+//! The L3 coordinator: builds a tempering ensemble from a [`RunConfig`]
+//! (per-replica for the A-rungs, lane-batched for the C-rungs), schedules
+//! sweep rounds over one persistent [`SweepPool`] held across rounds,
+//! interleaves replica exchanges, and reports throughput + per-replica
+//! statistics.
 //!
 //! This is the process-level frame the paper's workload ran in (AQUA@Home
 //! distributed millions of such runs; here one process = one ladder of
@@ -14,10 +16,11 @@ pub mod scheduler;
 pub use checkpoint::Checkpoint;
 pub use config::{RunConfig, RungTiming};
 pub use metrics::{RunReport, Timer};
+pub use scheduler::SweepPool;
 
 use crate::ising::builder::{torus_workload, Workload};
-use crate::sweep::{make_sweeper, SweepKind, Sweeper};
-use crate::tempering::{Ladder, PtEnsemble};
+use crate::sweep::{make_sweeper, ExpMode, SweepKind, Sweeper};
+use crate::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
 use crate::Result;
 
 /// Build the workloads of a run — one per tempering replica, identical
@@ -41,14 +44,67 @@ pub fn build_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<PtEnsemble> {
     Ok(PtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a))
 }
 
-/// Run a full simulation: rounds of (parallel sweep batch, exchange).
-/// Returns the run report with timing and per-replica statistics.
+/// Build a lane-batched C-rung ensemble for the configuration: the same
+/// ladder, workloads and per-replica seed convention as
+/// [`build_ensemble`], grouped into `group_width()`-lane batches.
+pub fn build_batched_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<BatchedPtEnsemble> {
+    build_batched_ensemble_with_exp(cfg, kind, kind.default_exp())
+}
+
+/// [`build_batched_ensemble`] with an explicit exponential mode (tests
+/// use this to align lane trajectories with the scalar rungs).
+pub fn build_batched_ensemble_with_exp(
+    cfg: &RunConfig,
+    kind: SweepKind,
+    exp: ExpMode,
+) -> Result<BatchedPtEnsemble> {
+    cfg.validate_for(kind)?;
+    let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
+    let workloads = build_workloads(cfg);
+    let models: Vec<_> = workloads.iter().map(|wl| wl.model.clone()).collect();
+    let states: Vec<_> = workloads.iter().map(|wl| wl.s0.clone()).collect();
+    let seeds: Vec<u32> = (0..cfg.n_models).map(|i| cfg.seed as u32 + 1000 * i as u32).collect();
+    BatchedPtEnsemble::new(ladder, kind, &models, &states, &seeds, cfg.seed as u32 ^ 0x5a5a, exp)
+}
+
+/// Run a full simulation: rounds of (parallel sweep batch, exchange) over
+/// one persistent [`SweepPool`] held across all rounds.  Replica-batch
+/// (C-rung) kinds run through the lane-batched ensemble.
 pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
+    if kind.is_replica_batch() {
+        return run_batched(cfg, kind);
+    }
     let mut pt = build_ensemble(cfg, kind)?;
+    let pool = scheduler::SweepPool::new(cfg.threads);
     let timer = Timer::start();
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
     for _ in 0..rounds {
-        scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round, cfg.threads);
+        scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round, &pool);
+        pt.exchange();
+    }
+    let wall = timer.seconds();
+    let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
+        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
+    Ok(RunReport::from_stats(
+        kind.label(),
+        cfg.threads,
+        cfg.sweeps,
+        wall,
+        &rows,
+        pt.swap_acceptance(),
+    ))
+}
+
+/// [`run`] over the lane-batched ensemble: one pool job per lane-batch,
+/// exchanges (across batch boundaries included) on the coordinator
+/// thread.
+pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
+    let mut pt = build_batched_ensemble(cfg, kind)?;
+    let pool = scheduler::SweepPool::new(cfg.threads);
+    let timer = Timer::start();
+    let rounds = cfg.sweeps / cfg.sweeps_per_round;
+    for _ in 0..rounds {
+        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round, &pool);
         pt.exchange();
     }
     let wall = timer.seconds();
@@ -69,11 +125,20 @@ pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
 /// bookkeeping is excluded like the paper excludes its multi-threading
 /// machinery from the per-sweep analysis).
 pub fn time_sweeps(cfg: &RunConfig, kind: SweepKind) -> Result<RungTiming> {
+    let pool = scheduler::SweepPool::new(cfg.threads);
+    if kind.is_replica_batch() {
+        let mut pt = build_batched_ensemble(cfg, kind)?;
+        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
+        let timer = Timer::start();
+        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps, &pool);
+        let wall = timer.seconds();
+        return Ok(RungTiming::new(kind, cfg.threads, wall, cfg.sweeps, cfg.total_updates()));
+    }
     let mut pt = build_ensemble(cfg, kind)?;
     // Warm caches and reach a representative flip regime first.
-    scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), cfg.threads);
+    scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
     let timer = Timer::start();
-    scheduler::parallel_sweep(&mut pt, cfg.sweeps, cfg.threads);
+    scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps, &pool);
     let wall = timer.seconds();
     Ok(RungTiming::new(kind, cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
 }
@@ -114,5 +179,49 @@ mod tests {
         assert!(t.seconds > 0.0);
         assert!(t.updates_per_sec > 0.0);
         assert_eq!(t.kind, "A.3");
+    }
+
+    #[test]
+    fn run_routes_c_rungs_through_the_batched_ensemble() {
+        let rep = run(&small(), SweepKind::C1ReplicaBatch).unwrap();
+        assert_eq!(rep.kind, "C.1");
+        assert_eq!(rep.n_models, 4);
+        let cfg = small();
+        assert_eq!(rep.total_attempts, cfg.total_updates());
+        assert!(rep.flip_probs.last().unwrap() > rep.flip_probs.first().unwrap());
+    }
+
+    #[test]
+    fn batched_threads_do_not_change_totals() {
+        let mut cfg = RunConfig { n_models: 10, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() };
+        let r1 = run(&cfg, SweepKind::C1ReplicaBatch).unwrap();
+        cfg.threads = 4;
+        let r4 = run(&cfg, SweepKind::C1ReplicaBatch).unwrap();
+        assert_eq!(r1.total_attempts, r4.total_attempts);
+        assert_eq!(r1.total_flips, r4.total_flips); // deterministic per-lane RNG
+    }
+
+    #[test]
+    fn c_rungs_open_shallow_workloads() {
+        // layers = 2 is exactly what the A-rungs must reject — the C-rungs
+        // vectorize across replicas, so it runs (and batches at W=8).
+        let cfg = RunConfig {
+            layers: 2,
+            n_models: 10,
+            sweeps: 20,
+            sweeps_per_round: 10,
+            ..RunConfig::default()
+        };
+        assert!(run(&cfg, SweepKind::A4Full).is_err());
+        let rep = run(&cfg, SweepKind::C1ReplicaBatchW8).unwrap();
+        assert_eq!(rep.total_attempts, cfg.total_updates());
+        assert!(rep.updates_per_sec > 0.0);
+    }
+
+    #[test]
+    fn time_sweeps_covers_batched_rungs() {
+        let t = time_sweeps(&small(), SweepKind::C1ReplicaBatch).unwrap();
+        assert!(t.seconds > 0.0);
+        assert_eq!(t.kind, "C.1");
     }
 }

@@ -1,61 +1,288 @@
-//! Multi-threaded sweep scheduling.
+//! Multi-threaded sweep scheduling over a persistent worker pool.
 //!
 //! The paper's CPU results multi-thread by distributing Ising models
 //! across cores ("CPU runs were performed on 1, 2, 4, 6, and 8 cores",
-//! §4; threading details in their companion paper [16]).  This scheduler
-//! reproduces that structure: the sweep phase of a tempering round is a
-//! pool of replica jobs claimed by worker threads through an atomic
-//! cursor (dynamic load balancing — cold replicas flip less and run
-//! slightly faster, so static chunking would skew).  Exchanges happen on
-//! the coordinator thread between rounds.
+//! §4; threading details in their companion paper [16]).  Earlier
+//! revisions reproduced that with a `thread::scope` spawned *per round* —
+//! fine for a benchmark, but a serving deployment runs thousands of
+//! rounds, and spawn/join per round is pure overhead.  [`SweepPool`] is
+//! the persistent replacement: long-lived workers fed batch jobs through
+//! a channel, held by the coordinator across rounds, shut down gracefully
+//! on drop.
+//!
+//! The sweep phase of a tempering round is a pool of jobs (one per
+//! replica for the per-replica ensembles, one per lane-batch for the
+//! C-rungs) claimed through an atomic cursor — dynamic load balancing,
+//! because cold replicas flip less and run slightly faster than hot ones.
+//! Exchanges happen on the coordinator thread between rounds.
+//!
+//! Panic safety: if a job panics mid-round the pool neither leaks nor
+//! deadlocks — workers catch the unwind and keep serving, the round call
+//! re-raises the first panic only *after* every job of the batch has
+//! settled (so scoped borrows never escape), and `Drop` joins all
+//! workers poison-safely.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
+use crate::sweep::c1_replica_batch::BatchSweeper;
 use crate::sweep::{SweepStats, Sweeper};
-use crate::tempering::PtEnsemble;
+use crate::tempering::{BatchedPtEnsemble, PtEnsemble};
 
-/// Sweep every replica of `pt` for `n_sweeps` at its own β, using
-/// `n_threads` workers with dynamic (work-stealing) assignment.
-pub fn parallel_sweep(pt: &mut PtEnsemble, n_sweeps: usize, n_threads: usize) {
-    if n_threads <= 1 {
+/// A type-erased job sent to the workers.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of sweep workers.
+///
+/// `new(1)` (or `new(0)`) spawns no threads at all: batches then run
+/// inline on the caller, so a single `SweepPool` value works for every
+/// thread count and the coordinator holds exactly one across all rounds.
+pub struct SweepPool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl SweepPool {
+    /// Spawn `n_threads` long-lived workers (none when `n_threads <= 1`).
+    pub fn new(n_threads: usize) -> Self {
+        let threads = n_threads.max(1);
+        if threads == 1 {
+            return Self { tx: None, workers: Vec::new(), threads: 1 };
+        }
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Tasks run outside the lock guard, so a panicking task
+                    // cannot poison the receiver; recover anyway so one bad
+                    // round can never wedge the whole pool.
+                    let task = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        match guard.recv() {
+                            Ok(t) => t,
+                            Err(_) => break, // channel hung up: shutdown
+                        }
+                    };
+                    let _ = catch_unwind(AssertUnwindSafe(task));
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers, threads }
+    }
+
+    /// Worker count this pool was built for (1 = inline execution).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of scoped tasks to completion.
+    ///
+    /// Blocks until every task has finished (inline when the pool is
+    /// single-threaded).  If any task panicked, the first panic payload is
+    /// re-raised here — but only after all tasks of the batch have
+    /// settled, so borrows captured by the tasks never outlive the call.
+    pub fn run_batch<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let Some(tx) = &self.tx else {
+            for task in tasks {
+                task();
+            }
+            return;
+        };
+        let (done_tx, done_rx) = channel::<Option<Box<dyn std::any::Any + Send>>>();
+        // SAFETY INVARIANT: once the first lifetime-erased task has been
+        // sent, control must not leave this function — not even by
+        // unwinding — until every sent task has reported completion (each
+        // wrapped task sends exactly one message, panic or not).  `drain`
+        // enforces that in its Drop impl, so the invariant survives any
+        // future code between the send loop and the normal drain below.
+        let mut drain = DrainGuard { rx: &done_rx, tx: Some(done_tx), remaining: 0 };
+        for task in tasks {
+            let done = drain.tx.as_ref().expect("sender kept until sends finish").clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(task));
+                let _ = done.send(result.err());
+            });
+            // SAFETY: the DrainGuard above blocks (even on unwind) until
+            // this task has either run to completion or been dropped
+            // unexecuted, so the 'env borrows it captures cannot outlive
+            // this call.
+            let static_task: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(wrapped)
+            };
+            if tx.send(static_task).is_err() {
+                // Workers already gone (shutdown race); the unsent tasks
+                // are dropped here and only sent ones are awaited.
+                break;
+            }
+            drain.remaining += 1;
+        }
+        drain.tx.take();
+        let mut first_panic = None;
+        while drain.remaining > 0 {
+            match drain.rx.recv() {
+                Ok(payload) => {
+                    drain.remaining -= 1;
+                    if let Some(p) = payload {
+                        if first_panic.is_none() {
+                            first_panic = Some(p);
+                        }
+                    }
+                }
+                // All remaining senders dropped: every outstanding task
+                // was dropped unexecuted — nothing left borrowing.
+                Err(_) => drain.remaining = 0,
+            }
+        }
+        drop(drain);
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Completion-latch for [`SweepPool::run_batch`]: waits out every *sent*
+/// task on drop, so the scoped borrows behind the lifetime-erasing
+/// transmute can never be freed while a worker might still run them —
+/// even if the coordinator unwinds mid-batch.
+struct DrainGuard<'a> {
+    rx: &'a Receiver<Option<Box<dyn std::any::Any + Send>>>,
+    /// Held until all sends are done (tasks clone it), then dropped so the
+    /// receiver can observe hang-up of dropped, unexecuted tasks.
+    tx: Option<Sender<Option<Box<dyn std::any::Any + Send>>>>,
+    /// Tasks sent but not yet reported back.
+    remaining: usize,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.tx.take();
+        while self.remaining > 0 {
+            match self.rx.recv() {
+                Ok(_) => self.remaining -= 1,
+                Err(_) => break, // all senders gone: no task holds borrows
+            }
+        }
+    }
+}
+
+impl Drop for SweepPool {
+    fn drop(&mut self) {
+        // Hang up the job channel so idle workers drain out, then join
+        // every worker — including any that caught a task panic.  Joining
+        // never deadlocks: with the sender gone each worker's next recv
+        // errors and its loop breaks.
+        self.tx.take();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+/// Run one closure over every job of a cursor-claimed pool: one worker
+/// task per pool thread, each claiming job indices through an atomic
+/// cursor (dynamic load balancing) and locking the job's Mutex to move
+/// the mutable borrows across threads safely.  The Mutexes are
+/// uncontended — each index is claimed exactly once.
+fn run_cursor_jobs<J, F>(pool: &SweepPool, jobs: Vec<Mutex<J>>, body: F)
+where
+    J: Send,
+    F: Fn(&mut J) + Sync,
+{
+    let cursor = AtomicUsize::new(0);
+    let jobs_ref = &jobs;
+    let cursor_ref = &cursor;
+    let body_ref = &body;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..pool.threads().min(jobs.len()))
+        .map(|_| {
+            Box::new(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs_ref.len() {
+                    break;
+                }
+                let mut guard = match jobs_ref[i].lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                body_ref(&mut guard);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run_batch(tasks);
+}
+
+/// Sweep every replica of `pt` for `n_sweeps` at its own β on the pool's
+/// workers, with dynamic (cursor-claimed) assignment.
+pub fn parallel_sweep_with_pool(pt: &mut PtEnsemble, n_sweeps: usize, pool: &SweepPool) {
+    if pool.threads() <= 1 {
         pt.sweep_all(n_sweeps);
         return;
     }
     let (ladder, replicas, stats) = pt.split_mut();
-    // One lockable job per replica; the Mutex is uncontended (each index
-    // is claimed exactly once via the cursor) and exists to move the
-    // mutable borrows across threads safely.
     let jobs: Vec<Mutex<(f32, &mut Box<dyn Sweeper + Send>, &mut SweepStats)>> = replicas
         .iter_mut()
         .zip(stats.iter_mut())
         .enumerate()
         .map(|(i, (r, s))| Mutex::new((ladder.beta(i), r, s)))
         .collect();
-    let cursor = AtomicUsize::new(0);
+    run_cursor_jobs(pool, jobs, |(beta, replica, stats)| {
+        let s = replica.run(n_sweeps, *beta);
+        stats.merge(&s);
+    });
+}
 
-    std::thread::scope(|scope| {
-        for _ in 0..n_threads.min(jobs.len()) {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let mut guard = jobs[i].lock().expect("job mutex poisoned");
-                let (beta, replica, stats) = &mut *guard;
-                let s = replica.run(n_sweeps, *beta);
-                stats.merge(&s);
-            });
+/// Sweep every lane-batch of a [`BatchedPtEnsemble`] for `n_sweeps` on
+/// the pool's workers (one job per batch — the C-rung unit of work).
+pub fn parallel_sweep_batches(pt: &mut BatchedPtEnsemble, n_sweeps: usize, pool: &SweepPool) {
+    if pool.threads() <= 1 {
+        pt.sweep_all(n_sweeps);
+        return;
+    }
+    let (betas, batches, stats, width) = pt.split_mut();
+    type BatchJob<'a> = (&'a [f32], &'a mut Box<dyn BatchSweeper + Send>, &'a mut [SweepStats]);
+    let jobs: Vec<Mutex<BatchJob<'_>>> = batches
+        .iter_mut()
+        .zip(stats.chunks_mut(width))
+        .enumerate()
+        .map(|(b, (batch, chunk))| Mutex::new((betas[b].as_slice(), batch, chunk)))
+        .collect();
+    run_cursor_jobs(pool, jobs, |(lane_betas, batch, chunk)| {
+        let per_lane = batch.run(n_sweeps, *lane_betas);
+        // The tail batch is padded: only the chunk's active lanes have
+        // stats slots.
+        for (s, lane_stats) in chunk.iter_mut().zip(per_lane.iter()) {
+            s.merge(lane_stats);
         }
     });
+}
+
+/// Sweep every replica of `pt` using a transient pool of `n_threads`
+/// workers — the historical entry point, kept for callers that do not
+/// hold a pool across rounds (tests, one-shot probes).  Prefer
+/// [`parallel_sweep_with_pool`] in round loops.
+pub fn parallel_sweep(pt: &mut PtEnsemble, n_sweeps: usize, n_threads: usize) {
+    if n_threads <= 1 {
+        pt.sweep_all(n_sweeps);
+        return;
+    }
+    let pool = SweepPool::new(n_threads);
+    parallel_sweep_with_pool(pt, n_sweeps, &pool);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ising::builder::torus_workload;
-    use crate::sweep::{make_sweeper, SweepKind};
-    use crate::tempering::Ladder;
+    use crate::sweep::{make_sweeper, ExpMode, SweepKind};
+    use crate::tempering::{BatchedPtEnsemble, Ladder};
 
     fn ensemble(n: usize, kind: SweepKind) -> PtEnsemble {
         let ladder = Ladder::geometric(2.0, 0.2, n);
@@ -66,6 +293,24 @@ mod tests {
             })
             .collect();
         PtEnsemble::new(ladder, replicas, 1234)
+    }
+
+    fn batched(n: usize) -> BatchedPtEnsemble {
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let wl = torus_workload(4, 4, 8, 21, 0.3);
+        let models = vec![wl.model.clone(); n];
+        let states = vec![wl.s0.clone(); n];
+        let seeds: Vec<u32> = (0..n as u32).map(|i| 500 + i).collect();
+        BatchedPtEnsemble::new(
+            ladder,
+            SweepKind::C1ReplicaBatch,
+            &models,
+            &states,
+            &seeds,
+            1234,
+            ExpMode::Fast,
+        )
+        .unwrap()
     }
 
     /// Parallel sweeping must produce the same trajectories as serial
@@ -90,5 +335,81 @@ mod tests {
         super::parallel_sweep(&mut pt, 5, 16); // more threads than jobs
         let total: u64 = pt.reports().iter().map(|r| r.stats.attempts).sum();
         assert_eq!(total, 3 * 5 * (4 * 4 * 8) as u64);
+    }
+
+    /// A persistent pool reused across rounds matches per-round spawning.
+    #[test]
+    fn persistent_pool_matches_transient_rounds() {
+        let mut a = ensemble(5, SweepKind::A2Basic);
+        let mut b = ensemble(5, SweepKind::A2Basic);
+        let pool = SweepPool::new(3);
+        for _ in 0..4 {
+            super::parallel_sweep(&mut a, 5, 3);
+            a.exchange();
+            super::parallel_sweep_with_pool(&mut b, 5, &pool);
+            b.exchange();
+        }
+        let ra = a.reports();
+        let rb = b.reports();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.stats.flips, y.stats.flips);
+            assert_eq!(x.energy, y.energy);
+        }
+    }
+
+    /// Batched sweeping through the pool equals serial batched sweeping.
+    #[test]
+    fn batched_parallel_equals_batched_serial() {
+        let mut serial = batched(6);
+        let mut parallel = batched(6);
+        let pool = SweepPool::new(4);
+        serial.sweep_all(10);
+        super::parallel_sweep_batches(&mut parallel, 10, &pool);
+        let a = serial.reports();
+        let b = parallel.reports();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.stats.flips, rb.stats.flips);
+            assert_eq!(ra.energy, rb.energy);
+        }
+    }
+
+    /// Regression (poison-safe shutdown): a panicking round must re-raise
+    /// on the coordinator thread, leave the pool serving, and never leak
+    /// or deadlock workers on drop.
+    #[test]
+    fn pool_survives_a_panicking_round() {
+        fn tasks_for(hit: &AtomicUsize, poison: bool) -> Vec<Box<dyn FnOnce() + Send + '_>> {
+            (0..6)
+                .map(|i| {
+                    Box::new(move || {
+                        if poison && i == 2 {
+                            panic!("round gone wrong");
+                        }
+                        hit.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect()
+        }
+        let pool = SweepPool::new(3);
+        let hit = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| pool.run_batch(tasks_for(&hit, true))));
+        assert!(result.is_err(), "the task panic must propagate to the caller");
+        assert_eq!(hit.load(Ordering::Relaxed), 5, "non-panicking tasks all ran");
+        // The pool keeps serving after the failed round...
+        pool.run_batch(tasks_for(&hit, false));
+        assert_eq!(hit.load(Ordering::Relaxed), 11);
+        // ...and dropping it joins every worker (the test would hang here
+        // if shutdown deadlocked).
+        drop(pool);
+    }
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = SweepPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut ran = false;
+        let ran_ref = &mut ran;
+        pool.run_batch(vec![Box::new(move || *ran_ref = true) as Box<dyn FnOnce() + Send + '_>]);
+        assert!(ran);
     }
 }

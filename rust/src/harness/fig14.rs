@@ -31,9 +31,10 @@ pub struct Fig14Row {
 /// Run the ladder with the A.4 rung and compute the three curves.
 pub fn compute(cfg: &RunConfig) -> Result<Vec<Fig14Row>> {
     let mut pt = coordinator::build_ensemble(cfg, SweepKind::A4Full)?;
+    let pool = coordinator::SweepPool::new(cfg.threads);
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
     for _ in 0..rounds {
-        coordinator::scheduler::parallel_sweep(&mut pt, cfg.sweeps_per_round, cfg.threads);
+        coordinator::scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round, &pool);
         pt.exchange();
     }
     let ladder = pt.ladder().clone();

@@ -26,6 +26,10 @@ pub fn render() -> String {
     t.row(vec!["A.4", "CPU", "4", y, y, y, y, y]);
     t.row(vec!["A.3w8", "CPU", "8", y, y, y, y, n]);
     t.row(vec!["A.4w8", "CPU", "8", y, y, y, y, y]);
+    // C-rungs: lanes run across the tempering ensemble (one replica per
+    // lane), not across one model's layers.
+    t.row(vec!["C.1", "CPU", "4", y, y, y, y, y]);
+    t.row(vec!["C.1w8", "CPU", "8", y, y, y, y, y]);
     t.row(vec!["B.1", "Accel", "32", y, y, y, n, n]);
     t.row(vec!["B.2", "Accel", "32", y, y, y, y, y]);
     t.render()
@@ -34,11 +38,12 @@ pub fn render() -> String {
 #[cfg(test)]
 mod tests {
     #[test]
-    fn has_all_ten_rungs() {
+    fn has_all_rungs() {
         let s = super::render();
-        for rung in
-            ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "B.1", "B.2"]
-        {
+        for rung in [
+            "A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "C.1", "C.1w8",
+            "B.1", "B.2",
+        ] {
             assert!(s.contains(rung), "missing {rung}");
         }
         assert!(s.contains("Lanes"));

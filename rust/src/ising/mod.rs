@@ -14,7 +14,11 @@
 //! * [`reorder::InterlaceW`]   — the §3.1 W-way layer interlacing under
 //!   which groups of corresponding spins are adjacent in memory (W = 4
 //!   for the SSE rungs, W = 8 for AVX2), plus the W = L interlacing used
-//!   by the accelerator artifacts (B.2).
+//!   by the accelerator artifacts (B.2);
+//! * [`replica_batch::ReplicaBatchModel`] — the lane-per-replica
+//!   interleave of W identically-shaped models (the C-rungs): the same
+//!   coalescing idea applied across the tempering ensemble instead of
+//!   across layers, so even shallow (`layers = 2`) models vectorize.
 
 pub mod builder;
 pub mod graph;
@@ -22,7 +26,9 @@ pub mod layout;
 pub mod lcg;
 pub mod model;
 pub mod reorder;
+pub mod replica_batch;
 
 pub use builder::{diag_torus_workload, torus_workload, Workload};
 pub use graph::BaseGraph;
 pub use model::QmcModel;
+pub use replica_batch::ReplicaBatchModel;

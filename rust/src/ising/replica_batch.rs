@@ -1,0 +1,209 @@
+//! Lane-per-replica memory layout — the CPU analog of the paper's §3.2
+//! memory-coalescing insight, applied across the *ensemble* axis.
+//!
+//! The paper's real workload is 115 copies of the same Ising model at
+//! different temperatures (§4).  The A.3/A.4 rungs vectorize *within* one
+//! model by interlacing its layers, which requires `L % W == 0` with at
+//! least two layers per section; shallow models degrade to scalar
+//! sweeping.  A [`ReplicaBatchModel`] instead interleaves `W`
+//! *identically-shaped* replicas lane-major — value `i` of replica `k`
+//! lives at index `W*i + k` — so one vector load fetches the same spin of
+//! all `W` replicas, exactly like one coalesced accelerator load fetches
+//! the same spin of `W` interlaced layers:
+//!
+//! ```text
+//! replica 0:  s0[0] s0[1] s0[2] …          ┐
+//! replica 1:  s1[0] s1[1] s1[2] …          │  W independent replicas,
+//!   …                                      │  identical topology
+//! replica W-1: s{W-1}[0] …                 ┘
+//!
+//! lane-major: [s0[0] s1[0] … s{W-1}[0]] [s0[1] s1[1] … s{W-1}[1]] …
+//!              └───── one vector ─────┘
+//! ```
+//!
+//! Because the replicas never interact (tempering exchanges swap whole
+//! states on the coordinator thread, between sweep rounds), every lane of
+//! a vector op belongs to a different Markov chain: there are no
+//! intra-group adjacency constraints at all, so *any* layer count ≥ 2
+//! works — including the shallow models the A-rungs must reject.
+//!
+//! The per-spin edge structure is shared across lanes (identical
+//! topology, via [`CsrLayout`]); couplings are interleaved lane-major so
+//! replicas with different `J` realizations batch just as well.  The
+//! lane-major interleave itself is the [`super::reorder::interlace_w`]
+//! transpose with the replica index as the fastest-varying dimension.
+
+use super::layout::CsrLayout;
+use super::model::QmcModel;
+use super::reorder::interlace_w;
+
+/// `W` identically-shaped [`QmcModel`]s interleaved lane-major, sharing
+/// one CSR edge topology (space edges first, the two tau edges last —
+/// the Figure-5/6 ordering, per spin).
+#[derive(Clone)]
+pub struct ReplicaBatchModel {
+    /// Per-lane models (lane `k`'s couplings/fields — used for energy and
+    /// effective-field recomputation).
+    pub models: Vec<QmcModel>,
+    /// Lane count `W`.
+    pub lanes: usize,
+    /// Spins per replica.
+    pub n_spins: usize,
+    /// Shared per-spin edge slice starts (`n_spins + 1` entries).
+    pub offsets: Vec<u32>,
+    /// Shared edge targets (per-replica spin indices); spin `i`'s edges at
+    /// `offsets[i]..offsets[i+1]`, space edges first, two tau edges last.
+    pub edge_target: Vec<u32>,
+    /// Lane-major couplings: edge `e` of lane `k` at `edge_j[W*e + k]`.
+    pub edge_j: Vec<f32>,
+}
+
+impl ReplicaBatchModel {
+    /// Batch `W = models.len()` replicas.  All models must share the same
+    /// shape: spin count, layer count, and the exact CSR edge structure
+    /// (targets and offsets); couplings may differ per lane.
+    pub fn new(models: &[QmcModel]) -> crate::Result<Self> {
+        let w = models.len();
+        anyhow::ensure!(w >= 2, "a replica batch needs at least 2 lanes (got {w})");
+        let lay0 = CsrLayout::build(&models[0]);
+        let n_spins = models[0].n_spins();
+        let n_edges = lay0.edge_target.len();
+        let mut edge_j = vec![0.0f32; w * n_edges];
+        for (k, m) in models.iter().enumerate() {
+            anyhow::ensure!(
+                m.n_spins() == n_spins && m.n_layers == models[0].n_layers,
+                "replica {k}: shape mismatch ({} spins / {} layers vs {} / {})",
+                m.n_spins(),
+                m.n_layers,
+                n_spins,
+                models[0].n_layers
+            );
+            let lay = CsrLayout::build(m);
+            anyhow::ensure!(
+                lay.offsets == lay0.offsets && lay.edge_target == lay0.edge_target,
+                "replica {k}: edge topology differs from replica 0"
+            );
+            for (e, &j) in lay.edge_j.iter().enumerate() {
+                edge_j[w * e + k] = j;
+            }
+        }
+        Ok(Self {
+            models: models.to_vec(),
+            lanes: w,
+            n_spins,
+            offsets: lay0.offsets,
+            edge_target: lay0.edge_target,
+            edge_j,
+        })
+    }
+
+    /// Batch `lanes` copies of one model — the parallel-tempering case
+    /// (identical system, per-lane temperature).
+    pub fn uniform(model: &QmcModel, lanes: usize) -> crate::Result<Self> {
+        Self::new(&vec![model.clone(); lanes])
+    }
+
+    /// Interleave per-lane vectors into the lane-major order.  This is the
+    /// [`interlace_w`] transpose `(k, i) -> W*i + k` applied to the
+    /// replica axis.
+    pub fn interleave(&self, per_lane: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(per_lane.len(), self.lanes, "one vector per lane");
+        let perm = interlace_w(self.n_spins, self.lanes);
+        let mut out = vec![0.0f32; self.lanes * self.n_spins];
+        for (k, lane) in per_lane.iter().enumerate() {
+            assert_eq!(lane.len(), self.n_spins, "lane {k} length");
+            for (i, &v) in lane.iter().enumerate() {
+                out[perm[k * self.n_spins + i] as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Extract lane `k`'s vector from a lane-major array.
+    pub fn extract_lane(&self, batched: &[f32], lane: usize) -> Vec<f32> {
+        assert!(lane < self.lanes);
+        (0..self.n_spins).map(|i| batched[self.lanes * i + lane]).collect()
+    }
+
+    /// Overwrite lane `k`'s values in a lane-major array.
+    pub fn scatter_lane(&self, batched: &mut [f32], lane: usize, values: &[f32]) {
+        assert!(lane < self.lanes);
+        assert_eq!(values.len(), self.n_spins);
+        for (i, &v) in values.iter().enumerate() {
+            batched[self.lanes * i + lane] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+    use crate::ising::graph::BaseGraph;
+
+    #[test]
+    fn uniform_batch_shares_topology_and_couplings() {
+        let wl = torus_workload(4, 4, 8, 3, 0.3);
+        let rb = ReplicaBatchModel::uniform(&wl.model, 4).unwrap();
+        let lay = CsrLayout::build(&wl.model);
+        assert_eq!(rb.offsets, lay.offsets);
+        assert_eq!(rb.edge_target, lay.edge_target);
+        for (e, &j) in lay.edge_j.iter().enumerate() {
+            for k in 0..4 {
+                assert_eq!(rb.edge_j[4 * e + k], j, "edge {e} lane {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_lane_couplings_are_interleaved() {
+        // Same topology, different coupling realizations per lane.
+        let models: Vec<QmcModel> =
+            (0..4).map(|s| torus_workload(4, 4, 8, s, 0.3).model).collect();
+        let rb = ReplicaBatchModel::new(&models).unwrap();
+        for (k, m) in models.iter().enumerate() {
+            let lay = CsrLayout::build(m);
+            for (e, &j) in lay.edge_j.iter().enumerate() {
+                assert_eq!(rb.edge_j[4 * e + k], j, "edge {e} lane {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn shallow_two_layer_models_batch_fine() {
+        let base = BaseGraph::new(2, vec![0.1, -0.2], vec![(0, 1, 0.5)]);
+        let m = QmcModel::new(base, 2, 0.3);
+        let rb = ReplicaBatchModel::uniform(&m, 8).unwrap();
+        assert_eq!(rb.n_spins, 4);
+        assert_eq!(rb.lanes, 8);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let a = torus_workload(4, 4, 8, 1, 0.3).model;
+        let b = torus_workload(4, 4, 16, 1, 0.3).model;
+        assert!(ReplicaBatchModel::new(&[a.clone(), b]).is_err());
+        assert!(ReplicaBatchModel::new(&[a]).is_err()); // < 2 lanes
+    }
+
+    #[test]
+    fn interleave_extract_roundtrip() {
+        let wl = torus_workload(4, 4, 8, 3, 0.3);
+        let rb = ReplicaBatchModel::uniform(&wl.model, 4).unwrap();
+        let lanes: Vec<Vec<f32>> = (0..4)
+            .map(|k| (0..rb.n_spins).map(|i| (k * 1000 + i) as f32).collect())
+            .collect();
+        let batched = rb.interleave(&lanes);
+        // lane-major: value i of lane k at W*i + k
+        assert_eq!(batched[0], 0.0);
+        assert_eq!(batched[1], 1000.0);
+        assert_eq!(batched[4], 1.0);
+        for k in 0..4 {
+            assert_eq!(rb.extract_lane(&batched, k), lanes[k], "lane {k}");
+        }
+        let mut b2 = batched.clone();
+        rb.scatter_lane(&mut b2, 2, &lanes[0]);
+        assert_eq!(rb.extract_lane(&b2, 2), lanes[0]);
+        assert_eq!(rb.extract_lane(&b2, 1), lanes[1]);
+    }
+}

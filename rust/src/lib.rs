@@ -15,6 +15,9 @@
 //!   interlacing of the spin order,
 //! * **A.3w8/A.4w8** the same rungs at 8 lanes — AVX2 when the host has
 //!   it (runtime-detected), portable lanes otherwise,
+//! * **C.1/C.1w8** replica-batched vectorization: one SIMD lane per
+//!   tempering replica (per-lane β, per-lane RNG stream), so even
+//!   shallow models the A-rungs reject sweep at full vector width,
 //! * **B.1/B.2** the accelerator ports (XLA artifacts AOT-compiled from
 //!   JAX+Pallas, executed through PJRT): naive gathered layout vs
 //!   coalesced interlaced layout.

@@ -36,9 +36,12 @@ USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
   run              full parallel-tempering simulation (--json)
-                   --kind a1..a4 | a3-vec-rng-w8 | a4-full-w8 | b1 | b2
+                   --kind a1..a4 | a3-vec-rng-w8 | a4-full-w8
+                          | c1-replica-batch | c1-replica-batch-w8 | b1 | b2
                    (default: widest CPU rung the host + layer count support
-                    — a4-full-w8 with AVX2 and 8|layers, a4-full otherwise)
+                    — a4-full-w8 with AVX2 and 8|layers, a4-full otherwise;
+                    the c1 rungs sweep one replica per SIMD lane and accept
+                    any --layers >= 2, e.g. shallow models)
   table1           implementation matrix (paper Table 1)
   table2           pairwise CPU speedups, 1 core (paper Table 2 + Fig 15)
                    [--opt0-bin target/opt0/repro | --skip-opt0] [--csv PATH]

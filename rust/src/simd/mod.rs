@@ -40,8 +40,26 @@ pub use portable::{F32x4, U32x4};
 /// generic code uses for per-lane fallbacks).
 pub const MAX_LANES: usize = 32;
 
-/// True when the 8-lane AVX2 backend can run on this host.
+/// True when the `VECTORISING_FORCE_PORTABLE` environment variable is set
+/// (to anything but `0` or the empty string): every runtime dispatch point
+/// then picks the const-generic portable lanes instead of the SSE2/AVX2
+/// intrinsic backends.  This is how CI exercises the portable code paths
+/// on x86_64 hosts; results are bit-identical by construction, only slower.
+pub fn force_portable() -> bool {
+    static FORCED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("VECTORISING_FORCE_PORTABLE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// True when the 8-lane AVX2 backend can run on this host (and the
+/// portable override is not in force).
 pub fn avx2_available() -> bool {
+    if force_portable() {
+        return false;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         std::arch::is_x86_feature_detected!("avx2")

@@ -108,4 +108,12 @@ impl Sweeper for A2Basic {
         }
         worst
     }
+
+    fn rng_state(&self) -> Option<Vec<u32>> {
+        Some(self.rng.state_words())
+    }
+
+    fn set_rng_state(&mut self, words: &[u32]) -> bool {
+        self.rng.restore_words(words)
+    }
 }

@@ -163,4 +163,12 @@ impl<U: SimdU32> Sweeper for A4Full<U> {
         }
         worst
     }
+
+    fn rng_state(&self) -> Option<Vec<u32>> {
+        Some(self.rng.state_words())
+    }
+
+    fn set_rng_state(&mut self, words: &[u32]) -> bool {
+        self.rng.restore_words(words)
+    }
 }

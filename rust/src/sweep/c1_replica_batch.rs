@@ -1,0 +1,357 @@
+//! C.1 — replica-batched vectorization: one SIMD lane per tempering
+//! replica.
+//!
+//! Where A.3/A.4 vectorize *within* one model (W interlaced layer
+//! sections), C.1 sweeps `W` independent replicas in lockstep over the
+//! lane-major [`ReplicaBatchModel`] layout: one vector of uniforms from
+//! the interlaced generator decides the same spin of all `W` replicas at
+//! once, each lane at its own inverse temperature β.  Both the decision
+//! *and* the neighbour updates are full-width vector ops — lanes belong
+//! to different Markov chains, so there are no wrap/rotation special
+//! cases at all, and any layer count ≥ 2 works (the shallow models the
+//! A-rungs must reject).
+//!
+//! Lane `k` executes, operation for operation, the A.2 scalar sweep of
+//! replica `k`: the same MT19937 stream (lane-exact interlaced
+//! generator), the same `ΔE = 2s(h_space + h_tau)` arithmetic, the same
+//! tau-last update order.  Under `ExpMode::Exact` every lane is therefore
+//! bit-exact to [`super::a2_basic::A2Basic`] — the differential test
+//! suite asserts this for W ∈ {4, 8} on every backend.
+
+use crate::ising::replica_batch::ReplicaBatchModel;
+use crate::ising::QmcModel;
+use crate::rng::Mt19937Simd;
+use crate::simd::{MAX_LANES, SimdF32, SimdU32};
+
+use super::a3_vecrng::probs_wide;
+use super::{ExpMode, SweepKind, SweepStats};
+
+/// A sweep engine over a lane-batch of `W` tempering replicas — the
+/// batch-level counterpart of [`super::Sweeper`].  `run` takes one β per
+/// lane and returns one [`SweepStats`] per lane; state/energy accessors
+/// are per lane so the coordinator can exchange replica states across
+/// batch boundaries.
+pub trait BatchSweeper {
+    /// Which C-rung this is.
+    fn kind(&self) -> SweepKind;
+    /// Lane count `W`.
+    fn lanes(&self) -> usize;
+    /// Execute `n_sweeps` Metropolis sweeps on every lane, lane `k` at
+    /// inverse temperature `betas[k]`; returns per-lane statistics.
+    fn run(&mut self, n_sweeps: usize, betas: &[f32]) -> Vec<SweepStats>;
+    /// Current total energy of lane `lane`'s replica.
+    fn energy_of(&mut self, lane: usize) -> f64;
+    /// Lane `lane`'s state in the replica's original (layer-major) order.
+    fn state_of(&mut self, lane: usize) -> Vec<f32>;
+    /// Replace lane `lane`'s state (original order) — tempering exchange.
+    fn set_state_of(&mut self, lane: usize, s: &[f32]);
+    /// Worst incremental-field inconsistency across all lanes.
+    fn validate(&mut self) -> f64;
+    /// Serialized interlaced-RNG state for bit-exact checkpoint resume.
+    fn rng_state(&self) -> Vec<u32>;
+    /// Restore a state captured by [`Self::rng_state`]; `false` on a
+    /// malformed payload.
+    fn set_rng_state(&mut self, words: &[u32]) -> bool;
+}
+
+/// The C.1 sweeper, generic over the SIMD backend (`U32x4` → the SSE
+/// quadruplet batch, `avx2::U32x8` → the AVX2 octet batch, portable lanes
+/// → any width anywhere).
+pub struct C1ReplicaBatch<U: SimdU32> {
+    rb: ReplicaBatchModel,
+    /// Lane-major spins (`W * n_spins`).
+    s: Vec<f32>,
+    /// Lane-major effective space fields.
+    hs: Vec<f32>,
+    /// Lane-major effective tau fields.
+    ht: Vec<f32>,
+    rng: Mt19937Simd<U>,
+    exp: ExpMode,
+}
+
+impl<U: SimdU32> C1ReplicaBatch<U> {
+    /// Batch the replicas `(models[k], states[k])`, lane `k` seeded with
+    /// `seeds[k]` — the same seed a scalar A.2 sweeper of that replica
+    /// would use.
+    pub fn new(
+        models: &[QmcModel],
+        states: &[Vec<f32>],
+        seeds: &[u32],
+        exp: ExpMode,
+    ) -> crate::Result<Self> {
+        let w = U::LANES;
+        anyhow::ensure!(
+            models.len() == w && states.len() == w && seeds.len() == w,
+            "need exactly {w} models/states/seeds for a {w}-lane batch (got {}/{}/{})",
+            models.len(),
+            states.len(),
+            seeds.len()
+        );
+        let rb = ReplicaBatchModel::new(models)?;
+        for (k, st) in states.iter().enumerate() {
+            anyhow::ensure!(st.len() == rb.n_spins, "state {k}: {} spins, model has {}", st.len(), rb.n_spins);
+        }
+        let s = rb.interleave(states);
+        let mut hs_lanes = Vec::with_capacity(w);
+        let mut ht_lanes = Vec::with_capacity(w);
+        for (k, st) in states.iter().enumerate() {
+            let (h_space, h_tau) = rb.models[k].effective_fields(st);
+            hs_lanes.push(h_space);
+            ht_lanes.push(h_tau);
+        }
+        let hs = rb.interleave(&hs_lanes);
+        let ht = rb.interleave(&ht_lanes);
+        let rng = Mt19937Simd::new(seeds);
+        Ok(Self { rb, s, hs, ht, rng, exp })
+    }
+
+    #[inline(always)]
+    fn sweep_once(&mut self, neg_betas: &[f32], flips: &mut [u64; MAX_LANES]) {
+        let w = U::LANES;
+        let n = self.rb.n_spins;
+        let neg_beta = <U::F as SimdF32>::load(neg_betas);
+        let two = <U::F as SimdF32>::splat(2.0);
+        for i in 0..n {
+            let u = self.rng.next_vec_f32();
+            debug_assert!(w * i + w <= self.s.len());
+            let sv = unsafe { <U::F as SimdF32>::load_unchecked(&self.s, w * i) };
+            let hsv = unsafe { <U::F as SimdF32>::load_unchecked(&self.hs, w * i) };
+            let htv = unsafe { <U::F as SimdF32>::load_unchecked(&self.ht, w * i) };
+            let de = two * sv * (hsv + htv);
+            let p = probs_wide(self.exp, neg_beta * de);
+            let mask = u.lt(p);
+            let mm = mask.movemask();
+            if mm == 0 {
+                continue;
+            }
+            for (k, f) in flips.iter_mut().enumerate().take(w) {
+                *f += ((mm >> k) & 1) as u64;
+            }
+
+            // A.2's `two_s_mul` per lane, from the pre-flip spins.
+            let two_s = two * sv;
+            let s_new = <U::F as SimdF32>::select_bits(mask, sv.neg(), sv);
+            unsafe { s_new.store_unchecked(&mut self.s, w * i) };
+
+            // Every edge update is one full-width masked vector op: the
+            // delta is selected *before* the subtract so unflipped lanes
+            // subtract an exact +0.0 (bit-preserving).  Space edges first,
+            // the two tau edges last — A.2's Figure-6 order per lane.
+            let (lo, hi) = (self.rb.offsets[i] as usize, self.rb.offsets[i + 1] as usize);
+            for e in lo..hi - 2 {
+                let t = unsafe { *self.rb.edge_target.get_unchecked(e) } as usize;
+                let jv = unsafe { <U::F as SimdF32>::load_unchecked(&self.rb.edge_j, w * e) };
+                let delta =
+                    <U::F as SimdF32>::select_bits(mask, two_s * jv, <U::F as SimdF32>::zero());
+                debug_assert!(w * t + w <= self.hs.len());
+                let cur = unsafe { <U::F as SimdF32>::load_unchecked(&self.hs, w * t) };
+                unsafe { (cur - delta).store_unchecked(&mut self.hs, w * t) };
+            }
+            for e in hi - 2..hi {
+                let t = unsafe { *self.rb.edge_target.get_unchecked(e) } as usize;
+                let jv = unsafe { <U::F as SimdF32>::load_unchecked(&self.rb.edge_j, w * e) };
+                let delta =
+                    <U::F as SimdF32>::select_bits(mask, two_s * jv, <U::F as SimdF32>::zero());
+                debug_assert!(w * t + w <= self.ht.len());
+                let cur = unsafe { <U::F as SimdF32>::load_unchecked(&self.ht, w * t) };
+                unsafe { (cur - delta).store_unchecked(&mut self.ht, w * t) };
+            }
+        }
+    }
+}
+
+impl<U: SimdU32> BatchSweeper for C1ReplicaBatch<U> {
+    fn kind(&self) -> SweepKind {
+        SweepKind::c1_for_width(U::LANES)
+    }
+
+    fn lanes(&self) -> usize {
+        U::LANES
+    }
+
+    fn run(&mut self, n_sweeps: usize, betas: &[f32]) -> Vec<SweepStats> {
+        let w = U::LANES;
+        assert_eq!(betas.len(), w, "one beta per lane");
+        let mut neg_betas = [0.0f32; MAX_LANES];
+        for (k, &b) in betas.iter().enumerate() {
+            neg_betas[k] = -b;
+        }
+        let mut flips = [0u64; MAX_LANES];
+        U::with_features(|| {
+            for _ in 0..n_sweeps {
+                self.sweep_once(&neg_betas[..w], &mut flips);
+            }
+        });
+        // Per-lane A.2 semantics: one spin per decision, so groups ==
+        // attempts and a "group with flip" is just a flip.
+        let per_lane_attempts = (n_sweeps * self.rb.n_spins) as u64;
+        (0..w)
+            .map(|k| SweepStats {
+                attempts: per_lane_attempts,
+                flips: flips[k],
+                groups: per_lane_attempts,
+                groups_with_flip: flips[k],
+            })
+            .collect()
+    }
+
+    fn energy_of(&mut self, lane: usize) -> f64 {
+        let st = self.rb.extract_lane(&self.s, lane);
+        self.rb.models[lane].total_energy(&st)
+    }
+
+    fn state_of(&mut self, lane: usize) -> Vec<f32> {
+        self.rb.extract_lane(&self.s, lane)
+    }
+
+    fn set_state_of(&mut self, lane: usize, s: &[f32]) {
+        assert_eq!(s.len(), self.rb.n_spins);
+        self.rb.scatter_lane(&mut self.s, lane, s);
+        let (h_space, h_tau) = self.rb.models[lane].effective_fields(s);
+        self.rb.scatter_lane(&mut self.hs, lane, &h_space);
+        self.rb.scatter_lane(&mut self.ht, lane, &h_tau);
+    }
+
+    fn validate(&mut self) -> f64 {
+        let mut worst = 0.0f64;
+        for lane in 0..U::LANES {
+            let st = self.rb.extract_lane(&self.s, lane);
+            let (h_space, h_tau) = self.rb.models[lane].effective_fields(&st);
+            for i in 0..self.rb.n_spins {
+                let w = self.rb.lanes;
+                worst = worst
+                    .max((h_space[i] - self.hs[w * i + lane]).abs() as f64)
+                    .max((h_tau[i] - self.ht[w * i + lane]).abs() as f64);
+            }
+        }
+        worst
+    }
+
+    fn rng_state(&self) -> Vec<u32> {
+        self.rng.state_words()
+    }
+
+    fn set_rng_state(&mut self, words: &[u32]) -> bool {
+        self.rng.restore_words(words)
+    }
+}
+
+/// Construct a C-rung batch sweeper with runtime backend dispatch: SSE2
+/// for [`SweepKind::C1ReplicaBatch`] on x86_64 (portable lanes elsewhere
+/// or when forced), AVX2 for [`SweepKind::C1ReplicaBatchW8`] when
+/// detected (portable octet lanes otherwise).
+pub fn make_batch_sweeper(
+    kind: SweepKind,
+    models: &[QmcModel],
+    states: &[Vec<f32>],
+    seeds: &[u32],
+    exp: ExpMode,
+) -> crate::Result<Box<dyn BatchSweeper + Send>> {
+    match kind {
+        SweepKind::C1ReplicaBatch => {
+            if crate::simd::force_portable() {
+                return Ok(Box::new(C1ReplicaBatch::<crate::simd::portable::U32xN<4>>::new(
+                    models, states, seeds, exp,
+                )?));
+            }
+            Ok(Box::new(C1ReplicaBatch::<crate::simd::U32x4>::new(models, states, seeds, exp)?))
+        }
+        SweepKind::C1ReplicaBatchW8 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if crate::simd::avx2_available() {
+                    return Ok(Box::new(C1ReplicaBatch::<crate::simd::avx2::U32x8>::new(
+                        models, states, seeds, exp,
+                    )?));
+                }
+            }
+            Ok(Box::new(C1ReplicaBatch::<crate::simd::portable::U32xN<8>>::new(
+                models, states, seeds, exp,
+            )?))
+        }
+        other => anyhow::bail!(
+            "{} is not a replica-batch rung (expected c1-replica-batch or c1-replica-batch-w8)",
+            other.label()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+
+    fn batch_inputs(w: usize) -> (Vec<QmcModel>, Vec<Vec<f32>>, Vec<u32>) {
+        let wls: Vec<_> = (0..w).map(|k| torus_workload(4, 4, 8, k as u64, 0.3)).collect();
+        let models = wls.iter().map(|wl| wl.model.clone()).collect();
+        let states = wls.iter().map(|wl| wl.s0.clone()).collect();
+        let seeds = (0..w as u32).map(|k| 900 + k).collect();
+        (models, states, seeds)
+    }
+
+    #[test]
+    fn batch_sweeper_runs_and_reports_per_lane() {
+        for kind in [SweepKind::C1ReplicaBatch, SweepKind::C1ReplicaBatchW8] {
+            let w = kind.group_width();
+            let (models, states, seeds) = batch_inputs(w);
+            let mut b = make_batch_sweeper(kind, &models, &states, &seeds, ExpMode::Fast).unwrap();
+            assert_eq!(b.kind(), kind);
+            assert_eq!(b.lanes(), w);
+            let betas = vec![0.8f32; w];
+            let stats = b.run(3, &betas);
+            assert_eq!(stats.len(), w);
+            for (k, s) in stats.iter().enumerate() {
+                assert_eq!(s.attempts, 3 * 4 * 4 * 8, "lane {k}");
+                assert!(s.flips <= s.attempts);
+            }
+            assert!(b.validate() < 1e-3, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn set_state_resets_lane_trajectory() {
+        let (models, states, seeds) = batch_inputs(4);
+        let mut b =
+            make_batch_sweeper(SweepKind::C1ReplicaBatch, &models, &states, &seeds, ExpMode::Fast)
+                .unwrap();
+        let betas = [0.6f32; 4];
+        b.run(4, &betas);
+        let snap = b.state_of(2);
+        let other = b.state_of(1);
+        b.run(4, &betas);
+        b.set_state_of(2, &snap);
+        assert_eq!(b.state_of(2), snap);
+        assert_ne!(b.state_of(1), other); // untouched lanes keep evolving
+        assert!(b.validate() < 1e-4);
+    }
+
+    #[test]
+    fn wrong_arity_and_wrong_kind_error() {
+        let (models, states, seeds) = batch_inputs(4);
+        assert!(make_batch_sweeper(
+            SweepKind::C1ReplicaBatchW8,
+            &models,
+            &states,
+            &seeds,
+            ExpMode::Fast
+        )
+        .is_err());
+        assert!(
+            make_batch_sweeper(SweepKind::A2Basic, &models, &states, &seeds, ExpMode::Fast)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn rng_state_roundtrips_through_batch() {
+        let (models, states, seeds) = batch_inputs(4);
+        let mut b =
+            make_batch_sweeper(SweepKind::C1ReplicaBatch, &models, &states, &seeds, ExpMode::Fast)
+                .unwrap();
+        let betas = [0.7f32; 4];
+        b.run(2, &betas);
+        let words = b.rng_state();
+        assert!(b.set_rng_state(&words));
+        assert!(!b.set_rng_state(&words[..10]));
+    }
+}

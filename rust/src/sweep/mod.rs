@@ -13,8 +13,18 @@
 //! | A.4    | [`a4_full`]     | 4 | + vectorized neighbour updates via 4-way layer interlacing (§3.1) |
 //! | A.3w8  | [`a3_vecrng`]   | 8 | A.3 on the AVX2 octet substrate (portable fallback without AVX2) |
 //! | A.4w8  | [`a4_full`]     | 8 | A.4 on the AVX2 octet substrate (portable fallback without AVX2) |
+//! | C.1    | [`c1_replica_batch`] | 4 | lane-per-replica batch: 4 tempering replicas in lockstep, per-lane β (§3.2's coalescing applied across the ensemble) |
+//! | C.1w8  | [`c1_replica_batch`] | 8 | the same batch on the AVX2 octet substrate |
 //! | B.1    | [`accel`]       | 32 | accelerator, naive gathered layout |
 //! | B.2    | [`accel`]       | 32 | accelerator, coalesced interlaced layout (§3.2) |
+//!
+//! The A-rungs vectorize *within* one model; the C-rungs vectorize
+//! *across* the tempering ensemble (one lane = one replica, so any layer
+//! count ≥ 2 works — including the shallow models the A-rungs reject).
+//! A C-rung sweeps a whole lane-batch and therefore implements the
+//! batch-level [`c1_replica_batch::BatchSweeper`] instead of [`Sweeper`];
+//! build one with [`c1_replica_batch::make_batch_sweeper`] or run a whole
+//! ladder through `tempering::BatchedPtEnsemble`.
 //!
 //! The A.3/A.4 sweepers are generic over the [`crate::simd::SimdU32`]
 //! backend; [`make_sweeper`] does the runtime dispatch (SSE2 at width 4 —
@@ -31,6 +41,7 @@ pub mod a2_basic;
 pub mod a3_vecrng;
 pub mod a4_full;
 pub mod accel;
+pub mod c1_replica_batch;
 pub mod interlaced;
 
 use crate::ising::QmcModel;
@@ -75,6 +86,10 @@ pub enum SweepKind {
     A3VecRngW8,
     /// A.4 at 8 lanes (AVX2 when available, portable otherwise).
     A4FullW8,
+    /// C.1 — lane-per-replica batch of 4 tempering replicas (SSE2).
+    C1ReplicaBatch,
+    /// C.1 at 8 lanes (AVX2 when available, portable otherwise).
+    C1ReplicaBatchW8,
     /// B.1 — accelerator, naive layout.
     B1Accel,
     /// B.2 — accelerator, coalesced layout (§3.2).
@@ -97,11 +112,16 @@ impl std::str::FromStr for SweepKind {
             "a4-full" | "a4" | "a.4" | "a4-full-w4" | "a4-w4" => Ok(SweepKind::A4Full),
             "a3-vec-rng-w8" | "a3-vecrng-w8" | "a3-w8" | "a.3w8" => Ok(SweepKind::A3VecRngW8),
             "a4-full-w8" | "a4-w8" | "a.4w8" => Ok(SweepKind::A4FullW8),
+            "c1-replica-batch" | "c1" | "c.1" | "c1-replica-batch-w4" | "c1-w4" => {
+                Ok(SweepKind::C1ReplicaBatch)
+            }
+            "c1-replica-batch-w8" | "c1-w8" | "c.1w8" => Ok(SweepKind::C1ReplicaBatchW8),
             "b1-accel" | "b1" | "b.1" => Ok(SweepKind::B1Accel),
             "b2-accel" | "b2" | "b.2" => Ok(SweepKind::B2Accel),
             other => anyhow::bail!(
                 "unknown rung {other:?} (expected a1-original, a2-basic, a3-vec-rng, a4-full, \
-                 a3-vec-rng-w8, a4-full-w8, b1-accel, b2-accel)"
+                 a3-vec-rng-w8, a4-full-w8, c1-replica-batch, c1-replica-batch-w8, b1-accel, \
+                 b2-accel)"
             ),
         }
     }
@@ -116,6 +136,8 @@ impl SweepKind {
             SweepKind::A4Full => "A.4",
             SweepKind::A3VecRngW8 => "A.3w8",
             SweepKind::A4FullW8 => "A.4w8",
+            SweepKind::C1ReplicaBatch => "C.1",
+            SweepKind::C1ReplicaBatchW8 => "C.1w8",
             SweepKind::B1Accel => "B.1",
             SweepKind::B2Accel => "B.2",
         }
@@ -135,10 +157,30 @@ impl SweepKind {
     pub fn group_width(self) -> usize {
         match self {
             SweepKind::A1Original | SweepKind::A2Basic => 1,
-            SweepKind::A3VecRng | SweepKind::A4Full => 4,
-            SweepKind::A3VecRngW8 | SweepKind::A4FullW8 => 8,
+            SweepKind::A3VecRng | SweepKind::A4Full | SweepKind::C1ReplicaBatch => 4,
+            SweepKind::A3VecRngW8 | SweepKind::A4FullW8 | SweepKind::C1ReplicaBatchW8 => 8,
             SweepKind::B1Accel | SweepKind::B2Accel => 32,
         }
+    }
+
+    /// Whether this rung sweeps a lane-batch of replicas (one lane = one
+    /// tempering replica) rather than a single model.
+    pub fn is_replica_batch(self) -> bool {
+        matches!(self, SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8)
+    }
+
+    /// The C.1 rung at lane width `w` (4 or 8).
+    pub fn c1_for_width(w: usize) -> SweepKind {
+        if w == 8 {
+            SweepKind::C1ReplicaBatchW8
+        } else {
+            SweepKind::C1ReplicaBatch
+        }
+    }
+
+    /// The widest C.1 rung this host has a hand-written backend for.
+    pub fn preferred_replica_batch() -> SweepKind {
+        SweepKind::c1_for_width(crate::simd::widest_supported_width())
     }
 
     /// The A.3 rung at lane width `w` (4 or 8).
@@ -178,9 +220,11 @@ impl SweepKind {
     }
 
     /// Whether a model with `n_layers` QMC layers can run on this rung:
-    /// the SIMD rungs interlace the layers into `group_width()` sections
-    /// of at least 2 layers each.  (The accelerator rungs have their own
-    /// geometry checks against the compiled artifacts.)
+    /// the SIMD A-rungs interlace the layers into `group_width()` sections
+    /// of at least 2 layers each.  The replica-batch C-rungs vectorize
+    /// across the ensemble instead and accept any layer count ≥ 2.  (The
+    /// accelerator rungs have their own geometry checks against the
+    /// compiled artifacts.)
     pub fn supports_layers(self, n_layers: usize) -> bool {
         match self {
             SweepKind::A3VecRng
@@ -190,6 +234,7 @@ impl SweepKind {
                 let w = self.group_width();
                 n_layers % w == 0 && n_layers / w >= 2
             }
+            SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => n_layers >= 2,
             _ => true,
         }
     }
@@ -281,6 +326,19 @@ pub trait Sweeper {
     /// Maximum absolute inconsistency between the incrementally-maintained
     /// effective fields and a from-scratch recomputation (0 when exact).
     fn validate(&mut self) -> f64;
+
+    /// Serialized RNG state for bit-exact checkpoint resume, or `None`
+    /// when the rung cannot serialize its generator (accelerator
+    /// artifacts keep theirs on device).
+    fn rng_state(&self) -> Option<Vec<u32>> {
+        None
+    }
+
+    /// Restore a state captured by [`Self::rng_state`]; `false` when
+    /// unsupported or the payload does not match this rung's generator.
+    fn set_rng_state(&mut self, _words: &[u32]) -> bool {
+        false
+    }
 }
 
 /// Construct a sweeper with the rung's paper-default exponential mode.
@@ -345,13 +403,30 @@ pub fn try_make_sweeper_with_exp(
         SweepKind::A1Original => Box::new(a1_original::A1Original::new(model, s0, seed, exp)),
         SweepKind::A2Basic => Box::new(a2_basic::A2Basic::new(model, s0, seed, exp)),
         SweepKind::A3VecRng => {
-            Box::new(a3_vecrng::A3VecRng::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            if crate::simd::force_portable() {
+                Box::new(a3_vecrng::A3VecRng::<crate::simd::portable::U32xN<4>>::new(
+                    model, s0, seed, exp,
+                ))
+            } else {
+                Box::new(a3_vecrng::A3VecRng::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            }
         }
         SweepKind::A4Full => {
-            Box::new(a4_full::A4Full::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            if crate::simd::force_portable() {
+                Box::new(a4_full::A4Full::<crate::simd::portable::U32xN<4>>::new(
+                    model, s0, seed, exp,
+                ))
+            } else {
+                Box::new(a4_full::A4Full::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            }
         }
         SweepKind::A3VecRngW8 => make_a3_w8(model, s0, seed, exp),
         SweepKind::A4FullW8 => make_a4_w8(model, s0, seed, exp),
+        SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => anyhow::bail!(
+            "replica-batch rung {} sweeps a lane-batch of replicas, not one model; \
+             use sweep::c1_replica_batch::make_batch_sweeper (or tempering::BatchedPtEnsemble)",
+            kind.label()
+        ),
         SweepKind::B1Accel | SweepKind::B2Accel => anyhow::bail!(
             "accelerator rung {} needs a Runtime and on-disk artifacts; \
              use sweep::accel::AccelSweeper::new",
@@ -448,6 +523,46 @@ mod tests {
         let k16 = SweepKind::preferred_cpu_for_layers(16);
         assert!(k16 == SweepKind::A4Full || k16 == SweepKind::A4FullW8);
         assert!(k16.supports_layers(16));
+    }
+
+    #[test]
+    fn c1_spellings_and_widths() {
+        assert_eq!(SweepKind::from_str("c1-replica-batch").unwrap(), SweepKind::C1ReplicaBatch);
+        assert_eq!(SweepKind::from_str("c1").unwrap(), SweepKind::C1ReplicaBatch);
+        assert_eq!(SweepKind::from_str("C.1").unwrap(), SweepKind::C1ReplicaBatch);
+        assert_eq!(
+            SweepKind::from_str("c1-replica-batch-w8").unwrap(),
+            SweepKind::C1ReplicaBatchW8
+        );
+        assert_eq!(SweepKind::from_str("c1-w8").unwrap(), SweepKind::C1ReplicaBatchW8);
+        assert_eq!(SweepKind::from_str("C.1w8").unwrap(), SweepKind::C1ReplicaBatchW8);
+        assert!(SweepKind::from_str("c1-w16").is_err());
+        assert_eq!(SweepKind::C1ReplicaBatch.group_width(), 4);
+        assert_eq!(SweepKind::C1ReplicaBatchW8.group_width(), 8);
+        assert!(SweepKind::C1ReplicaBatch.is_replica_batch());
+        assert!(!SweepKind::A4FullW8.is_replica_batch());
+        // C-rungs vectorize across replicas: any layer count >= 2 is fine,
+        // including shallow models the A-rungs reject — but never fewer
+        // (a 1-layer model has degenerate self-tau edges).
+        assert!(SweepKind::C1ReplicaBatch.supports_layers(2));
+        assert!(SweepKind::C1ReplicaBatchW8.supports_layers(2));
+        assert!(!SweepKind::C1ReplicaBatch.supports_layers(1));
+        assert!(!SweepKind::C1ReplicaBatchW8.supports_layers(1));
+        assert_eq!(
+            SweepKind::preferred_replica_batch().group_width(),
+            crate::simd::widest_supported_width()
+        );
+    }
+
+    #[test]
+    fn c1_rungs_error_from_single_model_factory() {
+        let wl = torus_workload(4, 4, 8, 1, 0.3);
+        for kind in [SweepKind::C1ReplicaBatch, SweepKind::C1ReplicaBatchW8] {
+            let err = try_make_sweeper(kind, &wl.model, &wl.s0, 1);
+            assert!(err.is_err(), "{kind:?} should not build from one model");
+            let msg = format!("{:#}", err.err().unwrap());
+            assert!(msg.contains("make_batch_sweeper"), "unhelpful message: {msg}");
+        }
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Lane-batched parallel tempering — the ladder grouped into C-rung
+//! batches of `W` replicas, one SIMD lane per replica.
+//!
+//! A [`BatchedPtEnsemble`] covers the same ladder as a [`PtEnsemble`] of
+//! scalar sweepers, but sweeps it `W` replicas at a time: rung `i` is
+//! lane `i % W` of batch `i / W`.  The last batch is padded with clones
+//! of the final replica when the ladder length is not a multiple of `W`
+//! — padded lanes burn a little compute and are excluded from every
+//! report, exchange and checkpoint (lanes never interact during sweeps,
+//! so the padding cannot perturb the active chains).
+//!
+//! Exchanges stay on the coordinator thread between sweep rounds,
+//! exactly as in the per-replica ensemble — both run the shared
+//! [`exchange_pass`], so the two engines are statistically
+//! interchangeable (and, lane for lane, bit-exact under
+//! `ExpMode::Exact`; the differential suite asserts it).
+
+use crate::ising::QmcModel;
+use crate::rng::Mt19937;
+use crate::sweep::c1_replica_batch::{make_batch_sweeper, BatchSweeper};
+use crate::sweep::{ExpMode, SweepKind, SweepStats};
+use crate::Result;
+
+use super::ladder::Ladder;
+use super::pt::{exchange_pass, ReplicaReport, ReplicaSet};
+
+/// A parallel-tempering ensemble swept in lane-batches by a C-rung.
+pub struct BatchedPtEnsemble {
+    ladder: Ladder,
+    kind: SweepKind,
+    width: usize,
+    batches: Vec<Box<dyn BatchSweeper + Send>>,
+    /// Per-batch β vectors (padded lanes repeat the last active β).
+    lane_betas: Vec<Vec<f32>>,
+    /// Per-replica accumulated stats (active replicas only).
+    stats: Vec<SweepStats>,
+    swap_rng: Mt19937,
+    round: u64,
+    swaps_attempted: u64,
+    swaps_accepted: u64,
+}
+
+impl BatchedPtEnsemble {
+    /// Build a batched ensemble: replica `i` runs `models[i]` from
+    /// `states[i]` at `ladder.beta(i)`, with RNG stream `seeds[i]` — the
+    /// same per-replica seed convention as the scalar ensemble, so lane
+    /// `i` reproduces the scalar replica `i` trajectory bit-for-bit under
+    /// `ExpMode::Exact`.
+    pub fn new(
+        ladder: Ladder,
+        kind: SweepKind,
+        models: &[QmcModel],
+        states: &[Vec<f32>],
+        seeds: &[u32],
+        swap_seed: u32,
+        exp: ExpMode,
+    ) -> Result<Self> {
+        anyhow::ensure!(kind.is_replica_batch(), "{} is not a replica-batch rung", kind.label());
+        let n = ladder.len();
+        anyhow::ensure!(
+            models.len() == n && states.len() == n && seeds.len() == n,
+            "need one model/state/seed per ladder rung ({n}), got {}/{}/{}",
+            models.len(),
+            states.len(),
+            seeds.len()
+        );
+        let w = kind.group_width();
+        let n_batches = n.div_ceil(w);
+        let mut batches = Vec::with_capacity(n_batches);
+        let mut lane_betas = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            // Pad the tail batch with clones of the last replica; padded
+            // lanes get distinct seeds so their (discarded) streams never
+            // alias an active one.
+            let lane_idx = |k: usize| (b * w + k).min(n - 1);
+            let lane_models: Vec<QmcModel> =
+                (0..w).map(|k| models[lane_idx(k)].clone()).collect();
+            let lane_states: Vec<Vec<f32>> =
+                (0..w).map(|k| states[lane_idx(k)].clone()).collect();
+            let lane_seeds: Vec<u32> = (0..w)
+                .map(|k| {
+                    let i = b * w + k;
+                    if i < n {
+                        seeds[i]
+                    } else {
+                        // off-ladder stream, disjoint from every active seed
+                        seeds[n - 1] ^ 0x8000_0000 ^ (i as u32)
+                    }
+                })
+                .collect();
+            let betas: Vec<f32> = (0..w).map(|k| ladder.beta(lane_idx(k))).collect();
+            batches.push(make_batch_sweeper(kind, &lane_models, &lane_states, &lane_seeds, exp)?);
+            lane_betas.push(betas);
+        }
+        Ok(Self {
+            ladder,
+            kind,
+            width: w,
+            batches,
+            lane_betas,
+            stats: vec![SweepStats::default(); n],
+            swap_rng: Mt19937::new(swap_seed),
+            round: 0,
+            swaps_attempted: 0,
+            swaps_accepted: 0,
+        })
+    }
+
+    pub fn kind(&self) -> SweepKind {
+        self.kind
+    }
+
+    /// Active replicas (= ladder rungs; padding excluded).
+    pub fn len(&self) -> usize {
+        self.ladder.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ladder.is_empty()
+    }
+
+    /// Lane width `W` of the batches.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of lane-batches (last one possibly padded).
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn ladder(&self) -> &Ladder {
+        &self.ladder
+    }
+
+    /// Sweep phase of one round: every batch for `n_sweeps`, each lane at
+    /// its rung's β.  (The coordinator parallelises this over batches via
+    /// `scheduler::parallel_sweep_batches`.)
+    pub fn sweep_all(&mut self, n_sweeps: usize) {
+        let n = self.ladder.len();
+        let w = self.width;
+        for (b, batch) in self.batches.iter_mut().enumerate() {
+            let per_lane = batch.run(n_sweeps, &self.lane_betas[b]);
+            for (k, s) in per_lane.iter().enumerate() {
+                let i = b * w + k;
+                if i < n {
+                    self.stats[i].merge(s);
+                }
+            }
+        }
+    }
+
+    /// Exchange phase of one round — identical schedule and acceptance
+    /// rule to the per-replica ensemble (the shared [`exchange_pass`]).
+    pub fn exchange(&mut self) {
+        let start = (self.round % 2) as usize;
+        self.round += 1;
+        let mut view = BatchedReplicas {
+            ladder: &self.ladder,
+            batches: self.batches.as_mut_slice(),
+            width: self.width,
+        };
+        let (attempted, accepted) = exchange_pass(&mut view, &mut self.swap_rng, start);
+        self.swaps_attempted += attempted;
+        self.swaps_accepted += accepted;
+    }
+
+    /// One full round: sweep batch + exchange.
+    pub fn round(&mut self, sweeps_per_round: usize) {
+        self.sweep_all(sweeps_per_round);
+        self.exchange();
+    }
+
+    /// Fraction of attempted exchanges accepted.
+    pub fn swap_acceptance(&self) -> f64 {
+        if self.swaps_attempted == 0 {
+            0.0
+        } else {
+            self.swaps_accepted as f64 / self.swaps_attempted as f64
+        }
+    }
+
+    /// State of replica `i` in original order.
+    pub fn state_of(&mut self, i: usize) -> Vec<f32> {
+        assert!(i < self.ladder.len());
+        self.batches[i / self.width].state_of(i % self.width)
+    }
+
+    /// Overwrite replica `i`'s state (checkpoint restore).
+    pub fn set_state_of(&mut self, i: usize, s: &[f32]) {
+        assert!(i < self.ladder.len());
+        self.batches[i / self.width].set_state_of(i % self.width, s);
+    }
+
+    /// Worst incremental-field inconsistency across every batch.
+    pub fn validate(&mut self) -> f64 {
+        self.batches.iter_mut().map(|b| b.validate()).fold(0.0f64, f64::max)
+    }
+
+    /// Per-rung reports (active replicas, ladder-ordered).
+    pub fn reports(&mut self) -> Vec<ReplicaReport> {
+        let w = self.width;
+        (0..self.ladder.len())
+            .map(|i| ReplicaReport {
+                beta: self.ladder.beta(i),
+                stats: self.stats[i],
+                energy: self.batches[i / w].energy_of(i % w),
+            })
+            .collect()
+    }
+
+    // -- checkpoint support (bit-exact resume) ----------------------------
+
+    /// Per-batch serialized RNG states.
+    pub fn rng_states(&self) -> Vec<Vec<u32>> {
+        self.batches.iter().map(|b| b.rng_state()).collect()
+    }
+
+    /// Restore per-batch RNG states; `false` on any mismatch.
+    pub fn set_rng_states(&mut self, states: &[Vec<u32>]) -> bool {
+        states.len() == self.batches.len()
+            && self
+                .batches
+                .iter_mut()
+                .zip(states)
+                .all(|(b, words)| b.set_rng_state(words))
+    }
+
+    /// Serialized exchange-RNG state.
+    pub fn swap_rng_state(&self) -> Vec<u32> {
+        self.swap_rng.state_words()
+    }
+
+    /// Restore the exchange-RNG state; `false` on a malformed payload.
+    pub fn set_swap_rng_state(&mut self, words: &[u32]) -> bool {
+        self.swap_rng.restore_words(words)
+    }
+
+    /// Exchange-round counter (even/odd pairing parity).
+    pub fn round_index(&self) -> u64 {
+        self.round
+    }
+
+    /// Restore the exchange-round counter (checkpoint resume).
+    pub fn set_round_index(&mut self, round: u64) {
+        self.round = round;
+    }
+
+    /// Mutable access for the coordinator's parallel sweep phase:
+    /// `(per-batch betas, batches, per-replica stats, width)`.  Stats are
+    /// ladder-ordered, so batch `b`'s active lanes map onto
+    /// `stats[b*w..]` — `stats.chunks_mut(w)` aligns with `batches`.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn split_mut(
+        &mut self,
+    ) -> (&[Vec<f32>], &mut [Box<dyn BatchSweeper + Send>], &mut [SweepStats], usize) {
+        (&self.lane_betas, &mut self.batches, &mut self.stats, self.width)
+    }
+}
+
+/// [`ReplicaSet`] view mapping global replica indices onto (batch, lane).
+struct BatchedReplicas<'a> {
+    ladder: &'a Ladder,
+    batches: &'a mut [Box<dyn BatchSweeper + Send>],
+    width: usize,
+}
+
+impl ReplicaSet for BatchedReplicas<'_> {
+    fn n_replicas(&self) -> usize {
+        self.ladder.len()
+    }
+
+    fn beta_of(&self, i: usize) -> f32 {
+        self.ladder.beta(i)
+    }
+
+    fn energy_of(&mut self, i: usize) -> f64 {
+        self.batches[i / self.width].energy_of(i % self.width)
+    }
+
+    fn state_of(&mut self, i: usize) -> Vec<f32> {
+        self.batches[i / self.width].state_of(i % self.width)
+    }
+
+    fn set_state_of(&mut self, i: usize, s: &[f32]) {
+        self.batches[i / self.width].set_state_of(i % self.width, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+
+    fn build(n: usize, kind: SweepKind) -> BatchedPtEnsemble {
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let wl = torus_workload(4, 4, 8, 7, 0.3);
+        let models = vec![wl.model.clone(); n];
+        let states = vec![wl.s0.clone(); n];
+        let seeds: Vec<u32> = (0..n as u32).map(|i| 100 + i).collect();
+        BatchedPtEnsemble::new(ladder, kind, &models, &states, &seeds, 999, ExpMode::Fast)
+            .unwrap()
+    }
+
+    #[test]
+    fn padded_tail_batch_keeps_active_counts() {
+        // 6 replicas at W=4 -> 2 batches, 2 padded lanes.
+        let mut pt = build(6, SweepKind::C1ReplicaBatch);
+        assert_eq!(pt.len(), 6);
+        assert_eq!(pt.n_batches(), 2);
+        pt.sweep_all(5);
+        let reports = pt.reports();
+        assert_eq!(reports.len(), 6);
+        for r in &reports {
+            assert_eq!(r.stats.attempts, 5 * 4 * 4 * 8);
+        }
+    }
+
+    #[test]
+    fn hot_replicas_flip_more() {
+        let mut pt = build(6, SweepKind::C1ReplicaBatch);
+        pt.sweep_all(40);
+        let reports = pt.reports();
+        let cold = reports.first().unwrap().stats.flip_prob();
+        let hot = reports.last().unwrap().stats.flip_prob();
+        assert!(hot > cold, "hot {hot} should flip more than cold {cold}");
+    }
+
+    #[test]
+    fn exchange_preserves_state_multiset_across_batch_boundaries() {
+        let mut pt = build(6, SweepKind::C1ReplicaBatch);
+        pt.sweep_all(5);
+        let fingerprint = |pt: &mut BatchedPtEnsemble| -> Vec<Vec<u32>> {
+            (0..pt.len())
+                .map(|i| pt.state_of(i).iter().map(|x| x.to_bits()).collect())
+                .collect()
+        };
+        let mut before = fingerprint(&mut pt);
+        pt.exchange();
+        pt.exchange(); // cover the odd parity (incl. the 3/4 pair)
+        let mut after = fingerprint(&mut pt);
+        before.sort();
+        after.sort();
+        assert_eq!(before, after, "exchange must permute states, not mutate them");
+    }
+
+    #[test]
+    fn rounds_accumulate_stats_and_swap() {
+        let mut pt = build(8, SweepKind::C1ReplicaBatchW8);
+        for _ in 0..10 {
+            pt.round(5);
+        }
+        assert!(pt.swap_acceptance() > 0.0, "dense ladder should accept some swaps");
+        assert!(pt.validate() < 1e-3);
+    }
+
+    #[test]
+    fn rejects_non_batch_kinds_and_bad_arity() {
+        let ladder = Ladder::geometric(2.0, 0.2, 4);
+        let wl = torus_workload(4, 4, 8, 7, 0.3);
+        let models = vec![wl.model.clone(); 4];
+        let states = vec![wl.s0.clone(); 4];
+        let seeds = vec![1u32, 2, 3, 4];
+        assert!(BatchedPtEnsemble::new(
+            ladder.clone(),
+            SweepKind::A4Full,
+            &models,
+            &states,
+            &seeds,
+            1,
+            ExpMode::Fast
+        )
+        .is_err());
+        assert!(BatchedPtEnsemble::new(
+            ladder,
+            SweepKind::C1ReplicaBatch,
+            &models[..3],
+            &states,
+            &seeds,
+            1,
+            ExpMode::Fast
+        )
+        .is_err());
+    }
+}

@@ -6,10 +6,14 @@
 //! temperatures").
 //!
 //! * [`ladder`] — inverse-temperature ladders (geometric by default);
-//! * [`pt`]     — the replica-exchange engine over any [`crate::sweep::Sweeper`].
+//! * [`pt`]     — the replica-exchange engine over any [`crate::sweep::Sweeper`];
+//! * [`batch`]  — the ladder grouped into lane-batches for the C-rungs
+//!   (one SIMD lane per replica), exchanges still on the coordinator.
 
+pub mod batch;
 pub mod ladder;
 pub mod pt;
 
+pub use batch::BatchedPtEnsemble;
 pub use ladder::Ladder;
-pub use pt::{LocalPtEnsemble, PtEnsemble, PtEnsembleImpl, ReplicaReport};
+pub use pt::{exchange_pass, LocalPtEnsemble, PtEnsemble, PtEnsembleImpl, ReplicaReport, ReplicaSet};

@@ -27,6 +27,80 @@ pub struct ReplicaReport {
     pub energy: f64,
 }
 
+/// Uniform per-replica access to a ladder's ensemble — implemented by
+/// both the per-replica [`PtEnsembleImpl`] and the lane-batched
+/// `BatchedPtEnsemble`, so the two share one exchange implementation (and
+/// one set of detailed-balance tests).
+pub trait ReplicaSet {
+    fn n_replicas(&self) -> usize;
+    /// Fixed inverse temperature of rung `i`.
+    fn beta_of(&self, i: usize) -> f32;
+    fn energy_of(&mut self, i: usize) -> f64;
+    fn state_of(&mut self, i: usize) -> Vec<f32>;
+    fn set_state_of(&mut self, i: usize, s: &[f32]);
+}
+
+/// One exchange pass over the adjacent pairs `(i, i+1)` for
+/// `i = start, start+2, …` (`start` ∈ {0, 1} — the alternating even/odd
+/// schedule): accept with the standard Metropolis probability
+/// `min(1, exp(Δβ · ΔE))` and swap *states* on acceptance (each rung's β
+/// is fixed).  Draws exactly one uniform per attempted pair.  Returns
+/// `(attempted, accepted)`.
+pub fn exchange_pass<R: ReplicaSet + ?Sized>(
+    set: &mut R,
+    rng: &mut Mt19937,
+    start: usize,
+) -> (u64, u64) {
+    let n = set.n_replicas();
+    let (mut attempted, mut accepted) = (0u64, 0u64);
+    for i in (start..n.saturating_sub(1)).step_by(2) {
+        let e_i = set.energy_of(i);
+        let e_j = set.energy_of(i + 1);
+        let d_beta = (set.beta_of(i) - set.beta_of(i + 1)) as f64;
+        // Accept with min(1, exp(Δβ · ΔE)); Δβ > 0 (cold minus hot).
+        let log_acc = d_beta * (e_i - e_j);
+        attempted += 1;
+        let u = rng.next_f32() as f64;
+        if log_acc >= 0.0 || u < log_acc.exp() {
+            accepted += 1;
+            let s_i = set.state_of(i);
+            let s_j = set.state_of(i + 1);
+            set.set_state_of(i, &s_j);
+            set.set_state_of(i + 1, &s_i);
+        }
+    }
+    (attempted, accepted)
+}
+
+/// [`ReplicaSet`] view over a ladder plus a slice of boxed sweepers (the
+/// borrow-splitting shim [`PtEnsembleImpl::exchange`] uses).
+struct LadderedSweepers<'a, S: ?Sized> {
+    ladder: &'a Ladder,
+    replicas: &'a mut [Box<S>],
+}
+
+impl<S: Sweeper + ?Sized> ReplicaSet for LadderedSweepers<'_, S> {
+    fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn beta_of(&self, i: usize) -> f32 {
+        self.ladder.beta(i)
+    }
+
+    fn energy_of(&mut self, i: usize) -> f64 {
+        self.replicas[i].energy()
+    }
+
+    fn state_of(&mut self, i: usize) -> Vec<f32> {
+        self.replicas[i].state()
+    }
+
+    fn set_state_of(&mut self, i: usize, s: &[f32]) {
+        self.replicas[i].set_state(s);
+    }
+}
+
 /// A parallel-tempering ensemble over boxed sweepers, generic over the
 /// trait-object flavour: [`PtEnsemble`] (Send sweepers — CPU rungs, can be
 /// swept by the multi-threaded scheduler) or [`LocalPtEnsemble`]
@@ -86,26 +160,16 @@ impl<S: Sweeper + ?Sized> PtEnsembleImpl<S> {
         }
     }
 
-    /// Exchange phase of one round: alternating even/odd adjacent pairs.
+    /// Exchange phase of one round: alternating even/odd adjacent pairs
+    /// (the shared [`exchange_pass`] over this ensemble's replicas).
     pub fn exchange(&mut self) {
         let start = (self.round % 2) as usize;
         self.round += 1;
-        for i in (start..self.replicas.len().saturating_sub(1)).step_by(2) {
-            let e_i = self.replicas[i].energy();
-            let e_j = self.replicas[i + 1].energy();
-            let d_beta = (self.ladder.beta(i) - self.ladder.beta(i + 1)) as f64;
-            // Accept with min(1, exp(Δβ · ΔE)); Δβ > 0 (cold minus hot).
-            let log_acc = d_beta * (e_i - e_j);
-            self.swaps_attempted += 1;
-            let u = self.swap_rng.next_f32() as f64;
-            if log_acc >= 0.0 || u < log_acc.exp() {
-                self.swaps_accepted += 1;
-                let s_i = self.replicas[i].state();
-                let s_j = self.replicas[i + 1].state();
-                self.replicas[i].set_state(&s_j);
-                self.replicas[i + 1].set_state(&s_i);
-            }
-        }
+        let mut view =
+            LadderedSweepers { ladder: &self.ladder, replicas: self.replicas.as_mut_slice() };
+        let (attempted, accepted) = exchange_pass(&mut view, &mut self.swap_rng, start);
+        self.swaps_attempted += attempted;
+        self.swaps_accepted += accepted;
     }
 
     /// One full round: sweep batch + exchange.
@@ -147,6 +211,44 @@ impl<S: Sweeper + ?Sized> PtEnsembleImpl<S> {
     /// Mutable access for the coordinator's parallel sweep phase.
     pub(crate) fn split_mut(&mut self) -> (&Ladder, &mut [Box<S>], &mut [SweepStats]) {
         (&self.ladder, &mut self.replicas, &mut self.stats)
+    }
+
+    // -- checkpoint support (bit-exact resume) ----------------------------
+
+    /// The rung replica `i` runs on (checkpoint compatibility checks).
+    pub fn kind_of(&self, i: usize) -> crate::sweep::SweepKind {
+        self.replicas[i].kind()
+    }
+
+    /// Replica `i`'s serialized RNG state (None when the rung cannot
+    /// serialize its generator).
+    pub fn rng_state_of(&self, i: usize) -> Option<Vec<u32>> {
+        self.replicas[i].rng_state()
+    }
+
+    /// Restore replica `i`'s RNG state; `false` on mismatch/unsupported.
+    pub fn set_rng_state_of(&mut self, i: usize, words: &[u32]) -> bool {
+        self.replicas[i].set_rng_state(words)
+    }
+
+    /// Serialized exchange-RNG state.
+    pub fn swap_rng_state(&self) -> Vec<u32> {
+        self.swap_rng.state_words()
+    }
+
+    /// Restore the exchange-RNG state; `false` on a malformed payload.
+    pub fn set_swap_rng_state(&mut self, words: &[u32]) -> bool {
+        self.swap_rng.restore_words(words)
+    }
+
+    /// Exchange-round counter (decides the even/odd pairing parity).
+    pub fn round_index(&self) -> u64 {
+        self.round
+    }
+
+    /// Restore the exchange-round counter (checkpoint resume).
+    pub fn set_round_index(&mut self, round: u64) {
+        self.round = round;
     }
 }
 

@@ -11,6 +11,7 @@ use std::collections::HashMap;
 
 use vectorising::ising::graph::BaseGraph;
 use vectorising::ising::QmcModel;
+use vectorising::sweep::c1_replica_batch::{make_batch_sweeper, BatchSweeper};
 use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 
 /// Exact Boltzmann distribution over energies of a tiny model (<= 2^16
@@ -96,6 +97,61 @@ fn a4_samples_boltzmann() {
     let got = sampled_energy_distribution(SweepKind::A4Full, ExpMode::Exact, 0.7, 12000);
     let tv = tv_distance(&exact, &got);
     assert!(tv < 0.05, "A.4 TV distance {tv}");
+}
+
+/// Sample the energy distribution of `n_samples` draws from a C-rung
+/// batch in which every lane is an independent chain of the same model at
+/// the same β (the ensemble view: W chains, one histogram).
+fn sampled_energy_distribution_c1(
+    m: &QmcModel,
+    kind: SweepKind,
+    beta: f32,
+    n_samples: usize,
+) -> HashMap<i64, f64> {
+    let w = kind.group_width();
+    let models = vec![m.clone(); w];
+    let states = vec![vec![1.0f32; m.n_spins()]; w];
+    let seeds: Vec<u32> = (0..w as u32).map(|k| 4242 + 31 * k).collect();
+    let betas = vec![beta; w];
+    let mut sw = make_batch_sweeper(kind, &models, &states, &seeds, ExpMode::Exact).unwrap();
+    sw.run(500, &betas); // burn-in
+    let mut acc: HashMap<i64, f64> = HashMap::new();
+    let rounds = n_samples / w;
+    for _ in 0..rounds {
+        sw.run(3, &betas); // decorrelate
+        for k in 0..w {
+            *acc.entry(quantize(sw.energy_of(k))).or_insert(0.0) += 1.0;
+        }
+    }
+    for v in acc.values_mut() {
+        *v /= (rounds * w) as f64;
+    }
+    acc
+}
+
+#[test]
+fn c1_batch_samples_boltzmann() {
+    // Same tolerance as the scalar rungs: the C.1 ensemble (4 lanes of
+    // the tiny model at one β) must reproduce the exact distribution.
+    let exact = exact_energy_distribution(&tiny_model(), 0.7);
+    let got =
+        sampled_energy_distribution_c1(&tiny_model(), SweepKind::C1ReplicaBatch, 0.7, 12000);
+    let tv = tv_distance(&exact, &got);
+    assert!(tv < 0.05, "C.1 TV distance {tv}");
+}
+
+#[test]
+fn c1w8_batch_samples_boltzmann_on_shallow_model() {
+    // layers = 2 — the shallow geometry only the C-rungs can vectorize:
+    // 2 vertices x 2 layers = 4 spins, fully enumerable.  Note the L = 2
+    // degenerate tau structure (up == down neighbour) is exercised here.
+    let base = BaseGraph::new(2, vec![0.25, -0.15], vec![(0, 1, 0.6)]);
+    let shallow = QmcModel::new(base, 2, 0.35);
+    let exact = exact_energy_distribution(&shallow, 0.7);
+    let got =
+        sampled_energy_distribution_c1(&shallow, SweepKind::C1ReplicaBatchW8, 0.7, 12000);
+    let tv = tv_distance(&exact, &got);
+    assert!(tv < 0.05, "C.1w8 shallow TV distance {tv}");
 }
 
 #[test]

@@ -11,7 +11,7 @@ use vectorising::ising::reorder::InterlaceW;
 use vectorising::rng::{Mt19937, Mt19937Simd};
 use vectorising::simd::{portable, SimdU32};
 use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
-use vectorising::tempering::{Ladder, PtEnsemble};
+use vectorising::tempering::{exchange_pass, Ladder, PtEnsemble, ReplicaSet};
 use vectorising::util::json::Value;
 
 fn random_workload(rng: &mut Lcg) -> Workload {
@@ -171,6 +171,140 @@ fn prop_exchange_preserves_state_multiset() {
         let reports = pt.reports();
         for (i, r) in reports.iter().enumerate() {
             assert_eq!(r.beta, betas[i]);
+        }
+    }
+}
+
+/// Property: geometric ladders hit both endpoints, decrease strictly
+/// monotonically, and keep a constant ratio — for random ranges and rung
+/// counts (the invariants `Ladder::geometric`'s doc promises).
+#[test]
+fn prop_ladder_geometric_invariants() {
+    let mut rng = Lcg::new(20_26);
+    for case in 0..60 {
+        let beta_hot = 0.05 + rng.next_unit().abs();
+        let beta_cold = beta_hot + 0.1 + 3.0 * rng.next_unit().abs();
+        let n = 2 + (rng.next_u64() % 120) as usize;
+        let l = Ladder::geometric(beta_cold, beta_hot, n);
+        assert_eq!(l.len(), n, "case {case}");
+        let rel = |a: f32, b: f32| ((a - b) / b).abs();
+        assert!(rel(l.beta(0), beta_cold) < 1e-5, "case {case}: cold endpoint");
+        assert!(rel(l.beta(n - 1), beta_hot) < 1e-4, "case {case}: hot endpoint");
+        let r0 = (l.beta(1) / l.beta(0)) as f64;
+        for i in 1..n {
+            assert!(l.beta(i) < l.beta(i - 1), "case {case}: monotone at {i}");
+            assert!(l.beta(i) > 0.0, "case {case}: positive at {i}");
+            let r = (l.beta(i) / l.beta(i - 1)) as f64;
+            assert!((r - r0).abs() < 1e-4, "case {case}: ratio at {i}: {r} vs {r0}");
+        }
+        // degenerate single-rung ladder: just the cold endpoint
+        let single = Ladder::geometric(beta_cold, beta_hot, 1);
+        assert_eq!(single.len(), 1);
+        assert_eq!(single.beta(0), beta_cold);
+    }
+}
+
+/// A [`ReplicaSet`] with pinned per-rung energies: `energy_of` is a pure
+/// function of the rung index, so the exchange acceptance probability of
+/// a pair is constant across repeated passes and its empirical frequency
+/// can be checked against the Metropolis rule.
+struct PinnedEnergies {
+    betas: Vec<f32>,
+    energies: Vec<f64>,
+    states: Vec<Vec<f32>>,
+}
+
+impl ReplicaSet for PinnedEnergies {
+    fn n_replicas(&self) -> usize {
+        self.betas.len()
+    }
+
+    fn beta_of(&self, i: usize) -> f32 {
+        self.betas[i]
+    }
+
+    fn energy_of(&mut self, i: usize) -> f64 {
+        self.energies[i]
+    }
+
+    fn state_of(&mut self, i: usize) -> Vec<f32> {
+        self.states[i].clone()
+    }
+
+    fn set_state_of(&mut self, i: usize, s: &[f32]) {
+        self.states[i] = s.to_vec();
+    }
+}
+
+/// Property (detailed balance): the empirical exchange acceptance rate of
+/// a pair with energy gap ΔE and inverse-temperature gap Δβ matches
+/// `min(1, exp(Δβ·ΔE))` within binomial error bounds, and the
+/// `log_acc >= 0` branch accepts always.
+#[test]
+fn prop_exchange_acceptance_matches_metropolis_rule() {
+    // (E_cold, E_hot, beta_cold, beta_hot) cases spanning both branches
+    // and acceptance rates from ~8% to 100%.
+    let cases = [
+        (-10.0f64, -5.0f64, 1.0f32, 0.5f32), // log_acc = 0.5*(-5) -> p ~ 0.082
+        (-6.0, -4.0, 1.2, 0.8),              // p = exp(-0.8) ~ 0.449
+        (-5.0, -4.5, 0.9, 0.7),              // p = exp(-0.1) ~ 0.905
+        (-4.0, -9.0, 1.0, 0.4),              // ΔE > 0 -> always accept
+    ];
+    for (case, &(e_cold, e_hot, b_cold, b_hot)) in cases.iter().enumerate() {
+        let p_expect = ((b_cold - b_hot) as f64 * (e_cold - e_hot)).exp().min(1.0);
+        let mut set = PinnedEnergies {
+            betas: vec![b_cold, b_hot],
+            energies: vec![e_cold, e_hot],
+            states: vec![vec![1.0; 4], vec![-1.0; 4]],
+        };
+        let mut rng = Mt19937::new(777 + case as u32);
+        let n_rounds = 4000u64;
+        let (mut attempted, mut accepted) = (0u64, 0u64);
+        for _ in 0..n_rounds {
+            let (a, c) = exchange_pass(&mut set, &mut rng, 0);
+            attempted += a;
+            accepted += c;
+        }
+        assert_eq!(attempted, n_rounds, "case {case}: one pair per even pass");
+        let p_got = accepted as f64 / attempted as f64;
+        if p_expect >= 1.0 {
+            assert_eq!(accepted, attempted, "case {case}: ΔE > 0 must always accept");
+        } else {
+            // 4.5σ binomial bound: false-failure odds < 1e-5 per case.
+            let sigma = (p_expect * (1.0 - p_expect) / n_rounds as f64).sqrt();
+            assert!(
+                (p_got - p_expect).abs() < 4.5 * sigma + 1e-9,
+                "case {case}: empirical {p_got} vs Metropolis {p_expect} (σ {sigma})"
+            );
+        }
+    }
+}
+
+/// Property: an exchange pass from either parity only ever transposes the
+/// designated adjacent pairs — states are permuted, never invented — and
+/// the odd parity leaves pair (0,1) alone.
+#[test]
+fn prop_exchange_pass_only_swaps_adjacent_pairs() {
+    let mut rng = Mt19937::new(31);
+    for n in [2usize, 3, 5, 8] {
+        for start in [0usize, 1] {
+            let mut set = PinnedEnergies {
+                betas: (0..n).map(|i| 2.0 - i as f32 * 0.2).collect(),
+                energies: (0..n).map(|i| -(i as f64)).collect(),
+                states: (0..n).map(|i| vec![i as f32; 3]).collect(),
+            };
+            exchange_pass(&mut set, &mut rng, start);
+            // Each state i must sit at i-1, i or i+1, with the pairing
+            // parity respected.
+            for (slot, st) in set.states.iter().enumerate() {
+                let origin = st[0] as usize;
+                let d = slot.abs_diff(origin);
+                assert!(d <= 1, "n={n} start={start}: state {origin} moved to {slot}");
+                if d == 1 {
+                    let pair_lo = slot.min(origin);
+                    assert_eq!(pair_lo % 2, start % 2, "n={n} start={start}: wrong parity swap");
+                }
+            }
         }
     }
 }

@@ -1,0 +1,154 @@
+//! Differential tests for the C-rungs (tier-1): every SIMD lane of a
+//! replica batch must be *bit-exact* to the same replica swept by the
+//! scalar A.2 rung — flips, energy trajectory and spin state — for
+//! W ∈ {4, 8}, on every backend this host can run, including replicas
+//! with different coupling realizations and different per-lane β.
+//!
+//! This is the correctness contract that makes lane-per-replica batching
+//! a pure performance transformation: under `ExpMode::Exact` the batch
+//! *is* W scalar A.2 sweeps running in lockstep.
+
+use vectorising::ising::builder::torus_workload;
+use vectorising::ising::QmcModel;
+use vectorising::simd::{avx2_available, portable, SimdU32};
+use vectorising::sweep::c1_replica_batch::{BatchSweeper, C1ReplicaBatch};
+use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
+use vectorising::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
+
+/// Per-lane inputs: W identically-shaped models with *different* coupling
+/// realizations (distinct workload seeds), distinct initial states,
+/// distinct RNG seeds and a ladder of distinct βs.
+fn lane_inputs(w: usize, layers: usize) -> (Vec<QmcModel>, Vec<Vec<f32>>, Vec<u32>, Vec<f32>) {
+    let wls: Vec<_> = (0..w).map(|k| torus_workload(4, 4, layers, 10 + k as u64, 0.3)).collect();
+    let models = wls.iter().map(|wl| wl.model.clone()).collect();
+    let states: Vec<Vec<f32>> = wls.iter().map(|wl| wl.s0.clone()).collect();
+    let seeds: Vec<u32> = (0..w as u32).map(|k| 4000 + 17 * k).collect();
+    let ladder = Ladder::geometric(2.5, 0.4, w);
+    let betas = ladder.betas().to_vec();
+    (models, states, seeds, betas)
+}
+
+/// The differential itself, generic over the backend: run the batch and
+/// the W scalar A.2 references side by side, sweep by sweep, under
+/// `ExpMode::Exact`, and require bit-identical lanes throughout.
+fn assert_lanes_match_a2<U: SimdU32>(layers: usize) {
+    let w = U::LANES;
+    let (models, states, seeds, betas) = lane_inputs(w, layers);
+    let mut batch = C1ReplicaBatch::<U>::new(&models, &states, &seeds, ExpMode::Exact).unwrap();
+    let mut scalars: Vec<Box<dyn Sweeper + Send>> = (0..w)
+        .map(|k| {
+            make_sweeper_with_exp(SweepKind::A2Basic, &models[k], &states[k], seeds[k], ExpMode::Exact)
+                .unwrap()
+        })
+        .collect();
+    for round in 0..8 {
+        let per_lane = batch.run(1, &betas);
+        for k in 0..w {
+            let s = scalars[k].run(1, betas[k]);
+            assert_eq!(per_lane[k].flips, s.flips, "W={w} round {round} lane {k}: flips");
+            assert_eq!(per_lane[k].attempts, s.attempts, "W={w} round {round} lane {k}: attempts");
+            let batch_state = batch.state_of(k);
+            let scalar_state = scalars[k].state();
+            assert_eq!(batch_state, scalar_state, "W={w} round {round} lane {k}: state");
+            // Energies are f64 reductions of identical f32 states on the
+            // same model — identical bits.
+            assert_eq!(
+                batch.energy_of(k).to_bits(),
+                scalars[k].energy().to_bits(),
+                "W={w} round {round} lane {k}: energy"
+            );
+        }
+    }
+    assert!(batch.validate() < 1e-4);
+}
+
+#[test]
+fn w4_portable_lanes_are_bit_exact_to_a2() {
+    assert_lanes_match_a2::<portable::U32xN<4>>(8);
+}
+
+#[test]
+fn w8_portable_lanes_are_bit_exact_to_a2() {
+    assert_lanes_match_a2::<portable::U32xN<8>>(8);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn w4_sse_lanes_are_bit_exact_to_a2() {
+    assert_lanes_match_a2::<vectorising::simd::U32x4>(8);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn w8_avx2_lanes_are_bit_exact_to_a2() {
+    if !avx2_available() {
+        eprintln!("skipping avx2 replica-batch differential: host has no AVX2");
+        return;
+    }
+    assert_lanes_match_a2::<vectorising::simd::avx2::U32x8>(8);
+}
+
+#[test]
+fn shallow_two_layer_lanes_are_bit_exact_to_a2() {
+    // layers = 2 — the geometry the A.3/A.4 interlacing must reject; the
+    // replica axis vectorizes it anyway, and each lane still matches A.2
+    // (whose scalar sweep has no layer constraint).
+    assert_lanes_match_a2::<portable::U32xN<4>>(2);
+    assert_lanes_match_a2::<portable::U32xN<8>>(2);
+}
+
+#[test]
+fn batched_ensemble_matches_scalar_ensemble_through_exchanges() {
+    // Full-system differential: the same 6-rung ladder run (a) as a
+    // per-replica A.2 ensemble and (b) as a C.1 lane-batched ensemble
+    // (two batches, padded tail), with identical seed conventions and
+    // ExpMode::Exact.  Sweeps are lane-exact and exchange decisions
+    // consume the same swap-RNG stream on identical f64 energies, so the
+    // two engines must agree bit-for-bit at every round.
+    let n = 6;
+    let wl = torus_workload(4, 4, 8, 7, 0.3);
+    let ladder = Ladder::geometric(2.0, 0.2, n);
+    let seeds: Vec<u32> = (0..n as u32).map(|i| 100 + i).collect();
+
+    let scalars: Vec<Box<dyn Sweeper + Send>> = (0..n)
+        .map(|i| {
+            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, seeds[i], ExpMode::Exact)
+                .unwrap()
+        })
+        .collect();
+    let mut scalar_pt = PtEnsemble::new(ladder.clone(), scalars, 999);
+
+    let models = vec![wl.model.clone(); n];
+    let states = vec![wl.s0.clone(); n];
+    let mut batched_pt = BatchedPtEnsemble::new(
+        ladder,
+        SweepKind::C1ReplicaBatch,
+        &models,
+        &states,
+        &seeds,
+        999,
+        ExpMode::Exact,
+    )
+    .unwrap();
+
+    for round in 0..6 {
+        scalar_pt.round(5);
+        batched_pt.round(5);
+        let a = scalar_pt.reports();
+        let b = batched_pt.reports();
+        for i in 0..n {
+            assert_eq!(a[i].stats.flips, b[i].stats.flips, "round {round} replica {i}: flips");
+            assert_eq!(
+                a[i].energy.to_bits(),
+                b[i].energy.to_bits(),
+                "round {round} replica {i}: energy"
+            );
+            assert_eq!(
+                scalar_pt.state_of(i),
+                batched_pt.state_of(i),
+                "round {round} replica {i}: state"
+            );
+        }
+    }
+    assert_eq!(scalar_pt.swap_acceptance(), batched_pt.swap_acceptance());
+}
