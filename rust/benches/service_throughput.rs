@@ -1,0 +1,121 @@
+//! Service throughput: jobs/sec and lane-fill ratio of the batching
+//! scheduler + executor for uniform vs. mixed-shape job streams at
+//! W ∈ {4, 8}.
+//!
+//! A uniform stream packs full lane-batches (fill 1.0); a mixed stream
+//! spreads the same job count over three shapes, so drain-time flushes
+//! pad some batches — the jobs/sec gap between the two rows is the price
+//! of shape diversity at a given vector width.  Run with
+//! `cargo bench --bench service_throughput`.
+
+mod support;
+
+use std::time::{Duration, Instant};
+
+use vectorising::coordinator::SweepPool;
+use vectorising::service::batcher::{Batcher, Dispatch};
+use vectorising::service::executor::Executor;
+use vectorising::service::job::JobSpec;
+use vectorising::sweep::ExpMode;
+
+const N_JOBS: usize = 64;
+const SWEEPS: usize = 150;
+
+fn spec(id: usize, shape: (usize, usize, usize)) -> JobSpec {
+    JobSpec {
+        id: format!("j{id}"),
+        width: shape.0,
+        height: shape.1,
+        layers: shape.2,
+        model_seed: 1 + id as u64,
+        jtau: 0.3,
+        sweeps: SWEEPS,
+        beta: 0.8,
+        seed: 100 + id as u32,
+        trace_every: 0,
+        want_state: false,
+    }
+}
+
+fn jobs(mixed: bool) -> Vec<JobSpec> {
+    let shapes: &[(usize, usize, usize)] =
+        if mixed { &[(4, 4, 8), (6, 4, 8), (4, 4, 2)] } else { &[(4, 4, 8)] };
+    (0..N_JOBS).map(|i| spec(i, shapes[i % shapes.len()])).collect()
+}
+
+/// Push the whole stream, pack it, execute every dispatch on the pool;
+/// returns (seconds, lane-fill ratio over batch dispatches).
+fn run_stream(lanes: usize, stream: &[JobSpec], pool: &SweepPool) -> (f64, f64) {
+    let exec = Executor::new(lanes, ExpMode::Fast).unwrap();
+    let mut batcher = Batcher::new(lanes, Duration::from_millis(1));
+    let t0 = Instant::now();
+    let now = Instant::now();
+    for spec in stream {
+        batcher.push(spec.clone(), None, now);
+    }
+    let mut dispatches = batcher.poll(now);
+    dispatches.extend(batcher.drain());
+    let (mut occupied, mut padded) = (0usize, 0usize);
+    for d in &dispatches {
+        if d.is_batch() {
+            occupied += d.occupancy();
+            padded += lanes - d.occupancy();
+        }
+    }
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dispatches
+        .into_iter()
+        .map(|d| {
+            Box::new(move || {
+                for (_job, outcome) in exec.run_dispatch(d) {
+                    outcome.expect("bench jobs are valid");
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run_batch(tasks);
+    let fill = if occupied + padded == 0 {
+        1.0
+    } else {
+        occupied as f64 / (occupied + padded) as f64
+    };
+    (t0.elapsed().as_secs_f64(), fill)
+}
+
+fn bench_row(name: &str, lanes: usize, mixed: bool, threads: usize) {
+    let stream = jobs(mixed);
+    let pool = SweepPool::new(threads);
+    // warm-up
+    let _ = run_stream(lanes, &stream, &pool);
+    let reps = 3;
+    let mut secs = Vec::with_capacity(reps);
+    let mut fill = 1.0;
+    for _ in 0..reps {
+        let (s, f) = run_stream(lanes, &stream, &pool);
+        secs.push(s);
+        fill = f;
+    }
+    let mean = support::mean(&secs);
+    println!(
+        "{name:44} {mean:8.4} s ± {:6.4}   {:10.1} jobs/s   lane-fill {fill:.3}",
+        support::stddev(&secs),
+        N_JOBS as f64 / mean,
+    );
+}
+
+fn main() {
+    println!(
+        "service throughput: {N_JOBS} jobs x {SWEEPS} sweeps per stream \
+         (uniform = one shape, mixed = three shapes)"
+    );
+    for threads in [1usize, 4] {
+        for lanes in [4usize, 8] {
+            bench_row(
+                &format!("uniform  W={lanes} threads={threads}"),
+                lanes,
+                false,
+                threads,
+            );
+            bench_row(&format!("mixed    W={lanes} threads={threads}"), lanes, true, threads);
+        }
+    }
+}

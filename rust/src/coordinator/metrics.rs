@@ -42,6 +42,12 @@ pub struct RunReport {
     pub wait_probs: Vec<f64>,
     /// Per-replica final energies.
     pub energies: Vec<f64>,
+    /// Fraction of pool worker capacity spent inside sweep tasks
+    /// (0 when the run did not go through a [`super::SweepPool`]) —
+    /// the same utilization figure the sampling service dashboards read.
+    pub pool_busy_fraction: f64,
+    /// Sweep tasks queued through the pool during the run.
+    pub pool_jobs_queued: u64,
 }
 
 impl RunReport {
@@ -68,7 +74,17 @@ impl RunReport {
             flip_probs: per_replica.iter().map(|r| r.1.flip_prob()).collect(),
             wait_probs: per_replica.iter().map(|r| r.1.wait_prob()).collect(),
             energies: per_replica.iter().map(|r| r.2).collect(),
+            pool_busy_fraction: 0.0,
+            pool_jobs_queued: 0,
         }
+    }
+
+    /// Attach pool utilization (busy-worker fraction, jobs queued) so the
+    /// harness and the service dashboards share one report schema.
+    pub fn with_pool(mut self, jobs_queued: u64, busy_fraction: f64) -> Self {
+        self.pool_jobs_queued = jobs_queued;
+        self.pool_busy_fraction = busy_fraction;
+        self
     }
 
     pub fn to_json(&self) -> String {
@@ -85,6 +101,8 @@ impl RunReport {
             ("flip_probs", json::arr_f64(&self.flip_probs)),
             ("wait_probs", json::arr_f64(&self.wait_probs)),
             ("energies", json::arr_f64(&self.energies)),
+            ("pool_busy_fraction", json::num(self.pool_busy_fraction)),
+            ("pool_jobs_queued", json::num(self.pool_jobs_queued as f64)),
         ])
         .to_string()
     }
@@ -107,6 +125,17 @@ impl RunReport {
             flip_probs: f64s("flip_probs")?,
             wait_probs: f64s("wait_probs")?,
             energies: f64s("energies")?,
+            // Absent in payloads from pre-service builds: default to 0.
+            pool_busy_fraction: v
+                .opt("pool_busy_fraction")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(0.0),
+            pool_jobs_queued: v
+                .opt("pool_jobs_queued")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(0.0) as u64,
         })
     }
 }
@@ -128,5 +157,31 @@ mod tests {
         let back = RunReport::from_json(&rep.to_json()).unwrap();
         assert_eq!(back.n_models, 2);
         assert_eq!(back.flip_probs, rep.flip_probs);
+    }
+
+    #[test]
+    fn pool_fields_roundtrip_and_default() {
+        let mk = |flips, attempts| SweepStats {
+            attempts,
+            flips,
+            groups: attempts,
+            groups_with_flip: flips,
+        };
+        let rows = vec![(1.0f32, mk(10, 100), -5.0)];
+        let rep = RunReport::from_stats("A.2", 2, 50, 2.0, &rows, 0.25).with_pool(12, 0.75);
+        assert_eq!(rep.pool_jobs_queued, 12);
+        assert!((rep.pool_busy_fraction - 0.75).abs() < 1e-12);
+        let back = RunReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.pool_jobs_queued, 12);
+        assert!((back.pool_busy_fraction - 0.75).abs() < 1e-12);
+
+        // Payloads from pre-service builds lack the pool keys: default 0.
+        let legacy = r#"{"kind":"A.2","threads":1,"n_models":1,"sweeps":5,
+            "wall_seconds":1.0,"updates_per_sec":10.0,"total_flips":1,
+            "total_attempts":10,"swap_acceptance":0.0,
+            "flip_probs":[0.1],"wait_probs":[0.1],"energies":[-1.0]}"#;
+        let old = RunReport::from_json(legacy).unwrap();
+        assert_eq!(old.pool_jobs_queued, 0);
+        assert_eq!(old.pool_busy_fraction, 0.0);
     }
 }

@@ -16,7 +16,7 @@ pub mod scheduler;
 pub use checkpoint::Checkpoint;
 pub use config::{RunConfig, RungTiming};
 pub use metrics::{RunReport, Timer};
-pub use scheduler::SweepPool;
+pub use scheduler::{PoolStats, SweepPool};
 
 use crate::ising::builder::{torus_workload, Workload};
 use crate::sweep::{make_sweeper, ExpMode, SweepKind, Sweeper};
@@ -83,6 +83,7 @@ pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
         pt.exchange();
     }
     let wall = timer.seconds();
+    let pstats = pool.stats();
     let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
         pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
     Ok(RunReport::from_stats(
@@ -92,7 +93,8 @@ pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
         wall,
         &rows,
         pt.swap_acceptance(),
-    ))
+    )
+    .with_pool(pstats.jobs, pstats.busy_fraction(cfg.threads, wall)))
 }
 
 /// [`run`] over the lane-batched ensemble: one pool job per lane-batch,
@@ -108,6 +110,7 @@ pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
         pt.exchange();
     }
     let wall = timer.seconds();
+    let pstats = pool.stats();
     let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
         pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
     Ok(RunReport::from_stats(
@@ -117,7 +120,8 @@ pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
         wall,
         &rows,
         pt.swap_acceptance(),
-    ))
+    )
+    .with_pool(pstats.jobs, pstats.busy_fraction(cfg.threads, wall)))
 }
 
 /// Timing-only run used by the benchmark harness (no exchanges — the
@@ -161,6 +165,9 @@ mod tests {
         assert!(rep.updates_per_sec > 0.0);
         // Ladder ordering: hottest replica flips most.
         assert!(rep.flip_probs.last().unwrap() > rep.flip_probs.first().unwrap());
+        // Pool utilization rides along (2 rounds = 2 inline pool jobs).
+        assert_eq!(rep.pool_jobs_queued, 2);
+        assert!(rep.pool_busy_fraction > 0.0 && rep.pool_busy_fraction <= 1.0);
     }
 
     #[test]
@@ -199,6 +206,10 @@ mod tests {
         let r4 = run(&cfg, SweepKind::C1ReplicaBatch).unwrap();
         assert_eq!(r1.total_attempts, r4.total_attempts);
         assert_eq!(r1.total_flips, r4.total_flips); // deterministic per-lane RNG
+        // 10 replicas at W=4 -> 3 lane-batches, so min(4 threads, 3 jobs)
+        // = 3 worker tasks per round, 2 rounds.
+        assert_eq!(r4.pool_jobs_queued, 6);
+        assert!(r4.pool_busy_fraction > 0.0);
     }
 
     #[test]

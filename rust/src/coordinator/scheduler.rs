@@ -23,10 +23,11 @@
 //! workers poison-safely.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::sweep::c1_replica_batch::BatchSweeper;
 use crate::sweep::{SweepStats, Sweeper};
@@ -34,6 +35,44 @@ use crate::tempering::{BatchedPtEnsemble, PtEnsemble};
 
 /// A type-erased job sent to the workers.
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Cumulative execution counters of a pool — the utilization data the
+/// sampling service and [`super::RunReport`] expose (busy-worker
+/// fraction, jobs queued through the pool).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Tasks executed to completion (inline or on a worker).
+    pub jobs: u64,
+    /// Total seconds spent inside tasks, summed across workers.
+    pub busy_seconds: f64,
+}
+
+impl PoolStats {
+    /// Fraction of worker capacity spent inside tasks over a run of
+    /// `wall_seconds` on `threads` workers, clamped to [0, 1].
+    pub fn busy_fraction(&self, threads: usize, wall_seconds: f64) -> f64 {
+        if threads == 0 || wall_seconds <= 0.0 {
+            0.0
+        } else {
+            (self.busy_seconds / (threads as f64 * wall_seconds)).min(1.0)
+        }
+    }
+}
+
+/// Atomic backing of [`PoolStats`], shared with the (lifetime-erased)
+/// worker tasks through an `Arc` so no scoped borrow is needed.
+#[derive(Default)]
+struct PoolCounters {
+    jobs: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+impl PoolCounters {
+    fn record(&self, elapsed: std::time::Duration) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.busy_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
 
 /// A persistent pool of sweep workers.
 ///
@@ -44,14 +83,16 @@ pub struct SweepPool {
     tx: Option<Sender<Task>>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    counters: Arc<PoolCounters>,
 }
 
 impl SweepPool {
     /// Spawn `n_threads` long-lived workers (none when `n_threads <= 1`).
     pub fn new(n_threads: usize) -> Self {
         let threads = n_threads.max(1);
+        let counters = Arc::new(PoolCounters::default());
         if threads == 1 {
-            return Self { tx: None, workers: Vec::new(), threads: 1 };
+            return Self { tx: None, workers: Vec::new(), threads: 1, counters };
         }
         let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
@@ -76,12 +117,29 @@ impl SweepPool {
                 })
             })
             .collect();
-        Self { tx: Some(tx), workers, threads }
+        Self { tx: Some(tx), workers, threads, counters }
     }
 
     /// Worker count this pool was built for (1 = inline execution).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Cumulative execution counters since construction.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            jobs: self.counters.jobs.load(Ordering::Relaxed),
+            busy_seconds: self.counters.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Run (and account) one closure inline — the single-threaded
+    /// counterpart of a pooled task, so utilization metrics stay
+    /// meaningful when the sweep phase bypasses the workers.
+    pub fn run_inline<F: FnOnce()>(&self, f: F) {
+        let t0 = Instant::now();
+        f();
+        self.counters.record(t0.elapsed());
     }
 
     /// Run a batch of scoped tasks to completion.
@@ -93,7 +151,9 @@ impl SweepPool {
     pub fn run_batch<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
         let Some(tx) = &self.tx else {
             for task in tasks {
+                let t0 = Instant::now();
                 task();
+                self.counters.record(t0.elapsed());
             }
             return;
         };
@@ -107,8 +167,11 @@ impl SweepPool {
         let mut drain = DrainGuard { rx: &done_rx, tx: Some(done_tx), remaining: 0 };
         for task in tasks {
             let done = drain.tx.as_ref().expect("sender kept until sends finish").clone();
+            let counters = Arc::clone(&self.counters);
             let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let t0 = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(task));
+                counters.record(t0.elapsed());
                 let _ = done.send(result.err());
             });
             // SAFETY: the DrainGuard above blocks (even on unwind) until
@@ -223,7 +286,7 @@ where
 /// workers, with dynamic (cursor-claimed) assignment.
 pub fn parallel_sweep_with_pool(pt: &mut PtEnsemble, n_sweeps: usize, pool: &SweepPool) {
     if pool.threads() <= 1 {
-        pt.sweep_all(n_sweeps);
+        pool.run_inline(|| pt.sweep_all(n_sweeps));
         return;
     }
     let (ladder, replicas, stats) = pt.split_mut();
@@ -243,7 +306,7 @@ pub fn parallel_sweep_with_pool(pt: &mut PtEnsemble, n_sweeps: usize, pool: &Swe
 /// the pool's workers (one job per batch — the C-rung unit of work).
 pub fn parallel_sweep_batches(pt: &mut BatchedPtEnsemble, n_sweeps: usize, pool: &SweepPool) {
     if pool.threads() <= 1 {
-        pt.sweep_all(n_sweeps);
+        pool.run_inline(|| pt.sweep_all(n_sweeps));
         return;
     }
     let (betas, batches, stats, width) = pt.split_mut();
@@ -401,6 +464,30 @@ mod tests {
         // ...and dropping it joins every worker (the test would hang here
         // if shutdown deadlocked).
         drop(pool);
+    }
+
+    /// Utilization counters: every executed task is counted, with a
+    /// non-zero busy time, in both the pooled and the inline regimes.
+    #[test]
+    fn pool_stats_count_jobs_and_busy_time() {
+        let pool = SweepPool::new(3);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|_| {
+                Box::new(|| std::thread::sleep(std::time::Duration::from_millis(2)))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_batch(tasks);
+        let s = pool.stats();
+        assert_eq!(s.jobs, 5);
+        assert!(s.busy_seconds > 0.0);
+        assert!(s.busy_fraction(3, 1.0) > 0.0);
+        assert!(s.busy_fraction(3, 1e-12) <= 1.0, "fraction is clamped");
+
+        let inline_pool = SweepPool::new(1);
+        inline_pool.run_inline(|| {});
+        inline_pool.run_batch(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(inline_pool.stats().jobs, 2);
     }
 
     #[test]

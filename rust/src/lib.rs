@@ -30,9 +30,12 @@
 //!
 //! On top of the sweep ladder sit the systems the paper's workload needs:
 //! a parallel-tempering engine ([`tempering`]), a multi-threaded
-//! coordinator ([`coordinator`]), the PJRT runtime ([`runtime`]) and the
+//! coordinator ([`coordinator`]), the PJRT runtime ([`runtime`]), the
 //! benchmark harness that regenerates every table and figure of the
-//! paper's evaluation ([`harness`]).
+//! paper's evaluation ([`harness`]), and the sampling [`service`] — a
+//! job queue + dynamic lane-batching scheduler that packs independent
+//! sampling jobs onto C-rung lane-batches (`repro serve` / `repro
+//! submit`).
 //!
 //! ## Quickstart
 //!
@@ -54,6 +57,7 @@ pub mod harness;
 pub mod ising;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod simd;
 pub mod stats;
 pub mod sweep;

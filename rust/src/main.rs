@@ -24,8 +24,11 @@ use vectorising::coordinator::{self, RunConfig};
 use vectorising::harness::{fig13, fig14, fig17, table1, table2};
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
+use vectorising::service;
+use vectorising::service::executor::Executor;
+use vectorising::service::job::{JobResult, Request};
 use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
-use vectorising::sweep::{SweepKind, Sweeper};
+use vectorising::sweep::{ExpMode, SweepKind, Sweeper};
 use vectorising::util::cli::Args;
 use vectorising::Result;
 
@@ -50,6 +53,15 @@ SUBCOMMANDS
   fig17            exponential approximation error [--csv PATH]
   bench-rung       timing probe for one rung (--kind ..., --json)
   artifacts-check  load + execute every artifact once
+  serve            sampling service: JSON-lines jobs in, per-job results out,
+                   dynamically lane-batched onto the C-rungs
+                   [--listen HOST:PORT | stdin/stdout]
+                   [--lanes 4|8] [--threads N] [--flush-ms N] [--exact]
+  submit           client for a serving instance: --addr HOST:PORT
+                   [--file jobs.jsonl | stdin] [--stats] [--shutdown]
+  job-run          run job lines directly on the scalar A.2 reference
+                   [--file jobs.jsonl | stdin] [--exact]
+                   (the bit-exactness oracle for served results)
 
 WORKLOAD FLAGS (run/table2/fig13/fig14/bench-rung)
   --width N --height N   torus dims (default 8x8)
@@ -207,6 +219,57 @@ fn main() -> Result<()> {
                 );
             }
         }
+        "serve" => {
+            let cfg = service::ServiceConfig {
+                lanes: args.usize_or("lanes", vectorising::simd::widest_supported_width())?,
+                threads: args.usize_or("threads", 1)?,
+                flush_ms: args.u64_or("flush-ms", 25)?,
+                exp: if args.switch("exact") { ExpMode::Exact } else { ExpMode::Fast },
+            };
+            match args.str_opt("listen") {
+                Some(addr) => {
+                    let listener = std::net::TcpListener::bind(addr)?;
+                    eprintln!(
+                        "repro serve: listening on {} (W={}, threads={}, flush={}ms)",
+                        listener.local_addr()?,
+                        cfg.lanes,
+                        cfg.threads,
+                        cfg.flush_ms
+                    );
+                    service::server::serve_tcp(listener, &cfg)?;
+                }
+                None => service::server::serve_stdin(&cfg)?,
+            }
+        }
+        "submit" => {
+            let addr = args
+                .str_opt("addr")
+                .ok_or_else(|| anyhow::anyhow!("--addr HOST:PORT required"))?;
+            let mut out = std::io::stdout();
+            let lines = if args.switch("shutdown") {
+                vec!["{\"op\":\"shutdown\"}".to_string()]
+            } else if args.switch("stats") {
+                vec!["{\"op\":\"stats\"}".to_string()]
+            } else {
+                read_request_lines(args.str_opt("file"))?
+            };
+            service::server::submit_lines(addr, lines, &mut out)?;
+        }
+        "job-run" => {
+            let exp = if args.switch("exact") { ExpMode::Exact } else { ExpMode::Fast };
+            let exec = Executor::new(4, exp)?; // lane width is irrelevant for the scalar path
+            for line in read_request_lines(args.str_opt("file"))? {
+                let out_line = match service::job::parse_request(&line) {
+                    Ok(Request::Job(spec)) => match exec.run_single(&spec) {
+                        Ok(result) => result.to_line(),
+                        Err(e) => JobResult::error_line(&spec.id, &format!("{e:#}")),
+                    },
+                    Ok(_) => continue, // control ops have no direct-run meaning
+                    Err(e) => JobResult::error_line("", &format!("{e:#}")),
+                };
+                println!("{out_line}");
+            }
+        }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprintln!("unknown subcommand {other:?}\n");
@@ -264,6 +327,20 @@ fn run_accel(cfg: &RunConfig, kind: SweepKind) -> Result<coordinator::RunReport>
         &rows,
         pt.swap_acceptance(),
     ))
+}
+
+/// Request lines for submit/job-run: from `--file PATH` or stdin.
+fn read_request_lines(path: Option<&str>) -> Result<Vec<String>> {
+    let text = match path {
+        Some(p) => std::fs::read_to_string(p)?,
+        None => {
+            use std::io::Read as _;
+            let mut s = String::new();
+            std::io::stdin().read_to_string(&mut s)?;
+            s
+        }
+    };
+    Ok(text.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect())
 }
 
 /// Factor n into the most square even-by-even torus (for artifacts-check).

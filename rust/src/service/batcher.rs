@@ -1,0 +1,201 @@
+//! The dynamic lane-batching scheduler core: shape-bucketed admission
+//! queues that pack up to `W` compatible jobs into one C-rung lane-batch.
+//!
+//! This is the service-level version of the paper's central lesson —
+//! throughput comes from keeping every SIMD lane busy with homogeneous
+//! work.  Queued jobs are bucketed by [`ShapeKey`] (identical model
+//! shape ⇒ identical CSR topology ⇒ batchable into one
+//! [`crate::ising::ReplicaBatchModel`]); a bucket dispatches
+//!
+//! * immediately once it holds `W` jobs (a full batch, lane fill 1), or
+//! * when its **oldest** job has waited past the flush deadline, so
+//!   latency is bounded: ≥ 2 stragglers go out as a padded batch, a lone
+//!   job falls back to a scalar A-rung dispatch.
+//!
+//! FIFO order is preserved within a bucket (each bucket is a `VecDeque`
+//! popped from the front), and a batch never mixes shapes by
+//! construction — the property tests in `tests/service_batcher.rs` pin
+//! both invariants down.
+//!
+//! Time is always passed in (`push(_, _, now)` / `poll(now)`), so the
+//! deadline machinery is testable without sleeping.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use super::job::{JobSpec, ShapeKey};
+
+/// An admitted job waiting for lane-mates.
+pub struct PendingJob {
+    pub spec: JobSpec,
+    /// Channel the serialized result line goes back through (`None` in
+    /// benches/tests that consume results directly).
+    pub reply: Option<Sender<String>>,
+    /// Admission time — the flush deadline counts from here.
+    pub enqueued: Instant,
+    /// Admission sequence number (FIFO evidence).
+    pub seq: u64,
+}
+
+/// A unit of work the scheduler hands to the sweep pool.
+pub enum Dispatch {
+    /// `2..=W` shape-compatible jobs packed into one lane-batch (padded
+    /// up to `W` discarded lanes at execution time when fewer than `W`).
+    Batch(Vec<PendingJob>),
+    /// A job with no compatible peers — served by a scalar A.2 sweeper.
+    Single(PendingJob),
+}
+
+impl Dispatch {
+    /// Active (non-padded) lanes this dispatch occupies.
+    pub fn occupancy(&self) -> usize {
+        match self {
+            Dispatch::Batch(jobs) => jobs.len(),
+            Dispatch::Single(_) => 1,
+        }
+    }
+
+    pub fn is_batch(&self) -> bool {
+        matches!(self, Dispatch::Batch(_))
+    }
+
+    pub fn into_jobs(self) -> Vec<PendingJob> {
+        match self {
+            Dispatch::Batch(jobs) => jobs,
+            Dispatch::Single(job) => vec![job],
+        }
+    }
+}
+
+/// Shape-bucketed job queue with deadline-bounded lane packing.
+pub struct Batcher {
+    width: usize,
+    deadline: Duration,
+    buckets: BTreeMap<ShapeKey, VecDeque<PendingJob>>,
+    next_seq: u64,
+    queued: usize,
+}
+
+impl Batcher {
+    /// `width` lanes per batch (the C-rung `W`), `deadline` the maximum
+    /// time a job may wait for lane-mates before its bucket flushes.
+    pub fn new(width: usize, deadline: Duration) -> Self {
+        assert!(width >= 2, "lane-batching needs at least 2 lanes");
+        Self { width, deadline, buckets: BTreeMap::new(), next_seq: 0, queued: 0 }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Jobs currently waiting for dispatch.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Admit a job; returns its sequence number.
+    pub fn push(&mut self, spec: JobSpec, reply: Option<Sender<String>>, now: Instant) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.buckets
+            .entry(spec.shape())
+            .or_default()
+            .push_back(PendingJob { spec, reply, enqueued: now, seq });
+        self.queued += 1;
+        seq
+    }
+
+    /// Remove and return every dispatch ready at `now`: full batches
+    /// always; a non-empty bucket whose oldest job has waited at least
+    /// the deadline flushes what it has.
+    pub fn poll(&mut self, now: Instant) -> Vec<Dispatch> {
+        let deadline = self.deadline;
+        self.collect_ready(|oldest| now.saturating_duration_since(oldest) >= deadline)
+    }
+
+    /// Flush everything regardless of deadline (drain on shutdown).
+    pub fn drain(&mut self) -> Vec<Dispatch> {
+        self.collect_ready(|_| true)
+    }
+
+    /// Earliest pending flush deadline — the scheduler's sleep bound.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.buckets
+            .values()
+            .filter_map(|q| q.front().map(|job| job.enqueued + self.deadline))
+            .min()
+    }
+
+    fn collect_ready<F: Fn(Instant) -> bool>(&mut self, flush: F) -> Vec<Dispatch> {
+        let width = self.width;
+        let mut out = Vec::new();
+        for queue in self.buckets.values_mut() {
+            while queue.len() >= width {
+                out.push(Dispatch::Batch(queue.drain(..width).collect()));
+            }
+            if !queue.is_empty() && flush(queue.front().unwrap().enqueued) {
+                if queue.len() == 1 {
+                    out.push(Dispatch::Single(queue.pop_front().unwrap()));
+                } else {
+                    out.push(Dispatch::Batch(queue.drain(..).collect()));
+                }
+            }
+        }
+        self.buckets.retain(|_, queue| !queue.is_empty());
+        for dispatch in &out {
+            self.queued -= dispatch.occupancy();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: &str, width: usize, layers: usize) -> JobSpec {
+        JobSpec {
+            id: id.to_string(),
+            width,
+            height: 4,
+            layers,
+            model_seed: 1,
+            jtau: 0.3,
+            sweeps: 10,
+            beta: 0.8,
+            seed: 1,
+            trace_every: 0,
+            want_state: false,
+        }
+    }
+
+    #[test]
+    fn full_buckets_dispatch_immediately() {
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let now = Instant::now();
+        for i in 0..9 {
+            b.push(spec(&format!("j{i}"), 4, 8), None, now);
+        }
+        let ds = b.poll(now);
+        assert_eq!(ds.len(), 2, "two full batches, one straggler stays");
+        assert!(ds.iter().all(|d| d.occupancy() == 4 && d.is_batch()));
+        assert_eq!(b.queued(), 1);
+        assert!(b.next_deadline().is_some());
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let now = Instant::now();
+        b.push(spec("a", 4, 8), None, now);
+        b.push(spec("b", 4, 2), None, now);
+        b.push(spec("c", 4, 2), None, now);
+        let ds = b.drain();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(b.queued(), 0);
+        assert!(b.next_deadline().is_none());
+        let occ: usize = ds.iter().map(|d| d.occupancy()).sum();
+        assert_eq!(occ, 3);
+    }
+}

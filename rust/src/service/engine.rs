@@ -1,0 +1,241 @@
+//! The service engine: one scheduler thread driving admission →
+//! lane-batching → sweep-pool execution → per-job result lines.
+//!
+//! Submissions arrive on an mpsc channel (one sender clone per
+//! connection).  The scheduler sleeps until either a new submission or
+//! the earliest flush deadline, packs what is ready through the
+//! [`Batcher`], and executes the resulting dispatches on one persistent
+//! [`SweepPool`] — one pool task per dispatch, so independent batches of
+//! different shapes sweep in parallel while each batch keeps its lanes
+//! in lockstep.  Result lines stream back through each job's reply
+//! channel as its dispatch completes.
+//!
+//! Shutdown is by hang-up: dropping the [`EngineHandle`] (or calling
+//! [`EngineHandle::shutdown`]) closes the submission channel; the
+//! scheduler drains every queued job, answers it, and exits.
+//!
+//! Dispatch rounds are synchronous: the scheduler blocks in
+//! `SweepPool::run_batch` until the round's dispatches finish, and
+//! submissions arriving meanwhile wait in the channel.  The admission
+//! work cap (`JobSpec::validate`) bounds how long one round can take,
+//! so the flush deadline is a *time-to-dispatch* bound plus at most one
+//! round of execution — a fully asynchronous dispatcher is future work
+//! (see DESIGN.md).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::SweepPool;
+use crate::Result;
+
+use super::batcher::{Batcher, Dispatch};
+use super::executor::Executor;
+use super::job::{JobResult, JobSpec};
+use super::metrics::ServiceMetrics;
+use super::ServiceConfig;
+
+/// A job plus the channel its serialized result line goes back through.
+pub struct Submission {
+    pub spec: JobSpec,
+    pub reply: Sender<String>,
+}
+
+/// Handle to a running engine: submit jobs, read metrics, shut down.
+pub struct EngineHandle {
+    tx: Option<Sender<Submission>>,
+    pub metrics: Arc<ServiceMetrics>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// A cloneable submission channel (one per connection).
+    pub fn submitter(&self) -> Sender<Submission> {
+        self.tx.as_ref().expect("engine running").clone()
+    }
+
+    /// Close admission, drain every queued job, stop the scheduler.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.tx.take();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Start the scheduler thread for `cfg`.
+pub fn start(cfg: &ServiceConfig) -> Result<EngineHandle> {
+    let executor = Executor::new(cfg.lanes, cfg.exp)?;
+    let metrics = Arc::new(ServiceMetrics::default());
+    let metrics_for_thread = Arc::clone(&metrics);
+    let (tx, rx) = channel::<Submission>();
+    let threads = cfg.threads;
+    let flush = Duration::from_millis(cfg.flush_ms.max(1));
+    let join = std::thread::spawn(move || {
+        scheduler_loop(rx, executor, threads, flush, metrics_for_thread);
+    });
+    Ok(EngineHandle { tx: Some(tx), metrics, join: Some(join) })
+}
+
+fn scheduler_loop(
+    rx: Receiver<Submission>,
+    executor: Executor,
+    threads: usize,
+    flush: Duration,
+    metrics: Arc<ServiceMetrics>,
+) {
+    let pool = SweepPool::new(threads);
+    let mut batcher = Batcher::new(executor.width, flush);
+    loop {
+        // Sleep until the next admission or the earliest flush deadline.
+        let msg = match batcher.next_deadline() {
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            Some(deadline) => {
+                let now = Instant::now();
+                if deadline <= now {
+                    Err(RecvTimeoutError::Timeout)
+                } else {
+                    rx.recv_timeout(deadline - now)
+                }
+            }
+        };
+        let disconnected = match msg {
+            Ok(sub) => {
+                admit(&mut batcher, sub, &metrics);
+                while let Ok(sub) = rx.try_recv() {
+                    admit(&mut batcher, sub, &metrics);
+                }
+                false
+            }
+            Err(RecvTimeoutError::Timeout) => false,
+            Err(RecvTimeoutError::Disconnected) => true,
+        };
+        let dispatches =
+            if disconnected { batcher.drain() } else { batcher.poll(Instant::now()) };
+        metrics.set_queue_depth(batcher.queued());
+        execute(&pool, executor, dispatches, &metrics);
+        if disconnected {
+            break;
+        }
+    }
+}
+
+fn admit(batcher: &mut Batcher, sub: Submission, metrics: &ServiceMetrics) {
+    metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    batcher.push(sub.spec, Some(sub.reply), Instant::now());
+    metrics.set_queue_depth(batcher.queued());
+}
+
+/// One pool task per dispatch; each job's result line streams back to
+/// its connection as soon as its dispatch completes.
+fn execute(
+    pool: &SweepPool,
+    executor: Executor,
+    dispatches: Vec<Dispatch>,
+    metrics: &Arc<ServiceMetrics>,
+) {
+    if dispatches.is_empty() {
+        return;
+    }
+    let width = executor.width;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dispatches
+        .into_iter()
+        .map(|dispatch| {
+            let metrics = Arc::clone(metrics);
+            Box::new(move || {
+                metrics.record_dispatch(dispatch.occupancy(), width, dispatch.is_batch());
+                for (job, outcome) in executor.run_dispatch(dispatch) {
+                    let line = match outcome {
+                        Ok(result) => {
+                            metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                            result.to_line()
+                        }
+                        Err(e) => {
+                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                            JobResult::error_line(&job.spec.id, &format!("{e:#}"))
+                        }
+                    };
+                    if let Some(reply) = &job.reply {
+                        // A gone connection just discards its results.
+                        let _ = reply.send(line);
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run_batch(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::ExpMode;
+
+    fn spec(id: &str, layers: usize, seed: u32) -> JobSpec {
+        JobSpec {
+            id: id.to_string(),
+            width: 4,
+            height: 4,
+            layers,
+            model_seed: 1,
+            jtau: 0.3,
+            sweeps: 12,
+            beta: 0.8,
+            seed,
+            trace_every: 0,
+            want_state: true,
+        }
+    }
+
+    /// Submissions flow through batching + pool execution back to the
+    /// reply channel, one result line per job, drained on shutdown.
+    #[test]
+    fn engine_answers_every_submission() {
+        // A generous flush deadline so slow CI cannot split the 4-job
+        // bucket into a padded flush before all four have been admitted.
+        let cfg = ServiceConfig { lanes: 4, threads: 2, flush_ms: 200, exp: ExpMode::Fast };
+        let engine = start(&cfg).unwrap();
+        let submitter = engine.submitter();
+        let (reply_tx, reply_rx) = channel::<String>();
+        // 4 batchable jobs + 1 lone shallow job (deadline flush -> A.2).
+        for i in 0..4 {
+            let sub =
+                Submission { spec: spec(&format!("b{i}"), 8, 40 + i), reply: reply_tx.clone() };
+            submitter.send(sub).unwrap();
+        }
+        submitter
+            .send(Submission { spec: spec("lone", 2, 99), reply: reply_tx.clone() })
+            .unwrap();
+        drop(reply_tx);
+        drop(submitter);
+        let metrics = Arc::clone(&engine.metrics);
+        engine.shutdown(); // drains the queue before returning
+
+        let mut lines: Vec<String> = reply_rx.iter().collect();
+        lines.sort();
+        assert_eq!(lines.len(), 5, "one result line per job: {lines:?}");
+        let mut kinds = Vec::new();
+        for line in &lines {
+            let r = JobResult::from_line(line).unwrap();
+            kinds.push(r.kind.clone());
+            assert!(r.state.is_some());
+        }
+        assert!(kinds.iter().any(|k| k == "A.2"), "lone job fell back to scalar: {kinds:?}");
+        assert!(kinds.iter().any(|k| k.starts_with("C.1")), "batch served by a C-rung");
+        assert_eq!(metrics.jobs_completed.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.jobs_submitted.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.lane_fill_ratio(), 1.0, "the 4-job bucket filled its batch");
+    }
+}

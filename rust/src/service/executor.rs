@@ -1,0 +1,211 @@
+//! Dispatch execution: turn a [`Dispatch`] into per-job results.
+//!
+//! A [`Dispatch::Batch`] builds one C-rung lane-batch (padded to `W`
+//! with discarded clone lanes, exactly like the tempering ensemble pads
+//! its tail batch) and sweeps all lanes in lockstep; a
+//! [`Dispatch::Single`] runs the scalar A.2 sweeper.  Either way every
+//! job's trajectory is **bit-exact** to the standalone scalar A.2 run of
+//! the same job — [`Executor::run_single`] *is* that reference run, and
+//! the C-rung differential suite guarantees each lane reproduces it.
+//!
+//! Jobs in one batch may ask for different sweep counts: the batch
+//! executes in chunks between the union of all lanes' capture points, and
+//! each lane's result (energy, state, stats, trace) is captured exactly
+//! at its own sweep count.  Lanes past their target keep sweeping as
+//! padding until the longest job finishes — lanes never interact, so
+//! that is purely discarded work, never a perturbation.
+
+use std::collections::BTreeSet;
+
+use crate::ising::QmcModel;
+use crate::sweep::c1_replica_batch::make_batch_sweeper;
+use crate::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, SweepStats};
+use crate::Result;
+
+use super::batcher::{Dispatch, PendingJob};
+use super::job::{JobResult, JobSpec};
+
+/// Executes dispatches on the current thread (the engine runs one
+/// executor call per sweep-pool task).  `Copy`, so pool tasks can take
+/// it by value.
+#[derive(Copy, Clone)]
+pub struct Executor {
+    /// The C-rung serving batches (`C.1` at 4 lanes, `C.1w8` at 8).
+    pub kind: SweepKind,
+    /// Lane width `W`.
+    pub width: usize,
+    /// Exponential mode — `Fast` by default; the wide fast exp is
+    /// lane-exact to the scalar one, so serving stays bit-exact either way.
+    pub exp: ExpMode,
+}
+
+impl Executor {
+    pub fn new(lanes: usize, exp: ExpMode) -> Result<Self> {
+        anyhow::ensure!(lanes == 4 || lanes == 8, "lane width must be 4 or 8 (got {lanes})");
+        Ok(Self { kind: SweepKind::c1_for_width(lanes), width: lanes, exp })
+    }
+
+    /// Run one dispatch to completion, returning each job with its
+    /// outcome (jobs are handed back so the caller can route replies).
+    pub fn run_dispatch(&self, dispatch: Dispatch) -> Vec<(PendingJob, Result<JobResult>)> {
+        match dispatch {
+            Dispatch::Single(job) => {
+                let outcome = self.run_single(&job.spec);
+                vec![(job, outcome)]
+            }
+            Dispatch::Batch(jobs) => self.run_batch(jobs),
+        }
+    }
+
+    /// The scalar reference path: exactly the A.2 run a standalone
+    /// invocation of this job would execute.  Also the bit-exactness
+    /// oracle for served results (`repro job-run`).
+    pub fn run_single(&self, spec: &JobSpec) -> Result<JobResult> {
+        let wl = spec.workload();
+        let mut sweeper =
+            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, spec.seed, self.exp)?;
+        let mut stats = SweepStats::default();
+        let mut trace = Vec::new();
+        let mut done = 0usize;
+        for p in capture_points(spec) {
+            stats.merge(&sweeper.run(p - done, spec.beta));
+            done = p;
+            if traces_at(spec, p) {
+                trace.push(sweeper.energy());
+            }
+        }
+        Ok(JobResult {
+            id: spec.id.clone(),
+            energy: sweeper.energy(),
+            stats,
+            kind: SweepKind::A2Basic.label().to_string(),
+            lanes: 1,
+            occupancy: 1,
+            energy_trace: trace,
+            state: if spec.want_state { Some(sweeper.state()) } else { None },
+        })
+    }
+
+    fn run_batch(&self, jobs: Vec<PendingJob>) -> Vec<(PendingJob, Result<JobResult>)> {
+        match self.try_run_batch(&jobs) {
+            Ok(results) => jobs.into_iter().zip(results.into_iter().map(Ok)).collect(),
+            Err(e) => {
+                // Whole-batch construction failure (cannot happen for
+                // shape-bucketed jobs): fail every member with the cause.
+                let msg = format!("{e:#}");
+                jobs.into_iter().map(|job| (job, Err(anyhow::anyhow!("{}", msg)))).collect()
+            }
+        }
+    }
+
+    fn try_run_batch(&self, jobs: &[PendingJob]) -> Result<Vec<JobResult>> {
+        let w = self.width;
+        let n = jobs.len();
+        anyhow::ensure!(n >= 2 && n <= w, "a batch dispatch packs 2..=W jobs (got {n})");
+
+        let workloads: Vec<_> = jobs.iter().map(|job| job.spec.workload()).collect();
+        let mut models: Vec<QmcModel> = workloads.iter().map(|wl| wl.model.clone()).collect();
+        let mut states: Vec<Vec<f32>> = workloads.iter().map(|wl| wl.s0.clone()).collect();
+        let mut seeds: Vec<u32> = jobs.iter().map(|job| job.spec.seed).collect();
+        let mut betas: Vec<f32> = jobs.iter().map(|job| job.spec.beta).collect();
+        for k in n..w {
+            // Padding: clone the last job's replica with an off-stream
+            // seed, as the tempering tail batch does — the padded chain is
+            // discarded and lanes never interact.
+            models.push(models[n - 1].clone());
+            states.push(states[n - 1].clone());
+            seeds.push(seeds[n - 1] ^ 0x8000_0000 ^ (k as u32));
+            betas.push(betas[n - 1]);
+        }
+        let mut batch = make_batch_sweeper(self.kind, &models, &states, &seeds, self.exp)?;
+
+        let mut points = BTreeSet::new();
+        for job in jobs {
+            points.extend(capture_points(&job.spec));
+        }
+        let mut stats = vec![SweepStats::default(); n];
+        let mut traces: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut results: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        for p in points {
+            let per_lane = batch.run(p - done, &betas);
+            done = p;
+            for (k, job) in jobs.iter().enumerate() {
+                let spec = &job.spec;
+                if p <= spec.sweeps {
+                    stats[k].merge(&per_lane[k]);
+                }
+                if traces_at(spec, p) {
+                    traces[k].push(batch.energy_of(k));
+                }
+                if p == spec.sweeps {
+                    results[k] = Some(JobResult {
+                        id: spec.id.clone(),
+                        energy: batch.energy_of(k),
+                        stats: stats[k],
+                        kind: self.kind.label().to_string(),
+                        lanes: w,
+                        occupancy: n,
+                        energy_trace: std::mem::take(&mut traces[k]),
+                        state: if spec.want_state { Some(batch.state_of(k)) } else { None },
+                    });
+                }
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every lane's sweep count is a capture point"))
+            .collect())
+    }
+}
+
+/// Sorted sweep counts at which the batch must pause: every lane's final
+/// sweep count plus its energy-trace points.
+fn capture_points(spec: &JobSpec) -> Vec<usize> {
+    let mut points = BTreeSet::new();
+    points.insert(spec.sweeps);
+    if spec.trace_every > 0 {
+        let mut t = spec.trace_every;
+        while t < spec.sweeps {
+            points.insert(t);
+            t += spec.trace_every;
+        }
+    }
+    points.into_iter().collect()
+}
+
+/// Whether sweep count `p` is an energy-trace point of `spec`.
+fn traces_at(spec: &JobSpec, p: usize) -> bool {
+    spec.trace_every > 0 && p <= spec.sweeps && p % spec.trace_every == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_points_cover_trace_and_final() {
+        let mut spec = JobSpec {
+            id: "t".into(),
+            width: 4,
+            height: 4,
+            layers: 8,
+            model_seed: 1,
+            jtau: 0.3,
+            sweeps: 10,
+            beta: 0.8,
+            seed: 1,
+            trace_every: 4,
+            want_state: false,
+        };
+        assert_eq!(capture_points(&spec), vec![4, 8, 10]);
+        assert!(traces_at(&spec, 4) && traces_at(&spec, 8));
+        assert!(!traces_at(&spec, 10));
+        spec.trace_every = 5;
+        assert_eq!(capture_points(&spec), vec![5, 10]);
+        assert!(traces_at(&spec, 10), "final sweep that lands on the grid is traced");
+        spec.trace_every = 0;
+        assert_eq!(capture_points(&spec), vec![10]);
+        assert!(!traces_at(&spec, 10));
+    }
+}

@@ -1,0 +1,376 @@
+//! Wire format of the sampling service: job requests, control ops and
+//! per-job results, all JSON-lines over the dependency-free
+//! [`crate::util::json`] subset.
+//!
+//! A request line is either a job object (every field optional except
+//! `id`) or a control op:
+//!
+//! ```text
+//! {"id":"j1","width":4,"height":4,"layers":8,"model_seed":3,"jtau":0.3,
+//!  "sweeps":100,"beta":0.8,"seed":42,"trace_every":0,"want_state":true}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! {"op":"submit","job":{...}}        # explicit-op spelling of a job line
+//! ```
+//!
+//! Each job yields exactly one result line (`status` `"ok"` or
+//! `"error"`), streamed back as soon as its lane-batch completes.  The
+//! served trajectory is **bit-exact** to the scalar A.2 run of the same
+//! job (`repro job-run`), whichever lane of whichever batch it landed on
+//! — that is the C-rung correctness contract (see `tests/replica_batch.rs`).
+
+use crate::ising::builder::{torus_workload, Workload};
+use crate::sweep::SweepStats;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Shape-bucket key of the lane-batching scheduler: jobs with equal keys
+/// build identically-shaped models — same torus dims and layer count,
+/// hence the same CSR edge topology — so they can share one lane-batch
+/// regardless of couplings (`model_seed`, `jtau`), β, sweeps or RNG seed.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ShapeKey {
+    pub width: usize,
+    pub height: usize,
+    pub layers: usize,
+}
+
+impl std::fmt::Display for ShapeKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.width, self.height, self.layers)
+    }
+}
+
+/// A validated sampling job: sweep a torus QMC workload for `sweeps`
+/// Metropolis sweeps at inverse temperature `beta`, RNG stream `seed`.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: String,
+    pub width: usize,
+    pub height: usize,
+    pub layers: usize,
+    /// Workload seed (couplings, fields, initial state).
+    pub model_seed: u64,
+    /// Inter-layer coupling.
+    pub jtau: f32,
+    pub sweeps: usize,
+    pub beta: f32,
+    /// MT19937 stream seed — the scalar A.2 reference uses the same one.
+    pub seed: u32,
+    /// Record the energy every this many sweeps (0 = no trace).
+    pub trace_every: usize,
+    /// Return the final spin state in the result.
+    pub want_state: bool,
+}
+
+impl JobSpec {
+    pub fn shape(&self) -> ShapeKey {
+        ShapeKey { width: self.width, height: self.height, layers: self.layers }
+    }
+
+    /// Build the job's workload (deterministic in `model_seed`).
+    pub fn workload(&self) -> Workload {
+        torus_workload(self.width, self.height, self.layers, self.model_seed, self.jtau)
+    }
+
+    /// Parse a job object (not a control op), applying defaults, then
+    /// validate.
+    pub fn from_value(v: &Value) -> Result<JobSpec> {
+        let us = |key: &str, default: usize| -> Result<usize> {
+            match v.opt(key) {
+                None => Ok(default),
+                Some(x) => x.as_usize().map_err(|e| anyhow::anyhow!("field {key:?}: {e}")),
+            }
+        };
+        let fl = |key: &str, default: f64| -> Result<f64> {
+            match v.opt(key) {
+                None => Ok(default),
+                Some(x) => x.as_f64().map_err(|e| anyhow::anyhow!("field {key:?}: {e}")),
+            }
+        };
+        let seed = us("seed", 1)?;
+        anyhow::ensure!(
+            seed <= u32::MAX as usize,
+            "seed must fit in u32 (got {seed}) — a truncated seed would silently alias \
+             another stream"
+        );
+        let spec = JobSpec {
+            id: v.get("id")?.as_str()?.to_string(),
+            width: us("width", 8)?,
+            height: us("height", 8)?,
+            layers: us("layers", 8)?,
+            model_seed: us("model_seed", 1)? as u64,
+            jtau: fl("jtau", 0.3)? as f32,
+            sweeps: us("sweeps", 100)?,
+            beta: fl("beta", 1.0)? as f32,
+            seed: seed as u32,
+            trace_every: us("trace_every", 0)?,
+            want_state: v.opt("want_state").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Admission checks: the same geometry rules the C-rungs need
+    /// (even torus dims, `layers >= 2`) plus service abuse bounds.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.id.is_empty() && self.id.len() <= 128,
+            "id must be 1..=128 characters"
+        );
+        anyhow::ensure!(
+            self.width >= 2 && self.height >= 2 && self.width % 2 == 0 && self.height % 2 == 0,
+            "torus dims must be even and >= 2 (got {}x{})",
+            self.width,
+            self.height
+        );
+        anyhow::ensure!(
+            self.layers >= 2 && self.layers <= 1024,
+            "layers must be in 2..=1024 (got {})",
+            self.layers
+        );
+        let n_spins = self.width * self.height * self.layers;
+        anyhow::ensure!(
+            n_spins <= 1 << 21,
+            "model too large: {} spins (limit {})",
+            n_spins,
+            1usize << 21
+        );
+        anyhow::ensure!(
+            self.sweeps >= 1 && self.sweeps <= 1_000_000,
+            "sweeps must be in 1..=1000000 (got {})",
+            self.sweeps
+        );
+        // Cap the total work of one job so a single dispatch can never
+        // stall the scheduler (and its lane-mates) for long.
+        let updates = n_spins as u64 * self.sweeps as u64;
+        anyhow::ensure!(
+            updates <= 1 << 31,
+            "job too heavy: {} spin-updates (limit {})",
+            updates,
+            1u64 << 31
+        );
+        if self.trace_every > 0 {
+            anyhow::ensure!(
+                self.sweeps / self.trace_every <= 10_000,
+                "energy trace too long: {} points (limit 10000) — raise trace_every",
+                self.sweeps / self.trace_every
+            );
+        }
+        anyhow::ensure!(
+            self.beta.is_finite() && self.beta > 0.0,
+            "beta must be finite and positive (got {})",
+            self.beta
+        );
+        anyhow::ensure!(self.jtau.is_finite(), "jtau must be finite");
+        Ok(())
+    }
+
+    /// Serialize back to a request line (clients, benches, tests).
+    pub fn to_line(&self) -> String {
+        json::obj(vec![
+            ("id", json::str_v(&self.id)),
+            ("width", json::num(self.width as f64)),
+            ("height", json::num(self.height as f64)),
+            ("layers", json::num(self.layers as f64)),
+            ("model_seed", json::num(self.model_seed as f64)),
+            ("jtau", json::num(self.jtau as f64)),
+            ("sweeps", json::num(self.sweeps as f64)),
+            ("beta", json::num(self.beta as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("trace_every", json::num(self.trace_every as f64)),
+            ("want_state", Value::Bool(self.want_state)),
+        ])
+        .to_string()
+    }
+}
+
+/// A parsed request line.
+pub enum Request {
+    Job(JobSpec),
+    Stats,
+    Shutdown,
+}
+
+/// Parse one request line: a control op (`{"op": ...}`) or a job object.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Value::parse(line)?;
+    if let Some(op) = v.opt("op") {
+        return match op.as_str()? {
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "submit" => Ok(Request::Job(JobSpec::from_value(v.get("job")?)?)),
+            other => anyhow::bail!("unknown op {other:?} (expected stats, shutdown or submit)"),
+        };
+    }
+    Ok(Request::Job(JobSpec::from_value(&v)?))
+}
+
+/// The outcome of one served job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: String,
+    /// Final total energy after `sweeps` sweeps.
+    pub energy: f64,
+    /// Flip statistics accumulated over exactly the job's own sweeps.
+    pub stats: SweepStats,
+    /// Rung that served the job: a C-rung label for lane-batched jobs,
+    /// "A.2" for the scalar fallback.
+    pub kind: String,
+    /// Vector width of the serving batch (1 for the scalar fallback).
+    pub lanes: usize,
+    /// Active (non-padded) lanes in the serving batch.
+    pub occupancy: usize,
+    /// Energies recorded every `trace_every` sweeps (empty when 0).
+    pub energy_trace: Vec<f64>,
+    /// Final spin state (original layer-major order) when requested.
+    pub state: Option<Vec<f32>>,
+}
+
+impl JobResult {
+    /// Serialize as a result line.
+    pub fn to_line(&self) -> String {
+        let mut pairs = vec![
+            ("id", json::str_v(&self.id)),
+            ("status", json::str_v("ok")),
+            ("kind", json::str_v(&self.kind)),
+            ("lanes", json::num(self.lanes as f64)),
+            ("occupancy", json::num(self.occupancy as f64)),
+            ("energy", json::num(self.energy)),
+            ("flips", json::num(self.stats.flips as f64)),
+            ("attempts", json::num(self.stats.attempts as f64)),
+            ("flip_prob", json::num(self.stats.flip_prob())),
+        ];
+        if !self.energy_trace.is_empty() {
+            pairs.push(("energy_trace", json::arr_f64(&self.energy_trace)));
+        }
+        if let Some(state) = &self.state {
+            let arr = Value::Arr(state.iter().map(|&x| Value::Num(x as f64)).collect());
+            pairs.push(("state", arr));
+        }
+        json::obj(pairs).to_string()
+    }
+
+    /// An error result line for a job that could not be served.
+    pub fn error_line(id: &str, msg: &str) -> String {
+        json::obj(vec![
+            ("id", json::str_v(id)),
+            ("status", json::str_v("error")),
+            ("error", json::str_v(msg)),
+        ])
+        .to_string()
+    }
+
+    /// Parse a result line back (clients and tests); errors on
+    /// `status != "ok"` lines.
+    pub fn from_line(line: &str) -> Result<JobResult> {
+        let v = Value::parse(line)?;
+        let status = v.get("status")?.as_str()?;
+        anyhow::ensure!(status == "ok", "result status {status:?}: {line}");
+        Ok(JobResult {
+            id: v.get("id")?.as_str()?.to_string(),
+            energy: v.get("energy")?.as_f64()?,
+            stats: SweepStats {
+                attempts: v.get("attempts")?.as_f64()? as u64,
+                flips: v.get("flips")?.as_f64()? as u64,
+                groups: 0,
+                groups_with_flip: 0,
+            },
+            kind: v.get("kind")?.as_str()?.to_string(),
+            lanes: v.get("lanes")?.as_usize()?,
+            occupancy: v.get("occupancy")?.as_usize()?,
+            energy_trace: match v.opt("energy_trace") {
+                Some(t) => t.as_arr()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+            state: match v.opt("state") {
+                Some(t) => Some(
+                    t.as_arr()?
+                        .iter()
+                        .map(|x| x.as_f64().map(|f| f as f32))
+                        .collect::<Result<_>>()?,
+                ),
+                None => None,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_line() -> String {
+        r#"{"id":"j1","width":4,"height":4,"layers":8,"sweeps":50,"beta":0.8,"seed":7}"#
+            .to_string()
+    }
+
+    #[test]
+    fn job_lines_parse_with_defaults() {
+        let Request::Job(spec) = parse_request(&base_line()).unwrap() else {
+            panic!("expected a job");
+        };
+        assert_eq!(spec.id, "j1");
+        assert_eq!(spec.shape(), ShapeKey { width: 4, height: 4, layers: 8 });
+        assert_eq!(spec.model_seed, 1); // default
+        assert_eq!(spec.trace_every, 0);
+        assert!(!spec.want_state);
+        // round-trips through to_line
+        let Request::Job(again) = parse_request(&spec.to_line()).unwrap() else {
+            panic!("expected a job");
+        };
+        assert_eq!(again.id, spec.id);
+        assert_eq!(again.seed, spec.seed);
+        assert_eq!(again.beta, spec.beta);
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(matches!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
+        let line = format!(r#"{{"op":"submit","job":{}}}"#, base_line());
+        assert!(matches!(parse_request(&line).unwrap(), Request::Job(_)));
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_jobs() {
+        let cases = [
+            r#"{"width":4}"#,                              // missing id
+            r#"{"id":"x","width":5}"#,                     // odd torus dim
+            r#"{"id":"x","layers":1}"#,                    // layers < 2
+            r#"{"id":"x","sweeps":0}"#,                    // no sweeps
+            r#"{"id":"x","beta":-1.0}"#,                   // bad beta
+            r#"{"id":"x","width":64,"height":64,"layers":1024}"#, // too big
+            r#"{"id":"x","seed":4294967296}"#,             // seed > u32::MAX (would alias)
+            r#"{"id":"x","width":32,"height":32,"layers":64,"sweeps":100000}"#, // too heavy
+            r#"{"id":"x","sweeps":100000,"trace_every":1}"#, // trace too long
+        ];
+        for line in cases {
+            assert!(parse_request(line).is_err(), "should reject {line}");
+        }
+    }
+
+    #[test]
+    fn results_roundtrip_with_state_and_trace() {
+        let r = JobResult {
+            id: "j9".into(),
+            energy: -12.5,
+            stats: SweepStats { attempts: 100, flips: 7, groups: 100, groups_with_flip: 7 },
+            kind: "C.1".into(),
+            lanes: 4,
+            occupancy: 3,
+            energy_trace: vec![-10.0, -11.25],
+            state: Some(vec![1.0, -1.0, -1.0, 1.0]),
+        };
+        let back = JobResult::from_line(&r.to_line()).unwrap();
+        assert_eq!(back.id, "j9");
+        assert_eq!(back.energy.to_bits(), r.energy.to_bits());
+        assert_eq!(back.stats.flips, 7);
+        assert_eq!(back.occupancy, 3);
+        assert_eq!(back.energy_trace, r.energy_trace);
+        assert_eq!(back.state, r.state);
+        assert!(JobResult::from_line(&JobResult::error_line("j9", "boom")).is_err());
+    }
+}

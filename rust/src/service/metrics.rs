@@ -1,0 +1,128 @@
+//! Service-level counters — the serving analogue of the paper's
+//! "fraction of vector width utilized".
+//!
+//! All counters are atomics: connection threads and pool workers update
+//! them concurrently, `{"op":"stats"}` snapshots them lock-free.  The
+//! headline figure is the **lane-fill ratio**: of all SIMD lanes the
+//! service dispatched in batches, the fraction that carried a real job
+//! (the rest were deadline-flush padding).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json;
+
+/// Cumulative counters of one running service.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    /// Jobs admitted into the batcher.
+    pub jobs_submitted: AtomicU64,
+    /// Jobs answered with an `"ok"` result.
+    pub jobs_completed: AtomicU64,
+    /// Jobs answered with an `"error"` result after dispatch.
+    pub jobs_failed: AtomicU64,
+    /// Request lines rejected at admission (parse/validation).
+    pub jobs_rejected: AtomicU64,
+    /// Lane-batch dispatches (full or padded).
+    pub batches_dispatched: AtomicU64,
+    /// Scalar-fallback dispatches (lone jobs).
+    pub singles_dispatched: AtomicU64,
+    /// Dispatches forced by the flush deadline (padded batches + singles).
+    pub deadline_flushes: AtomicU64,
+    /// Lanes that carried a real job, summed over batch dispatches.
+    pub lanes_occupied: AtomicU64,
+    /// Padding lanes, summed over batch dispatches.
+    pub lanes_padded: AtomicU64,
+    /// Jobs waiting in the batcher right now.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub max_queue_depth: AtomicU64,
+}
+
+impl ServiceMetrics {
+    /// Account one dispatch of `occupancy` jobs at lane width `width`.
+    pub fn record_dispatch(&self, occupancy: usize, width: usize, is_batch: bool) {
+        if is_batch {
+            self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+            self.lanes_occupied.fetch_add(occupancy as u64, Ordering::Relaxed);
+            self.lanes_padded.fetch_add((width - occupancy) as u64, Ordering::Relaxed);
+            if occupancy < width {
+                self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            self.singles_dispatched.fetch_add(1, Ordering::Relaxed);
+            self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Update the live queue depth (and its high-water mark).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of dispatched batch lanes that carried a real job
+    /// (1.0 before any batch has been dispatched).
+    pub fn lane_fill_ratio(&self) -> f64 {
+        let occupied = self.lanes_occupied.load(Ordering::Relaxed) as f64;
+        let padded = self.lanes_padded.load(Ordering::Relaxed) as f64;
+        if occupied + padded == 0.0 {
+            1.0
+        } else {
+            occupied / (occupied + padded)
+        }
+    }
+
+    /// Snapshot as a `{"op":"stats", ...}` line.
+    pub fn snapshot_json(&self) -> String {
+        let get = |a: &AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
+        json::obj(vec![
+            ("op", json::str_v("stats")),
+            ("jobs_submitted", get(&self.jobs_submitted)),
+            ("jobs_completed", get(&self.jobs_completed)),
+            ("jobs_failed", get(&self.jobs_failed)),
+            ("jobs_rejected", get(&self.jobs_rejected)),
+            ("batches_dispatched", get(&self.batches_dispatched)),
+            ("singles_dispatched", get(&self.singles_dispatched)),
+            ("deadline_flushes", get(&self.deadline_flushes)),
+            ("lanes_occupied", get(&self.lanes_occupied)),
+            ("lanes_padded", get(&self.lanes_padded)),
+            ("lane_fill_ratio", json::num(self.lane_fill_ratio())),
+            ("queue_depth", get(&self.queue_depth)),
+            ("max_queue_depth", get(&self.max_queue_depth)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn lane_fill_tracks_dispatches() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.lane_fill_ratio(), 1.0, "vacuously full before any batch");
+        m.record_dispatch(4, 4, true); // full batch
+        assert_eq!(m.lane_fill_ratio(), 1.0);
+        m.record_dispatch(2, 4, true); // padded flush
+        assert!((m.lane_fill_ratio() - 0.75).abs() < 1e-12);
+        m.record_dispatch(1, 4, false); // scalar fallback: no lanes counted
+        assert!((m.lane_fill_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 2);
+        assert_eq!(m.singles_dispatched.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn snapshot_is_parseable_json() {
+        let m = ServiceMetrics::default();
+        m.record_dispatch(4, 4, true);
+        m.set_queue_depth(7);
+        m.set_queue_depth(3);
+        let v = Value::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(v.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("max_queue_depth").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("lane_fill_ratio").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! The sampling service: a long-running job queue plus a **dynamic
+//! lane-batching scheduler** that serves sweep requests through the
+//! C-rungs — the vector width itself as the unit of multi-tenancy.
+//!
+//! The paper's throughput lesson is that every SIMD lane must carry
+//! homogeneous work.  The C-rungs (PR 2) built that substrate for one
+//! pre-configured tempering ladder per process; this subsystem turns it
+//! into a server: independent sampling jobs from many clients are
+//! validated, bucketed by model *shape* (torus dims × layers ⇒ identical
+//! CSR topology), and packed `W` at a time into one
+//! [`crate::ising::replica_batch::ReplicaBatchModel`] +
+//! [`crate::sweep::c1_replica_batch::C1ReplicaBatch`] lane-batch — the
+//! same batching-across-independent-simulations trick GPU Monte Carlo
+//! codes use to saturate wide devices, applied to CPU vector units.
+//!
+//! ```text
+//! clients ──JSON-lines──▶ admission ─▶ shape buckets ─▶ lane batches ─▶ SweepPool
+//!    ▲                   (validate)    (FIFO per shape,  (W jobs per      (persistent
+//!    └──── result lines ◀── engine ◀── deadline flush)    C-rung batch)    workers)
+//! ```
+//!
+//! * Full buckets dispatch immediately (lane fill 1); stragglers flush
+//!   on a deadline — ≥ 2 as a padded batch, a lone job on a scalar A.2
+//!   sweeper — so time-to-dispatch is bounded and every shape is
+//!   servable (admission caps per-job work, bounding the rounds too).
+//! * Results stream back per job as batches complete, **bit-exact** to a
+//!   standalone scalar A.2 run with the same seed (the C-rung
+//!   differential contract).
+//! * [`metrics::ServiceMetrics`] exposes queue depth, batch occupancy
+//!   and the lane-fill ratio — the service-level analogue of the paper's
+//!   "fraction of vector width utilized".
+//!
+//! Frontends: `repro serve --listen HOST:PORT` (TCP JSON-lines) or
+//! `repro serve` (stdin/stdout); `repro submit` is the client and
+//! `repro job-run` the scalar bit-exactness oracle.
+
+pub mod batcher;
+pub mod engine;
+pub mod executor;
+pub mod job;
+pub mod metrics;
+pub mod server;
+
+use crate::sweep::ExpMode;
+
+/// Configuration of one service instance.
+#[derive(Copy, Clone, Debug)]
+pub struct ServiceConfig {
+    /// SIMD lanes per batch: 4 or 8 (default: the widest backend this
+    /// host has hand-written code for).
+    pub lanes: usize,
+    /// Sweep-pool worker threads (1 = dispatches run inline on the
+    /// scheduler thread).
+    pub threads: usize,
+    /// Flush deadline in milliseconds: a shape bucket older than this
+    /// dispatches even when not full, bounding job latency.
+    pub flush_ms: u64,
+    /// Exponential mode (`Fast` by default — bit-exact to the scalar
+    /// A.2 reference either way).
+    pub exp: ExpMode,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            lanes: crate::simd::widest_supported_width(),
+            threads: 1,
+            flush_ms: 25,
+            exp: ExpMode::Fast,
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Wire frontends of the sampling service: a TCP JSON-lines server, a
+//! stdin/stdout mode, and the client used by `repro submit`.
+//!
+//! Protocol (per connection): the client writes request lines (jobs or
+//! control ops), the server streams back one result line per job as its
+//! lane-batch completes (order not guaranteed — correlate by `id`), plus
+//! immediate replies for control ops.  When the client half-closes its
+//! write side, the server finishes answering that connection's jobs and
+//! then closes — so "read until EOF" collects exactly the results.
+//!
+//! `{"op":"shutdown"}` stops accepting, waits for open connections,
+//! drains the queue and returns from [`serve_tcp`].
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::util::json::Value;
+use crate::Result;
+
+use super::engine::{self, Submission};
+use super::job::{parse_request, JobResult, Request};
+use super::metrics::ServiceMetrics;
+use super::ServiceConfig;
+
+/// Serve sampling jobs on `listener` until a shutdown request.
+pub fn serve_tcp(listener: TcpListener, cfg: &ServiceConfig) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let engine = engine::start(cfg)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut connections: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut accept_error: Option<std::io::Error> = None;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let submitter = engine.submitter();
+                let metrics = Arc::clone(&engine.metrics);
+                let flag = Arc::clone(&shutdown);
+                connections.push(thread::spawn(move || {
+                    let _ = handle_conn(stream, submitter, metrics, flag);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Reap finished connection threads so a long-lived server
+                // does not accumulate handles without bound.
+                connections.retain(|conn| !conn.is_finished());
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                // Flag the connections down too, or their submitter
+                // clones would keep the engine from draining.
+                shutdown.store(true, Ordering::SeqCst);
+                accept_error = Some(e);
+            }
+        }
+    }
+    // Stop accepting; open connections poll the shutdown flag and wind
+    // down, then the engine drains whatever is still queued.
+    for conn in connections {
+        let _ = conn.join();
+    }
+    engine.shutdown();
+    match accept_error {
+        Some(e) => Err(e.into()),
+        None => Ok(()),
+    }
+}
+
+/// Serve from stdin, streaming result lines to stdout; returns at EOF
+/// (or a shutdown op) once the queue has drained.
+pub fn serve_stdin(cfg: &ServiceConfig) -> Result<()> {
+    let engine = engine::start(cfg)?;
+    let (line_tx, line_rx) = channel::<String>();
+    let writer = thread::spawn(move || {
+        let stdout = std::io::stdout();
+        for line in line_rx {
+            let mut out = stdout.lock();
+            let _ = out.write_all(line.as_bytes());
+            let _ = out.write_all(b"\n");
+            let _ = out.flush();
+        }
+    });
+    let submitter = engine.submitter();
+    let shutdown = AtomicBool::new(false);
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if !line.is_empty() {
+            handle_line(line, &submitter, &line_tx, &engine.metrics, &shutdown);
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    drop(line_tx);
+    drop(submitter);
+    engine.shutdown(); // drains queued jobs; their reply clones then drop
+    let _ = writer.join();
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    submitter: Sender<Submission>,
+    metrics: Arc<ServiceMetrics>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    // Short read timeouts let the reader poll the shutdown flag.
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let write_half = stream.try_clone()?;
+    let (line_tx, line_rx) = channel::<String>();
+    let writer = thread::spawn(move || {
+        let mut out = BufWriter::new(write_half);
+        for line in line_rx {
+            if out.write_all(line.as_bytes()).is_err()
+                || out.write_all(b"\n").is_err()
+                || out.flush().is_err()
+            {
+                break;
+            }
+        }
+        if let Ok(inner) = out.into_inner() {
+            let _ = inner.shutdown(Shutdown::Write);
+        }
+    });
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // client half-closed: no more requests
+            Ok(_) => {
+                let line = buf.trim();
+                if !line.is_empty() {
+                    handle_line(line, &submitter, &line_tx, &metrics, &shutdown);
+                }
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // The writer exits once the engine has answered every job this
+    // connection submitted (each pending job holds a sender clone).
+    drop(line_tx);
+    drop(submitter);
+    let _ = writer.join();
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    submitter: &Sender<Submission>,
+    line_tx: &Sender<String>,
+    metrics: &ServiceMetrics,
+    shutdown: &AtomicBool,
+) {
+    match parse_request(line) {
+        Ok(Request::Job(spec)) => {
+            let sub = Submission { spec, reply: line_tx.clone() };
+            if let Err(e) = submitter.send(sub) {
+                let _ = line_tx.send(JobResult::error_line(&e.0.spec.id, "service shutting down"));
+            }
+        }
+        Ok(Request::Stats) => {
+            let _ = line_tx.send(metrics.snapshot_json());
+        }
+        Ok(Request::Shutdown) => {
+            shutdown.store(true, Ordering::SeqCst);
+            let _ = line_tx.send("{\"op\":\"shutdown\",\"ok\":true}".to_string());
+        }
+        Err(e) => {
+            metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            // Echo the id back when the line was at least valid JSON.
+            let id = Value::parse(line)
+                .ok()
+                .and_then(|v| v.opt("id").and_then(|x| x.as_str().ok().map(String::from)))
+                .unwrap_or_default();
+            let _ = line_tx.send(JobResult::error_line(&id, &format!("{e:#}")));
+        }
+    }
+}
+
+/// `repro submit`: send request lines to a serving `repro serve
+/// --listen`, then stream every response line to `out` until the server
+/// closes the connection.  Returns the number of response lines.
+pub fn submit_lines<I: IntoIterator<Item = String>>(
+    addr: &str,
+    lines: I,
+    out: &mut dyn Write,
+) -> Result<usize> {
+    let stream = TcpStream::connect(addr)?;
+    {
+        let mut w = BufWriter::new(stream.try_clone()?);
+        for line in lines {
+            let line = line.trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        w.flush()?;
+    }
+    stream.shutdown(Shutdown::Write)?;
+    let mut n = 0usize;
+    for line in BufReader::new(stream).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        writeln!(out, "{line}")?;
+        n += 1;
+    }
+    Ok(n)
+}

@@ -393,7 +393,9 @@ pub fn try_make_sweeper_with_exp(
 ) -> crate::Result<Box<dyn Sweeper + Send>> {
     if !kind.supports_layers(model.n_layers) {
         anyhow::bail!(
-            "rung {} needs n_layers divisible by {} with at least 2 layers per section (got {})",
+            "rung {} needs n_layers divisible by {} with at least 2 layers per section (got {}); \
+             the replica-batch C-rungs (c1-replica-batch / c1-replica-batch-w8) vectorize across \
+             the tempering ensemble instead and accept any layers >= 2",
             kind.label(),
             kind.group_width(),
             model.n_layers
@@ -487,6 +489,10 @@ mod tests {
             let wl = torus_workload(4, 4, layers, 1, 0.3);
             let err = try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1);
             assert!(err.is_err(), "layers={layers} should be rejected for W8");
+            // The rejection must name the working alternative: the C-rungs
+            // accept any layers >= 2.
+            let msg = format!("{:#}", err.err().unwrap());
+            assert!(msg.contains("c1-replica-batch"), "message should point at the C-rungs: {msg}");
         }
         let wl = torus_workload(4, 4, 16, 1, 0.3);
         assert!(try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1).is_ok());

@@ -1,0 +1,209 @@
+//! Property tests for the lane-batching scheduler's packing invariants:
+//!
+//! 1. no batch ever mixes incompatible shapes,
+//! 2. FIFO order is preserved within a shape bucket,
+//! 3. the deadline flush fires on a lone job (and never early),
+//! 4. padded lanes never leak into results — a padded batch answers
+//!    exactly its real jobs, each bit-exact to the scalar reference.
+//!
+//! The batcher takes time as a parameter, so the deadline machinery is
+//! driven with a synthetic clock — no sleeps.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use vectorising::service::batcher::{Batcher, Dispatch};
+use vectorising::service::executor::Executor;
+use vectorising::service::job::{JobSpec, ShapeKey};
+use vectorising::sweep::ExpMode;
+
+fn spec(id: &str, shape: (usize, usize, usize), sweeps: usize, seed: u32) -> JobSpec {
+    JobSpec {
+        id: id.to_string(),
+        width: shape.0,
+        height: shape.1,
+        layers: shape.2,
+        model_seed: 7 + seed as u64,
+        jtau: 0.3,
+        sweeps,
+        beta: 0.8,
+        seed,
+        trace_every: 0,
+        want_state: true,
+    }
+}
+
+const SHAPES: [(usize, usize, usize); 3] = [(4, 4, 8), (6, 4, 8), (4, 4, 2)];
+
+/// Deterministic pseudo-random stream of jobs over three shapes.
+fn job_stream(n: usize) -> Vec<JobSpec> {
+    let mut x = 0x2545f491u64;
+    (0..n)
+        .map(|i| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let shape = SHAPES[(x >> 33) as usize % SHAPES.len()];
+            spec(&format!("j{i}"), shape, 10 + (x >> 40) as usize % 20, i as u32)
+        })
+        .collect()
+}
+
+#[test]
+fn batches_never_mix_shapes() {
+    let mut b = Batcher::new(4, Duration::from_millis(50));
+    let t0 = Instant::now();
+    let mut dispatches = Vec::new();
+    for (i, job) in job_stream(120).into_iter().enumerate() {
+        b.push(job, None, t0 + Duration::from_millis(i as u64));
+        dispatches.extend(b.poll(t0 + Duration::from_millis(i as u64)));
+    }
+    // Advance past every deadline: the stragglers flush too.
+    dispatches.extend(b.poll(t0 + Duration::from_secs(10)));
+    assert_eq!(b.queued(), 0);
+    let total: usize = dispatches.iter().map(|d| d.occupancy()).sum();
+    assert_eq!(total, 120, "every job dispatched exactly once");
+    for d in &dispatches {
+        let jobs = match d {
+            Dispatch::Batch(jobs) => {
+                assert!(jobs.len() >= 2 && jobs.len() <= 4, "batch arity");
+                jobs
+            }
+            Dispatch::Single(_) => continue,
+        };
+        let shape0: ShapeKey = jobs[0].spec.shape();
+        assert!(
+            jobs.iter().all(|j| j.spec.shape() == shape0),
+            "a batch must never mix shapes"
+        );
+    }
+}
+
+#[test]
+fn fifo_order_is_preserved_within_a_bucket() {
+    let mut b = Batcher::new(4, Duration::from_millis(50));
+    let t0 = Instant::now();
+    // Interleave two shapes; within each shape the ids are ordered.
+    for i in 0..11 {
+        let shape = SHAPES[i % 2];
+        b.push(spec(&format!("j{i}"), shape, 10, i as u32), None, t0);
+    }
+    let mut dispatches = b.poll(t0);
+    dispatches.extend(b.poll(t0 + Duration::from_secs(1)));
+    let mut per_shape: BTreeMap<ShapeKey, Vec<u64>> = BTreeMap::new();
+    for d in dispatches {
+        for job in d.into_jobs() {
+            per_shape.entry(job.spec.shape()).or_default().push(job.seq);
+        }
+    }
+    assert_eq!(per_shape.len(), 2);
+    for (shape, seqs) in per_shape {
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "bucket {shape} must dispatch FIFO: {seqs:?}");
+    }
+}
+
+#[test]
+fn deadline_flush_fires_on_a_lone_job_and_never_early() {
+    let deadline = Duration::from_millis(100);
+    let mut b = Batcher::new(4, deadline);
+    let t0 = Instant::now();
+    b.push(spec("lone", (4, 4, 8), 10, 1), None, t0);
+    assert_eq!(b.next_deadline(), Some(t0 + deadline));
+    assert!(b.poll(t0).is_empty(), "no flush at admission time");
+    assert!(
+        b.poll(t0 + deadline - Duration::from_millis(1)).is_empty(),
+        "no flush before the deadline"
+    );
+    let ds = b.poll(t0 + deadline);
+    assert_eq!(ds.len(), 1);
+    assert!(matches!(ds[0], Dispatch::Single(_)), "a lone job flushes to the scalar fallback");
+    assert_eq!(b.queued(), 0);
+    assert_eq!(b.next_deadline(), None);
+}
+
+#[test]
+fn deadline_flushes_two_stragglers_as_a_padded_batch() {
+    let deadline = Duration::from_millis(100);
+    let mut b = Batcher::new(4, deadline);
+    let t0 = Instant::now();
+    b.push(spec("s0", (4, 4, 8), 10, 1), None, t0);
+    b.push(spec("s1", (4, 4, 8), 12, 2), None, t0 + Duration::from_millis(30));
+    assert!(b.poll(t0 + Duration::from_millis(99)).is_empty());
+    // The *oldest* job's age controls the flush, not the newest's.
+    let ds = b.poll(t0 + deadline);
+    assert_eq!(ds.len(), 1);
+    match &ds[0] {
+        Dispatch::Batch(jobs) => assert_eq!(jobs.len(), 2, "both stragglers share one batch"),
+        Dispatch::Single(_) => panic!(">= 2 stragglers must go out as a padded batch"),
+    }
+}
+
+/// Padded lanes never leak: a 2-job dispatch at W=4 answers exactly its
+/// two jobs, and each answer is bit-exact to the scalar A.2 reference —
+/// including with different sweep counts inside one batch (the chunked
+/// capture machinery).
+#[test]
+fn padded_lanes_never_leak_into_results() {
+    let exec = Executor::new(4, ExpMode::Fast).unwrap();
+    let a = spec("a", (4, 4, 8), 30, 11);
+    let b = spec("b", (4, 4, 8), 50, 22); // different sweeps, same batch
+    let mut batcher = Batcher::new(4, Duration::from_millis(1));
+    let t0 = Instant::now();
+    batcher.push(a.clone(), None, t0);
+    batcher.push(b.clone(), None, t0);
+    let mut ds = batcher.poll(t0 + Duration::from_secs(1));
+    assert_eq!(ds.len(), 1);
+    let dispatch = ds.remove(0);
+    assert_eq!(dispatch.occupancy(), 2);
+
+    let served = exec.run_dispatch(dispatch);
+    assert_eq!(served.len(), 2, "exactly the real jobs are answered");
+    for (job, outcome) in served {
+        let got = outcome.unwrap();
+        assert_eq!(got.lanes, 4);
+        assert_eq!(got.occupancy, 2);
+        let reference = exec.run_single(&job.spec).unwrap();
+        assert_eq!(got.id, reference.id);
+        assert_eq!(got.stats.flips, reference.stats.flips, "job {}", got.id);
+        assert_eq!(got.stats.attempts, reference.stats.attempts, "job {}", got.id);
+        assert_eq!(
+            got.energy.to_bits(),
+            reference.energy.to_bits(),
+            "job {} energy must be bit-exact to the scalar run",
+            got.id
+        );
+        assert_eq!(got.state, reference.state, "job {} state", got.id);
+    }
+}
+
+/// Energy traces from a lane-batch match the scalar reference, point for
+/// point, even when the trace grid forces extra chunk boundaries.
+#[test]
+fn batched_energy_traces_match_scalar_reference() {
+    let exec = Executor::new(4, ExpMode::Fast).unwrap();
+    let mut a = spec("ta", (4, 4, 8), 40, 31);
+    a.trace_every = 8;
+    let mut b = spec("tb", (4, 4, 8), 25, 32);
+    b.trace_every = 10;
+    let served = exec.run_dispatch(Dispatch::Batch(vec![
+        pending(a.clone()),
+        pending(b.clone()),
+    ]));
+    for (job, outcome) in served {
+        let got = outcome.unwrap();
+        let reference = exec.run_single(&job.spec).unwrap();
+        assert_eq!(got.energy_trace.len(), reference.energy_trace.len(), "job {}", got.id);
+        for (x, y) in got.energy_trace.iter().zip(&reference.energy_trace) {
+            assert_eq!(x.to_bits(), y.to_bits(), "job {} trace point", got.id);
+        }
+    }
+}
+
+fn pending(spec: JobSpec) -> vectorising::service::batcher::PendingJob {
+    vectorising::service::batcher::PendingJob {
+        spec,
+        reply: None,
+        enqueued: Instant::now(),
+        seq: 0,
+    }
+}

@@ -1,0 +1,143 @@
+//! End-to-end acceptance test of the sampling service (ISSUE 3): submit
+//! ≥ 2×W jobs of two different shapes to a *running* service over TCP
+//! and require
+//!
+//! * one result line per job, each **bit-exact** (energy bits, flip
+//!   counts, final state) to a standalone scalar A.2 run with the same
+//!   seed, and
+//! * a reported lane-fill ratio > 0.9 for the uniform-shape stream.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::thread;
+
+use vectorising::service::executor::Executor;
+use vectorising::service::job::{JobResult, JobSpec};
+use vectorising::service::{server, ServiceConfig};
+use vectorising::simd::widest_supported_width;
+use vectorising::sweep::ExpMode;
+use vectorising::util::json::Value;
+
+fn spec(id: &str, shape: (usize, usize, usize), seed: u32) -> JobSpec {
+    JobSpec {
+        id: id.to_string(),
+        width: shape.0,
+        height: shape.1,
+        layers: shape.2,
+        model_seed: 1 + seed as u64,
+        jtau: 0.3,
+        sweeps: 30 + (seed as usize % 3) * 10, // mixed sweep counts batch too
+        beta: 0.6 + 0.05 * (seed % 4) as f32,
+        seed,
+        trace_every: 0,
+        want_state: true,
+    }
+}
+
+/// Open a connection, send every line, half-close, read lines until the
+/// server closes.
+fn roundtrip(addr: SocketAddr, lines: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+        for line in lines {
+            writeln!(w, "{line}").unwrap();
+        }
+        w.flush().unwrap();
+    }
+    stream.shutdown(Shutdown::Write).unwrap();
+    BufReader::new(stream)
+        .lines()
+        .map(|l| l.unwrap())
+        .filter(|l| !l.trim().is_empty())
+        .collect()
+}
+
+fn assert_bit_exact(served: &[String], reference: &Executor, expect: &[JobSpec]) {
+    let mut by_id: BTreeMap<String, JobResult> = BTreeMap::new();
+    for line in served {
+        let r = JobResult::from_line(line).unwrap_or_else(|e| panic!("{e:#}: {line}"));
+        by_id.insert(r.id.clone(), r);
+    }
+    assert_eq!(by_id.len(), expect.len(), "one result per job");
+    for spec in expect {
+        let got = &by_id[&spec.id];
+        let want = reference.run_single(spec).unwrap();
+        assert_eq!(
+            got.energy.to_bits(),
+            want.energy.to_bits(),
+            "job {}: served energy must be bit-exact to the scalar A.2 run",
+            spec.id
+        );
+        assert_eq!(got.stats.flips, want.stats.flips, "job {}: flips", spec.id);
+        assert_eq!(got.stats.attempts, want.stats.attempts, "job {}: attempts", spec.id);
+        assert_eq!(got.state, want.state, "job {}: final state", spec.id);
+    }
+}
+
+#[test]
+fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
+    let w = widest_supported_width();
+    // A long flush deadline, so a slow CI machine cannot split a full
+    // bucket into padded flushes: full batches dispatch immediately, and
+    // only the phase-2 lone job pays the deadline.
+    let cfg = ServiceConfig { lanes: w, threads: 2, flush_ms: 300, exp: ExpMode::Fast };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+    let reference = Executor::new(w, ExpMode::Fast).unwrap();
+
+    // Phase 1 — uniform-shape stream: 2W jobs of one shape -> two full
+    // lane-batches, lane fill 1.0.
+    let uniform: Vec<JobSpec> =
+        (0..2 * w).map(|i| spec(&format!("u{i}"), (4, 4, 8), 100 + i as u32)).collect();
+    let served = roundtrip(addr, &uniform.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_bit_exact(&served, &reference, &uniform);
+    for line in &served {
+        let r = JobResult::from_line(line).unwrap();
+        assert!(r.kind.starts_with("C.1"), "uniform job served by a C-rung, got {}", r.kind);
+        assert_eq!(r.lanes, w);
+        assert_eq!(r.occupancy, w, "uniform stream must fill whole batches");
+    }
+    let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
+    assert_eq!(stats.len(), 1);
+    let v = Value::parse(&stats[0]).unwrap();
+    let fill = v.get("lane_fill_ratio").unwrap().as_f64().unwrap();
+    assert!(fill > 0.9, "uniform-shape stream must report lane fill > 0.9, got {fill}");
+    assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), 2 * w);
+
+    // Phase 2 — mixed shapes: a second full-width shape (shallow
+    // layers=2, which the A-rungs reject) plus a lone odd shape that
+    // must fall back to the scalar path.
+    let mut mixed: Vec<JobSpec> =
+        (0..w).map(|i| spec(&format!("m{i}"), (4, 4, 2), 200 + i as u32)).collect();
+    mixed.push(spec("lone", (6, 4, 8), 300));
+    let served = roundtrip(addr, &mixed.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_bit_exact(&served, &reference, &mixed);
+    for line in &served {
+        let r = JobResult::from_line(line).unwrap();
+        if r.id == "lone" {
+            assert_eq!(r.kind, "A.2", "a peerless job falls back to the scalar rung");
+            assert_eq!(r.occupancy, 1);
+        } else {
+            assert!(r.kind.starts_with("C.1"), "shallow jobs batch on the C-rungs");
+        }
+    }
+
+    // Malformed and invalid lines get error results, not silence.
+    let errs = roundtrip(
+        addr,
+        &["not json".to_string(), r#"{"id":"bad","layers":1}"#.to_string()],
+    );
+    assert_eq!(errs.len(), 2);
+    for line in &errs {
+        let v = Value::parse(line).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str().unwrap(), "error");
+    }
+
+    // Shutdown stops the server; serve_tcp returns cleanly.
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
