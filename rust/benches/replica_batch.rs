@@ -18,7 +18,7 @@ mod support;
 
 use vectorising::ising::builder::torus_workload;
 use vectorising::simd::{avx2_available, widest_supported_width};
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 use vectorising::tempering::{BatchedPtEnsemble, Ladder};
 
 const N_REPLICAS: usize = 115;
@@ -38,7 +38,7 @@ fn time_per_replica(kind: SweepKind, sc: &Scenario, ladder: &Ladder) -> Option<V
         return None;
     }
     let mut sweepers: Vec<Box<dyn Sweeper + Send>> = (0..N_REPLICAS)
-        .map(|i| make_sweeper(kind, &wl.model, &wl.s0, 1 + 1000 * i as u32).unwrap())
+        .map(|i| try_make_sweeper(kind, &wl.model, &wl.s0, 1 + 1000 * i as u32).unwrap())
         .collect();
     // settle into a representative flip regime
     for (i, sw) in sweepers.iter_mut().enumerate() {

@@ -8,7 +8,7 @@ mod support;
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
 use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 
 const SWEEPS: usize = 100;
 const REPS: usize = 10;
@@ -20,7 +20,7 @@ fn main() {
 
     for kind in SweepKind::all_cpu_wide() {
         let wl = torus_workload(8, 8, 32, 1, 0.3);
-        let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+        let mut sw = try_make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
         sw.run(20, beta);
         let secs = support::time_reps(1, REPS, || {
             sw.run(SWEEPS, beta);

@@ -11,7 +11,7 @@ mod support;
 
 use vectorising::ising::builder::torus_workload;
 use vectorising::simd::{avx2_available, widest_supported_width};
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 
 const SWEEPS: usize = 40;
 const REPS: usize = 8;
@@ -21,7 +21,7 @@ fn time_kind(kind: SweepKind, beta: f32) -> (Vec<f64>, f64) {
     // (256 is divisible by both widths with >= 2 layers per section).
     let wl = torus_workload(12, 8, 256, 1, 0.3);
     let updates = (SWEEPS * wl.model.n_spins()) as f64;
-    let mut sw = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    let mut sw = try_make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
     sw.run(10, beta); // reach a representative flip regime
     let secs = support::time_reps(1, REPS, || {
         sw.run(SWEEPS, beta);

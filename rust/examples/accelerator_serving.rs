@@ -11,10 +11,11 @@
 
 use std::time::Instant;
 
+use vectorising::engine::{EngineBuilder, Rung};
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
 use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::Sweeper;
 
 fn main() -> vectorising::Result<()> {
     let dir = artifact::default_dir();
@@ -54,7 +55,9 @@ fn main() -> vectorising::Result<()> {
 
     // Native fully-vectorized CPU rung for comparison (paper: A.4 on 8
     // cores beats the GPU by 2.04x; on 1 core it roughly ties 4 GPU-ish).
-    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    let mut a4 = EngineBuilder::new(Rung::A4.spec().w(4))
+        .build(&wl.model, &wl.s0, 5489)
+        .expect("cpu sweeper");
     a4.run(10, beta);
     let t0 = Instant::now();
     let stats = a4.run(sweeps, beta);

@@ -1,0 +1,65 @@
+//! The paper's story in one binary: run the same workload through every
+//! CPU rung of the optimization ladder and print the speedups
+//! (a miniature of Fig 13 / Table 2).
+//!
+//! Each row is a `SamplerSpec` — the rung and lane width are orthogonal
+//! axes, and the negotiated `Plan` names the backend that actually ran.
+//!
+//! ```bash
+//! cargo run --release --example optimization_ladder
+//! ```
+
+use std::time::Instant;
+
+use vectorising::engine::{EngineBuilder, Rung, SamplerSpec};
+use vectorising::ising::builder::torus_workload;
+use vectorising::sweep::Sweeper;
+
+fn main() {
+    let sweeps = 300;
+    let beta = 0.8f32;
+    println!("timing {sweeps} sweeps of a 64x32 (2,048-spin) model per rung\n");
+
+    let mut ladder: Vec<SamplerSpec> = vec![
+        Rung::A1.spec(),
+        Rung::A2.spec(),
+        Rung::A3.spec().w(4),
+        Rung::A4.spec().w(4),
+    ];
+    // The width-8 (and portable width-16) rows ride along when the layer
+    // count supports the interlacing — no new enum variants needed.
+    for wide in [Rung::A3.spec().w(8), Rung::A4.spec().w(8), Rung::A4.spec().w(16)] {
+        if EngineBuilder::new(wide).layers(32).plan().is_ok() {
+            ladder.push(wide);
+        }
+    }
+
+    let mut results = Vec::new();
+    for spec in ladder {
+        let wl = torus_workload(8, 8, 32, 1, 0.3);
+        let mut sw = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 5489).expect("cpu sweeper");
+        sw.run(20, beta); // warm-up
+        let t0 = Instant::now();
+        let stats = sw.run(sweeps, beta);
+        let dt = t0.elapsed().as_secs_f64();
+        let per_update = dt / (sweeps as f64 * wl.model.n_spins() as f64) * 1e9;
+        let label = format!("{} [{}]", sw.plan.label(), sw.plan.backend);
+        results.push((label, dt, per_update, stats.flip_prob(), sw.energy()));
+    }
+
+    let baseline = results[0].1;
+    println!(
+        "{:18} {:>9} {:>12} {:>9} {:>10} {:>10}",
+        "rung [backend]", "seconds", "ns/update", "speedup", "P(flip)", "energy"
+    );
+    for (label, dt, per_update, pflip, energy) in &results {
+        println!(
+            "{label:18} {dt:9.3} {per_update:12.2} {:8.2}x {pflip:10.4} {energy:10.1}",
+            baseline / dt
+        );
+    }
+    println!(
+        "\npaper (Table 2, 1 core): A.2b = 3.16x over A.1b, A.3 = 5.95x, A.4 = 10.0x (1/0.1)"
+    );
+    println!("paper's exact A.1b row: A.2b 3.748x, A.3 7.053x, A.4 11.860x");
+}

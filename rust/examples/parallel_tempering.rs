@@ -15,8 +15,8 @@
 //! ```
 
 use vectorising::coordinator::{self, RunConfig};
+use vectorising::engine::Rung;
 use vectorising::stats::wait_probability;
-use vectorising::sweep::SweepKind;
 
 fn main() -> vectorising::Result<()> {
     // Scaled version of the paper's benchmark: 24 replicas x 2,048 spins
@@ -40,7 +40,9 @@ fn main() -> vectorising::Result<()> {
         cfg.total_updates()
     );
 
-    let report = coordinator::run(&cfg, SweepKind::A4Full)?;
+    // The coordinator takes a SamplerSpec: rung A.4 pinned at the
+    // paper's 4 lanes (the w=4 columns below), backend negotiated.
+    let report = coordinator::run(&cfg, Rung::A4.spec().w(4))?;
 
     println!(
         "\nwall {:.2}s | {:.2}M spin-updates/s | swap acceptance {:.3}",

@@ -1,12 +1,13 @@
-//! Quickstart: build a layered QMC Ising workload, run the fully
-//! vectorized A.4 sweep engine, and watch the energy relax.
+//! Quickstart: build a layered QMC Ising workload, negotiate a sampler
+//! through the Engine API v1, and watch the energy relax.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use vectorising::engine::{EngineBuilder, Rung, SamplerSpec};
 use vectorising::ising::builder::torus_workload;
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::Sweeper;
 
 fn main() {
     // 8x8 torus base graph (64 spins/layer), 32 layers -> 2,048 spins.
@@ -19,16 +20,22 @@ fn main() {
         wl.model.base.edges.len()
     );
 
-    // The widest rung this host has a backend for (A.4w8 on AVX2 CPUs).
-    let kind = SweepKind::preferred_cpu();
-    println!("rung: {} ({} lanes)", kind.label(), kind.group_width());
-    let mut sim = make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    // Express intent (rung A.4, width and backend negotiated), and the
+    // builder picks the instruction set this host actually has.
+    let spec = SamplerSpec::rung(Rung::A4);
+    let mut sim = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    println!(
+        "plan: {} — backend {}, {} lanes",
+        sim.plan.label(),
+        sim.plan.backend,
+        sim.plan.width
+    );
     let beta = 1.2f32;
     println!("initial energy: {:.2}", sim.energy());
     for round in 1..=10 {
         let stats = sim.run(50, beta);
         println!(
-            "after {:4} sweeps: E = {:9.2}   P(flip) = {:.4}   quad wait = {:.4}",
+            "after {:4} sweeps: E = {:9.2}   P(flip) = {:.4}   group wait = {:.4}",
             round * 50,
             sim.energy(),
             stats.flip_prob(),

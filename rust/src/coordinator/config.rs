@@ -97,7 +97,12 @@ impl RunConfig {
     /// layer count ≥ 2 — including the shallow models the A-ladder
     /// geometry rule exists for.  Every other rung keeps [`Self::validate`].
     pub fn validate_for(&self, kind: SweepKind) -> crate::Result<()> {
-        if !kind.is_replica_batch() {
+        self.validate_for_spec(&kind.spec())
+    }
+
+    /// [`Self::validate_for`] on the orthogonal spec surface.
+    pub fn validate_for_spec(&self, spec: &crate::engine::SamplerSpec) -> crate::Result<()> {
+        if !spec.rung.is_replica_batch() {
             return self.validate();
         }
         if self.layers < 2 {
@@ -143,8 +148,14 @@ pub struct RungTiming {
 
 impl RungTiming {
     pub fn new(kind: SweepKind, threads: usize, seconds: f64, sweeps: usize, updates: u64) -> Self {
+        Self::labeled(kind.label(), threads, seconds, sweeps, updates)
+    }
+
+    /// [`Self::new`] from a negotiated plan label (covers widths the
+    /// legacy enum cannot spell, e.g. `A.4w16`).
+    pub fn labeled(label: &str, threads: usize, seconds: f64, sweeps: usize, updates: u64) -> Self {
         Self {
-            kind: kind.label().to_string(),
+            kind: label.to_string(),
             threads,
             seconds,
             sweeps,

@@ -18,8 +18,9 @@ pub use config::{RunConfig, RungTiming};
 pub use metrics::{RunReport, Timer};
 pub use scheduler::{PoolStats, SweepPool};
 
+use crate::engine::{EngineBuilder, SamplerSpec};
 use crate::ising::builder::{torus_workload, Workload};
-use crate::sweep::{make_sweeper, ExpMode, SweepKind, Sweeper};
+use crate::sweep::{ExpMode, Sweeper};
 use crate::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
 use crate::Result;
 
@@ -32,49 +33,65 @@ pub fn build_workloads(cfg: &RunConfig) -> Vec<Workload> {
         .collect()
 }
 
-/// Build a CPU-rung ensemble for the configuration.
-pub fn build_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<PtEnsemble> {
-    cfg.validate()?;
+/// Build a CPU-rung ensemble for the configuration.  Takes anything that
+/// lowers onto a [`SamplerSpec`] — a spec or a legacy
+/// [`crate::sweep::SweepKind`]; every replica is constructed through the
+/// capability-negotiated [`EngineBuilder`].
+pub fn build_ensemble(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<PtEnsemble> {
+    let spec = spec.into();
+    cfg.validate_for_spec(&spec)?;
     let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
     let replicas: Vec<Box<dyn Sweeper + Send>> = build_workloads(cfg)
         .iter()
         .enumerate()
-        .map(|(i, wl)| make_sweeper(kind, &wl.model, &wl.s0, cfg.seed as u32 + 1000 * i as u32))
+        .map(|(i, wl)| {
+            EngineBuilder::new(spec)
+                .build(&wl.model, &wl.s0, cfg.seed as u32 + 1000 * i as u32)
+                .map(|e| e.into_sweeper())
+        })
         .collect::<Result<_>>()?;
     Ok(PtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a))
 }
 
 /// Build a lane-batched C-rung ensemble for the configuration: the same
 /// ladder, workloads and per-replica seed convention as
-/// [`build_ensemble`], grouped into `group_width()`-lane batches.
-pub fn build_batched_ensemble(cfg: &RunConfig, kind: SweepKind) -> Result<BatchedPtEnsemble> {
-    build_batched_ensemble_with_exp(cfg, kind, kind.default_exp())
+/// [`build_ensemble`], grouped into plan-width lane batches.
+pub fn build_batched_ensemble(
+    cfg: &RunConfig,
+    spec: impl Into<SamplerSpec>,
+) -> Result<BatchedPtEnsemble> {
+    let spec = spec.into();
+    let exp = EngineBuilder::new(spec).layers(cfg.layers).plan()?.exp;
+    build_batched_ensemble_with_exp(cfg, spec, exp)
 }
 
 /// [`build_batched_ensemble`] with an explicit exponential mode (tests
 /// use this to align lane trajectories with the scalar rungs).
 pub fn build_batched_ensemble_with_exp(
     cfg: &RunConfig,
-    kind: SweepKind,
+    spec: impl Into<SamplerSpec>,
     exp: ExpMode,
 ) -> Result<BatchedPtEnsemble> {
-    cfg.validate_for(kind)?;
+    let spec = spec.into();
+    cfg.validate_for_spec(&spec)?;
     let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
     let workloads = build_workloads(cfg);
     let models: Vec<_> = workloads.iter().map(|wl| wl.model.clone()).collect();
     let states: Vec<_> = workloads.iter().map(|wl| wl.s0.clone()).collect();
     let seeds: Vec<u32> = (0..cfg.n_models).map(|i| cfg.seed as u32 + 1000 * i as u32).collect();
-    BatchedPtEnsemble::new(ladder, kind, &models, &states, &seeds, cfg.seed as u32 ^ 0x5a5a, exp)
+    BatchedPtEnsemble::new(ladder, spec, &models, &states, &seeds, cfg.seed as u32 ^ 0x5a5a, exp)
 }
 
 /// Run a full simulation: rounds of (parallel sweep batch, exchange) over
 /// one persistent [`SweepPool`] held across all rounds.  Replica-batch
-/// (C-rung) kinds run through the lane-batched ensemble.
-pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
-    if kind.is_replica_batch() {
-        return run_batched(cfg, kind);
+/// (`c1`) specs run through the lane-batched ensemble.
+pub fn run(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
+    let spec = spec.into();
+    if spec.rung.is_replica_batch() {
+        return run_batched(cfg, spec);
     }
-    let mut pt = build_ensemble(cfg, kind)?;
+    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
+    let mut pt = build_ensemble(cfg, spec)?;
     let pool = scheduler::SweepPool::new(cfg.threads);
     let timer = Timer::start();
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
@@ -87,7 +104,7 @@ pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
     let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
         pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
     Ok(RunReport::from_stats(
-        kind.label(),
+        &plan.label(),
         cfg.threads,
         cfg.sweeps,
         wall,
@@ -100,8 +117,10 @@ pub fn run(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
 /// [`run`] over the lane-batched ensemble: one pool job per lane-batch,
 /// exchanges (across batch boundaries included) on the coordinator
 /// thread.
-pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
-    let mut pt = build_batched_ensemble(cfg, kind)?;
+pub fn run_batched(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
+    let spec = spec.into();
+    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
+    let mut pt = build_batched_ensemble(cfg, spec)?;
     let pool = scheduler::SweepPool::new(cfg.threads);
     let timer = Timer::start();
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
@@ -114,7 +133,7 @@ pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
     let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
         pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
     Ok(RunReport::from_stats(
-        kind.label(),
+        &plan.label(),
         cfg.threads,
         cfg.sweeps,
         wall,
@@ -128,28 +147,37 @@ pub fn run_batched(cfg: &RunConfig, kind: SweepKind) -> Result<RunReport> {
 /// paper's §4 measurement times the Metropolis sweeps themselves; PT
 /// bookkeeping is excluded like the paper excludes its multi-threading
 /// machinery from the per-sweep analysis).
-pub fn time_sweeps(cfg: &RunConfig, kind: SweepKind) -> Result<RungTiming> {
+pub fn time_sweeps(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RungTiming> {
+    let spec = spec.into();
+    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
     let pool = scheduler::SweepPool::new(cfg.threads);
-    if kind.is_replica_batch() {
-        let mut pt = build_batched_ensemble(cfg, kind)?;
+    if spec.rung.is_replica_batch() {
+        let mut pt = build_batched_ensemble(cfg, spec)?;
         scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
         let timer = Timer::start();
         scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps, &pool);
         let wall = timer.seconds();
-        return Ok(RungTiming::new(kind, cfg.threads, wall, cfg.sweeps, cfg.total_updates()));
+        return Ok(RungTiming::labeled(
+            &plan.label(),
+            cfg.threads,
+            wall,
+            cfg.sweeps,
+            cfg.total_updates(),
+        ));
     }
-    let mut pt = build_ensemble(cfg, kind)?;
+    let mut pt = build_ensemble(cfg, spec)?;
     // Warm caches and reach a representative flip regime first.
     scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
     let timer = Timer::start();
     scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps, &pool);
     let wall = timer.seconds();
-    Ok(RungTiming::new(kind, cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
+    Ok(RungTiming::labeled(&plan.label(), cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sweep::SweepKind;
 
     fn small() -> RunConfig {
         RunConfig { n_models: 4, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() }

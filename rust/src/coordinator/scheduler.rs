@@ -344,7 +344,7 @@ pub fn parallel_sweep(pt: &mut PtEnsemble, n_sweeps: usize, n_threads: usize) {
 mod tests {
     use super::*;
     use crate::ising::builder::torus_workload;
-    use crate::sweep::{make_sweeper, ExpMode, SweepKind};
+    use crate::sweep::{try_make_sweeper, ExpMode, SweepKind};
     use crate::tempering::{BatchedPtEnsemble, Ladder};
 
     fn ensemble(n: usize, kind: SweepKind) -> PtEnsemble {
@@ -352,7 +352,7 @@ mod tests {
         let replicas = (0..n)
             .map(|i| {
                 let wl = torus_workload(4, 4, 8, 21, 0.3);
-                make_sweeper(kind, &wl.model, &wl.s0, 500 + i as u32).unwrap()
+                try_make_sweeper(kind, &wl.model, &wl.s0, 500 + i as u32).unwrap()
             })
             .collect();
         PtEnsemble::new(ladder, replicas, 1234)

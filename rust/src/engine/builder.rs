@@ -1,0 +1,662 @@
+//! [`EngineBuilder`]: resolve a [`SamplerSpec`] against host capabilities
+//! and model geometry into a [`Plan`], then instantiate the sweeper.
+//!
+//! This is the crate's **single dispatch point**: the legacy
+//! `sweep::try_make_sweeper*` constructors, `make_batch_sweeper`, the
+//! coordinator, the CLI and the sampling service all build through here,
+//! so the `VECTORISING_FORCE_PORTABLE` override, AVX2 detection and the
+//! layer-interlacing geometry rule each live in exactly one place.
+
+use crate::ising::QmcModel;
+use crate::sweep::c1_replica_batch::{BatchSweeper, C1ReplicaBatch};
+use crate::sweep::{a1_original, a2_basic, a3_vecrng, a4_full, ExpMode, Sweeper};
+use crate::Result;
+
+use super::error::UnsupportedGeometry;
+use super::plan::{Backend, GroupLayout, Plan, Rejection, Resolved};
+use super::{BackendPref, Rung, SamplerSpec, Width};
+
+/// A negotiated single-model engine: the [`Plan`] plus the sweeper it
+/// instantiated.  Derefs to the sweeper, so `engine.run(n, beta)` works
+/// directly.
+pub struct Engine {
+    pub plan: Plan,
+    sweeper: Box<dyn Sweeper + Send>,
+}
+
+impl Engine {
+    pub fn into_sweeper(self) -> Box<dyn Sweeper + Send> {
+        self.sweeper
+    }
+
+    pub fn into_parts(self) -> (Plan, Box<dyn Sweeper + Send>) {
+        (self.plan, self.sweeper)
+    }
+}
+
+impl std::ops::Deref for Engine {
+    type Target = Box<dyn Sweeper + Send>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.sweeper
+    }
+}
+
+impl std::ops::DerefMut for Engine {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.sweeper
+    }
+}
+
+/// A negotiated lane-batch engine (the C-rung): the [`Plan`] plus the
+/// batch sweeper.  Derefs to the batch sweeper.
+pub struct BatchEngine {
+    pub plan: Plan,
+    sweeper: Box<dyn BatchSweeper + Send>,
+}
+
+impl BatchEngine {
+    pub fn into_sweeper(self) -> Box<dyn BatchSweeper + Send> {
+        self.sweeper
+    }
+
+    pub fn into_parts(self) -> (Plan, Box<dyn BatchSweeper + Send>) {
+        (self.plan, self.sweeper)
+    }
+}
+
+impl std::ops::Deref for BatchEngine {
+    type Target = Box<dyn BatchSweeper + Send>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.sweeper
+    }
+}
+
+impl std::ops::DerefMut for BatchEngine {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        &mut self.sweeper
+    }
+}
+
+/// Resolves specs into plans and plans into sweepers.
+#[derive(Copy, Clone, Debug)]
+pub struct EngineBuilder {
+    spec: SamplerSpec,
+    layers: Option<usize>,
+    exp: Option<ExpMode>,
+}
+
+impl EngineBuilder {
+    pub fn new(spec: impl Into<SamplerSpec>) -> Self {
+        Self { spec: spec.into(), layers: None, exp: None }
+    }
+
+    /// Supply the model geometry (layer count) so the plan can apply the
+    /// interlacing rules.  [`Self::build`] takes it from the model
+    /// automatically; call this when you only want a [`Plan`].
+    pub fn layers(mut self, n_layers: usize) -> Self {
+        self.layers = Some(n_layers);
+        self
+    }
+
+    /// Override the exponential mode (default: the rung's paper default —
+    /// exact for A.1, fast elsewhere).
+    pub fn exp(mut self, exp: ExpMode) -> Self {
+        self.exp = Some(exp);
+        self
+    }
+
+    /// Negotiate the spec against host capabilities (and the layer count
+    /// when one was supplied) without building anything.
+    pub fn plan(&self) -> Result<Plan> {
+        resolve(self.spec, self.layers, self.exp)
+    }
+
+    /// Negotiate against `model`'s geometry and instantiate a
+    /// single-model sweeper (the A-rungs; C/B rungs explain where to go
+    /// instead).
+    pub fn build(&self, model: &QmcModel, s0: &[f32], seed: u32) -> Result<Engine> {
+        let plan = resolve(self.spec, Some(model.n_layers), self.exp)?;
+        let sweeper = instantiate(plan.resolved(), model, s0, seed, plan.exp)?;
+        Ok(Engine { plan, sweeper })
+    }
+
+    /// Negotiate and instantiate a C-rung lane-batch over `models[k]`
+    /// starting from `states[k]`, lane `k` seeded with `seeds[k]`.
+    pub fn build_batch(
+        &self,
+        models: &[QmcModel],
+        states: &[Vec<f32>],
+        seeds: &[u32],
+    ) -> Result<BatchEngine> {
+        anyhow::ensure!(!models.is_empty(), "cannot build a lane-batch over zero models");
+        let mut this = *self;
+        this.layers = Some(models[0].n_layers);
+        let plan = this.plan()?;
+        let sweeper = instantiate_batch(plan.resolved(), models, states, seeds, plan.exp)?;
+        Ok(BatchEngine { plan, sweeper })
+    }
+}
+
+/// The A-rung interlacing rule: `w` sections of at least 2 layers each.
+/// The single source of the geometry predicate —
+/// `SweepKind::supports_layers` delegates here.
+pub(crate) fn interlace_ok(layers: usize, w: usize) -> bool {
+    layers % w == 0 && layers / w >= 2
+}
+
+/// Widths with a monomorphized vector backend (4 and 8 have intrinsic
+/// implementations; 16 is portable-only but compiled in, which is what
+/// makes `--width 16` work without any new enum variant).
+const MONO_WIDTHS: [usize; 3] = [4, 8, 16];
+
+/// Candidate lane widths for a vector rung, preference order.
+fn candidate_widths(width: Width, pref: BackendPref) -> Vec<usize> {
+    match width {
+        Width::W(n) => vec![n],
+        Width::Auto => match pref {
+            BackendPref::Avx2 => vec![8],
+            // Parity with the legacy dispatch: auto width under an
+            // explicit SSE2/portable preference is the paper's 4 lanes.
+            BackendPref::Sse2 | BackendPref::Portable => vec![4],
+            _ => {
+                if crate::simd::widest_supported_width() == 8 {
+                    vec![8, 4]
+                } else {
+                    vec![4]
+                }
+            }
+        },
+    }
+}
+
+/// Resolve the backend for one `(rung, width)` candidate.  `Ok` may carry
+/// a fallback [`Rejection`] documenting a downgraded first choice (e.g.
+/// AVX2 missing at width 8).
+fn resolve_backend(
+    rung: Rung,
+    pref: BackendPref,
+    w: usize,
+) -> std::result::Result<(Backend, Option<Rejection>), Rejection> {
+    let rej = |code: &'static str, reason: String| Rejection { rung, width: w, code, reason };
+    let on_x86 = cfg!(target_arch = "x86_64");
+    match pref {
+        BackendPref::Auto => {
+            if on_x86 && w == 4 {
+                return Ok((Backend::Sse2, None));
+            }
+            if on_x86 && w == 8 {
+                if crate::simd::avx2_available() {
+                    return Ok((Backend::Avx2, None));
+                }
+                return Ok((
+                    Backend::Portable,
+                    Some(rej(
+                        "no-avx2",
+                        "host does not report AVX2; falling back to portable 8-lane code".into(),
+                    )),
+                ));
+            }
+            Ok((
+                Backend::Portable,
+                Some(rej(
+                    "no-intrinsics",
+                    format!("no hand-written intrinsic backend at width {w}; portable lanes"),
+                )),
+            ))
+        }
+        BackendPref::Sse2 => {
+            if !on_x86 {
+                Err(rej("backend-mismatch", "sse2 requires an x86_64 host".into()))
+            } else if w == 4 {
+                Ok((Backend::Sse2, None))
+            } else {
+                Err(rej(
+                    "backend-mismatch",
+                    format!("the sse2 backend is 4-lane (requested width {w})"),
+                ))
+            }
+        }
+        BackendPref::Avx2 => {
+            if w != 8 {
+                return Err(rej(
+                    "backend-mismatch",
+                    format!("the avx2 backend is 8-lane (requested width {w})"),
+                ));
+            }
+            if crate::simd::avx2_available() {
+                Ok((Backend::Avx2, None))
+            } else {
+                Err(rej("no-avx2", "host does not report AVX2".into()))
+            }
+        }
+        BackendPref::Portable => Ok((Backend::Portable, None)),
+        BackendPref::Accel => Err(rej(
+            "backend-mismatch",
+            "the accel backend serves only the accelerator rungs (b1/b2)".into(),
+        )),
+    }
+}
+
+/// Alternatives for a geometry rejection, best first.
+fn geometry_alternatives(layers: usize) -> Vec<SamplerSpec> {
+    let mut alts = Vec::new();
+    for w in [8usize, 4] {
+        if interlace_ok(layers, w) && (w == 4 || crate::simd::widest_supported_width() >= 8) {
+            alts.push(SamplerSpec::rung(Rung::A4).w(w));
+        }
+    }
+    if layers >= 2 {
+        alts.push(SamplerSpec::rung(Rung::C1));
+    }
+    alts.push(SamplerSpec::rung(Rung::A2));
+    alts
+}
+
+/// Capability negotiation: spec × host × geometry → [`Plan`].
+fn resolve(spec: SamplerSpec, layers: Option<usize>, exp: Option<ExpMode>) -> Result<Plan> {
+    let mut notes: Vec<String> = Vec::new();
+    let mut rejected: Vec<Rejection> = Vec::new();
+
+    // The env override and the API preference share one path: force the
+    // portable preference here, and nowhere else in the crate.
+    let mut pref = spec.backend;
+    if crate::simd::force_portable() && !spec.rung.is_accel() && pref != BackendPref::Portable {
+        notes.push(format!(
+            "VECTORISING_FORCE_PORTABLE is set: backend preference {pref} overridden to portable"
+        ));
+        pref = BackendPref::Portable;
+    }
+
+    let exp = exp.unwrap_or(match spec.rung {
+        Rung::A1 => ExpMode::Exact,
+        _ => ExpMode::Fast,
+    });
+
+    let done = |backend, width, layout, rejected, notes| {
+        Ok(Plan { spec, rung: spec.rung, backend, width, layout, layers, exp, rejected, notes })
+    };
+
+    match spec.rung {
+        Rung::A1 | Rung::A2 => {
+            if let Width::W(n) = spec.width {
+                anyhow::ensure!(
+                    n == 1,
+                    "scalar rung {} sweeps one spin at a time (requested width {n}); the vector \
+                     rungs are a3/a4 (within one model) and c1 (across the ensemble)",
+                    spec.rung.label()
+                );
+            }
+            match pref {
+                BackendPref::Auto => {}
+                BackendPref::Portable => {
+                    notes.push("scalar rung: the portable preference is a no-op".into())
+                }
+                other => anyhow::bail!(
+                    "scalar rung {} has no {other} backend (only auto/portable make sense)",
+                    spec.rung.label()
+                ),
+            }
+            done(Backend::Scalar, 1, GroupLayout::Scalar, rejected, notes)
+        }
+        Rung::A3 | Rung::A4 | Rung::C1 => {
+            let is_batch = spec.rung.is_replica_batch();
+            if is_batch {
+                if let Some(l) = layers {
+                    if l < 2 {
+                        return Err(UnsupportedGeometry {
+                            rung: spec.rung,
+                            width: 0,
+                            layers: l,
+                            alternatives: vec![SamplerSpec::rung(Rung::A2)],
+                        }
+                        .into());
+                    }
+                    // Record why within-model interlacing was (or was not)
+                    // an option — the motivating context for choosing the
+                    // replica-batch rung at this geometry.
+                    for a_rung in [Rung::A3, Rung::A4] {
+                        for &w in &candidate_widths(spec.width, pref) {
+                            if MONO_WIDTHS.contains(&w) && !interlace_ok(l, w) {
+                                rejected.push(Rejection {
+                                    rung: a_rung,
+                                    width: w,
+                                    code: "layer-interlace",
+                                    reason: format!(
+                                        "within-model interlacing needs layers divisible by {w} \
+                                         with >= 2 layers per section; layers={l} fails, so the \
+                                         A-rungs cannot vectorize this model"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            let widths = candidate_widths(spec.width, pref);
+            let mut geometry_failure: Option<usize> = None;
+            for &w in &widths {
+                if !MONO_WIDTHS.contains(&w) {
+                    rejected.push(Rejection {
+                        rung: spec.rung,
+                        width: w,
+                        code: "width-unavailable",
+                        reason: format!(
+                            "no monomorphized vector backend at width {w} (available: 4, 8, 16)"
+                        ),
+                    });
+                    continue;
+                }
+                if !is_batch {
+                    if let Some(l) = layers {
+                        if !interlace_ok(l, w) {
+                            geometry_failure.get_or_insert(w);
+                            rejected.push(Rejection {
+                                rung: spec.rung,
+                                width: w,
+                                code: "layer-interlace",
+                                reason: format!(
+                                    "needs n_layers divisible by {w} with at least 2 layers per \
+                                     section (got {l})"
+                                ),
+                            });
+                            continue;
+                        }
+                    }
+                }
+                match resolve_backend(spec.rung, pref, w) {
+                    Ok((backend, fallback)) => {
+                        if let Some(r) = fallback {
+                            rejected.push(r);
+                        }
+                        let layout = if is_batch {
+                            GroupLayout::ReplicaLanes { lanes: w }
+                        } else {
+                            GroupLayout::LayerInterlace {
+                                sections: w,
+                                layers_per_section: layers.map(|l| l / w),
+                            }
+                        };
+                        return done(backend, w, layout, rejected, notes);
+                    }
+                    Err(r) => rejected.push(r),
+                }
+            }
+            // Every candidate rejected.  A geometry failure gets the
+            // structured error (with alternatives); otherwise summarize
+            // the backend rejections.
+            if let (Some(w), Some(l)) = (geometry_failure, layers) {
+                let alternatives = geometry_alternatives(l)
+                    .into_iter()
+                    .filter(|alt| !(alt.rung == spec.rung && alt.width == Width::W(w)))
+                    .collect();
+                return Err(UnsupportedGeometry {
+                    rung: spec.rung,
+                    width: w,
+                    layers: l,
+                    alternatives,
+                }
+                .into());
+            }
+            let reasons: Vec<String> = rejected
+                .iter()
+                .map(|r| format!("{} at width {}: {} [{}]", r.rung, r.width, r.reason, r.code))
+                .collect();
+            anyhow::bail!(
+                "no backend satisfies {} (rung {}): {}",
+                spec.cli(),
+                spec.rung.label(),
+                reasons.join("; ")
+            )
+        }
+        Rung::B1 | Rung::B2 => {
+            if let Width::W(n) = spec.width {
+                anyhow::ensure!(
+                    n == 32,
+                    "the accelerator rungs run the 32-wide interlaced artifacts (requested \
+                     width {n})"
+                );
+            }
+            anyhow::ensure!(
+                matches!(pref, BackendPref::Auto | BackendPref::Accel),
+                "rung {} runs on the accelerator; backend {pref} does not apply",
+                spec.rung.label()
+            );
+            notes.push(
+                "accelerator plans execute via sweep::accel::AccelSweeper (needs a PJRT Runtime \
+                 and on-disk artifacts)"
+                    .into(),
+            );
+            done(Backend::Accel, 32, GroupLayout::AccelInterlace { width: 32 }, rejected, notes)
+        }
+    }
+}
+
+/// Instantiate a single-model sweeper from a resolved plan triple.  This
+/// is the one match in the crate that maps `(rung, backend, width)` onto
+/// concrete monomorphizations.
+pub fn instantiate(
+    r: Resolved,
+    model: &QmcModel,
+    s0: &[f32],
+    seed: u32,
+    exp: ExpMode,
+) -> Result<Box<dyn Sweeper + Send>> {
+    use crate::simd::portable::U32xN;
+    match r.rung {
+        Rung::A1 => return Ok(Box::new(a1_original::A1Original::new(model, s0, seed, exp))),
+        Rung::A2 => return Ok(Box::new(a2_basic::A2Basic::new(model, s0, seed, exp))),
+        Rung::C1 => anyhow::bail!(
+            "replica-batch rung C.1 sweeps a lane-batch of replicas, not one model; use \
+             EngineBuilder::build_batch / sweep::c1_replica_batch::make_batch_sweeper (or \
+             tempering::BatchedPtEnsemble)"
+        ),
+        Rung::B1 | Rung::B2 => anyhow::bail!(
+            "accelerator rung {} needs a Runtime and on-disk artifacts; use \
+             sweep::accel::AccelSweeper::new",
+            r.rung.label()
+        ),
+        Rung::A3 | Rung::A4 => {}
+    }
+    let a3 = r.rung == Rung::A3;
+    // `crate::simd::U32x4` is the SSE2 type on x86_64 and the portable
+    // quadruplet elsewhere; negotiation only ever yields `Sse2` on x86_64.
+    Ok(match (r.backend, r.width) {
+        (Backend::Sse2, 4) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            } else {
+                Box::new(a4_full::A4Full::<crate::simd::U32x4>::new(model, s0, seed, exp))
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, 8) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<crate::simd::avx2::U32x8>::new(
+                    model, s0, seed, exp,
+                ))
+            } else {
+                Box::new(a4_full::A4Full::<crate::simd::avx2::U32x8>::new(model, s0, seed, exp))
+            }
+        }
+        (Backend::Portable, 4) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<U32xN<4>>::new(model, s0, seed, exp))
+            } else {
+                Box::new(a4_full::A4Full::<U32xN<4>>::new(model, s0, seed, exp))
+            }
+        }
+        (Backend::Portable, 8) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<U32xN<8>>::new(model, s0, seed, exp))
+            } else {
+                Box::new(a4_full::A4Full::<U32xN<8>>::new(model, s0, seed, exp))
+            }
+        }
+        (Backend::Portable, 16) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<U32xN<16>>::new(model, s0, seed, exp))
+            } else {
+                Box::new(a4_full::A4Full::<U32xN<16>>::new(model, s0, seed, exp))
+            }
+        }
+        (backend, width) => anyhow::bail!(
+            "no {} implementation for backend {backend} at width {width} on this host",
+            r.rung.label()
+        ),
+    })
+}
+
+/// Instantiate a C-rung lane-batch from a resolved plan triple.
+pub fn instantiate_batch(
+    r: Resolved,
+    models: &[QmcModel],
+    states: &[Vec<f32>],
+    seeds: &[u32],
+    exp: ExpMode,
+) -> Result<Box<dyn BatchSweeper + Send>> {
+    use crate::simd::portable::U32xN;
+    anyhow::ensure!(
+        r.rung.is_replica_batch(),
+        "{} is not a replica-batch rung (only c1 sweeps lane-batches)",
+        r.rung.label()
+    );
+    Ok(match (r.backend, r.width) {
+        (Backend::Sse2, 4) => {
+            Box::new(C1ReplicaBatch::<crate::simd::U32x4>::new(models, states, seeds, exp)?)
+        }
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, 8) => {
+            Box::new(C1ReplicaBatch::<crate::simd::avx2::U32x8>::new(models, states, seeds, exp)?)
+        }
+        (Backend::Portable, 4) => {
+            Box::new(C1ReplicaBatch::<U32xN<4>>::new(models, states, seeds, exp)?)
+        }
+        (Backend::Portable, 8) => {
+            Box::new(C1ReplicaBatch::<U32xN<8>>::new(models, states, seeds, exp)?)
+        }
+        (Backend::Portable, 16) => {
+            Box::new(C1ReplicaBatch::<U32xN<16>>::new(models, states, seeds, exp)?)
+        }
+        (backend, width) => anyhow::bail!(
+            "no C.1 implementation for backend {backend} at width {width} on this host"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::torus_workload;
+
+    #[test]
+    fn auto_spec_resolves_to_host_widest() {
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4)).layers(32).plan().unwrap();
+        assert_eq!(plan.width, crate::simd::widest_supported_width());
+        assert!(matches!(plan.layout, GroupLayout::LayerInterlace { .. }));
+        assert_eq!(plan.rung, Rung::A4);
+    }
+
+    #[test]
+    fn auto_width_narrows_on_geometry() {
+        // layers=12: width 8 impossible (12 % 8 != 0), width 4 fine.
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4)).layers(12).plan().unwrap();
+        assert_eq!(plan.width, 4);
+        if crate::simd::widest_supported_width() == 8 {
+            assert!(
+                plan.rejected.iter().any(|r| r.width == 8 && r.code == "layer-interlace"),
+                "the w8 candidate must be recorded as rejected: {:?}",
+                plan.rejected
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_width_failure_is_structured() {
+        let err =
+            EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(8)).layers(12).plan().err().unwrap();
+        let ug = err.downcast_ref::<UnsupportedGeometry>().expect("UnsupportedGeometry");
+        assert_eq!(ug.width, 8);
+        assert_eq!(ug.layers, 12);
+        assert!(ug.alternatives.iter().any(|a| a.rung == Rung::C1));
+        assert!(ug.alternatives.iter().any(|a| a.rung == Rung::A4 && a.width == Width::W(4)));
+    }
+
+    #[test]
+    fn c1_plan_records_why_a_rungs_were_rejected() {
+        // The acceptance scenario: shallow model, C-rung chosen, and the
+        // plan explains that A-rung interlacing is impossible at layers=2.
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::C1)).layers(2).plan().unwrap();
+        assert!(plan.width == 4 || plan.width == 8);
+        assert!(matches!(plan.layout, GroupLayout::ReplicaLanes { .. }));
+        assert!(
+            plan.rejected
+                .iter()
+                .any(|r| matches!(r.rung, Rung::A3 | Rung::A4) && r.code == "layer-interlace"),
+            "plan must name the A-rung rejections: {:?}",
+            plan.rejected
+        );
+    }
+
+    #[test]
+    fn scalar_rungs_reject_vector_widths() {
+        assert!(EngineBuilder::new(SamplerSpec::rung(Rung::A2).w(4)).plan().is_err());
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A1)).plan().unwrap();
+        assert_eq!(plan.width, 1);
+        assert_eq!(plan.backend, Backend::Scalar);
+        assert_eq!(plan.exp, ExpMode::Exact, "A.1 defaults to the library exp");
+    }
+
+    #[test]
+    fn portable_width_16_is_free() {
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(16)).layers(32).plan().unwrap();
+        assert_eq!(plan.width, 16);
+        assert_eq!(plan.backend, Backend::Portable);
+        assert_eq!(plan.label(), "A.4w16");
+        assert_eq!(plan.legacy_kind(), None);
+        let wl = torus_workload(4, 4, 32, 1, 0.3);
+        let mut engine = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(16))
+            .build(&wl.model, &wl.s0, 7)
+            .unwrap();
+        let stats = engine.run(3, 0.8);
+        assert!(stats.attempts > 0);
+        assert!(engine.validate() < 1e-3);
+    }
+
+    #[test]
+    fn accel_rungs_plan_but_do_not_build_without_runtime() {
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::B2)).plan().unwrap();
+        assert_eq!(plan.backend, Backend::Accel);
+        assert_eq!(plan.width, 32);
+        let wl = torus_workload(4, 4, 8, 1, 0.3);
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::B2)).build(&wl.model, &wl.s0, 1);
+        assert!(format!("{:#}", err.err().unwrap()).contains("AccelSweeper"));
+    }
+
+    #[test]
+    fn batch_builder_builds_c1() {
+        let w = 4usize;
+        let wls: Vec<_> = (0..w).map(|i| torus_workload(4, 4, 2, 1 + i as u64, 0.3)).collect();
+        let models: Vec<_> = wls.iter().map(|wl| wl.model.clone()).collect();
+        let states: Vec<_> = wls.iter().map(|wl| wl.s0.clone()).collect();
+        let seeds: Vec<u32> = (0..w as u32).map(|i| 100 + i).collect();
+        let mut batch = EngineBuilder::new(SamplerSpec::rung(Rung::C1).w(4))
+            .build_batch(&models, &states, &seeds)
+            .unwrap();
+        assert_eq!(batch.plan.width, 4);
+        let stats = batch.run(2, &[0.5, 0.6, 0.7, 0.8]);
+        assert_eq!(stats.len(), 4);
+        assert!(stats[0].attempts > 0);
+    }
+
+    #[test]
+    fn avx2_pin_errors_cleanly_at_wrong_width() {
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(4).on(BackendPref::Avx2))
+            .layers(32)
+            .plan()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("8-lane"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Structured negotiation errors.
+//!
+//! Geometry failures are *data*, not prose: callers (the CLI, the
+//! service's admission path, tests) downcast to
+//! [`UnsupportedGeometry`] and read the rejected `(rung, width)` plus
+//! the machine-chosen `alternatives` instead of parsing a message.
+
+use super::{Rung, SamplerSpec};
+
+/// A spec's rung×width cannot run on the given model geometry — e.g. an
+/// A-rung whose lane count does not divide the layer count.  Carries
+/// ready-to-use alternative specs, best first.
+#[derive(Clone, Debug)]
+pub struct UnsupportedGeometry {
+    /// The rung that was rejected.
+    pub rung: Rung,
+    /// The lane width that failed (the requested width, or the widest
+    /// candidate when the width was `Auto`).
+    pub width: usize,
+    /// The model's layer count the rung was checked against.
+    pub layers: usize,
+    /// Specs that *do* support this geometry, best first (used by
+    /// `repro run` to print a suggestion).
+    pub alternatives: Vec<SamplerSpec>,
+}
+
+impl std::fmt::Display for UnsupportedGeometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.rung.is_replica_batch() {
+            write!(
+                f,
+                "rung {} needs at least 2 layers (got {}): a 1-layer model has degenerate \
+                 self-tau edges",
+                self.rung.label(),
+                self.layers
+            )?;
+        } else {
+            write!(
+                f,
+                "rung {} at width {} needs n_layers divisible by {} with at least 2 layers per \
+                 section (got {})",
+                self.rung.label(),
+                self.width,
+                self.width,
+                self.layers
+            )?;
+        }
+        if !self.alternatives.is_empty() {
+            write!(f, "; alternatives:")?;
+            for (i, alt) in self.alternatives.iter().enumerate() {
+                let sep = if i == 0 { " " } else { "; " };
+                write!(f, "{sep}{}", describe(alt))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for UnsupportedGeometry {}
+
+/// Human-readable one-liner for an alternative spec, leading with the
+/// legacy spelling where one exists so old error-message greps keep
+/// working.
+fn describe(spec: &SamplerSpec) -> String {
+    match spec.rung {
+        Rung::C1 => format!(
+            "c1-replica-batch ({}) — vectorizes across the tempering ensemble instead, \
+             accepts any layers >= 2",
+            spec.cli()
+        ),
+        Rung::A2 => format!("a2-basic ({}) — scalar, any geometry", spec.cli()),
+        _ => spec.cli(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Width;
+
+    #[test]
+    fn display_names_geometry_and_alternatives() {
+        let e = UnsupportedGeometry {
+            rung: Rung::A4,
+            width: 8,
+            layers: 12,
+            alternatives: vec![
+                SamplerSpec::rung(Rung::A4).w(4),
+                SamplerSpec::rung(Rung::C1),
+                SamplerSpec::rung(Rung::A2),
+            ],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("needs n_layers divisible by 8"), "{msg}");
+        assert!(msg.contains("got 12"), "{msg}");
+        assert!(msg.contains("c1-replica-batch"), "{msg}");
+        assert!(msg.contains("--rung a4 --width 4"), "{msg}");
+        assert_eq!(e.alternatives[1].width, Width::Auto);
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let e = UnsupportedGeometry {
+            rung: Rung::A3,
+            width: 8,
+            layers: 8,
+            alternatives: vec![SamplerSpec::rung(Rung::C1)],
+        };
+        let any: crate::Error = e.into();
+        let back = any.downcast_ref::<UnsupportedGeometry>().expect("downcast");
+        assert_eq!(back.rung, Rung::A3);
+        assert_eq!(back.width, 8);
+        assert_eq!(back.layers, 8);
+    }
+}

@@ -1,0 +1,413 @@
+//! Engine API v1 — the orthogonal construction surface.
+//!
+//! The paper's lesson is that vector width and memory layout are tunable
+//! axes of *one* algorithm, not separate algorithms.  The legacy
+//! [`crate::sweep::SweepKind`] surface baked the width into enum variants
+//! (`A3VecRngW8`, `C1ReplicaBatchW8`), so every new width or backend
+//! multiplied the enum and every match arm downstream.  This module
+//! replaces that with three orthogonal axes:
+//!
+//! * [`Rung`] — *which algorithm* (the paper's ladder: A.1/A.2/A.3/A.4,
+//!   the replica-batch C.1, the accelerator B.1/B.2);
+//! * [`Width`] — *how many lanes* (`Auto` or an explicit lane count);
+//! * [`BackendPref`] — *which instruction set* (`Auto`, or pin SSE2 /
+//!   AVX2 / the const-generic portable lanes / the accelerator).
+//!
+//! A [`SamplerSpec`] combines the three; an [`EngineBuilder`] resolves it
+//! against host capabilities (`is_x86_feature_detected!`, the
+//! `VECTORISING_FORCE_PORTABLE` override) and model geometry (the layer
+//! count) into an explicit [`Plan`]: the chosen backend, the effective
+//! width, the lane→work layout, and a machine-readable fallback chain of
+//! every candidate that was considered and rejected ("a4 at width 8
+//! rejected: layers=12 not divisible by 8").  The Plan is what `repro
+//! plan` prints as JSON and what the sampling service echoes back with
+//! every result.
+//!
+//! Express intent; let the dispatch layer negotiate the instruction set.
+//! The legacy `SweepKind` spellings all lower onto specs (see
+//! [`SamplerSpec::from`]), and `sweep::try_make_sweeper` is now a thin
+//! shim over this module — one dispatch point for the whole crate.
+//!
+//! ```no_run
+//! use vectorising::engine::{EngineBuilder, Rung, SamplerSpec};
+//! use vectorising::ising::builder::torus_workload;
+//! use vectorising::sweep::Sweeper;
+//!
+//! let wl = torus_workload(8, 8, 32, 1, 0.3);
+//! let spec = SamplerSpec::rung(Rung::A4); // width auto, backend auto
+//! let mut engine = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 5489).unwrap();
+//! println!("negotiated: {}", engine.plan.label());
+//! engine.run(100, 0.5);
+//! ```
+
+pub mod builder;
+pub mod error;
+pub mod plan;
+
+pub use builder::{BatchEngine, Engine, EngineBuilder};
+pub use error::UnsupportedGeometry;
+pub use plan::{Backend, GroupLayout, Plan, Rejection, Resolved};
+
+use crate::sweep::SweepKind;
+use crate::util::json::{self, Value};
+
+/// Version of the v1 surface: stamped on every negotiated [`Plan`] and
+/// every sampling-service response line (the service re-exports it as
+/// `service::job::PROTOCOL_VERSION`).  Version-0 artifacts (no version
+/// field) remain accepted everywhere.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// Which algorithm family of the paper's ladder — the rung axis, with the
+/// width and backend factored out into [`Width`] and [`BackendPref`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Rung {
+    /// A.1 — original scalar implementation (branchy loop, library exp).
+    A1,
+    /// A.2 — basic optimizations (§2): branch-free, flat edges, fast exp.
+    A2,
+    /// A.3 — vectorized MT19937 + flip decisions (§3).
+    A3,
+    /// A.4 — fully vectorized, incl. neighbour updates (§3.1).
+    A4,
+    /// C.1 — replica-batched: one SIMD lane per tempering replica.
+    C1,
+    /// B.1 — accelerator, naive gathered layout.
+    B1,
+    /// B.2 — accelerator, coalesced interlaced layout (§3.2).
+    B2,
+}
+
+impl Rung {
+    /// Canonical CLI spelling (`--rung a4`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rung::A1 => "a1",
+            Rung::A2 => "a2",
+            Rung::A3 => "a3",
+            Rung::A4 => "a4",
+            Rung::C1 => "c1",
+            Rung::B1 => "b1",
+            Rung::B2 => "b2",
+        }
+    }
+
+    /// Paper-style label (`A.4`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Rung::A1 => "A.1",
+            Rung::A2 => "A.2",
+            Rung::A3 => "A.3",
+            Rung::A4 => "A.4",
+            Rung::C1 => "C.1",
+            Rung::B1 => "B.1",
+            Rung::B2 => "B.2",
+        }
+    }
+
+    /// Scalar rungs sweep one spin at a time (width is always 1).
+    pub fn is_scalar(self) -> bool {
+        matches!(self, Rung::A1 | Rung::A2)
+    }
+
+    /// The within-model vector rungs (lanes interlace the layers).
+    pub fn is_vector_cpu(self) -> bool {
+        matches!(self, Rung::A3 | Rung::A4)
+    }
+
+    /// The across-ensemble vector rung (one lane per replica).
+    pub fn is_replica_batch(self) -> bool {
+        matches!(self, Rung::C1)
+    }
+
+    /// The accelerator rungs (XLA artifacts through PJRT).
+    pub fn is_accel(self) -> bool {
+        matches!(self, Rung::B1 | Rung::B2)
+    }
+
+    /// A spec for this rung with both other axes on `Auto`.
+    pub fn spec(self) -> SamplerSpec {
+        SamplerSpec::rung(self)
+    }
+}
+
+impl std::fmt::Display for Rung {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Rung {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "a1" | "a.1" | "a1-original" => Ok(Rung::A1),
+            "a2" | "a.2" | "a2-basic" => Ok(Rung::A2),
+            "a3" | "a.3" | "a3-vec-rng" | "a3-vecrng" => Ok(Rung::A3),
+            "a4" | "a.4" | "a4-full" => Ok(Rung::A4),
+            "c1" | "c.1" | "c1-replica-batch" => Ok(Rung::C1),
+            "b1" | "b.1" | "b1-accel" => Ok(Rung::B1),
+            "b2" | "b.2" | "b2-accel" => Ok(Rung::B2),
+            other => anyhow::bail!(
+                "unknown rung {other:?} (expected a1, a2, a3, a4, c1, b1 or b2; width goes in \
+                 --width, not the rung name — use `--rung a4 --width 8`, not `a4-full-w8`)"
+            ),
+        }
+    }
+}
+
+/// The lane-count axis of a [`SamplerSpec`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Width {
+    /// Negotiate: the widest lane count the host, backend preference and
+    /// model geometry jointly support.
+    Auto,
+    /// Exactly this many lanes (1 for the scalar rungs; 4/8/16 have
+    /// monomorphized vector backends).
+    W(usize),
+}
+
+impl std::fmt::Display for Width {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Width::Auto => f.write_str("auto"),
+            Width::W(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Width {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(Width::Auto);
+        }
+        let n: usize = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("width {s:?}: {e} (expected `auto` or a lane count)"))?;
+        anyhow::ensure!(n >= 1, "width must be >= 1 (got {n})");
+        Ok(Width::W(n))
+    }
+}
+
+/// The instruction-set axis of a [`SamplerSpec`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum BackendPref {
+    /// Negotiate: the fastest backend the host supports at the effective
+    /// width (AVX2 at 8, SSE2 at 4, portable lanes otherwise).
+    Auto,
+    /// Pin the 4-lane SSE2 backend (x86_64 baseline).
+    Sse2,
+    /// Pin the 8-lane AVX2 backend (requires host detection).
+    Avx2,
+    /// Pin the const-generic portable lanes (any width, any arch — also
+    /// what `VECTORISING_FORCE_PORTABLE=1` forces for every CPU rung).
+    Portable,
+    /// The accelerator path (B-rungs only; needs a PJRT runtime and
+    /// on-disk artifacts).
+    Accel,
+}
+
+impl BackendPref {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendPref::Auto => "auto",
+            BackendPref::Sse2 => "sse2",
+            BackendPref::Avx2 => "avx2",
+            BackendPref::Portable => "portable",
+            BackendPref::Accel => "accel",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendPref {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendPref {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendPref::Auto),
+            "sse2" | "sse" => Ok(BackendPref::Sse2),
+            "avx2" | "avx" => Ok(BackendPref::Avx2),
+            "portable" => Ok(BackendPref::Portable),
+            "accel" => Ok(BackendPref::Accel),
+            other => anyhow::bail!(
+                "unknown backend {other:?} (expected auto, sse2, avx2, portable or accel)"
+            ),
+        }
+    }
+}
+
+/// What to build: rung × width × backend, each axis independent.  The
+/// construction surface of the crate — resolve one against a host and a
+/// model with [`EngineBuilder`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SamplerSpec {
+    pub rung: Rung,
+    pub width: Width,
+    pub backend: BackendPref,
+}
+
+impl SamplerSpec {
+    /// A spec with width and backend on `Auto`.
+    pub fn rung(rung: Rung) -> Self {
+        Self { rung, width: Width::Auto, backend: BackendPref::Auto }
+    }
+
+    /// Pin the lane count.
+    pub fn w(mut self, lanes: usize) -> Self {
+        self.width = Width::W(lanes);
+        self
+    }
+
+    /// Pin the backend.
+    pub fn on(mut self, backend: BackendPref) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The CLI spelling of this spec (`--rung a4 --width 8 --backend avx2`;
+    /// `auto` axes are included for width, omitted for backend).
+    pub fn cli(&self) -> String {
+        let mut s = format!("--rung {} --width {}", self.rung, self.width);
+        if self.backend != BackendPref::Auto {
+            s.push_str(&format!(" --backend {}", self.backend));
+        }
+        s
+    }
+
+    /// JSON form (`{"rung":"a4","width":"auto","backend":"auto"}`).
+    pub fn to_value(&self) -> Value {
+        let width = match self.width {
+            Width::Auto => json::str_v("auto"),
+            Width::W(n) => json::num(n as f64),
+        };
+        json::obj(vec![
+            ("rung", json::str_v(self.rung.as_str())),
+            ("width", width),
+            ("backend", json::str_v(self.backend.as_str())),
+        ])
+    }
+
+    /// Parse the JSON form back (`width` may be the string `"auto"` or a
+    /// number; `width`/`backend` default to auto when absent).
+    pub fn from_value(v: &Value) -> crate::Result<SamplerSpec> {
+        let rung: Rung = v.get("rung")?.as_str()?.parse()?;
+        let width = match v.opt("width") {
+            None => Width::Auto,
+            Some(Value::Str(s)) => s.parse()?,
+            Some(n) => Width::W(n.as_usize().map_err(|e| anyhow::anyhow!("sampler width: {e}"))?),
+        };
+        let backend = match v.opt("backend") {
+            None => BackendPref::Auto,
+            Some(b) => b.as_str()?.parse()?,
+        };
+        Ok(SamplerSpec { rung, width, backend })
+    }
+}
+
+impl std::fmt::Display for SamplerSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/w{}/{}", self.rung, self.width, self.backend)
+    }
+}
+
+/// Lower a legacy width-baked [`SweepKind`] onto the orthogonal spec it
+/// always meant — the back-compat story of the v1 API: every old
+/// spelling keeps working by lowering through this.
+impl From<SweepKind> for SamplerSpec {
+    fn from(kind: SweepKind) -> SamplerSpec {
+        let (rung, width) = match kind {
+            SweepKind::A1Original => (Rung::A1, Width::W(1)),
+            SweepKind::A2Basic => (Rung::A2, Width::W(1)),
+            SweepKind::A3VecRng => (Rung::A3, Width::W(4)),
+            SweepKind::A4Full => (Rung::A4, Width::W(4)),
+            SweepKind::A3VecRngW8 => (Rung::A3, Width::W(8)),
+            SweepKind::A4FullW8 => (Rung::A4, Width::W(8)),
+            SweepKind::C1ReplicaBatch => (Rung::C1, Width::W(4)),
+            SweepKind::C1ReplicaBatchW8 => (Rung::C1, Width::W(8)),
+            SweepKind::B1Accel => (Rung::B1, Width::W(32)),
+            SweepKind::B2Accel => (Rung::B2, Width::W(32)),
+        };
+        let backend = if kind == SweepKind::B1Accel || kind == SweepKind::B2Accel {
+            BackendPref::Accel
+        } else {
+            BackendPref::Auto
+        };
+        SamplerSpec { rung, width, backend }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn rung_spellings_parse() {
+        for (s, r) in [
+            ("a1", Rung::A1),
+            ("A.2", Rung::A2),
+            ("a3-vec-rng", Rung::A3),
+            ("a4-full", Rung::A4),
+            ("c1-replica-batch", Rung::C1),
+            ("b1", Rung::B1),
+            ("B.2", Rung::B2),
+        ] {
+            assert_eq!(Rung::from_str(s).unwrap(), r, "{s}");
+        }
+        // Width-suffixed legacy spellings are SweepKind spellings, not rungs.
+        assert!(Rung::from_str("a4-full-w8").is_err());
+    }
+
+    #[test]
+    fn width_and_backend_parse() {
+        assert_eq!(Width::from_str("auto").unwrap(), Width::Auto);
+        assert_eq!(Width::from_str("8").unwrap(), Width::W(8));
+        assert!(Width::from_str("0").is_err());
+        assert!(Width::from_str("four").is_err());
+        assert_eq!(BackendPref::from_str("avx2").unwrap(), BackendPref::Avx2);
+        assert_eq!(BackendPref::from_str("sse").unwrap(), BackendPref::Sse2);
+        assert!(BackendPref::from_str("neon").is_err());
+    }
+
+    #[test]
+    fn legacy_kinds_lower_to_specs() {
+        let s: SamplerSpec = SweepKind::A4FullW8.into();
+        assert_eq!(s, SamplerSpec::rung(Rung::A4).w(8));
+        let s: SamplerSpec = SweepKind::C1ReplicaBatch.into();
+        assert_eq!(s, SamplerSpec::rung(Rung::C1).w(4));
+        let s: SamplerSpec = SweepKind::B2Accel.into();
+        assert_eq!(s, SamplerSpec::rung(Rung::B2).w(32).on(BackendPref::Accel));
+        let s: SamplerSpec = SweepKind::A1Original.into();
+        assert_eq!(s, SamplerSpec::rung(Rung::A1).w(1));
+    }
+
+    #[test]
+    fn spec_json_roundtrips() {
+        for spec in [
+            SamplerSpec::rung(Rung::A4),
+            SamplerSpec::rung(Rung::C1).w(8).on(BackendPref::Avx2),
+            SamplerSpec::rung(Rung::A3).w(16).on(BackendPref::Portable),
+        ] {
+            let v = spec.to_value();
+            let parsed = SamplerSpec::from_value(&Value::parse(&v.to_string()).unwrap()).unwrap();
+            assert_eq!(parsed, spec);
+        }
+    }
+
+    #[test]
+    fn cli_spelling_is_flag_shaped() {
+        assert_eq!(SamplerSpec::rung(Rung::C1).cli(), "--rung c1 --width auto");
+        assert_eq!(
+            SamplerSpec::rung(Rung::A4).w(8).on(BackendPref::Avx2).cli(),
+            "--rung a4 --width 8 --backend avx2"
+        );
+    }
+}

@@ -1,0 +1,289 @@
+//! The negotiated [`Plan`]: what a [`crate::engine::SamplerSpec`]
+//! resolved to on this host for this geometry, including the
+//! machine-readable fallback chain — the construction-time analogue of
+//! the paper's "fraction of vector width utilized" reporting.
+
+use crate::sweep::{ExpMode, SweepKind};
+use crate::util::json::{self, Value};
+
+use super::{BackendPref, Rung, SamplerSpec};
+
+/// A concrete instruction-set backend (post-negotiation — unlike
+/// [`BackendPref`] there is no `Auto` here).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Plain scalar code (the A.1/A.2 rungs).
+    Scalar,
+    /// 4-lane SSE2 intrinsics (x86_64 baseline).
+    Sse2,
+    /// 8-lane AVX2 intrinsics (runtime-detected).
+    Avx2,
+    /// Const-generic portable lanes (any width, any architecture).
+    Portable,
+    /// XLA artifact through PJRT (the B-rungs).
+    Accel,
+}
+
+impl Backend {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+            Backend::Portable => "portable",
+            Backend::Accel => "accel",
+        }
+    }
+
+    /// Whether `pref` is satisfied by this concrete backend.
+    pub fn satisfies(self, pref: BackendPref) -> bool {
+        match pref {
+            BackendPref::Auto => true,
+            BackendPref::Sse2 => self == Backend::Sse2,
+            BackendPref::Avx2 => self == Backend::Avx2,
+            BackendPref::Portable => self == Backend::Portable,
+            BackendPref::Accel => self == Backend::Accel,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How lanes map onto work — the memory-layout half of the negotiation.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum GroupLayout {
+    /// One spin at a time; no lane structure.
+    Scalar,
+    /// The A.3/A.4 within-model layout: the layer stack is interlaced
+    /// into `sections` sections (one per lane) of `layers_per_section`
+    /// layers each (`None` when no geometry was supplied).
+    LayerInterlace { sections: usize, layers_per_section: Option<usize> },
+    /// The C.1 across-ensemble layout: one tempering replica per lane.
+    ReplicaLanes { lanes: usize },
+    /// The accelerator's §3.2 coalesced spin interlacing.
+    AccelInterlace { width: usize },
+}
+
+impl GroupLayout {
+    pub fn to_value(&self) -> Value {
+        match *self {
+            GroupLayout::Scalar => json::obj(vec![("kind", json::str_v("scalar"))]),
+            GroupLayout::LayerInterlace { sections, layers_per_section } => {
+                let mut pairs = vec![
+                    ("kind", json::str_v("layer-interlace")),
+                    ("sections", json::num(sections as f64)),
+                ];
+                if let Some(l) = layers_per_section {
+                    pairs.push(("layers_per_section", json::num(l as f64)));
+                }
+                json::obj(pairs)
+            }
+            GroupLayout::ReplicaLanes { lanes } => json::obj(vec![
+                ("kind", json::str_v("replica-lanes")),
+                ("lanes", json::num(lanes as f64)),
+            ]),
+            GroupLayout::AccelInterlace { width } => json::obj(vec![
+                ("kind", json::str_v("accel-interlace")),
+                ("width", json::num(width as f64)),
+            ]),
+        }
+    }
+}
+
+/// One candidate the negotiation considered and turned down, with a
+/// machine-readable `code` and a human-readable `reason`.
+#[derive(Clone, Debug)]
+pub struct Rejection {
+    pub rung: Rung,
+    pub width: usize,
+    /// Stable reason codes: `layer-interlace`, `no-avx2`, `no-intrinsics`,
+    /// `width-unavailable`, `backend-mismatch`, `forced-portable`.
+    pub code: &'static str,
+    pub reason: String,
+}
+
+impl Rejection {
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("rung", json::str_v(self.rung.as_str())),
+            ("width", json::num(self.width as f64)),
+            ("code", json::str_v(self.code)),
+            ("reason", json::str_v(&self.reason)),
+        ])
+    }
+}
+
+/// The `(rung, backend, width)` triple a plan resolved to — `Copy`, so
+/// executors can carry it around and instantiate sweepers from it (see
+/// [`crate::engine::builder::instantiate`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Resolved {
+    pub rung: Rung,
+    pub backend: Backend,
+    pub width: usize,
+}
+
+impl Resolved {
+    /// Paper-style label with the width spelled out away from the paper
+    /// defaults: `A.4` (4 lanes), `A.4w8`, `A.4w16`, `C.1w8`, `B.2`.
+    pub fn label(&self) -> String {
+        let base = self.rung.label();
+        match (self.rung, self.width) {
+            (Rung::A1 | Rung::A2 | Rung::B1 | Rung::B2, _) => base.to_string(),
+            (_, 4) => base.to_string(),
+            (_, w) => format!("{base}w{w}"),
+        }
+    }
+
+    /// The legacy enum variant this resolution corresponds to, when one
+    /// exists (widths beyond 8 have no `SweepKind` spelling).
+    pub fn legacy_kind(&self) -> Option<SweepKind> {
+        match (self.rung, self.width) {
+            (Rung::A1, 1) => Some(SweepKind::A1Original),
+            (Rung::A2, 1) => Some(SweepKind::A2Basic),
+            (Rung::A3, 4) => Some(SweepKind::A3VecRng),
+            (Rung::A3, 8) => Some(SweepKind::A3VecRngW8),
+            (Rung::A4, 4) => Some(SweepKind::A4Full),
+            (Rung::A4, 8) => Some(SweepKind::A4FullW8),
+            (Rung::C1, 4) => Some(SweepKind::C1ReplicaBatch),
+            (Rung::C1, 8) => Some(SweepKind::C1ReplicaBatchW8),
+            (Rung::B1, _) => Some(SweepKind::B1Accel),
+            (Rung::B2, _) => Some(SweepKind::B2Accel),
+            _ => None,
+        }
+    }
+}
+
+/// The outcome of capability negotiation: everything a caller (or a
+/// service client) needs to know about what will actually run.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The spec as requested.
+    pub spec: SamplerSpec,
+    /// The rung (same as `spec.rung` — there is no rung auto-selection).
+    pub rung: Rung,
+    /// The backend the negotiation chose.
+    pub backend: Backend,
+    /// The effective lane count.
+    pub width: usize,
+    /// How lanes map onto work.
+    pub layout: GroupLayout,
+    /// The model geometry the plan was resolved against, when supplied.
+    pub layers: Option<usize>,
+    /// Exponential mode the engine will use.
+    pub exp: ExpMode,
+    /// Every candidate considered and rejected, in evaluation order —
+    /// the fallback chain with machine-readable reasons.
+    pub rejected: Vec<Rejection>,
+    /// Free-form negotiation notes (e.g. the portable-force override).
+    pub notes: Vec<String>,
+}
+
+impl Plan {
+    /// The `Copy` triple for instantiation.
+    pub fn resolved(&self) -> Resolved {
+        Resolved { rung: self.rung, backend: self.backend, width: self.width }
+    }
+
+    /// Paper-style label (see [`Resolved::label`]).
+    pub fn label(&self) -> String {
+        self.resolved().label()
+    }
+
+    /// The legacy [`SweepKind`] this plan corresponds to, when one exists.
+    pub fn legacy_kind(&self) -> Option<SweepKind> {
+        self.resolved().legacy_kind()
+    }
+
+    /// Serialize the plan (the `repro plan` output and the service's
+    /// per-result echo).
+    pub fn to_json(&self) -> String {
+        let mut pairs = vec![
+            ("protocol_version", json::num(super::PROTOCOL_VERSION as f64)),
+            ("spec", self.spec.to_value()),
+            ("rung", json::str_v(self.rung.as_str())),
+            ("label", json::str_v(&self.label())),
+            ("backend", json::str_v(self.backend.as_str())),
+            ("width", json::num(self.width as f64)),
+            ("exp", json::str_v(exp_as_str(self.exp))),
+            ("layout", self.layout.to_value()),
+        ];
+        if let Some(layers) = self.layers {
+            pairs.push(("layers", json::num(layers as f64)));
+        }
+        if let Some(kind) = self.legacy_kind() {
+            pairs.push(("legacy_kind", json::str_v(kind.cli_spelling())));
+        }
+        pairs.push(("rejected", Value::Arr(self.rejected.iter().map(|r| r.to_value()).collect())));
+        if !self.notes.is_empty() {
+            pairs.push(("notes", Value::Arr(self.notes.iter().map(|n| json::str_v(n)).collect())));
+        }
+        json::obj(pairs).to_string()
+    }
+}
+
+pub(crate) fn exp_as_str(exp: ExpMode) -> &'static str {
+    match exp {
+        ExpMode::Exact => "exact",
+        ExpMode::Fast => "fast",
+        ExpMode::Accurate => "accurate",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_follow_width() {
+        let r = |rung, width| Resolved { rung, backend: Backend::Portable, width };
+        assert_eq!(r(Rung::A4, 4).label(), "A.4");
+        assert_eq!(r(Rung::A4, 8).label(), "A.4w8");
+        assert_eq!(r(Rung::A4, 16).label(), "A.4w16");
+        assert_eq!(r(Rung::C1, 4).label(), "C.1");
+        assert_eq!(r(Rung::C1, 8).label(), "C.1w8");
+        assert_eq!(r(Rung::A2, 1).label(), "A.2");
+        assert_eq!(r(Rung::B2, 32).label(), "B.2");
+    }
+
+    #[test]
+    fn legacy_kind_round_trips_for_representable_widths() {
+        let r = |rung, width| Resolved { rung, backend: Backend::Portable, width };
+        assert_eq!(r(Rung::A3, 8).legacy_kind(), Some(SweepKind::A3VecRngW8));
+        assert_eq!(r(Rung::C1, 4).legacy_kind(), Some(SweepKind::C1ReplicaBatch));
+        assert_eq!(r(Rung::A4, 16).legacy_kind(), None);
+    }
+
+    #[test]
+    fn plan_json_names_backend_width_and_rejections() {
+        let plan = Plan {
+            spec: SamplerSpec::rung(Rung::C1),
+            rung: Rung::C1,
+            backend: Backend::Avx2,
+            width: 8,
+            layout: GroupLayout::ReplicaLanes { lanes: 8 },
+            layers: Some(2),
+            exp: ExpMode::Fast,
+            rejected: vec![Rejection {
+                rung: Rung::A4,
+                width: 8,
+                code: "layer-interlace",
+                reason: "layers=2 is not divisible into 8 sections".into(),
+            }],
+            notes: vec![],
+        };
+        let v = Value::parse(&plan.to_json()).unwrap();
+        assert_eq!(v.get("backend").unwrap().as_str().unwrap(), "avx2");
+        assert_eq!(v.get("width").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("legacy_kind").unwrap().as_str().unwrap(), "c1-replica-batch-w8");
+        let rejected = v.get("rejected").unwrap().as_arr().unwrap();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].get("rung").unwrap().as_str().unwrap(), "a4");
+        assert_eq!(rejected[0].get("code").unwrap().as_str().unwrap(), "layer-interlace");
+    }
+}

@@ -10,10 +10,11 @@
 use std::path::Path;
 
 use crate::coordinator::{self, RunConfig, Timer};
+use crate::engine::{EngineBuilder, Rung, SamplerSpec};
 use crate::ising::builder::torus_workload;
 use crate::runtime::{artifact, Runtime};
 use crate::sweep::accel::{AccelSweeper, AccelVariant};
-use crate::sweep::{SweepKind, Sweeper};
+use crate::sweep::Sweeper;
 use crate::Result;
 
 use super::report::{f3, Table};
@@ -57,23 +58,23 @@ pub fn time_accel(cfg: &RunConfig, variant: AccelVariant, config_name: &str) -> 
 pub fn compute(cfg: &RunConfig, thread_counts: &[usize], with_accel: bool) -> Result<Vec<Fig13Row>> {
     let mut rows = Vec::new();
     let mut baseline = None;
-    let mut ladder = vec![
-        (SweepKind::A1Original, "A.1"),
-        (SweepKind::A2Basic, "A.2"),
-        (SweepKind::A3VecRng, "A.3"),
-        (SweepKind::A4Full, "A.4"),
+    let mut ladder: Vec<(SamplerSpec, &str)> = vec![
+        (Rung::A1.spec(), "A.1"),
+        (Rung::A2.spec(), "A.2"),
+        (Rung::A3.spec().w(4), "A.3"),
+        (Rung::A4.spec().w(4), "A.4"),
     ];
     // The width-8 column needs a layer count the octet interlacing supports.
-    if SweepKind::A4FullW8.supports_layers(cfg.layers) {
-        ladder.push((SweepKind::A3VecRngW8, "A.3w8"));
-        ladder.push((SweepKind::A4FullW8, "A.4w8"));
+    if EngineBuilder::new(Rung::A4.spec().w(8)).layers(cfg.layers).plan().is_ok() {
+        ladder.push((Rung::A3.spec().w(8), "A.3w8"));
+        ladder.push((Rung::A4.spec().w(8), "A.4w8"));
     }
-    for (kind, label) in ladder {
+    for (spec, label) in ladder {
         for &threads in thread_counts {
             let mut c = cfg.clone();
             c.threads = threads;
-            let t = coordinator::time_sweeps(&c, kind)?;
-            if kind == SweepKind::A1Original && threads == thread_counts[0] {
+            let t = coordinator::time_sweeps(&c, spec)?;
+            if spec.rung == Rung::A1 && threads == thread_counts[0] {
                 baseline = Some(t.seconds);
             }
             rows.push(Fig13Row {

@@ -10,8 +10,8 @@
 use std::path::Path;
 
 use crate::coordinator::{self, RunConfig};
+use crate::engine::Rung;
 use crate::stats::wait_probability;
-use crate::sweep::SweepKind;
 use crate::Result;
 
 use super::report::{f4, Table};
@@ -30,7 +30,7 @@ pub struct Fig14Row {
 
 /// Run the ladder with the A.4 rung and compute the three curves.
 pub fn compute(cfg: &RunConfig) -> Result<Vec<Fig14Row>> {
-    let mut pt = coordinator::build_ensemble(cfg, SweepKind::A4Full)?;
+    let mut pt = coordinator::build_ensemble(cfg, Rung::A4.spec().w(4))?;
     let pool = coordinator::SweepPool::new(cfg.threads);
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
     for _ in 0..rounds {

@@ -13,7 +13,7 @@ use std::path::Path;
 use std::process::Command;
 
 use crate::coordinator::{self, RunConfig, RungTiming};
-use crate::sweep::SweepKind;
+use crate::engine::{EngineBuilder, Rung, SamplerSpec};
 use crate::Result;
 
 use super::report::{f3, Table};
@@ -31,19 +31,19 @@ pub struct LadderTiming {
 pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
     let mut cfg = cfg.clone();
     cfg.threads = 1;
-    let mut ladder = vec![
-        (SweepKind::A1Original, "A.1b"),
-        (SweepKind::A2Basic, "A.2b"),
-        (SweepKind::A3VecRng, "A.3"),
-        (SweepKind::A4Full, "A.4"),
+    let mut ladder: Vec<(SamplerSpec, &str)> = vec![
+        (Rung::A1.spec(), "A.1b"),
+        (Rung::A2.spec(), "A.2b"),
+        (Rung::A3.spec().w(4), "A.3"),
+        (Rung::A4.spec().w(4), "A.4"),
     ];
-    if SweepKind::A4FullW8.supports_layers(cfg.layers) {
-        ladder.push((SweepKind::A3VecRngW8, "A.3w8"));
-        ladder.push((SweepKind::A4FullW8, "A.4w8"));
+    if EngineBuilder::new(Rung::A4.spec().w(8)).layers(cfg.layers).plan().is_ok() {
+        ladder.push((Rung::A3.spec().w(8), "A.3w8"));
+        ladder.push((Rung::A4.spec().w(8), "A.4w8"));
     }
     let mut out = Vec::new();
-    for (kind, label) in ladder {
-        let t = coordinator::time_sweeps(&cfg, kind)?;
+    for (spec, label) in ladder {
+        let t = coordinator::time_sweeps(&cfg, spec)?;
         out.push(LadderTiming { label: label.to_string(), seconds: t.seconds });
     }
     Ok(out)
@@ -53,12 +53,9 @@ pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
 /// rows (A.1a, A.2a).  `opt0_bin` is e.g. `target/opt0/repro`.
 pub fn measure_unoptimized(cfg: &RunConfig, opt0_bin: &Path) -> Result<Vec<LadderTiming>> {
     let mut out = Vec::new();
-    for (kind, label) in [(SweepKind::A1Original, "A.1a"), (SweepKind::A2Basic, "A.2a")] {
-        let kind_arg = match kind {
-            SweepKind::A1Original => "a1-original",
-            SweepKind::A2Basic => "a2-basic",
-            _ => unreachable!(),
-        };
+    // Legacy `--kind` spellings on purpose: the opt0 binary may be an
+    // older build, and the v0 CLI surface is kept compatible.
+    for (kind_arg, label) in [("a1-original", "A.1a"), ("a2-basic", "A.2a")] {
         let output = Command::new(opt0_bin)
             .args([
                 "bench-rung",

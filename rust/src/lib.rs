@@ -26,7 +26,14 @@
 //! [`ising::reorder`], [`sweep`]) is generic over the lane width `W`:
 //! SSE2 backs width 4, AVX2 width 8, and a const-generic portable
 //! implementation backs every other width and architecture.
-//! `sweep::make_sweeper` picks the backend at runtime.
+//!
+//! Construction goes through the **Engine API v1** ([`engine`]): a
+//! [`engine::SamplerSpec`] names the three orthogonal axes — *rung* ×
+//! *width* × *backend* — and [`engine::EngineBuilder`] negotiates it
+//! against host capabilities and model geometry into an explicit
+//! [`engine::Plan`] (chosen backend, effective width, machine-readable
+//! fallback reasons).  The legacy width-baked [`sweep::SweepKind`]
+//! spellings all lower onto specs, so old call sites keep working.
 //!
 //! On top of the sweep ladder sit the systems the paper's workload needs:
 //! a parallel-tempering engine ([`tempering`]), a multi-threaded
@@ -35,23 +42,38 @@
 //! paper's evaluation ([`harness`]), and the sampling [`service`] — a
 //! job queue + dynamic lane-batching scheduler that packs independent
 //! sampling jobs onto C-rung lane-batches (`repro serve` / `repro
-//! submit`).
+//! submit`), speaking the versioned v1 wire protocol (jobs carry a
+//! sampler spec, results echo the resolved plan).
 //!
 //! ## Quickstart
 //!
 //! ```no_run
+//! use vectorising::engine::{EngineBuilder, Rung, SamplerSpec};
 //! use vectorising::ising::builder::torus_workload;
-//! use vectorising::sweep::{self, SweepKind, Sweeper};
+//! use vectorising::sweep::Sweeper;
 //!
 //! let wl = torus_workload(8, 8, 32, 1, 0.3);
-//! // The widest rung this host supports (A.4w8 on AVX2, A.4 otherwise).
-//! let kind = SweepKind::preferred_cpu();
-//! let mut sim = sweep::make_sweeper(kind, &wl.model, &wl.s0, 5489).unwrap();
+//! // Rung A.4, width and backend negotiated (AVX2 octets when the host
+//! // has them, SSE quadruplets otherwise, portable lanes as fallback).
+//! let spec = SamplerSpec::rung(Rung::A4);
+//! let mut sim = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 5489).unwrap();
+//! println!("running {} on {}", sim.plan.label(), sim.plan.backend);
 //! sim.run(100, 0.5);
 //! println!("energy = {}", sim.energy());
 //! ```
+//!
+//! Migration from the legacy surface:
+//!
+//! | v0 (width-baked)                          | v1 (orthogonal spec)                       |
+//! |-------------------------------------------|--------------------------------------------|
+//! | `make_sweeper(SweepKind::A4Full, ..)`     | `EngineBuilder::new(Rung::A4.spec().w(4)).build(..)` |
+//! | `SweepKind::A4FullW8`                     | `Rung::A4.spec().w(8)`                     |
+//! | `SweepKind::preferred_cpu()`              | `Rung::A4.spec()` (width auto)             |
+//! | `make_batch_sweeper(C1ReplicaBatchW8, ..)`| `EngineBuilder::new(Rung::C1.spec().w(8)).build_batch(..)` |
+//! | `VECTORISING_FORCE_PORTABLE=1`            | same env var, or `.on(BackendPref::Portable)` |
 
 pub mod coordinator;
+pub mod engine;
 pub mod expapprox;
 pub mod harness;
 pub mod ising;

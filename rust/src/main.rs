@@ -21,6 +21,7 @@ use std::path::PathBuf;
 use std::str::FromStr;
 
 use vectorising::coordinator::{self, RunConfig};
+use vectorising::engine::{EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry};
 use vectorising::harness::{fig13, fig14, fig17, table1, table2};
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
@@ -39,12 +40,18 @@ USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
   run              full parallel-tempering simulation (--json)
-                   --kind a1..a4 | a3-vec-rng-w8 | a4-full-w8
-                          | c1-replica-batch | c1-replica-batch-w8 | b1 | b2
-                   (default: widest CPU rung the host + layer count support
-                    — a4-full-w8 with AVX2 and 8|layers, a4-full otherwise;
-                    the c1 rungs sweep one replica per SIMD lane and accept
-                    any --layers >= 2, e.g. shallow models)
+                   sampler spec: --rung a1|a2|a3|a4|c1|b1|b2
+                                 [--width auto|4|8|16] [--backend auto|sse2|avx2|portable]
+                   (with --rung, torus dims use --torus-width/--torus-height)
+                   legacy spellings still work: --kind a1..a4 | a3-vec-rng-w8
+                          | a4-full-w8 | c1-replica-batch[-w8] | b1 | b2
+                   (default: rung a4, width auto — the widest lane count the
+                    host + layer count support; rung c1 sweeps one replica
+                    per SIMD lane and accepts any layers >= 2)
+  plan             print the capability-negotiated Plan as JSON without
+                   running: --rung ... [--width ...] [--backend ...]
+                   [--layers N] (e.g. `repro plan --rung c1 --width auto
+                   --layers 2` explains why the A-rungs were rejected)
   table1           implementation matrix (paper Table 1)
   table2           pairwise CPU speedups, 1 core (paper Table 2 + Fig 15)
                    [--opt0-bin target/opt0/repro | --skip-opt0] [--csv PATH]
@@ -53,10 +60,12 @@ SUBCOMMANDS
   fig17            exponential approximation error [--csv PATH]
   bench-rung       timing probe for one rung (--kind ..., --json)
   artifacts-check  load + execute every artifact once
-  serve            sampling service: JSON-lines jobs in, per-job results out,
+  serve            sampling service (protocol_version 1): JSON-lines jobs in,
+                   per-job results out (each echoing the resolved plan),
                    dynamically lane-batched onto the C-rungs
                    [--listen HOST:PORT | stdin/stdout]
-                   [--lanes 4|8] [--threads N] [--flush-ms N] [--exact]
+                   [--lanes 4|8|16] [--backend auto|sse2|avx2|portable]
+                   [--threads N] [--flush-ms N] [--exact]
   submit           client for a serving instance: --addr HOST:PORT
                    [--file jobs.jsonl | stdin] [--stats] [--shutdown]
   job-run          run job lines directly on the scalar A.2 reference
@@ -64,7 +73,8 @@ SUBCOMMANDS
                    (the bit-exactness oracle for served results)
 
 WORKLOAD FLAGS (run/table2/fig13/fig14/bench-rung)
-  --width N --height N   torus dims (default 8x8)
+  --width N --height N   torus dims (default 8x8); with --rung use
+  --torus-width N --torus-height N   (since --width is the lane count there)
   --layers N             QMC layers (default 32; multiple of 4)
   --models N             tempering replicas (default 8)
   --sweeps N             sweeps per replica (default 200)
@@ -74,6 +84,37 @@ WORKLOAD FLAGS (run/table2/fig13/fig14/bench-rung)
   --paper-scale          paper geometry: 96x256 spins, 115 models, 30000 sweeps
 ";
 
+/// Parse the sampler spec flags: `--rung/--width/--backend` (the v1
+/// surface) or the legacy `--kind` spelling, which lowers onto a spec.
+/// `None` when neither is given (the caller picks its default).
+fn sampler_spec_args(a: &Args) -> Result<Option<SamplerSpec>> {
+    if let Some(r) = a.str_opt("rung") {
+        anyhow::ensure!(
+            a.str_opt("kind").is_none(),
+            "--kind and --rung are mutually exclusive (use --rung {} --width ...)",
+            r
+        );
+        let mut spec = SamplerSpec::rung(Rung::from_str(r)?);
+        if let Some(w) = a.str_opt("width") {
+            spec.width = w.parse()?;
+        }
+        if let Some(b) = a.str_opt("backend") {
+            spec.backend = b.parse()?;
+        }
+        return Ok(Some(spec));
+    }
+    if let Some(k) = a.str_opt("kind") {
+        let mut spec = SweepKind::from_str(k)?.spec();
+        // --backend composes with legacy kinds (--width stays the torus
+        // dimension there, as it always was).
+        if let Some(b) = a.str_opt("backend") {
+            spec.backend = b.parse()?;
+        }
+        return Ok(Some(spec));
+    }
+    Ok(None)
+}
+
 fn workload_config(a: &Args) -> Result<RunConfig> {
     if a.switch("paper-scale") {
         let mut c = RunConfig::paper();
@@ -81,9 +122,25 @@ fn workload_config(a: &Args) -> Result<RunConfig> {
         c.seed = a.u64_or("seed", 1)?;
         return Ok(c);
     }
+    // With --rung, --width is the lane count, so the torus width moves
+    // to --torus-width (accepted in legacy mode too).  --height never
+    // clashes with a spec axis and is always honored.
+    let spec_mode = a.str_opt("rung").is_some();
+    let torus_width = if a.str_opt("torus-width").is_some() {
+        a.usize_or("torus-width", 8)?
+    } else if spec_mode {
+        8
+    } else {
+        a.usize_or("width", 8)?
+    };
+    let torus_height = if a.str_opt("torus-height").is_some() {
+        a.usize_or("torus-height", 8)?
+    } else {
+        a.usize_or("height", 8)?
+    };
     Ok(RunConfig {
-        width: a.usize_or("width", 8)?,
-        height: a.usize_or("height", 8)?,
+        width: torus_width,
+        height: torus_height,
         layers: a.usize_or("layers", 32)?,
         n_models: a.usize_or("models", 8)?,
         sweeps: a.usize_or("sweeps", 200)?,
@@ -112,16 +169,40 @@ fn main() -> Result<()> {
     match sub.as_str() {
         "run" => {
             let cfg = workload_config(&args)?;
-            let kind = match args.str_opt("kind") {
-                Some(s) => SweepKind::from_str(s)?,
-                // Default: the widest lane count this host has a backend
-                // for (AVX2 octets when detected, SSE quadruplets else),
-                // narrowed to what the layer count supports.
-                None => SweepKind::preferred_cpu_for_layers(cfg.layers),
+            // Default: rung a4, width auto — the widest lane count this
+            // host has a backend for (AVX2 octets when detected, SSE
+            // quadruplets else), narrowed to what the layer count supports.
+            let spec = sampler_spec_args(&args)?.unwrap_or_else(|| {
+                SweepKind::preferred_cpu_for_layers(cfg.layers).spec()
+            });
+            let outcome = match spec.rung {
+                // Validate the spec axes (width/backend pins) through the
+                // same negotiation `repro plan` uses before running the
+                // accelerator path.
+                Rung::B1 => EngineBuilder::new(spec)
+                    .layers(cfg.layers)
+                    .plan()
+                    .and_then(|_| run_accel(&cfg, SweepKind::B1Accel)),
+                Rung::B2 => EngineBuilder::new(spec)
+                    .layers(cfg.layers)
+                    .plan()
+                    .and_then(|_| run_accel(&cfg, SweepKind::B2Accel)),
+                _ => coordinator::run(&cfg, spec),
             };
-            let report = match kind {
-                SweepKind::B1Accel | SweepKind::B2Accel => run_accel(&cfg, kind)?,
-                _ => coordinator::run(&cfg, kind)?,
+            let report = match outcome {
+                Ok(report) => report,
+                Err(e) => {
+                    // Structured geometry rejections carry ready-to-run
+                    // alternative specs — print the best one.
+                    if let Some(ug) = e.downcast_ref::<UnsupportedGeometry>() {
+                        eprintln!("error: {ug}");
+                        if let Some(alt) = ug.alternatives.first() {
+                            eprintln!("try: repro run {} --layers {}", alt.cli(), cfg.layers);
+                        }
+                        std::process::exit(2);
+                    }
+                    return Err(e);
+                }
             };
             if args.switch("json") {
                 println!("{}", report.to_json());
@@ -143,6 +224,25 @@ fn main() -> Result<()> {
                 );
                 for (i, (p, e)) in report.flip_probs.iter().zip(&report.energies).enumerate() {
                     println!("  model {i:3}  P(flip)={p:.4}  E={e:.2}");
+                }
+            }
+        }
+        "plan" => {
+            // Geometry is just the layer count; torus dims are irrelevant
+            // to negotiation, so `--width auto` here is the lane width.
+            let layers = args.usize_or("layers", 32)?;
+            let spec = sampler_spec_args(&args)?
+                .unwrap_or_else(|| SamplerSpec::rung(Rung::A4));
+            match EngineBuilder::new(spec).layers(layers).plan() {
+                Ok(plan) => println!("{}", plan.to_json()),
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    if let Some(ug) = e.downcast_ref::<UnsupportedGeometry>() {
+                        if let Some(alt) = ug.alternatives.first() {
+                            eprintln!("try: repro plan {} --layers {layers}", alt.cli());
+                        }
+                    }
+                    std::process::exit(2);
                 }
             }
         }
@@ -179,10 +279,9 @@ fn main() -> Result<()> {
         "fig17" => print!("{}", fig17::run(csv_path(&args).as_deref())?),
         "bench-rung" => {
             let cfg = workload_config(&args)?;
-            let kind = SweepKind::from_str(
-                args.str_opt("kind").ok_or_else(|| anyhow::anyhow!("--kind required"))?,
-            )?;
-            let t = coordinator::time_sweeps(&cfg, kind)?;
+            let spec = sampler_spec_args(&args)?
+                .ok_or_else(|| anyhow::anyhow!("--kind or --rung required"))?;
+            let t = coordinator::time_sweeps(&cfg, spec)?;
             if args.switch("json") {
                 println!("{}", t.to_json());
             } else {
@@ -222,6 +321,7 @@ fn main() -> Result<()> {
         "serve" => {
             let cfg = service::ServiceConfig {
                 lanes: args.usize_or("lanes", vectorising::simd::widest_supported_width())?,
+                backend: args.str_or("backend", "auto").parse()?,
                 threads: args.usize_or("threads", 1)?,
                 flush_ms: args.u64_or("flush-ms", 25)?,
                 exp: if args.switch("exact") { ExpMode::Exact } else { ExpMode::Fast },

@@ -73,6 +73,9 @@ pub struct Batcher {
     width: usize,
     deadline: Duration,
     buckets: BTreeMap<ShapeKey, VecDeque<PendingJob>>,
+    /// Jobs whose sampler pins the scalar path (`rung: a2`): they skip
+    /// lane-packing and dispatch as singles on the next poll.
+    scalar_lane: VecDeque<PendingJob>,
     next_seq: u64,
     queued: usize,
 }
@@ -82,7 +85,14 @@ impl Batcher {
     /// time a job may wait for lane-mates before its bucket flushes.
     pub fn new(width: usize, deadline: Duration) -> Self {
         assert!(width >= 2, "lane-batching needs at least 2 lanes");
-        Self { width, deadline, buckets: BTreeMap::new(), next_seq: 0, queued: 0 }
+        Self {
+            width,
+            deadline,
+            buckets: BTreeMap::new(),
+            scalar_lane: VecDeque::new(),
+            next_seq: 0,
+            queued: 0,
+        }
     }
 
     pub fn width(&self) -> usize {
@@ -94,14 +104,17 @@ impl Batcher {
         self.queued
     }
 
-    /// Admit a job; returns its sequence number.
+    /// Admit a job; returns its sequence number.  Jobs that pin the
+    /// scalar sampler bypass the shape buckets entirely.
     pub fn push(&mut self, spec: JobSpec, reply: Option<Sender<String>>, now: Instant) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.buckets
-            .entry(spec.shape())
-            .or_default()
-            .push_back(PendingJob { spec, reply, enqueued: now, seq });
+        let job = PendingJob { spec, reply, enqueued: now, seq };
+        if job.spec.wants_scalar() {
+            self.scalar_lane.push_back(job);
+        } else {
+            self.buckets.entry(job.spec.shape()).or_default().push_back(job);
+        }
         self.queued += 1;
         seq
     }
@@ -119,23 +132,36 @@ impl Batcher {
         self.collect_ready(|_| true)
     }
 
-    /// Earliest pending flush deadline — the scheduler's sleep bound.
+    /// Earliest pending flush deadline — the scheduler's sleep bound.  A
+    /// queued scalar-pinned job is due immediately (its admission time).
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.buckets
+        let scalar = self.scalar_lane.front().map(|job| job.enqueued);
+        let bucket = self
+            .buckets
             .values()
             .filter_map(|q| q.front().map(|job| job.enqueued + self.deadline))
-            .min()
+            .min();
+        match (scalar, bucket) {
+            (Some(s), Some(b)) => Some(s.min(b)),
+            (s, b) => s.or(b),
+        }
     }
 
     fn collect_ready<F: Fn(Instant) -> bool>(&mut self, flush: F) -> Vec<Dispatch> {
         let width = self.width;
         let mut out = Vec::new();
+        // Scalar-pinned jobs dispatch immediately, ahead of any deadline.
+        out.extend(self.scalar_lane.drain(..).map(Dispatch::Single));
         for queue in self.buckets.values_mut() {
             while queue.len() >= width {
                 out.push(Dispatch::Batch(queue.drain(..width).collect()));
             }
             if !queue.is_empty() && flush(queue.front().unwrap().enqueued) {
-                if queue.len() == 1 {
+                // A lone job falls back to the scalar path — unless its
+                // sampler pins the C-rung, in which case it dispatches as
+                // a padded one-lane batch (the pin is a contract, not a
+                // hint).
+                if queue.len() == 1 && !queue.front().unwrap().spec.pins_batch() {
                     out.push(Dispatch::Single(queue.pop_front().unwrap()));
                 } else {
                     out.push(Dispatch::Batch(queue.drain(..).collect()));
@@ -167,6 +193,7 @@ mod tests {
             seed: 1,
             trace_every: 0,
             want_state: false,
+            sampler: None,
         }
     }
 
@@ -182,6 +209,41 @@ mod tests {
         assert!(ds.iter().all(|d| d.occupancy() == 4 && d.is_batch()));
         assert_eq!(b.queued(), 1);
         assert!(b.next_deadline().is_some());
+    }
+
+    #[test]
+    fn scalar_pinned_jobs_bypass_lane_packing() {
+        use crate::engine::{Rung, SamplerSpec};
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let now = Instant::now();
+        // 3 batchable jobs of one shape + 1 scalar-pinned job of the SAME
+        // shape: the pinned job must dispatch as a single immediately,
+        // never counting toward the bucket.
+        for i in 0..3 {
+            b.push(spec(&format!("j{i}"), 4, 8), None, now);
+        }
+        let mut pinned = spec("scalar", 4, 8);
+        pinned.sampler = Some(SamplerSpec::rung(Rung::A2));
+        b.push(pinned, None, now);
+        assert!(b.next_deadline().unwrap() <= now, "pinned job is due immediately");
+        let ds = b.poll(now);
+        assert_eq!(ds.len(), 1, "only the pinned single is ready: {}", ds.len());
+        assert!(!ds[0].is_batch());
+        assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
+    }
+
+    #[test]
+    fn lone_c1_pinned_job_flushes_as_padded_batch_not_scalar() {
+        use crate::engine::{Rung, SamplerSpec};
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        let now = Instant::now();
+        let mut pinned = spec("pin", 4, 8);
+        pinned.sampler = Some(SamplerSpec::rung(Rung::C1));
+        b.push(pinned, None, now);
+        let ds = b.poll(now + Duration::from_millis(20));
+        assert_eq!(ds.len(), 1);
+        assert!(ds[0].is_batch(), "a c1 pin must never degrade to the scalar path");
+        assert_eq!(ds[0].occupancy(), 1, "one real lane, padding added at execution");
     }
 
     #[test]

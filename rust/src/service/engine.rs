@@ -77,7 +77,7 @@ impl Drop for EngineHandle {
 
 /// Start the scheduler thread for `cfg`.
 pub fn start(cfg: &ServiceConfig) -> Result<EngineHandle> {
-    let executor = Executor::new(cfg.lanes, cfg.exp)?;
+    let executor = Executor::with_backend(cfg.lanes, cfg.backend, cfg.exp)?;
     let metrics = Arc::new(ServiceMetrics::default());
     let metrics_for_thread = Arc::clone(&metrics);
     let (tx, rx) = channel::<Submission>();
@@ -113,9 +113,9 @@ fn scheduler_loop(
         };
         let disconnected = match msg {
             Ok(sub) => {
-                admit(&mut batcher, sub, &metrics);
+                admit(&mut batcher, sub, &executor, &metrics);
                 while let Ok(sub) = rx.try_recv() {
-                    admit(&mut batcher, sub, &metrics);
+                    admit(&mut batcher, sub, &executor, &metrics);
                 }
                 false
             }
@@ -132,7 +132,14 @@ fn scheduler_loop(
     }
 }
 
-fn admit(batcher: &mut Batcher, sub: Submission, metrics: &ServiceMetrics) {
+fn admit(batcher: &mut Batcher, sub: Submission, executor: &Executor, metrics: &ServiceMetrics) {
+    // Line-level validation already ran in the connection thread; here
+    // the job's sampler (if any) is checked against the serving plan.
+    if let Err(e) = executor.admits(&sub.spec) {
+        metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = sub.reply.send(JobResult::error_line(&sub.spec.id, &format!("{e:#}")));
+        return;
+    }
     metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
     batcher.push(sub.spec, Some(sub.reply), Instant::now());
     metrics.set_queue_depth(batcher.queued());
@@ -196,6 +203,7 @@ mod tests {
             seed,
             trace_every: 0,
             want_state: true,
+            sampler: None,
         }
     }
 
@@ -205,7 +213,13 @@ mod tests {
     fn engine_answers_every_submission() {
         // A generous flush deadline so slow CI cannot split the 4-job
         // bucket into a padded flush before all four have been admitted.
-        let cfg = ServiceConfig { lanes: 4, threads: 2, flush_ms: 200, exp: ExpMode::Fast };
+        let cfg = ServiceConfig {
+            lanes: 4,
+            threads: 2,
+            flush_ms: 200,
+            exp: ExpMode::Fast,
+            ..ServiceConfig::default()
+        };
         let engine = start(&cfg).unwrap();
         let submitter = engine.submitter();
         let (reply_tx, reply_rx) = channel::<String>();

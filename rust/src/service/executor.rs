@@ -17,22 +17,23 @@
 
 use std::collections::BTreeSet;
 
+use crate::engine::{self, BackendPref, EngineBuilder, Resolved, Rung, SamplerSpec, Width};
 use crate::ising::QmcModel;
-use crate::sweep::c1_replica_batch::make_batch_sweeper;
-use crate::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, SweepStats};
+use crate::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, SweepStats};
 use crate::Result;
 
 use super::batcher::{Dispatch, PendingJob};
-use super::job::{JobResult, JobSpec};
+use super::job::{JobResult, JobSpec, PlanEcho};
 
 /// Executes dispatches on the current thread (the engine runs one
 /// executor call per sweep-pool task).  `Copy`, so pool tasks can take
 /// it by value.
 #[derive(Copy, Clone)]
 pub struct Executor {
-    /// The C-rung serving batches (`C.1` at 4 lanes, `C.1w8` at 8).
-    pub kind: SweepKind,
-    /// Lane width `W`.
+    /// The negotiated serving C-rung (rung, backend, width) — echoed as
+    /// the `plan` of every lane-batched result.
+    pub resolved: Resolved,
+    /// Lane width `W` (== `resolved.width`).
     pub width: usize,
     /// Exponential mode — `Fast` by default; the wide fast exp is
     /// lane-exact to the scalar one, so serving stays bit-exact either way.
@@ -41,8 +42,50 @@ pub struct Executor {
 
 impl Executor {
     pub fn new(lanes: usize, exp: ExpMode) -> Result<Self> {
-        anyhow::ensure!(lanes == 4 || lanes == 8, "lane width must be 4 or 8 (got {lanes})");
-        Ok(Self { kind: SweepKind::c1_for_width(lanes), width: lanes, exp })
+        Self::with_backend(lanes, BackendPref::Auto, exp)
+    }
+
+    /// Negotiate the serving C-rung once at startup: `lanes` ∈ {4, 8, 16}
+    /// and a backend preference, resolved through the engine (AVX2/SSE2
+    /// when available, portable lanes otherwise or when forced).
+    pub fn with_backend(lanes: usize, backend: BackendPref, exp: ExpMode) -> Result<Self> {
+        anyhow::ensure!(
+            matches!(lanes, 4 | 8 | 16),
+            "lane width must be 4, 8 or 16 (got {lanes})"
+        );
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::C1).w(lanes).on(backend))
+            .exp(exp)
+            .plan()?;
+        Ok(Self { resolved: plan.resolved(), width: plan.width, exp })
+    }
+
+    /// Admission check for a job's requested sampler against this
+    /// executor: `a2` always passes (scalar path); `c1` must be
+    /// compatible with the negotiated serving width and backend.
+    pub fn admits(&self, spec: &JobSpec) -> Result<()> {
+        let Some(s) = spec.sampler else { return Ok(()) };
+        match s.rung {
+            Rung::A2 => Ok(()),
+            Rung::C1 => {
+                if let Width::W(w) = s.width {
+                    anyhow::ensure!(
+                        w == self.width,
+                        "this service lane-batches at width {} (job requested {w}); resubmit \
+                         with width auto or {}",
+                        self.width,
+                        self.width
+                    );
+                }
+                anyhow::ensure!(
+                    self.resolved.backend.satisfies(s.backend),
+                    "this service serves backend {} (job requested {})",
+                    self.resolved.backend,
+                    s.backend
+                );
+                Ok(())
+            }
+            other => anyhow::bail!("sampler rung {other} is not servable"),
+        }
     }
 
     /// Run one dispatch to completion, returning each job with its
@@ -63,7 +106,7 @@ impl Executor {
     pub fn run_single(&self, spec: &JobSpec) -> Result<JobResult> {
         let wl = spec.workload();
         let mut sweeper =
-            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, spec.seed, self.exp)?;
+            try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, spec.seed, self.exp)?;
         let mut stats = SweepStats::default();
         let mut trace = Vec::new();
         let mut done = 0usize;
@@ -83,6 +126,7 @@ impl Executor {
             occupancy: 1,
             energy_trace: trace,
             state: if spec.want_state { Some(sweeper.state()) } else { None },
+            plan: Some(PlanEcho::scalar()),
         })
     }
 
@@ -101,7 +145,10 @@ impl Executor {
     fn try_run_batch(&self, jobs: &[PendingJob]) -> Result<Vec<JobResult>> {
         let w = self.width;
         let n = jobs.len();
-        anyhow::ensure!(n >= 2 && n <= w, "a batch dispatch packs 2..=W jobs (got {n})");
+        // n == 1 happens only for sampler-pinned C-rung jobs flushed
+        // alone: they run as a fully padded batch rather than silently
+        // degrading to the scalar path they explicitly opted out of.
+        anyhow::ensure!(n >= 1 && n <= w, "a batch dispatch packs 1..=W jobs (got {n})");
 
         let workloads: Vec<_> = jobs.iter().map(|job| job.spec.workload()).collect();
         let mut models: Vec<QmcModel> = workloads.iter().map(|wl| wl.model.clone()).collect();
@@ -117,7 +164,13 @@ impl Executor {
             seeds.push(seeds[n - 1] ^ 0x8000_0000 ^ (k as u32));
             betas.push(betas[n - 1]);
         }
-        let mut batch = make_batch_sweeper(self.kind, &models, &states, &seeds, self.exp)?;
+        let mut batch = engine::builder::instantiate_batch(
+            self.resolved,
+            &models,
+            &states,
+            &seeds,
+            self.exp,
+        )?;
 
         let mut points = BTreeSet::new();
         for job in jobs {
@@ -143,11 +196,12 @@ impl Executor {
                         id: spec.id.clone(),
                         energy: batch.energy_of(k),
                         stats: stats[k],
-                        kind: self.kind.label().to_string(),
+                        kind: self.resolved.label(),
                         lanes: w,
                         occupancy: n,
                         energy_trace: std::mem::take(&mut traces[k]),
                         state: if spec.want_state { Some(batch.state_of(k)) } else { None },
+                        plan: Some(PlanEcho::of(self.resolved)),
                     });
                 }
             }
@@ -197,6 +251,7 @@ mod tests {
             seed: 1,
             trace_every: 4,
             want_state: false,
+            sampler: None,
         };
         assert_eq!(capture_points(&spec), vec![4, 8, 10]);
         assert!(traces_at(&spec, 4) && traces_at(&spec, 8));

@@ -2,15 +2,25 @@
 //! per-job results, all JSON-lines over the dependency-free
 //! [`crate::util::json`] subset.
 //!
+//! **Protocol version 1.** Requests may carry `"protocol_version": 1`
+//! and a `"sampler"` spec ([`crate::engine::SamplerSpec`], the typed
+//! request envelope); responses always carry `"protocol_version": 1`
+//! plus a `"plan"` object echoing the *resolved* sampler
+//! (rung/width/backend — the serving analogue of reporting the fraction
+//! of vector width utilized).  The v0 line format (no version field, no
+//! sampler) remains accepted unchanged, and every v0 response field
+//! (`kind`, `lanes`, `occupancy`, ...) is still emitted.
+//!
 //! A request line is either a job object (every field optional except
 //! `id`) or a control op:
 //!
 //! ```text
 //! {"id":"j1","width":4,"height":4,"layers":8,"model_seed":3,"jtau":0.3,
 //!  "sweeps":100,"beta":0.8,"seed":42,"trace_every":0,"want_state":true}
+//! {"protocol_version":1,"op":"submit",
+//!  "job":{"id":"j2","layers":2,"sampler":{"rung":"c1","width":"auto","backend":"auto"}}}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
-//! {"op":"submit","job":{...}}        # explicit-op spelling of a job line
 //! ```
 //!
 //! Each job yields exactly one result line (`status` `"ok"` or
@@ -19,10 +29,17 @@
 //! job (`repro job-run`), whichever lane of whichever batch it landed on
 //! — that is the C-rung correctness contract (see `tests/replica_batch.rs`).
 
+use crate::engine::{Resolved, Rung, SamplerSpec, Width};
 use crate::ising::builder::{torus_workload, Workload};
 use crate::sweep::SweepStats;
 use crate::util::json::{self, Value};
 use crate::Result;
+
+/// The service wire-protocol version this build speaks (the Engine API
+/// version).  Version-0 lines (no `protocol_version` field) are accepted
+/// for back-compat; responses are always stamped with the current
+/// version.
+pub use crate::engine::PROTOCOL_VERSION;
 
 /// Shape-bucket key of the lane-batching scheduler: jobs with equal keys
 /// build identically-shaped models — same torus dims and layer count,
@@ -61,6 +78,12 @@ pub struct JobSpec {
     pub trace_every: usize,
     /// Return the final spin state in the result.
     pub want_state: bool,
+    /// v1: requested sampler spec.  `None` (v0 lines) means "whatever
+    /// the service deems best" — the lane-batched C-rung with scalar
+    /// fallback.  `rung: a2` forces the scalar reference path; `rung:
+    /// c1` may pin width/backend, checked against the service's executor
+    /// at admission.
+    pub sampler: Option<SamplerSpec>,
 }
 
 impl JobSpec {
@@ -106,9 +129,28 @@ impl JobSpec {
             seed: seed as u32,
             trace_every: us("trace_every", 0)?,
             want_state: v.opt("want_state").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+            sampler: match v.opt("sampler") {
+                Some(sv) => {
+                    Some(SamplerSpec::from_value(sv).map_err(|e| anyhow::anyhow!("sampler: {e}"))?)
+                }
+                None => None,
+            },
         };
         spec.validate()?;
         Ok(spec)
+    }
+
+    /// Whether the job's sampler pins the scalar reference path (rung
+    /// `a2`) — such jobs skip lane-batching entirely.
+    pub fn wants_scalar(&self) -> bool {
+        matches!(self.sampler, Some(s) if s.rung == Rung::A2)
+    }
+
+    /// Whether the job's sampler pins the lane-batched C-rung — such
+    /// jobs may never fall back to the scalar path, even when flushed
+    /// alone (they go out as a padded one-lane batch instead).
+    pub fn pins_batch(&self) -> bool {
+        matches!(self.sampler, Some(s) if s.rung == Rung::C1)
     }
 
     /// Admission checks: the same geometry rules the C-rungs need
@@ -163,12 +205,27 @@ impl JobSpec {
             self.beta
         );
         anyhow::ensure!(self.jtau.is_finite(), "jtau must be finite");
+        if let Some(s) = self.sampler {
+            anyhow::ensure!(
+                matches!(s.rung, Rung::C1 | Rung::A2),
+                "sampler rung {} is not servable: the service lane-batches through c1 and falls \
+                 back to the scalar a2 reference",
+                s.rung
+            );
+            if s.rung == Rung::A2 {
+                anyhow::ensure!(
+                    matches!(s.width, Width::Auto | Width::W(1)),
+                    "the scalar a2 path has width 1 (sampler requested {})",
+                    s.width
+                );
+            }
+        }
         Ok(())
     }
 
     /// Serialize back to a request line (clients, benches, tests).
     pub fn to_line(&self) -> String {
-        json::obj(vec![
+        let mut pairs = vec![
             ("id", json::str_v(&self.id)),
             ("width", json::num(self.width as f64)),
             ("height", json::num(self.height as f64)),
@@ -180,8 +237,12 @@ impl JobSpec {
             ("seed", json::num(self.seed as f64)),
             ("trace_every", json::num(self.trace_every as f64)),
             ("want_state", Value::Bool(self.want_state)),
-        ])
-        .to_string()
+        ];
+        if let Some(s) = self.sampler {
+            pairs.push(("protocol_version", json::num(PROTOCOL_VERSION as f64)));
+            pairs.push(("sampler", s.to_value()));
+        }
+        json::obj(pairs).to_string()
     }
 }
 
@@ -192,9 +253,18 @@ pub enum Request {
     Shutdown,
 }
 
-/// Parse one request line: a control op (`{"op": ...}`) or a job object.
+/// Parse one request line: a control op (`{"op": ...}`) or a job object,
+/// in the v1 envelope (`"protocol_version": 1`) or the bare v0 format.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Value::parse(line)?;
+    if let Some(pv) = v.opt("protocol_version") {
+        let pv = pv.as_usize().map_err(|e| anyhow::anyhow!("protocol_version: {e}"))?;
+        anyhow::ensure!(
+            pv == PROTOCOL_VERSION,
+            "unsupported protocol_version {pv}: this server speaks version {PROTOCOL_VERSION} \
+             (omit the field for the unversioned v0 line format)"
+        );
+    }
     if let Some(op) = v.opt("op") {
         return match op.as_str()? {
             "stats" => Ok(Request::Stats),
@@ -206,6 +276,46 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request::Job(JobSpec::from_value(&v)?))
 }
 
+/// The resolved plan a result line echoes back (v1): which rung, at what
+/// width, on which backend the job actually ran.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanEcho {
+    pub rung: String,
+    pub width: usize,
+    pub backend: String,
+}
+
+impl PlanEcho {
+    /// The scalar A.2 reference path.
+    pub fn scalar() -> Self {
+        Self { rung: "a2".into(), width: 1, backend: "scalar".into() }
+    }
+
+    pub fn of(r: Resolved) -> Self {
+        Self {
+            rung: r.rung.as_str().to_string(),
+            width: r.width,
+            backend: r.backend.as_str().to_string(),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("rung", json::str_v(&self.rung)),
+            ("width", json::num(self.width as f64)),
+            ("backend", json::str_v(&self.backend)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            rung: v.get("rung")?.as_str()?.to_string(),
+            width: v.get("width")?.as_usize()?,
+            backend: v.get("backend")?.as_str()?.to_string(),
+        })
+    }
+}
+
 /// The outcome of one served job.
 #[derive(Clone, Debug)]
 pub struct JobResult {
@@ -215,7 +325,8 @@ pub struct JobResult {
     /// Flip statistics accumulated over exactly the job's own sweeps.
     pub stats: SweepStats,
     /// Rung that served the job: a C-rung label for lane-batched jobs,
-    /// "A.2" for the scalar fallback.
+    /// "A.2" for the scalar fallback (the v0 field; v1 clients read
+    /// `plan` instead).
     pub kind: String,
     /// Vector width of the serving batch (1 for the scalar fallback).
     pub lanes: usize,
@@ -225,12 +336,17 @@ pub struct JobResult {
     pub energy_trace: Vec<f64>,
     /// Final spin state (original layer-major order) when requested.
     pub state: Option<Vec<f32>>,
+    /// v1: the resolved plan that served the job (`None` only when
+    /// parsed back from a v0 line).
+    pub plan: Option<PlanEcho>,
 }
 
 impl JobResult {
-    /// Serialize as a result line.
+    /// Serialize as a result line (always stamped with the current
+    /// protocol version; every v0 field is still present).
     pub fn to_line(&self) -> String {
         let mut pairs = vec![
+            ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
             ("id", json::str_v(&self.id)),
             ("status", json::str_v("ok")),
             ("kind", json::str_v(&self.kind)),
@@ -241,6 +357,9 @@ impl JobResult {
             ("attempts", json::num(self.stats.attempts as f64)),
             ("flip_prob", json::num(self.stats.flip_prob())),
         ];
+        if let Some(plan) = &self.plan {
+            pairs.push(("plan", plan.to_value()));
+        }
         if !self.energy_trace.is_empty() {
             pairs.push(("energy_trace", json::arr_f64(&self.energy_trace)));
         }
@@ -254,6 +373,7 @@ impl JobResult {
     /// An error result line for a job that could not be served.
     pub fn error_line(id: &str, msg: &str) -> String {
         json::obj(vec![
+            ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
             ("id", json::str_v(id)),
             ("status", json::str_v("error")),
             ("error", json::str_v(msg)),
@@ -262,7 +382,7 @@ impl JobResult {
     }
 
     /// Parse a result line back (clients and tests); errors on
-    /// `status != "ok"` lines.
+    /// `status != "ok"` lines.  Accepts v0 lines (no version, no plan).
     pub fn from_line(line: &str) -> Result<JobResult> {
         let v = Value::parse(line)?;
         let status = v.get("status")?.as_str()?;
@@ -290,6 +410,10 @@ impl JobResult {
                         .map(|x| x.as_f64().map(|f| f as f32))
                         .collect::<Result<_>>()?,
                 ),
+                None => None,
+            },
+            plan: match v.opt("plan") {
+                Some(p) => Some(PlanEcho::from_value(p)?),
                 None => None,
             },
         })
@@ -363,14 +487,73 @@ mod tests {
             occupancy: 3,
             energy_trace: vec![-10.0, -11.25],
             state: Some(vec![1.0, -1.0, -1.0, 1.0]),
+            plan: Some(PlanEcho { rung: "c1".into(), width: 4, backend: "sse2".into() }),
         };
-        let back = JobResult::from_line(&r.to_line()).unwrap();
+        let line = r.to_line();
+        let back = JobResult::from_line(&line).unwrap();
         assert_eq!(back.id, "j9");
         assert_eq!(back.energy.to_bits(), r.energy.to_bits());
         assert_eq!(back.stats.flips, 7);
         assert_eq!(back.occupancy, 3);
         assert_eq!(back.energy_trace, r.energy_trace);
         assert_eq!(back.state, r.state);
-        assert!(JobResult::from_line(&JobResult::error_line("j9", "boom")).is_err());
+        assert_eq!(back.plan, r.plan, "v1 results echo the resolved plan");
+        // The response envelope is versioned.
+        let v = Value::parse(&line).unwrap();
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), PROTOCOL_VERSION);
+        let err_line = JobResult::error_line("j9", "boom");
+        assert!(JobResult::from_line(&err_line).is_err());
+        let ev = Value::parse(&err_line).unwrap();
+        assert_eq!(ev.get("protocol_version").unwrap().as_usize().unwrap(), PROTOCOL_VERSION);
+    }
+
+    #[test]
+    fn v0_result_lines_still_parse() {
+        // A pre-v1 response: no protocol_version, no plan.
+        let line = r#"{"id":"old","status":"ok","kind":"A.2","lanes":1,"occupancy":1,
+                       "energy":-3.5,"flips":2,"attempts":10,"flip_prob":0.2}"#
+            .replace('\n', "");
+        let r = JobResult::from_line(&line).unwrap();
+        assert_eq!(r.kind, "A.2");
+        assert_eq!(r.plan, None);
+    }
+
+    #[test]
+    fn v1_envelopes_parse_and_bad_versions_error() {
+        // v1 job with a sampler spec.
+        let line = r#"{"protocol_version":1,"id":"j1","width":4,"height":4,"layers":2,
+                       "sweeps":10,"beta":0.8,"sampler":{"rung":"c1","width":"auto"}}"#
+            .replace('\n', "");
+        let Request::Job(spec) = parse_request(&line).unwrap() else { panic!("expected job") };
+        let sampler = spec.sampler.expect("sampler");
+        assert_eq!(sampler.rung, Rung::C1);
+        assert_eq!(sampler.width, Width::Auto);
+        assert!(!spec.wants_scalar());
+        // round-trips through to_line (which stamps the version).
+        let Request::Job(again) = parse_request(&spec.to_line()).unwrap() else {
+            panic!("expected job")
+        };
+        assert_eq!(again.sampler, spec.sampler);
+        // v1 envelope around a control op.
+        assert!(matches!(
+            parse_request(r#"{"protocol_version":1,"op":"stats"}"#).unwrap(),
+            Request::Stats
+        ));
+        // Unknown versions are refused loudly, not mis-parsed.
+        let err = parse_request(r#"{"protocol_version":2,"op":"stats"}"#).err().unwrap();
+        assert!(format!("{err:#}").contains("unsupported protocol_version"));
+    }
+
+    #[test]
+    fn scalar_sampler_routes_and_bad_samplers_reject() {
+        let line = r#"{"id":"s1","layers":8,"sampler":{"rung":"a2"}}"#;
+        let Request::Job(spec) = parse_request(line).unwrap() else { panic!("expected job") };
+        assert!(spec.wants_scalar());
+        // a2 at a vector width is contradictory.
+        assert!(parse_request(r#"{"id":"s2","sampler":{"rung":"a2","width":4}}"#).is_err());
+        // The service does not serve accelerator or within-model rungs.
+        assert!(parse_request(r#"{"id":"s3","sampler":{"rung":"b1"}}"#).is_err());
+        assert!(parse_request(r#"{"id":"s4","sampler":{"rung":"a4"}}"#).is_err());
+        assert!(parse_request(r#"{"id":"s5","sampler":{"rung":"nope"}}"#).is_err());
     }
 }

@@ -76,6 +76,7 @@ impl ServiceMetrics {
     pub fn snapshot_json(&self) -> String {
         let get = |a: &AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
         json::obj(vec![
+            ("protocol_version", json::num(super::job::PROTOCOL_VERSION as f64)),
             ("op", json::str_v("stats")),
             ("jobs_submitted", get(&self.jobs_submitted)),
             ("jobs_completed", get(&self.jobs_completed)),

@@ -41,14 +41,20 @@ pub mod job;
 pub mod metrics;
 pub mod server;
 
+use crate::engine::BackendPref;
 use crate::sweep::ExpMode;
 
 /// Configuration of one service instance.
 #[derive(Copy, Clone, Debug)]
 pub struct ServiceConfig {
-    /// SIMD lanes per batch: 4 or 8 (default: the widest backend this
-    /// host has hand-written code for).
+    /// SIMD lanes per batch: 4, 8 or 16 (default: the widest backend
+    /// this host has hand-written code for; 16 runs on the portable
+    /// lanes).
     pub lanes: usize,
+    /// Backend preference for the serving C-rung (default `Auto`;
+    /// resolved through the engine's capability negotiation and echoed
+    /// in every result's `plan`).
+    pub backend: BackendPref,
     /// Sweep-pool worker threads (1 = dispatches run inline on the
     /// scheduler thread).
     pub threads: usize,
@@ -64,6 +70,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
             lanes: crate::simd::widest_supported_width(),
+            backend: BackendPref::Auto,
             threads: 1,
             flush_ms: 25,
             exp: ExpMode::Fast,

@@ -180,7 +180,15 @@ fn handle_line(
         }
         Ok(Request::Shutdown) => {
             shutdown.store(true, Ordering::SeqCst);
-            let _ = line_tx.send("{\"op\":\"shutdown\",\"ok\":true}".to_string());
+            let ack = crate::util::json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", crate::util::json::str_v("shutdown")),
+                (
+                    "protocol_version",
+                    crate::util::json::num(super::job::PROTOCOL_VERSION as f64),
+                ),
+            ]);
+            let _ = line_tx.send(ack.to_string());
         }
         Err(e) => {
             metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);

@@ -5,7 +5,7 @@
 //! sequence, the MT19937 recurrence, and the bit-trick exponential all run
 //! on 8 lanes per instruction.  Unlike SSE2, AVX2 is *not* part of the
 //! x86_64 baseline, so these types must only be constructed after
-//! [`super::avx2_available`] returned `true`; `make_sweeper` and the
+//! [`super::avx2_available`] returned `true`; the engine builder and the
 //! benches do that runtime dispatch.
 //!
 //! The hot loops that use these wrappers run inside
@@ -24,7 +24,7 @@ use super::{SimdF32, SimdU32};
 /// originate from a splat/zero/load/`From`, so asserting detection here
 /// catches safe-code misuse on non-AVX2 hosts before it reaches UB.
 /// Release builds compile this away (the construction invariant is
-/// upheld by `make_sweeper`'s runtime dispatch).
+/// upheld by the engine builder's runtime dispatch).
 #[inline(always)]
 fn debug_check_avx2() {
     debug_assert!(

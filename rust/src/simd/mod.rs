@@ -20,7 +20,7 @@
 //!
 //! Code that should run at any width is written against the traits; the
 //! concrete backend is chosen once at construction time (see
-//! `sweep::make_sweeper`), never per operation.
+//! `engine::EngineBuilder`), never per operation.
 
 use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
 

@@ -125,6 +125,10 @@ impl<U: SimdU32> Sweeper for A4Full<U> {
         SweepKind::a4_for_width(U::LANES)
     }
 
+    fn width(&self) -> usize {
+        U::LANES
+    }
+
     fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
         let mut stats = SweepStats::default();
         U::with_features(|| {

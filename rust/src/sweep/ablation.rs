@@ -266,18 +266,18 @@ mod tests {
 
     #[test]
     fn none_matches_a1_and_all_matches_a2() {
-        use crate::sweep::{make_sweeper_with_exp, SweepKind};
+        use crate::sweep::{try_make_sweeper_with_exp, SweepKind};
         let wl = torus_workload(4, 4, 8, 2, 0.3);
         let mut none = BasicOptAblation::new(&wl.model, &wl.s0, 5, BasicOptFlags::none());
         let mut a1 =
-            make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 5, ExpMode::Exact)
+            try_make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 5, ExpMode::Exact)
                 .unwrap();
         none.run(10, 0.8);
         a1.run(10, 0.8);
         assert_eq!(none.state(), a1.state());
 
         let mut all = BasicOptAblation::new(&wl.model, &wl.s0, 5, BasicOptFlags::all());
-        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 5, ExpMode::Fast)
+        let mut a2 = try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 5, ExpMode::Fast)
             .unwrap();
         all.run(10, 0.8);
         a2.run(10, 0.8);

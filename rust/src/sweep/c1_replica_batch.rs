@@ -236,44 +236,30 @@ impl<U: SimdU32> BatchSweeper for C1ReplicaBatch<U> {
     }
 }
 
-/// Construct a C-rung batch sweeper with runtime backend dispatch: SSE2
-/// for [`SweepKind::C1ReplicaBatch`] on x86_64 (portable lanes elsewhere
-/// or when forced), AVX2 for [`SweepKind::C1ReplicaBatchW8`] when
-/// detected (portable octet lanes otherwise).
+/// Construct a C-rung batch sweeper.  A shim over
+/// [`crate::engine::EngineBuilder::build_batch`] — takes anything that
+/// lowers onto a [`crate::engine::SamplerSpec`] (a legacy C-rung
+/// [`SweepKind`] or a `c1` spec), and the builder negotiates the backend
+/// (SSE2 at 4 lanes, AVX2 at 8 when detected, portable lanes otherwise
+/// or when `VECTORISING_FORCE_PORTABLE` is set).
 pub fn make_batch_sweeper(
-    kind: SweepKind,
+    spec: impl Into<crate::engine::SamplerSpec>,
     models: &[QmcModel],
     states: &[Vec<f32>],
     seeds: &[u32],
     exp: ExpMode,
 ) -> crate::Result<Box<dyn BatchSweeper + Send>> {
-    match kind {
-        SweepKind::C1ReplicaBatch => {
-            if crate::simd::force_portable() {
-                return Ok(Box::new(C1ReplicaBatch::<crate::simd::portable::U32xN<4>>::new(
-                    models, states, seeds, exp,
-                )?));
-            }
-            Ok(Box::new(C1ReplicaBatch::<crate::simd::U32x4>::new(models, states, seeds, exp)?))
-        }
-        SweepKind::C1ReplicaBatchW8 => {
-            #[cfg(target_arch = "x86_64")]
-            {
-                if crate::simd::avx2_available() {
-                    return Ok(Box::new(C1ReplicaBatch::<crate::simd::avx2::U32x8>::new(
-                        models, states, seeds, exp,
-                    )?));
-                }
-            }
-            Ok(Box::new(C1ReplicaBatch::<crate::simd::portable::U32xN<8>>::new(
-                models, states, seeds, exp,
-            )?))
-        }
-        other => anyhow::bail!(
-            "{} is not a replica-batch rung (expected c1-replica-batch or c1-replica-batch-w8)",
-            other.label()
-        ),
-    }
+    let spec = spec.into();
+    anyhow::ensure!(
+        spec.rung.is_replica_batch(),
+        "{} is not a replica-batch rung (expected c1-replica-batch or c1-replica-batch-w8, \
+         i.e. --rung c1)",
+        spec.rung.label()
+    );
+    Ok(crate::engine::EngineBuilder::new(spec)
+        .exp(exp)
+        .build_batch(models, states, seeds)?
+        .into_sweeper())
 }
 
 #[cfg(test)]

@@ -27,9 +27,13 @@
 //! ladder through `tempering::BatchedPtEnsemble`.
 //!
 //! The A.3/A.4 sweepers are generic over the [`crate::simd::SimdU32`]
-//! backend; [`make_sweeper`] does the runtime dispatch (SSE2 at width 4 —
-//! always present on x86_64 — and `is_x86_feature_detected!("avx2")` for
-//! width 8, with the portable lanes as the universal fallback).
+//! backend.  Construction goes through the Engine API v1: a
+//! [`crate::engine::SamplerSpec`] (rung × width × backend) resolved by
+//! [`crate::engine::EngineBuilder`] into a capability-negotiated
+//! [`crate::engine::Plan`].  [`SweepKind`] remains as the legacy
+//! width-baked surface — every variant lowers onto the equivalent spec
+//! (see [`SweepKind::spec`]) and [`try_make_sweeper`] is a thin shim over
+//! the builder, so all old spellings keep working.
 //!
 //! The a/b compiler-optimization split of the paper (A.1a vs A.1b etc.) is
 //! not a code difference — the harness measures the same rungs from a
@@ -128,6 +132,29 @@ impl std::str::FromStr for SweepKind {
 }
 
 impl SweepKind {
+    /// Lower this legacy width-baked variant onto the orthogonal
+    /// [`crate::engine::SamplerSpec`] it always meant.
+    pub fn spec(self) -> crate::engine::SamplerSpec {
+        self.into()
+    }
+
+    /// The canonical CLI spelling of this variant (the one `repro plan`
+    /// reports as `legacy_kind`).
+    pub fn cli_spelling(self) -> &'static str {
+        match self {
+            SweepKind::A1Original => "a1-original",
+            SweepKind::A2Basic => "a2-basic",
+            SweepKind::A3VecRng => "a3-vec-rng",
+            SweepKind::A4Full => "a4-full",
+            SweepKind::A3VecRngW8 => "a3-vec-rng-w8",
+            SweepKind::A4FullW8 => "a4-full-w8",
+            SweepKind::C1ReplicaBatch => "c1-replica-batch",
+            SweepKind::C1ReplicaBatchW8 => "c1-replica-batch-w8",
+            SweepKind::B1Accel => "b1-accel",
+            SweepKind::B2Accel => "b2-accel",
+        }
+    }
+
     pub fn label(self) -> &'static str {
         match self {
             SweepKind::A1Original => "A.1",
@@ -231,8 +258,7 @@ impl SweepKind {
             | SweepKind::A4Full
             | SweepKind::A3VecRngW8
             | SweepKind::A4FullW8 => {
-                let w = self.group_width();
-                n_layers % w == 0 && n_layers / w >= 2
+                crate::engine::builder::interlace_ok(n_layers, self.group_width())
             }
             SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => n_layers >= 2,
             _ => true,
@@ -303,6 +329,13 @@ impl SweepStats {
 pub trait Sweeper {
     fn kind(&self) -> SweepKind;
 
+    /// Effective lane count.  The default reads the legacy kind tag;
+    /// width-generic sweepers override it with the true `W` (the kind
+    /// tag cannot spell widths beyond 8).
+    fn width(&self) -> usize {
+        self.kind().group_width()
+    }
+
     /// Smallest number of sweeps a single `run` call can execute (1 for
     /// CPU rungs; `sweeps_per_call` for accelerator artifacts).
     fn granularity(&self) -> usize {
@@ -342,11 +375,10 @@ pub trait Sweeper {
 }
 
 /// Construct a sweeper with the rung's paper-default exponential mode.
-///
-/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  Errors
-/// on the accelerator rungs (they need a [`crate::runtime::Runtime`] and
-/// artifacts on disk — use [`accel::AccelSweeper::new`]) and on SIMD
-/// rungs whose lane width does not divide the model's layer count.
+#[deprecated(
+    note = "use engine::EngineBuilder with a SamplerSpec (or try_make_sweeper for the \
+            legacy kinds)"
+)]
 pub fn make_sweeper(
     kind: SweepKind,
     model: &QmcModel,
@@ -356,8 +388,16 @@ pub fn make_sweeper(
     try_make_sweeper(kind, model, s0, seed)
 }
 
-/// Fallible construction — alias of [`make_sweeper`], kept so call sites
-/// can spell out that they handle the error.
+/// Fallible construction with the rung's paper-default exponential mode.
+///
+/// A legacy-surface shim: lowers `kind` onto its
+/// [`crate::engine::SamplerSpec`] and resolves it through
+/// [`crate::engine::EngineBuilder`] — the crate's single dispatch point.
+/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  Errors
+/// on the accelerator rungs (they need a [`crate::runtime::Runtime`] and
+/// artifacts on disk — use [`accel::AccelSweeper::new`]) and, with a
+/// structured [`crate::engine::UnsupportedGeometry`], on SIMD rungs whose
+/// lane width does not divide the model's layer count.
 pub fn try_make_sweeper(
     kind: SweepKind,
     model: &QmcModel,
@@ -367,8 +407,11 @@ pub fn try_make_sweeper(
     try_make_sweeper_with_exp(kind, model, s0, seed, kind.default_exp())
 }
 
-/// [`make_sweeper`] with an explicit exponential mode (tests use this to
-/// align trajectories across rungs).
+/// [`try_make_sweeper`] with an explicit exponential mode.
+#[deprecated(
+    note = "use engine::EngineBuilder::new(spec).exp(..) (or try_make_sweeper_with_exp for \
+            the legacy kinds)"
+)]
 pub fn make_sweeper_with_exp(
     kind: SweepKind,
     model: &QmcModel,
@@ -379,11 +422,9 @@ pub fn make_sweeper_with_exp(
     try_make_sweeper_with_exp(kind, model, s0, seed, exp)
 }
 
-/// Fallible construction with an explicit exponential mode.  This is the
-/// single dispatch point: width-4 rungs use SSE2 on x86_64 (baseline, no
-/// detection needed) and the portable lanes elsewhere; width-8 rungs use
-/// AVX2 when `is_x86_feature_detected!("avx2")` says so and the portable
-/// 8-lane fallback otherwise.
+/// Fallible construction with an explicit exponential mode (tests use
+/// this to align trajectories across rungs).  Shim over
+/// [`crate::engine::EngineBuilder`].
 pub fn try_make_sweeper_with_exp(
     kind: SweepKind,
     model: &QmcModel,
@@ -391,78 +432,10 @@ pub fn try_make_sweeper_with_exp(
     seed: u32,
     exp: ExpMode,
 ) -> crate::Result<Box<dyn Sweeper + Send>> {
-    if !kind.supports_layers(model.n_layers) {
-        anyhow::bail!(
-            "rung {} needs n_layers divisible by {} with at least 2 layers per section (got {}); \
-             the replica-batch C-rungs (c1-replica-batch / c1-replica-batch-w8) vectorize across \
-             the tempering ensemble instead and accept any layers >= 2",
-            kind.label(),
-            kind.group_width(),
-            model.n_layers
-        );
-    }
-    Ok(match kind {
-        SweepKind::A1Original => Box::new(a1_original::A1Original::new(model, s0, seed, exp)),
-        SweepKind::A2Basic => Box::new(a2_basic::A2Basic::new(model, s0, seed, exp)),
-        SweepKind::A3VecRng => {
-            if crate::simd::force_portable() {
-                Box::new(a3_vecrng::A3VecRng::<crate::simd::portable::U32xN<4>>::new(
-                    model, s0, seed, exp,
-                ))
-            } else {
-                Box::new(a3_vecrng::A3VecRng::<crate::simd::U32x4>::new(model, s0, seed, exp))
-            }
-        }
-        SweepKind::A4Full => {
-            if crate::simd::force_portable() {
-                Box::new(a4_full::A4Full::<crate::simd::portable::U32xN<4>>::new(
-                    model, s0, seed, exp,
-                ))
-            } else {
-                Box::new(a4_full::A4Full::<crate::simd::U32x4>::new(model, s0, seed, exp))
-            }
-        }
-        SweepKind::A3VecRngW8 => make_a3_w8(model, s0, seed, exp),
-        SweepKind::A4FullW8 => make_a4_w8(model, s0, seed, exp),
-        SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => anyhow::bail!(
-            "replica-batch rung {} sweeps a lane-batch of replicas, not one model; \
-             use sweep::c1_replica_batch::make_batch_sweeper (or tempering::BatchedPtEnsemble)",
-            kind.label()
-        ),
-        SweepKind::B1Accel | SweepKind::B2Accel => anyhow::bail!(
-            "accelerator rung {} needs a Runtime and on-disk artifacts; \
-             use sweep::accel::AccelSweeper::new",
-            kind.label()
-        ),
-    })
-}
-
-/// Runtime-dispatched 8-lane A.3: AVX2 backend when detected, portable
-/// octet lanes otherwise.
-fn make_a3_w8(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Box<dyn Sweeper + Send> {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if crate::simd::avx2_available() {
-            return Box::new(a3_vecrng::A3VecRng::<crate::simd::avx2::U32x8>::new(
-                model, s0, seed, exp,
-            ));
-        }
-    }
-    Box::new(a3_vecrng::A3VecRng::<crate::simd::portable::U32xN<8>>::new(model, s0, seed, exp))
-}
-
-/// Runtime-dispatched 8-lane A.4: AVX2 backend when detected, portable
-/// octet lanes otherwise.
-fn make_a4_w8(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> Box<dyn Sweeper + Send> {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if crate::simd::avx2_available() {
-            return Box::new(a4_full::A4Full::<crate::simd::avx2::U32x8>::new(
-                model, s0, seed, exp,
-            ));
-        }
-    }
-    Box::new(a4_full::A4Full::<crate::simd::portable::U32xN<8>>::new(model, s0, seed, exp))
+    Ok(crate::engine::EngineBuilder::new(kind.spec())
+        .exp(exp)
+        .build(model, s0, seed)?
+        .into_sweeper())
 }
 
 #[cfg(test)]
@@ -578,8 +551,50 @@ mod tests {
         let mut w8 = try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1).unwrap();
         assert_eq!(w4.kind(), SweepKind::A4Full);
         assert_eq!(w8.kind(), SweepKind::A4FullW8);
+        assert_eq!(w4.width(), 4);
+        assert_eq!(w8.width(), 8);
         // Both must actually sweep.
         assert!(w4.run(2, 0.8).attempts > 0);
         assert!(w8.run(2, 0.8).attempts > 0);
+    }
+
+    /// The deprecated constructors stay behaviourally identical to the
+    /// `try_` shims (the only sanctioned use of the deprecated API).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_aliases_still_construct() {
+        let wl = torus_workload(4, 4, 8, 1, 0.3);
+        let mut a = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
+        let mut b = try_make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
+        a.run(5, 0.8);
+        b.run(5, 0.8);
+        assert_eq!(a.energy().to_bits(), b.energy().to_bits());
+        let mut c =
+            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 3, ExpMode::Exact)
+                .unwrap();
+        let mut d =
+            try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 3, ExpMode::Exact)
+                .unwrap();
+        c.run(5, 0.8);
+        d.run(5, 0.8);
+        assert_eq!(c.energy().to_bits(), d.energy().to_bits());
+    }
+
+    #[test]
+    fn kinds_have_canonical_spellings_that_reparse() {
+        for kind in [
+            SweepKind::A1Original,
+            SweepKind::A2Basic,
+            SweepKind::A3VecRng,
+            SweepKind::A4Full,
+            SweepKind::A3VecRngW8,
+            SweepKind::A4FullW8,
+            SweepKind::C1ReplicaBatch,
+            SweepKind::C1ReplicaBatchW8,
+            SweepKind::B1Accel,
+            SweepKind::B2Accel,
+        ] {
+            assert_eq!(SweepKind::from_str(kind.cli_spelling()).unwrap(), kind);
+        }
     }
 }

@@ -17,7 +17,7 @@
 
 use crate::ising::QmcModel;
 use crate::rng::Mt19937;
-use crate::sweep::c1_replica_batch::{make_batch_sweeper, BatchSweeper};
+use crate::sweep::c1_replica_batch::BatchSweeper;
 use crate::sweep::{ExpMode, SweepKind, SweepStats};
 use crate::Result;
 
@@ -46,16 +46,25 @@ impl BatchedPtEnsemble {
     /// same per-replica seed convention as the scalar ensemble, so lane
     /// `i` reproduces the scalar replica `i` trajectory bit-for-bit under
     /// `ExpMode::Exact`.
+    ///
+    /// Takes anything that lowers onto a [`crate::engine::SamplerSpec`]
+    /// (a legacy C-rung [`SweepKind`] or a `c1` spec); the backend and
+    /// effective width come from the negotiated plan.
     pub fn new(
         ladder: Ladder,
-        kind: SweepKind,
+        spec: impl Into<crate::engine::SamplerSpec>,
         models: &[QmcModel],
         states: &[Vec<f32>],
         seeds: &[u32],
         swap_seed: u32,
         exp: ExpMode,
     ) -> Result<Self> {
-        anyhow::ensure!(kind.is_replica_batch(), "{} is not a replica-batch rung", kind.label());
+        let spec = spec.into();
+        anyhow::ensure!(
+            spec.rung.is_replica_batch(),
+            "{} is not a replica-batch rung",
+            spec.rung.label()
+        );
         let n = ladder.len();
         anyhow::ensure!(
             models.len() == n && states.len() == n && seeds.len() == n,
@@ -64,7 +73,19 @@ impl BatchedPtEnsemble {
             states.len(),
             seeds.len()
         );
-        let w = kind.group_width();
+        anyhow::ensure!(n > 0, "cannot batch an empty ladder");
+        let plan = crate::engine::EngineBuilder::new(spec)
+            .layers(models[0].n_layers)
+            .exp(exp)
+            .plan()?;
+        let kind = plan.legacy_kind().ok_or_else(|| {
+            anyhow::anyhow!(
+                "the coordinator's checkpoint format spells widths 4 and 8 only (plan resolved \
+                 to width {}); build the batch directly via engine::EngineBuilder::build_batch",
+                plan.width
+            )
+        })?;
+        let w = plan.width;
         let n_batches = n.div_ceil(w);
         let mut batches = Vec::with_capacity(n_batches);
         let mut lane_betas = Vec::with_capacity(n_batches);
@@ -89,7 +110,13 @@ impl BatchedPtEnsemble {
                 })
                 .collect();
             let betas: Vec<f32> = (0..w).map(|k| ladder.beta(lane_idx(k))).collect();
-            batches.push(make_batch_sweeper(kind, &lane_models, &lane_states, &lane_seeds, exp)?);
+            batches.push(crate::engine::builder::instantiate_batch(
+                plan.resolved(),
+                &lane_models,
+                &lane_states,
+                &lane_seeds,
+                exp,
+            )?);
             lane_betas.push(betas);
         }
         Ok(Self {

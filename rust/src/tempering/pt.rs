@@ -256,14 +256,14 @@ impl<S: Sweeper + ?Sized> PtEnsembleImpl<S> {
 mod tests {
     use super::*;
     use crate::ising::builder::torus_workload;
-    use crate::sweep::{make_sweeper, SweepKind};
+    use crate::sweep::{try_make_sweeper, SweepKind};
 
     fn ensemble(n: usize) -> PtEnsemble {
         let ladder = Ladder::geometric(2.0, 0.2, n);
         let replicas = (0..n)
             .map(|i| {
                 let wl = torus_workload(4, 4, 8, 7, 0.3);
-                make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 100 + i as u32).unwrap()
+                try_make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 100 + i as u32).unwrap()
             })
             .collect();
         PtEnsemble::new(ladder, replicas, 999)

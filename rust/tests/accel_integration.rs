@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
 use vectorising::sweep::accel::{AccelSweeper, AccelVariant};
-use vectorising::sweep::{make_sweeper, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = artifact::default_dir();
@@ -98,7 +98,7 @@ fn accel_matches_cpu_rungs_statistically() {
     }
     let e_accel = acc_b / 20.0;
 
-    let mut a4 = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
+    let mut a4 = try_make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
     a4.run(100, beta);
     let mut acc_a = 0.0;
     for _ in 0..40 {

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use vectorising::ising::graph::BaseGraph;
 use vectorising::ising::QmcModel;
 use vectorising::sweep::c1_replica_batch::{make_batch_sweeper, BatchSweeper};
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 
 /// Exact Boltzmann distribution over energies of a tiny model (<= 2^16
 /// states), as a map from energy bits to probability.
@@ -60,7 +60,7 @@ fn sampled_energy_distribution(
 ) -> HashMap<i64, f64> {
     let m = tiny_model();
     let s0 = vec![1.0f32; m.n_spins()];
-    let mut sw = make_sweeper_with_exp(kind, &m, &s0, 4242, exp).unwrap();
+    let mut sw = try_make_sweeper_with_exp(kind, &m, &s0, 4242, exp).unwrap();
     sw.run(500, beta); // burn-in
     let mut acc: HashMap<i64, f64> = HashMap::new();
     for _ in 0..n_samples {
@@ -159,7 +159,7 @@ fn magnetization_tracks_field_sign() {
     // h > 0 on vertex 0 must bias <s_0> positive at low temperature.
     let m = tiny_model();
     let s0 = vec![-1.0f32; m.n_spins()];
-    let mut sw = make_sweeper_with_exp(SweepKind::A4Full, &m, &s0, 7, ExpMode::Exact).unwrap();
+    let mut sw = try_make_sweeper_with_exp(SweepKind::A4Full, &m, &s0, 7, ExpMode::Exact).unwrap();
     sw.run(500, 1.5);
     let mut mag0 = 0.0f64;
     let n = 2000;

@@ -1,0 +1,272 @@
+//! Engine API v1 contract tests.
+//!
+//! * Every legacy `SweepKind` CLI spelling round-trips onto the
+//!   equivalent orthogonal `SamplerSpec` (and back through the plan's
+//!   `legacy_kind`).
+//! * `EngineBuilder`-built sweepers are **bit-exact** with the legacy
+//!   `try_make_sweeper` constructors for all single-model rungs ×
+//!   W ∈ {4, 8}, and for the C-rung lane-batches.
+//! * Negotiation: the acceptance scenario (`c1`/auto/layers=2) explains
+//!   the A-rung rejections; geometry failures downcast to
+//!   `UnsupportedGeometry` with usable alternatives.
+
+use std::str::FromStr;
+
+use vectorising::engine::{
+    Backend, BackendPref, EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry,
+};
+use vectorising::ising::builder::torus_workload;
+use vectorising::sweep::c1_replica_batch::{make_batch_sweeper, BatchSweeper};
+use vectorising::sweep::{try_make_sweeper, ExpMode, SweepKind, Sweeper};
+
+/// Every CLI spelling of every legacy kind, with the spec it must lower
+/// to.  (The table mirrors `SweepKind::from_str` exhaustively.)
+fn spelling_table() -> Vec<(&'static str, SamplerSpec)> {
+    let s = SamplerSpec::rung;
+    vec![
+        ("a1-original", s(Rung::A1).w(1)),
+        ("a1", s(Rung::A1).w(1)),
+        ("A.1", s(Rung::A1).w(1)),
+        ("a2-basic", s(Rung::A2).w(1)),
+        ("a2", s(Rung::A2).w(1)),
+        ("A.2", s(Rung::A2).w(1)),
+        ("a3-vec-rng", s(Rung::A3).w(4)),
+        ("a3-vecrng", s(Rung::A3).w(4)),
+        ("a3", s(Rung::A3).w(4)),
+        ("A.3", s(Rung::A3).w(4)),
+        ("a3-vec-rng-w4", s(Rung::A3).w(4)),
+        ("a3-w4", s(Rung::A3).w(4)),
+        ("a4-full", s(Rung::A4).w(4)),
+        ("a4", s(Rung::A4).w(4)),
+        ("A.4", s(Rung::A4).w(4)),
+        ("a4-full-w4", s(Rung::A4).w(4)),
+        ("a4-w4", s(Rung::A4).w(4)),
+        ("a3-vec-rng-w8", s(Rung::A3).w(8)),
+        ("a3-vecrng-w8", s(Rung::A3).w(8)),
+        ("a3-w8", s(Rung::A3).w(8)),
+        ("A.3w8", s(Rung::A3).w(8)),
+        ("a4-full-w8", s(Rung::A4).w(8)),
+        ("a4-w8", s(Rung::A4).w(8)),
+        ("A.4w8", s(Rung::A4).w(8)),
+        ("c1-replica-batch", s(Rung::C1).w(4)),
+        ("c1", s(Rung::C1).w(4)),
+        ("C.1", s(Rung::C1).w(4)),
+        ("c1-replica-batch-w4", s(Rung::C1).w(4)),
+        ("c1-w4", s(Rung::C1).w(4)),
+        ("c1-replica-batch-w8", s(Rung::C1).w(8)),
+        ("c1-w8", s(Rung::C1).w(8)),
+        ("C.1w8", s(Rung::C1).w(8)),
+        ("b1-accel", s(Rung::B1).w(32).on(BackendPref::Accel)),
+        ("b1", s(Rung::B1).w(32).on(BackendPref::Accel)),
+        ("B.1", s(Rung::B1).w(32).on(BackendPref::Accel)),
+        ("b2-accel", s(Rung::B2).w(32).on(BackendPref::Accel)),
+        ("b2", s(Rung::B2).w(32).on(BackendPref::Accel)),
+        ("B.2", s(Rung::B2).w(32).on(BackendPref::Accel)),
+    ]
+}
+
+#[test]
+fn every_legacy_spelling_lowers_to_the_equivalent_spec() {
+    for (spelling, want) in spelling_table() {
+        let kind = SweepKind::from_str(spelling).unwrap_or_else(|e| {
+            panic!("legacy spelling {spelling:?} must still parse: {e}");
+        });
+        assert_eq!(kind.spec(), want, "spelling {spelling:?}");
+    }
+}
+
+#[test]
+fn plans_round_trip_back_to_the_legacy_kind() {
+    // For every legacy kind whose plan is resolvable without hardware
+    // (i.e. the CPU rungs), the negotiated plan names that same kind.
+    let layers = 16; // supports both the w4 and w8 interlacing
+    for kind in [
+        SweepKind::A1Original,
+        SweepKind::A2Basic,
+        SweepKind::A3VecRng,
+        SweepKind::A4Full,
+        SweepKind::A3VecRngW8,
+        SweepKind::A4FullW8,
+        SweepKind::C1ReplicaBatch,
+        SweepKind::C1ReplicaBatchW8,
+    ] {
+        let plan = EngineBuilder::new(kind.spec()).layers(layers).plan().unwrap();
+        assert_eq!(plan.legacy_kind(), Some(kind), "{kind:?}");
+        assert_eq!(plan.label(), kind.label(), "{kind:?}");
+        assert_eq!(plan.width, kind.group_width(), "{kind:?}");
+    }
+}
+
+/// Drive a legacy-built and a builder-built sweeper through the same
+/// schedule and require bit-identical trajectories.
+fn assert_bit_exact(kind: SweepKind, spec: SamplerSpec, layers: usize) {
+    let wl = torus_workload(4, 4, layers, 3, 0.3);
+    let mut legacy = try_make_sweeper(kind, &wl.model, &wl.s0, 41).unwrap();
+    let mut built = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 41).unwrap();
+    assert_eq!(built.plan.legacy_kind(), Some(kind));
+    for &beta in &[0.4f32, 0.9, 1.5] {
+        let sl = legacy.run(7, beta);
+        let sb = built.run(7, beta);
+        assert_eq!(sl.flips, sb.flips, "{kind:?} flips at beta={beta}");
+        assert_eq!(sl.attempts, sb.attempts);
+        assert_eq!(
+            legacy.energy().to_bits(),
+            built.energy().to_bits(),
+            "{kind:?} energy at beta={beta}"
+        );
+    }
+    let state_l: Vec<u32> = legacy.state().iter().map(|x| x.to_bits()).collect();
+    let state_b: Vec<u32> = built.state().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(state_l, state_b, "{kind:?} final state");
+    assert_eq!(legacy.rng_state(), built.rng_state(), "{kind:?} rng stream position");
+}
+
+#[test]
+fn builder_is_bit_exact_with_legacy_constructors_for_all_rungs() {
+    let layers = 16; // divisible into 4 and 8 sections of >= 2 layers
+    assert_bit_exact(SweepKind::A1Original, SamplerSpec::rung(Rung::A1), layers);
+    assert_bit_exact(SweepKind::A2Basic, SamplerSpec::rung(Rung::A2), layers);
+    assert_bit_exact(SweepKind::A3VecRng, SamplerSpec::rung(Rung::A3).w(4), layers);
+    assert_bit_exact(SweepKind::A4Full, SamplerSpec::rung(Rung::A4).w(4), layers);
+    assert_bit_exact(SweepKind::A3VecRngW8, SamplerSpec::rung(Rung::A3).w(8), layers);
+    assert_bit_exact(SweepKind::A4FullW8, SamplerSpec::rung(Rung::A4).w(8), layers);
+}
+
+#[test]
+fn builder_batches_are_bit_exact_with_legacy_batch_constructor() {
+    for (kind, w) in [(SweepKind::C1ReplicaBatch, 4usize), (SweepKind::C1ReplicaBatchW8, 8)] {
+        let wls: Vec<_> = (0..w).map(|k| torus_workload(4, 4, 4, k as u64, 0.3)).collect();
+        let models: Vec<_> = wls.iter().map(|wl| wl.model.clone()).collect();
+        let states: Vec<_> = wls.iter().map(|wl| wl.s0.clone()).collect();
+        let seeds: Vec<u32> = (0..w as u32).map(|k| 7000 + k).collect();
+        let betas: Vec<f32> = (0..w).map(|k| 0.4 + 0.1 * k as f32).collect();
+
+        let mut legacy =
+            make_batch_sweeper(kind, &models, &states, &seeds, ExpMode::Fast).unwrap();
+        let mut built = EngineBuilder::new(kind.spec())
+            .exp(ExpMode::Fast)
+            .build_batch(&models, &states, &seeds)
+            .unwrap();
+        assert_eq!(built.plan.width, w);
+        let sl = legacy.run(9, &betas);
+        let sb = built.run(9, &betas);
+        for k in 0..w {
+            assert_eq!(sl[k].flips, sb[k].flips, "lane {k} of {kind:?}");
+            assert_eq!(
+                legacy.energy_of(k).to_bits(),
+                built.energy_of(k).to_bits(),
+                "lane {k} of {kind:?}"
+            );
+            let a: Vec<u32> = legacy.state_of(k).iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = built.state_of(k).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "lane {k} of {kind:?}");
+        }
+        assert_eq!(legacy.rng_state(), built.rng_state(), "{kind:?}");
+    }
+}
+
+#[test]
+fn pinned_portable_backend_is_bit_exact_with_the_intrinsic_one() {
+    // The portable lanes are the differential oracle: pinning them via
+    // the spec must reproduce the auto-negotiated intrinsic backend bit
+    // for bit (same algorithm, different instructions).
+    let wl = torus_workload(4, 4, 16, 5, 0.3);
+    for width in [4usize, 8] {
+        let auto_spec = SamplerSpec::rung(Rung::A4).w(width);
+        let portable_spec = auto_spec.on(BackendPref::Portable);
+        let mut auto_built = EngineBuilder::new(auto_spec).build(&wl.model, &wl.s0, 9).unwrap();
+        let mut portable =
+            EngineBuilder::new(portable_spec).build(&wl.model, &wl.s0, 9).unwrap();
+        assert_eq!(portable.plan.backend, Backend::Portable);
+        auto_built.run(11, 0.8);
+        portable.run(11, 0.8);
+        assert_eq!(
+            auto_built.energy().to_bits(),
+            portable.energy().to_bits(),
+            "width {width}: portable and {} must agree bit-for-bit",
+            auto_built.plan.backend
+        );
+        let a: Vec<u32> = auto_built.state().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = portable.state().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "width {width} state");
+    }
+}
+
+#[test]
+fn acceptance_c1_auto_plan_at_layers_2() {
+    // `repro plan --rung c1 --width auto --layers 2` in API form: the
+    // plan names a concrete backend, the effective width, and the reason
+    // the A-rungs were rejected.
+    let plan = EngineBuilder::new(SamplerSpec::rung(Rung::C1)).layers(2).plan().unwrap();
+    assert!(matches!(plan.backend, Backend::Sse2 | Backend::Avx2 | Backend::Portable));
+    assert!(plan.width == 4 || plan.width == 8);
+    assert!(
+        plan.rejected
+            .iter()
+            .any(|r| matches!(r.rung, Rung::A3 | Rung::A4) && r.code == "layer-interlace"),
+        "missing A-rung rejection reasons: {:?}",
+        plan.rejected
+    );
+    let json = plan.to_json();
+    assert!(json.contains("\"protocol_version\":1"), "{json}");
+    assert!(json.contains("layer-interlace"), "{json}");
+}
+
+#[test]
+fn geometry_errors_are_structured_with_alternatives() {
+    let wl = torus_workload(4, 4, 12, 1, 0.3); // 12 % 8 != 0
+    let err = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(8))
+        .build(&wl.model, &wl.s0, 1)
+        .err()
+        .unwrap();
+    let ug = err.downcast_ref::<UnsupportedGeometry>().expect("structured geometry error");
+    assert_eq!((ug.rung, ug.width, ug.layers), (Rung::A4, 8, 12));
+    // The alternatives actually work at this geometry.
+    let alt = ug.alternatives.first().expect("at least one alternative");
+    assert!(EngineBuilder::new(*alt).layers(12).plan().is_ok(), "alternative {alt} must plan");
+    assert!(ug.alternatives.iter().any(|a| a.rung == Rung::C1));
+    // And the legacy shim surfaces the same structured error.
+    let err2 = try_make_sweeper(SweepKind::A4FullW8, &wl.model, &wl.s0, 1).err().unwrap();
+    assert!(err2.downcast_ref::<UnsupportedGeometry>().is_some());
+}
+
+#[test]
+fn portable_width_16_builds_and_samples() {
+    // Widths beyond the intrinsic backends come free via the
+    // const-generic portable lanes: no new enum variant, just a spec.
+    let wl = torus_workload(4, 4, 32, 1, 0.3);
+    let spec = SamplerSpec::rung(Rung::A4).w(16);
+    let mut engine = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 77).unwrap();
+    assert_eq!(engine.plan.backend, Backend::Portable);
+    assert_eq!(engine.plan.width, 16);
+    assert_eq!(engine.plan.label(), "A.4w16");
+    assert_eq!(engine.width(), 16, "Sweeper::width reports the true lane count");
+    let stats = engine.run(20, 0.8);
+    assert_eq!(stats.attempts, 20 * 4 * 4 * 32);
+    assert!(stats.flips > 0, "a hot sweep must flip something");
+    assert!(engine.validate() < 1e-3, "incremental fields stay exact at W=16");
+    // And C.1 at 16 lanes (16 independent replicas in lockstep).
+    let wls: Vec<_> = (0..16).map(|k| torus_workload(4, 4, 2, k as u64, 0.3)).collect();
+    let models: Vec<_> = wls.iter().map(|wl| wl.model.clone()).collect();
+    let states: Vec<_> = wls.iter().map(|wl| wl.s0.clone()).collect();
+    let seeds: Vec<u32> = (0..16).collect();
+    let betas = vec![0.8f32; 16];
+    let mut batch = EngineBuilder::new(SamplerSpec::rung(Rung::C1).w(16))
+        .build_batch(&models, &states, &seeds)
+        .unwrap();
+    assert_eq!(batch.plan.label(), "C.1w16");
+    let per_lane = batch.run(5, &betas);
+    assert_eq!(per_lane.len(), 16);
+    assert!(batch.validate() < 1e-3);
+}
+
+#[test]
+fn width_auto_respects_the_host_and_geometry() {
+    let widest = vectorising::simd::widest_supported_width();
+    let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4)).layers(32).plan().unwrap();
+    assert_eq!(plan.width, widest, "auto width picks the host's widest backend");
+    // layers=12 rejects w8, so auto narrows to 4 — same decision the old
+    // `preferred_cpu_for_layers` made, now with the reason recorded.
+    let narrowed = EngineBuilder::new(SamplerSpec::rung(Rung::A4)).layers(12).plan().unwrap();
+    assert_eq!(narrowed.width, 4);
+}

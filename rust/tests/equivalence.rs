@@ -13,15 +13,15 @@
 //!   with a from-scratch recomputation (the paper's h_eff bookkeeping).
 
 use vectorising::ising::builder::{diag_torus_workload, torus_workload};
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 
 #[test]
 fn a1_equals_a2_with_same_exp_mode() {
     for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
         let wl = torus_workload(6, 4, 8, 3, 0.3);
         let mut a1 =
-            make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 42, exp).unwrap();
-        let mut a2 = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 42, exp).unwrap();
+            try_make_sweeper_with_exp(SweepKind::A1Original, &wl.model, &wl.s0, 42, exp).unwrap();
+        let mut a2 = try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 42, exp).unwrap();
         for round in 0..20 {
             let s1 = a1.run(1, 0.8);
             let s2 = a2.run(1, 0.8);
@@ -36,9 +36,9 @@ fn a3_equals_a4_bitexact() {
     for (w, h, l, seed) in [(4usize, 4usize, 8usize, 1u32), (6, 4, 16, 7), (8, 8, 32, 99)] {
         let wl = torus_workload(w, h, l, seed as u64, 0.3);
         let mut a3 =
-            make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, seed, ExpMode::Fast)
+            try_make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, seed, ExpMode::Fast)
                 .unwrap();
-        let mut a4 = make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, seed, ExpMode::Fast)
+        let mut a4 = try_make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, seed, ExpMode::Fast)
             .unwrap();
         for round in 0..10 {
             let beta = 0.2 + 0.2 * (round % 4) as f32;
@@ -61,10 +61,10 @@ fn a3_w8_equals_a4_w8_bitexact() {
     for (w, h, l, seed) in [(4usize, 4usize, 16usize, 1u32), (6, 4, 24, 7), (8, 8, 32, 99)] {
         let wl = torus_workload(w, h, l, seed as u64, 0.3);
         let mut a3 =
-            make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
+            try_make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
                 .unwrap();
         let mut a4 =
-            make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
+            try_make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, seed, ExpMode::Fast)
                 .unwrap();
         for round in 0..10 {
             let beta = 0.2 + 0.2 * (round % 4) as f32;
@@ -81,9 +81,9 @@ fn a3_w8_equals_a4_w8_bitexact() {
 fn a3_a4_also_agree_on_degree6_graph() {
     let wl = diag_torus_workload(6, 4, 12, 5, 0.25);
     let mut a3 =
-        make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+        try_make_sweeper_with_exp(SweepKind::A3VecRng, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
     let mut a4 =
-        make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+        try_make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
     for _ in 0..8 {
         a3.run(1, 0.6);
         a4.run(1, 0.6);
@@ -95,9 +95,9 @@ fn a3_a4_also_agree_on_degree6_graph() {
 fn a3_a4_w8_also_agree_on_degree6_graph() {
     let wl = diag_torus_workload(6, 4, 16, 5, 0.25);
     let mut a3 =
-        make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+        try_make_sweeper_with_exp(SweepKind::A3VecRngW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
     let mut a4 =
-        make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
+        try_make_sweeper_with_exp(SweepKind::A4FullW8, &wl.model, &wl.s0, 11, ExpMode::Fast).unwrap();
     for _ in 0..8 {
         a3.run(1, 0.6);
         a4.run(1, 0.6);
@@ -110,7 +110,7 @@ fn effective_fields_stay_consistent_on_every_rung() {
     let wl = torus_workload(6, 6, 16, 13, 0.35);
     for kind in SweepKind::all_cpu_wide() {
         let mut sw =
-            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 77, kind.default_exp()).unwrap();
+            try_make_sweeper_with_exp(kind, &wl.model, &wl.s0, 77, kind.default_exp()).unwrap();
         sw.run(25, 0.7);
         let err = sw.validate();
         assert!(err < 1e-3, "{kind:?} h_eff drift {err}");
@@ -128,7 +128,7 @@ fn all_rungs_sample_the_same_distribution() {
     let mut means = Vec::new();
     for kind in SweepKind::all_cpu_wide() {
         let wl = torus_workload(4, 4, 16, 21, 0.3);
-        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 5489, ExpMode::Exact).unwrap();
+        let mut sw = try_make_sweeper_with_exp(kind, &wl.model, &wl.s0, 5489, ExpMode::Exact).unwrap();
         sw.run(200, beta); // burn-in
         let mut acc = 0.0;
         let n = 300;
@@ -153,7 +153,7 @@ fn fast_exp_mode_does_not_bias_sampling() {
     let mut res = Vec::new();
     for exp in [ExpMode::Exact, ExpMode::Fast, ExpMode::Accurate] {
         let wl = torus_workload(4, 4, 8, 33, 0.3);
-        let mut sw = make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 123, exp).unwrap();
+        let mut sw = try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 123, exp).unwrap();
         sw.run(200, beta);
         let mut acc = 0.0;
         let n = 300;
@@ -173,7 +173,7 @@ fn fast_exp_mode_does_not_bias_sampling() {
 fn set_state_resets_trajectory() {
     for kind in [SweepKind::A4Full, SweepKind::A4FullW8] {
         let wl = torus_workload(4, 4, 16, 8, 0.3);
-        let mut sw = make_sweeper_with_exp(kind, &wl.model, &wl.s0, 9, ExpMode::Fast).unwrap();
+        let mut sw = try_make_sweeper_with_exp(kind, &wl.model, &wl.s0, 9, ExpMode::Fast).unwrap();
         sw.run(5, 0.5);
         let snapshot = sw.state();
         sw.run(5, 0.5);
@@ -190,7 +190,7 @@ fn flip_probability_monotone_in_temperature() {
     let mut probs = Vec::new();
     for beta in [3.0f32, 1.0, 0.2] {
         let mut sw =
-            make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 50, ExpMode::Fast).unwrap();
+            try_make_sweeper_with_exp(SweepKind::A4Full, &wl.model, &wl.s0, 50, ExpMode::Fast).unwrap();
         sw.run(10, beta); // settle
         let st = sw.run(30, beta);
         probs.push(st.flip_prob());

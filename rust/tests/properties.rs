@@ -10,7 +10,7 @@ use vectorising::ising::lcg::Lcg;
 use vectorising::ising::reorder::InterlaceW;
 use vectorising::rng::{Mt19937, Mt19937Simd};
 use vectorising::simd::{portable, SimdU32};
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 use vectorising::tempering::{exchange_pass, Ladder, PtEnsemble, ReplicaSet};
 use vectorising::util::json::Value;
 
@@ -104,7 +104,7 @@ fn prop_heff_consistency_under_random_schedules() {
         let wl = random_workload(&mut rng);
         let kind = random_cpu_kind(&mut rng, wl.model.n_layers);
         let mut sw =
-            make_sweeper_with_exp(kind, &wl.model, &wl.s0, case as u32, ExpMode::Fast).unwrap();
+            try_make_sweeper_with_exp(kind, &wl.model, &wl.s0, case as u32, ExpMode::Fast).unwrap();
         for _ in 0..5 {
             let beta = 0.1 + rng.next_unit().abs() * 2.0;
             let n = 1 + (rng.next_u64() % 4) as usize;
@@ -123,7 +123,7 @@ fn prop_stats_and_domain_invariants() {
         let wl = random_workload(&mut rng);
         let kind = random_cpu_kind(&mut rng, wl.model.n_layers);
         let mut sw =
-            make_sweeper_with_exp(kind, &wl.model, &wl.s0, 1 + case as u32, ExpMode::Fast).unwrap();
+            try_make_sweeper_with_exp(kind, &wl.model, &wl.s0, 1 + case as u32, ExpMode::Fast).unwrap();
         let stats = sw.run(4, 0.9);
         assert_eq!(stats.attempts, 4 * wl.model.n_spins() as u64, "case {case}");
         assert!(stats.flips <= stats.attempts);
@@ -144,7 +144,7 @@ fn prop_exchange_preserves_state_multiset() {
         let replicas = (0..n)
             .map(|i| {
                 let wl = torus_workload(4, 4, 8, 5, 0.3);
-                make_sweeper_with_exp(
+                try_make_sweeper_with_exp(
                     SweepKind::A2Basic,
                     &wl.model,
                     &wl.s0,

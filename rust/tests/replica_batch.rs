@@ -12,7 +12,7 @@ use vectorising::ising::builder::torus_workload;
 use vectorising::ising::QmcModel;
 use vectorising::simd::{avx2_available, portable, SimdU32};
 use vectorising::sweep::c1_replica_batch::{BatchSweeper, C1ReplicaBatch};
-use vectorising::sweep::{make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
+use vectorising::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, Sweeper};
 use vectorising::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
 
 /// Per-lane inputs: W identically-shaped models with *different* coupling
@@ -37,7 +37,7 @@ fn assert_lanes_match_a2<U: SimdU32>(layers: usize) {
     let mut batch = C1ReplicaBatch::<U>::new(&models, &states, &seeds, ExpMode::Exact).unwrap();
     let mut scalars: Vec<Box<dyn Sweeper + Send>> = (0..w)
         .map(|k| {
-            make_sweeper_with_exp(SweepKind::A2Basic, &models[k], &states[k], seeds[k], ExpMode::Exact)
+            try_make_sweeper_with_exp(SweepKind::A2Basic, &models[k], &states[k], seeds[k], ExpMode::Exact)
                 .unwrap()
         })
         .collect();
@@ -112,7 +112,7 @@ fn batched_ensemble_matches_scalar_ensemble_through_exchanges() {
 
     let scalars: Vec<Box<dyn Sweeper + Send>> = (0..n)
         .map(|i| {
-            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, seeds[i], ExpMode::Exact)
+            try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, seeds[i], ExpMode::Exact)
                 .unwrap()
         })
         .collect();

@@ -30,6 +30,7 @@ fn spec(id: &str, shape: (usize, usize, usize), sweeps: usize, seed: u32) -> Job
         seed,
         trace_every: 0,
         want_state: true,
+        sampler: None,
     }
 }
 

@@ -32,6 +32,7 @@ fn spec(id: &str, shape: (usize, usize, usize), seed: u32) -> JobSpec {
         seed,
         trace_every: 0,
         want_state: true,
+        sampler: None,
     }
 }
 
@@ -82,7 +83,13 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
     // A long flush deadline, so a slow CI machine cannot split a full
     // bucket into padded flushes: full batches dispatch immediately, and
     // only the phase-2 lone job pays the deadline.
-    let cfg = ServiceConfig { lanes: w, threads: 2, flush_ms: 300, exp: ExpMode::Fast };
+    let cfg = ServiceConfig {
+        lanes: w,
+        threads: 2,
+        flush_ms: 300,
+        exp: ExpMode::Fast,
+        ..ServiceConfig::default()
+    };
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
@@ -99,10 +106,18 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
         assert!(r.kind.starts_with("C.1"), "uniform job served by a C-rung, got {}", r.kind);
         assert_eq!(r.lanes, w);
         assert_eq!(r.occupancy, w, "uniform stream must fill whole batches");
+        // Protocol v1: every response is versioned and echoes the plan.
+        let v = Value::parse(line).unwrap();
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        let plan = r.plan.as_ref().expect("v1 results echo the resolved plan");
+        assert_eq!(plan.rung, "c1");
+        assert_eq!(plan.width, w);
+        assert!(["sse2", "avx2", "portable"].contains(&plan.backend.as_str()), "{plan:?}");
     }
     let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
     assert_eq!(stats.len(), 1);
     let v = Value::parse(&stats[0]).unwrap();
+    assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
     let fill = v.get("lane_fill_ratio").unwrap().as_f64().unwrap();
     assert!(fill > 0.9, "uniform-shape stream must report lane fill > 0.9, got {fill}");
     assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), 2 * w);
@@ -124,6 +139,56 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
             assert!(r.kind.starts_with("C.1"), "shallow jobs batch on the C-rungs");
         }
     }
+
+    // Phase 3 — v1 envelopes: jobs carrying sampler specs.  A c1/auto
+    // sampler batches as usual; an a2 sampler pins the scalar path even
+    // with lane-mates available; an incompatible width is refused with a
+    // structured error line.
+    let v1_lines: Vec<String> = (0..w)
+        .map(|i| {
+            format!(
+                r#"{{"protocol_version":1,"op":"submit","job":{{"id":"v{i}","width":4,"height":4,"layers":8,"model_seed":{},"sweeps":30,"beta":0.7,"seed":{},"want_state":true,"sampler":{{"rung":"c1","width":"auto","backend":"auto"}}}}}}"#,
+                1 + 400 + i,
+                400 + i
+            )
+        })
+        .chain(std::iter::once(
+            r#"{"protocol_version":1,"id":"vscalar","width":4,"height":4,"layers":8,"model_seed":450,"sweeps":30,"beta":0.7,"seed":449,"want_state":true,"sampler":{"rung":"a2"}}"#
+                .to_string(),
+        ))
+        .chain(std::iter::once(format!(
+            r#"{{"protocol_version":1,"id":"vbad","layers":8,"sampler":{{"rung":"c1","width":{}}}}}"#,
+            w + 1
+        )))
+        .collect();
+    let served = roundtrip(addr, &v1_lines);
+    assert_eq!(served.len(), w + 2, "one line per v1 request: {served:?}");
+    let mut saw_scalar = false;
+    let mut saw_bad = false;
+    for line in &served {
+        let v = Value::parse(line).unwrap();
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        match v.get("id").unwrap().as_str().unwrap() {
+            "vscalar" => {
+                saw_scalar = true;
+                let r = JobResult::from_line(line).unwrap();
+                assert_eq!(r.kind, "A.2", "a2 sampler pins the scalar path");
+                assert_eq!(r.plan.as_ref().unwrap().backend, "scalar");
+            }
+            "vbad" => {
+                saw_bad = true;
+                assert_eq!(v.get("status").unwrap().as_str().unwrap(), "error");
+                let msg = v.get("error").unwrap().as_str().unwrap().to_string();
+                assert!(msg.contains("width"), "useful rejection: {msg}");
+            }
+            _ => {
+                let r = JobResult::from_line(line).unwrap();
+                assert!(r.kind.starts_with("C.1"), "c1/auto sampler batches: {}", r.kind);
+                assert_eq!(r.plan.as_ref().unwrap().rung, "c1");
+            }
+        }
+    }
+    assert!(saw_scalar && saw_bad, "{served:?}");
 
     // Malformed and invalid lines get error results, not silence.
     let errs = roundtrip(
