@@ -4,48 +4,77 @@
 //! on millions of systems ... months of computation time on thousands of
 //! multi-core computers" — AQUA@Home volunteer computing) requires runs
 //! to survive interruption.  A checkpoint captures every replica's spin
-//! state plus the run configuration; restoring rebuilds the ensemble and
-//! re-derives the effective fields (h_eff is a pure function of state, so
-//! it is never serialized).
+//! state plus the full run description; restoring rebuilds the ensemble
+//! and re-derives the effective fields (h_eff is a pure function of
+//! state, so it is never serialized).
+//!
+//! **Schema v2** (`"schema": 2`) makes resume *spec-driven*: alongside
+//! the legacy `kind` label a checkpoint carries the requested
+//! [`SamplerSpec`] and the **resolved per-group plans** (`plans`:
+//! `[{rung, width, backend, replicas}]` — the group layout of a batched
+//! run, including heterogeneous layouts like `C.1w8 + C.1`).  Any plan
+//! the builder can instantiate round-trips — including portable
+//! `C.1w16` batches the legacy enum cannot spell — and
+//! [`Checkpoint::run_spec`] reconstructs the whole [`RunSpec`], so
+//! `repro run --resume ck.json` needs no sampler flags at all.  Schema
+//! v1 files (a bare `kind` string) still load: the label parses as a
+//! legacy `SweepKind` and lowers onto its spec via `From<SweepKind>`.
 //!
 //! Note on RNG state: the CPU rungs serialize their full MT19937 state
 //! (624 words per lane, hex-packed), so save → load → resume continues
 //! the *identical* trajectory the checkpointing run produces — the
-//! property the resume tests assert for both scalar and C-rung
-//! ensembles.  Capturing is itself a (statistically invisible) bit-level
-//! event: `capture` canonicalizes the live ensemble's effective fields
-//! by re-deriving them from the states, because a resumed run can only
-//! recompute fields, and incrementally maintained fields agree with that
-//! recomputation only up to floating-point rounding.  A run with
-//! periodic checkpoints therefore bit-diverges from the same seed run
-//! without them (same distribution, different rounding path).  Rungs
-//! that cannot serialize their generator (accelerator artifacts keep
-//! theirs on device) checkpoint states only; restoring such a checkpoint
-//! requires the caller to rebuild the ensemble with *fresh* sweeper
-//! seeds for the resumed segment (offset by the checkpoint epoch, say) —
-//! reusing the original seeds would replay the already-consumed uniform
-//! stream and correlate the continuation with the recorded segment.
+//! property the resume tests assert for scalar, C-rung and portable
+//! `C.1w16` ensembles.  Capturing is itself a (statistically invisible)
+//! bit-level event: `capture` canonicalizes the live ensemble's
+//! effective fields by re-deriving them from the states, because a
+//! resumed run can only recompute fields, and incrementally maintained
+//! fields agree with that recomputation only up to floating-point
+//! rounding.  A run with periodic checkpoints therefore bit-diverges
+//! from the same seed run without them (same distribution, different
+//! rounding path).  Rungs that cannot serialize their generator
+//! (accelerator artifacts keep theirs on device) checkpoint states
+//! only; restoring such a checkpoint through [`Checkpoint::restore`] is
+//! rejected with a structured [`NonResumableRng`] error that names the
+//! fresh-seed procedure — rebuild with seeds offset by the checkpoint
+//! epoch and use [`Checkpoint::restore_states_only`].
 
 use std::path::Path;
 
+use crate::engine::{EngineBuilder, GroupPlan, NonResumableRng, SamplerSpec, Width};
 use crate::sweep::{SweepKind, Sweeper};
 use crate::tempering::{BatchedPtEnsemble, PtEnsembleImpl};
 use crate::util::json::{self, Value};
 use crate::Result;
 
-use super::config::RunConfig;
+use super::config::{RunConfig, RunSpec};
+
+/// Schema version written by this build.  Version-1 files (no `schema`
+/// field) remain loadable; their `kind` label lowers onto a spec.
+pub const CHECKPOINT_SCHEMA_VERSION: usize = 2;
 
 /// A serializable snapshot of a tempering run.
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
+    /// Schema this snapshot was written under (2 for new captures, 1
+    /// for loaded legacy files).
+    pub schema: usize,
+    /// Label of the rung(s) the run executes (`A.2`, `C.1w16`,
+    /// `C.1w8+C.1`) — the v1 field, kept populated for old readers.
     pub kind: String,
+    /// v2: the sampler spec the run was requested with.
+    pub sampler: Option<SamplerSpec>,
+    /// v2: the resolved group layout.  One entry per lane-group for
+    /// batched ensembles (heterogeneous layouts included); a single
+    /// entry covering all replicas for per-replica ensembles.  Empty
+    /// for v1 files.
+    pub plans: Vec<GroupPlan>,
     pub epoch: u64,
     pub sweeps_done: usize,
     pub config: RunConfig,
     /// Per-replica ±1 states in original order, ladder-ordered.
     pub states: Vec<Vec<f32>>,
     /// Serialized sweep-RNG states for bit-exact resume: one entry per
-    /// replica (scalar ensembles) or per lane-batch (batched ensembles).
+    /// replica (scalar ensembles) or per lane-group (batched ensembles).
     /// Empty when the rung cannot serialize its generator.
     pub rngs: Vec<Vec<u32>>,
     /// Serialized exchange-RNG state (empty when not captured).
@@ -55,15 +84,9 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Capture the current ensemble state, including the full RNG states
-    /// (when every replica's rung can serialize its generator) so resume
-    /// is bit-exact.
-    ///
-    /// Note: capture *canonicalizes* the live ensemble — every replica's
-    /// effective fields are re-derived from its state (see the module
-    /// docs), so taking a checkpoint perturbs the run's subsequent
-    /// trajectory at the floating-point-rounding level (never its
-    /// distribution).
+    /// Capture a per-replica ensemble under a legacy [`SweepKind`] — a
+    /// shim over [`Checkpoint::capture_spec`] via the `From<SweepKind>`
+    /// lowering.
     pub fn capture<S: Sweeper + ?Sized>(
         kind: SweepKind,
         epoch: u64,
@@ -71,6 +94,26 @@ impl Checkpoint {
         config: &RunConfig,
         pt: &mut PtEnsembleImpl<S>,
     ) -> Self {
+        Self::capture_spec(kind.spec(), epoch, sweeps_done, config, pt)
+    }
+
+    /// Capture the current ensemble state under a sampler spec,
+    /// including the full RNG states (when every replica's rung can
+    /// serialize its generator) so resume is bit-exact.
+    ///
+    /// Note: capture *canonicalizes* the live ensemble — every replica's
+    /// effective fields are re-derived from its state (see the module
+    /// docs), so taking a checkpoint perturbs the run's subsequent
+    /// trajectory at the floating-point-rounding level (never its
+    /// distribution).
+    pub fn capture_spec<S: Sweeper + ?Sized>(
+        spec: impl Into<SamplerSpec>,
+        epoch: u64,
+        sweeps_done: usize,
+        config: &RunConfig,
+        pt: &mut PtEnsembleImpl<S>,
+    ) -> Self {
+        let spec = spec.into();
         let states: Vec<Vec<f32>> = (0..pt.len()).map(|i| pt.state_of(i)).collect();
         // Canonicalize the live ensemble at the snapshot point: re-derive
         // every replica's effective fields from its state.  A resumed run
@@ -81,11 +124,27 @@ impl Checkpoint {
         for (i, s) in states.iter().enumerate() {
             pt.set_state_of(i, s);
         }
-        let rngs: Vec<Vec<u32>> =
-            (0..pt.len()).filter_map(|i| pt.rng_state_of(i)).collect();
+        let rngs: Vec<Vec<u32>> = (0..pt.len()).filter_map(|i| pt.rng_state_of(i)).collect();
         let rngs = if rngs.len() == pt.len() { rngs } else { Vec::new() };
+        // Serialize the plan of what is *actually running*: pin the live
+        // ensemble's width before resolving, so a `width: auto` spec
+        // resumed on a different host (auto would now negotiate another
+        // width) still records plans consistent with the RNG payloads it
+        // serializes.  A spec that no longer resolves degrades to a
+        // label-only record.
+        let mut live_spec = spec;
+        if !pt.is_empty() {
+            live_spec.width = Width::W(pt.width_of(0));
+        }
+        let (kind, plans) = match EngineBuilder::new(live_spec).layers(config.layers).plan() {
+            Ok(plan) => (plan.label(), vec![GroupPlan::new(plan.resolved(), pt.len())]),
+            Err(_) => (spec.rung.label().to_string(), Vec::new()),
+        };
         Self {
-            kind: kind.label().to_string(),
+            schema: CHECKPOINT_SCHEMA_VERSION,
+            kind,
+            sampler: Some(spec),
+            plans,
             epoch,
             sweeps_done,
             config: config.clone(),
@@ -97,7 +156,8 @@ impl Checkpoint {
     }
 
     /// Capture a lane-batched (C-rung) ensemble: states per active
-    /// replica, RNG states per lane-batch.
+    /// replica, RNG states per lane-group, plus the ensemble's resolved
+    /// per-group plans (heterogeneous layouts included).
     pub fn capture_batched(
         epoch: u64,
         sweeps_done: usize,
@@ -105,13 +165,16 @@ impl Checkpoint {
         pt: &mut BatchedPtEnsemble,
     ) -> Self {
         let states: Vec<Vec<f32>> = (0..pt.len()).map(|i| pt.state_of(i)).collect();
-        // Same field canonicalization as `capture` (active lanes only —
-        // padded lanes never influence them).
+        // Same field canonicalization as `capture_spec` (active lanes only
+        // — padded lanes never influence them).
         for (i, s) in states.iter().enumerate() {
             pt.set_state_of(i, s);
         }
         Self {
-            kind: pt.kind().label().to_string(),
+            schema: CHECKPOINT_SCHEMA_VERSION,
+            kind: pt.label(),
+            sampler: Some(pt.spec()),
+            plans: pt.plans().to_vec(),
             epoch,
             sweeps_done,
             config: config.clone(),
@@ -122,40 +185,102 @@ impl Checkpoint {
         }
     }
 
+    /// The sampler spec this checkpoint resumes under: the recorded v2
+    /// spec, or — for v1 files — the legacy `kind` label parsed as a
+    /// [`SweepKind`] and lowered via `From<SweepKind>`.
+    pub fn sampler_spec(&self) -> Result<SamplerSpec> {
+        if let Some(s) = self.sampler {
+            return Ok(s);
+        }
+        let kind: SweepKind = self.kind.parse().map_err(|e: crate::Error| {
+            anyhow::anyhow!(
+                "v1 checkpoint kind {:?} does not name a legacy rung, cannot derive a \
+                 sampler spec: {e}",
+                self.kind
+            )
+        })?;
+        Ok(kind.spec())
+    }
+
+    /// The full run description this checkpoint was captured under —
+    /// what `repro run --resume` rebuilds the ensemble from.
+    pub fn run_spec(&self) -> Result<RunSpec> {
+        Ok(RunSpec { config: self.config.clone(), sampler: self.sampler_spec()? })
+    }
+
+    /// Whether the run this checkpoint belongs to is lane-batched (the
+    /// C-rungs) — decides which restore path a resume takes.
+    pub fn is_batched(&self) -> bool {
+        self.sampler_spec().map(|s| s.rung.is_replica_batch()).unwrap_or(false)
+    }
+
+    /// Reject RNG-less checkpoints of rungs that *cannot* serialize
+    /// their generator: a bit-exact resume is impossible, and silently
+    /// keeping the rebuilt ensemble's seeds would either replay the
+    /// recorded uniform stream (if the caller reused the original
+    /// seeds) or go unnoticed.  The structured error names the
+    /// fresh-seed procedure and the epoch to offset by.
+    fn ensure_resumable_rng(&self) -> Result<()> {
+        let accel = match self.sampler {
+            Some(s) => s.rung.is_accel(),
+            None => self
+                .kind
+                .parse::<SweepKind>()
+                .map(|k| k.spec().rung.is_accel())
+                .unwrap_or(false),
+        };
+        if accel && self.rngs.is_empty() {
+            return Err(NonResumableRng {
+                label: self.kind.clone(),
+                epoch: self.epoch,
+                sweeps_done: self.sweeps_done,
+            }
+            .into());
+        }
+        Ok(())
+    }
+
     /// Restore the states into a freshly built ensemble (replica count,
-    /// spin count and rung must match the checkpoint).  When the
+    /// spin count and rung/width must match the checkpoint).  When the
     /// checkpoint carries RNG payloads they are restored too, making the
     /// resume bit-exact.
     ///
-    /// When the checkpoint has **no** RNG payload (legacy format, or a
-    /// rung that cannot serialize its generator), the generators keep
-    /// whatever seeds the rebuilt ensemble was constructed with.  Do not
-    /// rebuild with the pre-checkpoint sweeper seeds in that case: the
-    /// resumed segment would replay the exact uniform stream the original
-    /// run already consumed.  Derive fresh sweeper seeds for the resumed
-    /// segment instead (e.g. offset them by [`Checkpoint::epoch`]).
+    /// When the checkpoint has **no** RNG payload: a legacy (states-only)
+    /// file restores states and leaves the generators as the rebuilt
+    /// ensemble seeded them, but a checkpoint of a rung that *cannot*
+    /// serialize its generator (the accelerator rungs) is rejected with
+    /// a structured [`NonResumableRng`] error — resume those with fresh
+    /// sweeper seeds offset by [`Checkpoint::epoch`] and
+    /// [`Checkpoint::restore_states_only`].
     pub fn restore<S: Sweeper + ?Sized>(&self, pt: &mut PtEnsembleImpl<S>) -> Result<()> {
-        if pt.len() != self.states.len() {
-            anyhow::bail!(
-                "checkpoint has {} replicas, ensemble has {}",
-                self.states.len(),
-                pt.len()
-            );
-        }
-        if !pt.is_empty() && pt.kind_of(0).label() != self.kind {
-            anyhow::bail!(
-                "checkpoint was captured on rung {}, ensemble runs {} — resuming would \
-                 continue a different algorithm",
-                self.kind,
-                pt.kind_of(0).label()
-            );
-        }
-        for (i, s) in self.states.iter().enumerate() {
-            if s.len() != pt.state_of(i).len() {
-                anyhow::bail!("replica {i}: state length {} != model {}", s.len(), pt.state_of(i).len());
+        self.ensure_resumable_rng()?;
+        if !pt.is_empty() {
+            if let Some(p) = self.plans.first() {
+                // v2: compare the resolved rung × width (the width
+                // accessor covers widths the legacy kind tag cannot
+                // spell, e.g. A.4w16).
+                let r = p.resolved;
+                if pt.kind_of(0).spec().rung != r.rung || pt.width_of(0) != r.width {
+                    anyhow::bail!(
+                        "checkpoint was captured on {} (rung {} at width {}), ensemble runs {} \
+                         at width {} — resuming would continue a different algorithm",
+                        self.kind,
+                        r.rung,
+                        r.width,
+                        pt.kind_of(0).label(),
+                        pt.width_of(0)
+                    );
+                }
+            } else if pt.kind_of(0).label() != self.kind {
+                anyhow::bail!(
+                    "checkpoint was captured on rung {}, ensemble runs {} — resuming would \
+                     continue a different algorithm",
+                    self.kind,
+                    pt.kind_of(0).label()
+                );
             }
-            pt.set_state_of(i, s);
         }
+        self.restore_states_into(pt)?;
         if !self.rngs.is_empty() {
             if self.rngs.len() != pt.len() {
                 anyhow::bail!(
@@ -179,8 +304,47 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Restore into a freshly built lane-batched ensemble.
+    /// The fresh-seed resume path for rungs that cannot serialize their
+    /// generator: restores the spin states **only** (no RNG, no exchange
+    /// RNG, no round parity).  The caller must have rebuilt the ensemble
+    /// with *fresh* sweeper seeds for the resumed segment — offset the
+    /// base seed by [`Checkpoint::epoch`] — or the continuation replays
+    /// the already-consumed uniform stream.
+    pub fn restore_states_only<S: Sweeper + ?Sized>(
+        &self,
+        pt: &mut PtEnsembleImpl<S>,
+    ) -> Result<()> {
+        self.restore_states_into(pt)
+    }
+
+    fn restore_states_into<S: Sweeper + ?Sized>(&self, pt: &mut PtEnsembleImpl<S>) -> Result<()> {
+        if pt.len() != self.states.len() {
+            anyhow::bail!(
+                "checkpoint has {} replicas, ensemble has {}",
+                self.states.len(),
+                pt.len()
+            );
+        }
+        for (i, s) in self.states.iter().enumerate() {
+            if s.len() != pt.state_of(i).len() {
+                anyhow::bail!(
+                    "replica {i}: state length {} != model {}",
+                    s.len(),
+                    pt.state_of(i).len()
+                );
+            }
+            pt.set_state_of(i, s);
+        }
+        Ok(())
+    }
+
+    /// Restore into a freshly built lane-batched ensemble.  A v2
+    /// checkpoint's group layout (per-group rung, width and active
+    /// replica count) must match the ensemble's — the backend may
+    /// differ, which is what makes resume portable across hosts
+    /// (checkpoint on AVX2, resume on the portable lanes).
     pub fn restore_batched(&self, pt: &mut BatchedPtEnsemble) -> Result<()> {
+        self.ensure_resumable_rng()?;
         if pt.len() != self.states.len() {
             anyhow::bail!(
                 "checkpoint has {} replicas, batched ensemble has {}",
@@ -188,23 +352,41 @@ impl Checkpoint {
                 pt.len()
             );
         }
-        if pt.kind().label() != self.kind {
+        if !self.plans.is_empty() {
+            let pt_plans = pt.plans();
+            let matches = self.plans.len() == pt_plans.len()
+                && self.plans.iter().zip(pt_plans).all(|(a, b)| a.layout_matches(b));
+            if !matches {
+                anyhow::bail!(
+                    "checkpoint group layout [{}] does not match the ensemble's [{}] — the \
+                     per-group RNG payloads are width-dependent; rebuild the ensemble from the \
+                     checkpoint's own plans (Checkpoint::run_spec + \
+                     coordinator::build_batched_for_checkpoint)",
+                    plans_summary(&self.plans),
+                    plans_summary(pt_plans)
+                );
+            }
+        } else if pt.label() != self.kind {
             anyhow::bail!(
                 "checkpoint was captured on rung {}, ensemble runs {} — resuming would \
                  continue a different algorithm",
                 self.kind,
-                pt.kind().label()
+                pt.label()
             );
         }
         for (i, s) in self.states.iter().enumerate() {
             if s.len() != pt.state_of(i).len() {
-                anyhow::bail!("replica {i}: state length {} != model {}", s.len(), pt.state_of(i).len());
+                anyhow::bail!(
+                    "replica {i}: state length {} != model {}",
+                    s.len(),
+                    pt.state_of(i).len()
+                );
             }
             pt.set_state_of(i, s);
         }
         if !self.rngs.is_empty() && !pt.set_rng_states(&self.rngs) {
             anyhow::bail!(
-                "checkpoint RNG payload ({} entries) does not match the ensemble's {} batches",
+                "checkpoint RNG payload ({} entries) does not match the ensemble's {} groups",
                 self.rngs.len(),
                 pt.n_batches()
             );
@@ -218,7 +400,9 @@ impl Checkpoint {
         Ok(())
     }
 
-    pub fn to_json(&self) -> String {
+    /// JSON form (see [`Checkpoint::to_json`]); nested by the service's
+    /// checkpointable run jobs.
+    pub fn to_value(&self) -> Value {
         // Spins are ±1; serialize compactly as sign bits per replica.
         // RNG payloads are hex-packed words (8 chars per u32).
         let states: Vec<Value> = self
@@ -226,23 +410,47 @@ impl Checkpoint {
             .iter()
             .map(|s| Value::Str(s.iter().map(|&x| if x > 0.0 { '1' } else { '0' }).collect()))
             .collect();
-        let rngs: Vec<Value> =
-            self.rngs.iter().map(|w| Value::Str(words_to_hex(w))).collect();
-        json::obj(vec![
+        let rngs: Vec<Value> = self.rngs.iter().map(|w| Value::Str(words_to_hex(w))).collect();
+        let mut pairs = vec![
+            ("schema", json::num(self.schema as f64)),
             ("kind", json::str_v(&self.kind)),
+        ];
+        let sampler_v = self.sampler.map(|s| s.to_value());
+        if let Some(sv) = sampler_v {
+            pairs.push(("sampler", sv));
+        }
+        if !self.plans.is_empty() {
+            pairs.push(("plans", Value::Arr(self.plans.iter().map(|p| p.to_value()).collect())));
+        }
+        pairs.extend([
             ("epoch", json::num(self.epoch as f64)),
             ("sweeps_done", json::num(self.sweeps_done as f64)),
-            ("config", config_to_json(&self.config)),
+            ("config", self.config.to_value()),
             ("states", Value::Arr(states)),
             ("rngs", Value::Arr(rngs)),
             ("swap_rng", Value::Str(words_to_hex(&self.swap_rng))),
             ("round", json::num(self.round as f64)),
-        ])
-        .to_string()
+        ]);
+        json::obj(pairs)
     }
 
-    pub fn from_json(text: &str) -> Result<Self> {
-        let v = Value::parse(text)?;
+    pub fn to_json(&self) -> String {
+        self.to_value().to_string()
+    }
+
+    /// Parse either schema: v2 (with `schema`/`sampler`/`plans`) or v1
+    /// (a bare `kind` label; `rngs`/`swap_rng`/`round` optional as in
+    /// the earliest states-only files).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let schema = match v.opt("schema") {
+            Some(s) => s.as_usize()?,
+            None => 1,
+        };
+        anyhow::ensure!(
+            schema <= CHECKPOINT_SCHEMA_VERSION,
+            "checkpoint schema {schema} is newer than this build speaks \
+             ({CHECKPOINT_SCHEMA_VERSION})"
+        );
         let states = v
             .get("states")?
             .as_arr()?
@@ -272,16 +480,28 @@ impl Checkpoint {
             Some(r) => r.as_f64()? as u64,
             None => 0,
         };
+        let sampler = match v.opt("sampler") {
+            Some(sv) => Some(SamplerSpec::from_value(sv)?),
+            None => None,
+        };
+        let plans = GroupPlan::vec_from_opt(v.opt("plans"))?;
         Ok(Self {
+            schema,
             kind: v.get("kind")?.as_str()?.to_string(),
+            sampler,
+            plans,
             epoch: v.get("epoch")?.as_f64()? as u64,
             sweeps_done: v.get("sweeps_done")?.as_usize()?,
-            config: config_from_json(v.get("config")?)?,
+            config: RunConfig::from_value(v.get("config")?)?,
             states,
             rngs,
             swap_rng,
             round,
         })
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_value(&Value::parse(text)?)
     }
 
     /// Write atomically (tmp file + rename) so an interrupted save never
@@ -301,6 +521,14 @@ impl Checkpoint {
             .map_err(|e| anyhow::anyhow!("cannot read checkpoint {path:?}: {e}"))?;
         Self::from_json(&text).map_err(|e| anyhow::anyhow!("malformed checkpoint {path:?}: {e}"))
     }
+}
+
+fn plans_summary(plans: &[GroupPlan]) -> String {
+    plans
+        .iter()
+        .map(|p| format!("{}x{}", p.resolved.label(), p.replicas))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 fn words_to_hex(words: &[u32]) -> String {
@@ -325,42 +553,11 @@ fn hex_to_words(s: &str) -> Result<Vec<u32>> {
         .collect()
 }
 
-fn config_to_json(c: &RunConfig) -> Value {
-    json::obj(vec![
-        ("width", json::num(c.width as f64)),
-        ("height", json::num(c.height as f64)),
-        ("layers", json::num(c.layers as f64)),
-        ("n_models", json::num(c.n_models as f64)),
-        ("sweeps", json::num(c.sweeps as f64)),
-        ("sweeps_per_round", json::num(c.sweeps_per_round as f64)),
-        ("threads", json::num(c.threads as f64)),
-        ("beta_cold", json::num(c.beta_cold as f64)),
-        ("beta_hot", json::num(c.beta_hot as f64)),
-        ("jtau", json::num(c.jtau as f64)),
-        ("seed", json::num(c.seed as f64)),
-    ])
-}
-
-fn config_from_json(v: &Value) -> Result<RunConfig> {
-    Ok(RunConfig {
-        width: v.get("width")?.as_usize()?,
-        height: v.get("height")?.as_usize()?,
-        layers: v.get("layers")?.as_usize()?,
-        n_models: v.get("n_models")?.as_usize()?,
-        sweeps: v.get("sweeps")?.as_usize()?,
-        sweeps_per_round: v.get("sweeps_per_round")?.as_usize()?,
-        threads: v.get("threads")?.as_usize()?,
-        beta_cold: v.get("beta_cold")?.as_f64()? as f32,
-        beta_hot: v.get("beta_hot")?.as_f64()? as f32,
-        jtau: v.get("jtau")?.as_f64()? as f32,
-        seed: v.get("seed")?.as_f64()? as u64,
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{self, RunConfig};
+    use crate::engine::{Rung, Width};
     use crate::sweep::SweepKind;
 
     fn cfg() -> RunConfig {
@@ -374,10 +571,35 @@ mod tests {
         pt.sweep_all(5);
         let ck = Checkpoint::capture(SweepKind::A2Basic, 3, 50, &cfg, &mut pt);
         let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back.schema, CHECKPOINT_SCHEMA_VERSION);
         assert_eq!(back.kind, "A.2");
         assert_eq!(back.epoch, 3);
         assert_eq!(back.states, ck.states);
         assert_eq!(back.config.n_models, 3);
+        // v2 carries the spec and the resolved plan.
+        let s = back.sampler.expect("v2 spec");
+        assert_eq!(s.rung, Rung::A2);
+        assert_eq!(back.plans.len(), 1);
+        assert_eq!(back.plans[0].resolved.width, 1);
+        assert_eq!(back.plans[0].replicas, 3);
+    }
+
+    #[test]
+    fn capture_records_the_live_width_not_a_renegotiated_auto() {
+        // Regression: a `width: auto` spec must checkpoint the width the
+        // ensemble is *actually running* — re-negotiating auto at capture
+        // time would record plans that contradict the serialized RNG
+        // payloads whenever a resumed run lands on a different host.
+        let cfg = cfg();
+        let spec = crate::engine::SamplerSpec::rung(Rung::A4); // width auto
+        let mut pt = coordinator::build_ensemble(&cfg, spec).unwrap();
+        pt.sweep_all(3);
+        let live_w = pt.width_of(0);
+        let ck = Checkpoint::capture_spec(spec, 0, 3, &cfg, &mut pt);
+        assert_eq!(ck.plans.len(), 1);
+        assert_eq!(ck.plans[0].resolved.width, live_w, "plan width == live ensemble width");
+        // The recorded plan passes its own restore compatibility check.
+        ck.restore(&mut pt).unwrap();
     }
 
     #[test]
@@ -443,20 +665,45 @@ mod tests {
         let cfg = cfg();
         let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
         let ck = Checkpoint::capture(SweepKind::A2Basic, 0, 0, &cfg, &mut pt);
-        // Strip the new fields the way an old writer would have.
+        // Strip the newer fields the way an old writer would have.
         let v = crate::util::json::Value::parse(&ck.to_json()).unwrap();
         let mut m = match v {
             crate::util::json::Value::Obj(m) => m,
             _ => unreachable!(),
         };
+        m.remove("schema");
+        m.remove("sampler");
+        m.remove("plans");
         m.remove("rngs");
         m.remove("swap_rng");
         m.remove("round");
         let legacy = crate::util::json::Value::Obj(m).to_string();
         let back = Checkpoint::from_json(&legacy).unwrap();
+        assert_eq!(back.schema, 1);
+        assert!(back.sampler.is_none());
+        assert!(back.plans.is_empty());
         assert!(back.rngs.is_empty());
         assert!(back.swap_rng.is_empty());
+        // The v1 kind label lowers onto the spec the run always meant.
+        let spec = back.sampler_spec().unwrap();
+        assert_eq!(spec.rung, Rung::A2);
+        assert_eq!(spec.width, Width::W(1));
         back.restore(&mut pt).unwrap(); // states-only restore still works
+    }
+
+    #[test]
+    fn future_schema_versions_are_refused() {
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        let ck = Checkpoint::capture(SweepKind::A2Basic, 0, 0, &cfg, &mut pt);
+        let v = crate::util::json::Value::parse(&ck.to_json()).unwrap();
+        let mut m = match v {
+            crate::util::json::Value::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("schema".into(), json::num(99.0));
+        let err = Checkpoint::from_json(&Value::Obj(m).to_string()).err().unwrap();
+        assert!(format!("{err:#}").contains("schema 99"));
     }
 
     #[test]
@@ -469,6 +716,8 @@ mod tests {
         assert_eq!(ck.kind, "C.1");
         assert_eq!(ck.states.len(), 3);
         assert_eq!(ck.rngs.len(), pt.n_batches());
+        assert_eq!(ck.plans.len(), pt.n_batches(), "one resolved plan per group");
+        assert!(ck.is_batched());
         let mut fresh =
             coordinator::build_batched_ensemble(&cfg, SweepKind::C1ReplicaBatch).unwrap();
         ck.restore_batched(&mut fresh).unwrap();
@@ -481,7 +730,7 @@ mod tests {
     fn restore_rejects_mismatched_rung_kind() {
         // An RNG-bearing A.2 checkpoint must not resume an A.1 ensemble:
         // replica counts and state lengths match, and A.1 would even
-        // accept the 625-word payload — only the kind check catches it.
+        // accept the 625-word payload — only the plan check catches it.
         let cfg = cfg();
         let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
         pt.sweep_all(3);
@@ -510,5 +759,38 @@ mod tests {
         )
         .unwrap();
         assert!(ck.restore(&mut bigger).is_err());
+    }
+
+    #[test]
+    fn rngless_accel_checkpoints_are_rejected_with_the_procedure() {
+        // An accelerator checkpoint carries states only (the generator
+        // lives on device).  Restoring it must fail *structurally*, with
+        // the fresh-seed procedure and the epoch offset as data.
+        let cfg = cfg();
+        let mut pt = coordinator::build_ensemble(&cfg, SweepKind::A2Basic).unwrap();
+        pt.sweep_all(3);
+        let mut ck = Checkpoint::capture(SweepKind::A2Basic, 7, 30, &cfg, &mut pt);
+        ck.kind = "B.2".into();
+        ck.sampler = Some(SweepKind::B2Accel.spec());
+        ck.plans.clear();
+        ck.rngs.clear();
+        ck.swap_rng.clear();
+        let err = ck.restore(&mut pt).err().expect("must reject");
+        let nr = err
+            .downcast_ref::<NonResumableRng>()
+            .expect("structured NonResumableRng error");
+        assert_eq!(nr.epoch, 7);
+        assert_eq!(nr.sweeps_done, 30);
+        assert_eq!(nr.label, "B.2");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("FRESH"), "{msg}");
+        assert!(msg.contains("(7)"), "{msg}");
+        assert!(msg.contains("restore_states_only"), "{msg}");
+        // The explicit fresh-seed path still restores the states.
+        ck.restore_states_only(&mut pt).unwrap();
+        // A v1 accel checkpoint (kind label only) is equally rejected.
+        ck.sampler = None;
+        ck.schema = 1;
+        assert!(ck.restore(&mut pt).err().unwrap().downcast_ref::<NonResumableRng>().is_some());
     }
 }

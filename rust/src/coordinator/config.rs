@@ -1,5 +1,8 @@
-//! Run configurations for the coordinator and the benchmark harness.
+//! Run configurations for the coordinator and the benchmark harness:
+//! the workload geometry ([`RunConfig`]) and the versioned, spec-carrying
+//! run description ([`RunSpec`]) the Run API v1 surface is built on.
 
+use crate::engine::{EngineBuilder, Plan, SamplerSpec};
 use crate::sweep::SweepKind;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -111,6 +114,40 @@ impl RunConfig {
         self.validate_common()
     }
 
+    /// JSON form (the `config` object of run specs and checkpoints).
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("width", json::num(self.width as f64)),
+            ("height", json::num(self.height as f64)),
+            ("layers", json::num(self.layers as f64)),
+            ("n_models", json::num(self.n_models as f64)),
+            ("sweeps", json::num(self.sweeps as f64)),
+            ("sweeps_per_round", json::num(self.sweeps_per_round as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("beta_cold", json::num(self.beta_cold as f64)),
+            ("beta_hot", json::num(self.beta_hot as f64)),
+            ("jtau", json::num(self.jtau as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse the JSON form back.
+    pub fn from_value(v: &Value) -> Result<RunConfig> {
+        Ok(RunConfig {
+            width: v.get("width")?.as_usize()?,
+            height: v.get("height")?.as_usize()?,
+            layers: v.get("layers")?.as_usize()?,
+            n_models: v.get("n_models")?.as_usize()?,
+            sweeps: v.get("sweeps")?.as_usize()?,
+            sweeps_per_round: v.get("sweeps_per_round")?.as_usize()?,
+            threads: v.get("threads")?.as_usize()?,
+            beta_cold: v.get("beta_cold")?.as_f64()? as f32,
+            beta_hot: v.get("beta_hot")?.as_f64()? as f32,
+            jtau: v.get("jtau")?.as_f64()? as f32,
+            seed: v.get("seed")?.as_f64()? as u64,
+        })
+    }
+
     fn validate_common(&self) -> crate::Result<()> {
         if self.width % 2 != 0 || self.height % 2 != 0 {
             anyhow::bail!("torus dims must be even (got {}x{})", self.width, self.height);
@@ -129,6 +166,78 @@ impl RunConfig {
             anyhow::bail!("need beta_cold > beta_hot > 0");
         }
         Ok(())
+    }
+}
+
+/// Version of the Run API surface: stamped on every serialized
+/// [`RunSpec`] and on every schema-v2 checkpoint.
+pub const RUN_SPEC_VERSION: usize = 1;
+
+/// A complete, versioned description of a run: the workload geometry +
+/// ladder ([`RunConfig`]) and the sampler to run it with
+/// ([`SamplerSpec`]).  This is the Run API v1 surface — the coordinator
+/// entry points, the checkpoint format and the service's run jobs all
+/// speak `RunSpec`, replacing the old `(RunConfig, SweepKind)` pairing
+/// that welded runs to the width-baked legacy enum.
+///
+/// Serializes as
+/// `{"version":1,"config":{...},"sampler":{"rung":"c1","width":16,...}}`
+/// and round-trips losslessly, so a run description can travel through
+/// files, checkpoints and the service wire format.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub config: RunConfig,
+    pub sampler: SamplerSpec,
+}
+
+impl RunSpec {
+    /// Pair a workload with anything that lowers onto a sampler spec (a
+    /// spec, or a legacy [`SweepKind`] via its `From` lowering).
+    pub fn new(config: RunConfig, sampler: impl Into<SamplerSpec>) -> Self {
+        Self { config, sampler: sampler.into() }
+    }
+
+    /// Rung-aware validation of the workload under this sampler.
+    pub fn validate(&self) -> Result<()> {
+        self.config.validate_for_spec(&self.sampler)
+    }
+
+    /// Negotiate the sampler against host capabilities and the workload
+    /// geometry (the same [`Plan`] `repro plan` prints).
+    pub fn plan(&self) -> Result<Plan> {
+        EngineBuilder::new(self.sampler).layers(self.config.layers).plan()
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("version", json::num(RUN_SPEC_VERSION as f64)),
+            ("config", self.config.to_value()),
+            ("sampler", self.sampler.to_value()),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().to_string()
+    }
+
+    /// Parse a serialized run spec.  A missing `version` field is
+    /// treated as version 1; future versions are refused loudly.
+    pub fn from_value(v: &Value) -> Result<RunSpec> {
+        if let Some(ver) = v.opt("version") {
+            let ver = ver.as_usize()?;
+            anyhow::ensure!(
+                ver <= RUN_SPEC_VERSION,
+                "run spec version {ver} is newer than this build speaks ({RUN_SPEC_VERSION})"
+            );
+        }
+        Ok(RunSpec {
+            config: RunConfig::from_value(v.get("config")?)?,
+            sampler: SamplerSpec::from_value(v.get("sampler")?)?,
+        })
+    }
+
+    pub fn from_json(text: &str) -> Result<RunSpec> {
+        Self::from_value(&Value::parse(text)?)
     }
 }
 
@@ -244,6 +353,45 @@ mod tests {
         let mut c = RunConfig::default();
         c.beta_hot = 6.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn run_spec_roundtrips_json() {
+        use crate::engine::{BackendPref, Rung, SamplerSpec, Width};
+        let rs = RunSpec::new(
+            RunConfig { n_models: 3, ..RunConfig::default() },
+            SamplerSpec::rung(Rung::C1).w(16).on(BackendPref::Portable),
+        );
+        let back = RunSpec::from_json(&rs.to_json()).unwrap();
+        assert_eq!(back.config.n_models, 3);
+        assert_eq!(back.sampler.rung, Rung::C1);
+        assert_eq!(back.sampler.width, Width::W(16));
+        assert_eq!(back.sampler.backend, BackendPref::Portable);
+        // The serialized form is versioned; future versions are refused.
+        let v = Value::parse(&rs.to_json()).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize().unwrap(), RUN_SPEC_VERSION);
+        let mut m = match v {
+            Value::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("version".into(), json::num(99.0));
+        assert!(RunSpec::from_json(&Value::Obj(m).to_string()).is_err());
+    }
+
+    #[test]
+    fn run_spec_lowers_legacy_kinds() {
+        use crate::engine::{Rung, Width};
+        let rs = RunSpec::new(RunConfig::default(), SweepKind::C1ReplicaBatchW8);
+        assert_eq!(rs.sampler.rung, Rung::C1);
+        assert_eq!(rs.sampler.width, Width::W(8));
+        rs.validate().unwrap();
+        // The shallow-geometry relaxation follows the sampler's rung.
+        let shallow =
+            RunSpec::new(RunConfig { layers: 2, ..RunConfig::default() }, SweepKind::C1ReplicaBatch);
+        shallow.validate().unwrap();
+        let shallow_a =
+            RunSpec::new(RunConfig { layers: 2, ..RunConfig::default() }, SweepKind::A4Full);
+        assert!(shallow_a.validate().is_err());
     }
 
     #[test]

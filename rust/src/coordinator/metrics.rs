@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use crate::engine::GroupPlan;
 use crate::sweep::SweepStats;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -48,6 +49,13 @@ pub struct RunReport {
     pub pool_busy_fraction: f64,
     /// Sweep tasks queued through the pool during the run.
     pub pool_jobs_queued: u64,
+    /// The resolved per-group plans the run executed —
+    /// `[{rung, width, backend, replicas}]`, one entry per lane-group
+    /// (heterogeneous layouts list every group).  Empty in reports
+    /// parsed from pre-Run-API payloads.  The legacy `kind` field stays
+    /// populated alongside (with the legacy label whenever a single
+    /// legacy-spellable plan is in use).
+    pub plans: Vec<GroupPlan>,
 }
 
 impl RunReport {
@@ -76,6 +84,7 @@ impl RunReport {
             energies: per_replica.iter().map(|r| r.2).collect(),
             pool_busy_fraction: 0.0,
             pool_jobs_queued: 0,
+            plans: Vec::new(),
         }
     }
 
@@ -87,8 +96,19 @@ impl RunReport {
         self
     }
 
+    /// Attach the resolved per-group plans (the Run API v1 echo).
+    pub fn with_plans(mut self, plans: Vec<GroupPlan>) -> Self {
+        self.plans = plans;
+        self
+    }
+
     pub fn to_json(&self) -> String {
-        json::obj(vec![
+        self.to_value().to_string()
+    }
+
+    /// JSON form (nested by the service's checkpointable run jobs).
+    pub fn to_value(&self) -> Value {
+        let mut pairs = vec![
             ("kind", json::str_v(&self.kind)),
             ("threads", json::num(self.threads as f64)),
             ("n_models", json::num(self.n_models as f64)),
@@ -103,12 +123,19 @@ impl RunReport {
             ("energies", json::arr_f64(&self.energies)),
             ("pool_busy_fraction", json::num(self.pool_busy_fraction)),
             ("pool_jobs_queued", json::num(self.pool_jobs_queued as f64)),
-        ])
-        .to_string()
+        ];
+        if !self.plans.is_empty() {
+            pairs.push(("plans", Value::Arr(self.plans.iter().map(|p| p.to_value()).collect())));
+        }
+        json::obj(pairs)
     }
 
     pub fn from_json(text: &str) -> Result<Self> {
-        let v = Value::parse(text)?;
+        Self::from_value(&Value::parse(text)?)
+    }
+
+    /// Parse the JSON form back (see [`RunReport::to_value`]).
+    pub fn from_value(v: &Value) -> Result<Self> {
         let f64s = |key: &str| -> Result<Vec<f64>> {
             v.get(key)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
         };
@@ -136,6 +163,7 @@ impl RunReport {
                 .map(|x| x.as_f64())
                 .transpose()?
                 .unwrap_or(0.0) as u64,
+            plans: GroupPlan::vec_from_opt(v.opt("plans"))?,
         })
     }
 }
@@ -157,6 +185,33 @@ mod tests {
         let back = RunReport::from_json(&rep.to_json()).unwrap();
         assert_eq!(back.n_models, 2);
         assert_eq!(back.flip_probs, rep.flip_probs);
+    }
+
+    #[test]
+    fn plans_echo_roundtrips_and_defaults_empty() {
+        use crate::engine::{Backend, Resolved, Rung};
+        let mk = |flips, attempts| SweepStats {
+            attempts,
+            flips,
+            groups: attempts,
+            groups_with_flip: flips,
+        };
+        let rows = vec![(1.0f32, mk(10, 100), -5.0)];
+        let plans = vec![
+            GroupPlan::new(Resolved { rung: Rung::C1, backend: Backend::Avx2, width: 8 }, 8),
+            GroupPlan::new(Resolved { rung: Rung::C1, backend: Backend::Sse2, width: 4 }, 2),
+        ];
+        let rep =
+            RunReport::from_stats("C.1w8+C.1", 1, 50, 2.0, &rows, 0.25).with_plans(plans.clone());
+        let back = RunReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.plans, plans, "heterogeneous group plans echo through JSON");
+        assert_eq!(back.kind, "C.1w8+C.1");
+        // Pre-Run-API payloads (no plans key) default to empty.
+        let legacy = r#"{"kind":"A.2","threads":1,"n_models":1,"sweeps":5,
+            "wall_seconds":1.0,"updates_per_sec":10.0,"total_flips":1,
+            "total_attempts":10,"swap_acceptance":0.0,
+            "flip_probs":[0.1],"wait_probs":[0.1],"energies":[-1.0]}"#;
+        assert!(RunReport::from_json(legacy).unwrap().plans.is_empty());
     }
 
     #[test]

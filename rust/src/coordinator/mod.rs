@@ -1,8 +1,18 @@
-//! The L3 coordinator: builds a tempering ensemble from a [`RunConfig`]
-//! (per-replica for the A-rungs, lane-batched for the C-rungs), schedules
-//! sweep rounds over one persistent [`SweepPool`] held across rounds,
+//! The L3 coordinator: builds a tempering ensemble from a [`RunSpec`]
+//! (per-replica for the A-rungs, lane-batched — possibly with
+//! heterogeneous per-group plans — for the C-rungs), schedules sweep
+//! rounds over one persistent [`SweepPool`] held across rounds,
 //! interleaves replica exchanges, and reports throughput + per-replica
 //! statistics.
+//!
+//! **Run API v1.** A run is described by a versioned, serializable
+//! [`RunSpec`] (workload geometry + sampler spec) and can be
+//! checkpointed and resumed through schema-v2 [`Checkpoint`]s, which
+//! carry the spec and the resolved group layout — so
+//! [`resume_run`]/`repro run --resume` need no sampler flags, and any
+//! plan the builder can instantiate (portable `C.1w16` included)
+//! round-trips bit-exactly.  The legacy `(RunConfig, SweepKind)` entry
+//! points remain as shims lowering onto specs.
 //!
 //! This is the process-level frame the paper's workload ran in (AQUA@Home
 //! distributed millions of such runs; here one process = one ladder of
@@ -13,14 +23,16 @@ pub mod config;
 pub mod metrics;
 pub mod scheduler;
 
-pub use checkpoint::Checkpoint;
-pub use config::{RunConfig, RungTiming};
+pub use checkpoint::{Checkpoint, CHECKPOINT_SCHEMA_VERSION};
+pub use config::{RunConfig, RunSpec, RungTiming, RUN_SPEC_VERSION};
 pub use metrics::{RunReport, Timer};
 pub use scheduler::{PoolStats, SweepPool};
 
-use crate::engine::{EngineBuilder, SamplerSpec};
+use std::path::{Path, PathBuf};
+
+use crate::engine::{EngineBuilder, GroupPlan, SamplerSpec, Width};
 use crate::ising::builder::{torus_workload, Workload};
-use crate::sweep::{ExpMode, Sweeper};
+use crate::sweep::{ExpMode, SweepStats, Sweeper};
 use crate::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
 use crate::Result;
 
@@ -33,6 +45,12 @@ pub fn build_workloads(cfg: &RunConfig) -> Vec<Workload> {
         .collect()
 }
 
+/// Per-replica RNG seeds of a run (the convention every ensemble — and
+/// every checkpoint — shares).
+fn replica_seeds(cfg: &RunConfig) -> Vec<u32> {
+    (0..cfg.n_models).map(|i| cfg.seed as u32 + 1000 * i as u32).collect()
+}
+
 /// Build a CPU-rung ensemble for the configuration.  Takes anything that
 /// lowers onto a [`SamplerSpec`] — a spec or a legacy
 /// [`crate::sweep::SweepKind`]; every replica is constructed through the
@@ -41,13 +59,12 @@ pub fn build_ensemble(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<P
     let spec = spec.into();
     cfg.validate_for_spec(&spec)?;
     let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
+    let seeds = replica_seeds(cfg);
     let replicas: Vec<Box<dyn Sweeper + Send>> = build_workloads(cfg)
         .iter()
-        .enumerate()
-        .map(|(i, wl)| {
-            EngineBuilder::new(spec)
-                .build(&wl.model, &wl.s0, cfg.seed as u32 + 1000 * i as u32)
-                .map(|e| e.into_sweeper())
+        .zip(&seeds)
+        .map(|(wl, &seed)| {
+            EngineBuilder::new(spec).build(&wl.model, &wl.s0, seed).map(|e| e.into_sweeper())
         })
         .collect::<Result<_>>()?;
     Ok(PtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a))
@@ -55,7 +72,9 @@ pub fn build_ensemble(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<P
 
 /// Build a lane-batched C-rung ensemble for the configuration: the same
 /// ladder, workloads and per-replica seed convention as
-/// [`build_ensemble`], grouped into plan-width lane batches.
+/// [`build_ensemble`], partitioned into plan-width lane groups (a
+/// `width: auto` spec may choose a heterogeneous layout — see
+/// [`crate::tempering::batch::plan_groups`]).
 pub fn build_batched_ensemble(
     cfg: &RunConfig,
     spec: impl Into<SamplerSpec>,
@@ -78,81 +97,313 @@ pub fn build_batched_ensemble_with_exp(
     let workloads = build_workloads(cfg);
     let models: Vec<_> = workloads.iter().map(|wl| wl.model.clone()).collect();
     let states: Vec<_> = workloads.iter().map(|wl| wl.s0.clone()).collect();
-    let seeds: Vec<u32> = (0..cfg.n_models).map(|i| cfg.seed as u32 + 1000 * i as u32).collect();
+    let seeds = replica_seeds(cfg);
     BatchedPtEnsemble::new(ladder, spec, &models, &states, &seeds, cfg.seed as u32 ^ 0x5a5a, exp)
 }
 
-/// Run a full simulation: rounds of (parallel sweep batch, exchange) over
-/// one persistent [`SweepPool`] held across all rounds.  Replica-batch
-/// (`c1`) specs run through the lane-batched ensemble.
-pub fn run(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
-    let spec = spec.into();
-    if spec.rung.is_replica_batch() {
-        return run_batched(cfg, spec);
+/// Build a batched ensemble with a checkpoint's recorded group layout:
+/// each group keeps its recorded rung × width (the RNG payloads are
+/// width-dependent), while the *backend* is re-resolved against this
+/// host — so a run checkpointed on AVX2 resumes on SSE2/portable lanes
+/// bit-exactly.
+pub fn build_batched_for_checkpoint(
+    cfg: &RunConfig,
+    spec: SamplerSpec,
+    ck_plans: &[GroupPlan],
+) -> Result<BatchedPtEnsemble> {
+    cfg.validate_for_spec(&spec)?;
+    let exp = EngineBuilder::new(spec).layers(cfg.layers).plan()?.exp;
+    let mut groups = Vec::with_capacity(ck_plans.len());
+    for p in ck_plans {
+        let gspec = SamplerSpec { width: Width::W(p.resolved.width), ..spec };
+        let plan = EngineBuilder::new(gspec).layers(cfg.layers).exp(exp).plan()?;
+        groups.push(GroupPlan::new(plan.resolved(), p.replicas));
     }
-    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
-    let mut pt = build_ensemble(cfg, spec)?;
-    let pool = scheduler::SweepPool::new(cfg.threads);
-    let timer = Timer::start();
-    let rounds = cfg.sweeps / cfg.sweeps_per_round;
-    for _ in 0..rounds {
-        scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round, &pool);
-        pt.exchange();
-    }
-    let wall = timer.seconds();
-    let pstats = pool.stats();
-    let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
-        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
-    Ok(RunReport::from_stats(
-        &plan.label(),
-        cfg.threads,
-        cfg.sweeps,
-        wall,
-        &rows,
-        pt.swap_acceptance(),
+    let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
+    let workloads = build_workloads(cfg);
+    let models: Vec<_> = workloads.iter().map(|wl| wl.model.clone()).collect();
+    let states: Vec<_> = workloads.iter().map(|wl| wl.s0.clone()).collect();
+    let seeds = replica_seeds(cfg);
+    BatchedPtEnsemble::with_groups(
+        ladder,
+        spec,
+        &groups,
+        &models,
+        &states,
+        &seeds,
+        cfg.seed as u32 ^ 0x5a5a,
+        exp,
     )
-    .with_pool(pstats.jobs, pstats.busy_fraction(cfg.threads, wall)))
 }
 
-/// [`run`] over the lane-batched ensemble: one pool job per lane-batch,
-/// exchanges (across batch boundaries included) on the coordinator
-/// thread.
-pub fn run_batched(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
-    let spec = spec.into();
-    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
-    let mut pt = build_batched_ensemble(cfg, spec)?;
-    let pool = scheduler::SweepPool::new(cfg.threads);
-    let timer = Timer::start();
+/// Checkpoint/resume options of a spec-driven run.
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Save a schema-v2 checkpoint here (atomically) during the run.
+    pub checkpoint: Option<PathBuf>,
+    /// Rounds between saves (0 or 1 = after every round); the final
+    /// round is always saved when `checkpoint` is set.
+    pub checkpoint_every: usize,
+    /// Resume from this checkpoint: restored into the freshly built
+    /// ensemble before any sweeping, rounds continue from its
+    /// `sweeps_done`.
+    pub resume: Option<Checkpoint>,
+}
+
+/// Either flavour of ensemble behind one round-loop (the A-rungs sweep
+/// per replica, the C-rungs per lane-group).
+enum Built {
+    Replicas { pt: PtEnsemble, plan_groups: Vec<GroupPlan>, label: String },
+    Batched(BatchedPtEnsemble),
+}
+
+impl Built {
+    fn sweep(&mut self, pool: &SweepPool, n_sweeps: usize) {
+        match self {
+            Built::Replicas { pt, .. } => scheduler::parallel_sweep_with_pool(pt, n_sweeps, pool),
+            Built::Batched(pt) => scheduler::parallel_sweep_batches(pt, n_sweeps, pool),
+        }
+    }
+
+    fn exchange(&mut self) {
+        match self {
+            Built::Replicas { pt, .. } => pt.exchange(),
+            Built::Batched(pt) => pt.exchange(),
+        }
+    }
+
+    fn rows(&mut self) -> Vec<(f32, SweepStats, f64)> {
+        let reports = match self {
+            Built::Replicas { pt, .. } => pt.reports(),
+            Built::Batched(pt) => pt.reports(),
+        };
+        reports.into_iter().map(|r| (r.beta, r.stats, r.energy)).collect()
+    }
+
+    fn swap_acceptance(&self) -> f64 {
+        match self {
+            Built::Replicas { pt, .. } => pt.swap_acceptance(),
+            Built::Batched(pt) => pt.swap_acceptance(),
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            Built::Replicas { label, .. } => label.clone(),
+            Built::Batched(pt) => pt.label(),
+        }
+    }
+
+    fn plans(&self) -> Vec<GroupPlan> {
+        match self {
+            Built::Replicas { plan_groups, .. } => plan_groups.clone(),
+            Built::Batched(pt) => pt.plans().to_vec(),
+        }
+    }
+
+    fn capture(&mut self, rs: &RunSpec, epoch: u64, sweeps_done: usize) -> Checkpoint {
+        match self {
+            Built::Replicas { pt, .. } => {
+                Checkpoint::capture_spec(rs.sampler, epoch, sweeps_done, &rs.config, pt)
+            }
+            Built::Batched(pt) => Checkpoint::capture_batched(epoch, sweeps_done, &rs.config, pt),
+        }
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        match self {
+            Built::Replicas { pt, .. } => ck.restore(pt),
+            Built::Batched(pt) => ck.restore_batched(pt),
+        }
+    }
+}
+
+/// Build the right ensemble flavour for a run spec.  When resuming, a
+/// batched ensemble reuses the checkpoint's recorded group layout and a
+/// per-replica ensemble pins the recorded width, so the rebuilt
+/// ensemble always matches the RNG payloads regardless of what `auto`
+/// would negotiate on this host.
+fn build_for(rs: &RunSpec, resume: Option<&Checkpoint>) -> Result<Built> {
+    let mut spec = rs.sampler;
+    if rs.sampler.rung.is_replica_batch() {
+        if let Some(ck) = resume {
+            if !ck.plans.is_empty() {
+                return Ok(Built::Batched(build_batched_for_checkpoint(
+                    &rs.config, spec, &ck.plans,
+                )?));
+            }
+        }
+        return Ok(Built::Batched(build_batched_ensemble(&rs.config, spec)?));
+    }
+    if let Some(p) = resume.and_then(|ck| ck.plans.first()) {
+        spec.width = Width::W(p.resolved.width);
+    }
+    let plan = EngineBuilder::new(spec).layers(rs.config.layers).plan()?;
+    let pt = build_ensemble(&rs.config, spec)?;
+    let plan_groups = vec![GroupPlan::new(plan.resolved(), rs.config.n_models)];
+    Ok(Built::Replicas { pt, plan_groups, label: plan.label() })
+}
+
+/// Resume geometry check: every field that shapes the ensemble (and its
+/// seeds) must match; `sweeps` and `threads` may differ so a resume can
+/// extend a run or use a different core count.
+fn check_resume_config(ck: &RunConfig, cfg: &RunConfig) -> Result<()> {
+    let same = ck.width == cfg.width
+        && ck.height == cfg.height
+        && ck.layers == cfg.layers
+        && ck.n_models == cfg.n_models
+        && ck.sweeps_per_round == cfg.sweeps_per_round
+        && ck.seed == cfg.seed
+        && ck.beta_cold == cfg.beta_cold
+        && ck.beta_hot == cfg.beta_hot
+        && ck.jtau == cfg.jtau;
+    anyhow::ensure!(
+        same,
+        "checkpoint workload ({}x{}x{} layers, {} models, seed {}) does not match the \
+         requested run ({}x{}x{} layers, {} models, seed {})",
+        ck.width,
+        ck.height,
+        ck.layers,
+        ck.n_models,
+        ck.seed,
+        cfg.width,
+        cfg.height,
+        cfg.layers,
+        cfg.n_models,
+        cfg.seed
+    );
+    Ok(())
+}
+
+/// Run a full simulation described by a [`RunSpec`]: rounds of (parallel
+/// sweep batch, exchange) over one persistent [`SweepPool`] held across
+/// all rounds.  Replica-batch (`c1`) specs run through the lane-batched
+/// ensemble (heterogeneous group layouts included); the report echoes
+/// the resolved per-group plans.
+pub fn run_spec(rs: &RunSpec) -> Result<RunReport> {
+    run_spec_with(rs, &RunOptions::default())
+}
+
+/// [`run_spec`] with checkpointing and resume (see [`RunOptions`]).
+pub fn run_spec_with(rs: &RunSpec, opts: &RunOptions) -> Result<RunReport> {
+    Ok(run_spec_inner(rs, opts, false)?.0)
+}
+
+/// [`run_spec_with`] that additionally captures the final state as an
+/// in-memory schema-v2 [`Checkpoint`] (the service's checkpointable run
+/// jobs return it inline instead of writing to the server's disk).
+pub fn run_spec_capturing(rs: &RunSpec, opts: &RunOptions) -> Result<(RunReport, Checkpoint)> {
+    let (report, ck) = run_spec_inner(rs, opts, true)?;
+    Ok((report, ck.expect("final capture requested")))
+}
+
+fn run_spec_inner(
+    rs: &RunSpec,
+    opts: &RunOptions,
+    capture_final: bool,
+) -> Result<(RunReport, Option<Checkpoint>)> {
+    let cfg = &rs.config;
+    rs.validate()?;
+    if let Some(ck) = &opts.resume {
+        check_resume_config(&ck.config, cfg)?;
+    }
+    let mut ens = build_for(rs, opts.resume.as_ref())?;
+    let mut start_round = 0usize;
+    if let Some(ck) = &opts.resume {
+        ens.restore(ck)?;
+        anyhow::ensure!(
+            ck.sweeps_done % cfg.sweeps_per_round == 0,
+            "checkpoint stopped mid-round ({} sweeps done, {} per round)",
+            ck.sweeps_done,
+            cfg.sweeps_per_round
+        );
+        start_round = ck.sweeps_done / cfg.sweeps_per_round;
+    }
     let rounds = cfg.sweeps / cfg.sweeps_per_round;
-    for _ in 0..rounds {
-        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round, &pool);
-        pt.exchange();
+    anyhow::ensure!(
+        start_round <= rounds,
+        "checkpoint has already completed {} sweeps, run asks for {}",
+        start_round * cfg.sweeps_per_round,
+        cfg.sweeps
+    );
+    let every = opts.checkpoint_every.max(1);
+    let pool = SweepPool::new(cfg.threads);
+    let timer = Timer::start();
+    for r in start_round..rounds {
+        ens.sweep(&pool, cfg.sweeps_per_round);
+        ens.exchange();
+        if let Some(path) = &opts.checkpoint {
+            let done = r + 1;
+            if done % every == 0 || done == rounds {
+                ens.capture(rs, done as u64, done * cfg.sweeps_per_round).save(path)?;
+            }
+        }
     }
     let wall = timer.seconds();
     let pstats = pool.stats();
-    let rows: Vec<(f32, crate::sweep::SweepStats, f64)> =
-        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
-    Ok(RunReport::from_stats(
-        &plan.label(),
+    let rows = ens.rows();
+    let swept = (rounds - start_round) * cfg.sweeps_per_round;
+    let report = RunReport::from_stats(
+        &ens.label(),
         cfg.threads,
-        cfg.sweeps,
+        swept,
         wall,
         &rows,
-        pt.swap_acceptance(),
+        ens.swap_acceptance(),
     )
-    .with_pool(pstats.jobs, pstats.busy_fraction(cfg.threads, wall)))
+    .with_pool(pstats.jobs, pstats.busy_fraction(cfg.threads, wall))
+    .with_plans(ens.plans());
+    let final_ck = capture_final
+        .then(|| ens.capture(rs, rounds as u64, rounds * cfg.sweeps_per_round));
+    Ok((report, final_ck))
+}
+
+/// Resume a run from a saved checkpoint: the checkpoint's own
+/// [`RunSpec`] rebuilds the ensemble (no sampler flags needed — v1
+/// files lower their `kind` label onto a spec), the recorded states and
+/// RNG payloads restore, and the remaining rounds run.  `override_spec`
+/// lets a caller extend the run (more sweeps) or change the thread
+/// count — the workload geometry must match the checkpoint.
+pub fn resume_run(
+    path: &Path,
+    override_spec: impl FnOnce(RunSpec) -> RunSpec,
+    opts: &RunOptions,
+) -> Result<RunReport> {
+    let ck = Checkpoint::load(path)?;
+    let rs = override_spec(ck.run_spec()?);
+    let opts = RunOptions { resume: Some(ck), ..opts.clone() };
+    run_spec_with(&rs, &opts)
+}
+
+/// Run a full simulation — the legacy `(RunConfig, spec)` shim over
+/// [`run_spec`].
+pub fn run(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
+    run_spec(&RunSpec::new(cfg.clone(), spec))
+}
+
+/// [`run`] over the lane-batched ensemble (kept for callers that want
+/// the batched path explicitly; [`run_spec`] routes `c1` specs here
+/// automatically).
+pub fn run_batched(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunReport> {
+    let spec = spec.into();
+    anyhow::ensure!(
+        spec.rung.is_replica_batch(),
+        "{} is not a replica-batch rung",
+        spec.rung.label()
+    );
+    run_spec(&RunSpec::new(cfg.clone(), spec))
 }
 
 /// Timing-only run used by the benchmark harness (no exchanges — the
 /// paper's §4 measurement times the Metropolis sweeps themselves; PT
 /// bookkeeping is excluded like the paper excludes its multi-threading
 /// machinery from the per-sweep analysis).
-pub fn time_sweeps(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RungTiming> {
-    let spec = spec.into();
-    let plan = EngineBuilder::new(spec).layers(cfg.layers).plan()?;
-    let pool = scheduler::SweepPool::new(cfg.threads);
-    if spec.rung.is_replica_batch() {
-        let mut pt = build_batched_ensemble(cfg, spec)?;
+pub fn time_sweeps_spec(rs: &RunSpec) -> Result<RungTiming> {
+    let cfg = &rs.config;
+    let plan = rs.plan()?;
+    let pool = SweepPool::new(cfg.threads);
+    if rs.sampler.rung.is_replica_batch() {
+        let mut pt = build_batched_ensemble(cfg, rs.sampler)?;
         scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
         let timer = Timer::start();
         scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps, &pool);
@@ -165,7 +416,7 @@ pub fn time_sweeps(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<Rung
             cfg.total_updates(),
         ));
     }
-    let mut pt = build_ensemble(cfg, spec)?;
+    let mut pt = build_ensemble(cfg, rs.sampler)?;
     // Warm caches and reach a representative flip regime first.
     scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
     let timer = Timer::start();
@@ -174,9 +425,15 @@ pub fn time_sweeps(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<Rung
     Ok(RungTiming::labeled(&plan.label(), cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
 }
 
+/// [`time_sweeps_spec`] — the legacy `(RunConfig, spec)` shim.
+pub fn time_sweeps(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RungTiming> {
+    time_sweeps_spec(&RunSpec::new(cfg.clone(), spec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{BackendPref, Rung};
     use crate::sweep::SweepKind;
 
     fn small() -> RunConfig {
@@ -196,6 +453,10 @@ mod tests {
         // Pool utilization rides along (2 rounds = 2 inline pool jobs).
         assert_eq!(rep.pool_jobs_queued, 2);
         assert!(rep.pool_busy_fraction > 0.0 && rep.pool_busy_fraction <= 1.0);
+        // The Run API echo: one resolved plan covering every replica.
+        assert_eq!(rep.plans.len(), 1);
+        assert_eq!(rep.plans[0].resolved.width, 1);
+        assert_eq!(rep.plans[0].replicas, 4);
     }
 
     #[test]
@@ -224,11 +485,14 @@ mod tests {
         let cfg = small();
         assert_eq!(rep.total_attempts, cfg.total_updates());
         assert!(rep.flip_probs.last().unwrap() > rep.flip_probs.first().unwrap());
+        assert_eq!(rep.plans.len(), 1);
+        assert_eq!(rep.plans[0].replicas, 4);
     }
 
     #[test]
     fn batched_threads_do_not_change_totals() {
-        let mut cfg = RunConfig { n_models: 10, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() };
+        let mut cfg =
+            RunConfig { n_models: 10, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() };
         let r1 = run(&cfg, SweepKind::C1ReplicaBatch).unwrap();
         cfg.threads = 4;
         let r4 = run(&cfg, SweepKind::C1ReplicaBatch).unwrap();
@@ -262,5 +526,69 @@ mod tests {
         let t = time_sweeps(&small(), SweepKind::C1ReplicaBatch).unwrap();
         assert!(t.seconds > 0.0);
         assert_eq!(t.kind, "C.1");
+    }
+
+    #[test]
+    fn run_spec_covers_widths_the_legacy_enum_cannot_spell() {
+        // The acceptance scenario: a portable C.1w16 run end to end.
+        let rs = RunSpec::new(
+            small(),
+            crate::engine::SamplerSpec::rung(Rung::C1).w(16).on(BackendPref::Portable),
+        );
+        let rep = run_spec(&rs).unwrap();
+        assert_eq!(rep.kind, "C.1w16");
+        assert_eq!(rep.plans.len(), 1);
+        assert_eq!(rep.plans[0].resolved.width, 16);
+        assert_eq!(rep.plans[0].replicas, 4);
+        assert_eq!(rep.total_attempts, rs.config.total_updates());
+    }
+
+    #[test]
+    fn checkpointed_run_resumes_bit_exactly_via_run_spec() {
+        let dir = std::env::temp_dir().join("vectorising_coordinator_resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.ck.json");
+        let cfg = RunConfig { n_models: 5, sweeps: 40, sweeps_per_round: 10, ..small() };
+        // Reference: the full run, checkpointing every 2 rounds (the
+        // capture canonicalization at round 2 is part of the trajectory).
+        let full = RunSpec::new(cfg.clone(), SweepKind::C1ReplicaBatch);
+        let ref_report = run_spec_with(
+            &full,
+            &RunOptions {
+                checkpoint: Some(path.clone()),
+                checkpoint_every: 2,
+                resume: None,
+            },
+        )
+        .unwrap();
+        // First half only (2 rounds), checkpointed at its end.
+        let half =
+            RunSpec::new(RunConfig { sweeps: 20, ..cfg.clone() }, SweepKind::C1ReplicaBatch);
+        let half_path = dir.join("half.ck.json");
+        run_spec_with(
+            &half,
+            &RunOptions {
+                checkpoint: Some(half_path.clone()),
+                checkpoint_every: 2,
+                resume: None,
+            },
+        )
+        .unwrap();
+        // Resume from the half checkpoint — the spec comes from the file;
+        // extend the target back to the full 40 sweeps.
+        let resumed = resume_run(
+            &half_path,
+            |mut rs| {
+                rs.config.sweeps = 40;
+                rs
+            },
+            &RunOptions { checkpoint: Some(path.clone()), checkpoint_every: 2, resume: None },
+        )
+        .unwrap();
+        assert_eq!(resumed.sweeps, 20, "the resumed segment ran rounds 3..4");
+        for (a, b) in ref_report.energies.iter().zip(&resumed.energies) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resumed energies must be bit-exact");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -302,24 +302,28 @@ pub fn parallel_sweep_with_pool(pt: &mut PtEnsemble, n_sweeps: usize, pool: &Swe
     });
 }
 
-/// Sweep every lane-batch of a [`BatchedPtEnsemble`] for `n_sweeps` on
-/// the pool's workers (one job per batch — the C-rung unit of work).
+/// Sweep every lane-group of a [`BatchedPtEnsemble`] for `n_sweeps` on
+/// the pool's workers (one job per group — the C-rung unit of work).
+/// Groups may have heterogeneous widths (e.g. a `C.1w8` group next to a
+/// `C.1` tail group), so the ladder-ordered stats slice is split by each
+/// group's *active* replica count rather than a fixed chunk width.
 pub fn parallel_sweep_batches(pt: &mut BatchedPtEnsemble, n_sweeps: usize, pool: &SweepPool) {
     if pool.threads() <= 1 {
         pool.run_inline(|| pt.sweep_all(n_sweeps));
         return;
     }
-    let (betas, batches, stats, width) = pt.split_mut();
+    let (betas, batches, stats, actives) = pt.split_mut();
     type BatchJob<'a> = (&'a [f32], &'a mut Box<dyn BatchSweeper + Send>, &'a mut [SweepStats]);
-    let jobs: Vec<Mutex<BatchJob<'_>>> = batches
-        .iter_mut()
-        .zip(stats.chunks_mut(width))
-        .enumerate()
-        .map(|(b, (batch, chunk))| Mutex::new((betas[b].as_slice(), batch, chunk)))
-        .collect();
+    let mut rest = stats;
+    let mut jobs: Vec<Mutex<BatchJob<'_>>> = Vec::with_capacity(batches.len());
+    for (b, batch) in batches.iter_mut().enumerate() {
+        let (chunk, tail) = rest.split_at_mut(actives[b]);
+        rest = tail;
+        jobs.push(Mutex::new((betas[b].as_slice(), batch, chunk)));
+    }
     run_cursor_jobs(pool, jobs, |(lane_betas, batch, chunk)| {
         let per_lane = batch.run(n_sweeps, *lane_betas);
-        // The tail batch is padded: only the chunk's active lanes have
+        // Groups may be padded: only the chunk's active lanes have
         // stats slots.
         for (s, lane_stats) in chunk.iter_mut().zip(per_lane.iter()) {
             s.merge(lane_stats);
@@ -426,6 +430,45 @@ mod tests {
         let mut serial = batched(6);
         let mut parallel = batched(6);
         let pool = SweepPool::new(4);
+        serial.sweep_all(10);
+        super::parallel_sweep_batches(&mut parallel, 10, &pool);
+        let a = serial.reports();
+        let b = parallel.reports();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.stats.flips, rb.stats.flips);
+            assert_eq!(ra.energy, rb.energy);
+        }
+    }
+
+    /// Heterogeneous group layouts (different widths per group) must
+    /// sweep identically through the pool: the stats slice is split by
+    /// per-group active counts, not a fixed width.
+    #[test]
+    fn heterogeneous_batched_parallel_equals_serial() {
+        use crate::engine::{Backend, BackendPref, GroupPlan, Resolved, Rung, SamplerSpec};
+        let n = 10;
+        let build = || {
+            let ladder = Ladder::geometric(2.0, 0.2, n);
+            let wl = torus_workload(4, 4, 8, 21, 0.3);
+            let models = vec![wl.model.clone(); n];
+            let states = vec![wl.s0.clone(); n];
+            let seeds: Vec<u32> = (0..n as u32).map(|i| 500 + i).collect();
+            let r = |w| Resolved { rung: Rung::C1, backend: Backend::Portable, width: w };
+            BatchedPtEnsemble::with_groups(
+                ladder,
+                SamplerSpec::rung(Rung::C1).on(BackendPref::Portable),
+                &[GroupPlan::new(r(8), 8), GroupPlan::new(r(4), 2)],
+                &models,
+                &states,
+                &seeds,
+                1234,
+                ExpMode::Fast,
+            )
+            .unwrap()
+        };
+        let mut serial = build();
+        let mut parallel = build();
+        let pool = SweepPool::new(3);
         serial.sweep_all(10);
         super::parallel_sweep_batches(&mut parallel, 10, &pool);
         let a = serial.reports();

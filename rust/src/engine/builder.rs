@@ -149,7 +149,7 @@ pub(crate) fn interlace_ok(layers: usize, w: usize) -> bool {
 /// Widths with a monomorphized vector backend (4 and 8 have intrinsic
 /// implementations; 16 is portable-only but compiled in, which is what
 /// makes `--width 16` work without any new enum variant).
-const MONO_WIDTHS: [usize; 3] = [4, 8, 16];
+pub(crate) const MONO_WIDTHS: [usize; 3] = [4, 8, 16];
 
 /// Candidate lane widths for a vector rung, preference order.
 fn candidate_widths(width: Width, pref: BackendPref) -> Vec<usize> {

@@ -58,6 +58,40 @@ impl std::fmt::Display for UnsupportedGeometry {
 
 impl std::error::Error for UnsupportedGeometry {}
 
+/// A checkpoint cannot be resumed bit-exactly because its rung does not
+/// serialize its generator (the accelerator rungs keep the RNG on
+/// device, so the checkpoint carries states only).  Structured like the
+/// geometry rejections: callers downcast and read the recovery
+/// procedure as data instead of a doc comment.
+#[derive(Clone, Debug)]
+pub struct NonResumableRng {
+    /// Label of the rung the checkpoint was captured on (e.g. `B.2`).
+    pub label: String,
+    /// Checkpoint epoch — the seed offset the fresh-seed resume must
+    /// apply so the continued segment draws a disjoint uniform stream.
+    pub epoch: u64,
+    /// Sweeps completed at capture time.
+    pub sweeps_done: usize,
+}
+
+impl std::fmt::Display for NonResumableRng {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "checkpoint was captured on rung {} which cannot serialize its generator \
+             (accelerator RNG state lives on device), so a bit-exact resume is impossible; \
+             rebuild the ensemble with FRESH sweeper seeds for the resumed segment — offset \
+             the base seed by the checkpoint epoch ({}) — and restore the spin states only \
+             (Checkpoint::restore_states_only).  Reusing the original seeds would replay the \
+             {} sweeps of uniforms the recorded segment already consumed and correlate the \
+             continuation with it",
+            self.label, self.epoch, self.sweeps_done
+        )
+    }
+}
+
+impl std::error::Error for NonResumableRng {}
+
 /// Human-readable one-liner for an alternative spec, leading with the
 /// legacy spelling where one exists so old error-message greps keep
 /// working.

@@ -45,8 +45,8 @@ pub mod error;
 pub mod plan;
 
 pub use builder::{BatchEngine, Engine, EngineBuilder};
-pub use error::UnsupportedGeometry;
-pub use plan::{Backend, GroupLayout, Plan, Rejection, Resolved};
+pub use error::{NonResumableRng, UnsupportedGeometry};
+pub use plan::{groups_label, Backend, GroupLayout, GroupPlan, Plan, Rejection, Resolved};
 
 use crate::sweep::SweepKind;
 use crate::util::json::{self, Value};

@@ -53,6 +53,23 @@ impl std::fmt::Display for Backend {
     }
 }
 
+impl std::str::FromStr for Backend {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Backend::Scalar),
+            "sse2" => Ok(Backend::Sse2),
+            "avx2" => Ok(Backend::Avx2),
+            "portable" => Ok(Backend::Portable),
+            "accel" => Ok(Backend::Accel),
+            other => anyhow::bail!(
+                "unknown backend {other:?} (expected scalar, sse2, avx2, portable or accel)"
+            ),
+        }
+    }
+}
+
 /// How lanes map onto work — the memory-layout half of the negotiation.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum GroupLayout {
@@ -158,6 +175,102 @@ impl Resolved {
     }
 }
 
+impl Resolved {
+    /// JSON form (`{"rung":"c1","width":8,"backend":"avx2"}`) — the
+    /// per-group plan record of Checkpoint schema v2 and the `plans`
+    /// echo of a `RunReport`.
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("rung", json::str_v(self.rung.as_str())),
+            ("width", json::num(self.width as f64)),
+            ("backend", json::str_v(self.backend.as_str())),
+        ])
+    }
+
+    /// Parse the JSON form back.
+    pub fn from_value(v: &Value) -> crate::Result<Resolved> {
+        Ok(Resolved {
+            rung: v.get("rung")?.as_str()?.parse()?,
+            width: v.get("width")?.as_usize()?,
+            backend: v.get("backend")?.as_str()?.parse()?,
+        })
+    }
+}
+
+/// One group of a (possibly heterogeneous) batched run: which resolved
+/// `(rung, backend, width)` triple sweeps it and how many *active*
+/// replicas it carries (lanes beyond `replicas` are padding).  A ladder
+/// scheduled as `[{C.1w8, 8}, {C.1, 2}]` runs an AVX2 octet group next
+/// to a 2-active-lane SSE2 quadruplet tail — the heterogeneous layout
+/// Checkpoint schema v2 serializes and `RunReport` echoes.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct GroupPlan {
+    pub resolved: Resolved,
+    /// Active (non-padded) replicas in this group (`1..=resolved.width`).
+    pub replicas: usize,
+}
+
+impl GroupPlan {
+    pub fn new(resolved: Resolved, replicas: usize) -> Self {
+        Self { resolved, replicas }
+    }
+
+    /// JSON form: the resolved triple plus the active replica count.
+    pub fn to_value(&self) -> Value {
+        let mut v = self.resolved.to_value();
+        if let Value::Obj(m) = &mut v {
+            m.insert("replicas".to_string(), json::num(self.replicas as f64));
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> crate::Result<GroupPlan> {
+        Ok(GroupPlan {
+            resolved: Resolved::from_value(v)?,
+            replicas: v.get("replicas")?.as_usize()?,
+        })
+    }
+
+    /// Parse an optional `plans` JSON array — the one parser shared by
+    /// checkpoints and run reports; an absent field means no plans.
+    pub fn vec_from_opt(v: Option<&Value>) -> crate::Result<Vec<GroupPlan>> {
+        match v {
+            Some(arr) => arr.as_arr()?.iter().map(GroupPlan::from_value).collect(),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Whether a serialized RNG payload captured under `other` can be
+    /// restored into a group planned as `self`: the rung, lane width and
+    /// active-replica layout must match.  The *backend* may differ — the
+    /// interlaced generator serializes identically for every backend of
+    /// one width, which is what makes resume portable across hosts
+    /// (checkpoint on AVX2, resume on portable lanes).
+    pub fn layout_matches(&self, other: &GroupPlan) -> bool {
+        self.resolved.rung == other.resolved.rung
+            && self.resolved.width == other.resolved.width
+            && self.replicas == other.replicas
+    }
+}
+
+/// Joined label of a group sequence: the single label when every group
+/// resolves alike (`C.1w8`), otherwise the distinct labels in group
+/// order (`C.1w8+C.1`).
+pub fn groups_label(groups: &[GroupPlan]) -> String {
+    let mut labels: Vec<String> = Vec::new();
+    for g in groups {
+        let l = g.resolved.label();
+        if !labels.contains(&l) {
+            labels.push(l);
+        }
+    }
+    if labels.is_empty() {
+        "?".to_string()
+    } else {
+        labels.join("+")
+    }
+}
+
 /// The outcome of capability negotiation: everything a caller (or a
 /// service client) needs to know about what will actually run.
 #[derive(Clone, Debug)]
@@ -256,6 +369,33 @@ mod tests {
         assert_eq!(r(Rung::A3, 8).legacy_kind(), Some(SweepKind::A3VecRngW8));
         assert_eq!(r(Rung::C1, 4).legacy_kind(), Some(SweepKind::C1ReplicaBatch));
         assert_eq!(r(Rung::A4, 16).legacy_kind(), None);
+    }
+
+    #[test]
+    fn group_plans_roundtrip_and_label_joins() {
+        use std::str::FromStr;
+        let r = |rung, backend, width| Resolved { rung, backend, width };
+        let g8 = GroupPlan::new(r(Rung::C1, Backend::Avx2, 8), 8);
+        let g4 = GroupPlan::new(r(Rung::C1, Backend::Sse2, 4), 2);
+        // JSON round-trip.
+        for g in [g8, g4] {
+            let v = Value::parse(&g.to_value().to_string()).unwrap();
+            assert_eq!(GroupPlan::from_value(&v).unwrap(), g);
+        }
+        // Label joining: homogeneous collapses, heterogeneous lists.
+        assert_eq!(groups_label(&[g8, GroupPlan::new(r(Rung::C1, Backend::Avx2, 8), 3)]), "C.1w8");
+        assert_eq!(groups_label(&[g8, g4]), "C.1w8+C.1");
+        assert_eq!(groups_label(&[]), "?");
+        // Layout matching ignores the backend (resume portability) but
+        // not the width or the active replica count.
+        let g8_portable = GroupPlan::new(r(Rung::C1, Backend::Portable, 8), 8);
+        assert!(g8.layout_matches(&g8_portable));
+        assert!(!g8.layout_matches(&g4));
+        assert!(!g8.layout_matches(&GroupPlan::new(r(Rung::C1, Backend::Avx2, 8), 7)));
+        // Backend parses back from its JSON spelling.
+        assert_eq!(Backend::from_str("portable").unwrap(), Backend::Portable);
+        assert_eq!(Backend::from_str("scalar").unwrap(), Backend::Scalar);
+        assert!(Backend::from_str("neon").is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::path::Path;
 
-use crate::coordinator::{self, RunConfig, Timer};
+use crate::coordinator::{self, RunConfig, RunSpec, Timer};
 use crate::engine::{EngineBuilder, Rung, SamplerSpec};
 use crate::ising::builder::torus_workload;
 use crate::runtime::{artifact, Runtime};
@@ -71,9 +71,11 @@ pub fn compute(cfg: &RunConfig, thread_counts: &[usize], with_accel: bool) -> Re
     }
     for (spec, label) in ladder {
         for &threads in thread_counts {
+            // One Run API spec per grid cell: the workload with this
+            // thread count, paired with the ladder rung's sampler.
             let mut c = cfg.clone();
             c.threads = threads;
-            let t = coordinator::time_sweeps(&c, spec)?;
+            let t = coordinator::time_sweeps_spec(&RunSpec::new(c, spec))?;
             if spec.rung == Rung::A1 && threads == thread_counts[0] {
                 baseline = Some(t.seconds);
             }

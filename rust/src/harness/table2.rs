@@ -12,7 +12,7 @@
 use std::path::Path;
 use std::process::Command;
 
-use crate::coordinator::{self, RunConfig, RungTiming};
+use crate::coordinator::{self, RunConfig, RunSpec, RungTiming};
 use crate::engine::{EngineBuilder, Rung, SamplerSpec};
 use crate::Result;
 
@@ -43,7 +43,7 @@ pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
     }
     let mut out = Vec::new();
     for (spec, label) in ladder {
-        let t = coordinator::time_sweeps(&cfg, spec)?;
+        let t = coordinator::time_sweeps_spec(&RunSpec::new(cfg.clone(), spec))?;
         out.push(LadderTiming { label: label.to_string(), seconds: t.seconds });
     }
     Ok(out)

@@ -36,14 +36,20 @@
 //! spellings all lower onto specs, so old call sites keep working.
 //!
 //! On top of the sweep ladder sit the systems the paper's workload needs:
-//! a parallel-tempering engine ([`tempering`]), a multi-threaded
-//! coordinator ([`coordinator`]), the PJRT runtime ([`runtime`]), the
+//! a parallel-tempering engine ([`tempering`], with heterogeneous
+//! per-group plans — an AVX2 `C.1w8` group next to an SSE2 `C.1` tail),
+//! a multi-threaded coordinator ([`coordinator`]) whose **Run API v1**
+//! describes runs as versioned [`coordinator::RunSpec`]s and persists
+//! them through spec-carrying schema-v2 [`coordinator::Checkpoint`]s
+//! (bit-exact resume at any instantiable width, `repro run
+//! --checkpoint/--resume`), the PJRT runtime ([`runtime`]), the
 //! benchmark harness that regenerates every table and figure of the
 //! paper's evaluation ([`harness`]), and the sampling [`service`] — a
 //! job queue + dynamic lane-batching scheduler that packs independent
 //! sampling jobs onto C-rung lane-batches (`repro serve` / `repro
 //! submit`), speaking the versioned v1 wire protocol (jobs carry a
-//! sampler spec, results echo the resolved plan).
+//! sampler spec, results echo the resolved plan, and `{"op":"run"}`
+//! executes whole checkpointable runs with inline checkpoints).
 //!
 //! ## Quickstart
 //!

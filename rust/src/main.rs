@@ -20,7 +20,7 @@
 use std::path::PathBuf;
 use std::str::FromStr;
 
-use vectorising::coordinator::{self, RunConfig};
+use vectorising::coordinator::{self, Checkpoint, RunConfig, RunOptions, RunSpec};
 use vectorising::engine::{EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry};
 use vectorising::harness::{fig13, fig14, fig17, table1, table2};
 use vectorising::ising::builder::torus_workload;
@@ -48,6 +48,14 @@ SUBCOMMANDS
                    (default: rung a4, width auto — the widest lane count the
                     host + layer count support; rung c1 sweeps one replica
                     per SIMD lane and accepts any layers >= 2)
+                   checkpointing (schema v2, spec-carrying):
+                     --checkpoint PATH        save atomically during the run
+                     --checkpoint-every N     rounds between saves (default 1;
+                                              the final round always saves)
+                     --resume PATH            rebuild + restore from a saved
+                                              checkpoint — the sampler comes
+                                              from the file, no flags needed
+                                              (--sweeps/--threads may override)
   plan             print the capability-negotiated Plan as JSON without
                    running: --rung ... [--width ...] [--backend ...]
                    [--layers N] (e.g. `repro plan --rung c1 --width auto
@@ -168,13 +176,49 @@ fn main() -> Result<()> {
     };
     match sub.as_str() {
         "run" => {
-            let cfg = workload_config(&args)?;
-            // Default: rung a4, width auto — the widest lane count this
-            // host has a backend for (AVX2 octets when detected, SSE
-            // quadruplets else), narrowed to what the layer count supports.
-            let spec = sampler_spec_args(&args)?.unwrap_or_else(|| {
-                SweepKind::preferred_cpu_for_layers(cfg.layers).spec()
-            });
+            let opts = RunOptions {
+                checkpoint: args.str_opt("checkpoint").map(PathBuf::from),
+                checkpoint_every: args.usize_or("checkpoint-every", 1)?,
+                resume: None,
+            };
+            let (cfg, spec, opts) = if let Some(resume_path) = args.str_opt("resume") {
+                // Resume is spec-driven: the checkpoint carries the whole
+                // RunSpec (v1 files lower their kind label); only sweeps
+                // and threads may be overridden from the command line.
+                let ck = Checkpoint::load(&PathBuf::from(resume_path))?;
+                let mut rs = ck.run_spec()?;
+                if args.str_opt("sweeps").is_some() {
+                    rs.config.sweeps = args.usize_or("sweeps", rs.config.sweeps)?;
+                }
+                if args.str_opt("threads").is_some() {
+                    rs.config.threads = args.usize_or("threads", rs.config.threads)?;
+                }
+                let opts = RunOptions { resume: Some(ck), ..opts };
+                (rs.config, rs.sampler, opts)
+            } else {
+                let cfg = workload_config(&args)?;
+                // Default: rung a4, width auto — the widest lane count this
+                // host has a backend for (AVX2 octets when detected, SSE
+                // quadruplets else), narrowed to what the layer count
+                // supports.
+                let spec = sampler_spec_args(&args)?
+                    .unwrap_or_else(|| SweepKind::preferred_cpu_for_layers(cfg.layers).spec());
+                (cfg, spec, opts)
+            };
+            // The accelerator rungs keep their generator on device, so the
+            // coordinator's checkpoint path does not cover them — refuse
+            // the flags loudly instead of silently ignoring them (a
+            // "resumed" B-rung run would be a fresh run reported as a
+            // continuation; see engine::NonResumableRng for the manual
+            // fresh-seed procedure).
+            if spec.rung.is_accel() && (opts.checkpoint.is_some() || opts.resume.is_some()) {
+                anyhow::bail!(
+                    "--checkpoint/--resume do not support the accelerator rungs: their RNG \
+                     state lives on device, so a bit-exact resume is impossible (rebuild with \
+                     fresh seeds offset by the checkpoint epoch and restore states only — see \
+                     Checkpoint::restore_states_only)"
+                );
+            }
             let outcome = match spec.rung {
                 // Validate the spec axes (width/backend pins) through the
                 // same negotiation `repro plan` uses before running the
@@ -187,7 +231,7 @@ fn main() -> Result<()> {
                     .layers(cfg.layers)
                     .plan()
                     .and_then(|_| run_accel(&cfg, SweepKind::B2Accel)),
-                _ => coordinator::run(&cfg, spec),
+                _ => coordinator::run_spec_with(&RunSpec::new(cfg.clone(), spec), &opts),
             };
             let report = match outcome {
                 Ok(report) => report,

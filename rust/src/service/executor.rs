@@ -17,9 +17,9 @@
 
 use std::collections::BTreeSet;
 
-use crate::engine::{self, BackendPref, EngineBuilder, Resolved, Rung, SamplerSpec, Width};
+use crate::engine::{self, Backend, BackendPref, EngineBuilder, Resolved, Rung, SamplerSpec, Width};
 use crate::ising::QmcModel;
-use crate::sweep::{try_make_sweeper_with_exp, ExpMode, SweepKind, SweepStats};
+use crate::sweep::{ExpMode, SweepStats};
 use crate::Result;
 
 use super::batcher::{Dispatch, PendingJob};
@@ -100,13 +100,18 @@ impl Executor {
         }
     }
 
+    /// The resolved plan of the scalar A.2 reference path.
+    pub const SCALAR: Resolved = Resolved { rung: Rung::A2, backend: Backend::Scalar, width: 1 };
+
     /// The scalar reference path: exactly the A.2 run a standalone
     /// invocation of this job would execute.  Also the bit-exactness
-    /// oracle for served results (`repro job-run`).
+    /// oracle for served results (`repro job-run`).  Instantiated
+    /// through the engine's single dispatch point, like the lane-batched
+    /// path.
     pub fn run_single(&self, spec: &JobSpec) -> Result<JobResult> {
         let wl = spec.workload();
         let mut sweeper =
-            try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, spec.seed, self.exp)?;
+            engine::builder::instantiate(Self::SCALAR, &wl.model, &wl.s0, spec.seed, self.exp)?;
         let mut stats = SweepStats::default();
         let mut trace = Vec::new();
         let mut done = 0usize;
@@ -121,7 +126,7 @@ impl Executor {
             id: spec.id.clone(),
             energy: sweeper.energy(),
             stats,
-            kind: SweepKind::A2Basic.label().to_string(),
+            kind: Self::SCALAR.label(),
             lanes: 1,
             occupancy: 1,
             energy_trace: trace,

@@ -29,6 +29,7 @@
 //! job (`repro job-run`), whichever lane of whichever batch it landed on
 //! — that is the C-rung correctness contract (see `tests/replica_batch.rs`).
 
+use crate::coordinator::{Checkpoint, RunReport, RunSpec};
 use crate::engine::{Resolved, Rung, SamplerSpec, Width};
 use crate::ising::builder::{torus_workload, Workload};
 use crate::sweep::SweepStats;
@@ -246,9 +247,124 @@ impl JobSpec {
     }
 }
 
+/// A checkpointable full-run job (`{"op":"run", ...}`): a complete
+/// [`RunSpec`] executed server-side through the coordinator, optionally
+/// resuming from an inline schema-v2 [`Checkpoint`] and optionally
+/// returning the final checkpoint inline — so a client can drive a long
+/// tempering run through the service in resumable segments without the
+/// server keeping any state between requests.
+///
+/// ```text
+/// {"op":"run","id":"r1","run_spec":{"version":1,"config":{...},
+///  "sampler":{"rung":"c1","width":"auto"}},"want_checkpoint":true}
+/// {"op":"run","id":"r2","run_spec":{...},"checkpoint":{...},"want_checkpoint":true}
+/// ```
+///
+/// Run jobs execute synchronously on the connection thread (they are
+/// whole parallel-tempering runs, not lane-batchable sweep requests);
+/// the same per-request work cap as plain jobs applies.
+#[derive(Clone, Debug)]
+pub struct RunJob {
+    pub id: String,
+    pub spec: RunSpec,
+    /// Inline checkpoint to resume from (its workload must match the
+    /// spec's — checked by the coordinator).
+    pub checkpoint: Option<Checkpoint>,
+    /// Return the final checkpoint inline in the result line.
+    pub want_checkpoint: bool,
+}
+
+impl RunJob {
+    /// Hard cap on one run job's total spin-updates (the same bound as
+    /// a plain job, so a run request can never stall a connection for
+    /// unbounded time).
+    pub const MAX_UPDATES: u64 = 1 << 31;
+
+    pub fn from_value(v: &Value) -> Result<RunJob> {
+        let job = RunJob {
+            id: v.get("id")?.as_str()?.to_string(),
+            spec: RunSpec::from_value(v.get("run_spec")?)
+                .map_err(|e| anyhow::anyhow!("run_spec: {e}"))?,
+            checkpoint: match v.opt("checkpoint") {
+                Some(cv) => Some(
+                    Checkpoint::from_value(cv).map_err(|e| anyhow::anyhow!("checkpoint: {e}"))?,
+                ),
+                None => None,
+            },
+            want_checkpoint: v
+                .opt("want_checkpoint")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+        };
+        job.validate()?;
+        Ok(job)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.id.is_empty() && self.id.len() <= 128,
+            "id must be 1..=128 characters"
+        );
+        self.spec.validate()?;
+        anyhow::ensure!(
+            self.spec.config.total_updates() <= Self::MAX_UPDATES,
+            "run too heavy: {} spin-updates (limit {})",
+            self.spec.config.total_updates(),
+            Self::MAX_UPDATES
+        );
+        anyhow::ensure!(
+            self.spec.config.threads <= 8,
+            "run jobs are capped at 8 worker threads (got {})",
+            self.spec.config.threads
+        );
+        anyhow::ensure!(
+            !self.spec.sampler.rung.is_accel(),
+            "the service does not run accelerator rungs"
+        );
+        Ok(())
+    }
+
+    /// Serialize back to a request line (clients, tests).
+    pub fn to_line(&self) -> String {
+        let mut pairs = vec![
+            ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+            ("op", json::str_v("run")),
+            ("id", json::str_v(&self.id)),
+            ("run_spec", self.spec.to_value()),
+        ];
+        if let Some(ck) = &self.checkpoint {
+            pairs.push(("checkpoint", ck.to_value()));
+        }
+        if self.want_checkpoint {
+            pairs.push(("want_checkpoint", Value::Bool(true)));
+        }
+        json::obj(pairs).to_string()
+    }
+
+    /// The result line of a completed run job: the full [`RunReport`]
+    /// (with its per-group `plans` echo) plus, when requested, the
+    /// final schema-v2 checkpoint inline.
+    pub fn result_line(id: &str, report: &RunReport, ck: Option<&Checkpoint>) -> String {
+        let mut pairs = vec![
+            ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+            ("id", json::str_v(id)),
+            ("status", json::str_v("ok")),
+            ("op", json::str_v("run")),
+            ("run_report", report.to_value()),
+        ];
+        if let Some(ck) = ck {
+            pairs.push(("checkpoint", ck.to_value()));
+        }
+        json::obj(pairs).to_string()
+    }
+}
+
 /// A parsed request line.
 pub enum Request {
     Job(JobSpec),
+    /// A checkpointable full-run job (executed on the connection thread).
+    Run(Box<RunJob>),
     Stats,
     Shutdown,
 }
@@ -270,7 +386,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
             "submit" => Ok(Request::Job(JobSpec::from_value(v.get("job")?)?)),
-            other => anyhow::bail!("unknown op {other:?} (expected stats, shutdown or submit)"),
+            "run" => Ok(Request::Run(Box::new(RunJob::from_value(&v)?))),
+            other => {
+                anyhow::bail!("unknown op {other:?} (expected stats, shutdown, submit or run)")
+            }
         };
     }
     Ok(Request::Job(JobSpec::from_value(&v)?))
@@ -542,6 +661,51 @@ mod tests {
         // Unknown versions are refused loudly, not mis-parsed.
         let err = parse_request(r#"{"protocol_version":2,"op":"stats"}"#).err().unwrap();
         assert!(format!("{err:#}").contains("unsupported protocol_version"));
+    }
+
+    #[test]
+    fn run_jobs_parse_validate_and_roundtrip() {
+        use crate::coordinator::RunConfig;
+        let rs = RunSpec::new(
+            RunConfig { n_models: 3, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() },
+            SamplerSpec::rung(Rung::C1),
+        );
+        let job = RunJob { id: "r1".into(), spec: rs.clone(), checkpoint: None, want_checkpoint: true };
+        let line = job.to_line();
+        let Request::Run(parsed) = parse_request(&line).unwrap() else { panic!("expected run") };
+        assert_eq!(parsed.id, "r1");
+        assert!(parsed.want_checkpoint);
+        assert_eq!(parsed.spec.sampler.rung, Rung::C1);
+        assert_eq!(parsed.spec.config.n_models, 3);
+        assert!(parsed.checkpoint.is_none());
+        // Accelerator rungs are not servable as run jobs.
+        let accel = RunJob {
+            id: "r2".into(),
+            spec: RunSpec::new(rs.config.clone(), crate::sweep::SweepKind::B2Accel),
+            checkpoint: None,
+            want_checkpoint: false,
+        };
+        assert!(parse_request(&accel.to_line()).is_err());
+        // The per-request work cap applies.
+        let heavy = RunJob {
+            id: "r3".into(),
+            spec: RunSpec::new(
+                RunConfig {
+                    width: 32,
+                    height: 32,
+                    layers: 64,
+                    n_models: 40,
+                    sweeps: 100_000,
+                    sweeps_per_round: 100,
+                    ..RunConfig::default()
+                },
+                SamplerSpec::rung(Rung::C1),
+            ),
+            checkpoint: None,
+            want_checkpoint: false,
+        };
+        let err = parse_request(&heavy.to_line()).err().unwrap();
+        assert!(format!("{err:#}").contains("too heavy"));
     }
 
     #[test]

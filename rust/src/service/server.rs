@@ -23,7 +23,7 @@ use crate::util::json::Value;
 use crate::Result;
 
 use super::engine::{self, Submission};
-use super::job::{parse_request, JobResult, Request};
+use super::job::{parse_request, JobResult, Request, RunJob};
 use super::metrics::ServiceMetrics;
 use super::ServiceConfig;
 
@@ -175,6 +175,13 @@ fn handle_line(
                 let _ = line_tx.send(JobResult::error_line(&e.0.spec.id, "service shutting down"));
             }
         }
+        Ok(Request::Run(job)) => {
+            // A checkpointable full run: executed synchronously on this
+            // connection's thread through the coordinator (admission has
+            // already capped its work), optionally resuming from the
+            // inline checkpoint and optionally returning the final one.
+            let _ = line_tx.send(execute_run_job(*job));
+        }
         Ok(Request::Stats) => {
             let _ = line_tx.send(metrics.snapshot_json());
         }
@@ -199,6 +206,23 @@ fn handle_line(
                 .unwrap_or_default();
             let _ = line_tx.send(JobResult::error_line(&id, &format!("{e:#}")));
         }
+    }
+}
+
+/// Execute one checkpointable run job through the coordinator and
+/// serialize its outcome (one result line either way).
+fn execute_run_job(job: RunJob) -> String {
+    use crate::coordinator::{self, RunOptions};
+    let id = job.id.clone();
+    let opts = RunOptions { resume: job.checkpoint, ..RunOptions::default() };
+    let outcome = if job.want_checkpoint {
+        coordinator::run_spec_capturing(&job.spec, &opts).map(|(rep, ck)| (rep, Some(ck)))
+    } else {
+        coordinator::run_spec_with(&job.spec, &opts).map(|rep| (rep, None))
+    };
+    match outcome {
+        Ok((report, ck)) => RunJob::result_line(&id, &report, ck.as_ref()),
+        Err(e) => JobResult::error_line(&id, &format!("{e:#}")),
     }
 }
 

@@ -1,36 +1,56 @@
-//! Lane-batched parallel tempering — the ladder grouped into C-rung
-//! batches of `W` replicas, one SIMD lane per replica.
+//! Lane-batched parallel tempering — the ladder partitioned into C-rung
+//! groups, one SIMD lane per replica, with **per-group plans**.
 //!
 //! A [`BatchedPtEnsemble`] covers the same ladder as a [`PtEnsemble`] of
-//! scalar sweepers, but sweeps it `W` replicas at a time: rung `i` is
-//! lane `i % W` of batch `i / W`.  The last batch is padded with clones
-//! of the final replica when the ladder length is not a multiple of `W`
-//! — padded lanes burn a little compute and are excluded from every
-//! report, exchange and checkpoint (lanes never interact during sweeps,
-//! so the padding cannot perturb the active chains).
+//! scalar sweepers, but sweeps it in lane groups.  Groups are
+//! independent units of work, so they do not have to share a width or a
+//! backend: a run may schedule an AVX2 `C.1w8` group next to an SSE2
+//! `C.1` tail group (see [`GroupPlan`]).  Replica trajectories are
+//! *grouping-invariant*: lane `k` of any group runs the exact scalar
+//! A.2 trajectory of its replica (same per-replica seed, lane-exact
+//! generator), so how the ladder is partitioned is purely a
+//! performance/padding choice, never a statistical one — the
+//! differential suite pins this down.
 //!
-//! Exchanges stay on the coordinator thread between sweep rounds,
-//! exactly as in the per-replica ensemble — both run the shared
-//! [`exchange_pass`], so the two engines are statistically
-//! interchangeable (and, lane for lane, bit-exact under
-//! `ExpMode::Exact`; the differential suite asserts it).
+//! Partitioning: a width-pinned spec produces homogeneous groups padded
+//! at the tail (the historical layout).  A `width: auto` spec produces
+//! full groups at the negotiated widest width plus, when a narrower
+//! monomorphized width still fits the remainder, a *narrower* tail
+//! group taken from the plan's fallback widths — e.g. 10 replicas on an
+//! AVX2 host become `[C.1w8 × 8 replicas, C.1 × 2 replicas]` instead of
+//! a second octet group with six padded lanes.
+//!
+//! Padded lanes burn a little compute and are excluded from every
+//! report, exchange and checkpoint (lanes never interact during sweeps,
+//! so the padding cannot perturb the active chains).  Exchanges stay on
+//! the coordinator thread between sweep rounds, exactly as in the
+//! per-replica ensemble — both run the shared [`exchange_pass`], so the
+//! two engines are statistically interchangeable (and, lane for lane,
+//! bit-exact under `ExpMode::Exact`).
 
+use crate::engine::{EngineBuilder, GroupPlan, SamplerSpec, Width};
 use crate::ising::QmcModel;
 use crate::rng::Mt19937;
 use crate::sweep::c1_replica_batch::BatchSweeper;
-use crate::sweep::{ExpMode, SweepKind, SweepStats};
+use crate::sweep::{ExpMode, SweepStats};
 use crate::Result;
 
 use super::ladder::Ladder;
 use super::pt::{exchange_pass, ReplicaReport, ReplicaSet};
 
-/// A parallel-tempering ensemble swept in lane-batches by a C-rung.
+/// A parallel-tempering ensemble swept in lane-batches by C-rungs, one
+/// (possibly different) resolved plan per group.
 pub struct BatchedPtEnsemble {
     ladder: Ladder,
-    kind: SweepKind,
-    width: usize,
+    /// The spec the ensemble was requested with (recorded in schema-v2
+    /// checkpoints so resume is spec-driven).
+    spec: SamplerSpec,
+    /// One resolved plan per group, in ladder order.
+    groups: Vec<GroupPlan>,
+    /// First replica index of each group (prefix sums of `replicas`).
+    offsets: Vec<usize>,
     batches: Vec<Box<dyn BatchSweeper + Send>>,
-    /// Per-batch β vectors (padded lanes repeat the last active β).
+    /// Per-group β vectors (padded lanes repeat the last active β).
     lane_betas: Vec<Vec<f32>>,
     /// Per-replica accumulated stats (active replicas only).
     stats: Vec<SweepStats>,
@@ -40,6 +60,49 @@ pub struct BatchedPtEnsemble {
     swaps_accepted: u64,
 }
 
+/// Partition `n` replicas under `spec`: homogeneous groups for a pinned
+/// width; for `width: auto`, full groups at the negotiated width plus a
+/// narrower tail group when one fits better (resolved through the same
+/// builder, so the tail honors the backend preference and host
+/// capabilities — this is where the plan's fallback chain becomes a
+/// heterogeneous schedule).
+pub fn plan_groups(
+    spec: SamplerSpec,
+    n: usize,
+    layers: usize,
+    exp: ExpMode,
+) -> Result<Vec<GroupPlan>> {
+    anyhow::ensure!(n > 0, "cannot batch an empty ladder");
+    anyhow::ensure!(
+        spec.rung.is_replica_batch(),
+        "{} is not a replica-batch rung",
+        spec.rung.label()
+    );
+    let plan = EngineBuilder::new(spec).layers(layers).exp(exp).plan()?;
+    let w = plan.width;
+    let (full, tail) = (n / w, n % w);
+    let mut groups = vec![GroupPlan::new(plan.resolved(), w); full];
+    if tail > 0 {
+        let mut tail_group = GroupPlan::new(plan.resolved(), tail);
+        if spec.width == Width::Auto {
+            // Narrowest monomorphized width that still fits the tail.
+            let narrower = crate::engine::builder::MONO_WIDTHS
+                .iter()
+                .copied()
+                .filter(|&tw| tw < w && tw >= tail)
+                .min();
+            if let Some(tw) = narrower {
+                let tail_spec = SamplerSpec { width: Width::W(tw), ..spec };
+                if let Ok(tp) = EngineBuilder::new(tail_spec).layers(layers).exp(exp).plan() {
+                    tail_group = GroupPlan::new(tp.resolved(), tail);
+                }
+            }
+        }
+        groups.push(tail_group);
+    }
+    Ok(groups)
+}
+
 impl BatchedPtEnsemble {
     /// Build a batched ensemble: replica `i` runs `models[i]` from
     /// `states[i]` at `ladder.beta(i)`, with RNG stream `seeds[i]` — the
@@ -47,12 +110,13 @@ impl BatchedPtEnsemble {
     /// `i` reproduces the scalar replica `i` trajectory bit-for-bit under
     /// `ExpMode::Exact`.
     ///
-    /// Takes anything that lowers onto a [`crate::engine::SamplerSpec`]
-    /// (a legacy C-rung [`SweepKind`] or a `c1` spec); the backend and
-    /// effective width come from the negotiated plan.
+    /// Takes anything that lowers onto a [`SamplerSpec`] (a legacy
+    /// C-rung `SweepKind` or a `c1` spec); the group layout comes from
+    /// [`plan_groups`] — *any* width the builder can instantiate works,
+    /// including the portable `C.1w16` the legacy enum cannot spell.
     pub fn new(
         ladder: Ladder,
-        spec: impl Into<crate::engine::SamplerSpec>,
+        spec: impl Into<SamplerSpec>,
         models: &[QmcModel],
         states: &[Vec<f32>],
         seeds: &[u32],
@@ -60,11 +124,25 @@ impl BatchedPtEnsemble {
         exp: ExpMode,
     ) -> Result<Self> {
         let spec = spec.into();
-        anyhow::ensure!(
-            spec.rung.is_replica_batch(),
-            "{} is not a replica-batch rung",
-            spec.rung.label()
-        );
+        anyhow::ensure!(!models.is_empty(), "cannot batch an empty ladder");
+        let groups = plan_groups(spec, ladder.len(), models[0].n_layers, exp)?;
+        Self::with_groups(ladder, spec, &groups, models, states, seeds, swap_seed, exp)
+    }
+
+    /// Build with an explicit (possibly heterogeneous) group layout.
+    /// `groups[g].replicas` active lanes of group `g` cover the ladder in
+    /// order; each group is instantiated from its own resolved plan.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_groups(
+        ladder: Ladder,
+        spec: SamplerSpec,
+        groups: &[GroupPlan],
+        models: &[QmcModel],
+        states: &[Vec<f32>],
+        seeds: &[u32],
+        swap_seed: u32,
+        exp: ExpMode,
+    ) -> Result<Self> {
         let n = ladder.len();
         anyhow::ensure!(
             models.len() == n && states.len() == n && seeds.len() == n,
@@ -74,55 +152,65 @@ impl BatchedPtEnsemble {
             seeds.len()
         );
         anyhow::ensure!(n > 0, "cannot batch an empty ladder");
-        let plan = crate::engine::EngineBuilder::new(spec)
-            .layers(models[0].n_layers)
-            .exp(exp)
-            .plan()?;
-        let kind = plan.legacy_kind().ok_or_else(|| {
-            anyhow::anyhow!(
-                "the coordinator's checkpoint format spells widths 4 and 8 only (plan resolved \
-                 to width {}); build the batch directly via engine::EngineBuilder::build_batch",
-                plan.width
-            )
-        })?;
-        let w = plan.width;
-        let n_batches = n.div_ceil(w);
-        let mut batches = Vec::with_capacity(n_batches);
-        let mut lane_betas = Vec::with_capacity(n_batches);
-        for b in 0..n_batches {
-            // Pad the tail batch with clones of the last replica; padded
-            // lanes get distinct seeds so their (discarded) streams never
-            // alias an active one.
-            let lane_idx = |k: usize| (b * w + k).min(n - 1);
-            let lane_models: Vec<QmcModel> =
-                (0..w).map(|k| models[lane_idx(k)].clone()).collect();
+        anyhow::ensure!(!groups.is_empty(), "need at least one group");
+        let covered: usize = groups.iter().map(|g| g.replicas).sum();
+        anyhow::ensure!(
+            covered == n,
+            "group layout covers {covered} replicas, ladder has {n}"
+        );
+        for (gi, g) in groups.iter().enumerate() {
+            anyhow::ensure!(
+                g.resolved.rung.is_replica_batch(),
+                "group {gi}: {} is not a replica-batch rung",
+                g.resolved.rung.label()
+            );
+            anyhow::ensure!(
+                g.replicas >= 1 && g.replicas <= g.resolved.width,
+                "group {gi}: {} active replicas do not fit width {}",
+                g.replicas,
+                g.resolved.width
+            );
+        }
+        let mut offsets = Vec::with_capacity(groups.len());
+        let mut batches = Vec::with_capacity(groups.len());
+        let mut lane_betas = Vec::with_capacity(groups.len());
+        let mut offset = 0usize;
+        for g in groups {
+            let w = g.resolved.width;
+            // Pad the group with clones of its last active replica; padded
+            // lanes get distinct off-ladder seeds so their (discarded)
+            // streams never alias an active one.
+            let last = offset + g.replicas - 1;
+            let lane_idx = |k: usize| (offset + k).min(last);
+            let lane_models: Vec<QmcModel> = (0..w).map(|k| models[lane_idx(k)].clone()).collect();
             let lane_states: Vec<Vec<f32>> =
                 (0..w).map(|k| states[lane_idx(k)].clone()).collect();
             let lane_seeds: Vec<u32> = (0..w)
                 .map(|k| {
-                    let i = b * w + k;
-                    if i < n {
-                        seeds[i]
+                    if k < g.replicas {
+                        seeds[offset + k]
                     } else {
-                        // off-ladder stream, disjoint from every active seed
-                        seeds[n - 1] ^ 0x8000_0000 ^ (i as u32)
+                        seeds[last] ^ 0x8000_0000 ^ ((offset + k) as u32)
                     }
                 })
                 .collect();
             let betas: Vec<f32> = (0..w).map(|k| ladder.beta(lane_idx(k))).collect();
             batches.push(crate::engine::builder::instantiate_batch(
-                plan.resolved(),
+                g.resolved,
                 &lane_models,
                 &lane_states,
                 &lane_seeds,
                 exp,
             )?);
             lane_betas.push(betas);
+            offsets.push(offset);
+            offset += g.replicas;
         }
         Ok(Self {
             ladder,
-            kind,
-            width: w,
+            spec,
+            groups: groups.to_vec(),
+            offsets,
             batches,
             lane_betas,
             stats: vec![SweepStats::default(); n],
@@ -133,8 +221,20 @@ impl BatchedPtEnsemble {
         })
     }
 
-    pub fn kind(&self) -> SweepKind {
-        self.kind
+    /// The spec the ensemble was requested with.
+    pub fn spec(&self) -> SamplerSpec {
+        self.spec
+    }
+
+    /// The resolved per-group plans, in ladder order.
+    pub fn plans(&self) -> &[GroupPlan] {
+        &self.groups
+    }
+
+    /// Joined label of the group plans (`C.1w8`, or `C.1w8+C.1` for a
+    /// heterogeneous layout).
+    pub fn label(&self) -> String {
+        crate::engine::groups_label(&self.groups)
     }
 
     /// Active replicas (= ladder rungs; padding excluded).
@@ -146,12 +246,12 @@ impl BatchedPtEnsemble {
         self.ladder.is_empty()
     }
 
-    /// Lane width `W` of the batches.
+    /// Widest lane count across the groups.
     pub fn width(&self) -> usize {
-        self.width
+        self.groups.iter().map(|g| g.resolved.width).max().unwrap_or(0)
     }
 
-    /// Number of lane-batches (last one possibly padded).
+    /// Number of lane groups (tail possibly padded or narrower).
     pub fn n_batches(&self) -> usize {
         self.batches.len()
     }
@@ -160,19 +260,20 @@ impl BatchedPtEnsemble {
         &self.ladder
     }
 
-    /// Sweep phase of one round: every batch for `n_sweeps`, each lane at
-    /// its rung's β.  (The coordinator parallelises this over batches via
+    /// Map a global replica index onto `(group, lane)`.
+    fn locate(&self, i: usize) -> (usize, usize) {
+        locate(&self.offsets, i)
+    }
+
+    /// Sweep phase of one round: every group for `n_sweeps`, each lane at
+    /// its rung's β.  (The coordinator parallelises this over groups via
     /// `scheduler::parallel_sweep_batches`.)
     pub fn sweep_all(&mut self, n_sweeps: usize) {
-        let n = self.ladder.len();
-        let w = self.width;
-        for (b, batch) in self.batches.iter_mut().enumerate() {
-            let per_lane = batch.run(n_sweeps, &self.lane_betas[b]);
-            for (k, s) in per_lane.iter().enumerate() {
-                let i = b * w + k;
-                if i < n {
-                    self.stats[i].merge(s);
-                }
+        for (g, batch) in self.batches.iter_mut().enumerate() {
+            let per_lane = batch.run(n_sweeps, &self.lane_betas[g]);
+            let offset = self.offsets[g];
+            for (k, s) in per_lane.iter().take(self.groups[g].replicas).enumerate() {
+                self.stats[offset + k].merge(s);
             }
         }
     }
@@ -185,7 +286,7 @@ impl BatchedPtEnsemble {
         let mut view = BatchedReplicas {
             ladder: &self.ladder,
             batches: self.batches.as_mut_slice(),
-            width: self.width,
+            offsets: &self.offsets,
         };
         let (attempted, accepted) = exchange_pass(&mut view, &mut self.swap_rng, start);
         self.swaps_attempted += attempted;
@@ -210,13 +311,15 @@ impl BatchedPtEnsemble {
     /// State of replica `i` in original order.
     pub fn state_of(&mut self, i: usize) -> Vec<f32> {
         assert!(i < self.ladder.len());
-        self.batches[i / self.width].state_of(i % self.width)
+        let (g, lane) = self.locate(i);
+        self.batches[g].state_of(lane)
     }
 
     /// Overwrite replica `i`'s state (checkpoint restore).
     pub fn set_state_of(&mut self, i: usize, s: &[f32]) {
         assert!(i < self.ladder.len());
-        self.batches[i / self.width].set_state_of(i % self.width, s);
+        let (g, lane) = self.locate(i);
+        self.batches[g].set_state_of(lane, s);
     }
 
     /// Worst incremental-field inconsistency across every batch.
@@ -226,24 +329,26 @@ impl BatchedPtEnsemble {
 
     /// Per-rung reports (active replicas, ladder-ordered).
     pub fn reports(&mut self) -> Vec<ReplicaReport> {
-        let w = self.width;
         (0..self.ladder.len())
-            .map(|i| ReplicaReport {
-                beta: self.ladder.beta(i),
-                stats: self.stats[i],
-                energy: self.batches[i / w].energy_of(i % w),
+            .map(|i| {
+                let (g, lane) = locate(&self.offsets, i);
+                ReplicaReport {
+                    beta: self.ladder.beta(i),
+                    stats: self.stats[i],
+                    energy: self.batches[g].energy_of(lane),
+                }
             })
             .collect()
     }
 
     // -- checkpoint support (bit-exact resume) ----------------------------
 
-    /// Per-batch serialized RNG states.
+    /// Per-group serialized RNG states.
     pub fn rng_states(&self) -> Vec<Vec<u32>> {
         self.batches.iter().map(|b| b.rng_state()).collect()
     }
 
-    /// Restore per-batch RNG states; `false` on any mismatch.
+    /// Restore per-group RNG states; `false` on any mismatch.
     pub fn set_rng_states(&mut self, states: &[Vec<u32>]) -> bool {
         states.len() == self.batches.len()
             && self
@@ -274,22 +379,29 @@ impl BatchedPtEnsemble {
     }
 
     /// Mutable access for the coordinator's parallel sweep phase:
-    /// `(per-batch betas, batches, per-replica stats, width)`.  Stats are
-    /// ladder-ordered, so batch `b`'s active lanes map onto
-    /// `stats[b*w..]` — `stats.chunks_mut(w)` aligns with `batches`.
+    /// `(per-group betas, batches, per-replica stats, per-group active
+    /// replica counts)`.  Stats are ladder-ordered, so splitting the
+    /// stats slice by the active counts aligns it with `batches`.
     #[allow(clippy::type_complexity)]
     pub(crate) fn split_mut(
         &mut self,
-    ) -> (&[Vec<f32>], &mut [Box<dyn BatchSweeper + Send>], &mut [SweepStats], usize) {
-        (&self.lane_betas, &mut self.batches, &mut self.stats, self.width)
+    ) -> (&[Vec<f32>], &mut [Box<dyn BatchSweeper + Send>], &mut [SweepStats], Vec<usize>) {
+        let actives: Vec<usize> = self.groups.iter().map(|g| g.replicas).collect();
+        (&self.lane_betas, &mut self.batches, &mut self.stats, actives)
     }
 }
 
-/// [`ReplicaSet`] view mapping global replica indices onto (batch, lane).
+/// `(group, lane)` of global replica `i` given per-group start offsets.
+fn locate(offsets: &[usize], i: usize) -> (usize, usize) {
+    let g = offsets.partition_point(|&o| o <= i) - 1;
+    (g, i - offsets[g])
+}
+
+/// [`ReplicaSet`] view mapping global replica indices onto (group, lane).
 struct BatchedReplicas<'a> {
     ladder: &'a Ladder,
     batches: &'a mut [Box<dyn BatchSweeper + Send>],
-    width: usize,
+    offsets: &'a [usize],
 }
 
 impl ReplicaSet for BatchedReplicas<'_> {
@@ -302,29 +414,39 @@ impl ReplicaSet for BatchedReplicas<'_> {
     }
 
     fn energy_of(&mut self, i: usize) -> f64 {
-        self.batches[i / self.width].energy_of(i % self.width)
+        let (g, lane) = locate(self.offsets, i);
+        self.batches[g].energy_of(lane)
     }
 
     fn state_of(&mut self, i: usize) -> Vec<f32> {
-        self.batches[i / self.width].state_of(i % self.width)
+        let (g, lane) = locate(self.offsets, i);
+        self.batches[g].state_of(lane)
     }
 
     fn set_state_of(&mut self, i: usize, s: &[f32]) {
-        self.batches[i / self.width].set_state_of(i % self.width, s);
+        let (g, lane) = locate(self.offsets, i);
+        self.batches[g].set_state_of(lane, s);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{BackendPref, Resolved, Rung};
     use crate::ising::builder::torus_workload;
+    use crate::sweep::SweepKind;
 
-    fn build(n: usize, kind: SweepKind) -> BatchedPtEnsemble {
-        let ladder = Ladder::geometric(2.0, 0.2, n);
+    fn workload_parts(n: usize) -> (Vec<QmcModel>, Vec<Vec<f32>>, Vec<u32>) {
         let wl = torus_workload(4, 4, 8, 7, 0.3);
         let models = vec![wl.model.clone(); n];
         let states = vec![wl.s0.clone(); n];
         let seeds: Vec<u32> = (0..n as u32).map(|i| 100 + i).collect();
+        (models, states, seeds)
+    }
+
+    fn build(n: usize, kind: SweepKind) -> BatchedPtEnsemble {
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let (models, states, seeds) = workload_parts(n);
         BatchedPtEnsemble::new(ladder, kind, &models, &states, &seeds, 999, ExpMode::Fast)
             .unwrap()
     }
@@ -384,10 +506,7 @@ mod tests {
     #[test]
     fn rejects_non_batch_kinds_and_bad_arity() {
         let ladder = Ladder::geometric(2.0, 0.2, 4);
-        let wl = torus_workload(4, 4, 8, 7, 0.3);
-        let models = vec![wl.model.clone(); 4];
-        let states = vec![wl.s0.clone(); 4];
-        let seeds = vec![1u32, 2, 3, 4];
+        let (models, states, seeds) = workload_parts(4);
         assert!(BatchedPtEnsemble::new(
             ladder.clone(),
             SweepKind::A4Full,
@@ -402,6 +521,142 @@ mod tests {
             ladder,
             SweepKind::C1ReplicaBatch,
             &models[..3],
+            &states,
+            &seeds,
+            1,
+            ExpMode::Fast
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn spec_widths_beyond_the_legacy_enum_build() {
+        // The unlock of Checkpoint schema v2: a portable C.1w16 batch runs
+        // through the coordinator surface the legacy enum could not spell.
+        let n = 5;
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let (models, states, seeds) = workload_parts(n);
+        let spec = SamplerSpec::rung(Rung::C1).w(16).on(BackendPref::Portable);
+        let mut pt =
+            BatchedPtEnsemble::new(ladder, spec, &models, &states, &seeds, 999, ExpMode::Fast)
+                .unwrap();
+        assert_eq!(pt.n_batches(), 1);
+        assert_eq!(pt.plans().len(), 1);
+        assert_eq!(pt.plans()[0].resolved.width, 16);
+        assert_eq!(pt.plans()[0].replicas, 5);
+        assert_eq!(pt.label(), "C.1w16");
+        pt.round(5);
+        assert!(pt.validate() < 1e-3);
+        assert_eq!(pt.reports().len(), 5);
+    }
+
+    #[test]
+    fn heterogeneous_groups_match_homogeneous_trajectories() {
+        // 10 replicas as [w8 x 8, w4 x 2] must reproduce, replica for
+        // replica, the homogeneous w4 layout bit-exactly: grouping is a
+        // performance choice, never a statistical one.
+        let n = 10;
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let (models, states, seeds) = workload_parts(n);
+        let spec = SamplerSpec::rung(Rung::C1).on(BackendPref::Portable);
+        let r = |w| Resolved {
+            rung: Rung::C1,
+            backend: crate::engine::Backend::Portable,
+            width: w,
+        };
+        let groups = [GroupPlan::new(r(8), 8), GroupPlan::new(r(4), 2)];
+        let mut het = BatchedPtEnsemble::with_groups(
+            ladder.clone(),
+            spec,
+            &groups,
+            &models,
+            &states,
+            &seeds,
+            999,
+            ExpMode::Fast,
+        )
+        .unwrap();
+        let mut homo = BatchedPtEnsemble::new(
+            ladder,
+            SamplerSpec::rung(Rung::C1).w(4).on(BackendPref::Portable),
+            &models,
+            &states,
+            &seeds,
+            999,
+            ExpMode::Fast,
+        )
+        .unwrap();
+        assert_eq!(het.n_batches(), 2);
+        assert_eq!(het.label(), "C.1w8+C.1");
+        for _ in 0..3 {
+            het.round(5);
+            homo.round(5);
+        }
+        for i in 0..n {
+            assert_eq!(het.state_of(i), homo.state_of(i), "replica {i} diverged");
+        }
+        let a = het.reports();
+        let b = homo.reports();
+        for i in 0..n {
+            assert_eq!(a[i].energy.to_bits(), b[i].energy.to_bits(), "replica {i} energy");
+            assert_eq!(a[i].stats.flips, b[i].stats.flips, "replica {i} flips");
+        }
+    }
+
+    #[test]
+    fn auto_width_partitions_with_a_narrower_tail() {
+        // plan_groups under width auto: full groups at the widest
+        // negotiated width, tail at the narrowest fitting width.
+        let spec = SamplerSpec::rung(Rung::C1).on(BackendPref::Portable);
+        // Portable pref negotiates width 4 — 10 replicas: 2 full + tail 2.
+        let groups = plan_groups(spec, 10, 8, ExpMode::Fast).unwrap();
+        let total: usize = groups.iter().map(|g| g.replicas).sum();
+        assert_eq!(total, 10);
+        assert!(groups.iter().all(|g| g.replicas <= g.resolved.width));
+        // A pinned width keeps the homogeneous padded layout.
+        let pinned = plan_groups(
+            SamplerSpec::rung(Rung::C1).w(8).on(BackendPref::Portable),
+            10,
+            8,
+            ExpMode::Fast,
+        )
+        .unwrap();
+        assert_eq!(pinned.len(), 2);
+        assert!(pinned.iter().all(|g| g.resolved.width == 8));
+        assert_eq!(pinned[1].replicas, 2);
+    }
+
+    #[test]
+    fn group_layout_validation_rejects_bad_covers() {
+        let n = 6;
+        let ladder = Ladder::geometric(2.0, 0.2, n);
+        let (models, states, seeds) = workload_parts(n);
+        let spec = SamplerSpec::rung(Rung::C1).on(BackendPref::Portable);
+        let r = |w| Resolved {
+            rung: Rung::C1,
+            backend: crate::engine::Backend::Portable,
+            width: w,
+        };
+        // Covers 5 of 6 replicas.
+        let short = [GroupPlan::new(r(4), 4), GroupPlan::new(r(4), 1)];
+        assert!(BatchedPtEnsemble::with_groups(
+            ladder.clone(),
+            spec,
+            &short,
+            &models,
+            &states,
+            &seeds,
+            1,
+            ExpMode::Fast
+        )
+        .is_err());
+        // 5 active replicas in a width-4 group.
+        let overfull = [GroupPlan::new(r(4), 5), GroupPlan::new(r(4), 1)];
+        assert!(BatchedPtEnsemble::with_groups(
+            ladder,
+            spec,
+            &overfull,
+            &models,
             &states,
             &seeds,
             1,

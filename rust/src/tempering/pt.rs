@@ -220,6 +220,12 @@ impl<S: Sweeper + ?Sized> PtEnsembleImpl<S> {
         self.replicas[i].kind()
     }
 
+    /// True lane width of replica `i` (covers widths the legacy kind tag
+    /// cannot spell — checkpoint schema-v2 compatibility checks).
+    pub fn width_of(&self, i: usize) -> usize {
+        self.replicas[i].width()
+    }
+
     /// Replica `i`'s serialized RNG state (None when the rung cannot
     /// serialize its generator).
     pub fn rng_state_of(&self, i: usize) -> Option<Vec<u32>> {

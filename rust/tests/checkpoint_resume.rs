@@ -1,11 +1,16 @@
 //! Checkpoint round-trip: save → (serialize → disk → load) → resume must
 //! continue the *identical* trajectory an uninterrupted run produces —
 //! the property that makes checkpointing transparent to a long tempering
-//! run.  Verified for a scalar rung (A.2) and a replica-batch C-rung,
-//! through the full JSON + file path, including the exchange RNG and the
-//! even/odd round parity.
+//! run.  Verified for a scalar rung (A.2) and replica-batch C-rungs at
+//! W ∈ {4, 8, 16} (the portable w16 plan has no legacy spelling — it
+//! only exists through the spec-carrying schema v2), through the full
+//! JSON + file path, including the exchange RNG and the even/odd round
+//! parity.  Schema-v1 migration fixtures (hand-written v1 JSON, and a
+//! stripped-to-v1 capture with full RNG payloads) pin the
+//! `kind`-label → `SweepKind` → spec lowering path.
 
-use vectorising::coordinator::{self, Checkpoint, RunConfig};
+use vectorising::coordinator::{self, Checkpoint, RunConfig, RunOptions, RunSpec};
+use vectorising::engine::{BackendPref, Rung, SamplerSpec};
 use vectorising::sweep::SweepKind;
 
 fn cfg() -> RunConfig {
@@ -98,6 +103,194 @@ fn c_rung_resume_is_bit_exact() {
     let b = resumed.reports();
     for i in 0..cfg.n_models {
         assert_eq!(a[i].energy.to_bits(), b[i].energy.to_bits(), "replica {i}: energy");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn portable_c1w16_resume_is_bit_exact() {
+    // The schema-v2 unlock: a plan the legacy enum cannot spell
+    // (portable 16-lane replica batch) saves and resumes bit-exactly.
+    let cfg = cfg(); // 5 replicas at W=16 -> 1 padded group
+    let spec = SamplerSpec::rung(Rung::C1).w(16).on(BackendPref::Portable);
+
+    let mut reference = coordinator::build_batched_ensemble(&cfg, spec).unwrap();
+    for _ in 0..3 {
+        reference.round(cfg.sweeps_per_round);
+    }
+    let ck = Checkpoint::capture_batched(3, 30, &cfg, &mut reference);
+    for _ in 0..3 {
+        reference.round(cfg.sweeps_per_round);
+    }
+
+    let dir = std::env::temp_dir().join("vectorising_resume_test_w16");
+    let path = dir.join("run.ckpt.json");
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.kind, "C.1w16");
+    assert_eq!(loaded.plans.len(), 1, "one resolved plan per group");
+    assert_eq!(loaded.plans[0].resolved.width, 16);
+    assert_eq!(loaded.plans[0].replicas, 5);
+    assert_eq!(loaded.sampler.unwrap(), spec, "the requested spec rides in the checkpoint");
+    assert_eq!(loaded.rngs.len(), 1, "RNG payload per lane-group");
+
+    let mut resumed = coordinator::build_batched_ensemble(&cfg, spec).unwrap();
+    loaded.restore_batched(&mut resumed).unwrap();
+    for _ in 0..3 {
+        resumed.round(cfg.sweeps_per_round);
+    }
+
+    for i in 0..cfg.n_models {
+        assert_eq!(
+            reference.state_of(i),
+            resumed.state_of(i),
+            "replica {i}: resumed trajectory diverged"
+        );
+    }
+    let a = reference.reports();
+    let b = resumed.reports();
+    for i in 0..cfg.n_models {
+        assert_eq!(a[i].energy.to_bits(), b[i].energy.to_bits(), "replica {i}: energy");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v1_checkpoint_with_rng_payload_migrates_and_resumes_bit_exactly() {
+    // A faithful v1 file: capture under a legacy kind, then strip every
+    // schema-v2 field — exactly what a v1 writer produced.  It must load
+    // (schema defaults to 1), lower its kind label onto the spec via
+    // From<SweepKind>, and resume the identical trajectory.
+    let cfg = cfg();
+    let kind = SweepKind::C1ReplicaBatch;
+    let mut reference = coordinator::build_batched_ensemble(&cfg, kind).unwrap();
+    for _ in 0..3 {
+        reference.round(cfg.sweeps_per_round);
+    }
+    let ck = Checkpoint::capture_batched(3, 30, &cfg, &mut reference);
+    for _ in 0..3 {
+        reference.round(cfg.sweeps_per_round);
+    }
+    let v = vectorising::util::json::Value::parse(&ck.to_json()).unwrap();
+    let mut m = match v {
+        vectorising::util::json::Value::Obj(m) => m,
+        _ => unreachable!(),
+    };
+    m.remove("schema");
+    m.remove("sampler");
+    m.remove("plans");
+    let v1_text = vectorising::util::json::Value::Obj(m).to_string();
+
+    let loaded = Checkpoint::from_json(&v1_text).unwrap();
+    assert_eq!(loaded.schema, 1);
+    assert!(loaded.sampler.is_none() && loaded.plans.is_empty());
+    // The migration path: kind label -> SweepKind -> spec.
+    let rs = loaded.run_spec().unwrap();
+    assert_eq!(rs.sampler.rung, Rung::C1);
+
+    // Resume through the spec-driven coordinator entry point.
+    let resumed_report = coordinator::run_spec_with(
+        &rs,
+        &RunOptions { resume: Some(loaded), ..RunOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(resumed_report.sweeps, 30, "rounds 4..6 ran");
+    let ref_reports = reference.reports();
+    for i in 0..cfg.n_models {
+        assert_eq!(
+            ref_reports[i].energy.to_bits(),
+            resumed_report.energies[i].to_bits(),
+            "replica {i}: v1-migrated resume diverged"
+        );
+    }
+}
+
+#[test]
+fn hand_written_v1_fixture_loads_and_resumes() {
+    // A v1 checkpoint as the earliest writers produced it: a bare kind
+    // label, no schema/sampler/plans, states only (no RNG payloads).
+    let fixture = r#"{
+        "kind": "C.1",
+        "epoch": 1,
+        "sweeps_done": 10,
+        "config": {"width": 4, "height": 4, "layers": 2, "n_models": 2,
+                   "sweeps": 20, "sweeps_per_round": 10, "threads": 1,
+                   "beta_cold": 3.0, "beta_hot": 0.5, "jtau": 0.3, "seed": 1},
+        "states": ["01010101010101010101010101010101",
+                   "10101010101010101010101010101010"]
+    }"#;
+    let ck = Checkpoint::from_json(fixture).unwrap();
+    assert_eq!(ck.schema, 1);
+    assert_eq!(ck.kind, "C.1");
+    let rs = ck.run_spec().unwrap();
+    assert_eq!(rs.sampler.rung, Rung::C1);
+    assert_eq!(rs.config.n_models, 2);
+    // States restore into a spec-built ensemble and the run completes.
+    let report = coordinator::run_spec_with(
+        &rs,
+        &RunOptions { resume: Some(ck), ..RunOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(report.sweeps, 10, "one round remained");
+    assert_eq!(report.n_models, 2);
+    assert!(report.total_attempts > 0);
+}
+
+#[test]
+fn heterogeneous_ladder_checkpoints_and_echoes_both_plans() {
+    // 10 replicas under `--rung c1 --width auto`: on an 8-wide host the
+    // partitioner schedules a w8 group + a w4 tail group; everywhere it
+    // must cover all replicas and round-trip through a checkpoint.
+    let dir = std::env::temp_dir().join("vectorising_resume_test_hetero");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = RunConfig { n_models: 10, sweeps: 40, sweeps_per_round: 10, ..RunConfig::default() };
+    let rs = RunSpec::new(cfg.clone(), SamplerSpec::rung(Rung::C1));
+    let ck_path = dir.join("full.ck.json");
+    let full = coordinator::run_spec_with(
+        &rs,
+        &RunOptions {
+            checkpoint: Some(ck_path.clone()),
+            checkpoint_every: 2,
+            resume: None,
+        },
+    )
+    .unwrap();
+    let covered: usize = full.plans.iter().map(|p| p.replicas).sum();
+    assert_eq!(covered, 10, "the plans echo covers every replica: {:?}", full.plans);
+    if vectorising::simd::widest_supported_width() == 8 {
+        let widths: Vec<usize> = full.plans.iter().map(|p| p.resolved.width).collect();
+        assert!(
+            widths.contains(&8) && widths.contains(&4),
+            "8-wide host should schedule a w8 group + w4 tail: {widths:?}"
+        );
+        assert!(full.kind.contains('+'), "heterogeneous label: {}", full.kind);
+    }
+
+    // Save at round 2 (via a half-length run), resume spec-driven from
+    // the file, and diff energies bit-exactly against the full run.
+    let half = RunSpec::new(RunConfig { sweeps: 20, ..cfg.clone() }, rs.sampler);
+    let half_path = dir.join("half.ck.json");
+    coordinator::run_spec_with(
+        &half,
+        &RunOptions {
+            checkpoint: Some(half_path.clone()),
+            checkpoint_every: 2,
+            resume: None,
+        },
+    )
+    .unwrap();
+    let resumed = coordinator::resume_run(
+        &half_path,
+        |mut r| {
+            r.config.sweeps = 40;
+            r
+        },
+        &RunOptions { checkpoint: Some(ck_path), checkpoint_every: 2, resume: None },
+    )
+    .unwrap();
+    assert_eq!(resumed.plans, full.plans, "resume rebuilds the same group layout");
+    for (i, (a, b)) in full.energies.iter().zip(&resumed.energies).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "replica {i}: heterogeneous resume diverged");
     }
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -12,8 +12,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::thread;
 
+use vectorising::coordinator::{self, Checkpoint, RunConfig, RunOptions, RunReport, RunSpec};
+use vectorising::engine::{Rung, SamplerSpec};
 use vectorising::service::executor::Executor;
-use vectorising::service::job::{JobResult, JobSpec};
+use vectorising::service::job::{JobResult, JobSpec, RunJob};
 use vectorising::service::{server, ServiceConfig};
 use vectorising::simd::widest_supported_width;
 use vectorising::sweep::ExpMode;
@@ -202,6 +204,92 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
     }
 
     // Shutdown stops the server; serve_tcp returns cleanly.
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
+
+/// The Run API over the wire: an `{"op":"run"}` job executes a whole
+/// spec-driven tempering run server-side, returns its RunReport (plans
+/// echo included) plus an inline schema-v2 checkpoint, and a second run
+/// job resuming from that checkpoint continues **bit-exactly** what the
+/// coordinator produces locally for the same two segments.
+#[test]
+fn run_op_executes_checkpointable_runs_over_the_wire() {
+    let cfg = ServiceConfig { lanes: 4, threads: 1, flush_ms: 50, ..ServiceConfig::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+
+    let run_cfg =
+        RunConfig { n_models: 5, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() };
+    let rs = RunSpec::new(run_cfg.clone(), SamplerSpec::rung(Rung::C1));
+
+    // Segment 1: 20 sweeps, final checkpoint returned inline.
+    let job1 = RunJob { id: "seg1".into(), spec: rs.clone(), checkpoint: None, want_checkpoint: true };
+    let served = roundtrip(addr, &[job1.to_line()]);
+    assert_eq!(served.len(), 1, "{served:?}");
+    let v = Value::parse(&served[0]).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok", "{served:?}");
+    assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+    let report1 = RunReport::from_value(v.get("run_report").unwrap()).unwrap();
+    let covered: usize = report1.plans.iter().map(|p| p.replicas).sum();
+    assert_eq!(covered, 5, "run results echo the resolved per-group plans");
+    let ck = Checkpoint::from_value(v.get("checkpoint").unwrap()).unwrap();
+    assert_eq!(ck.sweeps_done, 20);
+    assert!(ck.sampler.is_some() && !ck.plans.is_empty(), "schema-v2 checkpoint");
+
+    // Segment 2: resume from the inline checkpoint, extend to 40 sweeps.
+    let mut rs2 = rs.clone();
+    rs2.config.sweeps = 40;
+    let job2 =
+        RunJob { id: "seg2".into(), spec: rs2.clone(), checkpoint: Some(ck), want_checkpoint: false };
+    let served2 = roundtrip(addr, &[job2.to_line()]);
+    assert_eq!(served2.len(), 1, "{served2:?}");
+    let v2 = Value::parse(&served2[0]).unwrap();
+    assert_eq!(v2.get("status").unwrap().as_str().unwrap(), "ok", "{served2:?}");
+    let report2 = RunReport::from_value(v2.get("run_report").unwrap()).unwrap();
+    assert_eq!(report2.sweeps, 20, "the resumed segment ran rounds 3..4");
+
+    // Local oracle: the identical two segments through the coordinator.
+    let (local1, local_ck) = coordinator::run_spec_capturing(&rs, &RunOptions::default()).unwrap();
+    for (a, b) in local1.energies.iter().zip(&report1.energies) {
+        assert_eq!(a.to_bits(), b.to_bits(), "segment-1 energies must match the coordinator");
+    }
+    let local2 = coordinator::run_spec_with(
+        &rs2,
+        &RunOptions { resume: Some(local_ck), ..RunOptions::default() },
+    )
+    .unwrap();
+    for (i, (a, b)) in local2.energies.iter().zip(&report2.energies).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "replica {i}: served resume diverged");
+    }
+
+    // Admission caps apply to run jobs too: an over-heavy run is refused
+    // with an error line, not executed.
+    let heavy = RunJob {
+        id: "heavy".into(),
+        spec: RunSpec::new(
+            RunConfig {
+                width: 32,
+                height: 32,
+                layers: 64,
+                n_models: 40,
+                sweeps: 100_000,
+                sweeps_per_round: 100,
+                ..RunConfig::default()
+            },
+            SamplerSpec::rung(Rung::C1),
+        ),
+        checkpoint: None,
+        want_checkpoint: false,
+    };
+    let refused = roundtrip(addr, &[heavy.to_line()]);
+    assert_eq!(refused.len(), 1);
+    let rv = Value::parse(&refused[0]).unwrap();
+    assert_eq!(rv.get("status").unwrap().as_str().unwrap(), "error");
+    assert!(rv.get("error").unwrap().as_str().unwrap().contains("too heavy"), "{refused:?}");
+
     let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
     assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
     server_thread.join().unwrap();
