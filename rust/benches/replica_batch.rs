@@ -14,14 +14,64 @@
 //!   ISSUE-2 acceptance scenario: C.1w8 must beat per-replica A.2 by
 //!   >= 2x replicas/sec.
 
+//! Set `REPRO_BENCH_DIR` to also emit one machine-readable
+//! `BENCH_<rung>.json` artifact per paper-scale row (see
+//! `harness::bench`).
+
 mod support;
 
+use vectorising::coordinator::RunConfig;
+use vectorising::engine::Rung;
+use vectorising::harness::bench::{self, BenchArtifact, HostCaps, BENCH_SCHEMA_VERSION};
 use vectorising::ising::builder::torus_workload;
 use vectorising::simd::{avx2_available, widest_supported_width};
 use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 use vectorising::tempering::{BatchedPtEnsemble, Ladder};
 
 const N_REPLICAS: usize = 115;
+
+/// Emit the machine-readable artifact for one paper-scale row when
+/// REPRO_BENCH_DIR is set.
+fn emit(kind: SweepKind, sc: &Scenario, secs: &[f64], n_spins: usize) {
+    let Ok(dir) = std::env::var("REPRO_BENCH_DIR") else { return };
+    if sc.layers != 256 {
+        return; // only the paper-scale scenario is a canonical artifact
+    }
+    let rung = match kind {
+        SweepKind::A2Basic => Rung::A2,
+        SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => Rung::C1,
+        _ => Rung::A4,
+    };
+    let cfg = RunConfig {
+        width: 12,
+        height: 8,
+        layers: sc.layers,
+        n_models: N_REPLICAS,
+        ..RunConfig::default()
+    };
+    let updates = (N_REPLICAS * sc.sweeps * n_spins) as f64;
+    let art = BenchArtifact {
+        schema: BENCH_SCHEMA_VERSION,
+        rung: kind.label().to_string(),
+        threads: 1,
+        sweeps: sc.sweeps,
+        seconds: support::mean(secs),
+        spins_per_sec: updates / support::mean(secs),
+        lane_width: kind.group_width(),
+        lane_fill: bench::lane_fill(rung, kind.group_width(), &cfg),
+        torus_width: 12,
+        torus_height: 8,
+        layers: sc.layers,
+        n_models: N_REPLICAS,
+        host: HostCaps::detect(),
+        git_sha: bench::git_sha(),
+        provenance: "measured".into(),
+    };
+    match art.write_to(std::path::Path::new(&dir)) {
+        Ok(path) => println!("  -> wrote {}", path.display()),
+        Err(e) => eprintln!("  -> artifact write failed: {e:#}"),
+    }
+}
 
 struct Scenario {
     name: &'static str,
@@ -117,6 +167,7 @@ fn main() {
                         replica_sweeps,
                         "replica-sweeps",
                     );
+                    emit(kind, sc, &secs, 96 * sc.layers);
                     means.push((kind.label(), support::mean(&secs)));
                 }
                 None => println!(

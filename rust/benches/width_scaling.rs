@@ -1,32 +1,90 @@
-//! Width scaling: the A.3/A.4 rungs at lane widths 4 (SSE2) and 8 (AVX2
-//! when the host has it, portable lanes otherwise) on a paper-scale
-//! workload — the vector-width axis the ISSUE-1 refactor opens.
+//! Width scaling: the A.3/A.4 rungs at lane widths 4 (SSE2), 8 (AVX2
+//! when the host has it, portable lanes otherwise) and 16 (AVX-512,
+//! skipped gracefully without `avx512f`) on a paper-scale workload,
+//! plus the M.1 multi-spin rung (64 bit-lanes across the layers on the
+//! ±1-coupling analogue of the same geometry).
 //!
 //! Reports spin-updates/sec per (rung, width) and the W=8-over-W=4
 //! speedup.  On AVX2 hosts the W=8 rows should be at least as fast as
 //! W=4 (wider registers, same instruction count per group); without AVX2
 //! the portable fallback documents the cost of not having the backend.
+//!
+//! Set `REPRO_BENCH_DIR` to also emit one machine-readable
+//! `BENCH_<rung>.json` artifact per row (see `harness::bench`).
 
 mod support;
 
-use vectorising::ising::builder::torus_workload;
-use vectorising::simd::{avx2_available, widest_supported_width};
+use vectorising::coordinator::RunConfig;
+use vectorising::engine::{EngineBuilder, Rung};
+use vectorising::harness::bench::{self, BenchArtifact, HostCaps, BENCH_SCHEMA_VERSION};
+use vectorising::ising::builder::{pm_torus_workload, torus_workload};
+use vectorising::simd::{avx2_available, avx512_available, widest_supported_width};
 use vectorising::sweep::{try_make_sweeper, SweepKind, Sweeper};
 
 const SWEEPS: usize = 40;
 const REPS: usize = 8;
+const GEOM: (usize, usize, usize) = (12, 8, 256);
 
-fn time_kind(kind: SweepKind, beta: f32) -> (Vec<f64>, f64) {
-    // Paper geometry per model: 96 base spins x 256 layers = 24,576 spins
-    // (256 is divisible by both widths with >= 2 layers per section).
-    let wl = torus_workload(12, 8, 256, 1, 0.3);
-    let updates = (SWEEPS * wl.model.n_spins()) as f64;
-    let mut sw = try_make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+fn time_sweeper(mut sw: Box<dyn Sweeper + Send>, n_spins: usize, beta: f32) -> (Vec<f64>, f64) {
+    let updates = (SWEEPS * n_spins) as f64;
     sw.run(10, beta); // reach a representative flip regime
     let secs = support::time_reps(1, REPS, || {
         sw.run(SWEEPS, beta);
     });
     (secs, updates)
+}
+
+fn time_kind(kind: SweepKind, beta: f32) -> (Vec<f64>, f64) {
+    // Paper geometry per model: 96 base spins x 256 layers = 24,576 spins
+    // (256 is divisible by both widths with >= 2 layers per section).
+    let (w, h, l) = GEOM;
+    let wl = torus_workload(w, h, l, 1, 0.3);
+    let sw = try_make_sweeper(kind, &wl.model, &wl.s0, 5489).expect("cpu sweeper");
+    time_sweeper(sw, wl.model.n_spins(), beta)
+}
+
+/// Engine-negotiated rows the legacy kind enum cannot spell (W=16, M.1).
+fn time_spec(rung: Rung, width: usize, beta: f32) -> (Vec<f64>, f64) {
+    let (w, h, l) = GEOM;
+    let wl = if rung.is_multispin() {
+        pm_torus_workload(w, h, l, 1, 0.5)
+    } else {
+        torus_workload(w, h, l, 1, 0.3)
+    };
+    let sw = EngineBuilder::new(rung.spec().w(width))
+        .build(&wl.model, &wl.s0, 5489)
+        .expect("engine sweeper")
+        .into_sweeper();
+    time_sweeper(sw, wl.model.n_spins(), beta)
+}
+
+/// Emit the machine-readable artifact for one row when REPRO_BENCH_DIR
+/// is set (the bench-side producer of the BENCH_<rung>.json trajectory).
+fn emit(label: &str, rung: Rung, lane_width: usize, secs: &[f64], updates: f64) {
+    let Ok(dir) = std::env::var("REPRO_BENCH_DIR") else { return };
+    let (w, h, l) = GEOM;
+    let cfg = RunConfig { width: w, height: h, layers: l, n_models: 1, ..RunConfig::default() };
+    let art = BenchArtifact {
+        schema: BENCH_SCHEMA_VERSION,
+        rung: label.to_string(),
+        threads: 1,
+        sweeps: SWEEPS,
+        seconds: support::mean(secs),
+        spins_per_sec: updates / support::mean(secs),
+        lane_width,
+        lane_fill: bench::lane_fill(rung, lane_width, &cfg),
+        torus_width: w,
+        torus_height: h,
+        layers: l,
+        n_models: 1,
+        host: HostCaps::detect(),
+        git_sha: bench::git_sha(),
+        provenance: "measured".into(),
+    };
+    match art.write_to(std::path::Path::new(&dir)) {
+        Ok(path) => println!("  -> wrote {}", path.display()),
+        Err(e) => eprintln!("  -> artifact write failed: {e:#}"),
+    }
 }
 
 fn main() {
@@ -35,8 +93,9 @@ fn main() {
         "width scaling, 96x256 paper-scale model (24,576 spins), {SWEEPS} sweeps/run, {REPS} runs"
     );
     println!(
-        "host: avx2={}  widest backend width={}\n",
+        "host: avx2={}  avx512={}  widest backend width={}\n",
         avx2_available(),
+        avx512_available(),
         widest_supported_width()
     );
 
@@ -55,8 +114,34 @@ fn main() {
             updates,
             "Mupd",
         );
-        means.insert(kind.label(), support::mean(&secs));
+        let rung = if matches!(kind, SweepKind::A3VecRng | SweepKind::A3VecRngW8) {
+            Rung::A3
+        } else {
+            Rung::A4
+        };
+        emit(kind.label(), rung, kind.group_width(), &secs, updates);
+        means.insert(kind.label().to_string(), support::mean(&secs));
     }
+
+    // W=16: AVX-512 rows when the host + toolchain provide them.
+    if avx512_available() {
+        for (rung, label) in [(Rung::A3, "A.3w16"), (Rung::A4, "A.4w16")] {
+            let (secs, updates) = time_spec(rung, 16, beta);
+            let ns = support::mean(&secs) / updates * 1e9;
+            support::report(&format!("{label} w=16 ({ns:.2} ns/update)"), &secs, updates, "Mupd");
+            emit(label, rung, 16, &secs, updates);
+            means.insert(label.to_string(), support::mean(&secs));
+        }
+    } else {
+        println!("{:38} (skipped: no avx512f on this host)", "A.3w16 / A.4w16");
+    }
+
+    // M.1: 64 bit-lanes across the layers, ±1 couplings, bin thresholds.
+    let (secs, updates) = time_spec(Rung::M1, 64, beta);
+    let ns = support::mean(&secs) / updates * 1e9;
+    support::report(&format!("M.1 w=64 ({ns:.2} ns/update)"), &secs, updates, "Mupd");
+    emit("M.1", Rung::M1, 64, &secs, updates);
+    means.insert("M.1".to_string(), support::mean(&secs));
 
     let speedup = |w4: &str, w8: &str| means[w4] / means[w8];
     println!(
@@ -65,4 +150,5 @@ fn main() {
         speedup("A.4", "A.4w8"),
         if avx2_available() { "" } else { "   (portable fallback — no AVX2 on this host)" }
     );
+    println!("M.1 over A.4w8: {:.2}x spins/sec", speedup("A.4w8", "M.1"));
 }

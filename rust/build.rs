@@ -1,0 +1,42 @@
+//! Build-time feature probe: AVX-512 intrinsics (`core::arch::x86_64`
+//! `_mm512_*`) stabilized in Rust 1.89, and this crate still builds on
+//! older stable toolchains.  Probe `rustc --version` and emit the
+//! `has_avx512_intrinsics` cfg only when the compiler has them; the
+//! `simd::avx512` module and everything that names it is gated on that
+//! cfg, so older toolchains silently fall back to the portable W=16
+//! lanes the engine already negotiates.
+
+use std::env;
+use std::process::Command;
+
+fn main() {
+    // Declare the custom cfg so `-D warnings` clippy/check builds accept it.
+    println!("cargo:rustc-check-cfg=cfg(has_avx512_intrinsics)");
+    if rustc_supports_avx512() {
+        println!("cargo:rustc-cfg=has_avx512_intrinsics");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+}
+
+/// AVX-512 intrinsics are stable since 1.89.0 (2025-08-07).  Nightly and
+/// beta builds of at least that version also qualify.
+fn rustc_supports_avx512() -> bool {
+    let rustc = env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = match Command::new(&rustc).arg("--version").output() {
+        Ok(out) if out.status.success() => out,
+        _ => return false,
+    };
+    let text = String::from_utf8_lossy(&out.stdout);
+    parse_version(&text).map(|(major, minor)| (major, minor) >= (1, 89)).unwrap_or(false)
+}
+
+/// Parse "rustc 1.89.0 (…)" / "rustc 1.91.0-nightly (…)" into (1, 89).
+fn parse_version(text: &str) -> Option<(u32, u32)> {
+    let ver = text.split_whitespace().nth(1)?;
+    let ver = ver.split('-').next()?;
+    let mut parts = ver.split('.');
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}

@@ -105,13 +105,21 @@ impl RunConfig {
 
     /// [`Self::validate_for`] on the orthogonal spec surface.
     pub fn validate_for_spec(&self, spec: &crate::engine::SamplerSpec) -> crate::Result<()> {
-        if !spec.rung.is_replica_batch() {
-            return self.validate();
+        if spec.rung.is_replica_batch() {
+            if self.layers < 2 {
+                anyhow::bail!("layers must be >= 2 (got {})", self.layers);
+            }
+            return self.validate_common();
         }
-        if self.layers < 2 {
-            anyhow::bail!("layers must be >= 2 (got {})", self.layers);
+        if spec.rung.is_multispin() {
+            // The m1 checkerboard phases need an even layer count; the
+            // A-ladder's multiple-of-4 interlacing rule does not apply.
+            if self.layers < 2 || self.layers % 2 != 0 {
+                anyhow::bail!("m1 needs an even layer count >= 2 (got {})", self.layers);
+            }
+            return self.validate_common();
         }
-        self.validate_common()
+        self.validate()
     }
 
     /// JSON form (the `config` object of run specs and checkpoints).

@@ -31,7 +31,7 @@ pub use scheduler::{PoolStats, SweepPool};
 use std::path::{Path, PathBuf};
 
 use crate::engine::{EngineBuilder, GroupPlan, SamplerSpec, Width};
-use crate::ising::builder::{torus_workload, Workload};
+use crate::ising::builder::{pm_torus_workload, torus_workload, Workload};
 use crate::sweep::{ExpMode, SweepStats, Sweeper};
 use crate::tempering::{BatchedPtEnsemble, Ladder, PtEnsemble};
 use crate::Result;
@@ -42,6 +42,19 @@ use crate::Result;
 pub fn build_workloads(cfg: &RunConfig) -> Vec<Workload> {
     (0..cfg.n_models)
         .map(|_| torus_workload(cfg.width, cfg.height, cfg.layers, cfg.seed, cfg.jtau))
+        .collect()
+}
+
+/// Sampler-aware [`build_workloads`]: the multi-spin rung needs the
+/// discrete ±J / zero-field workload (same torus, colouring and seed
+/// conventions — see [`pm_torus_workload`]); every other rung keeps the
+/// continuous-coupling builder.
+pub fn build_workloads_spec(cfg: &RunConfig, spec: &SamplerSpec) -> Vec<Workload> {
+    if !spec.rung.is_multispin() {
+        return build_workloads(cfg);
+    }
+    (0..cfg.n_models)
+        .map(|_| pm_torus_workload(cfg.width, cfg.height, cfg.layers, cfg.seed, cfg.jtau))
         .collect()
 }
 
@@ -60,7 +73,7 @@ pub fn build_ensemble(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<P
     cfg.validate_for_spec(&spec)?;
     let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
     let seeds = replica_seeds(cfg);
-    let replicas: Vec<Box<dyn Sweeper + Send>> = build_workloads(cfg)
+    let replicas: Vec<Box<dyn Sweeper + Send>> = build_workloads_spec(cfg, &spec)
         .iter()
         .zip(&seeds)
         .map(|(wl, &seed)| {
@@ -541,6 +554,65 @@ mod tests {
         assert_eq!(rep.plans[0].resolved.width, 16);
         assert_eq!(rep.plans[0].replicas, 4);
         assert_eq!(rep.total_attempts, rs.config.total_updates());
+    }
+
+    #[test]
+    fn run_spec_covers_the_multispin_rung() {
+        // The m1 rung swaps in the ±J workload transparently and runs
+        // through the per-replica ensemble end to end.
+        let rs = RunSpec::new(small(), crate::engine::SamplerSpec::rung(Rung::M1));
+        let rep = run_spec(&rs).unwrap();
+        assert_eq!(rep.kind, "M.1");
+        assert_eq!(rep.plans.len(), 1);
+        assert_eq!(rep.plans[0].resolved.width, 64);
+        assert_eq!(rep.total_attempts, rs.config.total_updates());
+        assert!(rep.total_flips > 0);
+        assert!(rep.flip_probs.last().unwrap() > rep.flip_probs.first().unwrap());
+        // Shallow even layer counts are open to m1 (the A-ladder's
+        // multiple-of-4 rule does not apply)...
+        let shallow = RunSpec::new(
+            RunConfig { layers: 6, ..small() },
+            crate::engine::SamplerSpec::rung(Rung::M1),
+        );
+        assert_eq!(run_spec(&shallow).unwrap().total_attempts, shallow.config.total_updates());
+        // ...but odd ones are not.
+        let odd = RunSpec::new(
+            RunConfig { layers: 9, ..small() },
+            crate::engine::SamplerSpec::rung(Rung::M1),
+        );
+        assert!(run_spec(&odd).is_err());
+    }
+
+    #[test]
+    fn m1_checkpoint_resumes_bit_exactly() {
+        let dir = std::env::temp_dir().join("vectorising_coordinator_m1_resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m1 = crate::engine::SamplerSpec::rung(Rung::M1);
+        let cfg = RunConfig { n_models: 3, sweeps: 40, sweeps_per_round: 10, ..small() };
+        let ref_report = run_spec(&RunSpec::new(cfg.clone(), m1)).unwrap();
+        // First half, checkpointed, then resumed for the second half.
+        let half_path = dir.join("half.ck.json");
+        let half = RunSpec::new(RunConfig { sweeps: 20, ..cfg }, m1);
+        run_spec_with(
+            &half,
+            &RunOptions { checkpoint: Some(half_path.clone()), checkpoint_every: 2, resume: None },
+        )
+        .unwrap();
+        let resumed = resume_run(
+            &half_path,
+            |mut rs| {
+                rs.config.sweeps = 40;
+                rs
+            },
+            &RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(resumed.sweeps, 20);
+        for (a, b) in ref_report.energies.iter().zip(&resumed.energies) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resumed energies must be bit-exact");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::ising::QmcModel;
 use crate::sweep::c1_replica_batch::{BatchSweeper, C1ReplicaBatch};
-use crate::sweep::{a1_original, a2_basic, a3_vecrng, a4_full, ExpMode, Sweeper};
+use crate::sweep::{a1_original, a2_basic, a3_vecrng, a4_full, m1_multispin, ExpMode, Sweeper};
 use crate::Result;
 
 use super::error::UnsupportedGeometry;
@@ -146,9 +146,11 @@ pub(crate) fn interlace_ok(layers: usize, w: usize) -> bool {
     layers % w == 0 && layers / w >= 2
 }
 
-/// Widths with a monomorphized vector backend (4 and 8 have intrinsic
-/// implementations; 16 is portable-only but compiled in, which is what
-/// makes `--width 16` work without any new enum variant).
+/// Widths with a monomorphized vector backend (4 and 8 have SSE2/AVX2
+/// intrinsic implementations; 16 runs on AVX-512F where the host and
+/// toolchain support it, portable lanes otherwise — either way it is
+/// compiled in, which is what makes `--width 16` work without any new
+/// enum variant).
 pub(crate) const MONO_WIDTHS: [usize; 3] = [4, 8, 16];
 
 /// Candidate lane widths for a vector rung, preference order.
@@ -156,16 +158,21 @@ fn candidate_widths(width: Width, pref: BackendPref) -> Vec<usize> {
     match width {
         Width::W(n) => vec![n],
         Width::Auto => match pref {
+            BackendPref::Avx512 => vec![16],
             BackendPref::Avx2 => vec![8],
             // Parity with the legacy dispatch: auto width under an
             // explicit SSE2/portable preference is the paper's 4 lanes.
             BackendPref::Sse2 | BackendPref::Portable => vec![4],
             _ => {
-                if crate::simd::widest_supported_width() == 8 {
-                    vec![8, 4]
-                } else {
-                    vec![4]
+                let mut widths = Vec::new();
+                if crate::simd::avx512_available() {
+                    widths.push(16);
                 }
+                if crate::simd::widest_supported_width() == 8 {
+                    widths.push(8);
+                }
+                widths.push(4);
+                widths
             }
         },
     }
@@ -195,6 +202,20 @@ fn resolve_backend(
                     Some(rej(
                         "no-avx2",
                         "host does not report AVX2; falling back to portable 8-lane code".into(),
+                    )),
+                ));
+            }
+            if on_x86 && w == 16 {
+                if crate::simd::avx512_available() {
+                    return Ok((Backend::Avx512, None));
+                }
+                return Ok((
+                    Backend::Portable,
+                    Some(rej(
+                        "no-avx512",
+                        "host/toolchain does not support AVX-512F; falling back to portable \
+                         16-lane code"
+                            .into(),
                     )),
                 ));
             }
@@ -231,6 +252,24 @@ fn resolve_backend(
                 Err(rej("no-avx2", "host does not report AVX2".into()))
             }
         }
+        BackendPref::Avx512 => {
+            if w != 16 {
+                return Err(rej(
+                    "backend-mismatch",
+                    format!("the avx512 backend is 16-lane (requested width {w})"),
+                ));
+            }
+            if crate::simd::avx512_available() {
+                Ok((Backend::Avx512, None))
+            } else {
+                Err(rej(
+                    "no-avx512",
+                    "host does not report AVX-512F (or the toolchain predates the stabilized \
+                     _mm512_ intrinsics, Rust 1.89)"
+                        .into(),
+                ))
+            }
+        }
         BackendPref::Portable => Ok((Backend::Portable, None)),
         BackendPref::Accel => Err(rej(
             "backend-mismatch",
@@ -242,8 +281,13 @@ fn resolve_backend(
 /// Alternatives for a geometry rejection, best first.
 fn geometry_alternatives(layers: usize) -> Vec<SamplerSpec> {
     let mut alts = Vec::new();
-    for w in [8usize, 4] {
-        if interlace_ok(layers, w) && (w == 4 || crate::simd::widest_supported_width() >= 8) {
+    for w in [16usize, 8, 4] {
+        let host_ok = match w {
+            16 => crate::simd::avx512_available(),
+            8 => crate::simd::widest_supported_width() >= 8,
+            _ => true,
+        };
+        if host_ok && interlace_ok(layers, w) {
             alts.push(SamplerSpec::rung(Rung::A4).w(w));
         }
     }
@@ -410,6 +454,44 @@ fn resolve(spec: SamplerSpec, layers: Option<usize>, exp: Option<ExpMode>) -> Re
                 reasons.join("; ")
             )
         }
+        Rung::M1 => {
+            if let Width::W(n) = spec.width {
+                anyhow::ensure!(
+                    n == 64,
+                    "the multi-spin rung packs 64 spins per machine word; its width axis is \
+                     fixed at 64 bits (requested width {n}) — use `--width auto` or `--width 64`"
+                );
+            }
+            anyhow::ensure!(
+                matches!(pref, BackendPref::Auto | BackendPref::Portable),
+                "rung M.1 sweeps bit-packed words on the scalar ALU (the internal RNG lanes are \
+                 negotiated separately and stream-identically); backend {pref} does not apply"
+            );
+            if pref == BackendPref::Portable {
+                notes.push(
+                    "m1: the portable preference only affects the internal RNG lanes; the \
+                     uniform stream (and hence every flip) is bit-identical either way"
+                        .into(),
+                );
+            }
+            if let Some(l) = layers {
+                if l < 2 || l % 2 != 0 {
+                    return Err(UnsupportedGeometry {
+                        rung: spec.rung,
+                        width: 64,
+                        layers: l,
+                        alternatives: geometry_alternatives(l),
+                    }
+                    .into());
+                }
+            }
+            notes.push(
+                "m1 requires ±1 couplings and zero on-site fields (build the workload with \
+                 ising::builder::pm_torus_workload); checked when the sweeper is instantiated"
+                    .into(),
+            );
+            done(Backend::Scalar, 64, GroupLayout::BitPlanes { bits: 64 }, rejected, notes)
+        }
         Rung::B1 | Rung::B2 => {
             if let Width::W(n) = spec.width {
                 anyhow::ensure!(
@@ -457,6 +539,21 @@ pub fn instantiate(
              sweep::accel::AccelSweeper::new",
             r.rung.label()
         ),
+        Rung::M1 => {
+            // The word sweep is scalar ALU work; only the internal uniform
+            // generator is lane-parallel.  Pick the fastest 8-lane RNG
+            // backend — the streams are bit-identical, so the choice never
+            // changes a flip decision (or a checkpoint payload).
+            #[cfg(target_arch = "x86_64")]
+            if crate::simd::avx2_available() {
+                return Ok(Box::new(m1_multispin::M1MultiSpin::<crate::simd::avx2::U32x8>::new(
+                    model, s0, seed, exp,
+                )?));
+            }
+            return Ok(Box::new(m1_multispin::M1MultiSpin::<U32xN<8>>::new(
+                model, s0, seed, exp,
+            )?));
+        }
         Rung::A3 | Rung::A4 => {}
     }
     let a3 = r.rung == Rung::A3;
@@ -478,6 +575,16 @@ pub fn instantiate(
                 ))
             } else {
                 Box::new(a4_full::A4Full::<crate::simd::avx2::U32x8>::new(model, s0, seed, exp))
+            }
+        }
+        #[cfg(all(target_arch = "x86_64", has_avx512_intrinsics))]
+        (Backend::Avx512, 16) => {
+            if a3 {
+                Box::new(a3_vecrng::A3VecRng::<crate::simd::avx512::U32x16>::new(
+                    model, s0, seed, exp,
+                ))
+            } else {
+                Box::new(a4_full::A4Full::<crate::simd::avx512::U32x16>::new(model, s0, seed, exp))
             }
         }
         (Backend::Portable, 4) => {
@@ -530,6 +637,10 @@ pub fn instantiate_batch(
         (Backend::Avx2, 8) => {
             Box::new(C1ReplicaBatch::<crate::simd::avx2::U32x8>::new(models, states, seeds, exp)?)
         }
+        #[cfg(all(target_arch = "x86_64", has_avx512_intrinsics))]
+        (Backend::Avx512, 16) => Box::new(C1ReplicaBatch::<crate::simd::avx512::U32x16>::new(
+            models, states, seeds, exp,
+        )?),
         (Backend::Portable, 4) => {
             Box::new(C1ReplicaBatch::<U32xN<4>>::new(models, states, seeds, exp)?)
         }
@@ -553,7 +664,12 @@ mod tests {
     #[test]
     fn auto_spec_resolves_to_host_widest() {
         let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4)).layers(32).plan().unwrap();
-        assert_eq!(plan.width, crate::simd::widest_supported_width());
+        let expect = if crate::simd::avx512_available() {
+            16
+        } else {
+            crate::simd::widest_supported_width()
+        };
+        assert_eq!(plan.width, expect);
         assert!(matches!(plan.layout, GroupLayout::LayerInterlace { .. }));
         assert_eq!(plan.rung, Rung::A4);
     }
@@ -588,7 +704,7 @@ mod tests {
         // The acceptance scenario: shallow model, C-rung chosen, and the
         // plan explains that A-rung interlacing is impossible at layers=2.
         let plan = EngineBuilder::new(SamplerSpec::rung(Rung::C1)).layers(2).plan().unwrap();
-        assert!(plan.width == 4 || plan.width == 8);
+        assert!(plan.width == 4 || plan.width == 8 || plan.width == 16);
         assert!(matches!(plan.layout, GroupLayout::ReplicaLanes { .. }));
         assert!(
             plan.rejected
@@ -610,15 +726,16 @@ mod tests {
 
     #[test]
     fn portable_width_16_is_free() {
-        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(16)).layers(32).plan().unwrap();
+        // Pin the portable backend: with backend auto, a host with
+        // AVX-512F resolves w16 onto the intrinsic backend instead.
+        let spec = SamplerSpec::rung(Rung::A4).w(16).on(BackendPref::Portable);
+        let plan = EngineBuilder::new(spec).layers(32).plan().unwrap();
         assert_eq!(plan.width, 16);
         assert_eq!(plan.backend, Backend::Portable);
         assert_eq!(plan.label(), "A.4w16");
         assert_eq!(plan.legacy_kind(), None);
         let wl = torus_workload(4, 4, 32, 1, 0.3);
-        let mut engine = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(16))
-            .build(&wl.model, &wl.s0, 7)
-            .unwrap();
+        let mut engine = EngineBuilder::new(spec).build(&wl.model, &wl.s0, 7).unwrap();
         let stats = engine.run(3, 0.8);
         assert!(stats.attempts > 0);
         assert!(engine.validate() < 1e-3);
@@ -658,5 +775,67 @@ mod tests {
             .err()
             .unwrap();
         assert!(format!("{err:#}").contains("8-lane"));
+    }
+
+    #[test]
+    fn avx512_pin_errors_cleanly_at_wrong_width() {
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(8).on(BackendPref::Avx512))
+            .layers(32)
+            .plan()
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("16-lane"));
+    }
+
+    #[test]
+    fn width_16_resolves_avx512_or_portable_with_reason() {
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::A4).w(16)).layers(32).plan().unwrap();
+        assert_eq!(plan.width, 16);
+        if crate::simd::avx512_available() {
+            assert_eq!(plan.backend, Backend::Avx512);
+        } else {
+            assert_eq!(plan.backend, Backend::Portable);
+            assert!(
+                plan.rejected.iter().any(|r| r.code == "no-avx512"),
+                "the avx512 downgrade must be recorded: {:?}",
+                plan.rejected
+            );
+        }
+    }
+
+    #[test]
+    fn m1_plan_is_bit_planes_width_64() {
+        let plan = EngineBuilder::new(SamplerSpec::rung(Rung::M1)).layers(256).plan().unwrap();
+        assert_eq!(plan.width, 64);
+        assert_eq!(plan.backend, Backend::Scalar);
+        assert_eq!(plan.layout, GroupLayout::BitPlanes { bits: 64 });
+        assert_eq!(plan.label(), "M.1");
+        assert_eq!(plan.legacy_kind(), Some(crate::sweep::SweepKind::M1MultiSpin));
+        // Spelled-out width 64 is the same plan; any other width is an error.
+        assert!(EngineBuilder::new(SamplerSpec::rung(Rung::M1).w(64)).layers(256).plan().is_ok());
+        assert!(EngineBuilder::new(SamplerSpec::rung(Rung::M1).w(8)).layers(256).plan().is_err());
+    }
+
+    #[test]
+    fn m1_rejects_odd_layer_counts() {
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::M1)).layers(9).plan().err().unwrap();
+        let ug = err.downcast_ref::<UnsupportedGeometry>().expect("UnsupportedGeometry");
+        assert_eq!(ug.layers, 9);
+        // Even (checkerboard-compatible) layer counts plan fine, even when
+        // they are not divisible by the word size.
+        assert!(EngineBuilder::new(SamplerSpec::rung(Rung::M1)).layers(10).plan().is_ok());
+    }
+
+    #[test]
+    fn m1_requires_pm_couplings_at_build_time() {
+        use crate::ising::builder::{pm_torus_workload, torus_workload};
+        let wl = torus_workload(4, 4, 8, 1, 0.3);
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::M1)).build(&wl.model, &wl.s0, 5);
+        assert!(format!("{:#}", err.err().unwrap()).contains("pm_torus_workload"));
+        let wl = pm_torus_workload(4, 4, 8, 1, 0.5);
+        let mut engine =
+            EngineBuilder::new(SamplerSpec::rung(Rung::M1)).build(&wl.model, &wl.s0, 5).unwrap();
+        let stats = engine.run(3, 0.7);
+        assert!(stats.attempts > 0);
     }
 }

@@ -71,6 +71,10 @@ pub enum Rung {
     A4,
     /// C.1 — replica-batched: one SIMD lane per tempering replica.
     C1,
+    /// M.1 — multi-spin coding: 64 spins bit-packed per machine word,
+    /// XOR-parity neighbour sums, acceptance via per-bin integer
+    /// thresholds (Weigel & Yavors'kii's trick on top of the A-ladder).
+    M1,
     /// B.1 — accelerator, naive gathered layout.
     B1,
     /// B.2 — accelerator, coalesced interlaced layout (§3.2).
@@ -86,6 +90,7 @@ impl Rung {
             Rung::A3 => "a3",
             Rung::A4 => "a4",
             Rung::C1 => "c1",
+            Rung::M1 => "m1",
             Rung::B1 => "b1",
             Rung::B2 => "b2",
         }
@@ -99,6 +104,7 @@ impl Rung {
             Rung::A3 => "A.3",
             Rung::A4 => "A.4",
             Rung::C1 => "C.1",
+            Rung::M1 => "M.1",
             Rung::B1 => "B.1",
             Rung::B2 => "B.2",
         }
@@ -117,6 +123,12 @@ impl Rung {
     /// The across-ensemble vector rung (one lane per replica).
     pub fn is_replica_batch(self) -> bool {
         matches!(self, Rung::C1)
+    }
+
+    /// The bit-packed multi-spin rung (64 spins per word; "width" counts
+    /// spin bits per word, not f32/u32 SIMD lanes).
+    pub fn is_multispin(self) -> bool {
+        matches!(self, Rung::M1)
     }
 
     /// The accelerator rungs (XLA artifacts through PJRT).
@@ -146,10 +158,11 @@ impl std::str::FromStr for Rung {
             "a3" | "a.3" | "a3-vec-rng" | "a3-vecrng" => Ok(Rung::A3),
             "a4" | "a.4" | "a4-full" => Ok(Rung::A4),
             "c1" | "c.1" | "c1-replica-batch" => Ok(Rung::C1),
+            "m1" | "m.1" | "m1-multispin" => Ok(Rung::M1),
             "b1" | "b.1" | "b1-accel" => Ok(Rung::B1),
             "b2" | "b.2" | "b2-accel" => Ok(Rung::B2),
             other => anyhow::bail!(
-                "unknown rung {other:?} (expected a1, a2, a3, a4, c1, b1 or b2; width goes in \
+                "unknown rung {other:?} (expected a1, a2, a3, a4, c1, m1, b1 or b2; width goes in \
                  --width, not the rung name — use `--rung a4 --width 8`, not `a4-full-w8`)"
             ),
         }
@@ -201,6 +214,9 @@ pub enum BackendPref {
     Sse2,
     /// Pin the 8-lane AVX2 backend (requires host detection).
     Avx2,
+    /// Pin the 16-lane AVX-512F backend (requires host detection *and* a
+    /// toolchain with the stabilized `_mm512_*` intrinsics, Rust ≥ 1.89).
+    Avx512,
     /// Pin the const-generic portable lanes (any width, any arch — also
     /// what `VECTORISING_FORCE_PORTABLE=1` forces for every CPU rung).
     Portable,
@@ -215,6 +231,7 @@ impl BackendPref {
             BackendPref::Auto => "auto",
             BackendPref::Sse2 => "sse2",
             BackendPref::Avx2 => "avx2",
+            BackendPref::Avx512 => "avx512",
             BackendPref::Portable => "portable",
             BackendPref::Accel => "accel",
         }
@@ -235,10 +252,11 @@ impl std::str::FromStr for BackendPref {
             "auto" => Ok(BackendPref::Auto),
             "sse2" | "sse" => Ok(BackendPref::Sse2),
             "avx2" | "avx" => Ok(BackendPref::Avx2),
+            "avx512" | "avx512f" | "avx-512" => Ok(BackendPref::Avx512),
             "portable" => Ok(BackendPref::Portable),
             "accel" => Ok(BackendPref::Accel),
             other => anyhow::bail!(
-                "unknown backend {other:?} (expected auto, sse2, avx2, portable or accel)"
+                "unknown backend {other:?} (expected auto, sse2, avx2, avx512, portable or accel)"
             ),
         }
     }
@@ -332,6 +350,7 @@ impl From<SweepKind> for SamplerSpec {
             SweepKind::A4FullW8 => (Rung::A4, Width::W(8)),
             SweepKind::C1ReplicaBatch => (Rung::C1, Width::W(4)),
             SweepKind::C1ReplicaBatchW8 => (Rung::C1, Width::W(8)),
+            SweepKind::M1MultiSpin => (Rung::M1, Width::W(64)),
             SweepKind::B1Accel => (Rung::B1, Width::W(32)),
             SweepKind::B2Accel => (Rung::B2, Width::W(32)),
         };
@@ -357,6 +376,9 @@ mod tests {
             ("a3-vec-rng", Rung::A3),
             ("a4-full", Rung::A4),
             ("c1-replica-batch", Rung::C1),
+            ("m1", Rung::M1),
+            ("M.1", Rung::M1),
+            ("m1-multispin", Rung::M1),
             ("b1", Rung::B1),
             ("B.2", Rung::B2),
         ] {
@@ -373,6 +395,7 @@ mod tests {
         assert!(Width::from_str("0").is_err());
         assert!(Width::from_str("four").is_err());
         assert_eq!(BackendPref::from_str("avx2").unwrap(), BackendPref::Avx2);
+        assert_eq!(BackendPref::from_str("avx512").unwrap(), BackendPref::Avx512);
         assert_eq!(BackendPref::from_str("sse").unwrap(), BackendPref::Sse2);
         assert!(BackendPref::from_str("neon").is_err());
     }

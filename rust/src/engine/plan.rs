@@ -18,6 +18,9 @@ pub enum Backend {
     Sse2,
     /// 8-lane AVX2 intrinsics (runtime-detected).
     Avx2,
+    /// 16-lane AVX-512F intrinsics (runtime-detected; needs a Rust ≥ 1.89
+    /// toolchain — the build script probes for the stabilized intrinsics).
+    Avx512,
     /// Const-generic portable lanes (any width, any architecture).
     Portable,
     /// XLA artifact through PJRT (the B-rungs).
@@ -30,6 +33,7 @@ impl Backend {
             Backend::Scalar => "scalar",
             Backend::Sse2 => "sse2",
             Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
             Backend::Portable => "portable",
             Backend::Accel => "accel",
         }
@@ -41,6 +45,7 @@ impl Backend {
             BackendPref::Auto => true,
             BackendPref::Sse2 => self == Backend::Sse2,
             BackendPref::Avx2 => self == Backend::Avx2,
+            BackendPref::Avx512 => self == Backend::Avx512,
             BackendPref::Portable => self == Backend::Portable,
             BackendPref::Accel => self == Backend::Accel,
         }
@@ -61,10 +66,12 @@ impl std::str::FromStr for Backend {
             "scalar" => Ok(Backend::Scalar),
             "sse2" => Ok(Backend::Sse2),
             "avx2" => Ok(Backend::Avx2),
+            "avx512" => Ok(Backend::Avx512),
             "portable" => Ok(Backend::Portable),
             "accel" => Ok(Backend::Accel),
             other => anyhow::bail!(
-                "unknown backend {other:?} (expected scalar, sse2, avx2, portable or accel)"
+                "unknown backend {other:?} (expected scalar, sse2, avx2, avx512, portable or \
+                 accel)"
             ),
         }
     }
@@ -83,6 +90,9 @@ pub enum GroupLayout {
     ReplicaLanes { lanes: usize },
     /// The accelerator's §3.2 coalesced spin interlacing.
     AccelInterlace { width: usize },
+    /// The M.1 multi-spin layout: every vertex's layer stack packed
+    /// `bits` spins per machine word (bit b of word j = layer 64j+b).
+    BitPlanes { bits: usize },
 }
 
 impl GroupLayout {
@@ -107,6 +117,10 @@ impl GroupLayout {
                 ("kind", json::str_v("accel-interlace")),
                 ("width", json::num(width as f64)),
             ]),
+            GroupLayout::BitPlanes { bits } => json::obj(vec![
+                ("kind", json::str_v("bit-planes")),
+                ("bits", json::num(bits as f64)),
+            ]),
         }
     }
 }
@@ -117,8 +131,9 @@ impl GroupLayout {
 pub struct Rejection {
     pub rung: Rung,
     pub width: usize,
-    /// Stable reason codes: `layer-interlace`, `no-avx2`, `no-intrinsics`,
-    /// `width-unavailable`, `backend-mismatch`, `forced-portable`.
+    /// Stable reason codes: `layer-interlace`, `no-avx2`, `no-avx512`,
+    /// `no-intrinsics`, `width-unavailable`, `backend-mismatch`,
+    /// `forced-portable`.
     pub code: &'static str,
     pub reason: String,
 }
@@ -150,7 +165,7 @@ impl Resolved {
     pub fn label(&self) -> String {
         let base = self.rung.label();
         match (self.rung, self.width) {
-            (Rung::A1 | Rung::A2 | Rung::B1 | Rung::B2, _) => base.to_string(),
+            (Rung::A1 | Rung::A2 | Rung::B1 | Rung::B2 | Rung::M1, _) => base.to_string(),
             (_, 4) => base.to_string(),
             (_, w) => format!("{base}w{w}"),
         }
@@ -168,6 +183,7 @@ impl Resolved {
             (Rung::A4, 8) => Some(SweepKind::A4FullW8),
             (Rung::C1, 4) => Some(SweepKind::C1ReplicaBatch),
             (Rung::C1, 8) => Some(SweepKind::C1ReplicaBatchW8),
+            (Rung::M1, 64) => Some(SweepKind::M1MultiSpin),
             (Rung::B1, _) => Some(SweepKind::B1Accel),
             (Rung::B2, _) => Some(SweepKind::B2Accel),
             _ => None,
@@ -360,6 +376,7 @@ mod tests {
         assert_eq!(r(Rung::C1, 4).label(), "C.1");
         assert_eq!(r(Rung::C1, 8).label(), "C.1w8");
         assert_eq!(r(Rung::A2, 1).label(), "A.2");
+        assert_eq!(r(Rung::M1, 64).label(), "M.1");
         assert_eq!(r(Rung::B2, 32).label(), "B.2");
     }
 

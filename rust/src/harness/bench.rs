@@ -1,0 +1,481 @@
+//! Machine-readable bench artifacts (`BENCH_<rung>.json`) and the perf
+//! regression gate built on them.
+//!
+//! Every timing the harness or the benches publish is serialized as one
+//! [`BenchArtifact`]: throughput (spins/sec), lane geometry (width and
+//! fill), the host's vector capabilities, the git revision and a
+//! `provenance` marker (`"measured"` on the emitting host,
+//! `"estimate"` for hand-seeded baselines awaiting a refresh).  The
+//! artifacts are the bench trajectory of the repo — CI re-measures and
+//! gates on them instead of eyeballing bench stdout.
+//!
+//! The gate ([`gate`]) enforces two things:
+//!
+//! * **within-run ratio** — the multi-spin rung must retire at least
+//!   [`MIN_M1_OVER_C1W8`]× the spins/sec of the `C.1w8` lane-batch
+//!   measured in the same run (host-independent, always checked);
+//! * **absolute regression** — a rung must stay within
+//!   [`MAX_REGRESSION`] of its committed baseline, but only when the
+//!   baseline is `"measured"` on a host with the same capability
+//!   fingerprint and thread count (cross-host absolute numbers are
+//!   noise, so mismatches downgrade to a note, never a failure).
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{self, RunConfig, RunSpec};
+use crate::engine::Rung;
+use crate::simd;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Bumped when the artifact layout changes incompatibly.
+pub const BENCH_SCHEMA_VERSION: usize = 1;
+
+/// Minimum m1-over-C.1w8 throughput ratio the gate demands.
+pub const MIN_M1_OVER_C1W8: f64 = 3.0;
+
+/// Maximum tolerated slowdown against a same-host measured baseline.
+pub const MAX_REGRESSION: f64 = 0.10;
+
+/// Vector capabilities of the measuring host — absolute numbers are only
+/// comparable between identical fingerprints.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostCaps {
+    pub avx2: bool,
+    pub avx512: bool,
+    /// Widest lane count the legacy width negotiation resolves to.
+    pub widest_rng_width: usize,
+}
+
+impl HostCaps {
+    pub fn detect() -> Self {
+        Self {
+            avx2: simd::avx2_available(),
+            avx512: simd::avx512_available(),
+            widest_rng_width: simd::widest_supported_width(),
+        }
+    }
+
+    /// Equality key for "are absolute numbers comparable".
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{} avx2={} avx512={} rngw={}",
+            std::env::consts::ARCH,
+            self.avx2,
+            self.avx512,
+            self.widest_rng_width
+        )
+    }
+
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("arch", json::str_v(std::env::consts::ARCH)),
+            ("avx2", Value::Bool(self.avx2)),
+            ("avx512", Value::Bool(self.avx512)),
+            ("widest_rng_width", json::num(self.widest_rng_width as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            avx2: v.get("avx2")?.as_bool()?,
+            avx512: v.get("avx512")?.as_bool()?,
+            widest_rng_width: v.get("widest_rng_width")?.as_usize()?,
+        })
+    }
+}
+
+/// One machine-readable bench measurement.
+#[derive(Clone, Debug)]
+pub struct BenchArtifact {
+    pub schema: usize,
+    /// Resolved plan label, e.g. `M.1`, `C.1w8`, `A.4w16`.
+    pub rung: String,
+    pub threads: usize,
+    pub sweeps: usize,
+    pub seconds: f64,
+    /// Spin-update attempts per second across all replicas and threads.
+    pub spins_per_sec: f64,
+    /// Negotiated lane count (64 bit-lanes for m1, SIMD lanes else).
+    pub lane_width: usize,
+    /// Fraction of lane slots carrying real work (m1 pads the last word
+    /// of each layer column; C-rungs pad the tail replica batch).
+    pub lane_fill: f64,
+    pub torus_width: usize,
+    pub torus_height: usize,
+    pub layers: usize,
+    pub n_models: usize,
+    pub host: HostCaps,
+    /// `git rev-parse` of the emitting checkout (`unknown` outside git).
+    pub git_sha: String,
+    /// `"measured"` when emitted by a real run on this host;
+    /// `"estimate"` for hand-seeded baselines (never gated absolutely).
+    pub provenance: String,
+}
+
+impl BenchArtifact {
+    /// Measure one spec through the coordinator's timing path and wrap
+    /// the result as a `"measured"` artifact.
+    pub fn measure(rs: &RunSpec) -> Result<Self> {
+        let plan = rs.plan()?;
+        let t = coordinator::time_sweeps_spec(rs)?;
+        let cfg = &rs.config;
+        Ok(Self {
+            schema: BENCH_SCHEMA_VERSION,
+            rung: plan.label(),
+            threads: t.threads,
+            sweeps: t.sweeps,
+            seconds: t.seconds,
+            spins_per_sec: t.updates_per_sec,
+            lane_width: plan.width,
+            lane_fill: lane_fill(rs.sampler.rung, plan.width, cfg),
+            torus_width: cfg.width,
+            torus_height: cfg.height,
+            layers: cfg.layers,
+            n_models: cfg.n_models,
+            host: HostCaps::detect(),
+            git_sha: git_sha(),
+            provenance: "measured".into(),
+        })
+    }
+
+    /// `BENCH_<rung>.json` — the rung label lowercased with the dots
+    /// dropped (`M.1` → `BENCH_m1.json`, `C.1w8` → `BENCH_c1w8.json`).
+    pub fn file_name(rung_label: &str) -> String {
+        format!("BENCH_{}.json", rung_label.to_ascii_lowercase().replace('.', ""))
+    }
+
+    /// Write the artifact into `dir` under its canonical file name.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(Self::file_name(&self.rung));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(self.schema as f64)),
+            ("rung", json::str_v(&self.rung)),
+            ("threads", json::num(self.threads as f64)),
+            ("sweeps", json::num(self.sweeps as f64)),
+            ("seconds", json::num(self.seconds)),
+            ("spins_per_sec", json::num(self.spins_per_sec)),
+            ("lane_width", json::num(self.lane_width as f64)),
+            ("lane_fill", json::num(self.lane_fill)),
+            ("torus_width", json::num(self.torus_width as f64)),
+            ("torus_height", json::num(self.torus_height as f64)),
+            ("layers", json::num(self.layers as f64)),
+            ("n_models", json::num(self.n_models as f64)),
+            ("host", self.host.to_value()),
+            ("git_sha", json::str_v(&self.git_sha)),
+            ("provenance", json::str_v(&self.provenance)),
+        ])
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().to_string()
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let schema = v.get("schema")?.as_usize()?;
+        anyhow::ensure!(
+            schema <= BENCH_SCHEMA_VERSION,
+            "bench artifact schema {schema} is newer than this build speaks \
+             ({BENCH_SCHEMA_VERSION})"
+        );
+        Ok(Self {
+            schema,
+            rung: v.get("rung")?.as_str()?.to_string(),
+            threads: v.get("threads")?.as_usize()?,
+            sweeps: v.get("sweeps")?.as_usize()?,
+            seconds: v.get("seconds")?.as_f64()?,
+            spins_per_sec: v.get("spins_per_sec")?.as_f64()?,
+            lane_width: v.get("lane_width")?.as_usize()?,
+            lane_fill: v.get("lane_fill")?.as_f64()?,
+            torus_width: v.get("torus_width")?.as_usize()?,
+            torus_height: v.get("torus_height")?.as_usize()?,
+            layers: v.get("layers")?.as_usize()?,
+            n_models: v.get("n_models")?.as_usize()?,
+            host: HostCaps::from_value(v.get("host")?)?,
+            git_sha: v.get("git_sha")?.as_str()?.to_string(),
+            provenance: v.get("provenance")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_value(&Value::parse(text)?)
+    }
+}
+
+/// Fraction of lane slots carrying real work for a resolved rung on a
+/// given workload shape.
+pub fn lane_fill(rung: Rung, width: usize, cfg: &RunConfig) -> f64 {
+    if rung.is_multispin() {
+        let nw = cfg.layers.div_ceil(64);
+        cfg.layers as f64 / (64 * nw) as f64
+    } else if rung.is_replica_batch() {
+        let batches = cfg.n_models.div_ceil(width);
+        cfg.n_models as f64 / (width * batches) as f64
+    } else {
+        // The A-rungs negotiate a width the layer count divides, and the
+        // scalar/accel paths have no lanes to pad.
+        1.0
+    }
+}
+
+/// Git revision of the working tree, `unknown` when not in a checkout
+/// (the artifact stays valid — provenance is what the gate trusts).
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Load every `BENCH_*.json` under `dir` (missing dir → empty set).
+pub fn load_dir(dir: &Path) -> Result<Vec<BenchArtifact>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let text = std::fs::read_to_string(&path)?;
+            out.push(
+                BenchArtifact::from_json(&text)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+            );
+        }
+    }
+    out.sort_by(|a, b| a.rung.cmp(&b.rung));
+    Ok(out)
+}
+
+/// Outcome of one gate evaluation: human-readable evidence lines plus
+/// the subset that are hard failures.
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    pub lines: Vec<String>,
+    pub failures: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    fn fail(&mut self, msg: String) {
+        self.lines.push(format!("FAIL  {msg}"));
+        self.failures.push(msg);
+    }
+
+    fn ok(&mut self, msg: String) {
+        self.lines.push(format!("ok    {msg}"));
+    }
+
+    fn note(&mut self, msg: String) {
+        self.lines.push(format!("note  {msg}"));
+    }
+}
+
+/// Evaluate the perf gate: `current` are artifacts measured in this run,
+/// `baselines` the committed trajectory (see module docs for the rules).
+pub fn gate(current: &[BenchArtifact], baselines: &[BenchArtifact]) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let m1 = current.iter().find(|a| a.rung == "M.1");
+    let c1 = current.iter().find(|a| a.rung == "C.1w8");
+    match (m1, c1) {
+        (Some(m1), Some(c1)) => {
+            let ratio = m1.spins_per_sec / c1.spins_per_sec.max(1e-12);
+            let msg = format!(
+                "M.1 over C.1w8: {ratio:.2}x spins/sec (floor {MIN_M1_OVER_C1W8:.1}x; \
+                 M.1 {:.1}M/s, C.1w8 {:.1}M/s)",
+                m1.spins_per_sec / 1e6,
+                c1.spins_per_sec / 1e6
+            );
+            if ratio >= MIN_M1_OVER_C1W8 {
+                out.ok(msg);
+            } else {
+                out.fail(msg);
+            }
+        }
+        _ => out.note(
+            "ratio gate skipped: needs both an M.1 and a C.1w8 measurement in this run".into(),
+        ),
+    }
+    for cur in current {
+        let Some(base) = baselines.iter().find(|b| b.rung == cur.rung) else {
+            out.note(format!("{}: no committed baseline", cur.rung));
+            continue;
+        };
+        if base.provenance != "measured" {
+            out.note(format!(
+                "{}: baseline is an {} — absolute compare skipped (refresh with \
+                 `repro bench --out bench`)",
+                cur.rung, base.provenance
+            ));
+            continue;
+        }
+        if base.host.fingerprint() != cur.host.fingerprint() || base.threads != cur.threads {
+            out.note(format!(
+                "{}: baseline host/threads differ ({} t={} vs {} t={}) — absolute compare \
+                 skipped",
+                cur.rung,
+                base.host.fingerprint(),
+                base.threads,
+                cur.host.fingerprint(),
+                cur.threads
+            ));
+            continue;
+        }
+        let floor = base.spins_per_sec * (1.0 - MAX_REGRESSION);
+        let msg = format!(
+            "{}: {:.1}M spins/s vs baseline {:.1}M/s (floor {:.1}M/s, -{:.0}%)",
+            cur.rung,
+            cur.spins_per_sec / 1e6,
+            base.spins_per_sec / 1e6,
+            floor / 1e6,
+            MAX_REGRESSION * 100.0
+        );
+        if cur.spins_per_sec >= floor {
+            out.ok(msg);
+        } else {
+            out.fail(msg);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SamplerSpec;
+
+    fn small() -> RunConfig {
+        RunConfig {
+            width: 4,
+            height: 4,
+            layers: 8,
+            n_models: 2,
+            sweeps: 4,
+            sweeps_per_round: 2,
+            ..RunConfig::default()
+        }
+    }
+
+    fn fake(rung: &str, rate: f64) -> BenchArtifact {
+        BenchArtifact {
+            schema: BENCH_SCHEMA_VERSION,
+            rung: rung.into(),
+            threads: 1,
+            sweeps: 4,
+            seconds: 0.5,
+            spins_per_sec: rate,
+            lane_width: 8,
+            lane_fill: 1.0,
+            torus_width: 12,
+            torus_height: 8,
+            layers: 256,
+            n_models: 8,
+            host: HostCaps::detect(),
+            git_sha: "deadbeef".into(),
+            provenance: "measured".into(),
+        }
+    }
+
+    #[test]
+    fn artifacts_roundtrip_through_json() {
+        let a = fake("M.1", 7.5e8);
+        let back = BenchArtifact::from_json(&a.to_json()).unwrap();
+        assert_eq!(back.rung, "M.1");
+        assert_eq!(back.spins_per_sec.to_bits(), a.spins_per_sec.to_bits());
+        assert_eq!(back.host, a.host);
+        assert_eq!(back.provenance, "measured");
+        // Future schemas are refused loudly.
+        let newer = a.to_json().replace("\"schema\":1", "\"schema\":99");
+        assert!(BenchArtifact::from_json(&newer).is_err());
+    }
+
+    #[test]
+    fn file_names_drop_dots_and_lowercase() {
+        assert_eq!(BenchArtifact::file_name("M.1"), "BENCH_m1.json");
+        assert_eq!(BenchArtifact::file_name("C.1w8"), "BENCH_c1w8.json");
+        assert_eq!(BenchArtifact::file_name("A.4w16"), "BENCH_a4w16.json");
+    }
+
+    #[test]
+    fn measure_emits_complete_artifacts_for_m1_and_c1() {
+        let m1 = BenchArtifact::measure(&RunSpec::new(small(), SamplerSpec::rung(Rung::M1)))
+            .unwrap();
+        assert_eq!(m1.rung, "M.1");
+        assert_eq!(m1.lane_width, 64);
+        // 8 layers in a 64-bit word: 1/8 of the bit-lanes carry spins.
+        assert!((m1.lane_fill - 0.125).abs() < 1e-12);
+        assert!(m1.spins_per_sec > 0.0);
+        assert_eq!(m1.provenance, "measured");
+
+        let c1 =
+            BenchArtifact::measure(&RunSpec::new(small(), SamplerSpec::rung(Rung::C1).w(8)))
+                .unwrap();
+        assert_eq!(c1.rung, "C.1w8");
+        assert_eq!(c1.lane_width, 8);
+        // 2 replicas on 8 lanes, one padded batch.
+        assert!((c1.lane_fill - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_enforces_the_m1_ratio_floor() {
+        let pass = gate(&[fake("M.1", 9.0e8), fake("C.1w8", 2.4e8)], &[]);
+        assert!(pass.passed(), "{:?}", pass.failures);
+        let fail = gate(&[fake("M.1", 4.0e8), fake("C.1w8", 2.4e8)], &[]);
+        assert!(!fail.passed());
+        assert!(fail.failures[0].contains("M.1 over C.1w8"));
+        // Without both measurements the ratio gate degrades to a note.
+        let partial = gate(&[fake("M.1", 4.0e8)], &[]);
+        assert!(partial.passed());
+    }
+
+    #[test]
+    fn gate_compares_absolutes_only_on_matching_measured_baselines() {
+        let cur = [fake("M.1", 8.0e8), fake("C.1w8", 2.0e8)];
+        // Matching fingerprint, measured: a 50% regression fails.
+        let regressed = gate(&cur, &[fake("M.1", 1.7e9)]);
+        assert!(!regressed.passed());
+        // Within tolerance passes.
+        let fine = gate(&cur, &[fake("M.1", 8.2e8)]);
+        assert!(fine.passed(), "{:?}", fine.failures);
+        // Estimate baselines are advisory, never gated.
+        let mut est = fake("M.1", 1.7e9);
+        est.provenance = "estimate".into();
+        let skipped = gate(&cur, &[est]);
+        assert!(skipped.passed());
+        assert!(skipped.lines.iter().any(|l| l.contains("estimate")));
+        // Host mismatch downgrades to a note too.
+        let mut other = fake("M.1", 1.7e9);
+        other.host.widest_rng_width = 999;
+        assert!(gate(&cur, &[other]).passed());
+    }
+
+    #[test]
+    fn write_and_load_roundtrip_through_a_directory() {
+        let dir = std::env::temp_dir().join("vectorising_bench_artifacts_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        fake("M.1", 7.5e8).write_to(&dir).unwrap();
+        fake("C.1w8", 2.4e8).write_to(&dir).unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].rung, "C.1w8");
+        assert_eq!(loaded[1].rung, "M.1");
+        assert!(load_dir(Path::new("/nonexistent/bench/dir")).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

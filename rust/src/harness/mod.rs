@@ -10,8 +10,12 @@
 //! | [`fig17`]  | Fig 17 — relative error of the exp approximations |
 //!
 //! Output is an aligned text table on stdout plus (optionally) CSV files
-//! under `results/`, so plots can be regenerated offline.
+//! under `results/`, so plots can be regenerated offline.  The [`bench`]
+//! module is the machine-readable side: `BENCH_<rung>.json` artifacts
+//! (spins/sec, lane fill, host caps, git sha) and the perf gate CI runs
+//! on them.
 
+pub mod bench;
 pub mod fig13;
 pub mod fig14;
 pub mod fig17;

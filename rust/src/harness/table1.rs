@@ -26,10 +26,16 @@ pub fn render() -> String {
     t.row(vec!["A.4", "CPU", "4", y, y, y, y, y]);
     t.row(vec!["A.3w8", "CPU", "8", y, y, y, y, n]);
     t.row(vec!["A.4w8", "CPU", "8", y, y, y, y, y]);
+    t.row(vec!["A.3w16", "CPU", "16", y, y, y, y, n]);
+    t.row(vec!["A.4w16", "CPU", "16", y, y, y, y, y]);
     // C-rungs: lanes run across the tempering ensemble (one replica per
     // lane), not across one model's layers.
     t.row(vec!["C.1", "CPU", "4", y, y, y, y, y]);
     t.row(vec!["C.1w8", "CPU", "8", y, y, y, y, y]);
+    t.row(vec!["C.1w16", "CPU", "16", y, y, y, y, y]);
+    // M.1: 64 bit-lanes across one model's layers (multi-spin coding on
+    // the ±1-coupling family; acceptance via per-bin thresholds).
+    t.row(vec!["M.1", "CPU", "64", y, y, y, y, y]);
     t.row(vec!["B.1", "Accel", "32", y, y, y, n, n]);
     t.row(vec!["B.2", "Accel", "32", y, y, y, y, y]);
     t.render()
@@ -41,8 +47,8 @@ mod tests {
     fn has_all_rungs() {
         let s = super::render();
         for rung in [
-            "A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "C.1", "C.1w8",
-            "B.1", "B.2",
+            "A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "A.3w16", "A.4w16",
+            "C.1", "C.1w8", "C.1w16", "M.1", "B.1", "B.2",
         ] {
             assert!(s.contains(rung), "missing {rung}");
         }

@@ -41,6 +41,16 @@ pub fn measure_optimized(cfg: &RunConfig) -> Result<Vec<LadderTiming>> {
         ladder.push((Rung::A3.spec().w(8), "A.3w8"));
         ladder.push((Rung::A4.spec().w(8), "A.4w8"));
     }
+    if EngineBuilder::new(Rung::A4.spec().w(16)).layers(cfg.layers).plan().is_ok() {
+        ladder.push((Rung::A3.spec().w(16), "A.3w16"));
+        ladder.push((Rung::A4.spec().w(16), "A.4w16"));
+    }
+    // The multi-spin rung sweeps the ±1-coupling analogue of the same
+    // geometry (same spin count and sweep schedule, different coupling
+    // distribution): its column compares spins/sec, not trajectories.
+    if EngineBuilder::new(Rung::M1.spec()).layers(cfg.layers).plan().is_ok() {
+        ladder.push((Rung::M1.spec(), "M.1"));
+    }
     let mut out = Vec::new();
     for (spec, label) in ladder {
         let t = coordinator::time_sweeps_spec(&RunSpec::new(cfg.clone(), spec))?;
@@ -100,12 +110,16 @@ pub fn pairwise(rungs: &[LadderTiming]) -> Vec<Vec<f64>> {
 }
 
 /// Paper row order: A.1a, A.1b, A.2a, A.2b, A.3, A.4, then the width-8
-/// rungs (not in the paper — this testbed's AVX2 extension).
+/// and width-16 rungs and the multi-spin rung (not in the paper — this
+/// testbed's AVX2/AVX-512/bit-packing extensions).
 fn paper_order(label: &str) -> usize {
-    ["A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8"]
-        .iter()
-        .position(|&l| l == label)
-        .unwrap_or(usize::MAX)
+    [
+        "A.1a", "A.1b", "A.2a", "A.2b", "A.3", "A.4", "A.3w8", "A.4w8", "A.3w16", "A.4w16",
+        "M.1",
+    ]
+    .iter()
+    .position(|&l| l == label)
+    .unwrap_or(usize::MAX)
 }
 
 /// Render Table 2 (+ Fig 15, the A.1b row) from measured timings.
@@ -169,6 +183,13 @@ mod tests {
             }
         }
         assert!((m[0][2] - 10.0).abs() < 1e-12, "A.4 is 10x faster than A.1b");
+    }
+
+    #[test]
+    fn extended_rows_sort_after_the_paper_ladder() {
+        assert!(paper_order("A.3w16") > paper_order("A.4w8"));
+        assert!(paper_order("M.1") > paper_order("A.4w16"));
+        assert_eq!(paper_order("C.1w8"), usize::MAX, "unknown labels sort last");
     }
 
     #[test]

@@ -117,6 +117,81 @@ pub fn paper_workload(seed: u64) -> Workload {
     torus_workload(12, 8, 256, seed, 0.3)
 }
 
+/// Toroidal grid with **±1 couplings and zero on-site fields** — the
+/// discrete spin-glass workload the multi-spin rung M.1 requires (its
+/// flip energies then take a handful of values, one acceptance threshold
+/// per value — see `sweep::m1_multispin`).
+///
+/// Same graph, colouring, LCG call order and s0 conventions as
+/// [`torus_workload`]; the only differences are that every coupling is
+/// `±1` (sign drawn where the continuous builder draws a magnitude) and
+/// `h ≡ 0` (the field draws are skipped entirely).  `jtau` should be
+/// exactly representable (e.g. `0.5`) so per-bin threshold evaluation is
+/// bit-equal to per-spin evaluation.
+pub fn pm_torus_workload(
+    width: usize,
+    height: usize,
+    n_layers: usize,
+    seed: u64,
+    jtau: f32,
+) -> Workload {
+    assert!(width % 2 == 0 && height % 2 == 0, "torus dims must be even for a 2-colouring");
+    let n = width * height;
+    let mut rng = Lcg::new(seed);
+    let vid = |x: usize, y: usize| (y % height) * width + (x % width);
+
+    // ±1 couplings on the canonical (+x, +y) edges, same (y, x) order as
+    // the continuous builder.
+    let mut jx = vec![0.0f32; n];
+    let mut jy = vec![0.0f32; n];
+    for y in 0..height {
+        for x in 0..width {
+            jx[vid(x, y)] = rng.next_sign();
+            jy[vid(x, y)] = rng.next_sign();
+        }
+    }
+    let mut edges = Vec::with_capacity(2 * n);
+    for y in 0..height {
+        for x in 0..width {
+            let v = vid(x, y);
+            edges.push((v as u32, vid(x + 1, y) as u32, jx[v]));
+            edges.push((v as u32, vid(x, y + 1) as u32, jy[v]));
+        }
+    }
+    let h = vec![0.0f32; n];
+    let base = BaseGraph::new(n, h, edges);
+
+    let mut colors = vec![0u32; n];
+    for y in 0..height {
+        for x in 0..width {
+            colors[vid(x, y)] = ((x + y) % 2) as u32;
+        }
+    }
+    debug_assert!(base.is_proper_coloring(&colors));
+
+    let model = QmcModel::new(base, n_layers, jtau);
+    let mut s0 = Vec::with_capacity(model.n_spins());
+    for _v in 0..n {
+        for _l in 0..n_layers {
+            s0.push(rng.next_sign());
+        }
+    }
+    let mut s0_orig = vec![0.0f32; model.n_spins()];
+    for v in 0..n {
+        for l in 0..n_layers {
+            s0_orig[l * n + v] = s0[v * n_layers + l];
+        }
+    }
+
+    Workload { model, colors, n_colors: 2, s0: s0_orig }
+}
+
+/// The §4 benchmark geometry on the ±J discrete workload (the M.1
+/// benchmark input): 12×8 torus × 256 layers → 24,576 spins per model.
+pub fn pm_paper_workload(seed: u64) -> Workload {
+    pm_torus_workload(12, 8, 256, seed, 0.5)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +238,31 @@ mod tests {
         assert_eq!(w.model.base.n, 96);
         assert_eq!(w.model.n_layers, 256);
         assert_eq!(w.model.n_spins(), 24_576);
+    }
+
+    #[test]
+    fn pm_torus_is_discrete_and_deterministic() {
+        let w = pm_torus_workload(6, 4, 8, 3, 0.5);
+        assert_eq!(w.model.base.n, 24);
+        assert_eq!(w.model.base.edges.len(), 2 * 24);
+        assert!(w.model.base.edges.iter().all(|e| e.2 == 1.0 || e.2 == -1.0));
+        assert!(w.model.base.h.iter().all(|&h| h == 0.0));
+        assert!(w.s0.iter().all(|&s| s == 1.0 || s == -1.0));
+        assert!(w.model.base.is_proper_coloring(&w.colors));
+        let b = pm_torus_workload(6, 4, 8, 3, 0.5);
+        assert_eq!(w.s0, b.s0);
+        let c = pm_torus_workload(6, 4, 8, 4, 0.5);
+        assert_ne!(w.s0, c.s0);
+        // Both coupling signs occur (a degenerate all-ferromagnet draw
+        // would hide sign-handling bugs in the m1 bond masks).
+        assert!(w.model.base.edges.iter().any(|e| e.2 == 1.0));
+        assert!(w.model.base.edges.iter().any(|e| e.2 == -1.0));
+    }
+
+    #[test]
+    fn pm_paper_geometry() {
+        let w = pm_paper_workload(1);
+        assert_eq!(w.model.n_spins(), 24_576);
+        assert_eq!(w.model.jtau, 0.5);
     }
 }

@@ -28,7 +28,9 @@ pub mod model;
 pub mod reorder;
 pub mod replica_batch;
 
-pub use builder::{diag_torus_workload, torus_workload, Workload};
+pub use builder::{
+    diag_torus_workload, pm_paper_workload, pm_torus_workload, torus_workload, Workload,
+};
 pub use graph::BaseGraph;
 pub use model::QmcModel;
 pub use replica_batch::ReplicaBatchModel;

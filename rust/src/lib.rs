@@ -15,17 +15,26 @@
 //!   interlacing of the spin order,
 //! * **A.3w8/A.4w8** the same rungs at 8 lanes — AVX2 when the host has
 //!   it (runtime-detected), portable lanes otherwise,
-//! * **C.1/C.1w8** replica-batched vectorization: one SIMD lane per
-//!   tempering replica (per-lane β, per-lane RNG stream), so even
+//! * **A.3w16/A.4w16** the same rungs at 16 lanes — AVX-512 when the
+//!   toolchain and host provide it, portable 16-lanes otherwise,
+//! * **C.1/C.1w8/C.1w16** replica-batched vectorization: one SIMD lane
+//!   per tempering replica (per-lane β, per-lane RNG stream), so even
 //!   shallow models the A-rungs reject sweep at full vector width,
+//! * **M.1** multi-spin coding on the ±1-coupling family: 64 layers
+//!   bit-packed per word, XOR-parity neighbour sums through a carry-save
+//!   adder network, exact Metropolis acceptance via per-energy-bin
+//!   24-bit threshold tables — zero floating point in the hot loop,
 //! * **B.1/B.2** the accelerator ports (XLA artifacts AOT-compiled from
 //!   JAX+Pallas, executed through PJRT): naive gathered layout vs
 //!   coalesced interlaced layout.
 //!
 //! The whole CPU vector stack ([`simd`], [`rng`], [`expapprox`],
 //! [`ising::reorder`], [`sweep`]) is generic over the lane width `W`:
-//! SSE2 backs width 4, AVX2 width 8, and a const-generic portable
-//! implementation backs every other width and architecture.
+//! SSE2 backs width 4, AVX2 width 8, AVX-512 width 16 (runtime-detected,
+//! toolchain-gated), and a const-generic portable implementation backs
+//! every other width and architecture.  The width-generic MT19937
+//! regenerates its state block in ILP-unrolled independent accumulator
+//! chains, bit-exact to the rolled recurrence.
 //!
 //! Construction goes through the **Engine API v1** ([`engine`]): a
 //! [`engine::SamplerSpec`] names the three orthogonal axes — *rung* ×
@@ -49,7 +58,11 @@
 //! sampling jobs onto C-rung lane-batches (`repro serve` / `repro
 //! submit`), speaking the versioned v1 wire protocol (jobs carry a
 //! sampler spec, results echo the resolved plan, and `{"op":"run"}`
-//! executes whole checkpointable runs with inline checkpoints).
+//! executes whole checkpointable runs with inline checkpoints).  Perf
+//! itself is a tracked artifact: [`harness::bench`] emits machine-readable
+//! `BENCH_<rung>.json` measurements and `repro bench --check` gates CI on
+//! the trajectory (M.1 ≥ 3× C.1w8 spins/sec, ≤ 10% regression against
+//! same-host measured baselines).
 //!
 //! ## Quickstart
 //!
@@ -72,7 +85,7 @@
 //!
 //! | v0 (width-baked)                          | v1 (orthogonal spec)                       |
 //! |-------------------------------------------|--------------------------------------------|
-//! | `make_sweeper(SweepKind::A4Full, ..)`     | `EngineBuilder::new(Rung::A4.spec().w(4)).build(..)` |
+//! | `try_make_sweeper(SweepKind::A4Full, ..)` | `EngineBuilder::new(Rung::A4.spec().w(4)).build(..)` |
 //! | `SweepKind::A4FullW8`                     | `Rung::A4.spec().w(8)`                     |
 //! | `SweepKind::preferred_cpu()`              | `Rung::A4.spec()` (width auto)             |
 //! | `make_batch_sweeper(C1ReplicaBatchW8, ..)`| `EngineBuilder::new(Rung::C1.spec().w(8)).build_batch(..)` |

@@ -10,6 +10,7 @@
 //! repro fig14                             # wait-probability curves
 //! repro fig17                             # exp approximation error
 //! repro bench-rung --kind ... --json      # timing probe (used across build profiles)
+//! repro bench      [--json] [--check]     # BENCH_<rung>.json artifacts + perf gate
 //! repro artifacts-check                   # load + execute every artifact once
 //! ```
 //!
@@ -21,7 +22,8 @@ use std::path::PathBuf;
 use std::str::FromStr;
 
 use vectorising::coordinator::{self, Checkpoint, RunConfig, RunOptions, RunSpec};
-use vectorising::engine::{EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry};
+use vectorising::engine::{EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry, Width};
+use vectorising::harness::bench::{self, BenchArtifact};
 use vectorising::harness::{fig13, fig14, fig17, table1, table2};
 use vectorising::ising::builder::torus_workload;
 use vectorising::runtime::{artifact, Runtime};
@@ -40,14 +42,18 @@ USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
   run              full parallel-tempering simulation (--json)
-                   sampler spec: --rung a1|a2|a3|a4|c1|b1|b2
-                                 [--width auto|4|8|16] [--backend auto|sse2|avx2|portable]
+                   sampler spec: --rung a1|a2|a3|a4|c1|m1|b1|b2
+                                 [--width auto|4|8|16|64]
+                                 [--backend auto|sse2|avx2|avx512|portable]
                    (with --rung, torus dims use --torus-width/--torus-height)
                    legacy spellings still work: --kind a1..a4 | a3-vec-rng-w8
                           | a4-full-w8 | c1-replica-batch[-w8] | b1 | b2
                    (default: rung a4, width auto — the widest lane count the
                     host + layer count support; rung c1 sweeps one replica
-                    per SIMD lane and accepts any layers >= 2)
+                    per SIMD lane and accepts any layers >= 2; rung m1
+                    bit-packs 64 layers per word — width is fixed at 64,
+                    the workload is the ±1-coupling family, any even
+                    layers >= 2)
                    checkpointing (schema v2, spec-carrying):
                      --checkpoint PATH        save atomically during the run
                      --checkpoint-every N     rounds between saves (default 1;
@@ -67,18 +73,29 @@ SUBCOMMANDS
   fig14            wait-probability curves per replica [--csv PATH]
   fig17            exponential approximation error [--csv PATH]
   bench-rung       timing probe for one rung (--kind ..., --json)
+  bench            machine-readable bench artifacts + perf gate: measures
+                   --rungs m1,c1w8 (default; entries take a wN suffix,
+                   e.g. a4w8) on the paper's per-model geometry
+                   (12x8x256 spins); --json prints one artifact line per
+                   rung; --out DIR writes BENCH_<rung>.json files;
+                   --check gates the run (m1 must hold >= 3x C.1w8
+                   spins/sec; same-host measured baselines from
+                   --baseline-dir (default bench/) gate a 10% regression)
+                   and exits 1 on failure
   artifacts-check  load + execute every artifact once
   serve            sampling service (protocol_version 1): JSON-lines jobs in,
                    per-job results out (each echoing the resolved plan),
-                   dynamically lane-batched onto the C-rungs
+                   dynamically lane-batched onto the C-rungs (jobs that
+                   pin rung m1 run as bit-packed singles)
                    [--listen HOST:PORT | stdin/stdout]
-                   [--lanes 4|8|16] [--backend auto|sse2|avx2|portable]
+                   [--lanes 4|8|16] [--backend auto|sse2|avx2|avx512|portable]
                    [--threads N] [--flush-ms N] [--exact]
   submit           client for a serving instance: --addr HOST:PORT
                    [--file jobs.jsonl | stdin] [--stats] [--shutdown]
   job-run          run job lines directly on the scalar A.2 reference
                    [--file jobs.jsonl | stdin] [--exact]
-                   (the bit-exactness oracle for served results)
+                   (the bit-exactness oracle for C-rung served results;
+                   m1-pinned lines run the multi-spin path instead)
 
 WORKLOAD FLAGS (run/table2/fig13/fig14/bench-rung)
   --width N --height N   torus dims (default 8x8); with --rung use
@@ -293,7 +310,7 @@ fn main() -> Result<()> {
         "table1" => print!("{}", table1::render()),
         "table2" => {
             let cfg = workload_config(&args)?;
-            eprintln!("measuring optimized rungs (A.1b, A.2b, A.3, A.4)...");
+            eprintln!("measuring optimized rungs (A.1b, A.2b, A.3/A.4 at the host widths, M.1)...");
             let mut rungs = table2::measure_optimized(&cfg)?;
             if !args.switch("skip-opt0") {
                 let opt0_bin = PathBuf::from(args.str_or("opt0-bin", "target/opt0/repro"));
@@ -337,6 +354,65 @@ fn main() -> Result<()> {
                     t.updates_per_sec / 1e6,
                     if t.opt_disabled { " [opt0]" } else { "" }
                 );
+            }
+        }
+        "bench" => {
+            // Acceptance geometry: the paper's per-model torus
+            // (12x8x256 = 24,576 spins), small sweep counts — the point
+            // is a stable throughput sample, not equilibration.
+            let cfg = RunConfig {
+                width: args.usize_or("torus-width", 12)?,
+                height: args.usize_or("torus-height", 8)?,
+                layers: args.usize_or("layers", 256)?,
+                n_models: args.usize_or("models", 8)?,
+                sweeps: args.usize_or("sweeps", 40)?,
+                sweeps_per_round: args.usize_or("sweeps-per-round", 20)?,
+                threads: args.usize_or("threads", 1)?,
+                beta_cold: args.f32_or("beta-cold", 3.0)?,
+                beta_hot: args.f32_or("beta-hot", 0.5)?,
+                jtau: args.f32_or("jtau", 0.5)?,
+                seed: args.u64_or("seed", 1)?,
+            };
+            let specs = bench_specs(&args.str_or("rungs", "m1,c1w8"))?;
+            let mut artifacts = Vec::new();
+            for spec in specs {
+                let art = BenchArtifact::measure(&RunSpec::new(cfg.clone(), spec))?;
+                if args.switch("json") {
+                    println!("{}", art.to_json());
+                } else {
+                    println!(
+                        "{:8} {:8.1}M spins/s  lane fill {:.2}  ({}x{}x{}, {} models, \
+                         {} sweeps, threads={})",
+                        art.rung,
+                        art.spins_per_sec / 1e6,
+                        art.lane_fill,
+                        art.torus_width,
+                        art.torus_height,
+                        art.layers,
+                        art.n_models,
+                        art.sweeps,
+                        art.threads
+                    );
+                }
+                artifacts.push(art);
+            }
+            if let Some(dir) = args.str_opt("out") {
+                for art in &artifacts {
+                    let path = art.write_to(std::path::Path::new(dir))?;
+                    eprintln!("wrote {}", path.display());
+                }
+            }
+            if args.switch("check") {
+                let dir = PathBuf::from(args.str_or("baseline-dir", "bench"));
+                let outcome = bench::gate(&artifacts, &bench::load_dir(&dir)?);
+                for line in &outcome.lines {
+                    println!("{line}");
+                }
+                if !outcome.passed() {
+                    eprintln!("perf gate FAILED ({} failure(s))", outcome.failures.len());
+                    std::process::exit(1);
+                }
+                println!("perf gate passed");
             }
         }
         "artifacts-check" => {
@@ -471,6 +547,33 @@ fn run_accel(cfg: &RunConfig, kind: SweepKind) -> Result<coordinator::RunReport>
         &rows,
         pt.swap_acceptance(),
     ))
+}
+
+/// Parse the `--rungs` list of the bench subcommand: comma-separated
+/// rung spellings, each with an optional `w<N>` width suffix (`m1`,
+/// `c1w8`, `a4w16`, ...).
+fn bench_specs(list: &str) -> Result<Vec<SamplerSpec>> {
+    list.split(',')
+        .map(|entry| {
+            let entry = entry.trim();
+            anyhow::ensure!(!entry.is_empty(), "empty entry in --rungs list");
+            let (head, width) = match entry.rfind('w') {
+                Some(i)
+                    if i > 0
+                        && entry.len() > i + 1
+                        && entry[i + 1..].bytes().all(|b| b.is_ascii_digit()) =>
+                {
+                    (&entry[..i], Some(entry[i + 1..].parse::<usize>()?))
+                }
+                _ => (entry, None),
+            };
+            let mut spec = SamplerSpec::rung(Rung::from_str(head.trim_end_matches('-'))?);
+            if let Some(w) = width {
+                spec.width = Width::W(w);
+            }
+            Ok(spec)
+        })
+        .collect()
 }
 
 /// Request lines for submit/job-run: from `--file PATH` or stdin.

@@ -71,8 +71,103 @@ impl<U: SimdU32> Mt19937Simd<U> {
         U::with_features(|| self.generate_block());
     }
 
+    /// One twist step: `mt[i] = mt[src] ^ (y >> 1) ^ (lsb(y) & MATRIX_A)`
+    /// with `y = (mt[i] & UPPER) | (mt[nxt] & LOWER)` (Figure 10's
+    /// branch-free mask form).
+    #[inline(always)]
+    fn twist_one(&mut self, i: usize, nxt: usize, src: usize, upper: U, lower: U, matrix: U) {
+        let w = U::LANES;
+        let cur = U::load(&self.mt[w * i..]);
+        let nx = U::load(&self.mt[w * nxt..]);
+        let sr = U::load(&self.mt[w * src..]);
+        let y = (cur & upper) | (nx & lower);
+        let new = sr ^ y.shr(1) ^ (y.lsb_mask() & matrix);
+        new.store(&mut self.mt[w * i..w * (i + 1)]);
+    }
+
+    #[inline(always)]
+    fn temper_one(&mut self, i: usize) {
+        let w = U::LANES;
+        let mut y = U::load(&self.mt[w * i..]);
+        y = y ^ y.shr(11);
+        y = y ^ (y.shl(7) & U::splat(0x9d2c_5680));
+        y = y ^ (y.shl(15) & U::splat(0xefc6_0000));
+        y = y ^ y.shr(18);
+        y.store(&mut self.out[w * i..w * (i + 1)]);
+    }
+
+    /// The production block step: the reference recurrence split at the
+    /// `N - M` boundary (so `src` never needs a modulo inside a loop) and
+    /// unrolled into independent dependency chains — 2 for the twist,
+    /// 4 for the temper.  Within a twist pair every load happens before
+    /// either store and the two steps touch disjoint words, so the chains
+    /// carry no data dependence on each other and the core can overlap
+    /// them.  Bit-exact to the rolled reference (see the test): before
+    /// the boundary `cur`/`nxt`/`src` all read not-yet-twisted words, and
+    /// past it `src = mt[i + M - N]` reads words already updated this
+    /// pass — exactly the values the rolled loop sees through memory.
     #[inline(always)]
     fn generate_block(&mut self) {
+        let w = U::LANES;
+        let upper = U::splat(super::UPPER_MASK);
+        let lower = U::splat(super::LOWER_MASK);
+        let matrix = U::splat(MATRIX_A);
+        let mut i = 0;
+        while i + 1 < N - M {
+            let cur0 = U::load(&self.mt[w * i..]);
+            let cur1 = U::load(&self.mt[w * (i + 1)..]);
+            let nxt1 = U::load(&self.mt[w * (i + 2)..]);
+            let src0 = U::load(&self.mt[w * (i + M)..]);
+            let src1 = U::load(&self.mt[w * (i + M + 1)..]);
+            let y0 = (cur0 & upper) | (cur1 & lower);
+            let y1 = (cur1 & upper) | (nxt1 & lower);
+            let new0 = src0 ^ y0.shr(1) ^ (y0.lsb_mask() & matrix);
+            let new1 = src1 ^ y1.shr(1) ^ (y1.lsb_mask() & matrix);
+            new0.store(&mut self.mt[w * i..w * (i + 1)]);
+            new1.store(&mut self.mt[w * (i + 1)..w * (i + 2)]);
+            i += 2;
+        }
+        // N - M = 227 is odd: one remainder step before the boundary.
+        while i < N - M {
+            self.twist_one(i, i + 1, i + M, upper, lower, matrix);
+            i += 1;
+        }
+        // Past the boundary `src` wraps onto words updated this pass.
+        while i + 1 < N - 1 {
+            let cur0 = U::load(&self.mt[w * i..]);
+            let cur1 = U::load(&self.mt[w * (i + 1)..]);
+            let nxt1 = U::load(&self.mt[w * (i + 2)..]);
+            let src0 = U::load(&self.mt[w * (i + M - N)..]);
+            let src1 = U::load(&self.mt[w * (i + M - N + 1)..]);
+            let y0 = (cur0 & upper) | (cur1 & lower);
+            let y1 = (cur1 & upper) | (nxt1 & lower);
+            let new0 = src0 ^ y0.shr(1) ^ (y0.lsb_mask() & matrix);
+            let new1 = src1 ^ y1.shr(1) ^ (y1.lsb_mask() & matrix);
+            new0.store(&mut self.mt[w * i..w * (i + 1)]);
+            new1.store(&mut self.mt[w * (i + 1)..w * (i + 2)]);
+            i += 2;
+        }
+        // Final step: `nxt` wraps to the already-updated mt[0].
+        while i < N {
+            self.twist_one(i, (i + 1) % N, (i + M) % N, upper, lower, matrix);
+            i += 1;
+        }
+        // Temper: four independent chains per step (N = 624 = 4 · 156).
+        let mut i = 0;
+        while i < N {
+            self.temper_one(i);
+            self.temper_one(i + 1);
+            self.temper_one(i + 2);
+            self.temper_one(i + 3);
+            i += 4;
+        }
+        self.idx = 0;
+    }
+
+    /// The rolled reference form of [`Self::generate_block`], kept to pin
+    /// the unrolled loops bit-exactly.
+    #[cfg(test)]
+    fn generate_block_rolled(&mut self) {
         let w = U::LANES;
         let upper = U::splat(super::UPPER_MASK);
         let lower = U::splat(super::LOWER_MASK);
@@ -87,7 +182,6 @@ impl<U: SimdU32> Mt19937Simd<U> {
             let new = src ^ y.shr(1) ^ mag;
             new.store(&mut self.mt[w * i..w * (i + 1)]);
         }
-        // Temper the block in one vector pass.
         for i in 0..N {
             let mut y = U::load(&self.mt[w * i..]);
             y = y ^ y.shr(11);
@@ -157,6 +251,28 @@ impl<U: SimdU32> Mt19937Simd<U> {
 mod tests {
     use super::*;
     use crate::simd::portable;
+
+    #[test]
+    fn unrolled_block_generation_is_bit_exact_to_the_rolled_reference() {
+        fn check<U: SimdU32>() {
+            let mut a = Mt19937Simd::<U>::from_base_seed(2026);
+            let mut b = a.clone();
+            for round in 0..3 {
+                U::with_features(|| a.generate_block());
+                U::with_features(|| b.generate_block_rolled());
+                assert_eq!(a.mt, b.mt, "twist diverged (round {round}, W={})", U::LANES);
+                assert_eq!(a.out, b.out, "temper diverged (round {round}, W={})", U::LANES);
+                assert_eq!(a.idx, b.idx);
+            }
+        }
+        check::<portable::U32xN<4>>();
+        check::<portable::U32xN<8>>();
+        check::<portable::U32xN<16>>();
+        #[cfg(target_arch = "x86_64")]
+        if crate::simd::avx2_available() {
+            check::<crate::simd::avx2::U32x8>();
+        }
+    }
 
     #[test]
     fn state_words_roundtrip_resumes_every_lane_bit_exactly() {

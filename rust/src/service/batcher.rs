@@ -12,6 +12,11 @@
 //!   latency is bounded: ≥ 2 stragglers go out as a padded batch, a lone
 //!   job falls back to a scalar A-rung dispatch.
 //!
+//! Jobs that pin the scalar (`a2`) or multi-spin (`m1`) sampler bypass
+//! the shape buckets and dispatch as singles on the next poll — m1's 64
+//! lanes are the job's own layer bits, so cross-job packing would add
+//! nothing.
+//!
 //! FIFO order is preserved within a bucket (each bucket is a `VecDeque`
 //! popped from the front), and a batch never mixes shapes by
 //! construction — the property tests in `tests/service_batcher.rs` pin
@@ -76,6 +81,10 @@ pub struct Batcher {
     /// Jobs whose sampler pins the scalar path (`rung: a2`): they skip
     /// lane-packing and dispatch as singles on the next poll.
     scalar_lane: VecDeque<PendingJob>,
+    /// Jobs whose sampler pins the multi-spin path (`rung: m1`): also
+    /// singles — their 64 lanes are the job's own layer bits, so there
+    /// is nothing to pack across jobs.
+    multispin_lane: VecDeque<PendingJob>,
     next_seq: u64,
     queued: usize,
 }
@@ -90,6 +99,7 @@ impl Batcher {
             deadline,
             buckets: BTreeMap::new(),
             scalar_lane: VecDeque::new(),
+            multispin_lane: VecDeque::new(),
             next_seq: 0,
             queued: 0,
         }
@@ -112,6 +122,8 @@ impl Batcher {
         let job = PendingJob { spec, reply, enqueued: now, seq };
         if job.spec.wants_scalar() {
             self.scalar_lane.push_back(job);
+        } else if job.spec.wants_multispin() {
+            self.multispin_lane.push_back(job);
         } else {
             self.buckets.entry(job.spec.shape()).or_default().push_back(job);
         }
@@ -133,15 +145,20 @@ impl Batcher {
     }
 
     /// Earliest pending flush deadline — the scheduler's sleep bound.  A
-    /// queued scalar-pinned job is due immediately (its admission time).
+    /// queued scalar- or multispin-pinned job is due immediately (its
+    /// admission time).
     pub fn next_deadline(&self) -> Option<Instant> {
-        let scalar = self.scalar_lane.front().map(|job| job.enqueued);
+        let single = [self.scalar_lane.front(), self.multispin_lane.front()]
+            .into_iter()
+            .flatten()
+            .map(|job| job.enqueued)
+            .min();
         let bucket = self
             .buckets
             .values()
             .filter_map(|q| q.front().map(|job| job.enqueued + self.deadline))
             .min();
-        match (scalar, bucket) {
+        match (single, bucket) {
             (Some(s), Some(b)) => Some(s.min(b)),
             (s, b) => s.or(b),
         }
@@ -150,8 +167,10 @@ impl Batcher {
     fn collect_ready<F: Fn(Instant) -> bool>(&mut self, flush: F) -> Vec<Dispatch> {
         let width = self.width;
         let mut out = Vec::new();
-        // Scalar-pinned jobs dispatch immediately, ahead of any deadline.
+        // Scalar- and multispin-pinned jobs dispatch immediately, ahead
+        // of any deadline — both are singles by construction.
         out.extend(self.scalar_lane.drain(..).map(Dispatch::Single));
+        out.extend(self.multispin_lane.drain(..).map(Dispatch::Single));
         for queue in self.buckets.values_mut() {
             while queue.len() >= width {
                 out.push(Dispatch::Batch(queue.drain(..width).collect()));
@@ -228,6 +247,26 @@ mod tests {
         assert!(b.next_deadline().unwrap() <= now, "pinned job is due immediately");
         let ds = b.poll(now);
         assert_eq!(ds.len(), 1, "only the pinned single is ready: {}", ds.len());
+        assert!(!ds[0].is_batch());
+        assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
+    }
+
+    #[test]
+    fn multispin_pinned_jobs_dispatch_as_singles_immediately() {
+        use crate::engine::{Rung, SamplerSpec};
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let now = Instant::now();
+        // 3 batchable jobs of one shape + 1 m1-pinned job of the SAME
+        // shape: the pinned job never counts toward the bucket.
+        for i in 0..3 {
+            b.push(spec(&format!("j{i}"), 4, 8), None, now);
+        }
+        let mut pinned = spec("multispin", 4, 8);
+        pinned.sampler = Some(SamplerSpec::rung(Rung::M1));
+        b.push(pinned, None, now);
+        assert!(b.next_deadline().unwrap() <= now, "pinned job is due immediately");
+        let ds = b.poll(now);
+        assert_eq!(ds.len(), 1, "only the m1 single is ready");
         assert!(!ds[0].is_batch());
         assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
     }

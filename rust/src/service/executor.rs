@@ -60,12 +60,23 @@ impl Executor {
     }
 
     /// Admission check for a job's requested sampler against this
-    /// executor: `a2` always passes (scalar path); `c1` must be
-    /// compatible with the negotiated serving width and backend.
+    /// executor: `a2` always passes (scalar path); `m1` passes when its
+    /// backend axis is compatible (the bit-packed sweep is scalar ALU
+    /// work); `c1` must be compatible with the negotiated serving width
+    /// and backend.
     pub fn admits(&self, spec: &JobSpec) -> Result<()> {
         let Some(s) = spec.sampler else { return Ok(()) };
         match s.rung {
             Rung::A2 => Ok(()),
+            Rung::M1 => {
+                anyhow::ensure!(
+                    matches!(s.backend, BackendPref::Auto | BackendPref::Portable),
+                    "the m1 path sweeps bit-packed words on the scalar ALU (job requested \
+                     backend {})",
+                    s.backend
+                );
+                Ok(())
+            }
             Rung::C1 => {
                 if let Width::W(w) = s.width {
                     anyhow::ensure!(
@@ -103,15 +114,23 @@ impl Executor {
     /// The resolved plan of the scalar A.2 reference path.
     pub const SCALAR: Resolved = Resolved { rung: Rung::A2, backend: Backend::Scalar, width: 1 };
 
-    /// The scalar reference path: exactly the A.2 run a standalone
-    /// invocation of this job would execute.  Also the bit-exactness
-    /// oracle for served results (`repro job-run`).  Instantiated
-    /// through the engine's single dispatch point, like the lane-batched
-    /// path.
+    /// The resolved plan of the bit-packed multi-spin path (64 layer
+    /// bit-lanes inside one job; the word sweep is scalar ALU work).
+    pub const MULTISPIN: Resolved =
+        Resolved { rung: Rung::M1, backend: Backend::Scalar, width: 64 };
+
+    /// The single-job path: the scalar A.2 reference for plain jobs
+    /// (exactly the run a standalone invocation would execute — also the
+    /// bit-exactness oracle for C-rung served results, `repro job-run`),
+    /// or the bit-packed m1 sweep for m1-pinned jobs (a different Markov
+    /// chain on the ±1 workload family — not A.2-bit-exact by design).
+    /// Both instantiate through the engine's single dispatch point, like
+    /// the lane-batched path.
     pub fn run_single(&self, spec: &JobSpec) -> Result<JobResult> {
+        let resolved = if spec.wants_multispin() { Self::MULTISPIN } else { Self::SCALAR };
         let wl = spec.workload();
         let mut sweeper =
-            engine::builder::instantiate(Self::SCALAR, &wl.model, &wl.s0, spec.seed, self.exp)?;
+            engine::builder::instantiate(resolved, &wl.model, &wl.s0, spec.seed, self.exp)?;
         let mut stats = SweepStats::default();
         let mut trace = Vec::new();
         let mut done = 0usize;
@@ -126,12 +145,14 @@ impl Executor {
             id: spec.id.clone(),
             energy: sweeper.energy(),
             stats,
-            kind: Self::SCALAR.label(),
-            lanes: 1,
-            occupancy: 1,
+            kind: resolved.label(),
+            lanes: resolved.width,
+            // For m1 the "lanes" are layer bits: with fewer than 64
+            // layers the top bits of each word are padding.
+            occupancy: spec.layers.min(resolved.width).max(1),
             energy_trace: trace,
             state: if spec.want_state { Some(sweeper.state()) } else { None },
-            plan: Some(PlanEcho::scalar()),
+            plan: Some(PlanEcho::of(resolved)),
         })
     }
 
@@ -241,6 +262,42 @@ fn traces_at(spec: &JobSpec, p: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn m1_pinned_jobs_run_the_multispin_path() {
+        let spec = JobSpec {
+            id: "m".into(),
+            width: 4,
+            height: 4,
+            layers: 8,
+            model_seed: 3,
+            jtau: 0.5,
+            sweeps: 5,
+            beta: 0.7,
+            seed: 11,
+            trace_every: 0,
+            want_state: true,
+            sampler: Some(SamplerSpec::rung(Rung::M1)),
+        };
+        let exec = Executor::new(4, ExpMode::Fast).unwrap();
+        exec.admits(&spec).unwrap();
+        let r = exec.run_single(&spec).unwrap();
+        assert_eq!(r.kind, "M.1");
+        assert_eq!(r.lanes, 64);
+        assert_eq!(r.occupancy, 8, "8 layer bit-lanes carry spins");
+        assert_eq!(r.stats.attempts, 5 * 4 * 4 * 8, "every spin attempted once per sweep");
+        assert!(r.stats.flips > 0);
+        assert_eq!(r.plan.as_ref().unwrap().rung, "m1");
+        let state = r.state.as_ref().unwrap();
+        assert_eq!(state.len(), 4 * 4 * 8);
+        assert!(state.iter().all(|&s| s == 1.0 || s == -1.0));
+        assert_eq!(r.energy.to_bits(), spec.workload().model.total_energy(state).to_bits());
+        // The bit-packed sweep is scalar ALU work: a pinned SIMD backend
+        // is refused at admission.
+        let mut pinned = spec.clone();
+        pinned.sampler = Some(SamplerSpec::rung(Rung::M1).on(BackendPref::Avx2));
+        assert!(exec.admits(&pinned).is_err());
+    }
 
     #[test]
     fn capture_points_cover_trace_and_final() {

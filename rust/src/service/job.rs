@@ -28,10 +28,21 @@
 //! served trajectory is **bit-exact** to the scalar A.2 run of the same
 //! job (`repro job-run`), whichever lane of whichever batch it landed on
 //! — that is the C-rung correctness contract (see `tests/replica_batch.rs`).
+//!
+//! Jobs may instead pin `rung: m1` (the bit-packed multi-spin path):
+//! they dispatch as singles outside the lane buckets, sweep the
+//! **±1-coupling** workload family
+//! ([`crate::ising::builder::pm_torus_workload`] for the same
+//! width/height/layers/model_seed/jtau — a different model than the
+//! Gaussian-free torus the other rungs build), and their trajectory is
+//! **not** bit-exact to A.2: the multi-spin sweep visits spins in
+//! bit-packed checkerboard order, so it is a different (equally valid)
+//! Markov chain.  The A.2 oracle contract applies to the C-rung path
+//! only.
 
 use crate::coordinator::{Checkpoint, RunReport, RunSpec};
 use crate::engine::{Resolved, Rung, SamplerSpec, Width};
-use crate::ising::builder::{torus_workload, Workload};
+use crate::ising::builder::{pm_torus_workload, torus_workload, Workload};
 use crate::sweep::SweepStats;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -92,8 +103,14 @@ impl JobSpec {
         ShapeKey { width: self.width, height: self.height, layers: self.layers }
     }
 
-    /// Build the job's workload (deterministic in `model_seed`).
+    /// Build the job's workload (deterministic in `model_seed`).  An
+    /// m1-pinned job builds the ±1-coupling family the bit-packed sweep
+    /// needs; everything else builds the Gaussian-free torus.
     pub fn workload(&self) -> Workload {
+        if self.wants_multispin() {
+            let (w, h, l) = (self.width, self.height, self.layers);
+            return pm_torus_workload(w, h, l, self.model_seed, self.jtau);
+        }
         torus_workload(self.width, self.height, self.layers, self.model_seed, self.jtau)
     }
 
@@ -154,6 +171,13 @@ impl JobSpec {
         matches!(self.sampler, Some(s) if s.rung == Rung::C1)
     }
 
+    /// Whether the job's sampler pins the bit-packed multi-spin rung
+    /// (`m1`) — such jobs bypass lane-packing and dispatch as singles
+    /// on the multi-spin path (64 layer bit-lanes inside one job).
+    pub fn wants_multispin(&self) -> bool {
+        matches!(self.sampler, Some(s) if s.rung == Rung::M1)
+    }
+
     /// Admission checks: the same geometry rules the C-rungs need
     /// (even torus dims, `layers >= 2`) plus service abuse bounds.
     pub fn validate(&self) -> Result<()> {
@@ -208,9 +232,9 @@ impl JobSpec {
         anyhow::ensure!(self.jtau.is_finite(), "jtau must be finite");
         if let Some(s) = self.sampler {
             anyhow::ensure!(
-                matches!(s.rung, Rung::C1 | Rung::A2),
-                "sampler rung {} is not servable: the service lane-batches through c1 and falls \
-                 back to the scalar a2 reference",
+                matches!(s.rung, Rung::C1 | Rung::A2 | Rung::M1),
+                "sampler rung {} is not servable: the service lane-batches through c1, runs m1 \
+                 as bit-packed singles, and falls back to the scalar a2 reference",
                 s.rung
             );
             if s.rung == Rung::A2 {
@@ -218,6 +242,19 @@ impl JobSpec {
                     matches!(s.width, Width::Auto | Width::W(1)),
                     "the scalar a2 path has width 1 (sampler requested {})",
                     s.width
+                );
+            }
+            if s.rung == Rung::M1 {
+                anyhow::ensure!(
+                    matches!(s.width, Width::Auto | Width::W(64)),
+                    "the m1 multi-spin path packs 64 layers per word — its width is fixed at 64 \
+                     (sampler requested {})",
+                    s.width
+                );
+                anyhow::ensure!(
+                    self.layers % 2 == 0,
+                    "m1 needs an even layer count for its checkerboard phases (got {})",
+                    self.layers
                 );
             }
         }
@@ -706,6 +743,23 @@ mod tests {
         };
         let err = parse_request(&heavy.to_line()).err().unwrap();
         assert!(format!("{err:#}").contains("too heavy"));
+    }
+
+    #[test]
+    fn multispin_sampler_routes_and_validates() {
+        let line = r#"{"id":"m1","width":4,"height":4,"layers":8,"sampler":{"rung":"m1"}}"#;
+        let Request::Job(spec) = parse_request(line).unwrap() else { panic!("expected job") };
+        assert!(spec.wants_multispin());
+        assert!(!spec.wants_scalar() && !spec.pins_batch());
+        // The m1 workload is the ±1-coupling family: every space coupling
+        // is exactly +1 or -1 (the generic torus draws Gaussians).
+        let wl = spec.workload();
+        assert!(wl.model.base.edges.iter().all(|&(_, _, j)| j == 1.0 || j == -1.0));
+        // Width is fixed at 64 bit-lanes; layer counts must be even.
+        assert!(parse_request(r#"{"id":"m2","sampler":{"rung":"m1","width":64}}"#).is_ok());
+        assert!(parse_request(r#"{"id":"m3","sampler":{"rung":"m1","width":8}}"#).is_err());
+        let odd = r#"{"id":"m4","layers":9,"sampler":{"rung":"m1"}}"#;
+        assert!(parse_request(odd).is_err());
     }
 
     #[test]

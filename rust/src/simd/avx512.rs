@@ -1,0 +1,496 @@
+//! AVX-512 implementations of the 16-wide primitives (x86_64).
+//!
+//! The same operation set as the SSE2/AVX2 backends, twice as wide again:
+//! one `__m512i` / `__m512` register holds 16 lanes, so the MT19937
+//! recurrence, the bit-trick exponential and the Figure-10 mask sequence
+//! all run on 16 lanes per instruction.  Everything here sticks to the
+//! AVX-512 *Foundation* subset (`avx512f`) — no DQ/BW/VL instructions —
+//! so any AVX-512 host qualifies:
+//!
+//! * comparisons produce a `__mmask16` instead of a lane mask; the trait
+//!   surface wants lane masks, so `k`-results are widened back through
+//!   `VPBROADCASTD {z}` (`_mm512_maskz_set1_epi32`);
+//! * `movemask` has no direct 512-bit form in `avx512f` (`VPMOVD2M` is
+//!   DQ), so it is a signed compare-against-zero `k`-mask;
+//! * float negation runs in the integer domain (`VPXORD`) because the
+//!   float bitwise ops (`VXORPS zmm`) are DQ.
+//!
+//! These types must only be constructed after [`super::avx512_available`]
+//! returned `true`; the engine builder does that runtime dispatch, and
+//! hot loops run inside [`SimdU32::with_features`] so the intrinsics
+//! inline into one contiguous vector loop.
+//!
+//! The module itself is additionally gated on the build-script-probed
+//! `has_avx512_intrinsics` cfg: the `_mm512_*` intrinsics stabilized in
+//! Rust 1.89, and older stable toolchains must still build this crate
+//! (they negotiate the portable W=16 lanes instead).
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+use std::ops::{Add, BitAnd, BitOr, BitXor, Mul, Sub};
+
+use super::{SimdF32, SimdU32};
+
+/// Debug-build guard on every constructor: all `U32x16`/`F32x16` values
+/// originate from a splat/zero/load/`From`, so asserting detection here
+/// catches safe-code misuse on non-AVX-512 hosts before it reaches UB.
+/// Release builds compile this away (the construction invariant is
+/// upheld by the engine builder's runtime dispatch).
+#[inline(always)]
+fn debug_check_avx512() {
+    debug_assert!(
+        super::avx512_available(),
+        "avx512::U32x16/F32x16 constructed on a host without AVX-512F — gate on \
+         simd::avx512_available()"
+    );
+}
+
+/// Sixteen packed `u32` lanes (one `__m512i`).
+#[derive(Copy, Clone)]
+pub struct U32x16(pub(crate) __m512i);
+
+/// Sixteen packed `f32` lanes (one `__m512`).
+#[derive(Copy, Clone)]
+pub struct F32x16(pub(crate) __m512);
+
+impl From<[u32; 16]> for U32x16 {
+    #[inline(always)]
+    fn from(a: [u32; 16]) -> Self {
+        debug_check_avx512();
+        // `read_unaligned` compiles to VMOVDQU64 and sidesteps the
+        // `_mm512_loadu_si512` pointer-type churn across stdarch versions.
+        unsafe { Self(core::ptr::read_unaligned(a.as_ptr() as *const __m512i)) }
+    }
+}
+
+impl From<[f32; 16]> for F32x16 {
+    #[inline(always)]
+    fn from(a: [f32; 16]) -> Self {
+        debug_check_avx512();
+        unsafe { Self(_mm512_loadu_ps(a.as_ptr())) }
+    }
+}
+
+impl U32x16 {
+    /// All sixteen lanes set to `v` (VPBROADCASTD).
+    #[inline(always)]
+    pub fn splat(v: u32) -> Self {
+        debug_check_avx512();
+        unsafe { Self(_mm512_set1_epi32(v as i32)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        debug_check_avx512();
+        unsafe { Self(_mm512_setzero_si512()) }
+    }
+
+    /// Unaligned load of 16 consecutive values.
+    #[inline(always)]
+    pub fn load(src: &[u32]) -> Self {
+        debug_check_avx512();
+        debug_assert!(src.len() >= 16);
+        unsafe { Self(core::ptr::read_unaligned(src.as_ptr() as *const __m512i)) }
+    }
+
+    /// Unaligned store of the 16 lanes.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u32]) {
+        debug_assert!(dst.len() >= 16);
+        unsafe { core::ptr::write_unaligned(dst.as_mut_ptr() as *mut __m512i, self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [u32; 16] {
+        let mut out = [0u32; 16];
+        unsafe { core::ptr::write_unaligned(out.as_mut_ptr() as *mut __m512i, self.0) };
+        out
+    }
+
+    /// Logical shift right by a count (VPSRLD).
+    #[inline(always)]
+    pub fn shr(self, count: i32) -> Self {
+        unsafe { Self(_mm512_srl_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Logical shift left by a count (VPSLLD).
+    #[inline(always)]
+    pub fn shl(self, count: i32) -> Self {
+        unsafe { Self(_mm512_sll_epi32(self.0, _mm_cvtsi32_si128(count))) }
+    }
+
+    /// Wrapping lane-wise addition (VPADDD).
+    #[inline(always)]
+    pub fn wrapping_add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_add_epi32(self.0, rhs.0)) }
+    }
+
+    /// `mask ? a : b` per lane — the Figure-10 ternary as
+    /// `(mask & a) | (andnot(mask) & b)`.
+    #[inline(always)]
+    pub fn select(mask: Self, a: Self, b: Self) -> Self {
+        unsafe {
+            Self(_mm512_or_si512(_mm512_and_si512(mask.0, a.0), _mm512_andnot_si512(mask.0, b.0)))
+        }
+    }
+
+    /// Lane mask: all-ones where `(lane & 1) == 1` (VPANDD + VPCMPEQD to
+    /// `k`, widened back with VPBROADCASTD {z}).
+    #[inline(always)]
+    pub fn lsb_mask(self) -> Self {
+        unsafe {
+            let one = _mm512_set1_epi32(1);
+            let k = _mm512_cmpeq_epi32_mask(_mm512_and_si512(self.0, one), one);
+            Self(_mm512_maskz_set1_epi32(k, -1))
+        }
+    }
+
+    /// Reinterpret the 512 bits as 16 floats (no conversion).
+    #[inline(always)]
+    pub fn bitcast_f32(self) -> F32x16 {
+        unsafe { F32x16(_mm512_castsi512_ps(self.0)) }
+    }
+
+    /// Signed-i32 lane view of a store.
+    #[inline(always)]
+    pub fn to_array_i32(self) -> [i32; 16] {
+        self.to_array().map(|x| x as i32)
+    }
+
+    /// Convert each lane's *signed* value to f32 (VCVTDQ2PS).
+    #[inline(always)]
+    pub fn to_f32_from_i32(self) -> F32x16 {
+        unsafe { F32x16(_mm512_cvtepi32_ps(self.0)) }
+    }
+
+    /// 16-bit mask of each lane's sign bit.  `avx512f` has no 512-bit
+    /// MOVMSKPS (VPMOVD2M is DQ), so this is a signed `< 0` compare into
+    /// a `k`-register — bit k of the result = sign bit of lane k.
+    #[inline(always)]
+    pub fn movemask(self) -> u32 {
+        unsafe { _mm512_cmplt_epi32_mask(self.0, _mm512_setzero_si512()) as u32 }
+    }
+}
+
+impl BitAnd for U32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitand(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_and_si512(self.0, rhs.0)) }
+    }
+}
+
+impl BitOr for U32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_or_si512(self.0, rhs.0)) }
+    }
+}
+
+impl BitXor for U32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn bitxor(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_xor_si512(self.0, rhs.0)) }
+    }
+}
+
+impl F32x16 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        debug_check_avx512();
+        unsafe { Self(_mm512_set1_ps(v)) }
+    }
+
+    #[inline(always)]
+    pub fn zero() -> Self {
+        debug_check_avx512();
+        unsafe { Self(_mm512_setzero_ps()) }
+    }
+
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> Self {
+        debug_check_avx512();
+        debug_assert!(src.len() >= 16);
+        unsafe { Self(_mm512_loadu_ps(src.as_ptr())) }
+    }
+
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 16);
+        unsafe { _mm512_storeu_ps(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 16] {
+        let mut out = [0f32; 16];
+        unsafe { _mm512_storeu_ps(out.as_mut_ptr(), self.0) };
+        out
+    }
+
+    /// Unchecked load of 16 values at `src[off..off+16]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 16 <= src.len()`.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        debug_check_avx512();
+        debug_assert!(off + 16 <= src.len());
+        Self(_mm512_loadu_ps(src.as_ptr().add(off)))
+    }
+
+    /// Unchecked store of the 16 lanes to `dst[off..off+16]`.
+    ///
+    /// # Safety
+    /// Caller guarantees `off + 16 <= dst.len()`.
+    #[inline(always)]
+    pub unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        debug_assert!(off + 16 <= dst.len());
+        _mm512_storeu_ps(dst.as_mut_ptr().add(off), self.0)
+    }
+
+    /// Lane mask (all-ones u32) where `self < rhs` (VCMPPS to `k` with
+    /// the LT_OS predicate, widened back with VPBROADCASTD {z}).
+    #[inline(always)]
+    pub fn lt(self, rhs: Self) -> U32x16 {
+        unsafe {
+            let k = _mm512_cmp_ps_mask::<_CMP_LT_OS>(self.0, rhs.0);
+            U32x16(_mm512_maskz_set1_epi32(k, -1))
+        }
+    }
+
+    /// Truncating float→int conversion (VCVTTPS2DQ) — C cast semantics.
+    #[inline(always)]
+    pub fn to_i32_trunc(self) -> U32x16 {
+        unsafe { U32x16(_mm512_cvttps_epi32(self.0)) }
+    }
+
+    /// Reinterpret the 512 bits as 16 u32 lanes (no conversion).
+    #[inline(always)]
+    pub fn bitcast_u32(self) -> U32x16 {
+        unsafe { U32x16(_mm512_castps_si512(self.0)) }
+    }
+
+    /// Approximate reciprocal square root (VRSQRT14PS) — tighter error
+    /// spec (2^-14) than the SSE/AVX RSQRTPS (1.5 * 2^-12), so the
+    /// accurate-exp error bound still holds; only the `Accurate` exp
+    /// mode observes the difference (the fast mode never calls this).
+    #[inline(always)]
+    pub fn rsqrt_approx(self) -> Self {
+        unsafe { Self(_mm512_rsqrt14_ps(self.0)) }
+    }
+
+    /// Exact lane-wise square root (VSQRTPS).
+    #[inline(always)]
+    pub fn sqrt(self) -> Self {
+        unsafe { Self(_mm512_sqrt_ps(self.0)) }
+    }
+
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_max_ps(self.0, rhs.0)) }
+    }
+
+    #[inline(always)]
+    pub fn min(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_min_ps(self.0, rhs.0)) }
+    }
+
+    /// Lane-wise negation.  The 512-bit float XOR (VXORPS zmm) is an
+    /// AVX-512DQ instruction, so the sign-bit flip runs in the integer
+    /// domain (VPXORD) — bit-identical result.
+    #[inline(always)]
+    pub fn neg(self) -> Self {
+        unsafe {
+            let sign = _mm512_set1_epi32(i32::MIN);
+            Self(_mm512_castsi512_ps(_mm512_xor_si512(_mm512_castps_si512(self.0), sign)))
+        }
+    }
+
+    /// Rotate values one lane upward: `out[k] = in[(k+15) % 16]` — each
+    /// value moves to the next-higher lane, lane 15 wraps to lane 0
+    /// (VPERMPS, full-width lane crossing).
+    #[inline(always)]
+    pub fn rot_up(self) -> Self {
+        unsafe {
+            let idx = _mm512_setr_epi32(15, 0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14);
+            Self(_mm512_permutexvar_ps(idx, self.0))
+        }
+    }
+
+    /// Rotate values one lane downward: `out[k] = in[(k+1) % 16]` (lane 0
+    /// wraps to lane 15) — the inverse boundary wrap.
+    #[inline(always)]
+    pub fn rot_down(self) -> Self {
+        unsafe {
+            let idx = _mm512_setr_epi32(1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 0);
+            Self(_mm512_permutexvar_ps(idx, self.0))
+        }
+    }
+}
+
+impl Add for F32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_add_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Sub for F32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_sub_ps(self.0, rhs.0)) }
+    }
+}
+
+impl Mul for F32x16 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        unsafe { Self(_mm512_mul_ps(self.0, rhs.0)) }
+    }
+}
+
+// ---- width-generic trait plumbing (delegates to the inherent methods) ----
+
+impl SimdU32 for U32x16 {
+    const LANES: usize = 16;
+    type F = F32x16;
+
+    #[inline(always)]
+    fn splat(v: u32) -> Self {
+        U32x16::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        U32x16::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[u32]) -> Self {
+        U32x16::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [u32]) {
+        U32x16::store(self, dst)
+    }
+    #[inline(always)]
+    fn shr(self, count: i32) -> Self {
+        U32x16::shr(self, count)
+    }
+    #[inline(always)]
+    fn shl(self, count: i32) -> Self {
+        U32x16::shl(self, count)
+    }
+    #[inline(always)]
+    fn wrapping_add(self, rhs: Self) -> Self {
+        U32x16::wrapping_add(self, rhs)
+    }
+    #[inline(always)]
+    fn select(mask: Self, a: Self, b: Self) -> Self {
+        U32x16::select(mask, a, b)
+    }
+    #[inline(always)]
+    fn lsb_mask(self) -> Self {
+        U32x16::lsb_mask(self)
+    }
+    #[inline(always)]
+    fn bitcast_f32(self) -> F32x16 {
+        U32x16::bitcast_f32(self)
+    }
+    #[inline(always)]
+    fn to_f32_from_i32(self) -> F32x16 {
+        U32x16::to_f32_from_i32(self)
+    }
+    #[inline(always)]
+    fn movemask(self) -> u32 {
+        U32x16::movemask(self)
+    }
+
+    /// Re-enter codegen with AVX-512F enabled so the wrapped intrinsics
+    /// inline into one contiguous vector loop.
+    ///
+    /// The debug assertion (not a runtime branch in release builds)
+    /// documents the construction invariant: `U32x16` values only exist
+    /// after [`super::avx512_available`] returned `true`.
+    #[inline(always)]
+    fn with_features<R, G: FnOnce() -> R>(f: G) -> R {
+        #[target_feature(enable = "avx512f")]
+        unsafe fn vectorized<R, G: FnOnce() -> R>(f: G) -> R {
+            f()
+        }
+        debug_assert!(super::avx512_available());
+        // SAFETY: callers uphold the module invariant that AVX-512F was
+        // detected before any U32x16/F32x16 value was created.
+        unsafe { vectorized(f) }
+    }
+}
+
+impl SimdF32 for F32x16 {
+    const LANES: usize = 16;
+    type U = U32x16;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x16::splat(v)
+    }
+    #[inline(always)]
+    fn zero() -> Self {
+        F32x16::zero()
+    }
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        F32x16::load(src)
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        F32x16::store(self, dst)
+    }
+    #[inline(always)]
+    unsafe fn load_unchecked(src: &[f32], off: usize) -> Self {
+        F32x16::load_unchecked(src, off)
+    }
+    #[inline(always)]
+    unsafe fn store_unchecked(self, dst: &mut [f32], off: usize) {
+        F32x16::store_unchecked(self, dst, off)
+    }
+    #[inline(always)]
+    fn lt(self, rhs: Self) -> U32x16 {
+        F32x16::lt(self, rhs)
+    }
+    #[inline(always)]
+    fn to_i32_trunc(self) -> U32x16 {
+        F32x16::to_i32_trunc(self)
+    }
+    #[inline(always)]
+    fn bitcast_u32(self) -> U32x16 {
+        F32x16::bitcast_u32(self)
+    }
+    #[inline(always)]
+    fn rsqrt_approx(self) -> Self {
+        F32x16::rsqrt_approx(self)
+    }
+    #[inline(always)]
+    fn max(self, rhs: Self) -> Self {
+        F32x16::max(self, rhs)
+    }
+    #[inline(always)]
+    fn min(self, rhs: Self) -> Self {
+        F32x16::min(self, rhs)
+    }
+    #[inline(always)]
+    fn neg(self) -> Self {
+        F32x16::neg(self)
+    }
+    #[inline(always)]
+    fn rot_up(self) -> Self {
+        F32x16::rot_up(self)
+    }
+    #[inline(always)]
+    fn rot_down(self) -> Self {
+        F32x16::rot_down(self)
+    }
+}

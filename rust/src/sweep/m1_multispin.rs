@@ -1,0 +1,556 @@
+//! M.1 — multi-spin coding: 64 spins bit-packed per machine word.
+//!
+//! The paper's ladder vectorizes the *arithmetic* of one flip decision
+//! (A.3/A.4) or runs replicas in lane-lockstep (C.1).  Multi-spin coding
+//! is the complementary classic (Jacobs & Rebbi 1981; Weigel &
+//! Yavors'kii's GPU spin-glass kernels): restrict the workload to ±1
+//! couplings and zero on-site fields, and a spin becomes one *bit*, a
+//! local field a popcount of XOR words, and 64 Metropolis proposals
+//! become a handful of bitwise ops.
+//!
+//! Layout: bit `b` of word `j` of vertex `v` holds the spin at layer
+//! `64*j + b` (bit = 1 ⇔ spin = −1), `ceil(L/64)` words per vertex.  A
+//! sweep runs two checkerboard phases — phase `p` updates the spins with
+//! `(layer + colour(v)) % 2 == p`, whose neighbours (4 space + 2 tau) all
+//! sit in the opposite class, so every flip inside a phase commutes and a
+//! whole word of 32 active spins is decided in one pass:
+//!
+//! * tau disagreements come from the word shifted by one bit (with
+//!   cross-word / wrap-around carries),
+//! * space disagreements from `w ^ w_nbr ^ m_e` where the bond mask
+//!   `m_e` is all-ones iff `J_e = −1`,
+//! * the 4 space disagreements are summed *bit-sliced* by a carry-save
+//!   adder network (`ones`/`twos`/`fours` planes), the 2 tau ones by a
+//!   half adder,
+//! * the flip energy takes one of 15 values
+//!   `ΔE = (8 − 4·u_space) + jtau·(4 − 4·u_tau)`, so the Boltzmann
+//!   factor is evaluated **once per bin** instead of once per spin, and
+//!   acceptance `u < p` becomes an integer compare `(r >> 8) < T[bin]`
+//!   with `T[bin] = ceil(p · 2^24)` — bit-equal to the per-spin A.2 rule
+//!   because the 24-bit uniform `u = (r >> 8) / 2^24` is exact in f32.
+//!
+//! No effective-field arrays are maintained (the neighbour sums are
+//! recomputed per phase from the packed words), so [`Sweeper::validate`]
+//! is exactly 0 by construction.  Uniforms are drawn one per *active*
+//! spin, in (vertex, word, ascending bit) order, from the same interlaced
+//! [`Mt19937Simd`] rows the A.3/A.4 rungs use; leftovers in the last row
+//! of a phase are discarded so checkpoint payloads never straddle a
+//! partially-consumed row.
+//!
+//! The workload contract (±1 couplings, `h ≡ 0`, even layer count,
+//! degree-4 base graph) is what [`crate::ising::builder::pm_torus_workload`]
+//! produces; construction rejects anything else with a pointer there.
+
+use std::collections::VecDeque;
+
+use crate::ising::graph::BaseGraph;
+use crate::ising::QmcModel;
+use crate::rng::Mt19937Simd;
+use crate::simd::{MAX_LANES, SimdU32};
+
+use super::{ExpMode, SweepKind, SweepStats, Sweeper};
+
+/// Bits 0, 2, 4, … — the even layers of a word (layer parity equals bit
+/// parity because every word starts at a multiple of 64).
+const EVEN_BITS: u64 = 0x5555_5555_5555_5555;
+
+/// Flip-energy bin of bit `b` from the bit-sliced counter planes:
+/// `u_space | u_tau << 3`.
+#[inline(always)]
+fn bin_at(b: u32, ones: u64, twos: u64, fours: u64, t_ones: u64, t_twos: u64) -> usize {
+    let us = ((ones >> b) & 1) | (((twos >> b) & 1) << 1) | (((fours >> b) & 1) << 2);
+    let ut = ((t_ones >> b) & 1) | (((t_twos >> b) & 1) << 1);
+    (us | (ut << 3)) as usize
+}
+
+/// The multi-spin sweeper.  `U` picks the backend of the internal
+/// interlaced uniform generator only (the word sweep itself is scalar ALU
+/// work); all backends stream bit-identically, so `U` never changes a
+/// flip decision.
+pub struct M1MultiSpin<U: SimdU32> {
+    model: QmcModel,
+    exp: ExpMode,
+    /// BFS 2-colouring of the base graph (checkerboard classes).
+    colors: Vec<u32>,
+    /// Exactly four `(neighbour, bond mask)` pairs per vertex; the mask
+    /// is all-ones iff the coupling is antiferromagnetic.
+    nbrs: Vec<[(u32, u64); 4]>,
+    /// `spins[v*nw + j]`, bit `b` ⇔ layer `64j + b` of vertex `v` is −1.
+    spins: Vec<u64>,
+    /// Words per vertex, `ceil(L/64)`.
+    nw: usize,
+    /// Valid bits in the last word (`L − 64·(nw−1)`, even, in 2..=64);
+    /// the bits above stay zero as an invariant.
+    rbits: u32,
+    rng: Mt19937Simd<U>,
+    row: [u32; MAX_LANES],
+    cursor: usize,
+    /// `(beta bits, T)` — per-bin acceptance thresholds for the last
+    /// beta seen, `T[u_space | u_tau << 3] = ceil(p · 2^24)`.
+    cache: Option<(u32, [u32; 32])>,
+}
+
+/// Deterministic BFS bipartition (colour of the lowest-numbered vertex of
+/// each component is 0 — on the torus this reproduces the builder's
+/// `(x + y) % 2` colouring exactly).
+fn two_coloring(base: &BaseGraph) -> crate::Result<Vec<u32>> {
+    let adj = base.adjacency();
+    let mut colors = vec![u32::MAX; base.n];
+    let mut queue = VecDeque::new();
+    for start in 0..base.n {
+        if colors[start] != u32::MAX {
+            continue;
+        }
+        colors[start] = 0;
+        queue.push_back(start);
+        while let Some(v) = queue.pop_front() {
+            for &(u, _) in &adj[v] {
+                let u = u as usize;
+                if colors[u] == u32::MAX {
+                    colors[u] = 1 - colors[v];
+                    queue.push_back(u);
+                } else if colors[u] == colors[v] {
+                    anyhow::bail!(
+                        "m1-multispin needs a bipartite (2-colourable) base graph for its \
+                         checkerboard phases, but vertices {v} and {u} are adjacent with the \
+                         same class — build the workload with ising::builder::pm_torus_workload"
+                    );
+                }
+            }
+        }
+    }
+    Ok(colors)
+}
+
+impl<U: SimdU32> M1MultiSpin<U> {
+    pub fn new(model: &QmcModel, s0: &[f32], seed: u32, exp: ExpMode) -> crate::Result<Self> {
+        assert_eq!(s0.len(), model.n_spins());
+        let layers = model.n_layers;
+        anyhow::ensure!(
+            layers >= 2 && layers % 2 == 0,
+            "m1-multispin needs an even layer count >= 2 (got {layers}): the (layer + colour) \
+             checkerboard parity classes must close under the tau wrap-around"
+        );
+        if let Some(v) = model.base.h.iter().position(|&h| h != 0.0) {
+            anyhow::bail!(
+                "m1-multispin requires zero on-site fields, but h[{v}] = {} — build the \
+                 workload with ising::builder::pm_torus_workload",
+                model.base.h[v]
+            );
+        }
+        if let Some(e) = model.base.edges.iter().find(|e| e.2 != 1.0 && e.2 != -1.0) {
+            anyhow::bail!(
+                "m1-multispin requires couplings of exactly +1 or -1, but edge ({}, {}) has \
+                 J = {} — build the workload with ising::builder::pm_torus_workload",
+                e.0,
+                e.1,
+                e.2
+            );
+        }
+        let adj = model.base.adjacency();
+        if let Some(v) = adj.iter().position(|a| a.len() != 4) {
+            anyhow::bail!(
+                "m1-multispin's bit-sliced adder assumes exactly 4 space neighbours per vertex \
+                 (a torus base graph), but vertex {v} has {} — build the workload with \
+                 ising::builder::pm_torus_workload",
+                adj[v].len()
+            );
+        }
+        anyhow::ensure!(
+            s0.iter().all(|&s| s == 1.0 || s == -1.0),
+            "m1-multispin packs spins into single bits; the initial state must be exactly ±1"
+        );
+        let colors = two_coloring(&model.base)?;
+        let nbrs: Vec<[(u32, u64); 4]> = adj
+            .iter()
+            .map(|a| {
+                let mut row = [(0u32, 0u64); 4];
+                for (slot, &(u, j)) in row.iter_mut().zip(a.iter()) {
+                    *slot = (u, if j < 0.0 { !0u64 } else { 0u64 });
+                }
+                row
+            })
+            .collect();
+        let nw = layers.div_ceil(64);
+        let rbits = (layers - 64 * (nw - 1)) as u32;
+        let mut this = Self {
+            model: model.clone(),
+            exp,
+            colors,
+            nbrs,
+            spins: vec![0u64; model.base.n * nw],
+            nw,
+            rbits,
+            rng: Mt19937Simd::from_base_seed(seed),
+            row: [0u32; MAX_LANES],
+            cursor: 0,
+            cache: None,
+        };
+        this.pack_state(s0);
+        Ok(this)
+    }
+
+    /// Per-bin integer acceptance thresholds for `beta` (cached on the
+    /// beta bits).  `T[bin] = ceil(p · 2^24)` capped at `2^24` makes
+    /// `(r >> 8) < T[bin]` decide exactly like the per-spin `u < p`: with
+    /// `k = r >> 8` a 24-bit integer and `x = p · 2^24` (exact in f64),
+    /// `k < x ⇔ k < ceil(x)` whether or not `x` is an integer.
+    fn thresholds(&mut self, beta: f32) -> [u32; 32] {
+        if let Some((bits, t)) = self.cache {
+            if bits == beta.to_bits() {
+                return t;
+            }
+        }
+        let mut t = [0u32; 32];
+        for us in 0..=4i32 {
+            for ut in 0..=2i32 {
+                let de = (8 - 4 * us) as f32 + self.model.jtau * (4 - 4 * ut) as f32;
+                let p = self.exp.eval(-beta * de);
+                let scaled = (f64::from(p) * 16_777_216.0).ceil();
+                t[(us | (ut << 3)) as usize] =
+                    if scaled >= 16_777_216.0 { 1 << 24 } else { scaled.max(0.0) as u32 };
+            }
+        }
+        self.cache = Some((beta.to_bits(), t));
+        t
+    }
+
+    /// Next 24-bit uniform, refilling one interlaced row at a time.
+    #[inline]
+    fn next_r24(&mut self) -> u32 {
+        if self.cursor >= U::LANES {
+            self.rng.next_into(&mut self.row[..U::LANES]);
+            self.cursor = 0;
+        }
+        let r = self.row[self.cursor];
+        self.cursor += 1;
+        r >> 8
+    }
+
+    fn sweep_once(&mut self, table: &[u32; 32], stats: &mut SweepStats) {
+        let n = self.model.base.n;
+        let nw = self.nw;
+        let rshift = self.rbits - 1;
+        for phase in 0..2usize {
+            // Fresh rows per phase: leftover uniforms are discarded so the
+            // serialized RNG state fully describes the stream position.
+            self.cursor = U::LANES;
+            for v in 0..n {
+                let nb = self.nbrs[v];
+                let base_mask = if (self.colors[v] as usize + phase) % 2 == 0 {
+                    EVEN_BITS
+                } else {
+                    EVEN_BITS << 1
+                };
+                let row0 = v * nw;
+                let last = row0 + nw - 1;
+                for j in 0..nw {
+                    let w = self.spins[row0 + j];
+                    // Tau neighbours: the same column shifted by one layer,
+                    // with cross-word and wrap-around carries.
+                    let prev_bit = if j == 0 {
+                        (self.spins[last] >> rshift) & 1
+                    } else {
+                        self.spins[row0 + j - 1] >> 63
+                    };
+                    let down = (w << 1) | prev_bit;
+                    let up = if j + 1 == nw {
+                        (w >> 1) | ((self.spins[row0] & 1) << rshift)
+                    } else {
+                        (w >> 1) | ((self.spins[row0 + j + 1] & 1) << 63)
+                    };
+                    let d_down = w ^ down;
+                    let d_up = w ^ up;
+                    let t_ones = d_down ^ d_up;
+                    let t_twos = d_down & d_up;
+                    // Space neighbours: same word index, XOR with the bond
+                    // mask turns "bits differ" into "bond unsatisfied".
+                    let x0 = w ^ self.spins[nb[0].0 as usize * nw + j] ^ nb[0].1;
+                    let x1 = w ^ self.spins[nb[1].0 as usize * nw + j] ^ nb[1].1;
+                    let x2 = w ^ self.spins[nb[2].0 as usize * nw + j] ^ nb[2].1;
+                    let x3 = w ^ self.spins[nb[3].0 as usize * nw + j] ^ nb[3].1;
+                    // Carry-save adder: u_space per bit as 3 bit-planes.
+                    let (s_a, c_a) = (x0 ^ x1, x0 & x1);
+                    let (s_b, c_b) = (x2 ^ x3, x2 & x3);
+                    let ones = s_a ^ s_b;
+                    let c_c = s_a & s_b;
+                    let twos = c_a ^ c_b ^ c_c;
+                    let fours = (c_a & c_b) | (c_c & (c_a ^ c_b));
+                    let valid = if j + 1 == nw && self.rbits < 64 {
+                        (1u64 << self.rbits) - 1
+                    } else {
+                        !0u64
+                    };
+                    let active = base_mask & valid;
+                    let mut bits = active;
+                    let mut accept = 0u64;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros();
+                        bits &= bits - 1;
+                        let bin = bin_at(b, ones, twos, fours, t_ones, t_twos);
+                        if self.next_r24() < table[bin] {
+                            accept |= 1u64 << b;
+                        }
+                    }
+                    self.spins[row0 + j] = w ^ accept;
+                    stats.attempts += u64::from(active.count_ones());
+                    stats.flips += u64::from(accept.count_ones());
+                    stats.groups += 1;
+                    stats.groups_with_flip += u64::from(accept != 0);
+                }
+            }
+        }
+    }
+
+    fn pack_state(&mut self, s: &[f32]) {
+        let n = self.model.base.n;
+        for w in &mut self.spins {
+            *w = 0;
+        }
+        for l in 0..self.model.n_layers {
+            for v in 0..n {
+                if s[l * n + v] < 0.0 {
+                    self.spins[v * self.nw + l / 64] |= 1u64 << (l % 64);
+                }
+            }
+        }
+    }
+
+    fn unpack_state(&self) -> Vec<f32> {
+        let n = self.model.base.n;
+        let mut s = vec![0.0f32; self.model.n_spins()];
+        for l in 0..self.model.n_layers {
+            for v in 0..n {
+                let bit = (self.spins[v * self.nw + l / 64] >> (l % 64)) & 1;
+                s[l * n + v] = 1.0 - 2.0 * bit as f32;
+            }
+        }
+        s
+    }
+}
+
+impl<U: SimdU32> Sweeper for M1MultiSpin<U> {
+    fn kind(&self) -> SweepKind {
+        SweepKind::M1MultiSpin
+    }
+
+    fn width(&self) -> usize {
+        64
+    }
+
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
+        let mut stats = SweepStats::default();
+        let table = self.thresholds(beta);
+        for _ in 0..n_sweeps {
+            self.sweep_once(&table, &mut stats);
+        }
+        stats
+    }
+
+    fn energy(&mut self) -> f64 {
+        let s = self.unpack_state();
+        self.model.total_energy(&s)
+    }
+
+    fn state(&mut self) -> Vec<f32> {
+        self.unpack_state()
+    }
+
+    fn set_state(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.model.n_spins());
+        self.pack_state(s);
+    }
+
+    /// Always exactly 0: nothing is incrementally maintained — every
+    /// phase recomputes the neighbour sums from the packed words.
+    fn validate(&mut self) -> f64 {
+        0.0
+    }
+
+    fn rng_state(&self) -> Option<Vec<u32>> {
+        Some(self.rng.state_words())
+    }
+
+    fn set_rng_state(&mut self, words: &[u32]) -> bool {
+        self.rng.restore_words(words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ising::builder::{pm_torus_workload, torus_workload};
+    use crate::rng::u32_to_unit_f32;
+    use crate::simd::portable::U32xN;
+
+    type M1 = M1MultiSpin<U32xN<8>>;
+
+    /// Independent per-spin oracle: replays the documented visit order
+    /// (phase, vertex, ascending layer within the active class) with the
+    /// same interlaced uniform stream, but decides each flip with the
+    /// per-spin A.2 rule `u < exp(-beta ΔE)` on freshly summed f32
+    /// neighbour fields — no bit packing, no bins, no thresholds.
+    fn oracle_run(
+        model: &QmcModel,
+        colors: &[u32],
+        s0: &[f32],
+        seed: u32,
+        exp: ExpMode,
+        n_sweeps: usize,
+        beta: f32,
+    ) -> (Vec<f32>, u64) {
+        let n = model.base.n;
+        let layers = model.n_layers;
+        let adj = model.base.adjacency();
+        let mut s = s0.to_vec();
+        let mut rng = Mt19937Simd::<U32xN<8>>::from_base_seed(seed);
+        let mut row = [0u32; 8];
+        let mut flips = 0u64;
+        for _ in 0..n_sweeps {
+            for phase in 0..2usize {
+                let mut cursor = 8; // discard leftovers, like the sweeper
+                for v in 0..n {
+                    for l in 0..layers {
+                        if (l + colors[v] as usize) % 2 != phase {
+                            continue;
+                        }
+                        if cursor == 8 {
+                            rng.next_into(&mut row);
+                            cursor = 0;
+                        }
+                        let u = u32_to_unit_f32(row[cursor]);
+                        cursor += 1;
+                        let mut hs = 0.0f32;
+                        for &(nb, j) in &adj[v] {
+                            hs += j * s[l * n + nb as usize];
+                        }
+                        let down = s[((l + layers - 1) % layers) * n + v];
+                        let upv = s[((l + 1) % layers) * n + v];
+                        let i = l * n + v;
+                        let de = 2.0 * s[i] * (hs + model.jtau * (down + upv));
+                        if u < exp.eval(-beta * de) {
+                            s[i] = -s[i];
+                            flips += 1;
+                        }
+                    }
+                }
+            }
+        }
+        (s, flips)
+    }
+
+    #[test]
+    fn m1_decisions_match_the_per_spin_oracle_bit_exactly() {
+        // Geometries covering every word path: one partial word (L=12),
+        // one exactly-full word (L=64), and multiple words with a short
+        // wrap-around tail (L=66 → rbits=2).
+        for layers in [12usize, 64, 66] {
+            let wl = pm_torus_workload(4, 4, layers, 5, 0.5);
+            for exp in [ExpMode::Fast, ExpMode::Exact] {
+                let mut m1 = M1::new(&wl.model, &wl.s0, 9, exp).unwrap();
+                let colors = m1.colors.clone();
+                let stats = m1.run(3, 0.7);
+                let (want_s, want_flips) = oracle_run(&wl.model, &colors, &wl.s0, 9, exp, 3, 0.7);
+                assert_eq!(m1.state(), want_s, "state diverged (L={layers}, {exp:?})");
+                assert_eq!(stats.flips, want_flips, "flip count (L={layers}, {exp:?})");
+                assert_eq!(stats.attempts, 3 * wl.model.n_spins() as u64);
+                assert!(stats.flips > 0, "vacuous run (L={layers})");
+            }
+        }
+    }
+
+    #[test]
+    fn builder_coloring_matches_the_internal_bfs_bipartition() {
+        let wl = pm_torus_workload(6, 4, 8, 2, 0.5);
+        let m1 = M1::new(&wl.model, &wl.s0, 1, ExpMode::Fast).unwrap();
+        assert_eq!(m1.colors, wl.colors);
+    }
+
+    #[test]
+    fn per_bin_thresholds_reproduce_per_spin_acceptance() {
+        let wl = pm_torus_workload(4, 4, 8, 1, 0.5);
+        let mut m1 = M1::new(&wl.model, &wl.s0, 1, ExpMode::Fast).unwrap();
+        let beta = 0.44f32;
+        let t = m1.thresholds(beta);
+        for us in 0..=4i32 {
+            for ut in 0..=2i32 {
+                let de = (8 - 4 * us) as f32 + wl.model.jtau * (4 - 4 * ut) as f32;
+                let p = ExpMode::Fast.eval(-beta * de);
+                let thr = t[(us | (ut << 3)) as usize];
+                let check = |r24: u32| {
+                    let per_spin = (r24 as f32 * (1.0 / 16_777_216.0)) < p;
+                    assert_eq!(r24 < thr, per_spin, "bin us={us} ut={ut} r24={r24}");
+                };
+                // Boundary scan plus a coarse sweep of the uniform range.
+                for d in 0..4u32 {
+                    check(thr.saturating_sub(d).min((1 << 24) - 1));
+                    check((thr + d).min((1 << 24) - 1));
+                }
+                for r24 in (0..(1u32 << 24)).step_by(65_537) {
+                    check(r24);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_bit_exactly() {
+        let wl = pm_torus_workload(4, 4, 66, 2, 0.5);
+        let mut a = M1::new(&wl.model, &wl.s0, 3, ExpMode::Fast).unwrap();
+        a.run(2, 0.9);
+        let snap_rng = a.rng_state().unwrap();
+        let snap_s = a.state();
+        a.run(3, 0.9);
+        let want = a.state();
+        let mut b = M1::new(&wl.model, &wl.s0, 99, ExpMode::Fast).unwrap();
+        b.set_state(&snap_s);
+        assert!(b.set_rng_state(&snap_rng));
+        b.run(3, 0.9);
+        assert_eq!(b.state(), want);
+        assert_eq!(a.energy(), b.energy());
+        assert!(!b.set_rng_state(&snap_rng[..snap_rng.len() - 1]));
+    }
+
+    #[test]
+    fn construction_rejects_non_pm_workloads() {
+        // Continuous couplings and nonzero fields (the default builder).
+        let continuous = torus_workload(4, 4, 8, 1, 0.3);
+        let err = M1::new(&continuous.model, &continuous.s0, 1, ExpMode::Fast).unwrap_err();
+        assert!(format!("{err:#}").contains("pm_torus_workload"), "{err:#}");
+
+        // A single continuous coupling on an otherwise ±J workload.
+        let mut mixed = pm_torus_workload(4, 4, 8, 1, 0.5);
+        mixed.model.base.edges[0].2 = 0.5;
+        let err = M1::new(&mixed.model, &mixed.s0, 1, ExpMode::Fast).unwrap_err();
+        assert!(format!("{err:#}").contains("couplings"), "{err:#}");
+
+        // Odd layer counts break the checkerboard tau wrap.
+        let odd = pm_torus_workload(4, 4, 9, 1, 0.5);
+        let err = M1::new(&odd.model, &odd.s0, 1, ExpMode::Fast).unwrap_err();
+        assert!(format!("{err:#}").contains("even layer count"), "{err:#}");
+    }
+
+    #[test]
+    fn stats_energy_and_state_are_consistent() {
+        let wl = pm_torus_workload(4, 4, 12, 4, 0.5);
+        let mut m1 = M1::new(&wl.model, &wl.s0, 7, ExpMode::Fast).unwrap();
+        assert_eq!(m1.kind(), SweepKind::M1MultiSpin);
+        assert_eq!(m1.width(), 64);
+        // Pack → unpack is the identity on ±1 states.
+        assert_eq!(m1.state(), wl.s0);
+        let stats = m1.run(5, 0.6);
+        let n_spins = wl.model.n_spins() as u64;
+        assert_eq!(stats.attempts, 5 * n_spins);
+        // One decision group per (phase, vertex, word) visit.
+        assert_eq!(stats.groups, 5 * 2 * (wl.model.base.n * m1.nw) as u64);
+        assert!(stats.flips > 0 && stats.flips <= stats.attempts);
+        assert!(stats.groups_with_flip <= stats.groups);
+        assert_eq!(m1.validate(), 0.0);
+        let e = m1.energy();
+        assert_eq!(e, wl.model.total_energy(&m1.state()));
+        // The padding bits above the last valid layer stay zero.
+        for v in 0..wl.model.base.n {
+            assert_eq!(m1.spins[(v + 1) * m1.nw - 1] >> m1.rbits, 0, "vertex {v}");
+        }
+    }
+}

@@ -15,6 +15,7 @@
 //! | A.4w8  | [`a4_full`]     | 8 | A.4 on the AVX2 octet substrate (portable fallback without AVX2) |
 //! | C.1    | [`c1_replica_batch`] | 4 | lane-per-replica batch: 4 tempering replicas in lockstep, per-lane β (§3.2's coalescing applied across the ensemble) |
 //! | C.1w8  | [`c1_replica_batch`] | 8 | the same batch on the AVX2 octet substrate |
+//! | M.1    | [`m1_multispin`] | 64 | multi-spin coding: 64 spins bit-packed per word, XOR-parity neighbour sums, per-bin integer acceptance thresholds |
 //! | B.1    | [`accel`]       | 32 | accelerator, naive gathered layout |
 //! | B.2    | [`accel`]       | 32 | accelerator, coalesced interlaced layout (§3.2) |
 //!
@@ -47,6 +48,7 @@ pub mod a4_full;
 pub mod accel;
 pub mod c1_replica_batch;
 pub mod interlaced;
+pub mod m1_multispin;
 
 use crate::ising::QmcModel;
 
@@ -94,6 +96,8 @@ pub enum SweepKind {
     C1ReplicaBatch,
     /// C.1 at 8 lanes (AVX2 when available, portable otherwise).
     C1ReplicaBatchW8,
+    /// M.1 — multi-spin coding: 64 spins per word (±J workloads only).
+    M1MultiSpin,
     /// B.1 — accelerator, naive layout.
     B1Accel,
     /// B.2 — accelerator, coalesced layout (§3.2).
@@ -120,12 +124,13 @@ impl std::str::FromStr for SweepKind {
                 Ok(SweepKind::C1ReplicaBatch)
             }
             "c1-replica-batch-w8" | "c1-w8" | "c.1w8" => Ok(SweepKind::C1ReplicaBatchW8),
+            "m1-multispin" | "m1" | "m.1" => Ok(SweepKind::M1MultiSpin),
             "b1-accel" | "b1" | "b.1" => Ok(SweepKind::B1Accel),
             "b2-accel" | "b2" | "b.2" => Ok(SweepKind::B2Accel),
             other => anyhow::bail!(
                 "unknown rung {other:?} (expected a1-original, a2-basic, a3-vec-rng, a4-full, \
-                 a3-vec-rng-w8, a4-full-w8, c1-replica-batch, c1-replica-batch-w8, b1-accel, \
-                 b2-accel)"
+                 a3-vec-rng-w8, a4-full-w8, c1-replica-batch, c1-replica-batch-w8, m1-multispin, \
+                 b1-accel, b2-accel)"
             ),
         }
     }
@@ -150,6 +155,7 @@ impl SweepKind {
             SweepKind::A4FullW8 => "a4-full-w8",
             SweepKind::C1ReplicaBatch => "c1-replica-batch",
             SweepKind::C1ReplicaBatchW8 => "c1-replica-batch-w8",
+            SweepKind::M1MultiSpin => "m1-multispin",
             SweepKind::B1Accel => "b1-accel",
             SweepKind::B2Accel => "b2-accel",
         }
@@ -165,6 +171,7 @@ impl SweepKind {
             SweepKind::A4FullW8 => "A.4w8",
             SweepKind::C1ReplicaBatch => "C.1",
             SweepKind::C1ReplicaBatchW8 => "C.1w8",
+            SweepKind::M1MultiSpin => "M.1",
             SweepKind::B1Accel => "B.1",
             SweepKind::B2Accel => "B.2",
         }
@@ -186,6 +193,7 @@ impl SweepKind {
             SweepKind::A1Original | SweepKind::A2Basic => 1,
             SweepKind::A3VecRng | SweepKind::A4Full | SweepKind::C1ReplicaBatch => 4,
             SweepKind::A3VecRngW8 | SweepKind::A4FullW8 | SweepKind::C1ReplicaBatchW8 => 8,
+            SweepKind::M1MultiSpin => 64,
             SweepKind::B1Accel | SweepKind::B2Accel => 32,
         }
     }
@@ -261,6 +269,10 @@ impl SweepKind {
                 crate::engine::builder::interlace_ok(n_layers, self.group_width())
             }
             SweepKind::C1ReplicaBatch | SweepKind::C1ReplicaBatchW8 => n_layers >= 2,
+            // The multi-spin checkerboard phases need an even layer count
+            // (the (layer + colour) parity classes must close under the
+            // tau wrap).
+            SweepKind::M1MultiSpin => n_layers >= 2 && n_layers % 2 == 0,
             _ => true,
         }
     }
@@ -374,20 +386,6 @@ pub trait Sweeper {
     }
 }
 
-/// Construct a sweeper with the rung's paper-default exponential mode.
-#[deprecated(
-    note = "use engine::EngineBuilder with a SamplerSpec (or try_make_sweeper for the \
-            legacy kinds)"
-)]
-pub fn make_sweeper(
-    kind: SweepKind,
-    model: &QmcModel,
-    s0: &[f32],
-    seed: u32,
-) -> crate::Result<Box<dyn Sweeper + Send>> {
-    try_make_sweeper(kind, model, s0, seed)
-}
-
 /// Fallible construction with the rung's paper-default exponential mode.
 ///
 /// A legacy-surface shim: lowers `kind` onto its
@@ -405,21 +403,6 @@ pub fn try_make_sweeper(
     seed: u32,
 ) -> crate::Result<Box<dyn Sweeper + Send>> {
     try_make_sweeper_with_exp(kind, model, s0, seed, kind.default_exp())
-}
-
-/// [`try_make_sweeper`] with an explicit exponential mode.
-#[deprecated(
-    note = "use engine::EngineBuilder::new(spec).exp(..) (or try_make_sweeper_with_exp for \
-            the legacy kinds)"
-)]
-pub fn make_sweeper_with_exp(
-    kind: SweepKind,
-    model: &QmcModel,
-    s0: &[f32],
-    seed: u32,
-    exp: ExpMode,
-) -> crate::Result<Box<dyn Sweeper + Send>> {
-    try_make_sweeper_with_exp(kind, model, s0, seed, exp)
 }
 
 /// Fallible construction with an explicit exponential mode (tests use
@@ -558,28 +541,6 @@ mod tests {
         assert!(w8.run(2, 0.8).attempts > 0);
     }
 
-    /// The deprecated constructors stay behaviourally identical to the
-    /// `try_` shims (the only sanctioned use of the deprecated API).
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_aliases_still_construct() {
-        let wl = torus_workload(4, 4, 8, 1, 0.3);
-        let mut a = make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
-        let mut b = try_make_sweeper(SweepKind::A4Full, &wl.model, &wl.s0, 3).unwrap();
-        a.run(5, 0.8);
-        b.run(5, 0.8);
-        assert_eq!(a.energy().to_bits(), b.energy().to_bits());
-        let mut c =
-            make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 3, ExpMode::Exact)
-                .unwrap();
-        let mut d =
-            try_make_sweeper_with_exp(SweepKind::A2Basic, &wl.model, &wl.s0, 3, ExpMode::Exact)
-                .unwrap();
-        c.run(5, 0.8);
-        d.run(5, 0.8);
-        assert_eq!(c.energy().to_bits(), d.energy().to_bits());
-    }
-
     #[test]
     fn kinds_have_canonical_spellings_that_reparse() {
         for kind in [
@@ -591,10 +552,25 @@ mod tests {
             SweepKind::A4FullW8,
             SweepKind::C1ReplicaBatch,
             SweepKind::C1ReplicaBatchW8,
+            SweepKind::M1MultiSpin,
             SweepKind::B1Accel,
             SweepKind::B2Accel,
         ] {
             assert_eq!(SweepKind::from_str(kind.cli_spelling()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn m1_kind_surface_is_consistent() {
+        assert_eq!(SweepKind::from_str("m1").unwrap(), SweepKind::M1MultiSpin);
+        assert_eq!(SweepKind::from_str("M.1").unwrap(), SweepKind::M1MultiSpin);
+        assert_eq!(SweepKind::M1MultiSpin.label(), "M.1");
+        assert_eq!(SweepKind::M1MultiSpin.group_width(), 64);
+        assert!(!SweepKind::M1MultiSpin.is_replica_batch());
+        // Even layer counts only (checkerboard parity), any depth >= 2.
+        assert!(SweepKind::M1MultiSpin.supports_layers(2));
+        assert!(SweepKind::M1MultiSpin.supports_layers(256));
+        assert!(!SweepKind::M1MultiSpin.supports_layers(9));
+        assert!(!SweepKind::M1MultiSpin.supports_layers(1));
     }
 }
