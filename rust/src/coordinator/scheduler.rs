@@ -90,10 +90,24 @@ impl SweepPool {
     /// Spawn `n_threads` long-lived workers (none when `n_threads <= 1`).
     pub fn new(n_threads: usize) -> Self {
         let threads = n_threads.max(1);
-        let counters = Arc::new(PoolCounters::default());
         if threads == 1 {
+            let counters = Arc::new(PoolCounters::default());
             return Self { tx: None, workers: Vec::new(), threads: 1, counters };
         }
+        Self::spawn_workers(threads)
+    }
+
+    /// Spawn `n_threads.max(1)` long-lived workers — *always* threaded,
+    /// even for one worker.  The service scheduler needs this: its
+    /// fire-and-forget dispatches must run off the scheduler thread so
+    /// admission and deadline polling stay live, which the inline regime
+    /// of [`SweepPool::new`] cannot provide.
+    pub fn new_threaded(n_threads: usize) -> Self {
+        Self::spawn_workers(n_threads.max(1))
+    }
+
+    fn spawn_workers(threads: usize) -> Self {
+        let counters = Arc::new(PoolCounters::default());
         let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..threads)
@@ -118,6 +132,32 @@ impl SweepPool {
             })
             .collect();
         Self { tx: Some(tx), workers, threads, counters }
+    }
+
+    /// Queue one owned task for asynchronous execution and return
+    /// immediately.  The task runs on a worker (or inline when the pool
+    /// has none), is execution-counted like batch tasks, and its panics
+    /// are contained by the worker loop — a fire-and-forget dispatch
+    /// must signal completion through its own channel (see the service
+    /// scheduler), typically via a drop guard so the signal survives a
+    /// panic inside the task.
+    pub fn spawn(&self, task: Box<dyn FnOnce() + Send + 'static>) {
+        let counters = Arc::clone(&self.counters);
+        let wrapped: Task = Box::new(move || {
+            let t0 = Instant::now();
+            let _ = catch_unwind(AssertUnwindSafe(task));
+            counters.record(t0.elapsed());
+        });
+        match &self.tx {
+            // Inline pool, or workers already shut down (drop race):
+            // run on the caller so the task is never silently lost.
+            None => wrapped(),
+            Some(tx) => {
+                if let Err(err) = tx.send(wrapped) {
+                    err.0();
+                }
+            }
+        }
     }
 
     /// Worker count this pool was built for (1 = inline execution).
@@ -531,6 +571,53 @@ mod tests {
         inline_pool.run_inline(|| {});
         inline_pool.run_batch(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>]);
         assert_eq!(inline_pool.stats().jobs, 2);
+    }
+
+    /// Fire-and-forget tasks all execute (panicking ones contained),
+    /// are execution-counted, and a `new_threaded(1)` pool really runs
+    /// them off the caller thread so the caller stays free.
+    #[test]
+    fn spawned_tasks_run_off_thread_and_are_counted() {
+        use std::sync::mpsc::channel;
+        let pool = SweepPool::new_threaded(1);
+        assert_eq!(pool.threads(), 1);
+        let (done_tx, done_rx) = channel::<usize>();
+        let caller = std::thread::current().id();
+        for i in 0..6 {
+            let done = done_tx.clone();
+            let pool_worker_differs = move || {
+                assert_ne!(
+                    std::thread::current().id(),
+                    caller,
+                    "new_threaded(1) must execute on a worker, not inline"
+                );
+                let _ = done.send(i);
+                if i == 2 {
+                    panic!("contained by the worker loop");
+                }
+            };
+            pool.spawn(Box::new(pool_worker_differs));
+        }
+        drop(done_tx);
+        let mut got: Vec<usize> = done_rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "every spawned task ran, panic included");
+        assert_eq!(pool.stats().jobs, 6, "spawned tasks are execution-counted");
+        drop(pool); // joins the worker; would hang if shutdown broke
+    }
+
+    /// `spawn` on an inline pool falls back to caller-thread execution
+    /// instead of dropping the task.
+    #[test]
+    fn spawn_on_inline_pool_runs_on_caller() {
+        let pool = SweepPool::new(1);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hit);
+        pool.spawn(Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats().jobs, 1);
     }
 
     #[test]

@@ -90,6 +90,9 @@ SUBCOMMANDS
                    [--listen HOST:PORT | stdin/stdout]
                    [--lanes 4|8|16] [--backend auto|sse2|avx2|avx512|portable]
                    [--threads N] [--flush-ms N] [--exact]
+                   [--max-queue N]  admission cap: over-cap jobs are
+                   refused with {"error":"overloaded","retry_after_ms":..}
+                   (default 1024, 0 = unbounded)
   submit           client for a serving instance: --addr HOST:PORT
                    [--file jobs.jsonl | stdin] [--stats] [--shutdown]
   job-run          run job lines directly on the scalar A.2 reference
@@ -445,16 +448,18 @@ fn main() -> Result<()> {
                 threads: args.usize_or("threads", 1)?,
                 flush_ms: args.u64_or("flush-ms", 25)?,
                 exp: if args.switch("exact") { ExpMode::Exact } else { ExpMode::Fast },
+                max_queue: args.usize_or("max-queue", 1024)?,
             };
             match args.str_opt("listen") {
                 Some(addr) => {
                     let listener = std::net::TcpListener::bind(addr)?;
                     eprintln!(
-                        "repro serve: listening on {} (W={}, threads={}, flush={}ms)",
+                        "repro serve: listening on {} (W={}, threads={}, flush={}ms, max-queue={})",
                         listener.local_addr()?,
                         cfg.lanes,
                         cfg.threads,
-                        cfg.flush_ms
+                        cfg.flush_ms,
+                        cfg.max_queue
                     );
                     service::server::serve_tcp(listener, &cfg)?;
                 }

@@ -43,32 +43,53 @@ pub struct PendingJob {
     pub seq: u64,
 }
 
-/// A unit of work the scheduler hands to the sweep pool.
-pub enum Dispatch {
-    /// `2..=W` shape-compatible jobs packed into one lane-batch (padded
+/// The shape of work inside a [`Dispatch`].
+pub enum DispatchWork {
+    /// `1..=W` shape-compatible jobs packed into one lane-batch (padded
     /// up to `W` discarded lanes at execution time when fewer than `W`).
     Batch(Vec<PendingJob>),
-    /// A job with no compatible peers — served by a scalar A.2 sweeper.
+    /// A job with no compatible peers — served by a scalar A.2 sweeper
+    /// (or the m1 path when the job pins it).
     Single(PendingJob),
 }
 
+/// A unit of work the scheduler hands to the sweep pool, annotated with
+/// *why* it left the queue — a full-width batch and a pinned single
+/// dispatch by design, while a deadline flush means the batcher gave up
+/// waiting for lane-mates.  The distinction feeds the `deadline_flushes`
+/// metric, the control signal for w8 → w4 bucket retargeting.
+pub struct Dispatch {
+    pub work: DispatchWork,
+    /// True only when the flush deadline (not width or a sampler pin)
+    /// forced this dispatch out of the queue.
+    pub deadline_forced: bool,
+}
+
 impl Dispatch {
+    pub fn batch(jobs: Vec<PendingJob>, deadline_forced: bool) -> Self {
+        Self { work: DispatchWork::Batch(jobs), deadline_forced }
+    }
+
+    pub fn single(job: PendingJob, deadline_forced: bool) -> Self {
+        Self { work: DispatchWork::Single(job), deadline_forced }
+    }
+
     /// Active (non-padded) lanes this dispatch occupies.
     pub fn occupancy(&self) -> usize {
-        match self {
-            Dispatch::Batch(jobs) => jobs.len(),
-            Dispatch::Single(_) => 1,
+        match &self.work {
+            DispatchWork::Batch(jobs) => jobs.len(),
+            DispatchWork::Single(_) => 1,
         }
     }
 
     pub fn is_batch(&self) -> bool {
-        matches!(self, Dispatch::Batch(_))
+        matches!(self.work, DispatchWork::Batch(_))
     }
 
     pub fn into_jobs(self) -> Vec<PendingJob> {
-        match self {
-            Dispatch::Batch(jobs) => jobs,
-            Dispatch::Single(job) => vec![job],
+        match self.work {
+            DispatchWork::Batch(jobs) => jobs,
+            DispatchWork::Single(job) => vec![job],
         }
     }
 }
@@ -168,22 +189,23 @@ impl Batcher {
         let width = self.width;
         let mut out = Vec::new();
         // Scalar- and multispin-pinned jobs dispatch immediately, ahead
-        // of any deadline — both are singles by construction.
-        out.extend(self.scalar_lane.drain(..).map(Dispatch::Single));
-        out.extend(self.multispin_lane.drain(..).map(Dispatch::Single));
+        // of any deadline — both are singles by construction, not
+        // deadline flushes.
+        out.extend(self.scalar_lane.drain(..).map(|job| Dispatch::single(job, false)));
+        out.extend(self.multispin_lane.drain(..).map(|job| Dispatch::single(job, false)));
         for queue in self.buckets.values_mut() {
             while queue.len() >= width {
-                out.push(Dispatch::Batch(queue.drain(..width).collect()));
+                out.push(Dispatch::batch(queue.drain(..width).collect(), false));
             }
             if !queue.is_empty() && flush(queue.front().unwrap().enqueued) {
                 // A lone job falls back to the scalar path — unless its
                 // sampler pins the C-rung, in which case it dispatches as
                 // a padded one-lane batch (the pin is a contract, not a
-                // hint).
+                // hint).  Either way the deadline, not width, forced it.
                 if queue.len() == 1 && !queue.front().unwrap().spec.pins_batch() {
-                    out.push(Dispatch::Single(queue.pop_front().unwrap()));
+                    out.push(Dispatch::single(queue.pop_front().unwrap(), true));
                 } else {
-                    out.push(Dispatch::Batch(queue.drain(..).collect()));
+                    out.push(Dispatch::batch(queue.drain(..).collect(), true));
                 }
             }
         }
@@ -226,6 +248,7 @@ mod tests {
         let ds = b.poll(now);
         assert_eq!(ds.len(), 2, "two full batches, one straggler stays");
         assert!(ds.iter().all(|d| d.occupancy() == 4 && d.is_batch()));
+        assert!(ds.iter().all(|d| !d.deadline_forced), "full batches are not deadline flushes");
         assert_eq!(b.queued(), 1);
         assert!(b.next_deadline().is_some());
     }
@@ -248,6 +271,7 @@ mod tests {
         let ds = b.poll(now);
         assert_eq!(ds.len(), 1, "only the pinned single is ready: {}", ds.len());
         assert!(!ds[0].is_batch());
+        assert!(!ds[0].deadline_forced, "a pinned single dispatches by design, not deadline");
         assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
     }
 
@@ -268,6 +292,7 @@ mod tests {
         let ds = b.poll(now);
         assert_eq!(ds.len(), 1, "only the m1 single is ready");
         assert!(!ds[0].is_batch());
+        assert!(!ds[0].deadline_forced, "an m1 single dispatches by design, not deadline");
         assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
     }
 
@@ -283,6 +308,7 @@ mod tests {
         assert_eq!(ds.len(), 1);
         assert!(ds[0].is_batch(), "a c1 pin must never degrade to the scalar path");
         assert_eq!(ds[0].occupancy(), 1, "one real lane, padding added at execution");
+        assert!(ds[0].deadline_forced, "the deadline, not width, flushed this batch");
     }
 
     #[test]

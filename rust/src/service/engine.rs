@@ -1,27 +1,31 @@
 //! The service engine: one scheduler thread driving admission →
 //! lane-batching → sweep-pool execution → per-job result lines.
 //!
-//! Submissions arrive on an mpsc channel (one sender clone per
-//! connection).  The scheduler sleeps until either a new submission or
-//! the earliest flush deadline, packs what is ready through the
-//! [`Batcher`], and executes the resulting dispatches on one persistent
-//! [`SweepPool`] — one pool task per dispatch, so independent batches of
-//! different shapes sweep in parallel while each batch keeps its lanes
-//! in lockstep.  Result lines stream back through each job's reply
-//! channel as its dispatch completes.
+//! Submissions arrive on an mpsc channel (one [`Submitter`] clone per
+//! connection), gated by a **bounded admission** check: each connection
+//! thread reserves a slot against the configured queue cap *before*
+//! sending, so overload is answered right there with a structured
+//! `{"error":"overloaded","retry_after_ms":...}` rejection instead of
+//! queueing unboundedly.  The scheduler sleeps until either a new
+//! submission or the earliest flush deadline, packs what is ready
+//! through the [`Batcher`], and hands each resulting dispatch to a
+//! persistent [`SweepPool`] as a **fire-and-forget task**: the scheduler
+//! never blocks on execution, so admission, deadline polling and
+//! metrics stay live while batches sweep.  `{"op":"run"}` jobs take the
+//! same path — the scheduler spawns them straight onto the pool, so a
+//! work-capped full run no longer stalls its connection's reader loop.
+//! Result lines stream back through each job's reply channel as its
+//! dispatch completes.
 //!
-//! Shutdown is by hang-up: dropping the [`EngineHandle`] (or calling
-//! [`EngineHandle::shutdown`]) closes the submission channel; the
-//! scheduler drains every queued job, answers it, and exits.
-//!
-//! Dispatch rounds are synchronous: the scheduler blocks in
-//! `SweepPool::run_batch` until the round's dispatches finish, and
-//! submissions arriving meanwhile wait in the channel.  The admission
-//! work cap (`JobSpec::validate`) bounds how long one round can take,
-//! so the flush deadline is a *time-to-dispatch* bound plus at most one
-//! round of execution — a fully asynchronous dispatcher is future work
-//! (see DESIGN.md).
+//! Every spawned task carries a drop-signalling completion guard wired
+//! to the scheduler's completion channel.  Shutdown is by hang-up:
+//! dropping the [`EngineHandle`] (or calling [`EngineHandle::shutdown`])
+//! closes the submission channel; the scheduler drains every queued job
+//! into final dispatches, then blocks on the completion channel until
+//! every in-flight task has settled — so shutdown answers every
+//! admitted job, panics included (the guard signals on drop).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -33,36 +37,150 @@ use crate::Result;
 
 use super::batcher::{Batcher, Dispatch};
 use super::executor::Executor;
-use super::job::{JobResult, JobSpec};
+use super::job::{JobResult, JobSpec, RunJob};
 use super::metrics::ServiceMetrics;
 use super::ServiceConfig;
 
-/// A job plus the channel its serialized result line goes back through.
+/// What a connection submits: a batchable sweep job or a checkpointable
+/// full run.  Both flow through the same admission gate and the same
+/// sweep pool.
+pub enum SubmitPayload {
+    Job(JobSpec),
+    Run(Box<RunJob>),
+}
+
+impl SubmitPayload {
+    /// The client-assigned id (for error correlation).
+    pub fn id(&self) -> &str {
+        match self {
+            SubmitPayload::Job(spec) => &spec.id,
+            SubmitPayload::Run(job) => &job.id,
+        }
+    }
+}
+
+/// A payload plus the channel its serialized result line goes back
+/// through.
 pub struct Submission {
-    pub spec: JobSpec,
+    pub payload: SubmitPayload,
     pub reply: Sender<String>,
+}
+
+/// Why a submission was refused at the admission gate.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitRejected {
+    /// The queue cap is hit; retry after the hinted backoff.
+    Overloaded { retry_after_ms: u64 },
+    /// The engine is shutting down; no more work is accepted.
+    ShuttingDown,
+}
+
+/// The bounded admission gate, shared by every [`Submitter`] clone.
+///
+/// The capacity check runs on the submitting connection's thread via a
+/// compare-exchange loop on the `jobs_in_system` gauge (admitted and
+/// not yet answered), so the cap is exact: an admitted job is never
+/// dropped, and an over-cap job is refused before it touches the
+/// scheduler.
+struct Admission {
+    /// Maximum jobs in the system (queued + executing); 0 = unbounded.
+    max_queue: usize,
+    /// Flush deadline in ms — the base unit of the retry hint.
+    flush_ms: u64,
+    /// Lane width — jobs the service retires per dispatch round.
+    lanes: usize,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Admission {
+    /// Reserve one in-system slot, or refuse with a retry hint.
+    fn try_admit(&self) -> std::result::Result<(), SubmitRejected> {
+        if self.max_queue == 0 {
+            self.metrics.jobs_in_system.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        }
+        let gauge = &self.metrics.jobs_in_system;
+        let mut depth = gauge.load(Ordering::Acquire);
+        loop {
+            if depth >= self.max_queue as u64 {
+                self.metrics.jobs_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitRejected::Overloaded {
+                    retry_after_ms: self.retry_after_ms(depth),
+                });
+            }
+            match gauge.compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(cur) => depth = cur,
+            }
+        }
+    }
+
+    /// Release one in-system slot (job answered, or admission raced a
+    /// shutdown).
+    fn settle(&self) {
+        self.metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Backoff hint: one flush deadline per expected dispatch round the
+    /// backlog needs to clear (`depth / lanes`, rounded up to ≥ 1),
+    /// capped at a minute so a deep queue cannot hint forever.
+    fn retry_after_ms(&self, depth: u64) -> u64 {
+        let rounds = 1 + depth / self.lanes.max(1) as u64;
+        (self.flush_ms.max(1)).saturating_mul(rounds).min(60_000)
+    }
+}
+
+/// A cloneable submission endpoint (one per connection): the admission
+/// gate plus the scheduler channel behind it.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<Submission>,
+    admission: Arc<Admission>,
+}
+
+impl Submitter {
+    /// Admit and enqueue one payload, or refuse with a structured
+    /// reason.  On success the result line (ok or error) will arrive on
+    /// `reply` exactly once.
+    pub fn submit(
+        &self,
+        payload: SubmitPayload,
+        reply: Sender<String>,
+    ) -> std::result::Result<(), SubmitRejected> {
+        self.admission.try_admit()?;
+        if self.tx.send(Submission { payload, reply }).is_err() {
+            self.admission.settle();
+            return Err(SubmitRejected::ShuttingDown);
+        }
+        Ok(())
+    }
 }
 
 /// Handle to a running engine: submit jobs, read metrics, shut down.
 pub struct EngineHandle {
-    tx: Option<Sender<Submission>>,
+    submitter: Option<Submitter>,
     pub metrics: Arc<ServiceMetrics>,
     join: Option<JoinHandle<()>>,
 }
 
 impl EngineHandle {
-    /// A cloneable submission channel (one per connection).
-    pub fn submitter(&self) -> Sender<Submission> {
-        self.tx.as_ref().expect("engine running").clone()
+    /// A cloneable submission endpoint (one per connection).
+    pub fn submitter(&self) -> Submitter {
+        self.submitter.as_ref().expect("engine running").clone()
     }
 
-    /// Close admission, drain every queued job, stop the scheduler.
+    /// Close admission, drain every in-flight job, stop the scheduler.
     pub fn shutdown(mut self) {
         self.close_and_join();
     }
 
     fn close_and_join(&mut self) {
-        self.tx.take();
+        self.submitter.take();
         if let Some(join) = self.join.take() {
             let _ = join.join();
         }
@@ -86,7 +204,29 @@ pub fn start(cfg: &ServiceConfig) -> Result<EngineHandle> {
     let join = std::thread::spawn(move || {
         scheduler_loop(rx, executor, threads, flush, metrics_for_thread);
     });
-    Ok(EngineHandle { tx: Some(tx), metrics, join: Some(join) })
+    let admission = Arc::new(Admission {
+        max_queue: cfg.max_queue,
+        flush_ms: cfg.flush_ms,
+        lanes: cfg.lanes,
+        metrics: Arc::clone(&metrics),
+    });
+    let submitter = Submitter { tx, admission };
+    Ok(EngineHandle { submitter: Some(submitter), metrics, join: Some(join) })
+}
+
+/// Signals dispatch completion to the scheduler on drop — so the signal
+/// survives a panicking task and shutdown can await every in-flight
+/// dispatch by draining the channel to hang-up.
+struct CompletionSignal {
+    done: Sender<()>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Drop for CompletionSignal {
+    fn drop(&mut self) {
+        self.metrics.dispatches_in_flight.fetch_sub(1, Ordering::Relaxed);
+        let _ = self.done.send(());
+    }
 }
 
 fn scheduler_loop(
@@ -96,9 +236,15 @@ fn scheduler_loop(
     flush: Duration,
     metrics: Arc<ServiceMetrics>,
 ) {
-    let pool = SweepPool::new(threads);
+    // Always-threaded, even for one worker: dispatches must run off the
+    // scheduler thread so admission and deadline polling stay live.
+    let pool = SweepPool::new_threaded(threads);
+    let (done_tx, done_rx) = channel::<()>();
     let mut batcher = Batcher::new(executor.width, flush);
     loop {
+        // Keep the completion buffer drained (the gauge lives in
+        // metrics; the channel exists for the shutdown barrier below).
+        while done_rx.try_recv().is_ok() {}
         // Sleep until the next admission or the earliest flush deadline.
         let msg = match batcher.next_deadline() {
             None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
@@ -113,76 +259,157 @@ fn scheduler_loop(
         };
         let disconnected = match msg {
             Ok(sub) => {
-                admit(&mut batcher, sub, &executor, &metrics);
+                admit(&mut batcher, sub, &pool, &executor, &metrics, &done_tx);
                 while let Ok(sub) = rx.try_recv() {
-                    admit(&mut batcher, sub, &executor, &metrics);
+                    admit(&mut batcher, sub, &pool, &executor, &metrics, &done_tx);
                 }
                 false
             }
             Err(RecvTimeoutError::Timeout) => false,
             Err(RecvTimeoutError::Disconnected) => true,
         };
-        let dispatches =
-            if disconnected { batcher.drain() } else { batcher.poll(Instant::now()) };
+        let dispatches = if disconnected { batcher.drain() } else { batcher.poll(Instant::now()) };
         metrics.set_queue_depth(batcher.queued());
-        execute(&pool, executor, dispatches, &metrics);
+        for dispatch in dispatches {
+            spawn_dispatch(&pool, executor, dispatch, &metrics, &done_tx);
+        }
         if disconnected {
             break;
         }
     }
+    // Drain-on-shutdown barrier: every spawned task holds a completion
+    // sender clone; once ours is gone, channel hang-up means every
+    // in-flight dispatch (including run jobs) has settled and answered.
+    drop(done_tx);
+    while done_rx.recv().is_ok() {}
 }
 
-fn admit(batcher: &mut Batcher, sub: Submission, executor: &Executor, metrics: &ServiceMetrics) {
-    // Line-level validation already ran in the connection thread; here
-    // the job's sampler (if any) is checked against the serving plan.
-    if let Err(e) = executor.admits(&sub.spec) {
-        metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-        let _ = sub.reply.send(JobResult::error_line(&sub.spec.id, &format!("{e:#}")));
-        return;
+fn admit(
+    batcher: &mut Batcher,
+    sub: Submission,
+    pool: &SweepPool,
+    executor: &Executor,
+    metrics: &Arc<ServiceMetrics>,
+    done: &Sender<()>,
+) {
+    match sub.payload {
+        SubmitPayload::Job(spec) => {
+            // Line-level validation already ran in the connection
+            // thread; here the job's sampler (if any) is checked against
+            // the serving plan.
+            if let Err(e) = executor.admits(&spec) {
+                metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+                metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+                let _ = sub.reply.send(JobResult::error_line(&spec.id, &format!("{e:#}")));
+                return;
+            }
+            metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            batcher.push(spec, Some(sub.reply), Instant::now());
+            metrics.set_queue_depth(batcher.queued());
+        }
+        SubmitPayload::Run(job) => {
+            // A checkpointable full run: spawned straight onto the pool
+            // (admission has already capped its work), so it neither
+            // stalls the scheduler nor its connection's reader loop.
+            metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            spawn_run(pool, *job, sub.reply, metrics, done);
+        }
     }
-    metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-    batcher.push(sub.spec, Some(sub.reply), Instant::now());
-    metrics.set_queue_depth(batcher.queued());
 }
 
-/// One pool task per dispatch; each job's result line streams back to
-/// its connection as soon as its dispatch completes.
-fn execute(
+/// Fire-and-forget one dispatch onto the pool; each job's result line
+/// streams back to its connection as soon as the dispatch completes.
+fn spawn_dispatch(
     pool: &SweepPool,
     executor: Executor,
-    dispatches: Vec<Dispatch>,
+    dispatch: Dispatch,
     metrics: &Arc<ServiceMetrics>,
+    done: &Sender<()>,
 ) {
-    if dispatches.is_empty() {
-        return;
-    }
+    let metrics = Arc::clone(metrics);
+    metrics.dispatches_in_flight.fetch_add(1, Ordering::Relaxed);
+    let signal = CompletionSignal { done: done.clone(), metrics: Arc::clone(&metrics) };
     let width = executor.width;
-    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dispatches
-        .into_iter()
-        .map(|dispatch| {
-            let metrics = Arc::clone(metrics);
-            Box::new(move || {
-                metrics.record_dispatch(dispatch.occupancy(), width, dispatch.is_batch());
-                for (job, outcome) in executor.run_dispatch(dispatch) {
-                    let line = match outcome {
-                        Ok(result) => {
-                            metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                            result.to_line()
-                        }
-                        Err(e) => {
-                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                            JobResult::error_line(&job.spec.id, &format!("{e:#}"))
-                        }
-                    };
-                    if let Some(reply) = &job.reply {
-                        // A gone connection just discards its results.
-                        let _ = reply.send(line);
+    pool.spawn(Box::new(move || {
+        let _signal = signal;
+        let total = dispatch.occupancy();
+        metrics.record_dispatch(total, width, dispatch.is_batch(), dispatch.deadline_forced);
+        let settled = std::cell::Cell::new(0u64);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            for (job, outcome) in executor.run_dispatch(dispatch) {
+                let line = match outcome {
+                    Ok(result) => {
+                        metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        result.to_line()
                     }
+                    Err(e) => {
+                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        JobResult::error_line(&job.spec.id, &format!("{e:#}"))
+                    }
+                };
+                if let Some(reply) = &job.reply {
+                    // A gone connection just discards its results.
+                    let _ = reply.send(line);
                 }
-            }) as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    pool.run_batch(tasks);
+                metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+                settled.set(settled.get() + 1);
+            }
+        }));
+        if outcome.is_err() {
+            // A panicking dispatch dropped its jobs' reply senders
+            // during unwind; settle their slots so admission capacity
+            // is never leaked.
+            let lost = total as u64 - settled.get();
+            metrics.jobs_failed.fetch_add(lost, Ordering::Relaxed);
+            metrics.jobs_in_system.fetch_sub(lost, Ordering::AcqRel);
+        }
+    }));
+}
+
+/// Fire-and-forget one `{"op":"run"}` job onto the pool.
+fn spawn_run(
+    pool: &SweepPool,
+    job: RunJob,
+    reply: Sender<String>,
+    metrics: &Arc<ServiceMetrics>,
+    done: &Sender<()>,
+) {
+    let metrics = Arc::clone(metrics);
+    metrics.dispatches_in_flight.fetch_add(1, Ordering::Relaxed);
+    let signal = CompletionSignal { done: done.clone(), metrics: Arc::clone(&metrics) };
+    pool.spawn(Box::new(move || {
+        let _signal = signal;
+        let id = job.id.clone();
+        let outcome = catch_unwind(AssertUnwindSafe(|| execute_run_job(job)));
+        let (line, ok) = outcome
+            .unwrap_or_else(|_| (JobResult::error_line(&id, "run job panicked"), false));
+        metrics.runs_executed.fetch_add(1, Ordering::Relaxed);
+        if ok {
+            metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = reply.send(line);
+        metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+    }));
+}
+
+/// Execute one checkpointable run job through the coordinator and
+/// serialize its outcome (one result line either way; the bool reports
+/// success for the completion counters).
+fn execute_run_job(job: RunJob) -> (String, bool) {
+    use crate::coordinator::{self, RunOptions};
+    let id = job.id.clone();
+    let opts = RunOptions { resume: job.checkpoint, ..RunOptions::default() };
+    let outcome = if job.want_checkpoint {
+        coordinator::run_spec_capturing(&job.spec, &opts).map(|(rep, ck)| (rep, Some(ck)))
+    } else {
+        coordinator::run_spec_with(&job.spec, &opts).map(|rep| (rep, None))
+    };
+    match outcome {
+        Ok((report, ck)) => (RunJob::result_line(&id, &report, ck.as_ref()), true),
+        Err(e) => (JobResult::error_line(&id, &format!("{e:#}")), false),
+    }
 }
 
 #[cfg(test)]
@@ -208,9 +435,11 @@ mod tests {
     }
 
     /// Submissions flow through batching + pool execution back to the
-    /// reply channel, one result line per job, drained on shutdown.
+    /// reply channel, one result line per job, drained on shutdown —
+    /// with a `{"op":"run"}` job riding the same pool.
     #[test]
     fn engine_answers_every_submission() {
+        use crate::coordinator::{RunConfig, RunSpec};
         // A generous flush deadline so slow CI cannot split the 4-job
         // bucket into a padded flush before all four have been admitted.
         let cfg = ServiceConfig {
@@ -225,31 +454,108 @@ mod tests {
         let (reply_tx, reply_rx) = channel::<String>();
         // 4 batchable jobs + 1 lone shallow job (deadline flush -> A.2).
         for i in 0..4 {
-            let sub =
-                Submission { spec: spec(&format!("b{i}"), 8, 40 + i), reply: reply_tx.clone() };
-            submitter.send(sub).unwrap();
+            submitter
+                .submit(SubmitPayload::Job(spec(&format!("b{i}"), 8, 40 + i)), reply_tx.clone())
+                .unwrap();
         }
         submitter
-            .send(Submission { spec: spec("lone", 2, 99), reply: reply_tx.clone() })
+            .submit(SubmitPayload::Job(spec("lone", 2, 99)), reply_tx.clone())
             .unwrap();
+        // One pool-executed run job (small: 2 models, 20 sweeps, A.2).
+        let run_spec = RunSpec::new(
+            RunConfig {
+                width: 4,
+                height: 4,
+                layers: 8,
+                n_models: 2,
+                sweeps: 20,
+                ..RunConfig::default()
+            },
+            crate::engine::SamplerSpec::rung(crate::engine::Rung::A2),
+        );
+        let run = RunJob {
+            id: "run0".to_string(),
+            spec: run_spec,
+            checkpoint: None,
+            want_checkpoint: false,
+        };
+        submitter.submit(SubmitPayload::Run(Box::new(run)), reply_tx.clone()).unwrap();
         drop(reply_tx);
         drop(submitter);
         let metrics = Arc::clone(&engine.metrics);
-        engine.shutdown(); // drains the queue before returning
+        engine.shutdown(); // drains in-flight work before returning
 
         let mut lines: Vec<String> = reply_rx.iter().collect();
         lines.sort();
-        assert_eq!(lines.len(), 5, "one result line per job: {lines:?}");
+        assert_eq!(lines.len(), 6, "one result line per job: {lines:?}");
         let mut kinds = Vec::new();
+        let mut run_lines = 0;
         for line in &lines {
+            // The run result is the one line carrying a run_report.
+            if line.contains("\"run_report\"") {
+                assert!(line.contains("\"status\":\"ok\""), "run job succeeded: {line}");
+                run_lines += 1;
+                continue;
+            }
             let r = JobResult::from_line(line).unwrap();
             kinds.push(r.kind.clone());
             assert!(r.state.is_some());
         }
+        assert_eq!(run_lines, 1, "exactly one run result: {lines:?}");
         assert!(kinds.iter().any(|k| k == "A.2"), "lone job fell back to scalar: {kinds:?}");
         assert!(kinds.iter().any(|k| k.starts_with("C.1")), "batch served by a C-rung");
-        assert_eq!(metrics.jobs_completed.load(Ordering::Relaxed), 5);
-        assert_eq!(metrics.jobs_submitted.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.jobs_completed.load(Ordering::Relaxed), 6);
+        assert_eq!(metrics.jobs_submitted.load(Ordering::Relaxed), 6);
+        assert_eq!(metrics.runs_executed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.jobs_in_system.load(Ordering::Relaxed), 0, "every slot settled");
+        assert_eq!(metrics.dispatches_in_flight.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.lane_fill_ratio(), 1.0, "the 4-job bucket filled its batch");
+    }
+
+    /// Bounded admission: over-cap submissions are refused with a
+    /// retry hint derived from queue depth and the flush deadline, no
+    /// admitted job is ever dropped, and shutdown drains the backlog.
+    #[test]
+    fn over_cap_submissions_are_refused_with_retry_hint() {
+        let cfg = ServiceConfig {
+            lanes: 4,
+            threads: 1,
+            flush_ms: 5_000, // far beyond the test: nothing dispatches
+            max_queue: 2,
+            exp: ExpMode::Fast,
+            ..ServiceConfig::default()
+        };
+        let engine = start(&cfg).unwrap();
+        let submitter = engine.submitter();
+        let (reply_tx, reply_rx) = channel::<String>();
+        // Two same-shape jobs fill the cap (the 4-lane bucket holds them
+        // until the distant flush deadline).
+        submitter.submit(SubmitPayload::Job(spec("a", 8, 1)), reply_tx.clone()).unwrap();
+        submitter.submit(SubmitPayload::Job(spec("b", 8, 2)), reply_tx.clone()).unwrap();
+        // The third must be refused — deterministically, because nothing
+        // can leave the queue before the 5 s flush.
+        let refused = submitter.submit(SubmitPayload::Job(spec("c", 8, 3)), reply_tx.clone());
+        match refused {
+            Err(SubmitRejected::Overloaded { retry_after_ms }) => {
+                assert!(
+                    retry_after_ms >= 5_000,
+                    "hint covers at least one flush deadline: {retry_after_ms}"
+                );
+                assert!(retry_after_ms <= 60_000, "hint is capped: {retry_after_ms}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let metrics = Arc::clone(&engine.metrics);
+        assert_eq!(metrics.jobs_overloaded.load(Ordering::Relaxed), 1);
+        drop(reply_tx);
+        drop(submitter);
+        engine.shutdown(); // drain answers both admitted jobs
+        let lines: Vec<String> = reply_rx.iter().collect();
+        assert_eq!(lines.len(), 2, "both admitted jobs answered: {lines:?}");
+        for line in &lines {
+            // from_line rejects any non-"ok" status line.
+            JobResult::from_line(line).unwrap();
+        }
+        assert_eq!(metrics.jobs_in_system.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,9 +1,9 @@
 //! Dispatch execution: turn a [`Dispatch`] into per-job results.
 //!
-//! A [`Dispatch::Batch`] builds one C-rung lane-batch (padded to `W`
+//! A [`DispatchWork::Batch`] builds one C-rung lane-batch (padded to `W`
 //! with discarded clone lanes, exactly like the tempering ensemble pads
 //! its tail batch) and sweeps all lanes in lockstep; a
-//! [`Dispatch::Single`] runs the scalar A.2 sweeper.  Either way every
+//! [`DispatchWork::Single`] runs the scalar A.2 sweeper.  Either way every
 //! job's trajectory is **bit-exact** to the standalone scalar A.2 run of
 //! the same job — [`Executor::run_single`] *is* that reference run, and
 //! the C-rung differential suite guarantees each lane reproduces it.
@@ -22,7 +22,7 @@ use crate::ising::QmcModel;
 use crate::sweep::{ExpMode, SweepStats};
 use crate::Result;
 
-use super::batcher::{Dispatch, PendingJob};
+use super::batcher::{Dispatch, DispatchWork, PendingJob};
 use super::job::{JobResult, JobSpec, PlanEcho};
 
 /// Executes dispatches on the current thread (the engine runs one
@@ -102,12 +102,12 @@ impl Executor {
     /// Run one dispatch to completion, returning each job with its
     /// outcome (jobs are handed back so the caller can route replies).
     pub fn run_dispatch(&self, dispatch: Dispatch) -> Vec<(PendingJob, Result<JobResult>)> {
-        match dispatch {
-            Dispatch::Single(job) => {
+        match dispatch.work {
+            DispatchWork::Single(job) => {
                 let outcome = self.run_single(&job.spec);
                 vec![(job, outcome)]
             }
-            Dispatch::Batch(jobs) => self.run_batch(jobs),
+            DispatchWork::Batch(jobs) => self.run_batch(jobs),
         }
     }
 

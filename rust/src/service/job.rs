@@ -297,9 +297,11 @@ impl JobSpec {
 /// {"op":"run","id":"r2","run_spec":{...},"checkpoint":{...},"want_checkpoint":true}
 /// ```
 ///
-/// Run jobs execute synchronously on the connection thread (they are
-/// whole parallel-tempering runs, not lane-batchable sweep requests);
-/// the same per-request work cap as plain jobs applies.
+/// Run jobs are admitted like any other job and execute as
+/// fire-and-forget tasks on the engine's sweep pool (they are whole
+/// parallel-tempering runs, not lane-batchable sweep requests), so a
+/// long run never stalls its connection's reader loop; the same
+/// per-request work cap as plain jobs applies.
 #[derive(Clone, Debug)]
 pub struct RunJob {
     pub id: String,
@@ -400,7 +402,7 @@ impl RunJob {
 /// A parsed request line.
 pub enum Request {
     Job(JobSpec),
-    /// A checkpointable full-run job (executed on the connection thread).
+    /// A checkpointable full-run job (executed on the sweep pool).
     Run(Box<RunJob>),
     Stats,
     Shutdown,
@@ -533,6 +535,20 @@ impl JobResult {
             ("id", json::str_v(id)),
             ("status", json::str_v("error")),
             ("error", json::str_v(msg)),
+        ])
+        .to_string()
+    }
+
+    /// The structured backpressure rejection: the admission queue is at
+    /// its cap, retry after the hinted backoff (derived from queue
+    /// depth and the flush deadline).
+    pub fn overloaded_line(id: &str, retry_after_ms: u64) -> String {
+        json::obj(vec![
+            ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+            ("id", json::str_v(id)),
+            ("status", json::str_v("error")),
+            ("error", json::str_v("overloaded")),
+            ("retry_after_ms", json::num(retry_after_ms as f64)),
         ])
         .to_string()
     }

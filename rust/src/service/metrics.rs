@@ -36,20 +36,37 @@ pub struct ServiceMetrics {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub max_queue_depth: AtomicU64,
+    /// `{"op":"run"}` jobs executed to completion (ok or error).
+    pub runs_executed: AtomicU64,
+    /// Jobs refused at admission because the queue cap was hit.
+    pub jobs_overloaded: AtomicU64,
+    /// Jobs admitted but not yet answered (queued + executing) — the
+    /// gauge the admission cap compares against.
+    pub jobs_in_system: AtomicU64,
+    /// Dispatch rounds handed to the pool and not yet completed.
+    pub dispatches_in_flight: AtomicU64,
 }
 
 impl ServiceMetrics {
     /// Account one dispatch of `occupancy` jobs at lane width `width`.
-    pub fn record_dispatch(&self, occupancy: usize, width: usize, is_batch: bool) {
+    /// `deadline_forced` is the batcher's verdict on *why* the dispatch
+    /// left the queue — a2-/m1-pinned singles and full-width batches
+    /// dispatch by design and must not count as deadline flushes.
+    pub fn record_dispatch(
+        &self,
+        occupancy: usize,
+        width: usize,
+        is_batch: bool,
+        deadline_forced: bool,
+    ) {
         if is_batch {
             self.batches_dispatched.fetch_add(1, Ordering::Relaxed);
             self.lanes_occupied.fetch_add(occupancy as u64, Ordering::Relaxed);
             self.lanes_padded.fetch_add((width - occupancy) as u64, Ordering::Relaxed);
-            if occupancy < width {
-                self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
-            }
         } else {
             self.singles_dispatched.fetch_add(1, Ordering::Relaxed);
+        }
+        if deadline_forced {
             self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -90,6 +107,12 @@ impl ServiceMetrics {
             ("lane_fill_ratio", json::num(self.lane_fill_ratio())),
             ("queue_depth", get(&self.queue_depth)),
             ("max_queue_depth", get(&self.max_queue_depth)),
+            // Appended fields (protocol back-compat: readers of the
+            // original stats line ignore unknown trailing keys).
+            ("runs_executed", get(&self.runs_executed)),
+            ("jobs_overloaded", get(&self.jobs_overloaded)),
+            ("jobs_in_system", get(&self.jobs_in_system)),
+            ("dispatches_in_flight", get(&self.dispatches_in_flight)),
         ])
         .to_string()
     }
@@ -104,26 +127,44 @@ mod tests {
     fn lane_fill_tracks_dispatches() {
         let m = ServiceMetrics::default();
         assert_eq!(m.lane_fill_ratio(), 1.0, "vacuously full before any batch");
-        m.record_dispatch(4, 4, true); // full batch
+        m.record_dispatch(4, 4, true, false); // full batch
         assert_eq!(m.lane_fill_ratio(), 1.0);
-        m.record_dispatch(2, 4, true); // padded flush
+        m.record_dispatch(2, 4, true, true); // padded deadline flush
         assert!((m.lane_fill_ratio() - 0.75).abs() < 1e-12);
-        m.record_dispatch(1, 4, false); // scalar fallback: no lanes counted
+        m.record_dispatch(1, 4, false, true); // lone-job fallback: no lanes counted
         assert!((m.lane_fill_ratio() - 0.75).abs() < 1e-12);
         assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 2);
         assert_eq!(m.singles_dispatched.load(Ordering::Relaxed), 1);
     }
 
+    /// Regression: an a2-/m1-pinned single dispatches immediately by
+    /// design — it must not inflate `deadline_flushes`, the control
+    /// signal for w8 → w4 bucket retargeting.
+    #[test]
+    fn pinned_singles_are_not_deadline_flushes() {
+        let m = ServiceMetrics::default();
+        m.record_dispatch(1, 4, false, false); // pinned single
+        m.record_dispatch(1, 4, true, true); // c1-pinned lone-job flush
+        assert_eq!(m.singles_dispatched.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 1);
+    }
+
     #[test]
     fn snapshot_is_parseable_json() {
         let m = ServiceMetrics::default();
-        m.record_dispatch(4, 4, true);
+        m.record_dispatch(4, 4, true, false);
         m.set_queue_depth(7);
         m.set_queue_depth(3);
+        m.runs_executed.fetch_add(2, Ordering::Relaxed);
+        m.jobs_overloaded.fetch_add(1, Ordering::Relaxed);
         let v = Value::parse(&m.snapshot_json()).unwrap();
         assert_eq!(v.get("op").unwrap().as_str().unwrap(), "stats");
         assert_eq!(v.get("queue_depth").unwrap().as_usize().unwrap(), 3);
         assert_eq!(v.get("max_queue_depth").unwrap().as_usize().unwrap(), 7);
         assert_eq!(v.get("lane_fill_ratio").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.get("runs_executed").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("jobs_overloaded").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(v.get("dispatches_in_flight").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -23,6 +23,11 @@
 //!   on a deadline — ≥ 2 as a padded batch, a lone job on a scalar A.2
 //!   sweeper — so time-to-dispatch is bounded and every shape is
 //!   servable (admission caps per-job work, bounding the rounds too).
+//! * Dispatch rounds are fire-and-forget pool tasks: the scheduler
+//!   never blocks on execution, and admission is **bounded**
+//!   (`--max-queue`) — over-cap submissions get a structured
+//!   `{"error":"overloaded","retry_after_ms":...}` rejection instead of
+//!   unbounded queueing.
 //! * Results stream back per job as batches complete, **bit-exact** to a
 //!   standalone scalar A.2 run with the same seed (the C-rung
 //!   differential contract).
@@ -64,6 +69,11 @@ pub struct ServiceConfig {
     /// Exponential mode (`Fast` by default — bit-exact to the scalar
     /// A.2 reference either way).
     pub exp: ExpMode,
+    /// Admission cap: maximum jobs in the system (queued + executing)
+    /// before new submissions are refused with a structured
+    /// `{"error":"overloaded","retry_after_ms":...}` line (0 =
+    /// unbounded).
+    pub max_queue: usize,
 }
 
 impl Default for ServiceConfig {
@@ -74,6 +84,7 @@ impl Default for ServiceConfig {
             threads: 1,
             flush_ms: 25,
             exp: ExpMode::Fast,
+            max_queue: 1024,
         }
     }
 }

@@ -8,6 +8,11 @@
 //! write side, the server finishes answering that connection's jobs and
 //! then closes — so "read until EOF" collects exactly the results.
 //!
+//! Admission is bounded: when the engine's queue cap is hit, the job's
+//! result line is an immediate structured rejection
+//! (`{"error":"overloaded","retry_after_ms":...}`) — clients back off
+//! and retry rather than queue unboundedly.
+//!
 //! `{"op":"shutdown"}` stops accepting, waits for open connections,
 //! drains the queue and returns from [`serve_tcp`].
 
@@ -22,8 +27,8 @@ use std::time::Duration;
 use crate::util::json::Value;
 use crate::Result;
 
-use super::engine::{self, Submission};
-use super::job::{parse_request, JobResult, Request, RunJob};
+use super::engine::{self, SubmitPayload, SubmitRejected, Submitter};
+use super::job::{parse_request, JobResult, Request};
 use super::metrics::ServiceMetrics;
 use super::ServiceConfig;
 
@@ -37,6 +42,10 @@ pub fn serve_tcp(listener: TcpListener, cfg: &ServiceConfig) -> Result<()> {
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // Reap before tracking the new handle, so sustained
+                // connection arrival (which may never hit the idle
+                // branch below) cannot grow the ledger without bound.
+                connections.retain(|conn| !conn.is_finished());
                 let submitter = engine.submitter();
                 let metrics = Arc::clone(&engine.metrics);
                 let flag = Arc::clone(&shutdown);
@@ -106,7 +115,7 @@ pub fn serve_stdin(cfg: &ServiceConfig) -> Result<()> {
 
 fn handle_conn(
     stream: TcpStream,
-    submitter: Sender<Submission>,
+    submitter: Submitter,
     metrics: Arc<ServiceMetrics>,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -163,24 +172,21 @@ fn handle_conn(
 
 fn handle_line(
     line: &str,
-    submitter: &Sender<Submission>,
+    submitter: &Submitter,
     line_tx: &Sender<String>,
     metrics: &ServiceMetrics,
     shutdown: &AtomicBool,
 ) {
     match parse_request(line) {
         Ok(Request::Job(spec)) => {
-            let sub = Submission { spec, reply: line_tx.clone() };
-            if let Err(e) = submitter.send(sub) {
-                let _ = line_tx.send(JobResult::error_line(&e.0.spec.id, "service shutting down"));
-            }
+            submit(submitter, SubmitPayload::Job(spec), line_tx);
         }
         Ok(Request::Run(job)) => {
-            // A checkpointable full run: executed synchronously on this
-            // connection's thread through the coordinator (admission has
-            // already capped its work), optionally resuming from the
-            // inline checkpoint and optionally returning the final one.
-            let _ = line_tx.send(execute_run_job(*job));
+            // A checkpointable full run: admitted like any other job and
+            // executed on the engine's sweep pool (admission has already
+            // capped its work), so this reader loop stays responsive —
+            // an interleaved {"op":"stats"} answers while the run sweeps.
+            submit(submitter, SubmitPayload::Run(job), line_tx);
         }
         Ok(Request::Stats) => {
             let _ = line_tx.send(metrics.snapshot_json());
@@ -209,20 +215,18 @@ fn handle_line(
     }
 }
 
-/// Execute one checkpointable run job through the coordinator and
-/// serialize its outcome (one result line either way).
-fn execute_run_job(job: RunJob) -> String {
-    use crate::coordinator::{self, RunOptions};
-    let id = job.id.clone();
-    let opts = RunOptions { resume: job.checkpoint, ..RunOptions::default() };
-    let outcome = if job.want_checkpoint {
-        coordinator::run_spec_capturing(&job.spec, &opts).map(|(rep, ck)| (rep, Some(ck)))
-    } else {
-        coordinator::run_spec_with(&job.spec, &opts).map(|rep| (rep, None))
-    };
-    match outcome {
-        Ok((report, ck)) => RunJob::result_line(&id, &report, ck.as_ref()),
-        Err(e) => JobResult::error_line(&id, &format!("{e:#}")),
+/// Submit one payload through the bounded admission gate, answering a
+/// refusal with the structured rejection line right away.
+fn submit(submitter: &Submitter, payload: SubmitPayload, line_tx: &Sender<String>) {
+    let id = payload.id().to_string();
+    match submitter.submit(payload, line_tx.clone()) {
+        Ok(()) => {}
+        Err(SubmitRejected::Overloaded { retry_after_ms }) => {
+            let _ = line_tx.send(JobResult::overloaded_line(&id, retry_after_ms));
+        }
+        Err(SubmitRejected::ShuttingDown) => {
+            let _ = line_tx.send(JobResult::error_line(&id, "service shutting down"));
+        }
     }
 }
 

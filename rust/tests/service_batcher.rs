@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use vectorising::service::batcher::{Batcher, Dispatch};
+use vectorising::service::batcher::{Batcher, Dispatch, DispatchWork};
 use vectorising::service::executor::Executor;
 use vectorising::service::job::{JobSpec, ShapeKey};
 use vectorising::sweep::ExpMode;
@@ -63,12 +63,12 @@ fn batches_never_mix_shapes() {
     let total: usize = dispatches.iter().map(|d| d.occupancy()).sum();
     assert_eq!(total, 120, "every job dispatched exactly once");
     for d in &dispatches {
-        let jobs = match d {
-            Dispatch::Batch(jobs) => {
+        let jobs = match &d.work {
+            DispatchWork::Batch(jobs) => {
                 assert!(jobs.len() >= 2 && jobs.len() <= 4, "batch arity");
                 jobs
             }
-            Dispatch::Single(_) => continue,
+            DispatchWork::Single(_) => continue,
         };
         let shape0: ShapeKey = jobs[0].spec.shape();
         assert!(
@@ -117,7 +117,11 @@ fn deadline_flush_fires_on_a_lone_job_and_never_early() {
     );
     let ds = b.poll(t0 + deadline);
     assert_eq!(ds.len(), 1);
-    assert!(matches!(ds[0], Dispatch::Single(_)), "a lone job flushes to the scalar fallback");
+    assert!(
+        matches!(ds[0].work, DispatchWork::Single(_)),
+        "a lone job flushes to the scalar fallback"
+    );
+    assert!(ds[0].deadline_forced, "the deadline, not a pin, forced this single out");
     assert_eq!(b.queued(), 0);
     assert_eq!(b.next_deadline(), None);
 }
@@ -133,10 +137,11 @@ fn deadline_flushes_two_stragglers_as_a_padded_batch() {
     // The *oldest* job's age controls the flush, not the newest's.
     let ds = b.poll(t0 + deadline);
     assert_eq!(ds.len(), 1);
-    match &ds[0] {
-        Dispatch::Batch(jobs) => assert_eq!(jobs.len(), 2, "both stragglers share one batch"),
-        Dispatch::Single(_) => panic!(">= 2 stragglers must go out as a padded batch"),
+    match &ds[0].work {
+        DispatchWork::Batch(jobs) => assert_eq!(jobs.len(), 2, "both stragglers share one batch"),
+        DispatchWork::Single(_) => panic!(">= 2 stragglers must go out as a padded batch"),
     }
+    assert!(ds[0].deadline_forced, "a padded flush counts as a deadline flush");
 }
 
 /// Padded lanes never leak: a 2-job dispatch at W=4 answers exactly its
@@ -186,10 +191,10 @@ fn batched_energy_traces_match_scalar_reference() {
     a.trace_every = 8;
     let mut b = spec("tb", (4, 4, 8), 25, 32);
     b.trace_every = 10;
-    let served = exec.run_dispatch(Dispatch::Batch(vec![
-        pending(a.clone()),
-        pending(b.clone()),
-    ]));
+    let served = exec.run_dispatch(Dispatch::batch(
+        vec![pending(a.clone()), pending(b.clone())],
+        true,
+    ));
     for (job, outcome) in served {
         let got = outcome.unwrap();
         let reference = exec.run_single(&job.spec).unwrap();

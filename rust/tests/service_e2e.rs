@@ -209,6 +209,130 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
     server_thread.join().unwrap();
 }
 
+/// The serving hot path never blocks on a run: a long `{"op":"run"}`
+/// job executes on the sweep pool, so an interleaved `{"op":"stats"}`
+/// on the *same connection* is answered while the run sweeps — and the
+/// pool-executed run stays bit-exact to the coordinator oracle.
+#[test]
+fn long_run_does_not_block_its_connection() {
+    let cfg = ServiceConfig { lanes: 4, threads: 1, flush_ms: 50, ..ServiceConfig::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+
+    // ~98M spin-updates (16×16×32 × 4 replicas × 3000 sweeps): well
+    // under the admission work cap, but hundreds of milliseconds of
+    // sweeping — plenty of time for the interleaved stats round-trip.
+    let run_cfg = RunConfig {
+        width: 16,
+        height: 16,
+        layers: 32,
+        n_models: 4,
+        sweeps: 3000,
+        sweeps_per_round: 1000,
+        ..RunConfig::default()
+    };
+    let rs = RunSpec::new(run_cfg, SamplerSpec::rung(Rung::C1));
+    let job = RunJob { id: "long".into(), spec: rs.clone(), checkpoint: None, want_checkpoint: false };
+    let served = roundtrip(addr, &[job.to_line(), "{\"op\":\"stats\"}".to_string()]);
+    assert_eq!(served.len(), 2, "{served:?}");
+
+    // The stats reply must arrive FIRST: the reader loop submitted the
+    // run and moved on instead of executing it in place.
+    let first = Value::parse(&served[0]).unwrap();
+    assert_eq!(
+        first.get("op").unwrap().as_str().unwrap(),
+        "stats",
+        "stats must be answered while the run sweeps: {served:?}"
+    );
+    assert!(
+        first.get("jobs_in_system").unwrap().as_usize().unwrap() >= 1,
+        "the in-flight run is visible to stats: {}",
+        served[0]
+    );
+    let run_line = Value::parse(&served[1]).unwrap();
+    assert_eq!(run_line.get("status").unwrap().as_str().unwrap(), "ok", "{served:?}");
+    let report = RunReport::from_value(run_line.get("run_report").unwrap()).unwrap();
+
+    // Pool-executed rounds keep the run bit-exact to the coordinator.
+    let local = coordinator::run_spec_with(&rs, &RunOptions::default()).unwrap();
+    for (i, (a, b)) in local.energies.iter().zip(&report.energies).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "replica {i}: pool-executed run diverged");
+    }
+
+    let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    assert_eq!(v.get("runs_executed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("jobs_submitted").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("dispatches_in_flight").unwrap().as_usize().unwrap(), 0);
+
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
+
+/// Bounded admission over the wire: a burst past `max_queue` gets
+/// structured `{"error":"overloaded","retry_after_ms":...}` rejections,
+/// while every admitted job completes bit-exact to the scalar oracle.
+#[test]
+fn overload_returns_structured_backpressure_and_completes_admitted_jobs() {
+    let cfg = ServiceConfig {
+        lanes: 4,
+        threads: 1,
+        flush_ms: 400,
+        max_queue: 2,
+        ..ServiceConfig::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+    let reference = Executor::new(4, ExpMode::Fast).unwrap();
+
+    // Four same-shape jobs in one burst: the first two fill the cap and
+    // hold it until the 400 ms flush; the rest are refused immediately.
+    let burst: Vec<JobSpec> =
+        (0..4).map(|i| spec(&format!("q{i}"), (4, 4, 8), 500 + i as u32)).collect();
+    let served = roundtrip(addr, &burst.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_eq!(served.len(), 4, "every request answered, admitted or not: {served:?}");
+    let mut ok_lines = Vec::new();
+    let mut rejected = 0;
+    for line in &served {
+        let v = Value::parse(line).unwrap();
+        if v.get("status").unwrap().as_str().unwrap() == "ok" {
+            ok_lines.push(line.clone());
+            continue;
+        }
+        rejected += 1;
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded", "{line}");
+        let retry = v.get("retry_after_ms").unwrap().as_usize().unwrap();
+        assert!(
+            (400..=60_000).contains(&retry),
+            "retry hint covers at least one flush deadline: {retry}"
+        );
+    }
+    assert_eq!(rejected, 2, "the burst overflows the cap by exactly two: {served:?}");
+    // The two admitted jobs were never dropped — and stayed bit-exact.
+    let admitted: Vec<JobSpec> = burst
+        .iter()
+        .filter(|s| ok_lines.iter().any(|l| l.contains(&format!("\"id\":\"{}\"", s.id))))
+        .cloned()
+        .collect();
+    assert_eq!(admitted.len(), 2);
+    assert_bit_exact(&ok_lines, &reference, &admitted);
+
+    let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    assert_eq!(v.get("jobs_overloaded").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
+
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
+
 /// The Run API over the wire: an `{"op":"run"}` job executes a whole
 /// spec-driven tempering run server-side, returns its RunReport (plans
 /// echo included) plus an inline schema-v2 checkpoint, and a second run
