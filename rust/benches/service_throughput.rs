@@ -34,6 +34,7 @@ fn spec(id: usize, shape: (usize, usize, usize)) -> JobSpec {
         seed: 100 + id as u32,
         trace_every: 0,
         want_state: false,
+        want_timing: false,
         sampler: None,
     }
 }

@@ -249,6 +249,37 @@ impl RunSpec {
     }
 }
 
+/// p50/p90/p99 of a latency distribution in µs — per-round sweep
+/// timings in [`RungTiming`], echoed into `BENCH_<rung>.json` so the
+/// bench trajectory records tail behaviour, not just the mean.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+impl LatencyPercentiles {
+    pub fn from_snapshot(snap: &crate::obs::HistogramSnapshot) -> Self {
+        let (p50_us, p90_us, p99_us) = snap.percentiles_us();
+        Self { p50_us, p90_us, p99_us }
+    }
+
+    /// Parse the optional `round_p*_us` triple off an object — all
+    /// three or none (a partial triple is a malformed artifact).
+    pub fn from_round_fields(v: &Value) -> Result<Option<Self>> {
+        match (v.opt("round_p50_us"), v.opt("round_p90_us"), v.opt("round_p99_us")) {
+            (Some(a), Some(b), Some(c)) => Ok(Some(Self {
+                p50_us: a.as_f64()?,
+                p90_us: b.as_f64()?,
+                p99_us: c.as_f64()?,
+            })),
+            (None, None, None) => Ok(None),
+            _ => anyhow::bail!("round_p50_us/round_p90_us/round_p99_us must appear together"),
+        }
+    }
+}
+
 /// Per-rung timing result exchanged between build profiles (the opt0
 /// binary prints this as JSON; the harness parses it back).
 #[derive(Clone, Debug)]
@@ -261,6 +292,10 @@ pub struct RungTiming {
     /// `true` when produced by an `opt-level=0` build (the paper's
     /// "compiler optimization disabled" rows).
     pub opt_disabled: bool,
+    /// Wall-time percentiles over the timed *rounds* of
+    /// `time_sweeps_spec` (`None` in legacy artifacts and single-round
+    /// runs, where a distribution is meaningless).
+    pub round_latency: Option<LatencyPercentiles>,
 }
 
 impl RungTiming {
@@ -278,19 +313,34 @@ impl RungTiming {
             sweeps,
             updates_per_sec: updates as f64 / seconds.max(1e-12),
             opt_disabled: opt_level_is_zero(),
+            round_latency: None,
         }
     }
 
+    /// Attach per-round latency percentiles from a timing histogram
+    /// (no-op on an empty snapshot — a distribution needs samples).
+    pub fn with_round_latency(mut self, snap: &crate::obs::HistogramSnapshot) -> Self {
+        if snap.count() > 0 {
+            self.round_latency = Some(LatencyPercentiles::from_snapshot(snap));
+        }
+        self
+    }
+
     pub fn to_json(&self) -> String {
-        json::obj(vec![
+        let mut fields = vec![
             ("kind", json::str_v(&self.kind)),
             ("threads", json::num(self.threads as f64)),
             ("seconds", json::num(self.seconds)),
             ("sweeps", json::num(self.sweeps as f64)),
             ("updates_per_sec", json::num(self.updates_per_sec)),
             ("opt_disabled", Value::Bool(self.opt_disabled)),
-        ])
-        .to_string()
+        ];
+        if let Some(p) = self.round_latency {
+            fields.push(("round_p50_us", json::num(p.p50_us)));
+            fields.push(("round_p90_us", json::num(p.p90_us)));
+            fields.push(("round_p99_us", json::num(p.p99_us)));
+        }
+        json::obj(fields).to_string()
     }
 
     pub fn from_json(text: &str) -> Result<Self> {
@@ -302,6 +352,7 @@ impl RungTiming {
             sweeps: v.get("sweeps")?.as_usize()?,
             updates_per_sec: v.get("updates_per_sec")?.as_f64()?,
             opt_disabled: v.get("opt_disabled")?.as_bool()?,
+            round_latency: LatencyPercentiles::from_round_fields(&v)?,
         })
     }
 }

@@ -24,7 +24,7 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use checkpoint::{Checkpoint, CHECKPOINT_SCHEMA_VERSION};
-pub use config::{RunConfig, RunSpec, RungTiming, RUN_SPEC_VERSION};
+pub use config::{LatencyPercentiles, RunConfig, RunSpec, RungTiming, RUN_SPEC_VERSION};
 pub use metrics::{RunReport, Timer};
 pub use scheduler::{PoolStats, SweepPool};
 
@@ -412,14 +412,28 @@ pub fn run_batched(cfg: &RunConfig, spec: impl Into<SamplerSpec>) -> Result<RunR
 /// bookkeeping is excluded like the paper excludes its multi-threading
 /// machinery from the per-sweep analysis).
 pub fn time_sweeps_spec(rs: &RunSpec) -> Result<RungTiming> {
+    use crate::obs::Histogram;
     let cfg = &rs.config;
     let plan = rs.plan()?;
     let pool = SweepPool::new(cfg.threads);
+    // The timed span is chunked into rounds of `sweeps_per_round`: the
+    // sweep trajectory is identical to one long call (chunking only
+    // moves where the loop pauses to read the clock), and the per-round
+    // wall times give the artifact its latency percentiles.
+    let round = cfg.sweeps_per_round.min(cfg.sweeps).max(1);
+    let hist = Histogram::new();
     if rs.sampler.rung.is_replica_batch() {
         let mut pt = build_batched_ensemble(cfg, rs.sampler)?;
-        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
+        scheduler::parallel_sweep_batches(&mut pt, round, &pool);
         let timer = Timer::start();
-        scheduler::parallel_sweep_batches(&mut pt, cfg.sweeps, &pool);
+        let mut left = cfg.sweeps;
+        while left > 0 {
+            let n = round.min(left);
+            let t0 = std::time::Instant::now();
+            scheduler::parallel_sweep_batches(&mut pt, n, &pool);
+            hist.record(t0.elapsed().as_micros() as u64);
+            left -= n;
+        }
         let wall = timer.seconds();
         return Ok(RungTiming::labeled(
             &plan.label(),
@@ -427,15 +441,24 @@ pub fn time_sweeps_spec(rs: &RunSpec) -> Result<RungTiming> {
             wall,
             cfg.sweeps,
             cfg.total_updates(),
-        ));
+        )
+        .with_round_latency(&hist.snapshot()));
     }
     let mut pt = build_ensemble(cfg, rs.sampler)?;
     // Warm caches and reach a representative flip regime first.
-    scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps_per_round.min(cfg.sweeps), &pool);
+    scheduler::parallel_sweep_with_pool(&mut pt, round, &pool);
     let timer = Timer::start();
-    scheduler::parallel_sweep_with_pool(&mut pt, cfg.sweeps, &pool);
+    let mut left = cfg.sweeps;
+    while left > 0 {
+        let n = round.min(left);
+        let t0 = std::time::Instant::now();
+        scheduler::parallel_sweep_with_pool(&mut pt, n, &pool);
+        hist.record(t0.elapsed().as_micros() as u64);
+        left -= n;
+    }
     let wall = timer.seconds();
-    Ok(RungTiming::labeled(&plan.label(), cfg.threads, wall, cfg.sweeps, cfg.total_updates()))
+    Ok(RungTiming::labeled(&plan.label(), cfg.threads, wall, cfg.sweeps, cfg.total_updates())
+        .with_round_latency(&hist.snapshot()))
 }
 
 /// [`time_sweeps_spec`] — the legacy `(RunConfig, spec)` shim.

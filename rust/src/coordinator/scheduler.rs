@@ -25,10 +25,11 @@
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::obs::Histogram;
 use crate::sweep::c1_replica_batch::BatchSweeper;
 use crate::sweep::{SweepStats, Sweeper};
 use crate::tempering::{BatchedPtEnsemble, PtEnsemble};
@@ -65,12 +66,20 @@ impl PoolStats {
 struct PoolCounters {
     jobs: AtomicU64,
     busy_ns: AtomicU64,
+    /// Optional per-task wall-time histogram (µs), installed by the
+    /// service engine so `{"op":"stats"}` can report pool-task
+    /// percentiles.  Absent outside the serving path: recording is then
+    /// a single pointer check.
+    task_hist: OnceLock<Arc<Histogram>>,
 }
 
 impl PoolCounters {
     fn record(&self, elapsed: std::time::Duration) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.busy_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        if let Some(hist) = self.task_hist.get() {
+            hist.record(elapsed.as_micros() as u64);
+        }
     }
 }
 
@@ -158,6 +167,13 @@ impl SweepPool {
                 }
             }
         }
+    }
+
+    /// Install a per-task wall-time histogram (µs): every subsequent
+    /// task — spawned, inline or batched — records its duration into it.
+    /// Write-once; later calls are ignored.
+    pub fn set_task_hist(&self, hist: Arc<Histogram>) {
+        let _ = self.counters.task_hist.set(hist);
     }
 
     /// Worker count this pool was built for (1 = inline execution).
@@ -571,6 +587,20 @@ mod tests {
         inline_pool.run_inline(|| {});
         inline_pool.run_batch(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>]);
         assert_eq!(inline_pool.stats().jobs, 2);
+    }
+
+    /// An installed task histogram sees every execution path — inline,
+    /// batched and spawned — once per task.
+    #[test]
+    fn task_histogram_records_every_execution_path() {
+        let hist = Arc::new(Histogram::new());
+        let pool = SweepPool::new(1);
+        pool.set_task_hist(Arc::clone(&hist));
+        pool.run_inline(|| {});
+        pool.run_batch(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>]);
+        pool.spawn(Box::new(|| {}));
+        assert_eq!(hist.snapshot().count(), 3);
+        assert_eq!(pool.stats().jobs, 3, "histogram and job counter agree");
     }
 
     /// Fire-and-forget tasks all execute (panicking ones contained),

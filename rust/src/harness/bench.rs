@@ -22,7 +22,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::{self, RunConfig, RunSpec};
+use crate::coordinator::{self, LatencyPercentiles, RunConfig, RunSpec};
 use crate::engine::Rung;
 use crate::simd;
 use crate::util::json::{self, Value};
@@ -111,6 +111,10 @@ pub struct BenchArtifact {
     /// `"measured"` when emitted by a real run on this host;
     /// `"estimate"` for hand-seeded baselines (never gated absolutely).
     pub provenance: String,
+    /// Per-round sweep wall-time percentiles (µs) from the timing run —
+    /// the tail behaviour behind the mean throughput (`None` in legacy
+    /// artifacts; the gate ignores it, CI plots it).
+    pub round_latency: Option<LatencyPercentiles>,
 }
 
 impl BenchArtifact {
@@ -136,6 +140,7 @@ impl BenchArtifact {
             host: HostCaps::detect(),
             git_sha: git_sha(),
             provenance: "measured".into(),
+            round_latency: t.round_latency,
         })
     }
 
@@ -154,7 +159,7 @@ impl BenchArtifact {
     }
 
     pub fn to_value(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("schema", json::num(self.schema as f64)),
             ("rung", json::str_v(&self.rung)),
             ("threads", json::num(self.threads as f64)),
@@ -170,7 +175,13 @@ impl BenchArtifact {
             ("host", self.host.to_value()),
             ("git_sha", json::str_v(&self.git_sha)),
             ("provenance", json::str_v(&self.provenance)),
-        ])
+        ];
+        if let Some(p) = self.round_latency {
+            fields.push(("round_p50_us", json::num(p.p50_us)));
+            fields.push(("round_p90_us", json::num(p.p90_us)));
+            fields.push(("round_p99_us", json::num(p.p99_us)));
+        }
+        json::obj(fields)
     }
 
     pub fn to_json(&self) -> String {
@@ -200,6 +211,7 @@ impl BenchArtifact {
             host: HostCaps::from_value(v.get("host")?)?,
             git_sha: v.get("git_sha")?.as_str()?.to_string(),
             provenance: v.get("provenance")?.as_str()?.to_string(),
+            round_latency: LatencyPercentiles::from_round_fields(v)?,
         })
     }
 
@@ -389,6 +401,7 @@ mod tests {
             host: HostCaps::detect(),
             git_sha: "deadbeef".into(),
             provenance: "measured".into(),
+            round_latency: None,
         }
     }
 
@@ -400,9 +413,26 @@ mod tests {
         assert_eq!(back.spins_per_sec.to_bits(), a.spins_per_sec.to_bits());
         assert_eq!(back.host, a.host);
         assert_eq!(back.provenance, "measured");
+        assert!(back.round_latency.is_none(), "legacy artifacts stay percentile-free");
         // Future schemas are refused loudly.
         let newer = a.to_json().replace("\"schema\":1", "\"schema\":99");
         assert!(BenchArtifact::from_json(&newer).is_err());
+    }
+
+    #[test]
+    fn round_latency_percentiles_roundtrip_and_refuse_partial_triples() {
+        let mut a = fake("C.1w8", 2.4e8);
+        a.round_latency =
+            Some(LatencyPercentiles { p50_us: 1200.0, p90_us: 1500.0, p99_us: 2100.0 });
+        let text = a.to_json();
+        assert!(text.contains("\"round_p50_us\""));
+        let back = BenchArtifact::from_json(&text).unwrap();
+        let p = back.round_latency.unwrap();
+        assert_eq!(p.p50_us, 1200.0);
+        assert!(p.p50_us <= p.p99_us);
+        // A partial triple is a malformed artifact, not a silent None.
+        let partial = text.replace("\"round_p90_us\":1500,", "");
+        assert!(BenchArtifact::from_json(&partial).is_err());
     }
 
     #[test]

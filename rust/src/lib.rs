@@ -96,6 +96,7 @@ pub mod engine;
 pub mod expapprox;
 pub mod harness;
 pub mod ising;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod service;

@@ -93,8 +93,11 @@ SUBCOMMANDS
                    [--max-queue N]  admission cap: over-cap jobs are
                    refused with {"error":"overloaded","retry_after_ms":..}
                    (default 1024, 0 = unbounded)
+                   [--metrics-every N]  Prometheus text snapshot to stderr
+                   every N seconds (0 = off, the default)
   submit           client for a serving instance: --addr HOST:PORT
-                   [--file jobs.jsonl | stdin] [--stats] [--shutdown]
+                   [--file jobs.jsonl | stdin] [--stats] [--metrics]
+                   [--trace] [--shutdown]
   job-run          run job lines directly on the scalar A.2 reference
                    [--file jobs.jsonl | stdin] [--exact]
                    (the bit-exactness oracle for C-rung served results;
@@ -449,6 +452,7 @@ fn main() -> Result<()> {
                 flush_ms: args.u64_or("flush-ms", 25)?,
                 exp: if args.switch("exact") { ExpMode::Exact } else { ExpMode::Fast },
                 max_queue: args.usize_or("max-queue", 1024)?,
+                metrics_every_secs: args.u64_or("metrics-every", 0)?,
             };
             match args.str_opt("listen") {
                 Some(addr) => {
@@ -475,6 +479,10 @@ fn main() -> Result<()> {
                 vec!["{\"op\":\"shutdown\"}".to_string()]
             } else if args.switch("stats") {
                 vec!["{\"op\":\"stats\"}".to_string()]
+            } else if args.switch("metrics") {
+                vec!["{\"op\":\"metrics\"}".to_string()]
+            } else if args.switch("trace") {
+                vec!["{\"op\":\"trace\"}".to_string()]
             } else {
                 read_request_lines(args.str_opt("file"))?
             };

@@ -1,0 +1,214 @@
+//! Fixed-bucket log2 latency histograms with atomic recording and
+//! mergeable snapshots.
+//!
+//! The recording path is one `fetch_add` per bucket hit — no locks, no
+//! allocation — so connection threads, the scheduler and pool workers
+//! can all record into the same histogram while `{"op":"stats"}` /
+//! `{"op":"metrics"}` snapshot it concurrently.  A snapshot's `count` is
+//! *derived* as the sum of its bucket reads (never read from a separate
+//! counter), so the bucket-sum == count invariant holds by construction
+//! even mid-update — the concurrency test in `tests/obs_histogram.rs`
+//! hammers exactly this.
+//!
+//! Values are recorded in integer microseconds.  Bucket `i` holds values
+//! `v` with `2^(i-1) < v <= 2^i` (bucket 0 holds `v <= 1`), i.e. the
+//! Prometheus `le` edge of bucket `i` is `2^i` µs; the last bucket is
+//! `+Inf`.  40 buckets span 1 µs .. ~76 h — every latency this service
+//! can produce.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: upper edges `2^0 .. 2^38` µs, plus a final `+Inf`.
+pub const BUCKETS: usize = 40;
+
+/// A lock-free log2 latency histogram (microsecond domain).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    /// Sum of recorded values (µs) — feeds the mean and the Prometheus
+    /// `_sum` series.  Read separately from the buckets, so it may lag
+    /// a concurrent snapshot by a few in-flight records; `count` never
+    /// does (it is derived from the buckets themselves).
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum_us: AtomicU64::new(0) }
+    }
+
+    /// Bucket index of a value: `v <= 2^i` with the smallest such `i`.
+    pub fn bucket_index(value_us: u64) -> usize {
+        if value_us <= 1 {
+            0
+        } else {
+            (64 - (value_us - 1).leading_zeros() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge (µs) of bucket `i`; `u64::MAX` stands in for `+Inf`.
+    pub fn bucket_edge_us(i: usize) -> u64 {
+        if i >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            1u64 << i
+        }
+    }
+
+    /// Record one value (µs).  Lock-free: one relaxed `fetch_add` per
+    /// call plus the running sum.
+    pub fn record(&self, value_us: u64) {
+        self.buckets[Self::bucket_index(value_us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(value_us, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot: each bucket is read once; the total
+    /// is the sum of those reads.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot { buckets, sum_us: self.sum_us.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]: plain integers, mergeable,
+/// quantile-queryable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum_us: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        Self { buckets: [0; BUCKETS], sum_us: 0 }
+    }
+
+    /// Total recorded values — derived from the buckets, so it always
+    /// equals their sum (the invariant the concurrency tests assert).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean recorded value in µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / n as f64
+        }
+    }
+
+    /// Merge another snapshot into this one (shard aggregation).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.sum_us += other.sum_us;
+    }
+
+    /// Quantile estimate in µs by linear interpolation inside the
+    /// covering bucket (`q` in [0, 1]; 0 when empty).  Exact to within
+    /// one log2 bucket — plenty for p50/p90/p99 serving summaries.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * n as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= rank {
+                let lo = if i == 0 { 0.0 } else { Histogram::bucket_edge_us(i - 1) as f64 };
+                // The +Inf bucket has no finite upper edge; extrapolate
+                // one octave past its lower edge.
+                let hi = if i >= BUCKETS - 1 { lo * 2.0 } else { Histogram::bucket_edge_us(i) as f64 };
+                let within = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + within * (hi - lo);
+            }
+            cum = next;
+        }
+        Histogram::bucket_edge_us(BUCKETS - 2) as f64
+    }
+
+    /// The serving summary triple (p50, p90, p99) in µs.
+    pub fn percentiles_us(&self) -> (f64, f64, f64) {
+        (self.quantile_us(0.50), self.quantile_us(0.90), self.quantile_us(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_cover_the_domain() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1 << 20), 20);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+        // Every value lands in the bucket whose le-edge covers it.
+        for v in [0u64, 1, 2, 7, 100, 4096, 1 << 30] {
+            let i = Histogram::bucket_index(v);
+            assert!(v <= Histogram::bucket_edge_us(i), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > Histogram::bucket_edge_us(i - 1), "v={v} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn count_is_bucket_sum_and_quantiles_are_ordered() {
+        let h = Histogram::new();
+        for v in [1u64, 10, 10, 100, 1000, 10_000, 100_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 7);
+        assert_eq!(s.count(), s.buckets.iter().sum::<u64>());
+        assert_eq!(s.sum_us, 111_121);
+        let (p50, p90, p99) = s.percentiles_us();
+        assert!(p50 <= p90 && p90 <= p99, "p50={p50} p90={p90} p99={p99}");
+        assert!(p50 >= 1.0 && p99 <= 131_072.0, "p50={p50} p99={p99}");
+        assert!(s.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s, HistogramSnapshot::empty());
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile_us(0.99), 0.0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(5);
+        a.record(500);
+        b.record(5);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum_us, 510);
+        assert_eq!(s.buckets[Histogram::bucket_index(5)], 2);
+    }
+}

@@ -1,0 +1,242 @@
+//! Observability: job-lifecycle tracing, latency/lane-fill histograms,
+//! windowed rates, per-phase kernel timers and Prometheus exposition —
+//! the measurement layer under the serving tier and the bench harness.
+//!
+//! The paper's central diagnostic is the fraction of vector width
+//! utilized; the ROADMAP's next control loops (w8 → w4 bucket
+//! retargeting, router backpressure for sharded serving) need that
+//! diagnostic as *distributions over time*, not lifetime counters.
+//! This module provides the substrate:
+//!
+//! * [`hist`] — fixed-bucket log2 latency histograms: atomic recording,
+//!   mergeable snapshots, p50/p90/p99 queries.
+//! * [`trace`] — per-job stage stamps (admit → enqueue → seal →
+//!   dispatch → sweep → reply) and a bounded ring of recent traces.
+//! * [`rate`] — lock-free sliding-window jobs/sec and spins/sec.
+//! * [`phase`] — feature-gated RNG/update/reduce kernel timers.
+//! * [`prometheus`] — text-format exposition shared by
+//!   `{"op":"metrics"}` and `repro serve --metrics-every N`.
+//!
+//! [`Obs`] aggregates one service instance's histograms, traces and
+//! rates; `service::metrics::ServiceMetrics` owns one and surfaces it
+//! through the wire ops.
+
+pub mod hist;
+pub mod phase;
+pub mod prometheus;
+pub mod rate;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+pub use hist::{Histogram, HistogramSnapshot};
+pub use rate::RateWindow;
+pub use trace::{JobTrace, StageTiming, Timeline, TraceRing};
+
+/// Resolved service configuration, echoed in stats so scrapes are
+/// self-describing (set once at engine start).
+#[derive(Copy, Clone, Debug)]
+pub struct ConfigEcho {
+    /// Negotiated lane width of the serving C-rung.
+    pub lanes: usize,
+    pub flush_ms: u64,
+    pub max_queue: usize,
+    pub threads: usize,
+}
+
+/// Per-shape lane-fill histogram: how many batch dispatches of this
+/// shape bucket went out with each occupancy `0..=W` — the distribution
+/// behind the scalar `lane_fill_ratio` gauge, per shape, which is the
+/// signal the w8 → w4 retargeting loop needs (a shape averaging 3/8
+/// occupied lanes wants a narrower batch).
+#[derive(Clone, Debug)]
+pub struct FillSnapshot {
+    pub width: usize,
+    /// `counts[k]` = dispatches that carried `k` real jobs.
+    pub counts: Vec<u64>,
+}
+
+impl FillSnapshot {
+    pub fn dispatches(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Mean occupied-lane fraction over this shape's dispatches.
+    pub fn mean_fill(&self) -> f64 {
+        let n = self.dispatches();
+        if n == 0 || self.width == 0 {
+            return 1.0;
+        }
+        let occupied: u64 = self.counts.iter().enumerate().map(|(k, &c)| k as u64 * c).sum();
+        occupied as f64 / (n * self.width as u64) as f64
+    }
+}
+
+/// All per-shape fill histograms of one service (shape label → counts).
+/// Guarded by a mutex: recording happens once per *dispatch* (not per
+/// job, not per spin), so contention is negligible.
+#[derive(Default)]
+pub struct FillHistograms {
+    inner: Mutex<BTreeMap<String, FillSnapshot>>,
+}
+
+impl FillHistograms {
+    /// Record one batch dispatch of `occupancy`/`width` lanes for
+    /// `shape`.
+    pub fn record(&self, shape: &str, occupancy: usize, width: usize) {
+        let mut g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let entry = g
+            .entry(shape.to_string())
+            .or_insert_with(|| FillSnapshot { width, counts: vec![0; width + 1] });
+        let k = occupancy.min(entry.width);
+        entry.counts[k] += 1;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, FillSnapshot> {
+        match self.inner.lock() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+}
+
+/// The observability surface of one running service instance.
+pub struct Obs {
+    /// Enqueue → batch-seal wait (how long jobs wait for lane-mates).
+    pub queue_wait_us: Histogram,
+    /// Sweep execution time (sweep_start → sweep_end).
+    pub exec_us: Histogram,
+    /// Admission → reply, the client-visible latency.
+    pub e2e_us: Histogram,
+    /// Sweep-pool task wall time (whole dispatches, run jobs included)
+    /// — shared with the pool via `SweepPool::set_task_hist`.
+    pub pool_task_us: Arc<Histogram>,
+    /// Per-shape lane-fill distributions.
+    pub fill: FillHistograms,
+    /// Recent completed-job traces (`{"op":"trace"}`).
+    pub traces: TraceRing,
+    /// Completed jobs per second over the rate window.
+    pub jobs_rate: RateWindow,
+    /// Attempted spin updates per second over the rate window.
+    pub spins_rate: RateWindow,
+    /// Spin updates attempted by completed jobs (the numerator behind
+    /// `spins_rate`, exposed as a lifetime counter too).
+    pub spins_attempted: AtomicU64,
+    started: Instant,
+    started_at_ms: u64,
+    config: OnceLock<ConfigEcho>,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        let started = Instant::now();
+        let started_at_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        Self {
+            queue_wait_us: Histogram::new(),
+            exec_us: Histogram::new(),
+            e2e_us: Histogram::new(),
+            pool_task_us: Arc::new(Histogram::new()),
+            fill: FillHistograms::default(),
+            traces: TraceRing::new(TraceRing::DEFAULT_CAP),
+            jobs_rate: RateWindow::new(started),
+            spins_rate: RateWindow::new(started),
+            spins_attempted: AtomicU64::new(0),
+            started,
+            started_at_ms,
+            config: OnceLock::new(),
+        }
+    }
+
+    /// Milliseconds since this instance started (serve start, not
+    /// per-request).
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Unix epoch milliseconds of serve start.
+    pub fn started_at_ms(&self) -> u64 {
+        self.started_at_ms
+    }
+
+    /// Record the resolved config once at engine start (later calls are
+    /// ignored — the config cannot change while serving).
+    pub fn set_config(&self, echo: ConfigEcho) {
+        let _ = self.config.set(echo);
+    }
+
+    pub fn config(&self) -> Option<ConfigEcho> {
+        self.config.get().copied()
+    }
+
+    /// Account one completed (ok) job: latency histograms and rates.
+    pub fn record_completed(&self, timing: &StageTiming, spins_attempted: u64) {
+        self.queue_wait_us.record(timing.queue_us);
+        self.exec_us.record(timing.sweep_us);
+        self.e2e_us.record(timing.e2e_us);
+        let now = Instant::now();
+        self.jobs_rate.record(1, now);
+        self.spins_rate.record(spins_attempted, now);
+        self.spins_attempted.fetch_add(spins_attempted, Ordering::Relaxed);
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_completed_feeds_every_surface() {
+        let obs = Obs::new();
+        let timing =
+            StageTiming { queue_us: 100, sweep_us: 2000, e2e_us: 2500, ..StageTiming::default() };
+        obs.record_completed(&timing, 640);
+        obs.record_completed(&timing, 640);
+        assert_eq!(obs.queue_wait_us.snapshot().count(), 2);
+        assert_eq!(obs.exec_us.snapshot().count(), 2);
+        assert_eq!(obs.e2e_us.snapshot().count(), 2);
+        assert_eq!(obs.spins_attempted.load(Ordering::Relaxed), 1280);
+        assert!(obs.jobs_rate.per_sec(10, Instant::now()) > 0.0);
+    }
+
+    #[test]
+    fn fill_histograms_track_per_shape_occupancy() {
+        let f = FillHistograms::default();
+        f.record("4x4x8", 8, 8);
+        f.record("4x4x8", 3, 8);
+        f.record("6x6x4", 2, 8);
+        let snap = f.snapshot();
+        let s = &snap["4x4x8"];
+        assert_eq!(s.dispatches(), 2);
+        assert_eq!(s.counts[8], 1);
+        assert_eq!(s.counts[3], 1);
+        assert!((s.mean_fill() - 11.0 / 16.0).abs() < 1e-12);
+        assert_eq!(snap["6x6x4"].dispatches(), 1);
+    }
+
+    #[test]
+    fn config_echo_is_write_once() {
+        let obs = Obs::new();
+        assert!(obs.config().is_none());
+        obs.set_config(ConfigEcho { lanes: 8, flush_ms: 25, max_queue: 1024, threads: 2 });
+        obs.set_config(ConfigEcho { lanes: 4, flush_ms: 1, max_queue: 1, threads: 1 });
+        let c = obs.config().unwrap();
+        assert_eq!(c.lanes, 8, "first write wins");
+        assert!(obs.uptime_ms() < 60_000);
+        assert!(obs.started_at_ms() > 0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Per-phase sweep timers: RNG generation vs. spin update vs. energy
+//! reduction, behind the `phase-timers` cargo feature so the hot loops
+//! pay **zero** cost when disabled (the guard is a unit struct and the
+//! calls compile away).
+//!
+//! The paper's ablation ladder separates exactly these costs (explicit
+//! RNG vectorization, explicit update vectorization, reduction width),
+//! so the serving tier should be able to attribute live time the same
+//! way.  Instrumentation points are chosen where the phases are
+//! *naturally blocked* — MT19937 block regeneration for `rng`, whole
+//! sweep loops for `update`, energy recomputation for `reduce` — so an
+//! enabled guard still costs one `Instant::now()` pair per *block*,
+//! never per spin.  `update` is the wall time of the sweep loop and
+//! therefore **includes** any `rng` block regeneration triggered inside
+//! it: exclusive update time is `update - rng`.  (See DESIGN.md
+//! "Observability".)
+//!
+//! Totals are global (per process): phase time is a property of the
+//! sweep kernels, not of one service instance, and the kernels have no
+//! handle to thread context through.  `snapshot()` returns `None` when
+//! the feature is off, so surfaces can distinguish "disabled" from
+//! "zero".
+
+/// The three attributed sweep phases.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// MT19937 block regeneration (the paper's "RNG generation" cost).
+    Rng,
+    /// Metropolis sweep loops (includes nested RNG regeneration).
+    Update,
+    /// Energy recomputation / reductions.
+    Reduce,
+}
+
+/// Cumulative per-phase nanoseconds (`None` from [`snapshot`] when the
+/// feature is disabled).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTotals {
+    pub rng_ns: u64,
+    pub update_ns: u64,
+    pub reduce_ns: u64,
+}
+
+#[cfg(feature = "phase-timers")]
+mod imp {
+    use super::{Phase, PhaseTotals};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Instant;
+
+    static RNG_NS: AtomicU64 = AtomicU64::new(0);
+    static UPDATE_NS: AtomicU64 = AtomicU64::new(0);
+    static REDUCE_NS: AtomicU64 = AtomicU64::new(0);
+
+    fn slot(phase: Phase) -> &'static AtomicU64 {
+        match phase {
+            Phase::Rng => &RNG_NS,
+            Phase::Update => &UPDATE_NS,
+            Phase::Reduce => &REDUCE_NS,
+        }
+    }
+
+    /// RAII guard: accumulates the elapsed time into its phase on drop.
+    pub struct PhaseGuard {
+        phase: Phase,
+        t0: Instant,
+    }
+
+    impl Drop for PhaseGuard {
+        fn drop(&mut self) {
+            slot(self.phase).fetch_add(self.t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn timed(phase: Phase) -> PhaseGuard {
+        PhaseGuard { phase, t0: Instant::now() }
+    }
+
+    pub fn snapshot() -> Option<PhaseTotals> {
+        Some(PhaseTotals {
+            rng_ns: RNG_NS.load(Ordering::Relaxed),
+            update_ns: UPDATE_NS.load(Ordering::Relaxed),
+            reduce_ns: REDUCE_NS.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(not(feature = "phase-timers"))]
+mod imp {
+    use super::{Phase, PhaseTotals};
+
+    /// Zero-sized no-op guard: constructing and dropping it compiles to
+    /// nothing.
+    pub struct PhaseGuard;
+
+    #[inline(always)]
+    pub fn timed(_phase: Phase) -> PhaseGuard {
+        PhaseGuard
+    }
+
+    #[inline(always)]
+    pub fn snapshot() -> Option<PhaseTotals> {
+        None
+    }
+}
+
+pub use imp::{snapshot, timed, PhaseGuard};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_is_free_when_disabled_and_counts_when_enabled() {
+        {
+            let _g = timed(Phase::Update);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        match snapshot() {
+            // Feature off: the default build — no totals at all.
+            None => assert!(cfg!(not(feature = "phase-timers"))),
+            // Feature on: the guard above must have accumulated.
+            Some(t) => {
+                assert!(cfg!(feature = "phase-timers"));
+                assert!(t.update_ns >= 1_000_000, "guard recorded the sleep: {t:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Prometheus text-format exposition (version 0.0.4): `# HELP`/`# TYPE`
+//! headers, `name{labels} value` samples, histogram `_bucket`/`_sum`/
+//! `_count` families with cumulative `le` edges ending at `+Inf`.
+//!
+//! Dependency-free by design, like [`crate::util::json`]: the emitter is
+//! a string builder with label escaping, shared by the `{"op":"metrics"}`
+//! wire op and the `repro serve --metrics-every N` periodic snapshot.
+//! Histograms are emitted in **seconds** (the Prometheus base-unit
+//! convention) from the µs-domain [`HistogramSnapshot`]s.
+
+use super::hist::{Histogram, HistogramSnapshot, BUCKETS};
+
+/// Builder for one exposition document.  Common labels (host
+/// fingerprint, git sha) are attached to every sample.
+pub struct PromWriter {
+    out: String,
+    /// Pre-rendered common label list, e.g. `host="...",sha="..."`.
+    common: String,
+}
+
+impl PromWriter {
+    pub fn new(common_labels: &[(&str, &str)]) -> Self {
+        Self { out: String::new(), common: render_labels(common_labels) }
+    }
+
+    /// All labels for one sample: common ∪ extra, or "" when both empty.
+    fn labels(&self, extra: &[(&str, &str)]) -> String {
+        let extra = render_labels(extra);
+        match (self.common.is_empty(), extra.is_empty()) {
+            (true, true) => String::new(),
+            (false, true) => format!("{{{}}}", self.common),
+            (true, false) => format!("{{{extra}}}"),
+            (false, false) => format!("{{{},{extra}}}", self.common),
+        }
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One monotonically-increasing counter sample.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        let labels = self.labels(&[]);
+        self.out.push_str(&format!("{name}{labels} {value}\n"));
+    }
+
+    /// One gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        let labels = self.labels(&[]);
+        self.out.push_str(&format!("{name}{labels} {}\n", fmt_f64(value)));
+    }
+
+    /// A counter family: one header, many label-distinguished samples.
+    pub fn counter_family(&mut self, name: &str, help: &str, samples: &[(Vec<(&str, &str)>, u64)]) {
+        self.header(name, help, "counter");
+        for (extra, value) in samples {
+            let labels = self.labels(extra);
+            self.out.push_str(&format!("{name}{labels} {value}\n"));
+        }
+    }
+
+    /// One histogram family from a µs-domain snapshot, emitted in
+    /// seconds with cumulative `le` buckets.
+    pub fn histogram_seconds(&mut self, name: &str, help: &str, snap: &HistogramSnapshot) {
+        self.header(name, help, "histogram");
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += snap.buckets[i];
+            let le = if i == BUCKETS - 1 {
+                "+Inf".to_string()
+            } else {
+                fmt_f64(Histogram::bucket_edge_us(i) as f64 * 1e-6)
+            };
+            let labels = self.labels(&[("le", &le)]);
+            self.out.push_str(&format!("{name}_bucket{labels} {cum}\n"));
+        }
+        let labels = self.labels(&[]);
+        self.out.push_str(&format!("{name}_sum{labels} {}\n", fmt_f64(snap.sum_us as f64 * 1e-6)));
+        self.out.push_str(&format!("{name}_count{labels} {}\n", snap.count()));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// `k1="v1",k2="v2"` with label-value escaping per the text format.
+fn render_labels(pairs: &[(&str, &str)]) -> String {
+    pairs
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Plain (non-scientific) float formatting: Prometheus parsers accept
+/// exponent notation, but fixed-point keeps the checker and human eyes
+/// simple.  Integers print without a fraction.
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{v}");
+        // Rust only switches to scientific notation for extreme
+        // magnitudes, which the µs→s scaling here never produces.
+        debug_assert!(!s.contains('e') && !s.contains('E'), "unexpected exponent in {s}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_common_labels() {
+        let mut w = PromWriter::new(&[("host", "x86_64 avx2=true"), ("sha", "abc123")]);
+        w.counter("repro_jobs_total", "Jobs.", 7);
+        w.gauge("repro_queue_depth", "Depth.", 3.0);
+        let text = w.finish();
+        assert!(text.contains("# HELP repro_jobs_total Jobs.\n"));
+        assert!(text.contains("# TYPE repro_jobs_total counter\n"));
+        assert!(text.contains(r#"repro_jobs_total{host="x86_64 avx2=true",sha="abc123"} 7"#));
+        assert!(text.contains(r#"repro_queue_depth{host="x86_64 avx2=true",sha="abc123"} 3"#));
+    }
+
+    #[test]
+    fn histograms_emit_cumulative_buckets_sum_and_count() {
+        let h = Histogram::new();
+        h.record(1); // bucket 0 (le=1e-6 s)
+        h.record(3); // bucket 2 (le=4e-6 s)
+        let mut w = PromWriter::new(&[]);
+        w.histogram_seconds("repro_e2e_seconds", "E2E.", &h.snapshot());
+        let text = w.finish();
+        assert!(text.contains("# TYPE repro_e2e_seconds histogram\n"));
+        assert!(text.contains(r#"repro_e2e_seconds_bucket{le="0.000001"} 1"#));
+        assert!(text.contains(r#"repro_e2e_seconds_bucket{le="0.000004"} 2"#));
+        assert!(text.contains(r#"repro_e2e_seconds_bucket{le="+Inf"} 2"#));
+        assert!(text.contains("repro_e2e_seconds_sum 0.000004\n"));
+        assert!(text.contains("repro_e2e_seconds_count 2\n"));
+        // Buckets are cumulative (monotone non-decreasing in le order).
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone bucket line: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = PromWriter::new(&[]);
+        w.counter_family(
+            "repro_lane_occupancy_total",
+            "Occupancy.",
+            &[(vec![("shape", "4x4x8"), ("note", "a\"b\\c")], 5)],
+        );
+        let text = w.finish();
+        assert!(text.contains(r#"shape="4x4x8""#));
+        assert!(text.contains(r#"note="a\"b\\c""#));
+    }
+}

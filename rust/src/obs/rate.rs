@@ -1,0 +1,154 @@
+//! Windowed rate tracking: jobs/sec and spins/sec over the last N
+//! seconds, so throughput is observable live rather than only as a
+//! lifetime average.
+//!
+//! The tracker is a ring of per-second slots, each an `(epoch_second,
+//! count)` atomic pair indexed by `second % SLOTS`.  Recording is
+//! lock-free: load the slot's epoch tag, CAS it forward if the slot is
+//! stale (the winner zeroes the count), then `fetch_add`.  A racing
+//! recorder can in principle add to a slot between the winner's CAS and
+//! its zeroing store — the loss is bounded by the in-flight records of
+//! one slot turnover and only perturbs a *rate gauge*, never a counter,
+//! so the trade is taken for the lock-freedom.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Ring size: must exceed the largest window queried (the service asks
+/// for [`RateWindow::WINDOW_SECS`]) by enough slack that a slot is never
+/// reused while still inside the window.
+const SLOTS: usize = 64;
+
+/// Lock-free sliding-window event-rate tracker.
+pub struct RateWindow {
+    start: Instant,
+    /// Per-slot epoch tag: `second + 1` of the counts currently stored
+    /// there (0 = never used).
+    tags: [AtomicU64; SLOTS],
+    counts: [AtomicU64; SLOTS],
+}
+
+impl RateWindow {
+    /// The window the service reports rates over.
+    pub const WINDOW_SECS: u64 = 10;
+
+    pub fn new(start: Instant) -> Self {
+        Self {
+            start,
+            tags: std::array::from_fn(|_| AtomicU64::new(0)),
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn second(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.start).as_secs()
+    }
+
+    /// Record `n` events at `now`.
+    pub fn record(&self, n: u64, now: Instant) {
+        let sec = self.second(now);
+        let slot = (sec % SLOTS as u64) as usize;
+        let tag = sec + 1;
+        let mut cur = self.tags[slot].load(Ordering::Acquire);
+        while cur != tag {
+            match self.tags[slot].compare_exchange_weak(cur, tag, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => {
+                    // This thread turned the slot over to the new second.
+                    self.counts[slot].store(0, Ordering::Release);
+                    break;
+                }
+                Err(seen) => {
+                    if seen > tag {
+                        // A racing recorder already advanced the slot past
+                        // our second (we slept across a turnover): the
+                        // event belongs to a second that has left the
+                        // ring — drop it rather than pollute a live slot.
+                        return;
+                    }
+                    cur = seen;
+                }
+            }
+        }
+        self.counts[slot].fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Events per second over the trailing `window_secs` full seconds
+    /// ending at `now` (the current partial second included).
+    pub fn per_sec(&self, window_secs: u64, now: Instant) -> f64 {
+        let window = window_secs.clamp(1, SLOTS as u64 - 1);
+        let sec = self.second(now);
+        let lo = sec.saturating_sub(window - 1);
+        let mut total = 0u64;
+        for s in lo..=sec {
+            let slot = (s % SLOTS as u64) as usize;
+            if self.tags[slot].load(Ordering::Acquire) == s + 1 {
+                total += self.counts[slot].load(Ordering::Acquire);
+            }
+        }
+        // Normalize by the elapsed window, not the nominal one, so early
+        // scrapes (uptime < window) are not artificially deflated.
+        let elapsed = (sec - lo) as f64 + 1.0;
+        total as f64 / elapsed.min(window as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn rate_counts_recent_seconds_only() {
+        let t0 = Instant::now();
+        let r = RateWindow::new(t0);
+        for s in 0..5u64 {
+            r.record(10, t0 + Duration::from_secs(s));
+        }
+        // At t=4 the trailing 5 seconds hold all 50 events.
+        assert_eq!(r.per_sec(5, t0 + Duration::from_secs(4)), 10.0);
+        // Far in the future every slot is stale (or reused and re-tagged).
+        assert_eq!(r.per_sec(5, t0 + Duration::from_secs(1000)), 0.0);
+    }
+
+    #[test]
+    fn slot_reuse_resets_old_counts() {
+        let t0 = Instant::now();
+        let r = RateWindow::new(t0);
+        r.record(100, t0);
+        // Same ring slot, SLOTS seconds later: the tag CAS must zero it.
+        let later = t0 + Duration::from_secs(SLOTS as u64);
+        r.record(7, later);
+        assert_eq!(r.per_sec(1, later), 7.0);
+    }
+
+    #[test]
+    fn early_scrapes_normalize_by_elapsed_time() {
+        let t0 = Instant::now();
+        let r = RateWindow::new(t0);
+        r.record(30, t0);
+        // 30 events in the first second; a 10 s window must not report 3.
+        assert_eq!(r.per_sec(10, t0), 30.0);
+    }
+
+    #[test]
+    fn concurrent_recording_is_close_to_exact_within_one_second() {
+        let t0 = Instant::now();
+        let r = std::sync::Arc::new(RateWindow::new(t0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let r = std::sync::Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        r.record(1, t0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // All records hit one already-tagged slot: no turnover race, so
+        // the count is exact.
+        assert_eq!(r.per_sec(1, t0), 40_000.0);
+    }
+}

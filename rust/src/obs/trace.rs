@@ -1,0 +1,295 @@
+//! Job-lifecycle tracing: monotonic stage stamps carried on each job
+//! through the serving path, folded into per-stage durations at reply
+//! time, and a bounded ring of recent traces for `{"op":"trace"}`.
+//!
+//! The event layer is lock-free where it matters: a [`Timeline`] is
+//! plain data *owned by its job* (it rides on
+//! `service::batcher::PendingJob`), so stamping a stage is a field
+//! store — no shared state, no atomics, no locks on the sweep path.
+//! Only the final [`TraceRing::push`] (once per job, after the reply is
+//! serialized) takes a short mutex on the bounded ring.
+//!
+//! Stage model (each duration is the gap to the previous stamp, so the
+//! stages are consecutive and their sum is ≤ the end-to-end latency by
+//! construction — floor rounding to whole µs only loses time, never
+//! invents it):
+//!
+//! ```text
+//! admit ─▶ enqueue ─▶ seal ─▶ dispatch ─▶ sweep_start ─▶ sweep_end ─▶ reply
+//!   admit_us  queue_us  dispatch_us  setup_us    sweep_us     reply_us
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Monotonic stage stamps of one job's trip through the service.
+/// `admit`/`enqueue` always exist (a job is created by admission);
+/// later stages are stamped as the job reaches them.
+#[derive(Copy, Clone, Debug)]
+pub struct Timeline {
+    /// Connection thread passed the admission gate.
+    pub admit: Instant,
+    /// Scheduler pushed the job into its shape bucket.
+    pub enqueue: Instant,
+    /// Batcher sealed the job into a dispatch (full batch or flush).
+    pub seal: Option<Instant>,
+    /// Pool worker picked the dispatch up.
+    pub dispatch: Option<Instant>,
+    /// Sweeping began (for batches: after lane-batch construction).
+    pub sweep_start: Option<Instant>,
+    /// Sweeping finished.
+    pub sweep_end: Option<Instant>,
+}
+
+impl Timeline {
+    pub fn new(admit: Instant, enqueue: Instant) -> Self {
+        Self { admit, enqueue, seal: None, dispatch: None, sweep_start: None, sweep_end: None }
+    }
+
+    /// Fold the stamps into per-stage durations, ending at `reply` (the
+    /// moment the result line is serialized).  A missing stamp
+    /// contributes a zero-length stage (its duration folds into the
+    /// next), keeping the consecutive-intervals invariant.
+    pub fn stages(&self, reply: Instant) -> StageTiming {
+        let us = |a: Instant, b: Instant| b.saturating_duration_since(a).as_micros() as u64;
+        let seal = self.seal.unwrap_or(self.enqueue);
+        let dispatch = self.dispatch.unwrap_or(seal);
+        let sweep_start = self.sweep_start.unwrap_or(dispatch);
+        let sweep_end = self.sweep_end.unwrap_or(sweep_start);
+        StageTiming {
+            admit_us: us(self.admit, self.enqueue),
+            queue_us: us(self.enqueue, seal),
+            dispatch_us: us(seal, dispatch),
+            setup_us: us(dispatch, sweep_start),
+            sweep_us: us(sweep_start, sweep_end),
+            reply_us: us(sweep_end, reply),
+            e2e_us: us(self.admit, reply),
+        }
+    }
+}
+
+/// Per-stage durations (µs) of one completed job — the `"timing"`
+/// object a `"want_timing":true` job gets echoed on the wire.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageTiming {
+    /// Admission gate → scheduler enqueue (channel hand-off).
+    pub admit_us: u64,
+    /// Enqueue → batch seal (waiting for lane-mates).
+    pub queue_us: u64,
+    /// Seal → pool pickup (dispatch hand-off).
+    pub dispatch_us: u64,
+    /// Pickup → sweeping (lane-batch/model construction).
+    pub setup_us: u64,
+    /// The sweeps themselves.
+    pub sweep_us: u64,
+    /// Sweep end → result serialization.
+    pub reply_us: u64,
+    /// Admission → result serialization (≥ the sum of the stages).
+    pub e2e_us: u64,
+}
+
+impl StageTiming {
+    /// Sum of the consecutive stages — ≤ [`Self::e2e_us`] by
+    /// construction (each stage floors to whole µs independently).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.admit_us
+            + self.queue_us
+            + self.dispatch_us
+            + self.setup_us
+            + self.sweep_us
+            + self.reply_us
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("admit_us", json::num(self.admit_us as f64)),
+            ("queue_us", json::num(self.queue_us as f64)),
+            ("dispatch_us", json::num(self.dispatch_us as f64)),
+            ("setup_us", json::num(self.setup_us as f64)),
+            ("sweep_us", json::num(self.sweep_us as f64)),
+            ("reply_us", json::num(self.reply_us as f64)),
+            ("e2e_us", json::num(self.e2e_us as f64)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let us = |key: &str| -> Result<u64> { Ok(v.get(key)?.as_usize()? as u64) };
+        Ok(Self {
+            admit_us: us("admit_us")?,
+            queue_us: us("queue_us")?,
+            dispatch_us: us("dispatch_us")?,
+            setup_us: us("setup_us")?,
+            sweep_us: us("sweep_us")?,
+            reply_us: us("reply_us")?,
+            e2e_us: us("e2e_us")?,
+        })
+    }
+}
+
+/// One completed job's trace as kept in the ring (and returned by
+/// `{"op":"trace"}`).
+#[derive(Clone, Debug)]
+pub struct JobTrace {
+    /// Completion sequence number (monotonic per service).
+    pub seq: u64,
+    pub id: String,
+    /// Shape-bucket label (`WxHxL`) or `"run"` for run jobs.
+    pub shape: String,
+    /// Rung that served the job (`C.1w8`, `A.2`, `M.1`, `run`).
+    pub kind: String,
+    pub ok: bool,
+    pub timing: StageTiming,
+}
+
+impl JobTrace {
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("seq", json::num(self.seq as f64)),
+            ("id", json::str_v(&self.id)),
+            ("shape", json::str_v(&self.shape)),
+            ("kind", json::str_v(&self.kind)),
+            ("ok", Value::Bool(self.ok)),
+            ("timing", self.timing.to_value()),
+        ])
+    }
+}
+
+/// Bounded in-memory ring of the most recent job traces.  Pushed once
+/// per completed job (off the sweep hot path); the mutex guards a
+/// VecDeque rotation and is never held across I/O.
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<RingState>,
+}
+
+struct RingState {
+    next_seq: u64,
+    traces: VecDeque<JobTrace>,
+}
+
+impl TraceRing {
+    /// Traces kept by the service (the `{"op":"trace"}` depth bound).
+    pub const DEFAULT_CAP: usize = 256;
+
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            inner: Mutex::new(RingState { next_seq: 0, traces: VecDeque::new() }),
+        }
+    }
+
+    /// Append one trace (assigning its sequence number), evicting the
+    /// oldest past capacity.
+    pub fn push(&self, mut trace: JobTrace) {
+        let mut g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        trace.seq = g.next_seq;
+        g.next_seq += 1;
+        if g.traces.len() == self.cap {
+            g.traces.pop_front();
+        }
+        g.traces.push_back(trace);
+    }
+
+    /// The most recent `n` traces, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<JobTrace> {
+        let g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let skip = g.traces.len().saturating_sub(n);
+        g.traces.iter().skip(skip).cloned().collect()
+    }
+
+    /// Total traces ever pushed (≥ the ring's current length).
+    pub fn pushed(&self) -> u64 {
+        match self.inner.lock() {
+            Ok(g) => g.next_seq,
+            Err(poisoned) => poisoned.into_inner().next_seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stage_sum_never_exceeds_e2e() {
+        let t0 = Instant::now();
+        let tl = Timeline {
+            admit: t0,
+            enqueue: t0 + Duration::from_micros(3),
+            seal: Some(t0 + Duration::from_micros(1500)),
+            dispatch: Some(t0 + Duration::from_micros(1517)),
+            sweep_start: Some(t0 + Duration::from_micros(1619)),
+            sweep_end: Some(t0 + Duration::from_micros(9_997)),
+        };
+        let s = tl.stages(t0 + Duration::from_micros(10_010));
+        assert_eq!(s.admit_us, 3);
+        assert_eq!(s.queue_us, 1497);
+        assert_eq!(s.dispatch_us, 17);
+        assert_eq!(s.setup_us, 102);
+        assert_eq!(s.sweep_us, 8378);
+        assert_eq!(s.reply_us, 13);
+        assert_eq!(s.e2e_us, 10_010);
+        assert!(s.stage_sum_us() <= s.e2e_us);
+    }
+
+    #[test]
+    fn missing_stamps_fold_into_zero_length_stages() {
+        let t0 = Instant::now();
+        let tl = Timeline::new(t0, t0);
+        let s = tl.stages(t0 + Duration::from_micros(50));
+        assert_eq!(s.queue_us, 0);
+        assert_eq!(s.sweep_us, 0);
+        assert_eq!(s.reply_us, 50);
+        assert_eq!(s.e2e_us, 50);
+        assert!(s.stage_sum_us() <= s.e2e_us);
+    }
+
+    #[test]
+    fn timing_roundtrips_through_json() {
+        let s = StageTiming {
+            admit_us: 1,
+            queue_us: 2,
+            dispatch_us: 3,
+            setup_us: 4,
+            sweep_us: 5,
+            reply_us: 6,
+            e2e_us: 30,
+        };
+        let back = StageTiming::from_value(&s.to_value()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let ring = TraceRing::new(3);
+        for i in 0..5 {
+            ring.push(JobTrace {
+                seq: 0,
+                id: format!("j{i}"),
+                shape: "4x4x8".into(),
+                kind: "C.1w8".into(),
+                ok: true,
+                timing: StageTiming::default(),
+            });
+        }
+        assert_eq!(ring.pushed(), 5);
+        let recent = ring.recent(10);
+        assert_eq!(recent.len(), 3, "capacity bound");
+        assert_eq!(recent[0].id, "j2");
+        assert_eq!(recent[2].id, "j4");
+        assert_eq!(recent[2].seq, 4, "sequence numbers are assigned in push order");
+        assert_eq!(ring.recent(1).len(), 1);
+        assert_eq!(ring.recent(1)[0].id, "j4");
+    }
+}

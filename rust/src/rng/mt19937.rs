@@ -19,6 +19,7 @@ impl Mt19937 {
     /// Regenerate all 624 words — the sequential loop of the paper's
     /// Figure 8 ("two example lines of MT19937").
     fn generate(&mut self) {
+        let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Rng);
         let mt = &mut self.mt;
         for i in 0..N {
             let y = (mt[i] & UPPER_MASK) | (mt[(i + 1) % N] & LOWER_MASK);

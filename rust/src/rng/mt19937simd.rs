@@ -68,6 +68,7 @@ impl<U: SimdU32> Mt19937Simd<U> {
     /// conceptually just change the type of `data` and `y` from single
     /// 32-bit integers to quadruplets".
     fn generate(&mut self) {
+        let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Rng);
         U::with_features(|| self.generate_block());
     }
 

@@ -29,6 +29,8 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
+use crate::obs::Timeline;
+
 use super::job::{JobSpec, ShapeKey};
 
 /// An admitted job waiting for lane-mates.
@@ -41,6 +43,9 @@ pub struct PendingJob {
     pub enqueued: Instant,
     /// Admission sequence number (FIFO evidence).
     pub seq: u64,
+    /// Lifecycle stage stamps (admit → enqueue set here; seal, dispatch
+    /// and the sweep pair stamped as the job moves downstream).
+    pub timeline: Timeline,
 }
 
 /// The shape of work inside a [`Dispatch`].
@@ -92,6 +97,38 @@ impl Dispatch {
             DispatchWork::Single(job) => vec![job],
         }
     }
+
+    /// Shape-bucket label of the jobs inside (`WxHxL`) — uniform within
+    /// a batch by construction.
+    pub fn shape_label(&self) -> String {
+        match &self.work {
+            DispatchWork::Batch(jobs) => jobs[0].spec.shape().to_string(),
+            DispatchWork::Single(job) => job.spec.shape().to_string(),
+        }
+    }
+
+    fn jobs_mut(&mut self) -> &mut [PendingJob] {
+        match &mut self.work {
+            DispatchWork::Batch(jobs) => jobs,
+            DispatchWork::Single(job) => std::slice::from_mut(job),
+        }
+    }
+
+    /// Stamp every member's batch-seal time (the batcher committed this
+    /// dispatch).
+    pub fn stamp_sealed(&mut self, t: Instant) {
+        for job in self.jobs_mut() {
+            job.timeline.seal = Some(t);
+        }
+    }
+
+    /// Stamp every member's pool-pickup time (a worker started the
+    /// dispatch).
+    pub fn stamp_dispatched(&mut self, t: Instant) {
+        for job in self.jobs_mut() {
+            job.timeline.dispatch = Some(t);
+        }
+    }
 }
 
 /// Shape-bucketed job queue with deadline-bounded lane packing.
@@ -138,9 +175,24 @@ impl Batcher {
     /// Admit a job; returns its sequence number.  Jobs that pin the
     /// scalar sampler bypass the shape buckets entirely.
     pub fn push(&mut self, spec: JobSpec, reply: Option<Sender<String>>, now: Instant) -> u64 {
+        self.push_timed(spec, reply, now, now)
+    }
+
+    /// Like [`Self::push`], with a distinct admission-gate stamp for the
+    /// job's timeline (`admit` ≤ `now`): the engine passes the instant
+    /// the connection thread reserved the job's slot, so `admit_us`
+    /// measures the channel hand-off to the scheduler.
+    pub fn push_timed(
+        &mut self,
+        spec: JobSpec,
+        reply: Option<Sender<String>>,
+        admit: Instant,
+        now: Instant,
+    ) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let job = PendingJob { spec, reply, enqueued: now, seq };
+        let job =
+            PendingJob { spec, reply, enqueued: now, seq, timeline: Timeline::new(admit, now) };
         if job.spec.wants_scalar() {
             self.scalar_lane.push_back(job);
         } else if job.spec.wants_multispin() {
@@ -157,12 +209,12 @@ impl Batcher {
     /// the deadline flushes what it has.
     pub fn poll(&mut self, now: Instant) -> Vec<Dispatch> {
         let deadline = self.deadline;
-        self.collect_ready(|oldest| now.saturating_duration_since(oldest) >= deadline)
+        self.collect_ready(now, |oldest| now.saturating_duration_since(oldest) >= deadline)
     }
 
     /// Flush everything regardless of deadline (drain on shutdown).
     pub fn drain(&mut self) -> Vec<Dispatch> {
-        self.collect_ready(|_| true)
+        self.collect_ready(Instant::now(), |_| true)
     }
 
     /// Earliest pending flush deadline — the scheduler's sleep bound.  A
@@ -185,7 +237,7 @@ impl Batcher {
         }
     }
 
-    fn collect_ready<F: Fn(Instant) -> bool>(&mut self, flush: F) -> Vec<Dispatch> {
+    fn collect_ready<F: Fn(Instant) -> bool>(&mut self, now: Instant, flush: F) -> Vec<Dispatch> {
         let width = self.width;
         let mut out = Vec::new();
         // Scalar- and multispin-pinned jobs dispatch immediately, ahead
@@ -210,8 +262,12 @@ impl Batcher {
             }
         }
         self.buckets.retain(|_, queue| !queue.is_empty());
-        for dispatch in &out {
-            self.queued -= dispatch.occupancy();
+        for dispatch in &mut out {
+            dispatch.stamp_sealed(now);
+            // Saturating: `queued` is also surfaced as the queue-depth
+            // gauge, where a transient accounting bug must never wrap
+            // to u64::MAX-ish depths.
+            self.queued = self.queued.saturating_sub(dispatch.occupancy());
         }
         out
     }
@@ -234,7 +290,27 @@ mod tests {
             seed: 1,
             trace_every: 0,
             want_state: false,
+            want_timing: false,
             sampler: None,
+        }
+    }
+
+    #[test]
+    fn dispatched_jobs_carry_sealed_timelines() {
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let admit = Instant::now();
+        let now = admit + Duration::from_micros(50);
+        for i in 0..4 {
+            b.push_timed(spec(&format!("j{i}"), 4, 8), None, admit, now);
+        }
+        let seal_at = now + Duration::from_millis(2);
+        let ds = b.poll(seal_at);
+        assert_eq!(ds.len(), 1);
+        for job in ds.into_iter().next().unwrap().into_jobs() {
+            assert_eq!(job.timeline.admit, admit);
+            assert_eq!(job.timeline.enqueue, now);
+            assert_eq!(job.timeline.seal, Some(seal_at));
+            assert!(job.timeline.dispatch.is_none(), "pool pickup not stamped yet");
         }
     }
 

@@ -33,6 +33,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::SweepPool;
+use crate::obs::{ConfigEcho, JobTrace, Timeline};
 use crate::Result;
 
 use super::batcher::{Batcher, Dispatch};
@@ -64,6 +65,9 @@ impl SubmitPayload {
 pub struct Submission {
     pub payload: SubmitPayload,
     pub reply: Sender<String>,
+    /// When the connection thread passed the admission gate — the
+    /// origin of the job's lifecycle timeline.
+    pub admit: Instant,
 }
 
 /// Why a submission was refused at the admission gate.
@@ -121,9 +125,9 @@ impl Admission {
     }
 
     /// Release one in-system slot (job answered, or admission raced a
-    /// shutdown).
+    /// shutdown).  Saturating: the gauge must never wrap below zero.
     fn settle(&self) {
-        self.metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+        self.metrics.dec_jobs_in_system(1);
     }
 
     /// Backoff hint: one flush deadline per expected dispatch round the
@@ -152,8 +156,9 @@ impl Submitter {
         payload: SubmitPayload,
         reply: Sender<String>,
     ) -> std::result::Result<(), SubmitRejected> {
+        let admit = Instant::now();
         self.admission.try_admit()?;
-        if self.tx.send(Submission { payload, reply }).is_err() {
+        if self.tx.send(Submission { payload, reply, admit }).is_err() {
             self.admission.settle();
             return Err(SubmitRejected::ShuttingDown);
         }
@@ -197,6 +202,12 @@ impl Drop for EngineHandle {
 pub fn start(cfg: &ServiceConfig) -> Result<EngineHandle> {
     let executor = Executor::with_backend(cfg.lanes, cfg.backend, cfg.exp)?;
     let metrics = Arc::new(ServiceMetrics::default());
+    metrics.obs.set_config(ConfigEcho {
+        lanes: executor.width,
+        flush_ms: cfg.flush_ms,
+        max_queue: cfg.max_queue,
+        threads: cfg.threads,
+    });
     let metrics_for_thread = Arc::clone(&metrics);
     let (tx, rx) = channel::<Submission>();
     let threads = cfg.threads;
@@ -239,6 +250,7 @@ fn scheduler_loop(
     // Always-threaded, even for one worker: dispatches must run off the
     // scheduler thread so admission and deadline polling stay live.
     let pool = SweepPool::new_threaded(threads);
+    pool.set_task_hist(Arc::clone(&metrics.obs.pool_task_us));
     let (done_tx, done_rx) = channel::<()>();
     let mut batcher = Batcher::new(executor.width, flush);
     loop {
@@ -299,12 +311,12 @@ fn admit(
             // the serving plan.
             if let Err(e) = executor.admits(&spec) {
                 metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
-                metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+                metrics.dec_jobs_in_system(1);
                 let _ = sub.reply.send(JobResult::error_line(&spec.id, &format!("{e:#}")));
                 return;
             }
             metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-            batcher.push(spec, Some(sub.reply), Instant::now());
+            batcher.push_timed(spec, Some(sub.reply), sub.admit, Instant::now());
             metrics.set_queue_depth(batcher.queued());
         }
         SubmitPayload::Run(job) => {
@@ -312,7 +324,7 @@ fn admit(
             // (admission has already capped its work), so it neither
             // stalls the scheduler nor its connection's reader loop.
             metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-            spawn_run(pool, *job, sub.reply, metrics, done);
+            spawn_run(pool, *job, sub.reply, sub.admit, metrics, done);
         }
     }
 }
@@ -322,7 +334,7 @@ fn admit(
 fn spawn_dispatch(
     pool: &SweepPool,
     executor: Executor,
-    dispatch: Dispatch,
+    mut dispatch: Dispatch,
     metrics: &Arc<ServiceMetrics>,
     done: &Sender<()>,
 ) {
@@ -332,18 +344,46 @@ fn spawn_dispatch(
     let width = executor.width;
     pool.spawn(Box::new(move || {
         let _signal = signal;
+        dispatch.stamp_dispatched(Instant::now());
         let total = dispatch.occupancy();
         metrics.record_dispatch(total, width, dispatch.is_batch(), dispatch.deadline_forced);
+        if dispatch.is_batch() {
+            metrics.obs.fill.record(&dispatch.shape_label(), total, width);
+        }
         let settled = std::cell::Cell::new(0u64);
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             for (job, outcome) in executor.run_dispatch(dispatch) {
+                // Stamp reply *before* serialization: the stage sum must
+                // stay ≤ the e2e the client measures from its own clock.
+                let timing = job.timeline.stages(Instant::now());
+                let shape = job.spec.shape().to_string();
                 let line = match outcome {
-                    Ok(result) => {
+                    Ok(mut result) => {
                         metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        metrics.obs.record_completed(&timing, result.stats.attempts);
+                        metrics.obs.traces.push(JobTrace {
+                            seq: 0,
+                            id: result.id.clone(),
+                            shape,
+                            kind: result.kind.clone(),
+                            ok: true,
+                            timing,
+                        });
+                        if job.spec.want_timing {
+                            result.timing = Some(timing);
+                        }
                         result.to_line()
                     }
                     Err(e) => {
                         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        metrics.obs.traces.push(JobTrace {
+                            seq: 0,
+                            id: job.spec.id.clone(),
+                            shape,
+                            kind: "error".to_string(),
+                            ok: false,
+                            timing,
+                        });
                         JobResult::error_line(&job.spec.id, &format!("{e:#}"))
                     }
                 };
@@ -351,7 +391,7 @@ fn spawn_dispatch(
                     // A gone connection just discards its results.
                     let _ = reply.send(line);
                 }
-                metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+                metrics.dec_jobs_in_system(1);
                 settled.set(settled.get() + 1);
             }
         }));
@@ -361,7 +401,7 @@ fn spawn_dispatch(
             // is never leaked.
             let lost = total as u64 - settled.get();
             metrics.jobs_failed.fetch_add(lost, Ordering::Relaxed);
-            metrics.jobs_in_system.fetch_sub(lost, Ordering::AcqRel);
+            metrics.dec_jobs_in_system(lost);
         }
     }));
 }
@@ -371,6 +411,7 @@ fn spawn_run(
     pool: &SweepPool,
     job: RunJob,
     reply: Sender<String>,
+    admit: Instant,
     metrics: &Arc<ServiceMetrics>,
     done: &Sender<()>,
 ) {
@@ -380,17 +421,36 @@ fn spawn_run(
     pool.spawn(Box::new(move || {
         let _signal = signal;
         let id = job.id.clone();
+        let spins = job.spec.config.total_updates();
+        // A run bypasses the batcher: it "seals" at admission and both
+        // dispatch and sweep begin when the pool picks it up.
+        let mut timeline = Timeline::new(admit, admit);
+        timeline.seal = Some(admit);
+        let picked_up = Instant::now();
+        timeline.dispatch = Some(picked_up);
+        timeline.sweep_start = Some(picked_up);
         let outcome = catch_unwind(AssertUnwindSafe(|| execute_run_job(job)));
+        timeline.sweep_end = Some(Instant::now());
         let (line, ok) = outcome
             .unwrap_or_else(|_| (JobResult::error_line(&id, "run job panicked"), false));
+        let timing = timeline.stages(Instant::now());
         metrics.runs_executed.fetch_add(1, Ordering::Relaxed);
         if ok {
             metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            metrics.obs.record_completed(&timing, spins);
         } else {
             metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
         }
+        metrics.obs.traces.push(JobTrace {
+            seq: 0,
+            id,
+            shape: "run".to_string(),
+            kind: "run".to_string(),
+            ok,
+            timing,
+        });
         let _ = reply.send(line);
-        metrics.jobs_in_system.fetch_sub(1, Ordering::AcqRel);
+        metrics.dec_jobs_in_system(1);
     }));
 }
 
@@ -430,6 +490,7 @@ mod tests {
             seed,
             trace_every: 0,
             want_state: true,
+            want_timing: false,
             sampler: None,
         }
     }
@@ -510,6 +571,24 @@ mod tests {
         assert_eq!(metrics.jobs_in_system.load(Ordering::Relaxed), 0, "every slot settled");
         assert_eq!(metrics.dispatches_in_flight.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.lane_fill_ratio(), 1.0, "the 4-job bucket filled its batch");
+        // Observability rode along: one e2e sample per completed job
+        // (the invariant the CI metrics leg asserts), one trace each.
+        assert_eq!(metrics.obs.e2e_us.snapshot().count(), 6);
+        assert_eq!(metrics.obs.queue_wait_us.snapshot().count(), 6);
+        assert_eq!(metrics.obs.traces.pushed(), 6);
+        let traces = metrics.obs.traces.recent(16);
+        assert!(traces.iter().all(|t| t.ok));
+        assert!(traces.iter().any(|t| t.kind == "run"));
+        for t in &traces {
+            assert!(
+                t.timing.stage_sum_us() <= t.timing.e2e_us,
+                "consecutive stages cannot exceed e2e: {:?}",
+                t.timing
+            );
+        }
+        let fills = metrics.obs.fill.snapshot();
+        assert_eq!(fills["4x4x8"].counts[4], 1, "the full batch recorded occupancy 4");
+        assert!(metrics.obs.pool_task_us.snapshot().count() >= 2, "pool tasks were timed");
     }
 
     /// Bounded admission: over-cap submissions are refused with a

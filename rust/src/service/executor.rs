@@ -103,8 +103,10 @@ impl Executor {
     /// outcome (jobs are handed back so the caller can route replies).
     pub fn run_dispatch(&self, dispatch: Dispatch) -> Vec<(PendingJob, Result<JobResult>)> {
         match dispatch.work {
-            DispatchWork::Single(job) => {
+            DispatchWork::Single(mut job) => {
+                job.timeline.sweep_start = Some(std::time::Instant::now());
                 let outcome = self.run_single(&job.spec);
+                job.timeline.sweep_end = Some(std::time::Instant::now());
                 vec![(job, outcome)]
             }
             DispatchWork::Batch(jobs) => self.run_batch(jobs),
@@ -153,11 +155,14 @@ impl Executor {
             energy_trace: trace,
             state: if spec.want_state { Some(sweeper.state()) } else { None },
             plan: Some(PlanEcho::of(resolved)),
+            // Stage durations are folded in by the engine at reply time
+            // (the executor only stamps the sweep window).
+            timing: None,
         })
     }
 
-    fn run_batch(&self, jobs: Vec<PendingJob>) -> Vec<(PendingJob, Result<JobResult>)> {
-        match self.try_run_batch(&jobs) {
+    fn run_batch(&self, mut jobs: Vec<PendingJob>) -> Vec<(PendingJob, Result<JobResult>)> {
+        match self.try_run_batch(&mut jobs) {
             Ok(results) => jobs.into_iter().zip(results.into_iter().map(Ok)).collect(),
             Err(e) => {
                 // Whole-batch construction failure (cannot happen for
@@ -168,7 +173,7 @@ impl Executor {
         }
     }
 
-    fn try_run_batch(&self, jobs: &[PendingJob]) -> Result<Vec<JobResult>> {
+    fn try_run_batch(&self, jobs: &mut [PendingJob]) -> Result<Vec<JobResult>> {
         let w = self.width;
         let n = jobs.len();
         // n == 1 happens only for sampler-pinned C-rung jobs flushed
@@ -197,9 +202,15 @@ impl Executor {
             &seeds,
             self.exp,
         )?;
+        // Sweeping starts now: everything above (workload builds, lane
+        // interleave, sweeper construction) is the `setup_us` stage.
+        let sweep_start = std::time::Instant::now();
+        for job in jobs.iter_mut() {
+            job.timeline.sweep_start = Some(sweep_start);
+        }
 
         let mut points = BTreeSet::new();
-        for job in jobs {
+        for job in jobs.iter() {
             points.extend(capture_points(&job.spec));
         }
         let mut stats = vec![SweepStats::default(); n];
@@ -228,9 +239,14 @@ impl Executor {
                         energy_trace: std::mem::take(&mut traces[k]),
                         state: if spec.want_state { Some(batch.state_of(k)) } else { None },
                         plan: Some(PlanEcho::of(self.resolved)),
+                        timing: None,
                     });
                 }
             }
+        }
+        let sweep_end = std::time::Instant::now();
+        for job in jobs.iter_mut() {
+            job.timeline.sweep_end = Some(sweep_end);
         }
         Ok(results
             .into_iter()
@@ -277,6 +293,7 @@ mod tests {
             seed: 11,
             trace_every: 0,
             want_state: true,
+            want_timing: false,
             sampler: Some(SamplerSpec::rung(Rung::M1)),
         };
         let exec = Executor::new(4, ExpMode::Fast).unwrap();
@@ -313,6 +330,7 @@ mod tests {
             seed: 1,
             trace_every: 4,
             want_state: false,
+            want_timing: false,
             sampler: None,
         };
         assert_eq!(capture_points(&spec), vec![4, 8, 10]);

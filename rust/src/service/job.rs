@@ -43,6 +43,7 @@
 use crate::coordinator::{Checkpoint, RunReport, RunSpec};
 use crate::engine::{Resolved, Rung, SamplerSpec, Width};
 use crate::ising::builder::{pm_torus_workload, torus_workload, Workload};
+use crate::obs::StageTiming;
 use crate::sweep::SweepStats;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -90,6 +91,11 @@ pub struct JobSpec {
     pub trace_every: usize,
     /// Return the final spin state in the result.
     pub want_state: bool,
+    /// Echo per-stage lifecycle durations (`"timing"`, µs) in the
+    /// result line.  The stages are always *measured* (they feed the
+    /// service latency histograms); this flag only controls the wire
+    /// echo.
+    pub want_timing: bool,
     /// v1: requested sampler spec.  `None` (v0 lines) means "whatever
     /// the service deems best" — the lane-batched C-rung with scalar
     /// fallback.  `rung: a2` forces the scalar reference path; `rung:
@@ -147,6 +153,7 @@ impl JobSpec {
             seed: seed as u32,
             trace_every: us("trace_every", 0)?,
             want_state: v.opt("want_state").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+            want_timing: v.opt("want_timing").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
             sampler: match v.opt("sampler") {
                 Some(sv) => {
                     Some(SamplerSpec::from_value(sv).map_err(|e| anyhow::anyhow!("sampler: {e}"))?)
@@ -276,6 +283,9 @@ impl JobSpec {
             ("trace_every", json::num(self.trace_every as f64)),
             ("want_state", Value::Bool(self.want_state)),
         ];
+        if self.want_timing {
+            pairs.push(("want_timing", Value::Bool(true)));
+        }
         if let Some(s) = self.sampler {
             pairs.push(("protocol_version", json::num(PROTOCOL_VERSION as f64)));
             pairs.push(("sampler", s.to_value()));
@@ -405,8 +415,15 @@ pub enum Request {
     /// A checkpointable full-run job (executed on the sweep pool).
     Run(Box<RunJob>),
     Stats,
+    /// Prometheus text exposition of the service metrics.
+    Metrics,
+    /// The most recent `last` completed-job traces from the trace ring.
+    Trace { last: usize },
     Shutdown,
 }
+
+/// Traces returned by `{"op":"trace"}` when `last` is omitted.
+pub const DEFAULT_TRACE_LAST: usize = 32;
 
 /// Parse one request line: a control op (`{"op": ...}`) or a job object,
 /// in the v1 envelope (`"protocol_version": 1`) or the bare v0 format.
@@ -423,11 +440,23 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(op) = v.opt("op") {
         return match op.as_str()? {
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
+            "trace" => {
+                let last = match v.opt("last") {
+                    None => DEFAULT_TRACE_LAST,
+                    Some(x) => x.as_usize().map_err(|e| anyhow::anyhow!("field \"last\": {e}"))?,
+                };
+                anyhow::ensure!(last >= 1, "trace op needs last >= 1 (got {last})");
+                Ok(Request::Trace { last })
+            }
             "shutdown" => Ok(Request::Shutdown),
             "submit" => Ok(Request::Job(JobSpec::from_value(v.get("job")?)?)),
             "run" => Ok(Request::Run(Box::new(RunJob::from_value(&v)?))),
             other => {
-                anyhow::bail!("unknown op {other:?} (expected stats, shutdown, submit or run)")
+                anyhow::bail!(
+                    "unknown op {other:?} (expected stats, metrics, trace, shutdown, submit or \
+                     run)"
+                )
             }
         };
     }
@@ -497,6 +526,10 @@ pub struct JobResult {
     /// v1: the resolved plan that served the job (`None` only when
     /// parsed back from a v0 line).
     pub plan: Option<PlanEcho>,
+    /// Per-stage lifecycle durations (µs), echoed when the job asked
+    /// with `"want_timing": true`.  The stage sum is ≤ the end-to-end
+    /// latency by construction (consecutive intervals, floor-rounded).
+    pub timing: Option<StageTiming>,
 }
 
 impl JobResult {
@@ -517,6 +550,9 @@ impl JobResult {
         ];
         if let Some(plan) = &self.plan {
             pairs.push(("plan", plan.to_value()));
+        }
+        if let Some(timing) = &self.timing {
+            pairs.push(("timing", timing.to_value()));
         }
         if !self.energy_trace.is_empty() {
             pairs.push(("energy_trace", json::arr_f64(&self.energy_trace)));
@@ -588,6 +624,10 @@ impl JobResult {
                 Some(p) => Some(PlanEcho::from_value(p)?),
                 None => None,
             },
+            timing: match v.opt("timing") {
+                Some(t) => Some(StageTiming::from_value(t)?),
+                None => None,
+            },
         })
     }
 }
@@ -624,10 +664,35 @@ mod tests {
     fn control_ops_parse() {
         assert!(matches!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
         assert!(matches!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(matches!(parse_request(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics));
         let line = format!(r#"{{"op":"submit","job":{}}}"#, base_line());
         assert!(matches!(parse_request(&line).unwrap(), Request::Job(_)));
         assert!(parse_request(r#"{"op":"nope"}"#).is_err());
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn trace_op_parses_with_default_and_explicit_depth() {
+        match parse_request(r#"{"op":"trace"}"#).unwrap() {
+            Request::Trace { last } => assert_eq!(last, DEFAULT_TRACE_LAST),
+            _ => panic!("expected trace"),
+        }
+        match parse_request(r#"{"op":"trace","last":5}"#).unwrap() {
+            Request::Trace { last } => assert_eq!(last, 5),
+            _ => panic!("expected trace"),
+        }
+        assert!(parse_request(r#"{"op":"trace","last":0}"#).is_err());
+    }
+
+    #[test]
+    fn want_timing_parses_and_roundtrips() {
+        let Request::Job(spec) = parse_request(&base_line()).unwrap() else { panic!("job") };
+        assert!(!spec.want_timing, "timing echo is opt-in");
+        let line = r#"{"id":"t1","layers":8,"want_timing":true}"#;
+        let Request::Job(spec) = parse_request(line).unwrap() else { panic!("job") };
+        assert!(spec.want_timing);
+        let Request::Job(again) = parse_request(&spec.to_line()).unwrap() else { panic!("job") };
+        assert!(again.want_timing, "to_line carries the flag");
     }
 
     #[test]
@@ -660,6 +725,15 @@ mod tests {
             energy_trace: vec![-10.0, -11.25],
             state: Some(vec![1.0, -1.0, -1.0, 1.0]),
             plan: Some(PlanEcho { rung: "c1".into(), width: 4, backend: "sse2".into() }),
+            timing: Some(StageTiming {
+                admit_us: 2,
+                queue_us: 1400,
+                dispatch_us: 12,
+                setup_us: 90,
+                sweep_us: 5100,
+                reply_us: 8,
+                e2e_us: 6615,
+            }),
         };
         let line = r.to_line();
         let back = JobResult::from_line(&line).unwrap();
@@ -670,6 +744,9 @@ mod tests {
         assert_eq!(back.energy_trace, r.energy_trace);
         assert_eq!(back.state, r.state);
         assert_eq!(back.plan, r.plan, "v1 results echo the resolved plan");
+        assert_eq!(back.timing, r.timing, "timing echoes through the wire");
+        let timing = back.timing.unwrap();
+        assert!(timing.stage_sum_us() <= timing.e2e_us);
         // The response envelope is versioned.
         let v = Value::parse(&line).unwrap();
         assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), PROTOCOL_VERSION);

@@ -6,10 +6,23 @@
 //! headline figure is the **lane-fill ratio**: of all SIMD lanes the
 //! service dispatched in batches, the fraction that carried a real job
 //! (the rest were deadline-flush padding).
+//!
+//! Beyond the lifetime counters, [`ServiceMetrics`] owns one
+//! [`Obs`] instance: latency/lane-fill histograms, the recent-trace
+//! ring, and windowed rates.  Three wire surfaces read it:
+//!
+//! * `{"op":"stats"}` — counters plus p50/p90/p99 latency summaries,
+//! * `{"op":"metrics"}` — Prometheus text exposition,
+//! * `{"op":"trace"}` — the last N completed-job stage timings.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
-use crate::util::json;
+use crate::harness::bench::{self, HostCaps};
+use crate::obs::prometheus::PromWriter;
+use crate::obs::{phase, HistogramSnapshot, Obs, RateWindow};
+use crate::util::json::{self, Value};
 
 /// Cumulative counters of one running service.
 #[derive(Default)]
@@ -45,6 +58,46 @@ pub struct ServiceMetrics {
     pub jobs_in_system: AtomicU64,
     /// Dispatch rounds handed to the pool and not yet completed.
     pub dispatches_in_flight: AtomicU64,
+    /// Histograms, traces and rates for this instance.
+    pub obs: Obs,
+}
+
+/// One coherent read of every counter.  `snapshot_json` and
+/// `prometheus_text` load each atomic exactly once through this struct,
+/// so derived figures (lane-fill ratio) and their inputs (occupied /
+/// padded) always agree within one emission — reading the atomics twice
+/// can tear against a concurrent dispatch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub jobs_rejected: u64,
+    pub batches_dispatched: u64,
+    pub singles_dispatched: u64,
+    pub deadline_flushes: u64,
+    pub lanes_occupied: u64,
+    pub lanes_padded: u64,
+    pub queue_depth: u64,
+    pub max_queue_depth: u64,
+    pub runs_executed: u64,
+    pub jobs_overloaded: u64,
+    pub jobs_in_system: u64,
+    pub dispatches_in_flight: u64,
+}
+
+impl StatsSnapshot {
+    /// Fraction of dispatched batch lanes that carried a real job
+    /// (1.0 before any batch has been dispatched).
+    pub fn lane_fill_ratio(&self) -> f64 {
+        let occupied = self.lanes_occupied as f64;
+        let padded = self.lanes_padded as f64;
+        if occupied + padded == 0.0 {
+            1.0
+        } else {
+            occupied / (occupied + padded)
+        }
+    }
 }
 
 impl ServiceMetrics {
@@ -77,51 +130,296 @@ impl ServiceMetrics {
         self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
-    /// Fraction of dispatched batch lanes that carried a real job
-    /// (1.0 before any batch has been dispatched).
-    pub fn lane_fill_ratio(&self) -> f64 {
-        let occupied = self.lanes_occupied.load(Ordering::Relaxed) as f64;
-        let padded = self.lanes_padded.load(Ordering::Relaxed) as f64;
-        if occupied + padded == 0.0 {
-            1.0
-        } else {
-            occupied / (occupied + padded)
+    /// Decrement the in-system gauge without risking u64 wrap: a settle
+    /// racing a concurrent reset (or a bookkeeping bug) must saturate at
+    /// zero, not jump to 2^64-1 and wedge admission forever.
+    pub fn dec_jobs_in_system(&self, n: u64) {
+        let mut cur = self.jobs_in_system.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.jobs_in_system.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
         }
     }
 
-    /// Snapshot as a `{"op":"stats", ...}` line.
+    /// Load every counter once.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        StatsSnapshot {
+            jobs_submitted: get(&self.jobs_submitted),
+            jobs_completed: get(&self.jobs_completed),
+            jobs_failed: get(&self.jobs_failed),
+            jobs_rejected: get(&self.jobs_rejected),
+            batches_dispatched: get(&self.batches_dispatched),
+            singles_dispatched: get(&self.singles_dispatched),
+            deadline_flushes: get(&self.deadline_flushes),
+            lanes_occupied: get(&self.lanes_occupied),
+            lanes_padded: get(&self.lanes_padded),
+            queue_depth: get(&self.queue_depth),
+            max_queue_depth: get(&self.max_queue_depth),
+            runs_executed: get(&self.runs_executed),
+            jobs_overloaded: get(&self.jobs_overloaded),
+            jobs_in_system: get(&self.jobs_in_system),
+            dispatches_in_flight: get(&self.dispatches_in_flight),
+        }
+    }
+
+    /// Fraction of dispatched batch lanes that carried a real job
+    /// (1.0 before any batch has been dispatched).
+    pub fn lane_fill_ratio(&self) -> f64 {
+        self.snapshot().lane_fill_ratio()
+    }
+
+    /// Snapshot as a `{"op":"stats", ...}` line.  Every field of the
+    /// original line is preserved; new keys are appended only.
     pub fn snapshot_json(&self) -> String {
-        let get = |a: &AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
-        json::obj(vec![
+        let snap = self.snapshot();
+        let num = |v: u64| json::num(v as f64);
+        let mut fields = vec![
             ("protocol_version", json::num(super::job::PROTOCOL_VERSION as f64)),
             ("op", json::str_v("stats")),
-            ("jobs_submitted", get(&self.jobs_submitted)),
-            ("jobs_completed", get(&self.jobs_completed)),
-            ("jobs_failed", get(&self.jobs_failed)),
-            ("jobs_rejected", get(&self.jobs_rejected)),
-            ("batches_dispatched", get(&self.batches_dispatched)),
-            ("singles_dispatched", get(&self.singles_dispatched)),
-            ("deadline_flushes", get(&self.deadline_flushes)),
-            ("lanes_occupied", get(&self.lanes_occupied)),
-            ("lanes_padded", get(&self.lanes_padded)),
-            ("lane_fill_ratio", json::num(self.lane_fill_ratio())),
-            ("queue_depth", get(&self.queue_depth)),
-            ("max_queue_depth", get(&self.max_queue_depth)),
+            ("jobs_submitted", num(snap.jobs_submitted)),
+            ("jobs_completed", num(snap.jobs_completed)),
+            ("jobs_failed", num(snap.jobs_failed)),
+            ("jobs_rejected", num(snap.jobs_rejected)),
+            ("batches_dispatched", num(snap.batches_dispatched)),
+            ("singles_dispatched", num(snap.singles_dispatched)),
+            ("deadline_flushes", num(snap.deadline_flushes)),
+            ("lanes_occupied", num(snap.lanes_occupied)),
+            ("lanes_padded", num(snap.lanes_padded)),
+            ("lane_fill_ratio", json::num(snap.lane_fill_ratio())),
+            ("queue_depth", num(snap.queue_depth)),
+            ("max_queue_depth", num(snap.max_queue_depth)),
             // Appended fields (protocol back-compat: readers of the
             // original stats line ignore unknown trailing keys).
-            ("runs_executed", get(&self.runs_executed)),
-            ("jobs_overloaded", get(&self.jobs_overloaded)),
-            ("jobs_in_system", get(&self.jobs_in_system)),
-            ("dispatches_in_flight", get(&self.dispatches_in_flight)),
+            ("runs_executed", num(snap.runs_executed)),
+            ("jobs_overloaded", num(snap.jobs_overloaded)),
+            ("jobs_in_system", num(snap.jobs_in_system)),
+            ("dispatches_in_flight", num(snap.dispatches_in_flight)),
+            ("uptime_ms", num(self.obs.uptime_ms())),
+            ("started_at_ms", num(self.obs.started_at_ms())),
+            ("spins_attempted", num(self.obs.spins_attempted.load(Ordering::Relaxed))),
+        ];
+        if let Some(c) = self.obs.config() {
+            fields.push((
+                "config",
+                json::obj(vec![
+                    ("lanes", json::num(c.lanes as f64)),
+                    ("flush_ms", json::num(c.flush_ms as f64)),
+                    ("max_queue", json::num(c.max_queue as f64)),
+                    ("threads", json::num(c.threads as f64)),
+                ]),
+            ));
+        }
+        fields.push((
+            "latency_us",
+            json::obj(vec![
+                ("queue_wait", latency_summary(&self.obs.queue_wait_us.snapshot())),
+                ("exec", latency_summary(&self.obs.exec_us.snapshot())),
+                ("e2e", latency_summary(&self.obs.e2e_us.snapshot())),
+                ("pool_task", latency_summary(&self.obs.pool_task_us.snapshot())),
+            ]),
+        ));
+        let now = Instant::now();
+        fields.push((
+            "rate",
+            json::obj(vec![
+                ("window_secs", json::num(RateWindow::WINDOW_SECS as f64)),
+                (
+                    "jobs_per_sec",
+                    json::num(self.obs.jobs_rate.per_sec(RateWindow::WINDOW_SECS, now)),
+                ),
+                (
+                    "spins_per_sec",
+                    json::num(self.obs.spins_rate.per_sec(RateWindow::WINDOW_SECS, now)),
+                ),
+            ]),
+        ));
+        json::obj(fields).to_string()
+    }
+
+    /// `{"op":"trace"}` reply: the last `last` completed-job traces,
+    /// oldest first.
+    pub fn trace_line(&self, last: usize) -> String {
+        let traces = self.obs.traces.recent(last);
+        json::obj(vec![
+            ("protocol_version", json::num(super::job::PROTOCOL_VERSION as f64)),
+            ("op", json::str_v("trace")),
+            ("traces_recorded", json::num(self.obs.traces.pushed() as f64)),
+            ("count", json::num(traces.len() as f64)),
+            ("traces", Value::Arr(traces.iter().map(|t| t.to_value()).collect())),
         ])
         .to_string()
     }
+
+    /// `{"op":"metrics"}` reply: Prometheus text riding in a JSON line
+    /// (the wire stays line-oriented; scrapers unwrap `"text"`).
+    pub fn metrics_line(&self) -> String {
+        json::obj(vec![
+            ("protocol_version", json::num(super::job::PROTOCOL_VERSION as f64)),
+            ("op", json::str_v("metrics")),
+            ("content_type", json::str_v("text/plain; version=0.0.4")),
+            ("text", json::str_v(&self.prometheus_text())),
+        ])
+        .to_string()
+    }
+
+    /// Prometheus text exposition of everything this instance measures.
+    /// Every sample carries `host` (CPU capability fingerprint) and
+    /// `sha` labels, so scrapes from a fleet of heterogeneous boxes stay
+    /// attributable — the cross-host story of `harness::bench`.
+    pub fn prometheus_text(&self) -> String {
+        let snap = self.snapshot();
+        let (host, sha) = build_labels();
+        let mut w = PromWriter::new(&[("host", host), ("sha", sha)]);
+        let counters: &[(&str, &str, u64)] = &[
+            ("repro_jobs_submitted_total", "Jobs admitted into the batcher.", snap.jobs_submitted),
+            ("repro_jobs_completed_total", "Jobs answered ok.", snap.jobs_completed),
+            ("repro_jobs_failed_total", "Jobs answered with an error.", snap.jobs_failed),
+            ("repro_jobs_rejected_total", "Lines rejected at admission.", snap.jobs_rejected),
+            ("repro_jobs_overloaded_total", "Jobs refused at the queue cap.", snap.jobs_overloaded),
+            ("repro_batches_dispatched_total", "Lane-batch dispatches.", snap.batches_dispatched),
+            ("repro_singles_dispatched_total", "Scalar dispatches.", snap.singles_dispatched),
+            ("repro_deadline_flushes_total", "Deadline-forced dispatches.", snap.deadline_flushes),
+            ("repro_lanes_occupied_total", "Batch lanes with a real job.", snap.lanes_occupied),
+            ("repro_lanes_padded_total", "Batch lanes dispatched as padding.", snap.lanes_padded),
+            ("repro_runs_executed_total", "Spec-carrying run jobs executed.", snap.runs_executed),
+            (
+                "repro_spins_attempted_total",
+                "Spin updates attempted by completed jobs.",
+                self.obs.spins_attempted.load(Ordering::Relaxed),
+            ),
+        ];
+        for &(name, help, value) in counters {
+            w.counter(name, help, value);
+        }
+        let now = Instant::now();
+        let gauges: &[(&str, &str, f64)] = &[
+            ("repro_queue_depth", "Jobs waiting in the batcher.", snap.queue_depth as f64),
+            (
+                "repro_max_queue_depth",
+                "High-water mark of the queue depth.",
+                snap.max_queue_depth as f64,
+            ),
+            (
+                "repro_jobs_in_system",
+                "Jobs admitted but not yet answered.",
+                snap.jobs_in_system as f64,
+            ),
+            (
+                "repro_dispatches_in_flight",
+                "Dispatch rounds executing on the pool.",
+                snap.dispatches_in_flight as f64,
+            ),
+            (
+                "repro_lane_fill_ratio",
+                "Occupied fraction of dispatched batch lanes.",
+                snap.lane_fill_ratio(),
+            ),
+            ("repro_uptime_seconds", "Seconds since serve start.", self.obs.uptime_ms() as f64 / 1e3),
+            (
+                "repro_jobs_per_sec",
+                "Completed jobs per second (10 s window).",
+                self.obs.jobs_rate.per_sec(RateWindow::WINDOW_SECS, now),
+            ),
+            (
+                "repro_spins_per_sec",
+                "Attempted spin updates per second (10 s window).",
+                self.obs.spins_rate.per_sec(RateWindow::WINDOW_SECS, now),
+            ),
+        ];
+        for &(name, help, value) in gauges {
+            w.gauge(name, help, value);
+        }
+        w.histogram_seconds(
+            "repro_queue_wait_seconds",
+            "Enqueue to batch-seal wait.",
+            &self.obs.queue_wait_us.snapshot(),
+        );
+        w.histogram_seconds(
+            "repro_exec_seconds",
+            "Sweep execution time.",
+            &self.obs.exec_us.snapshot(),
+        );
+        w.histogram_seconds(
+            "repro_e2e_seconds",
+            "Admission to reply latency.",
+            &self.obs.e2e_us.snapshot(),
+        );
+        w.histogram_seconds(
+            "repro_pool_task_seconds",
+            "Sweep-pool task wall time.",
+            &self.obs.pool_task_us.snapshot(),
+        );
+        // Per-shape lane-occupancy distribution.  Label values must
+        // outlive the borrow rows, so render them first.
+        let fills = self.obs.fill.snapshot();
+        let mut rows: Vec<(String, String, u64)> = Vec::new();
+        for (shape, f) in &fills {
+            for (k, &c) in f.counts.iter().enumerate() {
+                if c > 0 {
+                    rows.push((shape.clone(), k.to_string(), c));
+                }
+            }
+        }
+        if !rows.is_empty() {
+            let samples: Vec<(Vec<(&str, &str)>, u64)> = rows
+                .iter()
+                .map(|(s, k, c)| (vec![("shape", s.as_str()), ("occupancy", k.as_str())], *c))
+                .collect();
+            w.counter_family(
+                "repro_lane_occupancy_total",
+                "Batch dispatches by shape and occupied-lane count.",
+                &samples,
+            );
+        }
+        if let Some(t) = phase::snapshot() {
+            w.counter_family(
+                "repro_phase_ns_total",
+                "Kernel time by sweep phase (phase-timers build only).",
+                &[
+                    (vec![("phase", "rng")], t.rng_ns),
+                    (vec![("phase", "update")], t.update_ns),
+                    (vec![("phase", "reduce")], t.reduce_ns),
+                ],
+            );
+        }
+        w.gauge("repro_build_info", "Always 1; build metadata rides on the labels.", 1.0);
+        w.finish()
+    }
+}
+
+/// `{count, mean_us, p50_us, p90_us, p99_us}` for one histogram.
+fn latency_summary(snap: &HistogramSnapshot) -> Value {
+    let (p50, p90, p99) = snap.percentiles_us();
+    json::obj(vec![
+        ("count", json::num(snap.count() as f64)),
+        ("mean_us", json::num(snap.mean_us())),
+        ("p50_us", json::num(p50)),
+        ("p90_us", json::num(p90)),
+        ("p99_us", json::num(p99)),
+    ])
+}
+
+/// Host fingerprint + git sha, detected once per process: `git_sha()`
+/// shells out, which must not happen on every scrape.
+fn build_labels() -> (&'static str, &'static str) {
+    static LABELS: OnceLock<(String, String)> = OnceLock::new();
+    let (host, sha) = LABELS.get_or_init(|| (HostCaps::detect().fingerprint(), bench::git_sha()));
+    (host.as_str(), sha.as_str())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::json::Value;
+    use crate::obs::{ConfigEcho, StageTiming};
 
     #[test]
     fn lane_fill_tracks_dispatches() {
@@ -166,5 +464,98 @@ mod tests {
         assert_eq!(v.get("jobs_overloaded").unwrap().as_usize().unwrap(), 1);
         assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
         assert_eq!(v.get("dispatches_in_flight").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn stats_carries_latency_rate_and_config_echo() {
+        let m = ServiceMetrics::default();
+        m.obs.set_config(ConfigEcho { lanes: 8, flush_ms: 25, max_queue: 1024, threads: 2 });
+        let timing =
+            StageTiming { queue_us: 200, sweep_us: 3000, e2e_us: 3500, ..StageTiming::default() };
+        m.obs.record_completed(&timing, 640);
+        m.obs.record_completed(&timing, 640);
+        let v = Value::parse(&m.snapshot_json()).unwrap();
+        let cfg = v.get("config").unwrap();
+        assert_eq!(cfg.get("lanes").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(cfg.get("flush_ms").unwrap().as_usize().unwrap(), 25);
+        assert_eq!(cfg.get("max_queue").unwrap().as_usize().unwrap(), 1024);
+        let e2e = v.get("latency_us").unwrap().get("e2e").unwrap();
+        assert_eq!(e2e.get("count").unwrap().as_usize().unwrap(), 2);
+        let p50 = e2e.get("p50_us").unwrap().as_f64().unwrap();
+        let p99 = e2e.get("p99_us").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} must not exceed p99 {p99}");
+        assert_eq!(v.get("spins_attempted").unwrap().as_usize().unwrap(), 1280);
+        assert_eq!(v.get("rate").unwrap().get("window_secs").unwrap().as_usize().unwrap(), 10);
+        assert!(v.get("uptime_ms").unwrap().as_f64().unwrap() < 60_000.0);
+    }
+
+    /// S1 regression: the in-system gauge must saturate at zero, never
+    /// wrap to 2^64-1 (which would wedge admission forever).
+    #[test]
+    fn dec_jobs_in_system_saturates_at_zero() {
+        let m = ServiceMetrics::default();
+        m.jobs_in_system.store(3, Ordering::Relaxed);
+        m.dec_jobs_in_system(2);
+        assert_eq!(m.jobs_in_system.load(Ordering::Relaxed), 1);
+        m.dec_jobs_in_system(5);
+        assert_eq!(m.jobs_in_system.load(Ordering::Relaxed), 0);
+        m.dec_jobs_in_system(1);
+        assert_eq!(m.jobs_in_system.load(Ordering::Relaxed), 0, "saturating, not wrapping");
+    }
+
+    #[test]
+    fn metrics_line_wraps_valid_prometheus_text() {
+        let m = ServiceMetrics::default();
+        m.record_dispatch(3, 4, true, true);
+        m.obs.fill.record("4x4x8", 3, 4);
+        let timing =
+            StageTiming { queue_us: 50, sweep_us: 900, e2e_us: 1000, ..StageTiming::default() };
+        m.obs.record_completed(&timing, 160);
+        let v = Value::parse(&m.metrics_line()).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "metrics");
+        assert!(v
+            .get("content_type")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("text/plain"));
+        let text = v.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE repro_e2e_seconds histogram"));
+        assert!(text.contains("repro_e2e_seconds_count"));
+        assert!(text.contains(r#"repro_lane_occupancy_total"#));
+        assert!(text.contains(r#"shape="4x4x8""#));
+        assert!(text.contains("repro_lane_fill_ratio"));
+        assert!(text.contains("repro_build_info"));
+        // Every sample line carries the common labels.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert!(line.contains("host=\""), "missing host label: {line}");
+            assert!(line.contains("sha=\""), "missing sha label: {line}");
+        }
+    }
+
+    #[test]
+    fn trace_line_reports_recent_jobs_oldest_first() {
+        use crate::obs::JobTrace;
+        let m = ServiceMetrics::default();
+        for i in 0..5u64 {
+            m.obs.traces.push(JobTrace {
+                seq: 0,
+                id: format!("j{i}"),
+                shape: "4x4x8".to_string(),
+                kind: "result".to_string(),
+                ok: true,
+                timing: StageTiming { e2e_us: 100 + i, ..StageTiming::default() },
+            });
+        }
+        let v = Value::parse(&m.trace_line(3)).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "trace");
+        assert_eq!(v.get("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("traces_recorded").unwrap().as_usize().unwrap(), 5);
+        let traces = match v.get("traces").unwrap() {
+            Value::Arr(ts) => ts,
+            other => panic!("traces must be an array, got {other:?}"),
+        };
+        assert_eq!(traces[0].get("id").unwrap().as_str().unwrap(), "j2");
+        assert_eq!(traces[2].get("id").unwrap().as_str().unwrap(), "j4");
     }
 }

@@ -33,7 +33,10 @@
 //!   differential contract).
 //! * [`metrics::ServiceMetrics`] exposes queue depth, batch occupancy
 //!   and the lane-fill ratio — the service-level analogue of the paper's
-//!   "fraction of vector width utilized".
+//!   "fraction of vector width utilized" — plus the [`crate::obs`]
+//!   surface: `{"op":"stats"}` latency percentiles, `{"op":"trace"}`
+//!   per-job stage timings, and `{"op":"metrics"}` Prometheus text
+//!   (also emitted periodically with `--metrics-every N`).
 //!
 //! Frontends: `repro serve --listen HOST:PORT` (TCP JSON-lines) or
 //! `repro serve` (stdin/stdout); `repro submit` is the client and
@@ -74,6 +77,10 @@ pub struct ServiceConfig {
     /// `{"error":"overloaded","retry_after_ms":...}` line (0 =
     /// unbounded).
     pub max_queue: usize,
+    /// Emit a Prometheus text snapshot to stderr every N seconds
+    /// (`--metrics-every N`; 0 = off).  Stderr, not stdout: the stdout
+    /// stream carries protocol lines in stdin mode.
+    pub metrics_every_secs: u64,
 }
 
 impl Default for ServiceConfig {
@@ -85,6 +92,7 @@ impl Default for ServiceConfig {
             flush_ms: 25,
             exp: ExpMode::Fast,
             max_queue: 1024,
+            metrics_every_secs: 0,
         }
     }
 }

@@ -37,6 +37,11 @@ pub fn serve_tcp(listener: TcpListener, cfg: &ServiceConfig) -> Result<()> {
     listener.set_nonblocking(true)?;
     let engine = engine::start(cfg)?;
     let shutdown = Arc::new(AtomicBool::new(false));
+    let emitter = spawn_metrics_emitter(
+        Arc::clone(&engine.metrics),
+        cfg.metrics_every_secs,
+        Arc::clone(&shutdown),
+    );
     let mut connections: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut accept_error: Option<std::io::Error> = None;
     while !shutdown.load(Ordering::SeqCst) {
@@ -73,10 +78,40 @@ pub fn serve_tcp(listener: TcpListener, cfg: &ServiceConfig) -> Result<()> {
         let _ = conn.join();
     }
     engine.shutdown();
+    if let Some(emitter) = emitter {
+        let _ = emitter.join();
+    }
     match accept_error {
         Some(e) => Err(e.into()),
         None => Ok(()),
     }
+}
+
+/// Periodically write a Prometheus text snapshot to **stderr** (stdout
+/// carries protocol lines in stdin mode) until `stop` flips.  Polls the
+/// flag in short steps so shutdown never waits out a full period.
+fn spawn_metrics_emitter(
+    metrics: Arc<ServiceMetrics>,
+    every_secs: u64,
+    stop: Arc<AtomicBool>,
+) -> Option<thread::JoinHandle<()>> {
+    if every_secs == 0 {
+        return None;
+    }
+    Some(thread::spawn(move || {
+        let period = Duration::from_secs(every_secs);
+        let step = Duration::from_millis(100);
+        let mut next = std::time::Instant::now() + period;
+        while !stop.load(Ordering::SeqCst) {
+            thread::sleep(step.min(period));
+            if std::time::Instant::now() >= next {
+                let mut err = std::io::stderr().lock();
+                let _ = err.write_all(metrics.prometheus_text().as_bytes());
+                let _ = err.flush();
+                next += period;
+            }
+        }
+    }))
 }
 
 /// Serve from stdin, streaming result lines to stdout; returns at EOF
@@ -94,7 +129,12 @@ pub fn serve_stdin(cfg: &ServiceConfig) -> Result<()> {
         }
     });
     let submitter = engine.submitter();
-    let shutdown = AtomicBool::new(false);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let emitter = spawn_metrics_emitter(
+        Arc::clone(&engine.metrics),
+        cfg.metrics_every_secs,
+        Arc::clone(&shutdown),
+    );
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
         let Ok(line) = line else { break };
@@ -108,7 +148,11 @@ pub fn serve_stdin(cfg: &ServiceConfig) -> Result<()> {
     }
     drop(line_tx);
     drop(submitter);
+    shutdown.store(true, Ordering::SeqCst); // stop the emitter at EOF too
     engine.shutdown(); // drains queued jobs; their reply clones then drop
+    if let Some(emitter) = emitter {
+        let _ = emitter.join();
+    }
     let _ = writer.join();
     Ok(())
 }
@@ -190,6 +234,12 @@ fn handle_line(
         }
         Ok(Request::Stats) => {
             let _ = line_tx.send(metrics.snapshot_json());
+        }
+        Ok(Request::Metrics) => {
+            let _ = line_tx.send(metrics.metrics_line());
+        }
+        Ok(Request::Trace { last }) => {
+            let _ = line_tx.send(metrics.trace_line(last));
         }
         Ok(Request::Shutdown) => {
             shutdown.store(true, Ordering::SeqCst);

@@ -177,11 +177,16 @@ impl<U: SimdU32> BatchSweeper for C1ReplicaBatch<U> {
             neg_betas[k] = -b;
         }
         let mut flips = [0u64; MAX_LANES];
-        U::with_features(|| {
-            for _ in 0..n_sweeps {
-                self.sweep_once(&neg_betas[..w], &mut flips);
-            }
-        });
+        {
+            // Whole-loop guard: `update` includes nested RNG block
+            // regeneration (exclusive update time = update - rng).
+            let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Update);
+            U::with_features(|| {
+                for _ in 0..n_sweeps {
+                    self.sweep_once(&neg_betas[..w], &mut flips);
+                }
+            });
+        }
         // Per-lane A.2 semantics: one spin per decision, so groups ==
         // attempts and a "group with flip" is just a flip.
         let per_lane_attempts = (n_sweeps * self.rb.n_spins) as u64;
@@ -196,6 +201,7 @@ impl<U: SimdU32> BatchSweeper for C1ReplicaBatch<U> {
     }
 
     fn energy_of(&mut self, lane: usize) -> f64 {
+        let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Reduce);
         let st = self.rb.extract_lane(&self.s, lane);
         self.rb.models[lane].total_energy(&st)
     }

@@ -341,6 +341,9 @@ impl<U: SimdU32> Sweeper for M1MultiSpin<U> {
     fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
         let mut stats = SweepStats::default();
         let table = self.thresholds(beta);
+        // Whole-loop guard: `update` includes nested RNG regeneration
+        // (exclusive update time = update - rng).
+        let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Update);
         for _ in 0..n_sweeps {
             self.sweep_once(&table, &mut stats);
         }
@@ -348,6 +351,7 @@ impl<U: SimdU32> Sweeper for M1MultiSpin<U> {
     }
 
     fn energy(&mut self) -> f64 {
+        let _g = crate::obs::phase::timed(crate::obs::phase::Phase::Reduce);
         let s = self.unpack_state();
         self.model.total_energy(&s)
     }

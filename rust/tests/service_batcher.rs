@@ -30,6 +30,7 @@ fn spec(id: &str, shape: (usize, usize, usize), sweeps: usize, seed: u32) -> Job
         seed,
         trace_every: 0,
         want_state: true,
+        want_timing: false,
         sampler: None,
     }
 }
@@ -206,10 +207,12 @@ fn batched_energy_traces_match_scalar_reference() {
 }
 
 fn pending(spec: JobSpec) -> vectorising::service::batcher::PendingJob {
+    let now = Instant::now();
     vectorising::service::batcher::PendingJob {
         spec,
         reply: None,
-        enqueued: Instant::now(),
+        enqueued: now,
         seq: 0,
+        timeline: vectorising::obs::Timeline::new(now, now),
     }
 }

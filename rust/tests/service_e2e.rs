@@ -34,6 +34,7 @@ fn spec(id: &str, shape: (usize, usize, usize), seed: u32) -> JobSpec {
         seed,
         trace_every: 0,
         want_state: true,
+        want_timing: false,
         sampler: None,
     }
 }
@@ -204,6 +205,125 @@ fn served_jobs_are_bit_exact_and_uniform_streams_fill_lanes() {
     }
 
     // Shutdown stops the server; serve_tcp returns cleanly.
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
+
+/// The observability surface over the wire (ISSUE 8): a
+/// `"want_timing":true` job echoes consecutive per-stage durations
+/// whose sum is bounded by its end-to-end latency; `{"op":"stats"}`
+/// grows latency percentiles, rates and a config echo while keeping
+/// every pre-existing field; `{"op":"trace"}` returns the recent job
+/// traces from the bounded ring; and `{"op":"metrics"}` returns a
+/// Prometheus text exposition whose e2e histogram count equals the
+/// completed-jobs counter.
+#[test]
+fn observability_ops_expose_timings_traces_and_prometheus_text() {
+    let cfg = ServiceConfig { lanes: 4, threads: 1, flush_ms: 50, ..ServiceConfig::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+
+    // One full lane-batch of timed jobs plus one untimed straggler that
+    // flushes on the deadline.
+    let mut jobs: Vec<JobSpec> = (0..4)
+        .map(|i| {
+            let mut s = spec(&format!("t{i}"), (4, 4, 8), 600 + i as u32);
+            s.want_timing = true;
+            s
+        })
+        .collect();
+    jobs.push(spec("plain", (4, 4, 8), 700));
+    let served = roundtrip(addr, &jobs.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_eq!(served.len(), 5, "{served:?}");
+    for line in &served {
+        let r = JobResult::from_line(line).unwrap();
+        if r.id == "plain" {
+            assert!(r.timing.is_none(), "timing echo is opt-in: {line}");
+        } else {
+            let t = r.timing.unwrap_or_else(|| panic!("want_timing job echoes timing: {line}"));
+            assert!(
+                t.stage_sum_us() <= t.e2e_us,
+                "job {}: stage sum {} exceeds e2e {}",
+                r.id,
+                t.stage_sum_us(),
+                t.e2e_us
+            );
+            assert!(t.e2e_us > 0, "a swept job takes measurable time: {line}");
+            assert!(t.sweep_us > 0, "the sweep stage is stamped: {line}");
+        }
+    }
+
+    // Stats: every pre-existing field still present, plus the
+    // observability extensions.
+    let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
+    assert!(v.get("lane_fill_ratio").unwrap().as_f64().unwrap() > 0.0);
+    let e2e = v.get("latency_us").unwrap().get("e2e").unwrap();
+    assert_eq!(
+        e2e.get("count").unwrap().as_usize().unwrap(),
+        5,
+        "the e2e histogram counts every completed job: {}",
+        stats[0]
+    );
+    let p50 = e2e.get("p50_us").unwrap().as_f64().unwrap();
+    let p99 = e2e.get("p99_us").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p50 <= p99, "ordered positive percentiles: p50={p50} p99={p99}");
+    let cfg_echo = v.get("config").unwrap();
+    assert_eq!(cfg_echo.get("lanes").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(cfg_echo.get("flush_ms").unwrap().as_usize().unwrap(), 50);
+    assert!(v.get("uptime_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.get("started_at_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("rate").unwrap().get("jobs_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+
+    // Trace: the three most recent of the five recorded traces.
+    let tr = roundtrip(addr, &["{\"op\":\"trace\",\"last\":3}".to_string()]);
+    let v = Value::parse(&tr[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "trace");
+    assert_eq!(v.get("traces_recorded").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(v.get("count").unwrap().as_usize().unwrap(), 3);
+    let traces = match v.get("traces").unwrap() {
+        Value::Arr(a) => a,
+        other => panic!("traces must be an array: {other:?}"),
+    };
+    for t in traces {
+        assert!(t.get("ok").unwrap().as_bool().unwrap(), "{tr:?}");
+        assert_eq!(t.get("shape").unwrap().as_str().unwrap(), "4x4x8");
+        let timing = t.get("timing").unwrap();
+        assert!(timing.get("e2e_us").unwrap().as_usize().unwrap() > 0);
+    }
+
+    // Metrics: Prometheus text riding in a JSON envelope, counters
+    // agreeing with the stats counters.
+    let m = roundtrip(addr, &["{\"op\":\"metrics\"}".to_string()]);
+    let v = Value::parse(&m[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "metrics");
+    assert!(
+        v.get("content_type").unwrap().as_str().unwrap().starts_with("text/plain"),
+        "{}",
+        m[0]
+    );
+    let text = v.get("text").unwrap().as_str().unwrap().to_string();
+    assert!(text.contains("# TYPE repro_jobs_completed_total counter"), "{text}");
+    assert!(text.contains("# TYPE repro_e2e_seconds histogram"), "{text}");
+    assert!(text.contains("le=\"+Inf\""), "{text}");
+    assert!(text.contains("repro_build_info"), "{text}");
+    assert!(text.contains("repro_lane_occupancy_total"), "{text}");
+    let completed = text
+        .lines()
+        .find(|l| l.starts_with("repro_jobs_completed_total"))
+        .unwrap_or_else(|| panic!("missing completed counter:\n{text}"));
+    assert!(completed.ends_with(" 5"), "{completed}");
+    let e2e_count = text
+        .lines()
+        .find(|l| l.starts_with("repro_e2e_seconds_count"))
+        .unwrap_or_else(|| panic!("missing e2e histogram count:\n{text}"));
+    assert!(e2e_count.ends_with(" 5"), "histogram count == jobs completed: {e2e_count}");
+
     let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
     assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
     server_thread.join().unwrap();
