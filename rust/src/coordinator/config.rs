@@ -119,6 +119,19 @@ impl RunConfig {
             }
             return self.validate_common();
         }
+        if spec.rung.is_accel() {
+            // The software device sweeps in flat A.2 order, so the
+            // A-ladder's multiple-of-4 interlacing rule does not apply.
+            // b2's coalesced layout pair-packs the tau ring, so it also
+            // needs an even layer count (same parity argument as m1).
+            if self.layers < 2 {
+                anyhow::bail!("the accel rungs need layers >= 2 (got {})", self.layers);
+            }
+            if spec.rung == crate::engine::Rung::B2 && self.layers % 2 != 0 {
+                anyhow::bail!("b2 needs an even layer count >= 2 (got {})", self.layers);
+            }
+            return self.validate_common();
+        }
         self.validate()
     }
 
@@ -395,6 +408,25 @@ mod tests {
         assert!(bad.validate_for(SweepKind::C1ReplicaBatch).is_err());
         let one_layer = RunConfig { layers: 1, ..RunConfig::default() };
         assert!(one_layer.validate_for(SweepKind::C1ReplicaBatch).is_err());
+    }
+
+    #[test]
+    fn rung_aware_validation_covers_the_accel_rungs() {
+        use crate::engine::{Rung, SamplerSpec};
+        let b1 = SamplerSpec::rung(Rung::B1);
+        let b2 = SamplerSpec::rung(Rung::B2);
+        let shallow = RunConfig { layers: 2, ..RunConfig::default() };
+        shallow.validate_for_spec(&b1).unwrap();
+        shallow.validate_for_spec(&b2).unwrap();
+        // b1 takes any depth >= 2; b2's pair-packed tau ring needs even.
+        let odd = RunConfig { layers: 9, ..RunConfig::default() };
+        odd.validate_for_spec(&b1).unwrap();
+        assert!(odd.validate_for_spec(&b2).is_err());
+        let one = RunConfig { layers: 1, ..RunConfig::default() };
+        assert!(one.validate_for_spec(&b1).is_err());
+        // the common rules still apply
+        let bad = RunConfig { layers: 2, width: 7, ..RunConfig::default() };
+        assert!(bad.validate_for_spec(&b1).is_err());
     }
 
     #[test]

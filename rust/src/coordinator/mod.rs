@@ -607,6 +607,29 @@ mod tests {
     }
 
     #[test]
+    fn run_spec_covers_the_accel_rungs() {
+        // The B-rungs run through the per-replica ensemble on the
+        // software device — full PT run, plan echo, checkpointable.
+        let rs = RunSpec::new(small(), crate::engine::SamplerSpec::rung(Rung::B2));
+        let rep = run_spec(&rs).unwrap();
+        assert_eq!(rep.kind, "B.2");
+        assert_eq!(rep.plans.len(), 1);
+        assert_eq!(rep.plans[0].resolved.width, 32);
+        assert_eq!(rep.total_attempts, rs.config.total_updates());
+        assert!(rep.total_flips > 0);
+        // b2 needs an even depth; the structured rejection routes the
+        // caller at b1.
+        let odd = RunSpec::new(
+            RunConfig { layers: 9, ..small() },
+            crate::engine::SamplerSpec::rung(Rung::B2),
+        );
+        assert!(run_spec(&odd).is_err());
+        let odd_b1 =
+            RunSpec::new(RunConfig { layers: 9, ..small() }, crate::engine::SamplerSpec::rung(Rung::B1));
+        assert_eq!(run_spec(&odd_b1).unwrap().total_attempts, odd_b1.config.total_updates());
+    }
+
+    #[test]
     fn m1_checkpoint_resumes_bit_exactly() {
         let dir = std::env::temp_dir().join("vectorising_coordinator_m1_resume");
         let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,133 @@
+//! Grid/block/warp decomposition of the lattice.
+//!
+//! The software device mirrors the CUDA execution hierarchy: a kernel
+//! launch covers the whole lattice with a **grid** of equally sized
+//! **blocks**; each block executes its threads in **warps** of 32 in
+//! SIMT lockstep and owns a shared-memory staging tile
+//! ([`crate::device::sweeper`] reuses one tile warp-by-warp).  One
+//! device thread owns one spin, in the same flat layer-major order the
+//! scalar A.2 reference walks — the decomposition changes *where* the
+//! data lives and *how* it is fetched, never the visit order, which is
+//! what keeps B.1/B.2 bit-exact to A.2.
+
+/// Threads per warp — the SIMT lockstep width (fixed by the model; the
+/// host SIMD backend tiles it in 4/8/16-lane chunks).
+pub const WARP_WIDTH: usize = 32;
+
+/// Threads per block (8 warps), the shared-memory cooperation domain.
+pub const BLOCK_THREADS: usize = 256;
+
+/// A kernel-launch geometry over `n_threads` spins.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct DeviceGrid {
+    /// Total threads = total spins.
+    pub n_threads: usize,
+    /// Threads per block.
+    pub block_threads: usize,
+    /// Blocks in the grid (last one may be partial).
+    pub n_blocks: usize,
+}
+
+impl DeviceGrid {
+    /// Launch geometry covering `n_threads` spins with [`BLOCK_THREADS`]
+    /// threads per block.
+    pub fn over(n_threads: usize) -> DeviceGrid {
+        let block_threads = BLOCK_THREADS;
+        let n_blocks = n_threads.div_ceil(block_threads).max(1);
+        DeviceGrid { n_threads, block_threads, n_blocks }
+    }
+
+    /// Warps in a full block.
+    pub fn warps_per_block(&self) -> usize {
+        self.block_threads.div_ceil(WARP_WIDTH)
+    }
+
+    /// Total warps launched (partial trailing warp included).
+    pub fn n_warps(&self) -> usize {
+        self.n_threads.div_ceil(WARP_WIDTH)
+    }
+
+    /// Iterate the grid's blocks in launch order.
+    pub fn blocks(&self) -> impl Iterator<Item = BlockSpan> + '_ {
+        let g = *self;
+        (0..g.n_blocks).map(move |b| {
+            let start = b * g.block_threads;
+            let len = g.block_threads.min(g.n_threads - start);
+            BlockSpan { index: b, start, len }
+        })
+    }
+
+    /// CUDA-style launch summary, used in plan notes and `repro plan`.
+    pub fn describe(&self) -> String {
+        format!(
+            "grid<<<{}, {}>>> ({} warps of {})",
+            self.n_blocks,
+            self.block_threads,
+            self.n_warps(),
+            WARP_WIDTH
+        )
+    }
+}
+
+/// One block's slice of the thread range.
+#[derive(Copy, Clone, Debug)]
+pub struct BlockSpan {
+    pub index: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+impl BlockSpan {
+    /// The block's warps in order; the last may be partial.
+    pub fn warps(&self) -> impl Iterator<Item = WarpSpan> + '_ {
+        let (start, len) = (self.start, self.len);
+        (0..len.div_ceil(WARP_WIDTH)).map(move |w| {
+            let off = w * WARP_WIDTH;
+            WarpSpan {
+                start: start + off,
+                lanes: WARP_WIDTH.min(len - off),
+            }
+        })
+    }
+}
+
+/// One warp's contiguous lane→spin assignment.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct WarpSpan {
+    /// First spin index owned by lane 0.
+    pub start: usize,
+    /// Active lanes (≤ 32; < 32 only for the grid's trailing warp).
+    pub lanes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_partitions_every_thread_exactly_once() {
+        for n in [1usize, 31, 32, 33, 255, 256, 257, 1024, 4096, 5000] {
+            let g = DeviceGrid::over(n);
+            let mut next = 0usize;
+            let mut warps = 0usize;
+            for b in g.blocks() {
+                assert_eq!(b.start, next);
+                for w in b.warps() {
+                    assert_eq!(w.start, next);
+                    assert!(w.lanes >= 1 && w.lanes <= WARP_WIDTH);
+                    next += w.lanes;
+                    warps += 1;
+                }
+            }
+            assert_eq!(next, n, "n={n}");
+            assert_eq!(warps, g.n_warps(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn describe_is_cuda_flavoured() {
+        let g = DeviceGrid::over(4096);
+        assert_eq!(g.n_blocks, 16);
+        assert_eq!(g.describe(), "grid<<<16, 256>>> (128 warps of 32)");
+    }
+}

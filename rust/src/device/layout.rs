@@ -1,0 +1,320 @@
+//! The two global-memory layouts of the paper's §3.2 GPU comparison.
+//!
+//! Per the paper, the *only* difference between the B.1 and B.2 kernels
+//! is how the spin/field state is organized in global memory:
+//!
+//! * [`DeviceLayout::B1Naive`] — the CPU data structure transplanted
+//!   verbatim: one 16-byte per-spin record `{s, h_space, h_tau, pad}`
+//!   (array-of-structs), reached through an index table the way the
+//!   naive kernel dereferences its neighbour lists.  A warp touching 32
+//!   records gathers 32 disjoint 16-byte chunks — every access
+//!   serializes into per-lane transactions, and there is no
+//!   shared-memory staging.
+//! * [`DeviceLayout::B2Coalesced`] — the reorganized version: separate
+//!   contiguous `s` / `h_space` / `h_tau` arrays (struct-of-arrays), so
+//!   a warp's 32 lanes read 32 adjacent words in one coalesced
+//!   transaction per 128-byte segment, staged once into the block's
+//!   shared tile and then fed to the vector units.
+//!
+//! Both layouts store bit-identical f32 values in the same logical
+//! (layer-major) index space; only addressing differs, which is the
+//! invariant the differential tests pin.
+
+use super::grid::WarpSpan;
+use super::memory::DeviceStats;
+
+/// Words per B.1 record: `{s, h_space, h_tau, pad}`.
+pub const RECORD_WORDS: usize = 4;
+
+/// Which of the paper's two GPU memory organizations a device run uses.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DeviceLayout {
+    /// Array-of-structs records behind an index-table gather (B.1).
+    B1Naive,
+    /// Struct-of-arrays contiguous streams (B.2).
+    B2Coalesced,
+}
+
+impl DeviceLayout {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceLayout::B1Naive => "naive (AoS records + index gather)",
+            DeviceLayout::B2Coalesced => "coalesced (SoA streams + shared tile)",
+        }
+    }
+}
+
+/// The device's global memory holding spins and effective fields in one
+/// of the two layouts.  All indices are logical layer-major spin ids;
+/// the layout decides the physical address and the transaction cost.
+pub enum GlobalMemory {
+    Naive {
+        /// `RECORD_WORDS` f32 words per spin.
+        records: Vec<f32>,
+        /// Index table `spin id -> record id` (identity here, but the
+        /// kernel still loads it and gathers through it, exactly like
+        /// the naive port's neighbour-table indirection).
+        index: Vec<u32>,
+    },
+    Coalesced {
+        s: Vec<f32>,
+        h_space: Vec<f32>,
+        h_tau: Vec<f32>,
+    },
+}
+
+impl GlobalMemory {
+    /// Upload `s0` and its effective fields into a fresh device
+    /// allocation in the given layout.
+    pub fn build(layout: DeviceLayout, s0: &[f32], hs: Vec<f32>, ht: Vec<f32>) -> GlobalMemory {
+        let n = s0.len();
+        debug_assert_eq!(hs.len(), n);
+        debug_assert_eq!(ht.len(), n);
+        match layout {
+            DeviceLayout::B1Naive => {
+                let mut records = vec![0f32; n * RECORD_WORDS];
+                for i in 0..n {
+                    let r = i * RECORD_WORDS;
+                    records[r] = s0[i];
+                    records[r + 1] = hs[i];
+                    records[r + 2] = ht[i];
+                }
+                let index = (0..n as u32).collect();
+                GlobalMemory::Naive { records, index }
+            }
+            DeviceLayout::B2Coalesced => GlobalMemory::Coalesced {
+                s: s0.to_vec(),
+                h_space: hs,
+                h_tau: ht,
+            },
+        }
+    }
+
+    pub fn layout(&self) -> DeviceLayout {
+        match self {
+            GlobalMemory::Naive { .. } => DeviceLayout::B1Naive,
+            GlobalMemory::Coalesced { .. } => DeviceLayout::B2Coalesced,
+        }
+    }
+
+    pub fn n_spins(&self) -> usize {
+        match self {
+            GlobalMemory::Naive { index, .. } => index.len(),
+            GlobalMemory::Coalesced { s, .. } => s.len(),
+        }
+    }
+
+    /// Uncounted register/tile-resident read of a spin (the lane already
+    /// holds it from its candidate fetch).
+    #[inline]
+    pub fn s_raw(&self, i: usize) -> f32 {
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                records[index[i] as usize * RECORD_WORDS]
+            }
+            GlobalMemory::Coalesced { s, .. } => s[i],
+        }
+    }
+
+    /// Uncounted read of a spin's effective-field sum, in A.2's
+    /// `h_space[i] + h_tau[i]` evaluation order.
+    #[inline]
+    pub fn hsum_raw(&self, i: usize) -> f32 {
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                let r = index[i] as usize * RECORD_WORDS;
+                records[r + 1] + records[r + 2]
+            }
+            GlobalMemory::Coalesced { s: _, h_space, h_tau } => h_space[i] + h_tau[i],
+        }
+    }
+
+    /// Per-lane gather of one spin's record from global memory — the
+    /// B.1 candidate path and both layouts' divergent replays.  Always
+    /// a serialized transaction.
+    #[inline]
+    pub fn gather_spin(&self, i: usize, dev: &mut DeviceStats) -> (f32, f32) {
+        dev.strided_access(1);
+        (self.s_raw(i), self.hsum_raw(i))
+    }
+
+    /// Model the B.1 kernel's coalesced read of a warp's index-table row
+    /// (the one access the naive port *does* get to coalesce).
+    #[inline]
+    pub fn read_index_row(&self, warp: WarpSpan, dev: &mut DeviceStats) {
+        if let GlobalMemory::Naive { .. } = self {
+            dev.coalesced_access(warp.start as u64 * 4, warp.lanes as u64 * 4);
+        }
+    }
+
+    /// Stage a warp's spins and field sums into the block's shared tile
+    /// (B.2 only — the naive kernel never copies to shared memory).
+    /// Counts one coalesced stream per global array plus the shared
+    /// stores that fill the tile.
+    pub fn stage_warp(
+        &self,
+        warp: WarpSpan,
+        s_tile: &mut [f32],
+        hsum_tile: &mut [f32],
+        dev: &mut DeviceStats,
+    ) {
+        let (start, w) = (warp.start, warp.lanes);
+        match self {
+            GlobalMemory::Coalesced { s, h_space, h_tau } => {
+                s_tile[..w].copy_from_slice(&s[start..start + w]);
+                for k in 0..w {
+                    hsum_tile[k] = h_space[start + k] + h_tau[start + k];
+                }
+                let (off, len) = (start as u64 * 4, w as u64 * 4);
+                dev.coalesced_access(off, len); // s stream
+                dev.coalesced_access(off, len); // h_space stream
+                dev.coalesced_access(off, len); // h_tau stream
+                dev.shared_stores += 2 * w as u64; // s tile + hsum tile
+            }
+            GlobalMemory::Naive { .. } => {
+                unreachable!("the naive kernel has no shared-memory staging")
+            }
+        }
+    }
+
+    /// Negate a spin after an accepted flip.  B.1 writes its record
+    /// per-thread (serialized); B.2 defers to the warp's single
+    /// coalesced write-back ([`GlobalMemory::write_back_s`]).
+    #[inline]
+    pub fn flip_s(&mut self, i: usize, dev: &mut DeviceStats) {
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                let r = index[i] as usize * RECORD_WORDS;
+                records[r] = -records[r];
+                dev.strided_access(1);
+            }
+            GlobalMemory::Coalesced { s, .. } => s[i] = -s[i],
+        }
+    }
+
+    /// B.2's once-per-warp coalesced store of the (possibly flipped)
+    /// spin lane values back to the `s` stream.
+    #[inline]
+    pub fn write_back_s(&self, warp: WarpSpan, dev: &mut DeviceStats) {
+        if let GlobalMemory::Coalesced { .. } = self {
+            dev.coalesced_access(warp.start as u64 * 4, warp.lanes as u64 * 4);
+            dev.shared_loads += warp.lanes as u64;
+        }
+    }
+
+    /// Scatter-subtract into a neighbour's spatial field.  Random single
+    /// -word RMW traffic — serialized in both layouts (the coalescing
+    /// axis is the streaming access, not the neighbour scatter).
+    #[inline]
+    pub fn sub_h_space(&mut self, i: usize, v: f32, dev: &mut DeviceStats) {
+        dev.strided_access(1);
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                let r = index[i] as usize * RECORD_WORDS;
+                records[r + 1] -= v;
+            }
+            GlobalMemory::Coalesced { h_space, .. } => h_space[i] -= v,
+        }
+    }
+
+    /// Scatter-subtract into a neighbour's imaginary-time field.
+    #[inline]
+    pub fn sub_h_tau(&mut self, i: usize, v: f32, dev: &mut DeviceStats) {
+        dev.strided_access(1);
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                let r = index[i] as usize * RECORD_WORDS;
+                records[r + 2] -= v;
+            }
+            GlobalMemory::Coalesced { h_tau, .. } => h_tau[i] -= v,
+        }
+    }
+
+    /// Download the spin state back to host (layer-major) order.
+    pub fn state_vec(&self) -> Vec<f32> {
+        let n = self.n_spins();
+        (0..n).map(|i| self.s_raw(i)).collect()
+    }
+
+    /// Download both effective-field arrays (for `validate`).
+    pub fn field_vecs(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.n_spins();
+        match self {
+            GlobalMemory::Naive { records, index } => {
+                let mut hs = Vec::with_capacity(n);
+                let mut ht = Vec::with_capacity(n);
+                for i in 0..n {
+                    let r = index[i] as usize * RECORD_WORDS;
+                    hs.push(records[r + 1]);
+                    ht.push(records[r + 2]);
+                }
+                (hs, ht)
+            }
+            GlobalMemory::Coalesced { s: _, h_space, h_tau } => {
+                (h_space.clone(), h_tau.clone())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let s: Vec<f32> = (0..40).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let hs: Vec<f32> = (0..40).map(|i| i as f32 * 0.25).collect();
+        let ht: Vec<f32> = (0..40).map(|i| 1.0 - i as f32 * 0.125).collect();
+        (s, hs, ht)
+    }
+
+    #[test]
+    fn both_layouts_store_identical_logical_values() {
+        let (s, hs, ht) = demo();
+        let b1 = GlobalMemory::build(DeviceLayout::B1Naive, &s, hs.clone(), ht.clone());
+        let b2 = GlobalMemory::build(DeviceLayout::B2Coalesced, &s, hs, ht);
+        for i in 0..s.len() {
+            assert_eq!(b1.s_raw(i).to_bits(), b2.s_raw(i).to_bits());
+            assert_eq!(b1.hsum_raw(i).to_bits(), b2.hsum_raw(i).to_bits());
+        }
+        assert_eq!(b1.state_vec(), b2.state_vec());
+    }
+
+    #[test]
+    fn mutation_paths_agree_across_layouts() {
+        let (s, hs, ht) = demo();
+        let mut b1 = GlobalMemory::build(DeviceLayout::B1Naive, &s, hs.clone(), ht.clone());
+        let mut b2 = GlobalMemory::build(DeviceLayout::B2Coalesced, &s, hs, ht);
+        let mut d1 = DeviceStats::default();
+        let mut d2 = DeviceStats::default();
+        b1.flip_s(7, &mut d1);
+        b2.flip_s(7, &mut d2);
+        b1.sub_h_space(3, 0.5, &mut d1);
+        b2.sub_h_space(3, 0.5, &mut d2);
+        b1.sub_h_tau(11, -2.0, &mut d1);
+        b2.sub_h_tau(11, -2.0, &mut d2);
+        assert_eq!(b1.state_vec(), b2.state_vec());
+        assert_eq!(b1.field_vecs(), b2.field_vecs());
+        // B.1 pays a serialized transaction for the record flip; B.2's
+        // flip rides the warp write-back instead.
+        assert_eq!(d1.strided, 3);
+        assert_eq!(d2.strided, 2);
+    }
+
+    #[test]
+    fn staging_counts_coalesced_segments() {
+        let (s, hs, ht) = demo();
+        let b2 = GlobalMemory::build(DeviceLayout::B2Coalesced, &s, hs, ht);
+        let warp = WarpSpan { start: 0, lanes: 32 };
+        let mut tile_s = [0f32; 32];
+        let mut tile_h = [0f32; 32];
+        let mut dev = DeviceStats::default();
+        b2.stage_warp(warp, &mut tile_s, &mut tile_h, &mut dev);
+        // 32 aligned f32 lanes per stream = exactly 1 segment each.
+        assert_eq!(dev.coalesced, 3);
+        assert_eq!(dev.strided, 0);
+        assert_eq!(dev.shared_stores, 64);
+        assert_eq!(tile_s[5], b2.s_raw(5));
+        assert_eq!(tile_h[5], b2.hsum_raw(5));
+    }
+}

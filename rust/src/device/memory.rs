@@ -1,0 +1,153 @@
+//! The device's global-memory access model: coalesced vs strided
+//! transaction accounting, the GPU half of the paper's central
+//! observable.
+//!
+//! The CPU side reports "fraction of vector width utilized" (lane fill);
+//! the device side's equivalent is **coalescing efficiency** — the
+//! fraction of global-memory transactions that service a whole warp at
+//! once.  The model follows the classic (compute-1.x) coalescing rules
+//! the paper's 2010-era GPUs enforced:
+//!
+//! * a warp's access to a **contiguous, in-order** range is serviced in
+//!   segment-sized transactions ([`SEGMENT_BYTES`] = 128): one
+//!   transaction per 128-byte segment the range touches;
+//! * any **non-contiguous** (gathered/scattered) warp access serializes
+//!   into one transaction *per lane* — the 16× traffic blow-up that makes
+//!   the paper's B.1 layout slow.
+//!
+//! Counters accumulate into [`DeviceStats`], surfaced per-sweeper through
+//! `Sweeper::device_stats` and process-wide through
+//! [`crate::device::global_totals`] (the Prometheus
+//! `repro_device_transactions_total{kind}` family).
+
+/// Global-memory transaction segment size in bytes (the compute-1.x
+/// coalescing granularity for 4-byte words).
+pub const SEGMENT_BYTES: u64 = 128;
+
+/// Execution counters of the software device, accumulated across
+/// [`crate::device::DeviceSweeper`] runs.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// Whole-warp (contiguous) global-memory transactions.
+    pub coalesced: u64,
+    /// Serialized per-lane (gathered/scattered) global-memory transactions.
+    pub strided: u64,
+    /// Reads from the per-block shared-memory staging tile.
+    pub shared_loads: u64,
+    /// Writes into the per-block shared-memory staging tile.
+    pub shared_stores: u64,
+    /// Lanes whose flip decision had to be replayed serially because an
+    /// earlier lane's flip in the same warp dirtied their effective
+    /// field — the SIMT-divergence cost of intra-warp conflicts (the
+    /// device-side analogue of the paper's Fig-14 "must wait for a
+    /// flip" event).
+    pub divergent_replays: u64,
+    /// Warps executed.
+    pub warps: u64,
+}
+
+impl DeviceStats {
+    /// Total global-memory transactions issued.
+    pub fn transactions(&self) -> u64 {
+        self.coalesced + self.strided
+    }
+
+    /// Fraction of global-memory transactions that were coalesced —
+    /// the measured observable the B.1 → B.2 comparison is about
+    /// (1.0 on an empty device: no traffic means nothing was wasted).
+    pub fn coalescing_efficiency(&self) -> f64 {
+        let t = self.transactions();
+        if t == 0 {
+            1.0
+        } else {
+            self.coalesced as f64 / t as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &DeviceStats) {
+        self.coalesced += o.coalesced;
+        self.strided += o.strided;
+        self.shared_loads += o.shared_loads;
+        self.shared_stores += o.shared_stores;
+        self.divergent_replays += o.divergent_replays;
+        self.warps += o.warps;
+    }
+
+    /// The per-field difference `self - earlier` (both cumulative
+    /// snapshots of the same counter set).
+    pub fn delta_since(&self, earlier: &DeviceStats) -> DeviceStats {
+        DeviceStats {
+            coalesced: self.coalesced - earlier.coalesced,
+            strided: self.strided - earlier.strided,
+            shared_loads: self.shared_loads - earlier.shared_loads,
+            shared_stores: self.shared_stores - earlier.shared_stores,
+            divergent_replays: self.divergent_replays - earlier.divergent_replays,
+            warps: self.warps - earlier.warps,
+        }
+    }
+
+    /// Record a contiguous in-order warp access of `byte_len` bytes at
+    /// `byte_off`: one transaction per 128-byte segment touched.
+    #[inline]
+    pub fn coalesced_access(&mut self, byte_off: u64, byte_len: u64) {
+        if byte_len == 0 {
+            return;
+        }
+        let first = byte_off / SEGMENT_BYTES;
+        let last = (byte_off + byte_len - 1) / SEGMENT_BYTES;
+        self.coalesced += last - first + 1;
+    }
+
+    /// Record a gathered/scattered warp access: the hardware serializes
+    /// it into one transaction per participating lane.
+    #[inline]
+    pub fn strided_access(&mut self, lanes: u64) {
+        self.strided += lanes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesced_access_counts_segments_touched() {
+        let mut d = DeviceStats::default();
+        // 32 f32 lanes = 128 bytes, segment-aligned: exactly 1 transaction.
+        d.coalesced_access(0, 128);
+        assert_eq!(d.coalesced, 1);
+        // Misaligned by one word: spans 2 segments.
+        d.coalesced_access(4, 128);
+        assert_eq!(d.coalesced, 3);
+        // A short (partial-warp) access still costs a full segment.
+        d.coalesced_access(256, 16);
+        assert_eq!(d.coalesced, 4);
+        // Zero-length access is free.
+        d.coalesced_access(0, 0);
+        assert_eq!(d.coalesced, 4);
+    }
+
+    #[test]
+    fn strided_access_serializes_per_lane() {
+        let mut d = DeviceStats::default();
+        d.strided_access(32);
+        d.strided_access(7);
+        assert_eq!(d.strided, 39);
+        assert_eq!(d.transactions(), 39);
+        assert!(d.coalescing_efficiency() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_is_coalesced_fraction() {
+        let mut d = DeviceStats::default();
+        assert_eq!(d.coalescing_efficiency(), 1.0, "no traffic, nothing wasted");
+        d.coalesced_access(0, 128);
+        d.strided_access(3);
+        assert!((d.coalescing_efficiency() - 0.25).abs() < 1e-12);
+        let snap = d;
+        d.coalesced_access(0, 128);
+        let delta = d.delta_since(&snap);
+        assert_eq!(delta.coalesced, 1);
+        assert_eq!(delta.strided, 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! The software device — the reproduction of the paper's GPU half.
+//!
+//! The paper's §3.2 compares two CUDA kernels that differ *only* in
+//! global-memory layout: B.1 transplants the CPU data structure (slow,
+//! gathered access) and B.2 reorganizes it so warp accesses coalesce
+//! ("this reorganization of memory was the only difference between the
+//! two GPU versions").  Without CUDA hardware in the loop, this module
+//! executes that comparison on the CPU under a faithful execution model
+//! instead of an opaque artifact:
+//!
+//! * [`grid`] — the launch hierarchy: a [`DeviceGrid`] of 256-thread
+//!   blocks, each running 32-lane warps in SIMT lockstep, one thread per
+//!   spin in A.2's layer-major order;
+//! * [`layout`] — the two §3.2 memory organizations over the same
+//!   logical state: [`DeviceLayout::B1Naive`] (AoS records behind an
+//!   index-table gather) and [`DeviceLayout::B2Coalesced`] (SoA streams
+//!   staged through the block's shared tile);
+//! * [`memory`] — the transaction model that makes coalescing a
+//!   *measured observable*: contiguous warp accesses cost one
+//!   transaction per 128-byte segment, gathers/scatters serialize per
+//!   lane ([`DeviceStats::coalescing_efficiency`] is the device-side
+//!   analogue of the CPU rungs' lane-fill metric);
+//! * [`sweeper`] — the kernel itself: [`DeviceSweeper`] maps warps onto
+//!   the host [`crate::simd`] backends (B.2's candidate pass runs
+//!   `exp_fast_wide` on real vector units; B.1's gathered records force
+//!   per-lane evaluation) with serialized in-warp conflict replay, so
+//!   both rungs are bit-exact to scalar A.2 for the same seed.
+//!
+//! `EngineBuilder` negotiates `backend: accel` onto this device (see
+//! `engine::builder`); the PJRT path in [`crate::sweep::accel`] remains
+//! for running real compiled artifacts when a `runtime::Runtime` is
+//! provided explicitly.
+
+pub mod grid;
+pub mod layout;
+pub mod memory;
+pub mod sweeper;
+
+pub use grid::{BlockSpan, DeviceGrid, WarpSpan, BLOCK_THREADS, WARP_WIDTH};
+pub use layout::{DeviceLayout, GlobalMemory};
+pub use memory::{DeviceStats, SEGMENT_BYTES};
+pub use sweeper::DeviceSweeper;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COALESCED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static STRIDED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static REPLAYS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Add a per-run counter delta to the process-wide totals (called by
+/// [`DeviceSweeper`] at the end of every `run`).  The totals feed the
+/// `repro_device_transactions_total{kind}` Prometheus family.
+pub fn flush_global(delta: &DeviceStats) {
+    COALESCED_TOTAL.fetch_add(delta.coalesced, Ordering::Relaxed);
+    STRIDED_TOTAL.fetch_add(delta.strided, Ordering::Relaxed);
+    REPLAYS_TOTAL.fetch_add(delta.divergent_replays, Ordering::Relaxed);
+}
+
+/// Process-wide `(coalesced, strided, divergent_replays)` totals across
+/// every device sweeper that has run in this process.
+pub fn global_totals() -> (u64, u64, u64) {
+    (
+        COALESCED_TOTAL.load(Ordering::Relaxed),
+        STRIDED_TOTAL.load(Ordering::Relaxed),
+        REPLAYS_TOTAL.load(Ordering::Relaxed),
+    )
+}

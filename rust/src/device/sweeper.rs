@@ -1,0 +1,314 @@
+//! The device kernel: Metropolis sweeps executed under the SIMT model.
+//!
+//! One launch per sweep.  Each warp owns 32 consecutive spins of the
+//! flat layer-major state and runs a two-phase body:
+//!
+//! 1. **candidate phase** — every lane draws its uniform (one shared
+//!    host-order MT19937 stream, drawn in lane order, so the trajectory
+//!    is A.2's), fetches its spin + effective-field sum (B.1: per-lane
+//!    record gather; B.2: coalesced stream staged into the block's
+//!    shared tile), and evaluates the flip probability.  B.2's fast-exp
+//!    candidates run on the host vector units via [`exp_fast_wide`];
+//!    B.1's gathered records cannot feed contiguous vector loads, so its
+//!    lanes evaluate serially — the same scalar-vs-vector gap the paper
+//!    measures between the two kernels.
+//! 2. **commit phase** — lanes retire in order.  A lane whose effective
+//!    field was dirtied by an earlier lane's flip in the same warp takes
+//!    the divergent path: it replays its decision against the updated
+//!    field with the *same* uniform (counted in
+//!    [`DeviceStats::divergent_replays`]).  This serial conflict
+//!    resolution is exactly the scalar A.2 update order, which is what
+//!    makes both layouts bit-exact to the reference.
+//!
+//! The kernel never reorders visits; B.1 vs B.2 differ only in memory
+//! addressing — the paper's "this reorganization of memory was the only
+//! difference between the two GPU versions".
+
+use std::marker::PhantomData;
+
+use crate::expapprox::simd::exp_fast_wide;
+use crate::ising::layout::CsrLayout;
+use crate::ising::QmcModel;
+use crate::rng::Mt19937;
+use crate::simd::{SimdF32, SimdU32};
+use crate::sweep::{ExpMode, SweepKind, SweepStats, Sweeper};
+
+use super::grid::{DeviceGrid, WARP_WIDTH};
+use super::layout::{DeviceLayout, GlobalMemory};
+use super::memory::DeviceStats;
+
+/// The software device executing the B.1/B.2 accelerator rungs, generic
+/// over the host SIMD backend `U` that stands in for the vector ALUs
+/// (the warp's 32 lanes are tiled in `U::F::LANES`-wide chunks).
+pub struct DeviceSweeper<U: SimdU32> {
+    kind: SweepKind,
+    model: QmcModel,
+    lay: CsrLayout,
+    grid: DeviceGrid,
+    mem: GlobalMemory,
+    rng: Mt19937,
+    exp: ExpMode,
+    /// Cumulative device counters since construction.
+    dev: DeviceStats,
+    /// Portion of `dev` already flushed to the process-wide totals.
+    flushed: DeviceStats,
+    /// Per-spin warp-stamp: `dirty[i] == stamp` marks lane conflicts
+    /// within the currently executing warp.
+    dirty: Vec<u64>,
+    stamp: u64,
+    _backend: PhantomData<U>,
+}
+
+impl<U: SimdU32> DeviceSweeper<U> {
+    pub fn new(
+        kind: SweepKind,
+        model: &QmcModel,
+        s0: &[f32],
+        seed: u32,
+        exp: ExpMode,
+    ) -> crate::Result<Self> {
+        let layout = match kind {
+            SweepKind::B1Accel => DeviceLayout::B1Naive,
+            SweepKind::B2Accel => DeviceLayout::B2Coalesced,
+            other => anyhow::bail!("DeviceSweeper runs the accelerator rungs, not {other:?}"),
+        };
+        anyhow::ensure!(
+            s0.len() == model.n_spins(),
+            "initial state has {} spins, model has {}",
+            s0.len(),
+            model.n_spins()
+        );
+        anyhow::ensure!(
+            kind.supports_layers(model.n_layers),
+            "{} does not support {} layers (resolve the spec through \
+             EngineBuilder for a structured geometry error)",
+            kind.label(),
+            model.n_layers
+        );
+        let lay = CsrLayout::build(model);
+        let (hs, ht) = model.effective_fields(s0);
+        Ok(Self {
+            kind,
+            model: model.clone(),
+            lay,
+            grid: DeviceGrid::over(s0.len()),
+            mem: GlobalMemory::build(layout, s0, hs, ht),
+            rng: Mt19937::new(seed),
+            exp,
+            dev: DeviceStats::default(),
+            flushed: DeviceStats::default(),
+            dirty: vec![0u64; s0.len()],
+            stamp: 0,
+            _backend: PhantomData,
+        })
+    }
+
+    /// The launch geometry this sweeper runs with.
+    pub fn grid(&self) -> DeviceGrid {
+        self.grid
+    }
+
+    /// Which of the paper's memory layouts the device state uses.
+    pub fn layout(&self) -> DeviceLayout {
+        self.mem.layout()
+    }
+
+    /// Cumulative device counters since construction.
+    pub fn stats(&self) -> DeviceStats {
+        self.dev
+    }
+
+    /// B.2's vectorized candidate pass: `U::F::LANES` flip probabilities
+    /// per step over the staged warp tile.  Lane-exact to the scalar
+    /// `ExpMode::Fast` evaluation (`exp_fast_wide` is bit-identical to
+    /// `exp_fast` per lane), so vectorization never changes trajectories.
+    #[inline(always)]
+    fn candidate_vector(
+        neg_beta: f32,
+        s_tile: &[f32; WARP_WIDTH],
+        hsum_tile: &[f32; WARP_WIDTH],
+        u_tile: &[f32; WARP_WIDTH],
+    ) -> u32 {
+        let mut bits = 0u32;
+        let mut off = 0usize;
+        while off < WARP_WIDTH {
+            let s = <U::F as SimdF32>::load(&s_tile[off..]);
+            let h = <U::F as SimdF32>::load(&hsum_tile[off..]);
+            let de = <U::F as SimdF32>::splat(2.0) * s * h;
+            let arg = (<U::F as SimdF32>::splat(neg_beta) * de)
+                .max(<U::F as SimdF32>::splat(-80.0));
+            let p = exp_fast_wide(arg);
+            let u = <U::F as SimdF32>::load(&u_tile[off..]);
+            bits |= u.lt(p).movemask() << off;
+            off += <U::F as SimdF32>::LANES;
+        }
+        bits
+    }
+
+    fn sweep_once(&mut self, beta: f32, stats: &mut SweepStats) {
+        let neg_beta = -beta;
+        // The block's shared-memory staging tile, reused warp by warp.
+        let mut s_tile = [0f32; WARP_WIDTH];
+        let mut hsum_tile = [0f32; WARP_WIDTH];
+        let mut u_tile = [0f32; WARP_WIDTH];
+        let layout = self.mem.layout();
+        for block in self.grid.blocks() {
+            for warp in block.warps() {
+                self.stamp += 1;
+                let (start, w) = (warp.start, warp.lanes);
+
+                // One uniform per lane, drawn in lane (= A.2 visit) order.
+                for u in u_tile.iter_mut().take(w) {
+                    *u = self.rng.next_f32();
+                }
+
+                // Candidate phase.
+                let accept_bits = match layout {
+                    DeviceLayout::B2Coalesced => {
+                        self.mem.stage_warp(warp, &mut s_tile, &mut hsum_tile, &mut self.dev);
+                        self.dev.shared_loads += 2 * w as u64;
+                        if self.exp == ExpMode::Fast {
+                            Self::candidate_vector(neg_beta, &s_tile, &hsum_tile, &u_tile)
+                        } else {
+                            // Exact/Accurate modes evaluate per lane (the
+                            // test-alignment modes, not the benchmarked path).
+                            let mut bits = 0u32;
+                            for k in 0..w {
+                                let de = 2.0 * s_tile[k] * hsum_tile[k];
+                                if u_tile[k] < self.exp.eval(neg_beta * de) {
+                                    bits |= 1 << k;
+                                }
+                            }
+                            bits
+                        }
+                    }
+                    DeviceLayout::B1Naive => {
+                        // The naive kernel: index-table indirection, then a
+                        // per-lane record gather that serializes the warp —
+                        // no staging, no vector evaluation possible.
+                        self.mem.read_index_row(warp, &mut self.dev);
+                        let mut bits = 0u32;
+                        for k in 0..w {
+                            let (s, hsum) = self.mem.gather_spin(start + k, &mut self.dev);
+                            s_tile[k] = s;
+                            let de = 2.0 * s * hsum;
+                            if u_tile[k] < self.exp.eval(neg_beta * de) {
+                                bits |= 1 << k;
+                            }
+                        }
+                        bits
+                    }
+                };
+
+                // Commit phase: lanes retire in order; conflicted lanes
+                // replay divergently against the updated fields.
+                let warp_end = start + w;
+                let mut warp_flips = 0u64;
+                for k in 0..w {
+                    let i = start + k;
+                    let accept = if self.dirty[i] == self.stamp {
+                        self.dev.divergent_replays += 1;
+                        let (s, hsum) = self.mem.gather_spin(i, &mut self.dev);
+                        let de = 2.0 * s * hsum;
+                        u_tile[k] < self.exp.eval(neg_beta * de)
+                    } else {
+                        accept_bits >> k & 1 == 1
+                    };
+                    if accept {
+                        warp_flips += 1;
+                        // A.2's flip body, addressed through the layout.
+                        let two_s_mul = 2.0 * self.mem.s_raw(i);
+                        self.mem.flip_s(i, &mut self.dev);
+                        let (lo, hi) =
+                            (self.lay.offsets[i] as usize, self.lay.offsets[i + 1] as usize);
+                        let targets = &self.lay.edge_target[lo..hi];
+                        let js = &self.lay.edge_j[lo..hi];
+                        let kk = targets.len();
+                        for e in 0..kk - 2 {
+                            let t = targets[e] as usize;
+                            self.mem.sub_h_space(t, two_s_mul * js[e], &mut self.dev);
+                            if t > i && t < warp_end {
+                                self.dirty[t] = self.stamp;
+                            }
+                        }
+                        for e in [kk - 2, kk - 1] {
+                            let t = targets[e] as usize;
+                            self.mem.sub_h_tau(t, two_s_mul * js[e], &mut self.dev);
+                            if t > i && t < warp_end {
+                                self.dirty[t] = self.stamp;
+                            }
+                        }
+                    }
+                }
+                stats.attempts += w as u64;
+                stats.flips += warp_flips;
+                stats.groups += 1;
+                if warp_flips > 0 {
+                    stats.groups_with_flip += 1;
+                    self.mem.write_back_s(warp, &mut self.dev);
+                }
+                self.dev.warps += 1;
+            }
+        }
+    }
+}
+
+impl<U: SimdU32> Sweeper for DeviceSweeper<U> {
+    fn kind(&self) -> SweepKind {
+        self.kind
+    }
+
+    fn run(&mut self, n_sweeps: usize, beta: f32) -> SweepStats {
+        let mut stats = SweepStats::default();
+        U::with_features(|| {
+            for _ in 0..n_sweeps {
+                self.sweep_once(beta, &mut stats);
+            }
+        });
+        let delta = self.dev.delta_since(&self.flushed);
+        super::flush_global(&delta);
+        self.flushed = self.dev;
+        stats
+    }
+
+    fn energy(&mut self) -> f64 {
+        self.model.total_energy(&self.mem.state_vec())
+    }
+
+    fn state(&mut self) -> Vec<f32> {
+        self.mem.state_vec()
+    }
+
+    fn set_state(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.model.n_spins());
+        let (hs, ht) = self.model.effective_fields(s);
+        self.mem = GlobalMemory::build(self.mem.layout(), s, hs, ht);
+        // `stamp` keeps counting up, so stale `dirty` entries can never
+        // collide with a future warp's stamp.
+    }
+
+    fn validate(&mut self) -> f64 {
+        let state = self.mem.state_vec();
+        let (hs, ht) = self.model.effective_fields(&state);
+        let (dev_hs, dev_ht) = self.mem.field_vecs();
+        let mut worst = 0.0f64;
+        for i in 0..state.len() {
+            worst = worst
+                .max((hs[i] - dev_hs[i]).abs() as f64)
+                .max((ht[i] - dev_ht[i]).abs() as f64);
+        }
+        worst
+    }
+
+    fn rng_state(&self) -> Option<Vec<u32>> {
+        Some(self.rng.state_words())
+    }
+
+    fn set_rng_state(&mut self, words: &[u32]) -> bool {
+        self.rng.restore_words(words)
+    }
+
+    fn device_stats(&self) -> Option<DeviceStats> {
+        Some(self.dev)
+    }
+}

@@ -7,9 +7,12 @@
 //! so the `VECTORISING_FORCE_PORTABLE` override, AVX2 detection and the
 //! layer-interlacing geometry rule each live in exactly one place.
 
+use crate::device::DeviceSweeper;
 use crate::ising::QmcModel;
 use crate::sweep::c1_replica_batch::{BatchSweeper, C1ReplicaBatch};
-use crate::sweep::{a1_original, a2_basic, a3_vecrng, a4_full, m1_multispin, ExpMode, Sweeper};
+use crate::sweep::{
+    a1_original, a2_basic, a3_vecrng, a4_full, m1_multispin, ExpMode, SweepKind, Sweeper,
+};
 use crate::Result;
 
 use super::error::UnsupportedGeometry;
@@ -496,8 +499,7 @@ fn resolve(spec: SamplerSpec, layers: Option<usize>, exp: Option<ExpMode>) -> Re
             if let Width::W(n) = spec.width {
                 anyhow::ensure!(
                     n == 32,
-                    "the accelerator rungs run the 32-wide interlaced artifacts (requested \
-                     width {n})"
+                    "the accelerator rungs run 32-thread warps (requested width {n})"
                 );
             }
             anyhow::ensure!(
@@ -505,9 +507,34 @@ fn resolve(spec: SamplerSpec, layers: Option<usize>, exp: Option<ExpMode>) -> Re
                 "rung {} runs on the accelerator; backend {pref} does not apply",
                 spec.rung.label()
             );
+            if let Some(l) = layers {
+                // B.2's pair-packed coalesced streams need the tau ring to
+                // close over the lane pairs — an even layer count, the same
+                // parity argument as M.1's checkerboard.  B.1 gathers
+                // per-lane and only needs a well-formed model (>= 2 layers).
+                let b2_parity_ok = spec.rung != Rung::B2 || l % 2 == 0;
+                if l < 2 || !b2_parity_ok {
+                    // Best alternative first: the nearest *runnable accel*
+                    // config, then the usual CPU ladder.
+                    let mut alternatives = Vec::new();
+                    if spec.rung == Rung::B2 && l >= 2 {
+                        alternatives.push(SamplerSpec::rung(Rung::B1).on(BackendPref::Accel));
+                    }
+                    alternatives.extend(geometry_alternatives(l));
+                    return Err(UnsupportedGeometry {
+                        rung: spec.rung,
+                        width: 32,
+                        layers: l,
+                        alternatives,
+                    }
+                    .into());
+                }
+            }
             notes.push(
-                "accelerator plans execute via sweep::accel::AccelSweeper (needs a PJRT Runtime \
-                 and on-disk artifacts)"
+                "accelerator plans execute on the in-process software device: 256-thread blocks \
+                 of 32-lane warps mapped onto the host vector units, coalesced vs strided \
+                 global-memory transactions counted (device::DeviceSweeper); supply a PJRT \
+                 Runtime to sweep::accel::AccelSweeper to run real compiled artifacts instead"
                     .into(),
             );
             done(Backend::Accel, 32, GroupLayout::AccelInterlace { width: 32 }, rejected, notes)
@@ -534,11 +561,32 @@ pub fn instantiate(
              EngineBuilder::build_batch / sweep::c1_replica_batch::make_batch_sweeper (or \
              tempering::BatchedPtEnsemble)"
         ),
-        Rung::B1 | Rung::B2 => anyhow::bail!(
-            "accelerator rung {} needs a Runtime and on-disk artifacts; use \
-             sweep::accel::AccelSweeper::new",
-            r.rung.label()
-        ),
+        Rung::B1 | Rung::B2 => {
+            let kind =
+                if r.rung == Rung::B1 { SweepKind::B1Accel } else { SweepKind::B2Accel };
+            // Micro-backend selection: the warp's 32 lanes tile over the
+            // widest vector unit the host offers.  The choice never affects
+            // trajectories (the wide fast-exp is lane-exact to scalar),
+            // only throughput — so the plan's backend stays `Accel`.
+            #[cfg(all(target_arch = "x86_64", has_avx512_intrinsics))]
+            if crate::simd::avx512_available() {
+                return Ok(Box::new(DeviceSweeper::<crate::simd::avx512::U32x16>::new(
+                    kind, model, s0, seed, exp,
+                )?));
+            }
+            #[cfg(target_arch = "x86_64")]
+            if crate::simd::avx2_available() {
+                return Ok(Box::new(DeviceSweeper::<crate::simd::avx2::U32x8>::new(
+                    kind, model, s0, seed, exp,
+                )?));
+            }
+            if crate::simd::force_portable() {
+                return Ok(Box::new(DeviceSweeper::<U32xN<4>>::new(kind, model, s0, seed, exp)?));
+            }
+            return Ok(Box::new(DeviceSweeper::<crate::simd::U32x4>::new(
+                kind, model, s0, seed, exp,
+            )?));
+        }
         Rung::M1 => {
             // The word sweep is scalar ALU work; only the internal uniform
             // generator is lane-parallel.  Pick the fastest 8-lane RNG
@@ -742,13 +790,36 @@ mod tests {
     }
 
     #[test]
-    fn accel_rungs_plan_but_do_not_build_without_runtime() {
+    fn accel_rungs_plan_and_build_on_the_device_sim() {
         let plan = EngineBuilder::new(SamplerSpec::rung(Rung::B2)).plan().unwrap();
         assert_eq!(plan.backend, Backend::Accel);
         assert_eq!(plan.width, 32);
         let wl = torus_workload(4, 4, 8, 1, 0.3);
-        let err = EngineBuilder::new(SamplerSpec::rung(Rung::B2)).build(&wl.model, &wl.s0, 1);
-        assert!(format!("{:#}", err.err().unwrap()).contains("AccelSweeper"));
+        for rung in [Rung::B1, Rung::B2] {
+            let mut engine =
+                EngineBuilder::new(SamplerSpec::rung(rung)).build(&wl.model, &wl.s0, 1).unwrap();
+            assert_eq!(engine.plan.backend, Backend::Accel);
+            let stats = engine.run(3, 0.8);
+            assert!(stats.attempts > 0, "{} must sweep", rung.label());
+            assert!(engine.validate() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn b2_odd_layers_name_the_nearest_runnable_accel_config() {
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::B2)).layers(9).plan().err().unwrap();
+        let ug = err.downcast_ref::<UnsupportedGeometry>().expect("UnsupportedGeometry");
+        assert_eq!(ug.width, 32);
+        assert_eq!(ug.layers, 9);
+        let first = ug.alternatives.first().expect("must offer alternatives");
+        assert_eq!(first.rung, Rung::B1, "nearest accel config first: {:?}", ug.alternatives);
+        assert_eq!(first.backend, BackendPref::Accel);
+        // ... and that alternative really resolves at this geometry.
+        assert!(EngineBuilder::new(*first).layers(9).plan().is_ok());
+        // Degenerate depths fall back to the CPU ladder only.
+        let err = EngineBuilder::new(SamplerSpec::rung(Rung::B1)).layers(1).plan().err().unwrap();
+        let ug = err.downcast_ref::<UnsupportedGeometry>().expect("UnsupportedGeometry");
+        assert!(ug.alternatives.iter().all(|a| a.rung != Rung::B1 && a.rung != Rung::B2));
     }
 
     #[test]

@@ -131,7 +131,8 @@ impl Rung {
         matches!(self, Rung::M1)
     }
 
-    /// The accelerator rungs (XLA artifacts through PJRT).
+    /// The accelerator rungs (the software device of [`crate::device`];
+    /// compiled XLA artifacts via PJRT when a runtime is supplied).
     pub fn is_accel(self) -> bool {
         matches!(self, Rung::B1 | Rung::B2)
     }
@@ -220,8 +221,8 @@ pub enum BackendPref {
     /// Pin the const-generic portable lanes (any width, any arch — also
     /// what `VECTORISING_FORCE_PORTABLE=1` forces for every CPU rung).
     Portable,
-    /// The accelerator path (B-rungs only; needs a PJRT runtime and
-    /// on-disk artifacts).
+    /// The accelerator path (B-rungs only): the in-process software
+    /// device with counted memory transactions.
     Accel,
 }
 

@@ -23,7 +23,10 @@ pub enum Backend {
     Avx512,
     /// Const-generic portable lanes (any width, any architecture).
     Portable,
-    /// XLA artifact through PJRT (the B-rungs).
+    /// The software device (the B-rungs): 32-lane warps over the host
+    /// vector units with counted coalesced/strided memory transactions
+    /// (see [`crate::device`]); real XLA artifacts can instead run
+    /// through PJRT via `sweep::accel::AccelSweeper`.
     Accel,
 }
 

@@ -13,7 +13,9 @@
 //!
 //! * **within-run ratio** — the multi-spin rung must retire at least
 //!   [`MIN_M1_OVER_C1W8`]× the spins/sec of the `C.1w8` lane-batch
-//!   measured in the same run (host-independent, always checked);
+//!   measured in the same run, and the coalesced device rung `B.2` at
+//!   least [`MIN_B2_OVER_B1`]× the naive `B.1` (host-independent,
+//!   always checked when both sides are present);
 //! * **absolute regression** — a rung must stay within
 //!   [`MAX_REGRESSION`] of its committed baseline, but only when the
 //!   baseline is `"measured"` on a host with the same capability
@@ -33,6 +35,12 @@ pub const BENCH_SCHEMA_VERSION: usize = 1;
 
 /// Minimum m1-over-C.1w8 throughput ratio the gate demands.
 pub const MIN_M1_OVER_C1W8: f64 = 3.0;
+
+/// Minimum B.2-over-B.1 throughput ratio the gate demands — the paper's
+/// coalescing speedup, reproduced on the software device: the coalesced
+/// layout's contiguous SoA loads must beat the naive layout's strided
+/// AoS gathers by at least this factor in the same run.
+pub const MIN_B2_OVER_B1: f64 = 2.0;
 
 /// Maximum tolerated slowdown against a same-host measured baseline.
 pub const MAX_REGRESSION: f64 = 0.10;
@@ -324,6 +332,27 @@ pub fn gate(current: &[BenchArtifact], baselines: &[BenchArtifact]) -> GateOutco
             "ratio gate skipped: needs both an M.1 and a C.1w8 measurement in this run".into(),
         ),
     }
+    let b2 = current.iter().find(|a| a.rung == "B.2");
+    let b1 = current.iter().find(|a| a.rung == "B.1");
+    match (b2, b1) {
+        (Some(b2), Some(b1)) => {
+            let ratio = b2.spins_per_sec / b1.spins_per_sec.max(1e-12);
+            let msg = format!(
+                "B.2 over B.1: {ratio:.2}x spins/sec (floor {MIN_B2_OVER_B1:.1}x; \
+                 B.2 {:.1}M/s, B.1 {:.1}M/s)",
+                b2.spins_per_sec / 1e6,
+                b1.spins_per_sec / 1e6
+            );
+            if ratio >= MIN_B2_OVER_B1 {
+                out.ok(msg);
+            } else {
+                out.fail(msg);
+            }
+        }
+        _ => out.note(
+            "coalescing gate skipped: needs both a B.2 and a B.1 measurement in this run".into(),
+        ),
+    }
     for cur in current {
         let Some(base) = baselines.iter().find(|b| b.rung == cur.rung) else {
             out.note(format!("{}: no committed baseline", cur.rung));
@@ -440,6 +469,8 @@ mod tests {
         assert_eq!(BenchArtifact::file_name("M.1"), "BENCH_m1.json");
         assert_eq!(BenchArtifact::file_name("C.1w8"), "BENCH_c1w8.json");
         assert_eq!(BenchArtifact::file_name("A.4w16"), "BENCH_a4w16.json");
+        assert_eq!(BenchArtifact::file_name("B.1"), "BENCH_b1.json");
+        assert_eq!(BenchArtifact::file_name("B.2"), "BENCH_b2.json");
     }
 
     #[test]
@@ -472,6 +503,20 @@ mod tests {
         // Without both measurements the ratio gate degrades to a note.
         let partial = gate(&[fake("M.1", 4.0e8)], &[]);
         assert!(partial.passed());
+    }
+
+    #[test]
+    fn gate_enforces_the_b2_coalescing_floor() {
+        let pass = gate(&[fake("B.1", 1.0e8), fake("B.2", 2.5e8)], &[]);
+        assert!(pass.passed(), "{:?}", pass.failures);
+        assert!(pass.lines.iter().any(|l| l.contains("B.2 over B.1")));
+        let fail = gate(&[fake("B.1", 1.0e8), fake("B.2", 1.5e8)], &[]);
+        assert!(!fail.passed());
+        assert!(fail.failures.iter().any(|f| f.contains("B.2 over B.1")));
+        // A lone device measurement degrades to a note, not a failure.
+        let partial = gate(&[fake("B.2", 1.5e8)], &[]);
+        assert!(partial.passed());
+        assert!(partial.lines.iter().any(|l| l.contains("coalescing gate skipped")));
     }
 
     #[test]

@@ -24,9 +24,12 @@
 //!   bit-packed per word, XOR-parity neighbour sums through a carry-save
 //!   adder network, exact Metropolis acceptance via per-energy-bin
 //!   24-bit threshold tables — zero floating point in the hot loop,
-//! * **B.1/B.2** the accelerator ports (XLA artifacts AOT-compiled from
-//!   JAX+Pallas, executed through PJRT): naive gathered layout vs
-//!   coalesced interlaced layout.
+//! * **B.1/B.2** the accelerator ports, executed on the in-process
+//!   software [`device`] (a GPU-style grid/block/warp SIMT model with
+//!   counted coalesced-vs-strided memory transactions): naive gathered
+//!   layout vs coalesced layout — bit-exact to scalar A.2.  Real
+//!   AOT-compiled XLA artifacts can still run through PJRT via
+//!   [`sweep::accel::AccelSweeper`] when a runtime is supplied.
 //!
 //! The whole CPU vector stack ([`simd`], [`rng`], [`expapprox`],
 //! [`ising::reorder`], [`sweep`]) is generic over the lane width `W`:
@@ -92,6 +95,7 @@
 //! | `VECTORISING_FORCE_PORTABLE=1`            | same env var, or `.on(BackendPref::Portable)` |
 
 pub mod coordinator;
+pub mod device;
 pub mod engine;
 pub mod expapprox;
 pub mod harness;

@@ -53,7 +53,11 @@ SUBCOMMANDS
                     per SIMD lane and accepts any layers >= 2; rung m1
                     bit-packs 64 layers per word — width is fixed at 64,
                     the workload is the ±1-coupling family, any even
-                    layers >= 2)
+                    layers >= 2; rungs b1/b2 execute on the in-process
+                    software device — 32-thread warps over the host
+                    vector units with counted coalesced/strided memory
+                    transactions; b1 needs layers >= 2, b2 even
+                    layers >= 2 — and are bit-exact to scalar a2)
                    checkpointing (schema v2, spec-carrying):
                      --checkpoint PATH        save atomically during the run
                      --checkpoint-every N     rounds between saves (default 1;
@@ -74,14 +78,15 @@ SUBCOMMANDS
   fig17            exponential approximation error [--csv PATH]
   bench-rung       timing probe for one rung (--kind ..., --json)
   bench            machine-readable bench artifacts + perf gate: measures
-                   --rungs m1,c1w8 (default; entries take a wN suffix,
-                   e.g. a4w8) on the paper's per-model geometry
+                   --rungs m1,c1w8,b1,b2 (default; entries take a wN
+                   suffix, e.g. a4w8) on the paper's per-model geometry
                    (12x8x256 spins); --json prints one artifact line per
                    rung; --out DIR writes BENCH_<rung>.json files;
                    --check gates the run (m1 must hold >= 3x C.1w8
-                   spins/sec; same-host measured baselines from
-                   --baseline-dir (default bench/) gate a 10% regression)
-                   and exits 1 on failure
+                   spins/sec, the coalesced device rung b2 >= 2x b1;
+                   same-host measured baselines from --baseline-dir
+                   (default bench/) gate a 10% regression) and exits 1
+                   on failure
   artifacts-check  load + execute every artifact once
   serve            sampling service (protocol_version 1): JSON-lines jobs in,
                    per-job results out (each echoing the resolved plan),
@@ -228,34 +233,11 @@ fn main() -> Result<()> {
                     .unwrap_or_else(|| SweepKind::preferred_cpu_for_layers(cfg.layers).spec());
                 (cfg, spec, opts)
             };
-            // The accelerator rungs keep their generator on device, so the
-            // coordinator's checkpoint path does not cover them — refuse
-            // the flags loudly instead of silently ignoring them (a
-            // "resumed" B-rung run would be a fresh run reported as a
-            // continuation; see engine::NonResumableRng for the manual
-            // fresh-seed procedure).
-            if spec.rung.is_accel() && (opts.checkpoint.is_some() || opts.resume.is_some()) {
-                anyhow::bail!(
-                    "--checkpoint/--resume do not support the accelerator rungs: their RNG \
-                     state lives on device, so a bit-exact resume is impossible (rebuild with \
-                     fresh seeds offset by the checkpoint epoch and restore states only — see \
-                     Checkpoint::restore_states_only)"
-                );
-            }
-            let outcome = match spec.rung {
-                // Validate the spec axes (width/backend pins) through the
-                // same negotiation `repro plan` uses before running the
-                // accelerator path.
-                Rung::B1 => EngineBuilder::new(spec)
-                    .layers(cfg.layers)
-                    .plan()
-                    .and_then(|_| run_accel(&cfg, SweepKind::B1Accel)),
-                Rung::B2 => EngineBuilder::new(spec)
-                    .layers(cfg.layers)
-                    .plan()
-                    .and_then(|_| run_accel(&cfg, SweepKind::B2Accel)),
-                _ => coordinator::run_spec_with(&RunSpec::new(cfg.clone(), spec), &opts),
-            };
+            // Every rung — including the B-rungs, which execute on the
+            // in-process software device with a host-resident scalar
+            // MT19937 — goes through the coordinator, so checkpointing
+            // and bit-exact resume work uniformly.
+            let outcome = coordinator::run_spec_with(&RunSpec::new(cfg.clone(), spec), &opts);
             let report = match outcome {
                 Ok(report) => report,
                 Err(e) => {
@@ -379,7 +361,7 @@ fn main() -> Result<()> {
                 jtau: args.f32_or("jtau", 0.5)?,
                 seed: args.u64_or("seed", 1)?,
             };
-            let specs = bench_specs(&args.str_or("rungs", "m1,c1w8"))?;
+            let specs = bench_specs(&args.str_or("rungs", "m1,c1w8,b1,b2"))?;
             let mut artifacts = Vec::new();
             for spec in specs {
                 let art = BenchArtifact::measure(&RunSpec::new(cfg.clone(), spec))?;
@@ -511,55 +493,6 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
-}
-
-/// Run a full tempering simulation on the accelerator rungs (single
-/// device, sequential over replicas, exchanges on the host).
-fn run_accel(cfg: &RunConfig, kind: SweepKind) -> Result<coordinator::RunReport> {
-    use vectorising::tempering::{Ladder, LocalPtEnsemble};
-    cfg.validate()?;
-    let variant = match kind {
-        SweepKind::B1Accel => AccelVariant::B1Naive,
-        SweepKind::B2Accel => AccelVariant::B2Coalesced,
-        _ => unreachable!(),
-    };
-    let rt = Runtime::cpu()?;
-    let dir = artifact::default_dir();
-    let config_name = fig13::artifact_config_for(cfg)?;
-    let ladder = Ladder::geometric(cfg.beta_cold, cfg.beta_hot, cfg.n_models);
-    let replicas: Vec<Box<dyn Sweeper>> = (0..cfg.n_models)
-        .map(|i| -> Result<Box<dyn Sweeper>> {
-            let wl = torus_workload(cfg.width, cfg.height, cfg.layers, cfg.seed, cfg.jtau);
-            Ok(Box::new(AccelSweeper::new(
-                &rt,
-                &dir,
-                &config_name,
-                variant,
-                &wl,
-                cfg.seed as u32 + 1000 * i as u32,
-            )?))
-        })
-        .collect::<Result<_>>()?;
-    let mut pt = LocalPtEnsemble::new(ladder, replicas, cfg.seed as u32 ^ 0x5a5a);
-    let gran = pt.granularity();
-    let per_round = cfg.sweeps_per_round.max(gran) / gran * gran;
-    let rounds = cfg.sweeps / per_round;
-    let timer = coordinator::Timer::start();
-    for _ in 0..rounds {
-        pt.sweep_all(per_round);
-        pt.exchange();
-    }
-    let wall = timer.seconds();
-    let rows: Vec<(f32, vectorising::sweep::SweepStats, f64)> =
-        pt.reports().into_iter().map(|r| (r.beta, r.stats, r.energy)).collect();
-    Ok(coordinator::RunReport::from_stats(
-        kind.label(),
-        1,
-        rounds * per_round,
-        wall,
-        &rows,
-        pt.swap_acceptance(),
-    ))
 }
 
 /// Parse the `--rungs` list of the bench subcommand: comma-separated

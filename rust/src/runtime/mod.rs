@@ -1,6 +1,11 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
 //! by `python/compile/aot.py` and executes them from the rust hot path.
 //!
+//! This runtime is optional: the accel rungs themselves run on the
+//! in-process software device ([`crate::device`]) with no artifacts or
+//! PJRT installation.  Load a `Runtime` only to execute the real
+//! compiled XLA kernels (`repro artifacts-check`).
+//!
 //! Interchange is HLO *text* (jax ≥ 0.5 emits 64-bit instruction ids in
 //! serialized protos, which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids).  Python never runs at request time: `make artifacts`

@@ -12,10 +12,11 @@
 //!   latency is bounded: ≥ 2 stragglers go out as a padded batch, a lone
 //!   job falls back to a scalar A-rung dispatch.
 //!
-//! Jobs that pin the scalar (`a2`) or multi-spin (`m1`) sampler bypass
-//! the shape buckets and dispatch as singles on the next poll — m1's 64
-//! lanes are the job's own layer bits, so cross-job packing would add
-//! nothing.
+//! Jobs that pin the scalar (`a2`), multi-spin (`m1`) or accel
+//! (`b1`/`b2`) sampler bypass the shape buckets and dispatch as singles
+//! on the next poll — m1's 64 lanes are the job's own layer bits, and
+//! the accel rungs' 32-thread warps are spins of the job's own model,
+//! so cross-job packing would add nothing.
 //!
 //! FIFO order is preserved within a bucket (each bucket is a `VecDeque`
 //! popped from the front), and a batch never mixes shapes by
@@ -143,6 +144,10 @@ pub struct Batcher {
     /// singles — their 64 lanes are the job's own layer bits, so there
     /// is nothing to pack across jobs.
     multispin_lane: VecDeque<PendingJob>,
+    /// Jobs whose sampler pins an accel rung (`rung: b1`/`b2`): also
+    /// singles — the software device's 32-thread warps sweep spins of
+    /// the job's own model.
+    accel_lane: VecDeque<PendingJob>,
     next_seq: u64,
     queued: usize,
 }
@@ -158,6 +163,7 @@ impl Batcher {
             buckets: BTreeMap::new(),
             scalar_lane: VecDeque::new(),
             multispin_lane: VecDeque::new(),
+            accel_lane: VecDeque::new(),
             next_seq: 0,
             queued: 0,
         }
@@ -197,6 +203,8 @@ impl Batcher {
             self.scalar_lane.push_back(job);
         } else if job.spec.wants_multispin() {
             self.multispin_lane.push_back(job);
+        } else if job.spec.wants_accel() {
+            self.accel_lane.push_back(job);
         } else {
             self.buckets.entry(job.spec.shape()).or_default().push_back(job);
         }
@@ -221,7 +229,7 @@ impl Batcher {
     /// queued scalar- or multispin-pinned job is due immediately (its
     /// admission time).
     pub fn next_deadline(&self) -> Option<Instant> {
-        let single = [self.scalar_lane.front(), self.multispin_lane.front()]
+        let single = [self.scalar_lane.front(), self.multispin_lane.front(), self.accel_lane.front()]
             .into_iter()
             .flatten()
             .map(|job| job.enqueued)
@@ -240,11 +248,12 @@ impl Batcher {
     fn collect_ready<F: Fn(Instant) -> bool>(&mut self, now: Instant, flush: F) -> Vec<Dispatch> {
         let width = self.width;
         let mut out = Vec::new();
-        // Scalar- and multispin-pinned jobs dispatch immediately, ahead
-        // of any deadline — both are singles by construction, not
-        // deadline flushes.
+        // Scalar-, multispin- and accel-pinned jobs dispatch
+        // immediately, ahead of any deadline — all are singles by
+        // construction, not deadline flushes.
         out.extend(self.scalar_lane.drain(..).map(|job| Dispatch::single(job, false)));
         out.extend(self.multispin_lane.drain(..).map(|job| Dispatch::single(job, false)));
+        out.extend(self.accel_lane.drain(..).map(|job| Dispatch::single(job, false)));
         for queue in self.buckets.values_mut() {
             while queue.len() >= width {
                 out.push(Dispatch::batch(queue.drain(..width).collect(), false));
@@ -369,6 +378,27 @@ mod tests {
         assert_eq!(ds.len(), 1, "only the m1 single is ready");
         assert!(!ds[0].is_batch());
         assert!(!ds[0].deadline_forced, "an m1 single dispatches by design, not deadline");
+        assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
+    }
+
+    #[test]
+    fn accel_pinned_jobs_dispatch_as_singles_immediately() {
+        use crate::engine::{Rung, SamplerSpec};
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let now = Instant::now();
+        // 3 batchable jobs of one shape + 1 b2-pinned job of the SAME
+        // shape: the pinned job never counts toward the bucket.
+        for i in 0..3 {
+            b.push(spec(&format!("j{i}"), 4, 8), None, now);
+        }
+        let mut pinned = spec("accel", 4, 8);
+        pinned.sampler = Some(SamplerSpec::rung(Rung::B2));
+        b.push(pinned, None, now);
+        assert!(b.next_deadline().unwrap() <= now, "pinned job is due immediately");
+        let ds = b.poll(now);
+        assert_eq!(ds.len(), 1, "only the accel single is ready");
+        assert!(!ds[0].is_batch());
+        assert!(!ds[0].deadline_forced, "an accel single dispatches by design, not deadline");
         assert_eq!(b.queued(), 3, "the bucket still waits for a 4th lane-mate");
     }
 

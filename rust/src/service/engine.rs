@@ -361,6 +361,7 @@ fn spawn_dispatch(
                     Ok(mut result) => {
                         metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
                         metrics.obs.record_completed(&timing, result.stats.attempts);
+                        metrics.record_backend(&result.kind, result.stats.attempts);
                         metrics.obs.traces.push(JobTrace {
                             seq: 0,
                             id: result.id.clone(),
@@ -422,6 +423,7 @@ fn spawn_run(
         let _signal = signal;
         let id = job.id.clone();
         let spins = job.spec.config.total_updates();
+        let kind = job.spec.sampler.rung.label();
         // A run bypasses the batcher: it "seals" at admission and both
         // dispatch and sweep begin when the pool picks it up.
         let mut timeline = Timeline::new(admit, admit);
@@ -438,6 +440,7 @@ fn spawn_run(
         if ok {
             metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
             metrics.obs.record_completed(&timing, spins);
+            metrics.record_backend(kind, spins);
         } else {
             metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
         }

@@ -77,6 +77,14 @@ impl Executor {
                 );
                 Ok(())
             }
+            Rung::B1 | Rung::B2 => {
+                anyhow::ensure!(
+                    matches!(s.backend, BackendPref::Auto | BackendPref::Accel),
+                    "the accel rungs run on the software device (job requested backend {})",
+                    s.backend
+                );
+                Ok(())
+            }
             Rung::C1 => {
                 if let Width::W(w) = s.width {
                     anyhow::ensure!(
@@ -124,12 +132,23 @@ impl Executor {
     /// The single-job path: the scalar A.2 reference for plain jobs
     /// (exactly the run a standalone invocation would execute — also the
     /// bit-exactness oracle for C-rung served results, `repro job-run`),
-    /// or the bit-packed m1 sweep for m1-pinned jobs (a different Markov
-    /// chain on the ±1 workload family — not A.2-bit-exact by design).
-    /// Both instantiate through the engine's single dispatch point, like
-    /// the lane-batched path.
+    /// the bit-packed m1 sweep for m1-pinned jobs (a different Markov
+    /// chain on the ±1 workload family — not A.2-bit-exact by design),
+    /// or the software device for accel-pinned jobs (same visit order as
+    /// A.2, so bit-exact to the oracle).  All instantiate through the
+    /// engine's single dispatch point, like the lane-batched path.
     pub fn run_single(&self, spec: &JobSpec) -> Result<JobResult> {
-        let resolved = if spec.wants_multispin() { Self::MULTISPIN } else { Self::SCALAR };
+        let resolved = if spec.wants_multispin() {
+            Self::MULTISPIN
+        } else if spec.wants_accel() {
+            Resolved {
+                rung: spec.sampler.expect("accel jobs pin a sampler").rung,
+                backend: Backend::Accel,
+                width: 32,
+            }
+        } else {
+            Self::SCALAR
+        };
         let wl = spec.workload();
         let mut sweeper =
             engine::builder::instantiate(resolved, &wl.model, &wl.s0, spec.seed, self.exp)?;
@@ -150,8 +169,13 @@ impl Executor {
             kind: resolved.label(),
             lanes: resolved.width,
             // For m1 the "lanes" are layer bits: with fewer than 64
-            // layers the top bits of each word are padding.
-            occupancy: spec.layers.min(resolved.width).max(1),
+            // layers the top bits of each word are padding.  For the
+            // accel rungs they are warp threads, filled by spins.
+            occupancy: if spec.wants_accel() {
+                (spec.width * spec.height * spec.layers).min(resolved.width)
+            } else {
+                spec.layers.min(resolved.width).max(1)
+            },
             energy_trace: trace,
             state: if spec.want_state { Some(sweeper.state()) } else { None },
             plan: Some(PlanEcho::of(resolved)),
@@ -313,6 +337,50 @@ mod tests {
         // is refused at admission.
         let mut pinned = spec.clone();
         pinned.sampler = Some(SamplerSpec::rung(Rung::M1).on(BackendPref::Avx2));
+        assert!(exec.admits(&pinned).is_err());
+    }
+
+    #[test]
+    fn accel_pinned_jobs_run_the_device_path() {
+        let spec = JobSpec {
+            id: "b".into(),
+            width: 4,
+            height: 4,
+            layers: 8,
+            model_seed: 3,
+            jtau: 0.5,
+            sweeps: 5,
+            beta: 0.7,
+            seed: 11,
+            trace_every: 0,
+            want_state: true,
+            want_timing: false,
+            sampler: Some(SamplerSpec::rung(Rung::B2)),
+        };
+        let exec = Executor::new(4, ExpMode::Fast).unwrap();
+        exec.admits(&spec).unwrap();
+        let r = exec.run_single(&spec).unwrap();
+        assert_eq!(r.kind, "B.2");
+        assert_eq!(r.lanes, 32);
+        assert_eq!(r.occupancy, 32, "128 spins fill every warp thread");
+        assert_eq!(r.stats.attempts, 5 * 4 * 4 * 8, "every spin attempted once per sweep");
+        assert!(r.stats.flips > 0);
+        assert_eq!(r.plan.as_ref().unwrap().rung, "b2");
+        assert_eq!(r.plan.as_ref().unwrap().backend, "accel");
+        let state = r.state.as_ref().unwrap();
+        assert_eq!(state.len(), 4 * 4 * 8);
+        // The device sweeps in the scalar visit order: bit-exact to the
+        // A.2 oracle run of the same job.
+        let mut plain = spec.clone();
+        plain.sampler = None;
+        let oracle = exec.run_single(&plain).unwrap();
+        assert_eq!(r.energy.to_bits(), oracle.energy.to_bits());
+        assert_eq!(r.stats.flips, oracle.stats.flips);
+        assert_eq!(r.state, oracle.state);
+        // A pinned SIMD backend is refused at admission — the device
+        // picks its own micro-backend.
+        let mut pinned = spec.clone();
+        pinned.sampler = Some(SamplerSpec::rung(Rung::B1).on(BackendPref::Avx2));
         assert!(exec.admits(&pinned).is_err());
     }
 

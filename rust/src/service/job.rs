@@ -39,6 +39,13 @@
 //! bit-packed checkerboard order, so it is a different (equally valid)
 //! Markov chain.  The A.2 oracle contract applies to the C-rung path
 //! only.
+//!
+//! Jobs may also pin `rung: b1` or `rung: b2` (the accel lane): they
+//! dispatch as singles on the in-process software device
+//! ([`crate::device`], 32-thread warps with counted coalesced/strided
+//! memory transactions).  The device sweeps in the scalar visit order,
+//! so accel-lane results **are** bit-exact to the A.2 oracle
+//! (`repro job-run`) — the same contract as the C-rungs.
 
 use crate::coordinator::{Checkpoint, RunReport, RunSpec};
 use crate::engine::{Resolved, Rung, SamplerSpec, Width};
@@ -185,6 +192,13 @@ impl JobSpec {
         matches!(self.sampler, Some(s) if s.rung == Rung::M1)
     }
 
+    /// Whether the job's sampler pins an accelerator rung (`b1`/`b2`) —
+    /// such jobs bypass lane-packing and dispatch as singles on the
+    /// software device (32-thread warps inside one job).
+    pub fn wants_accel(&self) -> bool {
+        matches!(self.sampler, Some(s) if s.rung.is_accel())
+    }
+
     /// Admission checks: the same geometry rules the C-rungs need
     /// (even torus dims, `layers >= 2`) plus service abuse bounds.
     pub fn validate(&self) -> Result<()> {
@@ -239,9 +253,10 @@ impl JobSpec {
         anyhow::ensure!(self.jtau.is_finite(), "jtau must be finite");
         if let Some(s) = self.sampler {
             anyhow::ensure!(
-                matches!(s.rung, Rung::C1 | Rung::A2 | Rung::M1),
+                matches!(s.rung, Rung::C1 | Rung::A2 | Rung::M1 | Rung::B1 | Rung::B2),
                 "sampler rung {} is not servable: the service lane-batches through c1, runs m1 \
-                 as bit-packed singles, and falls back to the scalar a2 reference",
+                 and b1/b2 as singles (bit-packed / software device), and falls back to the \
+                 scalar a2 reference",
                 s.rung
             );
             if s.rung == Rung::A2 {
@@ -263,6 +278,22 @@ impl JobSpec {
                     "m1 needs an even layer count for its checkerboard phases (got {})",
                     self.layers
                 );
+            }
+            if s.rung.is_accel() {
+                anyhow::ensure!(
+                    matches!(s.width, Width::Auto | Width::W(32)),
+                    "the accel rungs run 32-thread warps — their width is fixed at 32 \
+                     (sampler requested {})",
+                    s.width
+                );
+                if s.rung == Rung::B2 {
+                    anyhow::ensure!(
+                        self.layers % 2 == 0,
+                        "b2's coalesced layout pair-packs the tau ring — it needs an even \
+                         layer count (got {}); b1 takes any layers >= 2",
+                        self.layers
+                    );
+                }
             }
         }
         Ok(())
@@ -366,10 +397,6 @@ impl RunJob {
             self.spec.config.threads <= 8,
             "run jobs are capped at 8 worker threads (got {})",
             self.spec.config.threads
-        );
-        anyhow::ensure!(
-            !self.spec.sampler.rung.is_accel(),
-            "the service does not run accelerator rungs"
         );
         Ok(())
     }
@@ -808,14 +835,19 @@ mod tests {
         assert_eq!(parsed.spec.sampler.rung, Rung::C1);
         assert_eq!(parsed.spec.config.n_models, 3);
         assert!(parsed.checkpoint.is_none());
-        // Accelerator rungs are not servable as run jobs.
+        // Accelerator rungs are servable as run jobs: the software
+        // device keeps its RNG on the host, so they checkpoint like any
+        // other rung.
         let accel = RunJob {
             id: "r2".into(),
             spec: RunSpec::new(rs.config.clone(), crate::sweep::SweepKind::B2Accel),
             checkpoint: None,
             want_checkpoint: false,
         };
-        assert!(parse_request(&accel.to_line()).is_err());
+        let Request::Run(accel_parsed) = parse_request(&accel.to_line()).unwrap() else {
+            panic!("expected run")
+        };
+        assert!(accel_parsed.spec.sampler.rung.is_accel());
         // The per-request work cap applies.
         let heavy = RunJob {
             id: "r3".into(),
@@ -862,9 +894,22 @@ mod tests {
         assert!(spec.wants_scalar());
         // a2 at a vector width is contradictory.
         assert!(parse_request(r#"{"id":"s2","sampler":{"rung":"a2","width":4}}"#).is_err());
-        // The service does not serve accelerator or within-model rungs.
-        assert!(parse_request(r#"{"id":"s3","sampler":{"rung":"b1"}}"#).is_err());
+        // The service does not serve the within-model A vector rungs.
         assert!(parse_request(r#"{"id":"s4","sampler":{"rung":"a4"}}"#).is_err());
         assert!(parse_request(r#"{"id":"s5","sampler":{"rung":"nope"}}"#).is_err());
+    }
+
+    #[test]
+    fn accel_sampler_routes_and_validates() {
+        let line = r#"{"id":"b1","width":4,"height":4,"layers":8,"sampler":{"rung":"b2"}}"#;
+        let Request::Job(spec) = parse_request(line).unwrap() else { panic!("expected job") };
+        assert!(spec.wants_accel());
+        assert!(!spec.wants_scalar() && !spec.pins_batch() && !spec.wants_multispin());
+        // Width is fixed at the 32-thread warp.
+        assert!(parse_request(r#"{"id":"b2","sampler":{"rung":"b1","width":32}}"#).is_ok());
+        assert!(parse_request(r#"{"id":"b3","sampler":{"rung":"b1","width":8}}"#).is_err());
+        // b2 needs an even depth; b1 takes any layers >= 2.
+        assert!(parse_request(r#"{"id":"b4","layers":9,"sampler":{"rung":"b2"}}"#).is_err());
+        assert!(parse_request(r#"{"id":"b5","layers":9,"sampler":{"rung":"b1"}}"#).is_ok());
     }
 }

@@ -24,6 +24,26 @@ use crate::obs::prometheus::PromWriter;
 use crate::obs::{phase, HistogramSnapshot, Obs, RateWindow};
 use crate::util::json::{self, Value};
 
+/// Serving backends, in metric-label order: the scalar A.2 reference,
+/// the lane-batched SIMD C-rungs, the bit-packed multi-spin path and
+/// the software-device accel rungs.
+pub const BACKEND_LABELS: [&str; 4] = ["scalar", "simd", "multispin", "accel"];
+
+/// Index into the per-backend counter arrays for a result's rung label
+/// (`"A.2"`, `"C.1w8"`, `"M.1"`, `"B.2"`, ...).  Unknown labels count
+/// as scalar, the fallback path.
+pub fn backend_index(kind: &str) -> usize {
+    if kind.starts_with("C.") {
+        1
+    } else if kind.starts_with("M.") {
+        2
+    } else if kind.starts_with("B.") {
+        3
+    } else {
+        0
+    }
+}
+
 /// Cumulative counters of one running service.
 #[derive(Default)]
 pub struct ServiceMetrics {
@@ -58,6 +78,10 @@ pub struct ServiceMetrics {
     pub jobs_in_system: AtomicU64,
     /// Dispatch rounds handed to the pool and not yet completed.
     pub dispatches_in_flight: AtomicU64,
+    /// Jobs answered ok, by serving backend (index: [`BACKEND_LABELS`]).
+    pub jobs_completed_backend: [AtomicU64; 4],
+    /// Spin updates attempted by completed jobs, by serving backend.
+    pub spins_backend: [AtomicU64; 4],
     /// Histograms, traces and rates for this instance.
     pub obs: Obs,
 }
@@ -122,6 +146,14 @@ impl ServiceMetrics {
         if deadline_forced {
             self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Account one completed job against its serving backend (`kind` is
+    /// the result's rung label, e.g. `"C.1w8"` or `"B.2"`).
+    pub fn record_backend(&self, kind: &str, spins: u64) {
+        let i = backend_index(kind);
+        self.jobs_completed_backend[i].fetch_add(1, Ordering::Relaxed);
+        self.spins_backend[i].fetch_add(spins, Ordering::Relaxed);
     }
 
     /// Update the live queue depth (and its high-water mark).
@@ -380,6 +412,45 @@ impl ServiceMetrics {
                 &samples,
             );
         }
+        // Per-backend completion counters: which serving lane (scalar
+        // A.2, SIMD C-rungs, bit-packed m1, software-device accel) did
+        // the work.
+        let jobs_rows: Vec<(Vec<(&str, &str)>, u64)> = BACKEND_LABELS
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                (vec![("backend", b)], self.jobs_completed_backend[i].load(Ordering::Relaxed))
+            })
+            .collect();
+        w.counter_family(
+            "repro_jobs_completed_by_backend_total",
+            "Jobs answered ok, by serving backend.",
+            &jobs_rows,
+        );
+        let spin_rows: Vec<(Vec<(&str, &str)>, u64)> = BACKEND_LABELS
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (vec![("backend", b)], self.spins_backend[i].load(Ordering::Relaxed)))
+            .collect();
+        w.counter_family(
+            "repro_spins_attempted_by_backend_total",
+            "Spin updates attempted by completed jobs, by serving backend.",
+            &spin_rows,
+        );
+        // The software device's process-global memory-access model:
+        // coalesced vs strided transactions (the paper's B.1-vs-B.2
+        // axis) plus in-warp divergent replays.
+        let (coalesced, strided, replays) = crate::device::global_totals();
+        w.counter_family(
+            "repro_device_transactions_total",
+            "Software-device global-memory transactions by access kind.",
+            &[(vec![("kind", "coalesced")], coalesced), (vec![("kind", "strided")], strided)],
+        );
+        w.counter(
+            "repro_device_divergent_replays_total",
+            "Software-device in-warp conflict replays.",
+            replays,
+        );
         if let Some(t) = phase::snapshot() {
             w.counter_family(
                 "repro_phase_ns_total",
@@ -511,6 +582,7 @@ mod tests {
         let timing =
             StageTiming { queue_us: 50, sweep_us: 900, e2e_us: 1000, ..StageTiming::default() };
         m.obs.record_completed(&timing, 160);
+        m.record_backend("B.2", 640);
         let v = Value::parse(&m.metrics_line()).unwrap();
         assert_eq!(v.get("op").unwrap().as_str().unwrap(), "metrics");
         assert!(v
@@ -526,11 +598,34 @@ mod tests {
         assert!(text.contains(r#"shape="4x4x8""#));
         assert!(text.contains("repro_lane_fill_ratio"));
         assert!(text.contains("repro_build_info"));
+        assert!(text.contains("# TYPE repro_jobs_completed_by_backend_total counter"));
+        assert!(text.contains(r#"backend="accel""#));
+        assert!(text.contains("repro_spins_attempted_by_backend_total"));
+        assert!(text.contains(r#"repro_device_transactions_total"#));
+        assert!(text.contains(r#"kind="coalesced""#));
+        assert!(text.contains("repro_device_divergent_replays_total"));
         // Every sample line carries the common labels.
         for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
             assert!(line.contains("host=\""), "missing host label: {line}");
             assert!(line.contains("sha=\""), "missing sha label: {line}");
         }
+    }
+
+    #[test]
+    fn backend_counters_bucket_by_rung_kind_label() {
+        assert_eq!(backend_index("A.2"), 0);
+        assert_eq!(backend_index("C.1 w8"), 1);
+        assert_eq!(backend_index("M.1"), 2);
+        assert_eq!(backend_index("B.1"), 3);
+        assert_eq!(backend_index("B.2"), 3);
+        let m = ServiceMetrics::default();
+        m.record_backend("B.2", 128);
+        m.record_backend("B.1", 64);
+        m.record_backend("A.2", 10);
+        assert_eq!(m.jobs_completed_backend[3].load(Ordering::Relaxed), 2);
+        assert_eq!(m.spins_backend[3].load(Ordering::Relaxed), 192);
+        assert_eq!(m.jobs_completed_backend[0].load(Ordering::Relaxed), 1);
+        assert_eq!(m.spins_backend[0].load(Ordering::Relaxed), 10);
     }
 
     #[test]

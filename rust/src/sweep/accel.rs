@@ -1,14 +1,21 @@
-//! B.1 / B.2 — the accelerator rungs: AOT-compiled XLA artifacts executed
-//! through PJRT (the reproduction's stand-in for the paper's CUDA
-//! implementations; see DESIGN.md §2.1).
+//! The PJRT execution path for B.1 / B.2: AOT-compiled XLA artifacts
+//! executed through a real runtime.  This is the *optional* artifact
+//! path — `--rung b1|b2` / `--backend accel` resolve onto the
+//! in-process software device ([`crate::device`]), which needs no
+//! artifacts, checkpoints bit-exactly and serves; an [`AccelSweeper`]
+//! only exists when the caller supplies a [`Runtime`] explicitly
+//! (`repro artifacts-check`, the `accelerator_serving` example).
 //!
-//! Both variants run the same algorithm with the same interlaced MT19937
-//! stream; they differ *only* in memory layout — B.1 keeps the original
-//! layer-major flat order and reaches every neighbour through an index
-//! table (irregular gathers), B.2 stores the state interlaced
-//! (vertex-major, layer = lane) so every access is a contiguous vector op.
-//! This mirrors the paper's §3.2: "this reorganization of memory was the
-//! only difference between the two GPU versions".
+//! Both artifact variants run the same algorithm with the same
+//! interlaced MT19937 stream; they differ *only* in memory layout — B.1
+//! keeps the original layer-major flat order and reaches every
+//! neighbour through an index table (irregular gathers), B.2 stores the
+//! state interlaced (vertex-major, layer = lane) so every access is a
+//! contiguous vector op.  This mirrors the paper's §3.2: "this
+//! reorganization of memory was the only difference between the two GPU
+//! versions".  Note the artifact kernels are *not* trajectory-identical
+//! to the software device or the CPU rungs (checkerboard schedule,
+//! on-device RNG) — `validate()` checks energies, not bits.
 
 use std::path::Path;
 

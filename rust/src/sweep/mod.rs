@@ -16,8 +16,8 @@
 //! | C.1    | [`c1_replica_batch`] | 4 | lane-per-replica batch: 4 tempering replicas in lockstep, per-lane β (§3.2's coalescing applied across the ensemble) |
 //! | C.1w8  | [`c1_replica_batch`] | 8 | the same batch on the AVX2 octet substrate |
 //! | M.1    | [`m1_multispin`] | 64 | multi-spin coding: 64 spins bit-packed per word, XOR-parity neighbour sums, per-bin integer acceptance thresholds |
-//! | B.1    | [`accel`]       | 32 | accelerator, naive gathered layout |
-//! | B.2    | [`accel`]       | 32 | accelerator, coalesced interlaced layout (§3.2) |
+//! | B.1    | [`crate::device`] | 32 | software device, naive gathered layout (§3.2) |
+//! | B.2    | [`crate::device`] | 32 | software device, coalesced layout — "the only difference" (§3.2) |
 //!
 //! The A-rungs vectorize *within* one model; the C-rungs vectorize
 //! *across* the tempering ensemble (one lane = one replica, so any layer
@@ -273,6 +273,12 @@ impl SweepKind {
             // (the (layer + colour) parity classes must close under the
             // tau wrap).
             SweepKind::M1MultiSpin => n_layers >= 2 && n_layers % 2 == 0,
+            // The naive device kernel gathers per lane: any well-formed
+            // model runs.
+            SweepKind::B1Accel => n_layers >= 2,
+            // B.2's pair-packed coalesced streams need the tau ring to
+            // close over the lane pairs — same parity argument as M.1.
+            SweepKind::B2Accel => n_layers >= 2 && n_layers % 2 == 0,
             _ => true,
         }
     }
@@ -384,6 +390,13 @@ pub trait Sweeper {
     fn set_rng_state(&mut self, _words: &[u32]) -> bool {
         false
     }
+
+    /// Device execution counters — `Some` only for the accelerator rungs
+    /// running on [`crate::device::DeviceSweeper`] (coalesced/strided
+    /// transactions, shared-tile traffic, divergent replays).
+    fn device_stats(&self) -> Option<crate::device::DeviceStats> {
+        None
+    }
 }
 
 /// Fallible construction with the rung's paper-default exponential mode.
@@ -391,11 +404,11 @@ pub trait Sweeper {
 /// A legacy-surface shim: lowers `kind` onto its
 /// [`crate::engine::SamplerSpec`] and resolves it through
 /// [`crate::engine::EngineBuilder`] — the crate's single dispatch point.
-/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  Errors
-/// on the accelerator rungs (they need a [`crate::runtime::Runtime`] and
-/// artifacts on disk — use [`accel::AccelSweeper::new`]) and, with a
-/// structured [`crate::engine::UnsupportedGeometry`], on SIMD rungs whose
-/// lane width does not divide the model's layer count.
+/// `seed` seeds the rung's MT19937 state (scalar or interlaced).  The
+/// accelerator rungs build onto the software
+/// [`crate::device::DeviceSweeper`]; geometry mismatches (SIMD lane
+/// widths that do not divide the layer count, odd-depth B.2) error with
+/// a structured [`crate::engine::UnsupportedGeometry`].
 pub fn try_make_sweeper(
     kind: SweepKind,
     model: &QmcModel,
@@ -428,14 +441,26 @@ mod tests {
     use std::str::FromStr;
 
     #[test]
-    fn accel_rungs_error_instead_of_panicking() {
+    fn accel_rungs_build_on_the_software_device() {
         let wl = torus_workload(4, 4, 8, 1, 0.3);
         for kind in [SweepKind::B1Accel, SweepKind::B2Accel] {
-            let err = try_make_sweeper(kind, &wl.model, &wl.s0, 1);
-            assert!(err.is_err(), "{kind:?} should be an error without a Runtime");
-            let msg = format!("{:#}", err.err().unwrap());
-            assert!(msg.contains("AccelSweeper"), "unhelpful message: {msg}");
+            let mut sw = try_make_sweeper(kind, &wl.model, &wl.s0, 1)
+                .unwrap_or_else(|e| panic!("{kind:?} should build on the device sim: {e:#}"));
+            assert_eq!(sw.kind(), kind);
+            assert_eq!(sw.width(), 32);
+            let stats = sw.run(2, 0.8);
+            assert_eq!(stats.attempts, 2 * wl.model.n_spins() as u64);
+            let dev = sw.device_stats().expect("device rungs expose device stats");
+            assert!(dev.warps > 0);
+            assert!(dev.transactions() > 0);
         }
+        // Odd depth: B.1 runs, B.2 rejects with the structured geometry
+        // error naming B.1 as the nearest runnable accel config.
+        let wl = torus_workload(4, 4, 9, 1, 0.3);
+        assert!(try_make_sweeper(SweepKind::B1Accel, &wl.model, &wl.s0, 1).is_ok());
+        let err = try_make_sweeper(SweepKind::B2Accel, &wl.model, &wl.s0, 1);
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("b1"), "should name the accel alternative: {msg}");
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Integration tests over the software device (the in-process
+//! reproduction of the paper's GPU half, `crate::device`).
+//!
+//! The load-bearing property is §3.2's own control: B.1 and B.2 differ
+//! *only* in memory layout, so for the same seed both must retire the
+//! identical trajectory — and because the device walks spins in scalar
+//! A.2's order off one scalar MT19937, that trajectory must be
+//! bit-identical to the CPU oracle too.  On top of that: the transaction
+//! counters must actually separate the layouts (B.2 coalesces, B.1
+//! serializes), and checkpoint/resume through the coordinator must be
+//! transparent for both device rungs.
+
+use vectorising::coordinator::{self, RunConfig, RunOptions, RunSpec};
+use vectorising::engine::{BackendPref, EngineBuilder, Rung, SamplerSpec};
+use vectorising::ising::builder::torus_workload;
+use vectorising::sweep::{try_make_sweeper, SweepKind};
+
+fn cfg() -> RunConfig {
+    RunConfig { n_models: 4, sweeps: 40, sweeps_per_round: 10, ..RunConfig::default() }
+}
+
+#[test]
+fn b1_and_b2_are_bit_exact_to_scalar_a2() {
+    // Same seed, same workload, three betas: the two device layouts and
+    // the scalar oracle must agree spin-for-spin and bit-for-bit.
+    let wl = torus_workload(8, 8, 32, 1, 0.3);
+    let mut a2 = try_make_sweeper(SweepKind::A2Basic, &wl.model, &wl.s0, 5489).unwrap();
+    let mut b1 = try_make_sweeper(SweepKind::B1Accel, &wl.model, &wl.s0, 5489).unwrap();
+    let mut b2 = try_make_sweeper(SweepKind::B2Accel, &wl.model, &wl.s0, 5489).unwrap();
+    for (round, beta) in [0.5f32, 1.1, 2.0].into_iter().enumerate() {
+        let sa = a2.run(10, beta);
+        let s1 = b1.run(10, beta);
+        let s2 = b2.run(10, beta);
+        assert_eq!(sa.flips, s1.flips, "round {round}: B.1 flips diverged from A.2");
+        assert_eq!(sa.flips, s2.flips, "round {round}: B.2 flips diverged from A.2");
+        let ra = a2.state();
+        assert_eq!(ra, b1.state(), "round {round}: B.1 state diverged");
+        assert_eq!(ra, b2.state(), "round {round}: B.2 state diverged");
+        assert_eq!(
+            a2.energy().to_bits(),
+            b2.energy().to_bits(),
+            "round {round}: B.2 energy diverged"
+        );
+    }
+    // The RNG streams stayed in lockstep too: identical 625-word
+    // Mt19937 payloads after identical trajectories.
+    assert_eq!(a2.rng_state(), b1.rng_state());
+    assert_eq!(a2.rng_state(), b2.rng_state());
+}
+
+#[test]
+fn transaction_counters_separate_the_layouts() {
+    let wl = torus_workload(8, 8, 32, 1, 0.3);
+    let before = vectorising::device::global_totals();
+    let mut b1 = try_make_sweeper(SweepKind::B1Accel, &wl.model, &wl.s0, 7).unwrap();
+    let mut b2 = try_make_sweeper(SweepKind::B2Accel, &wl.model, &wl.s0, 7).unwrap();
+    b1.run(5, 0.8);
+    b2.run(5, 0.8);
+    let d1 = b1.device_stats().expect("B.1 exposes device stats");
+    let d2 = b2.device_stats().expect("B.2 exposes device stats");
+    assert!(d1.warps > 0 && d2.warps > 0);
+    assert_eq!(d1.warps, d2.warps, "same grid, same warp count");
+    // The paper's axis: the naive layout serializes warp accesses, the
+    // coalesced layout turns them into few wide transactions.
+    assert!(
+        d2.coalescing_efficiency() > d1.coalescing_efficiency(),
+        "B.2 must coalesce better than B.1: {:?} vs {:?}",
+        d2,
+        d1
+    );
+    assert!(d1.strided > d2.strided, "B.1 is the strided layout: {d1:?} vs {d2:?}");
+    assert!(d2.transactions() < d1.transactions(), "coalescing must reduce total traffic");
+    // Both sweepers flushed into the process-wide totals the metrics
+    // endpoint exports.
+    let after = vectorising::device::global_totals();
+    assert!(after.0 >= before.0 + d2.coalesced);
+    assert!(after.1 >= before.1 + d1.strided);
+}
+
+#[test]
+fn device_rungs_resume_bit_exactly_through_the_coordinator() {
+    for rung in [Rung::B1, Rung::B2] {
+        let dir = std::env::temp_dir().join(format!("vectorising_device_resume_{rung:?}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = cfg();
+        let rs = RunSpec::new(cfg.clone(), SamplerSpec::rung(rung).on(BackendPref::Accel));
+        let full = coordinator::run_spec_with(&rs, &RunOptions::default()).unwrap();
+        assert_eq!(full.kind, rung.label());
+        assert_eq!(full.plans[0].resolved.width, 32);
+
+        // Save at the halfway point, then resume to the full length.
+        let half = RunSpec::new(RunConfig { sweeps: 20, ..cfg.clone() }, rs.sampler);
+        let half_path = dir.join("half.ck.json");
+        coordinator::run_spec_with(
+            &half,
+            &RunOptions {
+                checkpoint: Some(half_path.clone()),
+                checkpoint_every: 2,
+                resume: None,
+            },
+        )
+        .unwrap();
+        let resumed = coordinator::resume_run(
+            &half_path,
+            |mut r| {
+                r.config.sweeps = 40;
+                r
+            },
+            &RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(resumed.plans, full.plans, "{rung:?}: resume rebuilds the same plan");
+        for (i, (a, b)) in full.energies.iter().zip(&resumed.energies).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{rung:?} replica {i}: resume diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn device_runs_match_the_scalar_oracle_through_the_coordinator() {
+    // The acceptance check, end to end: `--rung b2 --backend accel` and
+    // the scalar A.2 ladder produce bit-identical ensembles (same
+    // per-replica seeds, same tempering schedule, same trajectories).
+    let cfg = cfg();
+    let accel = coordinator::run_spec_with(
+        &RunSpec::new(cfg.clone(), SamplerSpec::rung(Rung::B2).on(BackendPref::Accel)),
+        &RunOptions::default(),
+    )
+    .unwrap();
+    let scalar = coordinator::run_spec_with(
+        &RunSpec::new(cfg, SamplerSpec::rung(Rung::A2)),
+        &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(accel.energies.len(), scalar.energies.len());
+    for (i, (a, s)) in accel.energies.iter().zip(&scalar.energies).enumerate() {
+        assert_eq!(a.to_bits(), s.to_bits(), "replica {i}: device diverged from scalar A.2");
+    }
+    assert_eq!(accel.total_attempts, scalar.total_attempts);
+}
+
+#[test]
+fn odd_depth_b2_names_the_nearest_runnable_accel_config() {
+    use vectorising::engine::UnsupportedGeometry;
+    let err = EngineBuilder::new(SamplerSpec::rung(Rung::B2).on(BackendPref::Accel))
+        .layers(9)
+        .plan()
+        .err()
+        .expect("odd tau depth cannot pair-pack");
+    let ug = err.downcast_ref::<UnsupportedGeometry>().expect("structured geometry error");
+    assert_eq!(ug.layers, 9);
+    let first = ug.alternatives.first().expect("alternatives offered");
+    assert_eq!(first.rung, Rung::B1, "nearest accel config first");
+    assert_eq!(first.backend, BackendPref::Accel);
+    assert!(EngineBuilder::new(*first).layers(9).plan().is_ok(), "and it actually resolves");
+}
