@@ -61,7 +61,12 @@
 //! sampling jobs onto C-rung lane-batches (`repro serve` / `repro
 //! submit`), speaking the versioned v1 wire protocol (jobs carry a
 //! sampler spec, results echo the resolved plan, and `{"op":"run"}`
-//! executes whole checkpointable runs with inline checkpoints).  Perf
+//! executes whole checkpointable runs with inline checkpoints).  The
+//! [`router`] tier (`repro route`) scales that service out: shape
+//! buckets are consistent-hashed across replicated worker processes,
+//! with least-loaded replica selection, overload failover, zero-loss
+//! replay on worker death, and exact cluster-wide stats/Prometheus
+//! aggregation behind the same wire protocol.  Perf
 //! itself is a tracked artifact: [`harness::bench`] emits machine-readable
 //! `BENCH_<rung>.json` measurements and `repro bench --check` gates CI on
 //! the trajectory (M.1 ≥ 3× C.1w8 spins/sec, ≤ 10% regression against
@@ -102,6 +107,7 @@ pub mod harness;
 pub mod ising;
 pub mod obs;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod service;
 pub mod simd;

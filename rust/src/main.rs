@@ -26,6 +26,7 @@ use vectorising::engine::{EngineBuilder, Rung, SamplerSpec, UnsupportedGeometry,
 use vectorising::harness::bench::{self, BenchArtifact};
 use vectorising::harness::{fig13, fig14, fig17, table1, table2};
 use vectorising::ising::builder::torus_workload;
+use vectorising::router;
 use vectorising::runtime::{artifact, Runtime};
 use vectorising::service;
 use vectorising::service::executor::Executor;
@@ -100,6 +101,26 @@ SUBCOMMANDS
                    (default 1024, 0 = unbounded)
                    [--metrics-every N]  Prometheus text snapshot to stderr
                    every N seconds (0 = off, the default)
+  route            shard router: the same protocol as serve, fronting N
+                   workers — jobs consistent-hash by (rung class, shape)
+                   bucket onto a worker ring so every worker's batcher
+                   sees deep same-shape buckets; each bucket is served
+                   by --replicas workers (least-in-flight wins, overload
+                   fails over; only when all replicas refuse does the
+                   client see the merged rejection); worker death replays
+                   in-flight jobs onto survivors (seeded jobs are
+                   bit-exact anywhere, so zero admitted jobs are lost);
+                   stats/metrics/trace/hello answer cluster-wide (exact
+                   histogram merges, per-worker Prometheus labels)
+                   --listen HOST:PORT, then one of:
+                     --spawn N      boot N local workers (owned: they
+                                    shut down with the router; serving
+                                    flags --lanes/--backend/--threads/
+                                    --flush-ms/--max-queue/--exact are
+                                    forwarded to them)
+                     --workers a,b  front an existing fleet
+                   [--replicas N]   workers per bucket (default 2)
+                   [--health-ms N]  probe period (default 500)
   submit           client for a serving instance: --addr HOST:PORT
                    [--file jobs.jsonl | stdin] [--stats] [--metrics]
                    [--trace] [--shutdown]
@@ -451,6 +472,60 @@ fn main() -> Result<()> {
                 }
                 None => service::server::serve_stdin(&cfg)?,
             }
+        }
+        "route" => {
+            let listen = args
+                .str_opt("listen")
+                .ok_or_else(|| anyhow::anyhow!("--listen HOST:PORT required"))?;
+            let cfg = router::RouterConfig {
+                replicas: args.usize_or("replicas", 2)?,
+                health_ms: args.u64_or("health-ms", 500)?,
+            };
+            let spawn_n = args.usize_or("spawn", 0)?;
+            let explicit: Vec<String> = args
+                .str_opt("workers")
+                .map(|list| {
+                    list.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect()
+                })
+                .unwrap_or_default();
+            anyhow::ensure!(
+                (spawn_n > 0) != (!explicit.is_empty()),
+                "pass exactly one of --spawn N or --workers HOST:PORT,..."
+            );
+            let owned = if spawn_n > 0 {
+                // Forward serving flags verbatim to the spawned workers.
+                let mut serve_flags: Vec<String> = Vec::new();
+                for flag in ["lanes", "backend", "threads", "flush-ms", "max-queue"] {
+                    if let Some(v) = args.str_opt(flag) {
+                        serve_flags.push(format!("--{flag}"));
+                        serve_flags.push(v.to_string());
+                    }
+                }
+                if args.switch("exact") {
+                    serve_flags.push("--exact".to_string());
+                }
+                router::spawn_workers(spawn_n, &serve_flags)?
+            } else {
+                Vec::new()
+            };
+            let worker_addrs: Vec<String> = if owned.is_empty() {
+                explicit
+            } else {
+                owned.iter().map(|w| w.addr.clone()).collect()
+            };
+            let listener = std::net::TcpListener::bind(listen)?;
+            eprintln!(
+                "repro route: listening on {} ({} workers, replicas={}, health={}ms)",
+                listener.local_addr()?,
+                worker_addrs.len(),
+                cfg.replicas,
+                cfg.health_ms
+            );
+            let served = router::serve(listener, &worker_addrs, &cfg);
+            // Owned workers shut down with the router (a standalone
+            // fleet passed via --workers keeps serving).
+            router::shutdown_workers(owned);
+            served?;
         }
         "submit" => {
             let addr = args

@@ -18,6 +18,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::util::json::{self, Value};
+use crate::Result;
+
 /// Bucket count: upper edges `2^0 .. 2^38` µs, plus a final `+Inf`.
 pub const BUCKETS: usize = 40;
 
@@ -147,6 +150,39 @@ impl HistogramSnapshot {
     pub fn percentiles_us(&self) -> (f64, f64, f64) {
         (self.quantile_us(0.50), self.quantile_us(0.90), self.quantile_us(0.99))
     }
+
+    /// Wire form for cluster aggregation: `{"sum_us": N, "buckets":
+    /// [[i, count], ...]}` with zero buckets omitted (sparse — most of
+    /// the 40 log2 buckets are empty for any real latency stream).  A
+    /// router merges worker snapshots bucketwise via [`Self::merge`], so
+    /// cluster percentiles are *exactly* what a single instance would
+    /// have reported over the combined stream.
+    pub fn to_value(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Value::Arr(vec![json::num(i as f64), json::num(c as f64)]))
+            .collect();
+        json::obj(vec![("sum_us", json::num(self.sum_us as f64)), ("buckets", Value::Arr(buckets))])
+    }
+
+    /// Parse the sparse wire form back; out-of-range bucket indices are
+    /// an error (a peer speaking a different bucket layout must not be
+    /// silently merged).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut snap = Self::empty();
+        snap.sum_us = v.get("sum_us")?.as_f64()? as u64;
+        for pair in v.get("buckets")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            anyhow::ensure!(pair.len() == 2, "histogram bucket entries are [index, count] pairs");
+            let i = pair[0].as_usize()?;
+            anyhow::ensure!(i < BUCKETS, "bucket index {i} out of range (layout has {BUCKETS})");
+            snap.buckets[i] = pair[1].as_f64()? as u64;
+        }
+        Ok(snap)
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +232,23 @@ mod tests {
         assert_eq!(s.count(), 0);
         assert_eq!(s.quantile_us(0.99), 0.0);
         assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn wire_form_roundtrips_sparsely() {
+        let h = Histogram::new();
+        for v in [1u64, 5, 5, 700, 1 << 20] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let wire = s.to_value();
+        // Sparse: only the populated buckets travel.
+        assert_eq!(wire.get("buckets").unwrap().as_arr().unwrap().len(), 4);
+        let back = HistogramSnapshot::from_value(&wire).unwrap();
+        assert_eq!(back, s);
+        // A foreign bucket layout is refused, not silently merged.
+        let bogus = crate::util::json::Value::parse(r#"{"sum_us":1,"buckets":[[99,1]]}"#).unwrap();
+        assert!(HistogramSnapshot::from_value(&bogus).is_err());
     }
 
     #[test]

@@ -36,15 +36,20 @@ pub use hist::{Histogram, HistogramSnapshot};
 pub use rate::RateWindow;
 pub use trace::{JobTrace, StageTiming, Timeline, TraceRing};
 
-/// Resolved service configuration, echoed in stats so scrapes are
-/// self-describing (set once at engine start).
-#[derive(Copy, Clone, Debug)]
+/// Resolved service configuration, echoed in stats (and the
+/// `{"op":"hello"}` handshake) so scrapes are self-describing (set once
+/// at engine start).
+#[derive(Clone, Debug)]
 pub struct ConfigEcho {
     /// Negotiated lane width of the serving C-rung.
     pub lanes: usize,
     pub flush_ms: u64,
     pub max_queue: usize,
     pub threads: usize,
+    /// Resolved backend label of the serving C-rung (`"avx2"`, `"sse2"`,
+    /// `"portable"`, ...) — capability-aware routers place batchable
+    /// work by this.
+    pub backend: String,
 }
 
 /// Per-shape lane-fill histogram: how many batch dispatches of this
@@ -174,7 +179,7 @@ impl Obs {
     }
 
     pub fn config(&self) -> Option<ConfigEcho> {
-        self.config.get().copied()
+        self.config.get().cloned()
     }
 
     /// Account one completed (ok) job: latency histograms and rates.
@@ -232,10 +237,23 @@ mod tests {
     fn config_echo_is_write_once() {
         let obs = Obs::new();
         assert!(obs.config().is_none());
-        obs.set_config(ConfigEcho { lanes: 8, flush_ms: 25, max_queue: 1024, threads: 2 });
-        obs.set_config(ConfigEcho { lanes: 4, flush_ms: 1, max_queue: 1, threads: 1 });
+        obs.set_config(ConfigEcho {
+            lanes: 8,
+            flush_ms: 25,
+            max_queue: 1024,
+            threads: 2,
+            backend: "avx2".into(),
+        });
+        obs.set_config(ConfigEcho {
+            lanes: 4,
+            flush_ms: 1,
+            max_queue: 1,
+            threads: 1,
+            backend: "sse2".into(),
+        });
         let c = obs.config().unwrap();
         assert_eq!(c.lanes, 8, "first write wins");
+        assert_eq!(c.backend, "avx2");
         assert!(obs.uptime_ms() < 60_000);
         assert!(obs.started_at_ms() > 0);
     }

@@ -1,0 +1,493 @@
+//! Cluster-wide control-op aggregation.
+//!
+//! The router answers `hello`/`stats`/`metrics`/`trace` itself by
+//! fanning the op out to every alive worker over short-lived
+//! connections (the same `submit_lines` client `repro submit` uses) and
+//! merging the replies:
+//!
+//! * **stats** — counters summed, gauges summed, high-water marks
+//!   maxed, and latency histograms merged *bucketwise* through their
+//!   sparse [`HistogramSnapshot`] wire form, so cluster p50/p90/p99 are
+//!   exact percentiles of the combined stream — not averages of
+//!   per-worker summaries.  Per-shape queue buckets merge by
+//!   `(shape, lanes)`.  The reply keeps the worker stats-line shape, so
+//!   existing clients read a router the same way they read a worker.
+//! * **metrics** — each worker's Prometheus text is re-grouped per
+//!   family (one `# HELP`/`# TYPE` header each) with a `worker` label
+//!   injected into every sample, plus the router's own families under
+//!   `worker="router"`.
+//! * **trace** — per-worker trace rings concatenated, each entry tagged
+//!   with its worker.
+//! * **hello** — the router's capability view: every worker's handshake
+//!   under its address.
+
+use std::collections::BTreeMap;
+
+use crate::obs::prometheus::PromWriter;
+use crate::obs::HistogramSnapshot;
+use crate::service::job::PROTOCOL_VERSION;
+use crate::service::metrics::{build_labels, latency_summary};
+use crate::service::server::submit_lines;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::forward::RouterCore;
+
+/// Stats-line counters that sum across workers (gauges like
+/// `queue_depth` sum too: cluster depth is the total backlog).
+const SUMMED_KEYS: [&str; 15] = [
+    "jobs_submitted",
+    "jobs_completed",
+    "jobs_failed",
+    "jobs_rejected",
+    "batches_dispatched",
+    "singles_dispatched",
+    "deadline_flushes",
+    "lanes_occupied",
+    "lanes_padded",
+    "queue_depth",
+    "runs_executed",
+    "jobs_overloaded",
+    "jobs_in_system",
+    "dispatches_in_flight",
+    "spins_attempted",
+];
+
+const HIST_KEYS: [&str; 4] = ["queue_wait", "exec", "e2e", "pool_task"];
+
+/// Send one control op to `addr` on a short-lived connection and parse
+/// the single reply line.
+fn fetch_op(addr: &str, op_line: &str) -> Result<Value> {
+    let mut buf: Vec<u8> = Vec::new();
+    submit_lines(addr, vec![op_line.to_string()], &mut buf)?;
+    let text = String::from_utf8_lossy(&buf);
+    let line = text
+        .lines()
+        .find(|l| !l.trim().is_empty())
+        .ok_or_else(|| anyhow::anyhow!("worker {addr}: empty reply to {op_line}"))?;
+    Value::parse(line.trim())
+}
+
+/// Fan `op_line` out to every alive worker; returns one slot per
+/// upstream (`None`: dead or fetch failed — the prober, not the
+/// aggregator, owns declaring deaths).
+fn fetch_all(core: &RouterCore, op_line: &str) -> Vec<Option<Value>> {
+    core.upstreams
+        .iter()
+        .map(|up| {
+            if !up.alive() {
+                return None;
+            }
+            fetch_op(&up.addr, op_line).ok()
+        })
+        .collect()
+}
+
+fn get_f64(v: &Value, key: &str) -> f64 {
+    v.opt(key).and_then(|x| x.as_f64().ok()).unwrap_or(0.0)
+}
+
+/// Cluster `{"op":"stats"}`: the worker stats-line shape with every
+/// figure aggregated, plus appended `workers` and `router` sections.
+pub fn stats_line(core: &RouterCore) -> String {
+    let replies = fetch_all(core, "{\"op\":\"stats\"}");
+    let respondents: Vec<&Value> = replies.iter().flatten().collect();
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+        ("op", json::str_v("stats")),
+    ];
+    for key in SUMMED_KEYS {
+        let total: f64 = respondents.iter().map(|v| get_f64(v, key)).sum();
+        fields.push((key, json::num(total)));
+    }
+    // Derived figures recomputed from the summed inputs, never averaged.
+    let occupied: f64 = respondents.iter().map(|v| get_f64(v, "lanes_occupied")).sum();
+    let padded: f64 = respondents.iter().map(|v| get_f64(v, "lanes_padded")).sum();
+    let fill = if occupied + padded == 0.0 { 1.0 } else { occupied / (occupied + padded) };
+    fields.push(("lane_fill_ratio", json::num(fill)));
+    let max_depth =
+        respondents.iter().map(|v| get_f64(v, "max_queue_depth")).fold(0.0_f64, f64::max);
+    fields.push(("max_queue_depth", json::num(max_depth)));
+    let uptime = respondents.iter().map(|v| get_f64(v, "uptime_ms")).fold(0.0_f64, f64::max);
+    fields.push(("uptime_ms", json::num(uptime)));
+    let started = respondents
+        .iter()
+        .map(|v| get_f64(v, "started_at_ms"))
+        .filter(|&ms| ms > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    fields.push(("started_at_ms", json::num(if started.is_finite() { started } else { 0.0 })));
+    // Exact cluster latency percentiles: merge the sparse histograms
+    // bucketwise, then summarize the merged stream.
+    let mut hist_fields: Vec<(&str, Value)> = Vec::new();
+    let mut summary_fields: Vec<(&str, Value)> = Vec::new();
+    for key in HIST_KEYS {
+        let mut merged = HistogramSnapshot::empty();
+        for v in &respondents {
+            if let Some(h) = v.opt("latency_hist").and_then(|lh| lh.opt(key)) {
+                if let Ok(snap) = HistogramSnapshot::from_value(h) {
+                    merged.merge(&snap);
+                }
+            }
+        }
+        hist_fields.push((key, merged.to_value()));
+        summary_fields.push((key, latency_summary(&merged)));
+    }
+    fields.push(("latency_hist", json::obj(hist_fields)));
+    fields.push(("latency_us", json::obj(summary_fields)));
+    // Windowed rates sum (same window on every worker).
+    let window = respondents
+        .iter()
+        .find_map(|v| v.opt("rate").map(|r| get_f64(r, "window_secs")))
+        .unwrap_or(10.0);
+    let jobs_rate: f64 =
+        respondents.iter().filter_map(|v| v.opt("rate")).map(|r| get_f64(r, "jobs_per_sec")).sum();
+    let spins_rate: f64 =
+        respondents.iter().filter_map(|v| v.opt("rate")).map(|r| get_f64(r, "spins_per_sec")).sum();
+    fields.push((
+        "rate",
+        json::obj(vec![
+            ("window_secs", json::num(window)),
+            ("jobs_per_sec", json::num(jobs_rate)),
+            ("spins_per_sec", json::num(spins_rate)),
+        ]),
+    ));
+    // Per-shape queue buckets merged by (shape, lanes): cluster backlog
+    // per bucket, staleness of the oldest head anywhere.
+    let mut buckets: BTreeMap<(String, u64), (f64, f64)> = BTreeMap::new();
+    for v in &respondents {
+        let Some(arr) = v.opt("buckets").and_then(|b| b.as_arr().ok()) else { continue };
+        for b in arr {
+            let Some(shape) = b.opt("shape").and_then(|s| s.as_str().ok()) else { continue };
+            let lanes = get_f64(b, "lanes") as u64;
+            let entry = buckets.entry((shape.to_string(), lanes)).or_insert((0.0, 0.0));
+            entry.0 += get_f64(b, "depth");
+            entry.1 = entry.1.max(get_f64(b, "oldest_age_us"));
+        }
+    }
+    fields.push((
+        "buckets",
+        Value::Arr(
+            buckets
+                .iter()
+                .map(|((shape, lanes), (depth, oldest))| {
+                    json::obj(vec![
+                        ("shape", json::str_v(shape)),
+                        ("depth", json::num(*depth)),
+                        ("oldest_age_us", json::num(*oldest)),
+                        ("lanes", json::num(*lanes as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    // Per-worker roll call: liveness, routing load, key figures.
+    let workers: Vec<Value> = core
+        .upstreams
+        .iter()
+        .zip(replies.iter())
+        .map(|(up, reply)| {
+            let mut w = vec![
+                ("index", json::num(up.index as f64)),
+                ("addr", json::str_v(&up.addr)),
+                ("alive", Value::Bool(up.alive())),
+                (
+                    "in_flight",
+                    json::num(up.in_flight.load(std::sync::atomic::Ordering::Relaxed) as f64),
+                ),
+            ];
+            if let Some(v) = reply {
+                w.push(("jobs_completed", json::num(get_f64(v, "jobs_completed"))));
+                w.push(("queue_depth", json::num(get_f64(v, "queue_depth"))));
+                w.push(("lane_fill_ratio", json::num(get_f64(v, "lane_fill_ratio"))));
+                if let Some(backend) =
+                    v.opt("config").and_then(|c| c.opt("backend")).and_then(|b| b.as_str().ok())
+                {
+                    w.push(("backend", json::str_v(backend)));
+                }
+            }
+            json::obj(w)
+        })
+        .collect();
+    fields.push(("workers", Value::Arr(workers)));
+    fields.push(("router", router_section(core)));
+    json::obj(fields).to_string()
+}
+
+/// The router's own counters as a stats sub-object.
+fn router_section(core: &RouterCore) -> Value {
+    use std::sync::atomic::Ordering::Relaxed;
+    let m = &core.metrics;
+    json::obj(vec![
+        ("workers_total", json::num(core.upstreams.len() as f64)),
+        ("workers_alive", json::num(core.alive_count() as f64)),
+        ("replicas", json::num(core.replicas as f64)),
+        ("jobs_routed", json::num(m.jobs_routed.load(Relaxed) as f64)),
+        ("runs_routed", json::num(m.runs_routed.load(Relaxed) as f64)),
+        ("replies_relayed", json::num(m.replies_relayed.load(Relaxed) as f64)),
+        ("failovers", json::num(m.failovers.load(Relaxed) as f64)),
+        ("replays", json::num(m.replays.load(Relaxed) as f64)),
+        ("rejections", json::num(m.rejections.load(Relaxed) as f64)),
+        ("routing_errors", json::num(m.routing_errors.load(Relaxed) as f64)),
+        ("workers_lost", json::num(m.workers_lost.load(Relaxed) as f64)),
+        ("jobs_pending", json::num(core.pending_total() as f64)),
+    ])
+}
+
+/// One Prometheus metric family being re-grouped across workers.
+#[derive(Default)]
+struct Family {
+    help: String,
+    kind: String,
+    samples: Vec<String>,
+}
+
+/// Re-groups several workers' Prometheus expositions into one valid
+/// exposition: each family's `# HELP`/`# TYPE` header appears once, and
+/// every sample gains a `worker` label.  Without the re-grouping, naive
+/// concatenation would repeat family headers (invalid) and interleave
+/// different workers' histogram bucket series (unreadable).
+#[derive(Default)]
+struct PromAggregator {
+    order: Vec<String>,
+    families: BTreeMap<String, Family>,
+}
+
+impl PromAggregator {
+    fn family_mut(&mut self, name: &str) -> &mut Family {
+        if !self.families.contains_key(name) {
+            self.order.push(name.to_string());
+            self.families.insert(name.to_string(), Family::default());
+        }
+        self.families.get_mut(name).expect("just inserted")
+    }
+
+    /// The family a sample series belongs to: histogram series
+    /// `<fam>_bucket/_sum/_count` fold into `<fam>` when `<fam>` is a
+    /// declared histogram (its header always precedes its samples in a
+    /// worker's exposition).
+    fn family_of(&self, series: &str) -> String {
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = series.strip_suffix(suffix) {
+                if self.families.get(base).map(|f| f.kind.as_str()) == Some("histogram") {
+                    return base.to_string();
+                }
+            }
+        }
+        series.to_string()
+    }
+
+    fn add(&mut self, worker: &str, text: &str) {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+                let name = name.to_string();
+                let fam = self.family_mut(&name);
+                if fam.help.is_empty() {
+                    fam.help = help.to_string();
+                }
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind) = rest.split_once(' ').unwrap_or((rest, "untyped"));
+                let name = name.to_string();
+                let fam = self.family_mut(&name);
+                if fam.kind.is_empty() {
+                    fam.kind = kind.to_string();
+                }
+            } else if !line.trim().is_empty() && !line.starts_with('#') {
+                let name_end =
+                    line.find(|c| c == '{' || c == ' ').unwrap_or(line.len());
+                let series = &line[..name_end];
+                let fam_name = self.family_of(series);
+                let labeled = inject_worker_label(line, name_end, worker);
+                self.family_mut(&fam_name).samples.push(labeled);
+            }
+        }
+    }
+
+    fn finish(self) -> String {
+        let mut out = String::new();
+        for name in &self.order {
+            let fam = &self.families[name];
+            let kind = if fam.kind.is_empty() { "untyped" } else { &fam.kind };
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for s in &fam.samples {
+                out.push_str(s);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Insert `worker="..."` as the first label of a sample line whose
+/// metric name ends at `name_end`.
+fn inject_worker_label(line: &str, name_end: usize, worker: &str) -> String {
+    if line.as_bytes().get(name_end) == Some(&b'{') {
+        format!("{}{{worker=\"{worker}\",{}", &line[..name_end], &line[name_end + 1..])
+    } else {
+        format!("{}{{worker=\"{worker}\"}}{}", &line[..name_end], &line[name_end..])
+    }
+}
+
+/// The router's own families, labeled like any worker's (`host`/`sha`
+/// common labels) so the aggregated exposition stays uniform.
+fn router_prometheus(core: &RouterCore) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let (host, sha) = build_labels();
+    let mut w = PromWriter::new(&[("host", host), ("sha", sha)]);
+    let m = &core.metrics;
+    let counters: &[(&str, &str, u64)] = &[
+        ("repro_router_jobs_routed_total", "Sampling jobs accepted at the front door.", m.jobs_routed.load(Relaxed)),
+        ("repro_router_runs_routed_total", "Run jobs accepted at the front door.", m.runs_routed.load(Relaxed)),
+        ("repro_router_replies_relayed_total", "Worker replies relayed to clients.", m.replies_relayed.load(Relaxed)),
+        ("repro_router_failovers_total", "Overloaded jobs moved to another replica.", m.failovers.load(Relaxed)),
+        ("repro_router_replays_total", "In-flight jobs replayed after a worker death.", m.replays.load(Relaxed)),
+        ("repro_router_rejections_total", "Jobs rejected: every replica overloaded.", m.rejections.load(Relaxed)),
+        ("repro_router_routing_errors_total", "Jobs failed: no alive worker.", m.routing_errors.load(Relaxed)),
+        ("repro_router_workers_lost_total", "Workers declared dead.", m.workers_lost.load(Relaxed)),
+    ];
+    for &(name, help, value) in counters {
+        w.counter(name, help, value);
+    }
+    w.gauge("repro_router_workers_alive", "Workers currently alive.", core.alive_count() as f64);
+    w.gauge(
+        "repro_router_workers_total",
+        "Workers configured at start.",
+        core.upstreams.len() as f64,
+    );
+    w.gauge("repro_router_replicas", "Replication factor per bucket.", core.replicas as f64);
+    w.gauge(
+        "repro_router_jobs_pending",
+        "Jobs forwarded and not yet answered.",
+        core.pending_total() as f64,
+    );
+    w.finish()
+}
+
+/// Cluster `{"op":"metrics"}`: every worker's exposition re-grouped
+/// under `worker` labels plus the router's own families.
+pub fn metrics_line(core: &RouterCore) -> String {
+    let replies = fetch_all(core, "{\"op\":\"metrics\"}");
+    let mut agg = PromAggregator::default();
+    for (up, reply) in core.upstreams.iter().zip(replies.iter()) {
+        let Some(v) = reply else { continue };
+        let Some(text) = v.opt("text").and_then(|t| t.as_str().ok()) else { continue };
+        agg.add(&up.addr, text);
+    }
+    agg.add("router", &router_prometheus(core));
+    json::obj(vec![
+        ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+        ("op", json::str_v("metrics")),
+        ("content_type", json::str_v("text/plain; version=0.0.4")),
+        ("text", json::str_v(&agg.finish())),
+    ])
+    .to_string()
+}
+
+/// Cluster `{"op":"trace"}`: per-worker rings concatenated in worker
+/// order, each entry tagged with its worker's address.
+pub fn trace_line(core: &RouterCore, last: usize) -> String {
+    let op = format!("{{\"op\":\"trace\",\"last\":{last}}}");
+    let replies = fetch_all(core, &op);
+    let mut traces: Vec<Value> = Vec::new();
+    let mut recorded = 0.0;
+    for (up, reply) in core.upstreams.iter().zip(replies.iter()) {
+        let Some(v) = reply else { continue };
+        recorded += get_f64(v, "traces_recorded");
+        let Some(arr) = v.opt("traces").and_then(|t| t.as_arr().ok()) else { continue };
+        for t in arr {
+            let mut t = t.clone();
+            if let Value::Obj(m) = &mut t {
+                m.insert("worker".to_string(), json::str_v(&up.addr));
+            }
+            traces.push(t);
+        }
+    }
+    json::obj(vec![
+        ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+        ("op", json::str_v("trace")),
+        ("traces_recorded", json::num(recorded)),
+        ("count", json::num(traces.len() as f64)),
+        ("traces", Value::Arr(traces)),
+    ])
+    .to_string()
+}
+
+/// Cluster `{"op":"hello"}`: the router's capability view — its own
+/// identity plus every worker's handshake under its address.
+pub fn hello_line(core: &RouterCore) -> String {
+    let replies = fetch_all(core, "{\"op\":\"hello\"}");
+    let workers: Vec<Value> = core
+        .upstreams
+        .iter()
+        .zip(replies.into_iter())
+        .map(|(up, reply)| {
+            let mut v = reply.unwrap_or_else(|| json::obj(vec![]));
+            if let Value::Obj(m) = &mut v {
+                m.insert("addr".to_string(), json::str_v(&up.addr));
+                m.insert("alive".to_string(), Value::Bool(up.alive()));
+            }
+            v
+        })
+        .collect();
+    json::obj(vec![
+        ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+        ("op", json::str_v("hello")),
+        ("router", Value::Bool(true)),
+        ("replicas", json::num(core.replicas as f64)),
+        ("workers", Value::Arr(workers)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_label_injection_handles_both_sample_shapes() {
+        assert_eq!(
+            inject_worker_label("repro_queue_depth 3", "repro_queue_depth".len(), "w0"),
+            "repro_queue_depth{worker=\"w0\"} 3"
+        );
+        assert_eq!(
+            inject_worker_label(
+                "repro_e2e_seconds_bucket{host=\"x\",le=\"0.1\"} 7",
+                "repro_e2e_seconds_bucket".len(),
+                "127.0.0.1:9000"
+            ),
+            "repro_e2e_seconds_bucket{worker=\"127.0.0.1:9000\",host=\"x\",le=\"0.1\"} 7"
+        );
+    }
+
+    #[test]
+    fn aggregator_emits_one_header_per_family_and_labels_every_sample() {
+        let worker_text = "# HELP repro_jobs_completed_total Jobs answered ok.\n\
+             # TYPE repro_jobs_completed_total counter\n\
+             repro_jobs_completed_total{host=\"h\"} 5\n\
+             # HELP repro_e2e_seconds Admission to reply latency.\n\
+             # TYPE repro_e2e_seconds histogram\n\
+             repro_e2e_seconds_bucket{host=\"h\",le=\"+Inf\"} 5\n\
+             repro_e2e_seconds_sum{host=\"h\"} 0.2\n\
+             repro_e2e_seconds_count{host=\"h\"} 5\n";
+        let mut agg = PromAggregator::default();
+        agg.add("a:1", worker_text);
+        agg.add("b:2", worker_text);
+        let out = agg.finish();
+        // One header pair per family, despite two workers.
+        assert_eq!(out.matches("# TYPE repro_jobs_completed_total counter").count(), 1);
+        assert_eq!(out.matches("# TYPE repro_e2e_seconds histogram").count(), 1);
+        // Histogram suffix series folded under the declared family, in
+        // per-worker groups, each labeled.
+        assert_eq!(out.matches("worker=\"a:1\"").count(), 4);
+        assert_eq!(out.matches("worker=\"b:2\"").count(), 4);
+        // Every sample line carries a worker label.
+        for line in out.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert!(line.contains("worker=\""), "unlabeled sample: {line}");
+        }
+        // Headers precede their samples.
+        let type_pos = out.find("# TYPE repro_e2e_seconds histogram").unwrap();
+        let sample_pos = out.find("repro_e2e_seconds_bucket").unwrap();
+        assert!(type_pos < sample_pos);
+    }
+}

@@ -1,0 +1,434 @@
+//! The routing core: consistent-hash placement, least-in-flight replica
+//! selection, overload failover, and death-replay.
+//!
+//! Every job travels as a [`PendingForward`]: the router rewrites its
+//! wire id to a cluster-unique `r<seq>`, renders the forward line once
+//! (via the spec's own `to_line`, so a replay is byte-identical), and
+//! registers it with the chosen upstream *before* writing.  A reply
+//! relays back under the client's original id; an `overloaded`
+//! rejection moves the job to the next untried replica; a dead worker's
+//! whole ledger replays onto survivors.  Only when every alive replica
+//! has refused does the client see a merged rejection — and because
+//! seeded jobs are bit-exact wherever they execute, a duplicate
+//! execution during failover is harmless: the first registered reply
+//! wins, later ones find no pending entry and are dropped.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::service::job::{JobResult, JobSpec, RunJob};
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::ring::{bucket_key, Ring};
+use super::upstream::{lock, PendingForward, Upstream};
+
+/// Fallback backoff hint when a worker's rejection carried none.
+const DEFAULT_RETRY_MS: u64 = 50;
+
+/// Router-level counters, exported through `stats`/`metrics`
+/// aggregation alongside the summed worker counters.
+#[derive(Default)]
+pub struct RouterMetrics {
+    /// Sampling jobs accepted at the front door.
+    pub jobs_routed: AtomicU64,
+    /// Full-run jobs accepted at the front door.
+    pub runs_routed: AtomicU64,
+    /// Worker replies relayed back to clients.
+    pub replies_relayed: AtomicU64,
+    /// Overload rejections that moved a job to another replica.
+    pub failovers: AtomicU64,
+    /// Jobs replayed because their worker died with them in flight.
+    pub replays: AtomicU64,
+    /// Jobs rejected to the client (every replica refused).
+    pub rejections: AtomicU64,
+    /// Jobs answered with an error line (no alive worker at all).
+    pub routing_errors: AtomicU64,
+    /// Workers declared dead (connection loss or failed health probe).
+    pub workers_lost: AtomicU64,
+}
+
+/// Shared state of a running router: the worker set, the ring, and the
+/// in-flight ledger behind zero-loss failover.
+pub struct RouterCore {
+    pub upstreams: Vec<Arc<Upstream>>,
+    ring: Ring,
+    pub replicas: usize,
+    seq: AtomicU64,
+    pub metrics: RouterMetrics,
+    shutting_down: AtomicBool,
+}
+
+impl RouterCore {
+    /// Connect a persistent job connection to every worker and spawn
+    /// its reply-reader thread.  Fails if any worker is unreachable —
+    /// the cluster starts whole; degradation is a runtime event.
+    pub fn connect(addrs: &[String], replicas: usize) -> Result<Arc<Self>> {
+        anyhow::ensure!(!addrs.is_empty(), "router needs at least one worker");
+        let replicas = replicas.clamp(1, addrs.len());
+        let mut upstreams = Vec::with_capacity(addrs.len());
+        let mut readers = Vec::with_capacity(addrs.len());
+        for (i, addr) in addrs.iter().enumerate() {
+            let (up, read_half) = Upstream::connect(addr, i)?;
+            upstreams.push(Arc::new(up));
+            readers.push(read_half);
+        }
+        let core = Arc::new(Self {
+            ring: Ring::new(upstreams.len()),
+            upstreams,
+            replicas,
+            seq: AtomicU64::new(0),
+            metrics: RouterMetrics::default(),
+            shutting_down: AtomicBool::new(false),
+        });
+        for (i, read_half) in readers.into_iter().enumerate() {
+            let c = Arc::clone(&core);
+            thread::spawn(move || reader_loop(c, i, read_half));
+        }
+        Ok(core)
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.upstreams.iter().filter(|u| u.alive()).count()
+    }
+
+    pub fn pending_total(&self) -> usize {
+        self.upstreams.iter().map(|u| u.pending_len()).sum()
+    }
+
+    /// Route one sampling job: hash its (rung class, shape) bucket onto
+    /// the ring and forward to the least-loaded alive replica.
+    pub fn route_job(&self, spec: JobSpec, reply: Sender<String>) {
+        self.metrics.jobs_routed.fetch_add(1, Ordering::Relaxed);
+        let class = if spec.wants_scalar() {
+            "a2"
+        } else if spec.wants_multispin() {
+            "m1"
+        } else if spec.wants_accel() {
+            "accel"
+        } else {
+            "c1" // C-rung lane batching (the batcher's own bucket axis)
+        };
+        let shape = spec.shape();
+        let key = bucket_key(class, shape.width, shape.height, shape.layers);
+        let rid = self.next_rid();
+        let client_id = spec.id.clone();
+        let mut forward = spec;
+        forward.id = format!("r{rid}");
+        self.forward(PendingForward {
+            rid,
+            client_id,
+            forward_line: forward.to_line(),
+            bucket: Some(key),
+            reply,
+            tried: Vec::new(),
+            min_retry_ms: None,
+        });
+    }
+
+    /// Route one full-run job: runs are not lane-batched, so they skip
+    /// the ring and go to the globally least-loaded alive worker.
+    pub fn route_run(&self, job: RunJob, reply: Sender<String>) {
+        self.metrics.runs_routed.fetch_add(1, Ordering::Relaxed);
+        let rid = self.next_rid();
+        let client_id = job.id.clone();
+        let mut forward = job;
+        forward.id = format!("r{rid}");
+        self.forward(PendingForward {
+            rid,
+            client_id,
+            forward_line: forward.to_line(),
+            bucket: None,
+            reply,
+            tried: Vec::new(),
+            min_retry_ms: None,
+        });
+    }
+
+    fn next_rid(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// The untried alive candidates for `pending`, least-in-flight
+    /// first.  Bucketed jobs draw from the ring's replica set (ring
+    /// order breaks in-flight ties — stable sort), run jobs from the
+    /// whole alive set.
+    fn candidates(&self, pending: &PendingForward) -> Vec<usize> {
+        let alive = |w: usize| self.upstreams[w].alive();
+        let mut c: Vec<usize> = match pending.bucket {
+            Some(key) => self.ring.replicas(key, self.replicas, alive),
+            None => (0..self.upstreams.len()).filter(|&w| alive(w)).collect(),
+        };
+        c.retain(|w| !pending.tried.contains(w));
+        c.sort_by_key(|&w| self.upstreams[w].in_flight.load(Ordering::Relaxed));
+        c
+    }
+
+    /// Forward `pending` to its best candidate, registering it in the
+    /// upstream's ledger *before* the write so the reply (or the
+    /// worker's death) can always find it.
+    pub(crate) fn forward(&self, mut pending: PendingForward) {
+        loop {
+            let Some(&w) = self.candidates(&pending).first() else {
+                return self.finish_unroutable(pending);
+            };
+            pending.tried.push(w);
+            let up = &self.upstreams[w];
+            let rid = pending.rid;
+            let line = pending.forward_line.clone();
+            up.in_flight.fetch_add(1, Ordering::Relaxed);
+            lock(&up.pending).insert(rid, pending);
+            if up.send_line(&line) {
+                return;
+            }
+            // The write failed: reclaim our entry (unless a concurrent
+            // death-drain already replayed it), declare the worker dead,
+            // and try the next candidate.
+            let reclaimed = lock(&up.pending).remove(&rid);
+            if reclaimed.is_some() {
+                // Undo only when we still owned the entry: a concurrent
+                // drain has already zeroed the gauge otherwise.
+                decrement_in_flight(up);
+            }
+            self.worker_died(w);
+            match reclaimed {
+                Some(p) => pending = p,
+                None => return, // death-replay already re-forwarded it
+            }
+        }
+    }
+
+    /// No candidate left: answer the client with the merged rejection
+    /// (when at least one replica said `overloaded`) or an error line.
+    fn finish_unroutable(&self, pending: PendingForward) {
+        let line = match pending.min_retry_ms {
+            Some(retry_ms) => {
+                self.metrics.rejections.fetch_add(1, Ordering::Relaxed);
+                JobResult::overloaded_line(&pending.client_id, retry_ms)
+            }
+            None => {
+                self.metrics.routing_errors.fetch_add(1, Ordering::Relaxed);
+                JobResult::error_line(
+                    &pending.client_id,
+                    "no alive worker can serve this job",
+                )
+            }
+        };
+        let _ = pending.reply.send(line);
+    }
+
+    /// Handle one reply line from worker `w`'s persistent connection.
+    fn on_reply(&self, w: usize, line: &str) {
+        let Ok(v) = Value::parse(line) else { return };
+        let Some(rid) = v
+            .opt("id")
+            .and_then(|x| x.as_str().ok())
+            .and_then(parse_rid)
+        else {
+            return; // not one of ours (or already failed over) — drop
+        };
+        let up = &self.upstreams[w];
+        let Some(mut pending) = lock(&up.pending).remove(&rid) else {
+            return; // duplicate after failover: first reply won
+        };
+        decrement_in_flight(up);
+        if is_overloaded(&v) {
+            // Backpressure propagation: remember the smallest backoff
+            // hint, then fail over to the next untried replica.  Only
+            // when every replica refuses does the client see the
+            // merged rejection (in `finish_unroutable`).
+            let retry = v
+                .opt("retry_after_ms")
+                .and_then(|x| x.as_f64().ok())
+                .map(|ms| ms as u64)
+                .unwrap_or(DEFAULT_RETRY_MS);
+            pending.min_retry_ms =
+                Some(pending.min_retry_ms.map_or(retry, |m| m.min(retry)));
+            self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+            self.forward(pending);
+            return;
+        }
+        // Relay under the client's original id.  The rewrite goes
+        // through the same value-exact JSON layer the worker used, so
+        // result payloads (energies, magnetisations, timings) survive
+        // bit-exactly.
+        let mut v = v;
+        if let Value::Obj(m) = &mut v {
+            m.insert("id".to_string(), json::str_v(&pending.client_id));
+        }
+        self.metrics.replies_relayed.fetch_add(1, Ordering::Relaxed);
+        let _ = pending.reply.send(v.to_string());
+    }
+
+    /// Declare worker `w` dead: close its connection, take its pending
+    /// ledger, and replay every unanswered job onto survivors.  Safe to
+    /// call from any thread and any number of times — the alive CAS
+    /// picks one winner.
+    pub fn worker_died(&self, w: usize) {
+        let up = &self.upstreams[w];
+        if !up.mark_dead() {
+            return; // someone else is (or was) handling this death
+        }
+        up.close();
+        let drained = up.drain_pending();
+        if self.is_shutting_down() {
+            // Planned teardown: no replay, but no silent drops either.
+            for p in drained {
+                let _ = p
+                    .reply
+                    .send(JobResult::error_line(&p.client_id, "router shutting down"));
+            }
+            return;
+        }
+        self.metrics.workers_lost.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "repro route: worker {} ({}) lost, replaying {} in-flight job(s)",
+            w,
+            up.addr,
+            drained.len()
+        );
+        for mut p in drained {
+            // Fresh attempt ledger: the dead worker is excluded by
+            // liveness, and survivors that once said `overloaded` may
+            // have drained since.
+            p.tried.clear();
+            self.metrics.replays.fetch_add(1, Ordering::Relaxed);
+            self.forward(p);
+        }
+    }
+
+    /// Begin teardown: stop replaying, give in-flight jobs a grace
+    /// period to answer, then close every upstream connection (which
+    /// unblocks the reader threads).
+    pub fn shutdown(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while self.pending_total() > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        for up in &self.upstreams {
+            up.mark_dead();
+            up.close();
+        }
+    }
+}
+
+/// `in_flight -= 1`, saturating: a concurrent death-drain stores 0, so
+/// a straggling decrement must not wrap to u64::MAX and poison
+/// least-in-flight selection forever.
+fn decrement_in_flight(up: &Upstream) {
+    let _ = up
+        .in_flight
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1));
+}
+
+/// Parse a router wire id (`r<seq>`) back to its sequence number.
+fn parse_rid(id: &str) -> Option<u64> {
+    id.strip_prefix('r')?.parse().ok()
+}
+
+fn is_overloaded(v: &Value) -> bool {
+    v.opt("status").and_then(|x| x.as_str().ok()) == Some("error")
+        && v.opt("error").and_then(|x| x.as_str().ok()) == Some("overloaded")
+}
+
+/// Drain worker `w`'s reply stream until the connection dies, then run
+/// the death protocol (which replays its pending jobs).
+fn reader_loop(core: Arc<RouterCore>, w: usize, stream: TcpStream) {
+    use std::io::BufRead;
+    let mut reader = std::io::BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        match reader.read_line(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => {
+                let line = buf.trim();
+                if !line.is_empty() {
+                    core.on_reply(w, line);
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    core.worker_died(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn rid_wire_format_roundtrips() {
+        assert_eq!(parse_rid("r42"), Some(42));
+        assert_eq!(parse_rid("client-7"), None);
+        assert_eq!(parse_rid("r"), None);
+        assert_eq!(parse_rid("rx"), None);
+    }
+
+    #[test]
+    fn overload_detection_matches_the_rejection_line() {
+        let line = JobResult::overloaded_line("j1", 25);
+        let v = Value::parse(&line).unwrap();
+        assert!(is_overloaded(&v));
+        let ok = Value::parse(r#"{"id":"j1","status":"ok"}"#).unwrap();
+        assert!(!is_overloaded(&ok));
+        let other_err =
+            Value::parse(r#"{"id":"j1","status":"error","error":"bad width"}"#).unwrap();
+        assert!(!is_overloaded(&other_err));
+    }
+
+    /// An unroutable job with no overload history gets an error line;
+    /// with overload history it gets the merged rejection carrying the
+    /// *minimum* backoff hint.
+    #[test]
+    fn unroutable_jobs_answer_with_merged_rejection() {
+        let core = RouterCore {
+            ring: Ring::new(0),
+            upstreams: Vec::new(),
+            replicas: 1,
+            seq: AtomicU64::new(0),
+            metrics: RouterMetrics::default(),
+            shutting_down: AtomicBool::new(false),
+        };
+        let (tx, rx) = channel();
+        core.finish_unroutable(PendingForward {
+            rid: 1,
+            client_id: "job-a".into(),
+            forward_line: String::new(),
+            bucket: None,
+            reply: tx.clone(),
+            tried: Vec::new(),
+            min_retry_ms: None,
+        });
+        let v = Value::parse(&rx.recv().unwrap()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "job-a");
+        assert_eq!(v.get("status").unwrap().as_str().unwrap(), "error");
+        assert_eq!(core.metrics.routing_errors.load(Ordering::Relaxed), 1);
+
+        core.finish_unroutable(PendingForward {
+            rid: 2,
+            client_id: "job-b".into(),
+            forward_line: String::new(),
+            bucket: None,
+            reply: tx,
+            tried: Vec::new(),
+            min_retry_ms: Some(40),
+        });
+        let v = Value::parse(&rx.recv().unwrap()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "job-b");
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(v.get("retry_after_ms").unwrap().as_f64().unwrap(), 40.0);
+        assert!(v.get("protocol_version").is_ok());
+        assert_eq!(core.metrics.rejections.load(Ordering::Relaxed), 1);
+    }
+}

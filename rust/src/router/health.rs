@@ -1,0 +1,75 @@
+//! Active worker health checking.
+//!
+//! Connection loss on the persistent job connection already detects
+//! most deaths (the reader thread's EOF runs the death protocol), but a
+//! wedged worker — accepting connections yet never answering — would
+//! otherwise strand jobs.  The prober opens a short-lived connection to
+//! each alive worker on a period and requires a `{"op":"stats"}` answer
+//! within a hard timeout; a failed probe runs the same
+//! [`RouterCore::worker_died`] path as a dropped connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::forward::RouterCore;
+
+/// Probe connect/read budget: a healthy worker answers `stats` from
+/// memory, so anything slower than this is wedged, not busy.
+const PROBE_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// Spawn the prober thread; it exits when the core starts shutting
+/// down (polled in 50 ms steps so teardown never waits out a period).
+pub fn spawn_prober(core: Arc<RouterCore>, every_ms: u64) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let period = Duration::from_millis(every_ms.max(50));
+        let step = Duration::from_millis(50);
+        let mut next = Instant::now() + period;
+        while !core.is_shutting_down() {
+            thread::sleep(step.min(period));
+            if Instant::now() < next {
+                continue;
+            }
+            next = Instant::now() + period;
+            for (w, up) in core.upstreams.iter().enumerate() {
+                if core.is_shutting_down() {
+                    return;
+                }
+                if up.alive() && !probe(&up.addr) {
+                    eprintln!("repro route: health probe failed for worker {w} ({})", up.addr);
+                    core.worker_died(w);
+                }
+            }
+        }
+    })
+}
+
+/// One health probe: short-lived connection, `{"op":"stats"}`, any
+/// non-empty reply line within the timeout counts as alive.
+fn probe(addr: &str) -> bool {
+    let Ok(mut addrs) = addr.to_socket_addrs() else { return false };
+    let Some(sock_addr) = addrs.next() else { return false };
+    let Ok(stream) = TcpStream::connect_timeout(&sock_addr, PROBE_TIMEOUT) else {
+        return false;
+    };
+    if stream.set_read_timeout(Some(PROBE_TIMEOUT)).is_err()
+        || stream.set_write_timeout(Some(PROBE_TIMEOUT)).is_err()
+    {
+        return false;
+    }
+    let Ok(write_half) = stream.try_clone() else { return false };
+    {
+        let mut w = write_half;
+        if w.write_all(b"{\"op\":\"stats\"}\n").is_err() {
+            return false;
+        }
+        let _ = w.shutdown(Shutdown::Write);
+    }
+    let mut line = String::new();
+    match BufReader::new(stream).read_line(&mut line) {
+        Ok(n) if n > 0 => !line.trim().is_empty(),
+        _ => false,
+    }
+}

@@ -1,0 +1,57 @@
+//! Shard router: a front-door tier that routes shape buckets across
+//! replicated worker processes (`repro route`).
+//!
+//! One service instance batches jobs of equal shape onto SIMD lanes;
+//! its lane-fill ratio — the serving analogue of the paper's "fraction
+//! of vector width utilized" — degrades when traffic spreads thin over
+//! many shapes.  The router restores bucket depth at cluster scale: it
+//! consistent-hashes each job's `(rung class, torus_w, torus_h,
+//! layers)` bucket onto a worker ring ([`ring`]), so all jobs of one
+//! shape land on the same few workers and their batchers see deep,
+//! mostly-full lane batches again, while different shapes spread over
+//! the fleet.
+//!
+//! The tier speaks the workers' own JSON-lines protocol on both sides
+//! — clients need zero changes — and adds:
+//!
+//! * **replication** — each bucket maps to `--replicas` workers;
+//!   forwarding picks the least-in-flight one ([`forward`]),
+//! * **backpressure propagation** — a worker's `overloaded` rejection
+//!   moves the job to the next replica; the client sees a rejection
+//!   only when *every* replica refused, carrying the smallest
+//!   `retry_after_ms` seen,
+//! * **zero-loss failover** — worker death (connection loss, or a
+//!   failed [`health`] probe) replays that worker's unanswered jobs
+//!   onto survivors; seeded jobs are bit-exact wherever they run, so
+//!   replay is safe by construction,
+//! * **cluster observability** — `stats`/`metrics`/`trace`/`hello`
+//!   answer with exact aggregations ([`aggregate`]): counters summed,
+//!   latency histograms merged bucketwise for true cluster
+//!   percentiles, Prometheus samples re-labeled per worker.
+
+pub mod aggregate;
+pub mod forward;
+pub mod health;
+pub mod ring;
+pub mod server;
+pub mod upstream;
+
+pub use forward::RouterCore;
+pub use ring::{bucket_key, Ring};
+pub use server::{serve, shutdown_workers, spawn_workers, SpawnedWorker};
+
+/// Front-door configuration (`repro route` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Workers per bucket: 1 disables replication, 2 (the default)
+    /// survives any single worker loss without remapping.
+    pub replicas: usize,
+    /// Health-probe period in milliseconds.
+    pub health_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { replicas: 2, health_ms: 500 }
+    }
+}

@@ -1,0 +1,161 @@
+//! Consistent-hash ring over worker indices, keyed by shape bucket.
+//!
+//! The ring is **immutable after construction**: each worker owns
+//! [`Ring::VNODES`] pseudo-random points, and a lookup walks clockwise
+//! from the bucket's hash collecting the first `r` *distinct alive*
+//! workers.  Death is handled at lookup time (dead workers are skipped,
+//! never removed), which gives the minimal-disruption property for
+//! free: a bucket whose replica set did not include the dead worker
+//! resolves to exactly the same workers after the loss — only buckets
+//! the dead worker owned remap, onto the next point clockwise.  The
+//! distributed analogue of keeping vector lanes full: stable bucket →
+//! worker placement is what lets each worker's batcher see deep,
+//! uniform shape buckets.
+
+/// FNV-1a 64-bit — dependency-free, stable across builds (placement
+/// must not change under a recompile).
+pub fn hash64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The routing key of one job: its batcher bucket (torus dims × layers)
+/// *plus* the rung class, so m1/accel singles hash away from the C-rung
+/// lane buckets they would otherwise pollute.
+pub fn bucket_key(class: &str, width: usize, height: usize, layers: usize) -> u64 {
+    hash64(&format!("{class}:{width}x{height}x{layers}"))
+}
+
+/// A consistent-hash ring over `workers` worker indices.
+pub struct Ring {
+    /// Sorted (point hash, worker index) pairs.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl Ring {
+    /// Virtual nodes per worker: enough that ownership spreads evenly
+    /// over a handful of workers without making lookups expensive.
+    pub const VNODES: usize = 64;
+
+    pub fn new(workers: usize) -> Self {
+        let mut points = Vec::with_capacity(workers * Self::VNODES);
+        for w in 0..workers {
+            for v in 0..Self::VNODES {
+                points.push((hash64(&format!("worker{w}#vnode{v}")), w));
+            }
+        }
+        points.sort_unstable();
+        Self { points, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The first `r` distinct workers clockwise from `key` for which
+    /// `alive` holds, in ring order (the first entry is the bucket's
+    /// primary).  Returns fewer than `r` when fewer distinct alive
+    /// workers exist.
+    pub fn replicas(&self, key: u64, r: usize, alive: impl Fn(usize) -> bool) -> Vec<usize> {
+        let mut out = Vec::with_capacity(r.min(self.workers));
+        if self.points.is_empty() || r == 0 {
+            return out;
+        }
+        let start = self.points.partition_point(|&(h, _)| h < key);
+        for i in 0..self.points.len() {
+            let (_, w) = self.points[(start + i) % self.points.len()];
+            if alive(w) && !out.contains(&w) {
+                out.push(w);
+                if out.len() == r {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_sets_are_distinct_and_sized() {
+        let ring = Ring::new(4);
+        for i in 0..200u64 {
+            let key = hash64(&format!("bucket{i}"));
+            let reps = ring.replicas(key, 2, |_| true);
+            assert_eq!(reps.len(), 2);
+            assert_ne!(reps[0], reps[1]);
+            // More replicas than workers: every worker, once.
+            let all = ring.replicas(key, 10, |_| true);
+            assert_eq!(all.len(), 4);
+            let mut sorted = all.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "replica walk repeated a worker: {all:?}");
+        }
+    }
+
+    #[test]
+    fn placement_spreads_over_workers() {
+        let ring = Ring::new(3);
+        let mut counts = [0usize; 3];
+        for i in 0..600u64 {
+            let key = hash64(&format!("shape{i}"));
+            counts[ring.replicas(key, 1, |_| true)[0]] += 1;
+        }
+        for (w, &c) in counts.iter().enumerate() {
+            assert!(c > 60, "worker {w} owns only {c}/600 buckets: {counts:?}");
+        }
+    }
+
+    /// The satellite contract: losing a worker remaps only the buckets
+    /// that worker owned — every other bucket keeps its primary.
+    #[test]
+    fn worker_loss_remaps_only_the_dead_workers_buckets() {
+        let ring = Ring::new(4);
+        let dead = 2usize;
+        let mut remapped = 0;
+        for i in 0..500u64 {
+            let key = bucket_key("c1", 4 + (i as usize % 6) * 2, 4, 8 + i as usize);
+            let before = ring.replicas(key, 1, |_| true)[0];
+            let after = ring.replicas(key, 1, |w| w != dead)[0];
+            if before == dead {
+                remapped += 1;
+                assert_ne!(after, dead);
+            } else {
+                assert_eq!(after, before, "bucket {i} moved although its owner survived");
+            }
+        }
+        assert!(remapped > 0, "the dead worker owned no buckets — test has no teeth");
+    }
+
+    /// Replica failover order is stable: the surviving members of a
+    /// replica set keep their relative order when one dies.
+    #[test]
+    fn replica_sets_degrade_in_order() {
+        let ring = Ring::new(3);
+        for i in 0..100u64 {
+            let key = hash64(&format!("k{i}"));
+            let full = ring.replicas(key, 3, |_| true);
+            let without_first = ring.replicas(key, 2, |w| w != full[0]);
+            assert_eq!(without_first, vec![full[1], full[2]]);
+        }
+    }
+
+    #[test]
+    fn bucket_keys_separate_rung_classes() {
+        // Same shape, different class: different buckets, so m1 singles
+        // never ride the C-rung bucket's placement.
+        assert_ne!(bucket_key("c1", 4, 4, 8), bucket_key("m1", 4, 4, 8));
+        assert_ne!(bucket_key("c1", 4, 4, 8), bucket_key("accel", 4, 4, 8));
+        // Same class + shape: stable.
+        assert_eq!(bucket_key("c1", 4, 4, 8), bucket_key("c1", 4, 4, 8));
+    }
+}

@@ -1,0 +1,270 @@
+//! The router's front door: the same JSON-lines TCP protocol the
+//! workers speak, so existing clients (`repro submit`, `submit_lines`)
+//! need zero changes to talk to a cluster.
+//!
+//! Job and run lines are validated with the same `parse_request` the
+//! workers use, then handed to [`RouterCore`]; control ops answer with
+//! cluster-wide aggregations; `{"op":"shutdown"}` acks, drains in-flight
+//! jobs and returns from [`serve`].  Reply streaming keeps the worker
+//! semantics: results arrive per-job as they complete (correlate by
+//! `id`), and half-closing the write side makes "read until EOF"
+//! collect exactly this connection's results.
+//!
+//! [`spawn_workers`] boots an owned local fleet (`repro route --spawn
+//! N`): each worker is this same binary running `serve --listen
+//! 127.0.0.1:0`, its bound port parsed from the serve banner line.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::service::job::{parse_request, JobResult, Request, PROTOCOL_VERSION};
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::aggregate;
+use super::forward::RouterCore;
+use super::health;
+use super::RouterConfig;
+
+/// Serve the cluster front door on `listener` until a shutdown request:
+/// connect the worker fleet, start health probing, route jobs.
+pub fn serve(listener: TcpListener, workers: &[String], cfg: &RouterConfig) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let core = RouterCore::connect(workers, cfg.replicas)?;
+    let prober = health::spawn_prober(Arc::clone(&core), cfg.health_ms);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut connections: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut accept_error: Option<std::io::Error> = None;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                connections.retain(|conn| !conn.is_finished());
+                let core = Arc::clone(&core);
+                let flag = Arc::clone(&shutdown);
+                connections.push(thread::spawn(move || {
+                    let _ = handle_conn(stream, core, flag);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                connections.retain(|conn| !conn.is_finished());
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                shutdown.store(true, Ordering::SeqCst);
+                accept_error = Some(e);
+            }
+        }
+    }
+    // Stop accepting; open connections poll the flag and wind down,
+    // then the core waits out its in-flight ledger and disconnects.
+    for conn in connections {
+        let _ = conn.join();
+    }
+    core.shutdown();
+    let _ = prober.join();
+    match accept_error {
+        Some(e) => Err(e.into()),
+        None => Ok(()),
+    }
+}
+
+/// One client connection: requests in, per-job result lines out
+/// (order not guaranteed — correlate by `id`), same as a worker.
+fn handle_conn(stream: TcpStream, core: Arc<RouterCore>, shutdown: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let write_half = stream.try_clone()?;
+    let (line_tx, line_rx) = channel::<String>();
+    let writer = thread::spawn(move || {
+        let mut out = BufWriter::new(write_half);
+        for line in line_rx {
+            if out.write_all(line.as_bytes()).is_err()
+                || out.write_all(b"\n").is_err()
+                || out.flush().is_err()
+            {
+                break;
+            }
+        }
+        if let Ok(inner) = out.into_inner() {
+            let _ = inner.shutdown(Shutdown::Write);
+        }
+    });
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => {
+                let line = buf.trim();
+                if !line.is_empty() {
+                    handle_line(line, &core, &line_tx, &shutdown);
+                }
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // The writer exits once every job this connection routed has been
+    // answered — each pending forward holds a sender clone.
+    drop(line_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    core: &Arc<RouterCore>,
+    line_tx: &Sender<String>,
+    shutdown: &AtomicBool,
+) {
+    match parse_request(line) {
+        Ok(Request::Job(spec)) => core.route_job(spec, line_tx.clone()),
+        Ok(Request::Run(job)) => core.route_run(*job, line_tx.clone()),
+        Ok(Request::Hello) => {
+            let _ = line_tx.send(aggregate::hello_line(core));
+        }
+        Ok(Request::Stats) => {
+            let _ = line_tx.send(aggregate::stats_line(core));
+        }
+        Ok(Request::Metrics) => {
+            let _ = line_tx.send(aggregate::metrics_line(core));
+        }
+        Ok(Request::Trace { last }) => {
+            let _ = line_tx.send(aggregate::trace_line(core, last));
+        }
+        Ok(Request::Shutdown) => {
+            shutdown.store(true, Ordering::SeqCst);
+            let ack = json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("op", json::str_v("shutdown")),
+                ("protocol_version", json::num(PROTOCOL_VERSION as f64)),
+            ]);
+            let _ = line_tx.send(ack.to_string());
+        }
+        Err(e) => {
+            // Same front-door validation a worker applies: bad lines
+            // never reach the cluster.
+            let id = Value::parse(line)
+                .ok()
+                .and_then(|v| v.opt("id").and_then(|x| x.as_str().ok().map(String::from)))
+                .unwrap_or_default();
+            let _ = line_tx.send(JobResult::error_line(&id, &format!("{e:#}")));
+        }
+    }
+}
+
+/// One worker process owned by `repro route --spawn`.
+pub struct SpawnedWorker {
+    pub addr: String,
+    pub child: Child,
+}
+
+/// Boot `n` local workers: this same binary running `serve --listen
+/// 127.0.0.1:0`, each worker's bound address parsed from its serve
+/// banner.  `serve_flags` are passed through verbatim (lane width,
+/// threads, queue cap...).
+pub fn spawn_workers(n: usize, serve_flags: &[String]) -> Result<Vec<SpawnedWorker>> {
+    let exe = std::env::current_exe()?;
+    let mut spawned = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("serve").arg("--listen").arg("127.0.0.1:0");
+        cmd.args(serve_flags);
+        cmd.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::piped());
+        let mut child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning worker {i}: {e}"))?;
+        let stderr = child.stderr.take().expect("stderr was piped");
+        match read_banner_addr(stderr, i) {
+            Ok(addr) => {
+                eprintln!("repro route: worker {i} listening on {addr} (pid {})", child.id());
+                spawned.push(SpawnedWorker { addr, child });
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                // Tear down the workers that did come up.
+                for mut w in spawned {
+                    let _ = w.child.kill();
+                    let _ = w.child.wait();
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok(spawned)
+}
+
+/// Read a spawned worker's stderr until the serve banner names its
+/// bound address, then keep draining the pipe in a background thread
+/// (prefixed, so worker logs stay attributable).
+fn read_banner_addr(stderr: std::process::ChildStderr, index: usize) -> Result<String> {
+    let mut reader = BufReader::new(stderr);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "worker {index} exited before announcing its address");
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            let addr = rest.split(" (").next().unwrap_or(rest).trim().to_string();
+            anyhow::ensure!(!addr.is_empty(), "worker {index}: malformed serve banner: {line}");
+            thread::spawn(move || {
+                let mut buf = String::new();
+                loop {
+                    buf.clear();
+                    match reader.read_line(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => eprint!("[worker {index}] {buf}"),
+                    }
+                }
+            });
+            return Ok(addr);
+        }
+        // Not the banner (e.g. a warning) — surface it and keep waiting.
+        eprint!("[worker {index}] {line}");
+    }
+}
+
+/// Ask every owned worker to shut down (best effort), then reap the
+/// child processes.
+pub fn shutdown_workers(workers: Vec<SpawnedWorker>) {
+    for w in &workers {
+        let mut sink = Vec::new();
+        let _ = crate::service::server::submit_lines(
+            &w.addr,
+            vec!["{\"op\":\"shutdown\"}".to_string()],
+            &mut sink,
+        );
+    }
+    for mut w in workers {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match w.child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if std::time::Instant::now() < deadline => {
+                    thread::sleep(Duration::from_millis(50));
+                }
+                _ => {
+                    let _ = w.child.kill();
+                    let _ = w.child.wait();
+                    break;
+                }
+            }
+        }
+    }
+}

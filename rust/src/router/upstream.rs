@@ -1,0 +1,133 @@
+//! One worker as seen from the router: a persistent job connection, a
+//! pending-forward ledger, and liveness.
+//!
+//! The persistent TCP connection carries **only job lines** (submits
+//! and run jobs); control ops (`stats`/`metrics`/`trace`/`hello`,
+//! health probes) go over short-lived connections so aggregation can
+//! never interleave with the reply stream.  Each forwarded job is
+//! registered in [`Upstream::pending`] under its router-assigned id
+//! before the line is written, so a reply (or the worker's death) can
+//! always find the job's client reply channel — the invariant behind
+//! zero-loss failover.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::Result;
+
+/// Poison-tolerant lock: a panicking holder must not wedge routing.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A job the router has forwarded (or is about to) and not yet answered
+/// to its client.
+pub struct PendingForward {
+    /// Router-assigned wire id (`r<seq>`), unique across the cluster's
+    /// lifetime — replies correlate on this, never on client ids (two
+    /// clients may reuse the same id).
+    pub rid: u64,
+    /// The client's original id, restored into the relayed reply.
+    pub client_id: String,
+    /// The fully-rendered forward line (id already rewritten to
+    /// `r<rid>`), reused verbatim for failover and death-replay — safe
+    /// because seeded jobs are bit-exact wherever they run.
+    pub forward_line: String,
+    /// Consistent-hash bucket (`None` for run jobs, which go to the
+    /// globally least-loaded worker).
+    pub bucket: Option<u64>,
+    /// The owning connection's reply channel.
+    pub reply: Sender<String>,
+    /// Workers already attempted (reset on death-replay: the dead
+    /// worker is excluded by liveness, survivors get a fresh chance).
+    pub tried: Vec<usize>,
+    /// Smallest `retry_after_ms` seen across overloaded rejections —
+    /// the merged hint if every replica refuses.
+    pub min_retry_ms: Option<u64>,
+}
+
+/// Router-side state of one worker process.
+pub struct Upstream {
+    pub addr: String,
+    pub index: usize,
+    /// Write half of the persistent job connection (`None` after
+    /// death/close).  One writer lock per forwarded line.
+    writer: Mutex<Option<TcpStream>>,
+    /// Forwarded-and-unanswered jobs by router id.
+    pub pending: Mutex<HashMap<u64, PendingForward>>,
+    /// Jobs currently forwarded to this worker — the least-in-flight
+    /// replica selector reads this.
+    pub in_flight: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl Upstream {
+    /// Connect the persistent job connection; returns the upstream and
+    /// the read half for the caller's reader thread.
+    pub fn connect(addr: &str, index: usize) -> Result<(Self, TcpStream)> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("worker {addr}: connect failed: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone()?;
+        let up = Self {
+            addr: addr.to_string(),
+            index,
+            writer: Mutex::new(Some(stream)),
+            pending: Mutex::new(HashMap::new()),
+            in_flight: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+        };
+        Ok((up, read_half))
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Mark dead; returns whether this call was the transition (the
+    /// caller that wins runs the replay, everyone else backs off).
+    pub fn mark_dead(&self) -> bool {
+        self.alive.swap(false, Ordering::SeqCst)
+    }
+
+    /// Write one line on the persistent connection.  `false` means the
+    /// connection is gone — the caller re-routes.
+    pub fn send_line(&self, line: &str) -> bool {
+        let mut g = lock(&self.writer);
+        let Some(stream) = g.as_mut() else { return false };
+        let mut framed = String::with_capacity(line.len() + 1);
+        framed.push_str(line);
+        framed.push('\n');
+        if stream.write_all(framed.as_bytes()).is_err() {
+            *g = None;
+            return false;
+        }
+        true
+    }
+
+    /// Tear down the persistent connection (unblocks the reader thread).
+    pub fn close(&self) {
+        if let Some(stream) = lock(&self.writer).take() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Take every pending forward (death-replay / shutdown drain).
+    pub fn drain_pending(&self) -> Vec<PendingForward> {
+        let drained: Vec<PendingForward> =
+            lock(&self.pending).drain().map(|(_, p)| p).collect();
+        self.in_flight.store(0, Ordering::SeqCst);
+        drained
+    }
+
+    pub fn pending_len(&self) -> usize {
+        lock(&self.pending).len()
+    }
+}

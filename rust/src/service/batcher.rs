@@ -132,6 +132,22 @@ impl Dispatch {
     }
 }
 
+/// One queue bucket's live state (shape label, waiting jobs, oldest-job
+/// wait, lane width) — snapshotted per scheduler round for the stats
+/// `buckets` array.
+#[derive(Clone, Debug)]
+pub struct BucketStat {
+    /// Shape label (`WxHxL`) for lane buckets, or the singles-lane class
+    /// (`a2-singles`, `m1-singles`, `accel-singles`).
+    pub shape: String,
+    /// Jobs waiting in this bucket right now.
+    pub depth: usize,
+    /// How long the oldest waiting job has been queued (µs; 0 if empty).
+    pub oldest_age_us: u64,
+    /// Lane width this bucket dispatches at.
+    pub lanes: usize,
+}
+
 /// Shape-bucketed job queue with deadline-bounded lane packing.
 pub struct Batcher {
     width: usize,
@@ -223,6 +239,44 @@ impl Batcher {
     /// Flush everything regardless of deadline (drain on shutdown).
     pub fn drain(&mut self) -> Vec<Dispatch> {
         self.collect_ready(Instant::now(), |_| true)
+    }
+
+    /// Per-bucket queue state at `now` — the observable behind the
+    /// stats `buckets` array (per-shape backpressure, the signal a
+    /// shard router needs beyond the global `queue_depth`).  The pinned
+    /// singles lanes report under their rung-class labels at their
+    /// fixed widths; shape buckets report at the batch width.
+    pub fn bucket_stats(&self, now: Instant) -> Vec<BucketStat> {
+        let age = |q: &VecDeque<PendingJob>| {
+            q.front()
+                .map(|job| now.saturating_duration_since(job.enqueued).as_micros() as u64)
+                .unwrap_or(0)
+        };
+        let mut out = Vec::new();
+        for (shape, q) in &self.buckets {
+            out.push(BucketStat {
+                shape: shape.to_string(),
+                depth: q.len(),
+                oldest_age_us: age(q),
+                lanes: self.width,
+            });
+        }
+        let singles: [(&str, &VecDeque<PendingJob>, usize); 3] = [
+            ("a2-singles", &self.scalar_lane, 1),
+            ("m1-singles", &self.multispin_lane, 64),
+            ("accel-singles", &self.accel_lane, 32),
+        ];
+        for (label, q, lanes) in singles {
+            if !q.is_empty() {
+                out.push(BucketStat {
+                    shape: label.to_string(),
+                    depth: q.len(),
+                    oldest_age_us: age(q),
+                    lanes,
+                });
+            }
+        }
+        out
     }
 
     /// Earliest pending flush deadline — the scheduler's sleep bound.  A
@@ -415,6 +469,30 @@ mod tests {
         assert!(ds[0].is_batch(), "a c1 pin must never degrade to the scalar path");
         assert_eq!(ds[0].occupancy(), 1, "one real lane, padding added at execution");
         assert!(ds[0].deadline_forced, "the deadline, not width, flushed this batch");
+    }
+
+    #[test]
+    fn bucket_stats_report_depth_age_and_width() {
+        use crate::engine::{Rung, SamplerSpec};
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        b.push(spec("a", 4, 8), None, t0);
+        b.push(spec("b", 4, 8), None, t0 + Duration::from_millis(5));
+        b.push(spec("c", 4, 2), None, t0 + Duration::from_millis(5));
+        let mut pinned = spec("m", 4, 8);
+        pinned.sampler = Some(SamplerSpec::rung(Rung::M1));
+        b.push(pinned, None, t0 + Duration::from_millis(5));
+        let stats = b.bucket_stats(t0 + Duration::from_millis(10));
+        let by_shape: std::collections::BTreeMap<_, _> =
+            stats.iter().map(|s| (s.shape.clone(), s)).collect();
+        let deep = by_shape["4x4x8"];
+        assert_eq!(deep.depth, 2);
+        assert_eq!(deep.lanes, 4);
+        assert!(deep.oldest_age_us >= 10_000, "age counts from the oldest job: {deep:?}");
+        assert_eq!(by_shape["4x4x2"].depth, 1);
+        let m1 = by_shape["m1-singles"];
+        assert_eq!((m1.depth, m1.lanes), (1, 64));
+        assert!(!by_shape.contains_key("a2-singles"), "empty singles lanes are omitted");
     }
 
     #[test]

@@ -207,6 +207,7 @@ pub fn start(cfg: &ServiceConfig) -> Result<EngineHandle> {
         flush_ms: cfg.flush_ms,
         max_queue: cfg.max_queue,
         threads: cfg.threads,
+        backend: executor.resolved.backend.as_str().to_string(),
     });
     let metrics_for_thread = Arc::clone(&metrics);
     let (tx, rx) = channel::<Submission>();
@@ -282,6 +283,7 @@ fn scheduler_loop(
         };
         let dispatches = if disconnected { batcher.drain() } else { batcher.poll(Instant::now()) };
         metrics.set_queue_depth(batcher.queued());
+        metrics.set_bucket_stats(batcher.bucket_stats(Instant::now()));
         for dispatch in dispatches {
             spawn_dispatch(&pool, executor, dispatch, &metrics, &done_tx);
         }

@@ -441,6 +441,10 @@ pub enum Request {
     Job(JobSpec),
     /// A checkpointable full-run job (executed on the sweep pool).
     Run(Box<RunJob>),
+    /// Capability handshake: protocol version, host fingerprint,
+    /// servable rungs, resolved backend and queue config — what a
+    /// router (or any client) needs for capability-aware placement.
+    Hello,
     Stats,
     /// Prometheus text exposition of the service metrics.
     Metrics,
@@ -466,6 +470,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     }
     if let Some(op) = v.opt("op") {
         return match op.as_str()? {
+            "hello" => Ok(Request::Hello),
             "stats" => Ok(Request::Stats),
             "metrics" => Ok(Request::Metrics),
             "trace" => {
@@ -481,8 +486,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
             "run" => Ok(Request::Run(Box::new(RunJob::from_value(&v)?))),
             other => {
                 anyhow::bail!(
-                    "unknown op {other:?} (expected stats, metrics, trace, shutdown, submit or \
-                     run)"
+                    "unknown op {other:?} (expected hello, stats, metrics, trace, shutdown, \
+                     submit or run)"
                 )
             }
         };

@@ -16,13 +16,21 @@
 //! * `{"op":"trace"}` — the last N completed-job stage timings.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::harness::bench::{self, HostCaps};
 use crate::obs::prometheus::PromWriter;
 use crate::obs::{phase, HistogramSnapshot, Obs, RateWindow};
 use crate::util::json::{self, Value};
+
+use super::batcher::BucketStat;
+
+/// Rungs a service instance can execute, in ladder order (the CLI
+/// spellings a `{"op":"hello"}` reply advertises): the scalar A.2
+/// reference, the lane-batched C.1 family, bit-packed multi-spin M.1
+/// and the software-device B-rungs.
+pub const SERVED_RUNGS: [&str; 5] = ["a2", "c1", "m1", "b1", "b2"];
 
 /// Serving backends, in metric-label order: the scalar A.2 reference,
 /// the lane-batched SIMD C-rungs, the bit-packed multi-spin path and
@@ -82,6 +90,9 @@ pub struct ServiceMetrics {
     pub jobs_completed_backend: [AtomicU64; 4],
     /// Spin updates attempted by completed jobs, by serving backend.
     pub spins_backend: [AtomicU64; 4],
+    /// Per-shape queue buckets, published by the scheduler each round
+    /// (stats-only read path; one short lock per round / per scrape).
+    pub bucket_stats: Mutex<Vec<BucketStat>>,
     /// Histograms, traces and rates for this instance.
     pub obs: Obs,
 }
@@ -160,6 +171,15 @@ impl ServiceMetrics {
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth as u64, Ordering::Relaxed);
         self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Publish the scheduler's per-bucket queue snapshot (overwrites the
+    /// previous round's).
+    pub fn set_bucket_stats(&self, stats: Vec<BucketStat>) {
+        match self.bucket_stats.lock() {
+            Ok(mut g) => *g = stats,
+            Err(poisoned) => *poisoned.into_inner() = stats,
+        }
     }
 
     /// Decrement the in-system gauge without risking u64 wrap: a settle
@@ -247,9 +267,45 @@ impl ServiceMetrics {
                     ("flush_ms", json::num(c.flush_ms as f64)),
                     ("max_queue", json::num(c.max_queue as f64)),
                     ("threads", json::num(c.threads as f64)),
+                    ("backend", json::str_v(&c.backend)),
                 ]),
             ));
         }
+        // Per-shape queue buckets: the signal a shard router needs
+        // beyond the global queue_depth (which bucket is backed up, how
+        // stale its head is, at what lane width it drains).
+        let buckets = match self.bucket_stats.lock() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        };
+        fields.push((
+            "buckets",
+            Value::Arr(
+                buckets
+                    .iter()
+                    .map(|b| {
+                        json::obj(vec![
+                            ("shape", json::str_v(&b.shape)),
+                            ("depth", json::num(b.depth as f64)),
+                            ("oldest_age_us", json::num(b.oldest_age_us as f64)),
+                            ("lanes", json::num(b.lanes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        // Full sparse histograms alongside the p50/p90/p99 summaries:
+        // a router merges these bucketwise (obs::HistogramSnapshot wire
+        // form), so cluster percentiles are exact, not summary-of-summaries.
+        fields.push((
+            "latency_hist",
+            json::obj(vec![
+                ("queue_wait", self.obs.queue_wait_us.snapshot().to_value()),
+                ("exec", self.obs.exec_us.snapshot().to_value()),
+                ("e2e", self.obs.e2e_us.snapshot().to_value()),
+                ("pool_task", self.obs.pool_task_us.snapshot().to_value()),
+            ]),
+        ));
         fields.push((
             "latency_us",
             json::obj(vec![
@@ -289,6 +345,32 @@ impl ServiceMetrics {
             ("traces", Value::Arr(traces.iter().map(|t| t.to_value()).collect())),
         ])
         .to_string()
+    }
+
+    /// `{"op":"hello"}` reply: the capability handshake.  Everything a
+    /// client (or a shard router doing capability-aware placement)
+    /// needs before submitting: protocol version, the host's CPU
+    /// capability fingerprint, the rungs this service can execute, and
+    /// the resolved serving config (backend, lane width, queue cap).
+    pub fn hello_line(&self) -> String {
+        let mut fields = vec![
+            ("protocol_version", json::num(super::job::PROTOCOL_VERSION as f64)),
+            ("op", json::str_v("hello")),
+            ("host", json::str_v(&HostCaps::detect().fingerprint())),
+            (
+                "rungs",
+                Value::Arr(SERVED_RUNGS.iter().map(|r| json::str_v(r)).collect()),
+            ),
+            ("started_at_ms", json::num(self.obs.started_at_ms() as f64)),
+        ];
+        if let Some(c) = self.obs.config() {
+            fields.push(("backend", json::str_v(&c.backend)));
+            fields.push(("lanes", json::num(c.lanes as f64)));
+            fields.push(("max_queue", json::num(c.max_queue as f64)));
+            fields.push(("flush_ms", json::num(c.flush_ms as f64)));
+            fields.push(("threads", json::num(c.threads as f64)));
+        }
+        json::obj(fields).to_string()
     }
 
     /// `{"op":"metrics"}` reply: Prometheus text riding in a JSON line
@@ -467,8 +549,9 @@ impl ServiceMetrics {
     }
 }
 
-/// `{count, mean_us, p50_us, p90_us, p99_us}` for one histogram.
-fn latency_summary(snap: &HistogramSnapshot) -> Value {
+/// `{count, mean_us, p50_us, p90_us, p99_us}` for one histogram (also
+/// used by the router to summarize cluster-merged snapshots).
+pub(crate) fn latency_summary(snap: &HistogramSnapshot) -> Value {
     let (p50, p90, p99) = snap.percentiles_us();
     json::obj(vec![
         ("count", json::num(snap.count() as f64)),
@@ -480,8 +563,9 @@ fn latency_summary(snap: &HistogramSnapshot) -> Value {
 }
 
 /// Host fingerprint + git sha, detected once per process: `git_sha()`
-/// shells out, which must not happen on every scrape.
-fn build_labels() -> (&'static str, &'static str) {
+/// shells out, which must not happen on every scrape.  The router's
+/// aggregated exposition reuses these for its own sample families.
+pub(crate) fn build_labels() -> (&'static str, &'static str) {
     static LABELS: OnceLock<(String, String)> = OnceLock::new();
     let (host, sha) = LABELS.get_or_init(|| (HostCaps::detect().fingerprint(), bench::git_sha()));
     (host.as_str(), sha.as_str())
@@ -540,7 +624,13 @@ mod tests {
     #[test]
     fn stats_carries_latency_rate_and_config_echo() {
         let m = ServiceMetrics::default();
-        m.obs.set_config(ConfigEcho { lanes: 8, flush_ms: 25, max_queue: 1024, threads: 2 });
+        m.obs.set_config(ConfigEcho {
+            lanes: 8,
+            flush_ms: 25,
+            max_queue: 1024,
+            threads: 2,
+            backend: "avx2".into(),
+        });
         let timing =
             StageTiming { queue_us: 200, sweep_us: 3000, e2e_us: 3500, ..StageTiming::default() };
         m.obs.record_completed(&timing, 640);
@@ -558,6 +648,55 @@ mod tests {
         assert_eq!(v.get("spins_attempted").unwrap().as_usize().unwrap(), 1280);
         assert_eq!(v.get("rate").unwrap().get("window_secs").unwrap().as_usize().unwrap(), 10);
         assert!(v.get("uptime_ms").unwrap().as_f64().unwrap() < 60_000.0);
+        assert_eq!(cfg.get("backend").unwrap().as_str().unwrap(), "avx2");
+        // The mergeable histogram rides along: its bucket counts sum to
+        // the summary's count.
+        let hist = v.get("latency_hist").unwrap().get("e2e").unwrap();
+        let snap = crate::obs::HistogramSnapshot::from_value(hist).unwrap();
+        assert_eq!(snap.count(), 2);
+    }
+
+    #[test]
+    fn stats_carries_per_bucket_queue_state() {
+        let m = ServiceMetrics::default();
+        m.set_bucket_stats(vec![
+            BucketStat { shape: "4x4x8".into(), depth: 3, oldest_age_us: 12_000, lanes: 8 },
+            BucketStat { shape: "m1-singles".into(), depth: 1, oldest_age_us: 5, lanes: 64 },
+        ]);
+        let v = Value::parse(&m.snapshot_json()).unwrap();
+        let buckets = v.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].get("shape").unwrap().as_str().unwrap(), "4x4x8");
+        assert_eq!(buckets[0].get("depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(buckets[0].get("oldest_age_us").unwrap().as_usize().unwrap(), 12_000);
+        assert_eq!(buckets[1].get("lanes").unwrap().as_usize().unwrap(), 64);
+        // Overwritten next round, not accumulated.
+        m.set_bucket_stats(vec![]);
+        let v = Value::parse(&m.snapshot_json()).unwrap();
+        assert!(v.get("buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn hello_line_advertises_capabilities_and_config() {
+        let m = ServiceMetrics::default();
+        m.obs.set_config(ConfigEcho {
+            lanes: 8,
+            flush_ms: 25,
+            max_queue: 1024,
+            threads: 2,
+            backend: "avx2".into(),
+        });
+        let v = Value::parse(&m.hello_line()).unwrap();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        assert!(!v.get("host").unwrap().as_str().unwrap().is_empty());
+        let rungs: Vec<&str> =
+            v.get("rungs").unwrap().as_arr().unwrap().iter().map(|r| r.as_str().unwrap()).collect();
+        assert_eq!(rungs, SERVED_RUNGS);
+        assert_eq!(v.get("backend").unwrap().as_str().unwrap(), "avx2");
+        assert_eq!(v.get("lanes").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(v.get("max_queue").unwrap().as_usize().unwrap(), 1024);
+        assert_eq!(v.get("flush_ms").unwrap().as_usize().unwrap(), 25);
     }
 
     /// S1 regression: the in-system gauge must saturate at zero, never

@@ -232,6 +232,9 @@ fn handle_line(
             // an interleaved {"op":"stats"} answers while the run sweeps.
             submit(submitter, SubmitPayload::Run(job), line_tx);
         }
+        Ok(Request::Hello) => {
+            let _ = line_tx.send(metrics.hello_line());
+        }
         Ok(Request::Stats) => {
             let _ = line_tx.send(metrics.snapshot_json());
         }

@@ -105,3 +105,47 @@ fn merged_snapshots_add_exactly() {
     assert_eq!(merged.sum_us, a.snapshot().sum_us + b.snapshot().sum_us);
     assert_invariants(&merged);
 }
+
+/// The property the shard router's stats aggregation stands on: merging
+/// two workers' histogram snapshots and *then* taking percentiles gives
+/// exactly the percentiles of one histogram fed the combined stream.
+/// (Averaging per-worker p99s — the summary-of-summaries shortcut —
+/// does not have this property; bucketwise merging does, because the
+/// log2 bucket layouts are identical.)
+#[test]
+fn merged_percentiles_equal_combined_stream_percentiles() {
+    // Two deliberately different latency profiles: worker A fast with a
+    // tail, worker B uniformly slow — the case where averaging p99s is
+    // most wrong.
+    let a = Histogram::new();
+    let b = Histogram::new();
+    let combined = Histogram::new();
+    for i in 0..5_000u64 {
+        let fast = 1 + (i * 7) % 300; // ~µs-scale with spread
+        let tail = if i % 100 == 0 { 200_000 + i } else { fast };
+        a.record(tail);
+        combined.record(tail);
+    }
+    for i in 0..2_000u64 {
+        let slow = 50_000 + (i * 31) % 40_000;
+        b.record(slow);
+        combined.record(slow);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    let reference = combined.snapshot();
+    assert_eq!(merged.count(), reference.count());
+    assert_eq!(merged.sum_us, reference.sum_us);
+    assert_eq!(merged.buckets, reference.buckets, "merge must be bucketwise-exact");
+    let (m50, m90, m99) = merged.percentiles_us();
+    let (r50, r90, r99) = reference.percentiles_us();
+    assert_eq!(m50, r50, "merged p50 must equal combined-stream p50");
+    assert_eq!(m90, r90, "merged p90 must equal combined-stream p90");
+    assert_eq!(m99, r99, "merged p99 must equal combined-stream p99");
+    // And the sparse wire form (what actually crosses the router <->
+    // worker boundary) round-trips the merged state exactly.
+    let wire = HistogramSnapshot::from_value(&merged.to_value()).expect("wire roundtrip");
+    assert_eq!(wire.buckets, merged.buckets);
+    assert_eq!(wire.sum_us, merged.sum_us);
+    assert_eq!(wire.percentiles_us(), merged.percentiles_us());
+}

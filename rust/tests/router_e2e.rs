@@ -1,0 +1,411 @@
+//! End-to-end acceptance of the shard router (ISSUE 10): a router
+//! fronting two *real* worker processes (this crate's own binary
+//! running `repro serve`) must
+//!
+//! * serve a mixed-shape burst **bit-exact** to the scalar oracle,
+//!   with zero client changes (the wire protocol is the workers' own),
+//! * aggregate `hello`/`stats`/`metrics`/`trace` cluster-wide (exact
+//!   histogram merges, per-worker Prometheus labels),
+//! * propagate backpressure: a job is rejected only when *every*
+//!   replica refused it, with the merged `retry_after_ms` hint,
+//! * and lose **zero admitted jobs** when a worker is killed
+//!   mid-burst — its in-flight jobs replay onto the survivor.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::Duration;
+
+use vectorising::coordinator::{self, RunConfig, RunOptions, RunReport, RunSpec};
+use vectorising::engine::{Rung, SamplerSpec};
+use vectorising::router::{self, RouterConfig};
+use vectorising::service::executor::Executor;
+use vectorising::service::job::{JobResult, JobSpec, RunJob};
+use vectorising::sweep::ExpMode;
+use vectorising::util::json::Value;
+
+fn spec(id: &str, shape: (usize, usize, usize), seed: u32, sweeps: usize) -> JobSpec {
+    JobSpec {
+        id: id.to_string(),
+        width: shape.0,
+        height: shape.1,
+        layers: shape.2,
+        model_seed: 1 + seed as u64,
+        jtau: 0.3,
+        sweeps,
+        beta: 0.6 + 0.05 * (seed % 4) as f32,
+        seed,
+        trace_every: 0,
+        want_state: true,
+        want_timing: false,
+        sampler: None,
+    }
+}
+
+/// Boot one worker process (`repro serve --listen 127.0.0.1:0 ...`) and
+/// parse its bound address from the serve banner.
+fn spawn_worker(extra: &[&str]) -> (String, Child) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.args(["serve", "--listen", "127.0.0.1:0"]).args(extra);
+    cmd.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn worker");
+    let stderr = child.stderr.take().expect("piped stderr");
+    let mut reader = BufReader::new(stderr);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("worker stderr");
+        assert!(n > 0, "worker exited before announcing its address");
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split(" (").next().unwrap_or(rest).trim().to_string();
+        }
+    };
+    // Keep draining stderr so the worker can never block on a full pipe.
+    thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match reader.read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+    (addr, child)
+}
+
+/// Start the router tier in-process, fronting `workers`.
+fn start_router(
+    workers: Vec<String>,
+    replicas: usize,
+    health_ms: u64,
+) -> (SocketAddr, thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = RouterConfig { replicas, health_ms };
+    let handle = thread::spawn(move || router::serve(listener, &workers, &cfg).unwrap());
+    (addr, handle)
+}
+
+/// Open a connection, send every line, half-close, read lines until the
+/// server closes — identical to how a client talks to a single worker.
+fn roundtrip(addr: SocketAddr, lines: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+        for line in lines {
+            writeln!(w, "{line}").unwrap();
+        }
+        w.flush().unwrap();
+    }
+    stream.shutdown(Shutdown::Write).unwrap();
+    BufReader::new(stream)
+        .lines()
+        .map(|l| l.unwrap())
+        .filter(|l| !l.trim().is_empty())
+        .collect()
+}
+
+fn assert_bit_exact(served: &[String], reference: &Executor, expect: &[JobSpec]) {
+    let mut by_id: BTreeMap<String, JobResult> = BTreeMap::new();
+    for line in served {
+        let r = JobResult::from_line(line).unwrap_or_else(|e| panic!("{e:#}: {line}"));
+        by_id.insert(r.id.clone(), r);
+    }
+    assert_eq!(by_id.len(), expect.len(), "one result per job");
+    for spec in expect {
+        let got = &by_id[&spec.id];
+        let want = reference.run_single(spec).unwrap();
+        assert_eq!(
+            got.energy.to_bits(),
+            want.energy.to_bits(),
+            "job {}: routed result must be bit-exact to the scalar oracle",
+            spec.id
+        );
+        assert_eq!(got.stats.flips, want.stats.flips, "job {}: flips", spec.id);
+        assert_eq!(got.stats.attempts, want.stats.attempts, "job {}: attempts", spec.id);
+        assert_eq!(got.state, want.state, "job {}: final state", spec.id);
+    }
+}
+
+fn kill_all(children: Vec<Child>) {
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+#[test]
+fn routed_burst_is_bit_exact_and_control_ops_aggregate_cluster_wide() {
+    let (addr_a, child_a) = spawn_worker(&["--lanes", "4", "--threads", "1", "--flush-ms", "50"]);
+    let (addr_b, child_b) = spawn_worker(&["--lanes", "4", "--threads", "1", "--flush-ms", "50"]);
+    let (router_addr, router_thread) =
+        start_router(vec![addr_a.clone(), addr_b.clone()], 2, 300);
+    let reference = Executor::new(4, ExpMode::Fast).unwrap();
+
+    // Handshake: the router's capability view covers every worker.
+    let hello = roundtrip(router_addr, &["{\"op\":\"hello\"}".to_string()]);
+    assert_eq!(hello.len(), 1, "{hello:?}");
+    let v = Value::parse(&hello[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "hello");
+    assert!(v.get("router").unwrap().as_bool().unwrap(), "{}", hello[0]);
+    assert_eq!(v.get("replicas").unwrap().as_usize().unwrap(), 2);
+    let workers = v.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 2);
+    for w in workers {
+        assert!(w.get("alive").unwrap().as_bool().unwrap());
+        assert_eq!(w.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        assert!(!w.get("rungs").unwrap().as_arr().unwrap().is_empty(), "{}", hello[0]);
+    }
+
+    // Mixed-shape burst, 2×W per shape plus a lone odd shape — the
+    // acceptance burst, sent exactly as a client would send it to a
+    // single worker.
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for i in 0..8 {
+        jobs.push(spec(&format!("s{i}"), (4, 4, 8), 100 + i as u32, 30 + (i % 3) * 10));
+    }
+    for i in 0..8 {
+        jobs.push(spec(&format!("t{i}"), (4, 4, 2), 200 + i as u32, 40));
+    }
+    jobs.push(spec("lone", (6, 4, 8), 300, 30));
+    let served = roundtrip(router_addr, &jobs.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_eq!(served.len(), jobs.len(), "{served:?}");
+    assert_bit_exact(&served, &reference, &jobs);
+
+    // A run job routes too (to the least-loaded worker) and stays
+    // bit-exact to the coordinator oracle.
+    let rs = RunSpec::new(
+        RunConfig { n_models: 3, sweeps: 20, sweeps_per_round: 10, ..RunConfig::default() },
+        SamplerSpec::rung(Rung::C1),
+    );
+    let run =
+        RunJob { id: "run1".into(), spec: rs.clone(), checkpoint: None, want_checkpoint: false };
+    let run_served = roundtrip(router_addr, &[run.to_line()]);
+    assert_eq!(run_served.len(), 1, "{run_served:?}");
+    let rv = Value::parse(&run_served[0]).unwrap();
+    assert_eq!(rv.get("status").unwrap().as_str().unwrap(), "ok", "{run_served:?}");
+    assert_eq!(rv.get("id").unwrap().as_str().unwrap(), "run1");
+    let report = RunReport::from_value(rv.get("run_report").unwrap()).unwrap();
+    let local = coordinator::run_spec_with(&rs, &RunOptions::default()).unwrap();
+    for (i, (a, b)) in local.energies.iter().zip(&report.energies).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "replica {i}: routed run diverged");
+    }
+
+    // Cluster stats: counters summed over workers, histograms merged
+    // exactly, per-worker roll call, router section.
+    let stats = roundtrip(router_addr, &["{\"op\":\"stats\"}".to_string()]);
+    assert_eq!(stats.len(), 1);
+    let v = Value::parse(&stats[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "stats");
+    assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+    let total = jobs.len() + 1; // burst + run
+    assert_eq!(v.get("jobs_completed").unwrap().as_usize().unwrap(), total, "{}", stats[0]);
+    assert_eq!(v.get("runs_executed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(v.get("jobs_in_system").unwrap().as_usize().unwrap(), 0);
+    assert!(v.get("lane_fill_ratio").unwrap().as_f64().unwrap() > 0.0);
+    let e2e = v.get("latency_us").unwrap().get("e2e").unwrap();
+    assert!(
+        e2e.get("count").unwrap().as_usize().unwrap() >= jobs.len(),
+        "cluster e2e histogram counts the whole burst: {}",
+        stats[0]
+    );
+    assert!(e2e.get("p50_us").unwrap().as_f64().unwrap() > 0.0);
+    let worker_rows = v.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(worker_rows.len(), 2);
+    let completed_split: Vec<usize> = worker_rows
+        .iter()
+        .map(|w| {
+            assert!(w.get("alive").unwrap().as_bool().unwrap());
+            w.get("jobs_completed").unwrap().as_usize().unwrap()
+        })
+        .collect();
+    assert_eq!(completed_split.iter().sum::<usize>(), total, "split: {completed_split:?}");
+    let router_v = v.get("router").unwrap();
+    assert_eq!(router_v.get("jobs_routed").unwrap().as_usize().unwrap(), jobs.len());
+    assert_eq!(router_v.get("runs_routed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(router_v.get("replies_relayed").unwrap().as_usize().unwrap(), total);
+    assert_eq!(router_v.get("workers_alive").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(router_v.get("workers_lost").unwrap().as_usize().unwrap(), 0);
+
+    // Cluster Prometheus: one header per family, every sample labeled
+    // with its worker, router families under worker="router".
+    let m = roundtrip(router_addr, &["{\"op\":\"metrics\"}".to_string()]);
+    let v = Value::parse(&m[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "metrics");
+    let text = v.get("text").unwrap().as_str().unwrap().to_string();
+    assert_eq!(
+        text.matches("# TYPE repro_jobs_completed_total counter").count(),
+        1,
+        "one family header despite two workers:\n{text}"
+    );
+    assert!(text.contains(&format!("worker=\"{addr_a}\"")), "{text}");
+    assert!(text.contains(&format!("worker=\"{addr_b}\"")), "{text}");
+    assert!(text.contains("repro_router_jobs_routed_total{worker=\"router\""), "{text}");
+    assert!(text.contains("# TYPE repro_router_workers_alive gauge"), "{text}");
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        assert!(line.contains("worker=\""), "unlabeled sample: {line}");
+    }
+
+    // Cluster trace: entries from both workers, each tagged.
+    let tr = roundtrip(router_addr, &["{\"op\":\"trace\",\"last\":50}".to_string()]);
+    let v = Value::parse(&tr[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "trace");
+    let traces = v.get("traces").unwrap().as_arr().unwrap();
+    assert!(traces.len() >= jobs.len(), "{}", tr[0]);
+    let mut seen_workers: Vec<&str> = traces
+        .iter()
+        .map(|t| t.get("worker").unwrap().as_str().unwrap())
+        .collect();
+    seen_workers.sort_unstable();
+    seen_workers.dedup();
+    assert_eq!(seen_workers.len(), 2, "both workers contributed traces: {seen_workers:?}");
+
+    // Front-door validation without touching the cluster.
+    let errs = roundtrip(router_addr, &["not json".to_string()]);
+    assert_eq!(errs.len(), 1);
+    let v = Value::parse(&errs[0]).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "error");
+
+    let ack = roundtrip(router_addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    router_thread.join().unwrap();
+    kill_all(vec![child_a, child_b]);
+}
+
+/// The acceptance kill-test: a worker dies mid-burst and every admitted
+/// job still answers — bit-exact — because the router replays the dead
+/// worker's in-flight jobs onto the survivor (seeded jobs are bit-exact
+/// wherever they run, so replay is safe by construction).
+#[test]
+fn killing_a_worker_mid_burst_loses_no_admitted_jobs() {
+    let (addr_a, mut child_a) =
+        spawn_worker(&["--lanes", "4", "--threads", "1", "--flush-ms", "50"]);
+    let (addr_b, child_b) = spawn_worker(&["--lanes", "4", "--threads", "1", "--flush-ms", "50"]);
+    let (router_addr, router_thread) =
+        start_router(vec![addr_a.clone(), addr_b.clone()], 2, 100);
+    let reference = Executor::new(4, ExpMode::Fast).unwrap();
+
+    // Heavy enough that the burst is still in flight when the worker
+    // dies (~8M spin updates per job).
+    let jobs: Vec<JobSpec> =
+        (0..16).map(|i| spec(&format!("k{i}"), (8, 8, 32), 400 + i as u32, 4000)).collect();
+
+    let stream = TcpStream::connect(router_addr).unwrap();
+    {
+        let mut w = std::io::BufWriter::new(stream.try_clone().unwrap());
+        for job in &jobs {
+            writeln!(w, "{}", job.to_line()).unwrap();
+        }
+        w.flush().unwrap();
+    }
+    stream.shutdown(Shutdown::Write).unwrap();
+
+    // Let the router forward the burst, then kill one worker abruptly
+    // (SIGKILL: no graceful drain, its in-flight jobs just vanish).
+    thread::sleep(Duration::from_millis(30));
+    child_a.kill().unwrap();
+    let _ = child_a.wait();
+
+    // Read to EOF: the router answers every admitted job or this hangs.
+    let served: Vec<String> = BufReader::new(stream)
+        .lines()
+        .map(|l| l.unwrap())
+        .filter(|l| !l.trim().is_empty())
+        .collect();
+    assert_eq!(served.len(), jobs.len(), "zero lost jobs: {served:?}");
+    assert_bit_exact(&served, &reference, &jobs);
+
+    // The cluster degraded but stayed consistent: one worker lost, all
+    // replies relayed, survivor marked alive.
+    let stats = roundtrip(router_addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    let router_v = v.get("router").unwrap();
+    assert_eq!(router_v.get("workers_alive").unwrap().as_usize().unwrap(), 1, "{}", stats[0]);
+    assert_eq!(router_v.get("workers_lost").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        router_v.get("replies_relayed").unwrap().as_usize().unwrap(),
+        jobs.len(),
+        "{}",
+        stats[0]
+    );
+    let worker_rows = v.get("workers").unwrap().as_arr().unwrap();
+    let alive_flags: Vec<bool> =
+        worker_rows.iter().map(|w| w.get("alive").unwrap().as_bool().unwrap()).collect();
+    assert_eq!(alive_flags.iter().filter(|&&a| a).count(), 1, "{alive_flags:?}");
+
+    // The degraded cluster still serves.
+    let more = roundtrip(router_addr, &[spec("after", (4, 4, 8), 900, 30).to_line()]);
+    assert_eq!(more.len(), 1, "{more:?}");
+    assert_bit_exact(&more, &reference, &[spec("after", (4, 4, 8), 900, 30)]);
+
+    let ack = roundtrip(router_addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    router_thread.join().unwrap();
+    kill_all(vec![child_b]);
+}
+
+/// Backpressure propagation: with every replica at its admission cap, a
+/// job is rejected to the client only after *all* replicas refused it,
+/// carrying the merged (minimum) `retry_after_ms` — and every admitted
+/// job still completes bit-exact.
+#[test]
+fn overload_rejects_only_after_every_replica_refused() {
+    let worker_flags =
+        ["--lanes", "4", "--threads", "1", "--flush-ms", "400", "--max-queue", "1"];
+    let (addr_a, child_a) = spawn_worker(&worker_flags);
+    let (addr_b, child_b) = spawn_worker(&worker_flags);
+    let (router_addr, router_thread) = start_router(vec![addr_a, addr_b], 2, 300);
+    let reference = Executor::new(4, ExpMode::Fast).unwrap();
+
+    // Ten same-shape jobs in one burst: each worker admits one (cap 1)
+    // and holds it to the 400 ms flush; the rest must be refused by
+    // BOTH replicas before the client sees a rejection.
+    let jobs: Vec<JobSpec> =
+        (0..10).map(|i| spec(&format!("o{i}"), (4, 4, 8), 500 + i as u32, 30)).collect();
+    let served = roundtrip(router_addr, &jobs.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_eq!(served.len(), jobs.len(), "every job answered, admitted or not: {served:?}");
+    let mut ok_lines = Vec::new();
+    let mut rejected = 0usize;
+    for line in &served {
+        let v = Value::parse(line).unwrap();
+        if v.get("status").unwrap().as_str().unwrap() == "ok" {
+            ok_lines.push(line.clone());
+            continue;
+        }
+        rejected += 1;
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded", "{line}");
+        assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+        assert!(!v.get("id").unwrap().as_str().unwrap().is_empty(), "{line}");
+        let retry = v.get("retry_after_ms").unwrap().as_usize().unwrap();
+        assert!(retry >= 1, "a usable backoff hint: {line}");
+    }
+    assert!(ok_lines.len() >= 2, "each worker admitted at least one job: {served:?}");
+    assert!(rejected >= 1, "the burst must overflow a cap of 1+1: {served:?}");
+    let admitted: Vec<JobSpec> = jobs
+        .iter()
+        .filter(|s| ok_lines.iter().any(|l| l.contains(&format!("\"id\":\"{}\"", s.id))))
+        .cloned()
+        .collect();
+    assert_eq!(admitted.len(), ok_lines.len());
+    assert_bit_exact(&ok_lines, &reference, &admitted);
+
+    // Router accounting: every client-visible rejection implies at
+    // least one failover (the job tried the other replica first).
+    let stats = roundtrip(router_addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    let router_v = v.get("router").unwrap();
+    assert_eq!(router_v.get("rejections").unwrap().as_usize().unwrap(), rejected);
+    assert!(
+        router_v.get("failovers").unwrap().as_usize().unwrap() >= rejected,
+        "{}",
+        stats[0]
+    );
+
+    let ack = roundtrip(router_addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    router_thread.join().unwrap();
+    kill_all(vec![child_a, child_b]);
+}

@@ -14,6 +14,7 @@ use std::thread;
 
 use vectorising::coordinator::{self, Checkpoint, RunConfig, RunOptions, RunReport, RunSpec};
 use vectorising::engine::{Rung, SamplerSpec};
+use vectorising::obs::HistogramSnapshot;
 use vectorising::service::executor::Executor;
 use vectorising::service::job::{JobResult, JobSpec, RunJob};
 use vectorising::service::{server, ServiceConfig};
@@ -323,6 +324,87 @@ fn observability_ops_expose_timings_traces_and_prometheus_text() {
         .find(|l| l.starts_with("repro_e2e_seconds_count"))
         .unwrap_or_else(|| panic!("missing e2e histogram count:\n{text}"));
     assert!(e2e_count.ends_with(" 5"), "histogram count == jobs completed: {e2e_count}");
+
+    let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
+    assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
+    server_thread.join().unwrap();
+}
+
+/// The cluster-enabling wire surface (ISSUE 10 satellites): the
+/// `{"op":"hello"}` handshake advertises protocol version, host
+/// capability fingerprint, servable rungs and the resolved serving
+/// config; `{"op":"stats"}` carries the per-shape `buckets` array and
+/// the mergeable sparse `latency_hist` whose counts agree with the
+/// `latency_us` summaries; and the `overloaded` rejection line is
+/// pinned to carry `protocol_version` and the job `id` — what a shard
+/// router needs for capability discovery, placement and failover.
+#[test]
+fn hello_buckets_and_rejection_lines_serve_router_needs() {
+    let cfg = ServiceConfig { lanes: 4, threads: 1, flush_ms: 50, ..ServiceConfig::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server_thread = thread::spawn(move || server::serve_tcp(listener, &cfg).unwrap());
+
+    // Handshake before any job: capabilities are static facts.
+    let hello = roundtrip(addr, &["{\"op\":\"hello\"}".to_string()]);
+    assert_eq!(hello.len(), 1, "{hello:?}");
+    let v = Value::parse(&hello[0]).unwrap();
+    assert_eq!(v.get("op").unwrap().as_str().unwrap(), "hello");
+    assert_eq!(v.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+    assert!(!v.get("host").unwrap().as_str().unwrap().is_empty(), "host fingerprint");
+    let rungs: Vec<&str> = v
+        .get("rungs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_str().unwrap())
+        .collect();
+    assert_eq!(rungs, ["a2", "c1", "m1", "b1", "b2"], "{}", hello[0]);
+    assert_eq!(v.get("lanes").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(v.get("max_queue").unwrap().as_usize().unwrap(), 1024);
+    assert!(!v.get("backend").unwrap().as_str().unwrap().is_empty(), "{}", hello[0]);
+
+    // A full lane-batch, so the latency histograms have content.
+    let jobs: Vec<JobSpec> =
+        (0..4).map(|i| spec(&format!("h{i}"), (4, 4, 8), 800 + i as u32)).collect();
+    let served = roundtrip(addr, &jobs.iter().map(|s| s.to_line()).collect::<Vec<_>>());
+    assert_eq!(served.len(), 4, "{served:?}");
+
+    let stats = roundtrip(addr, &["{\"op\":\"stats\"}".to_string()]);
+    let v = Value::parse(&stats[0]).unwrap();
+    // The buckets array is always present; after the queue drained it
+    // may be empty, but any entry carries the full per-bucket signal.
+    let buckets = v.get("buckets").unwrap().as_arr().unwrap();
+    for b in buckets {
+        assert!(!b.get("shape").unwrap().as_str().unwrap().is_empty());
+        b.get("depth").unwrap().as_usize().unwrap();
+        b.get("oldest_age_us").unwrap().as_usize().unwrap();
+        assert!(b.get("lanes").unwrap().as_usize().unwrap() >= 1);
+    }
+    // The sparse mergeable histograms ride next to the summaries and
+    // agree with them — the contract cluster aggregation merges on.
+    let hist = v.get("latency_hist").unwrap();
+    let summaries = v.get("latency_us").unwrap();
+    for key in ["queue_wait", "exec", "e2e", "pool_task"] {
+        let snap = HistogramSnapshot::from_value(hist.get(key).unwrap())
+            .unwrap_or_else(|e| panic!("{key}: {e:#}"));
+        let summary_count =
+            summaries.get(key).unwrap().get("count").unwrap().as_usize().unwrap();
+        assert_eq!(snap.count() as usize, summary_count, "{key}: wire hist vs summary");
+    }
+    let e2e = HistogramSnapshot::from_value(hist.get("e2e").unwrap()).unwrap();
+    assert_eq!(e2e.count(), 4, "every completed job counted: {}", stats[0]);
+
+    // Pinned rejection-line shape: failover correlation needs the id,
+    // version-gating needs protocol_version — on every rejection.
+    let line = JobResult::overloaded_line("jid-9", 123);
+    let r = Value::parse(&line).unwrap();
+    assert_eq!(r.get("id").unwrap().as_str().unwrap(), "jid-9");
+    assert_eq!(r.get("protocol_version").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error");
+    assert_eq!(r.get("error").unwrap().as_str().unwrap(), "overloaded");
+    assert_eq!(r.get("retry_after_ms").unwrap().as_usize().unwrap(), 123);
 
     let ack = roundtrip(addr, &["{\"op\":\"shutdown\"}".to_string()]);
     assert!(ack.iter().any(|l| l.contains("shutdown")), "ack: {ack:?}");
